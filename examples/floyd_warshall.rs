@@ -1,0 +1,84 @@
+//! All-pairs shortest paths: Algorithm 3 (parallel Floyd-Warshall on a
+//! 2-d grid) and the repeated-squaring extension, both verified against
+//! the sequential oracle — then a modeled scaling sweep.
+//!
+//! Run with:  cargo run --release --example floyd_warshall
+
+use std::sync::Arc;
+
+use foopar::algos::{apsp_squaring, floyd_warshall, seq};
+use foopar::analysis;
+use foopar::comm::backend::BackendProfile;
+use foopar::config::MachineConfig;
+use foopar::graph::{floyd_warshall_seq, Graph};
+use foopar::runtime::compute::Compute;
+use foopar::runtime::engine::EngineServer;
+use foopar::spmd;
+
+fn main() {
+    let q = 2;
+    let n = 64;
+    let density = 0.25;
+    let seed = 2024;
+    let src = floyd_warshall::FwSource::Real { n, density, seed };
+
+    let (comp, path) = match EngineServer::start_default() {
+        Ok(srv) => {
+            let h = Arc::new(srv.handle());
+            std::mem::forget(srv);
+            (Compute::Pjrt(h), "pjrt (AOT pallas fw_update kernel)")
+        }
+        Err(e) => {
+            eprintln!("note: PJRT unavailable ({e:#}), using native");
+            (Compute::Native, "native")
+        }
+    };
+
+    // ---------- Algorithm 3 ----------
+    println!("Floyd-Warshall (Alg. 3): n={n}, p={}, path: {path}", q * q);
+    let res = spmd::run(
+        q * q,
+        BackendProfile::shmem(),
+        MachineConfig::local().cost(),
+        |ctx| floyd_warshall::floyd_warshall_par(ctx, &comp, q, &src),
+    );
+    let d = floyd_warshall::collect_d(&res.results, q, n / q);
+    let want = floyd_warshall_seq(&Graph::random(n, density, seed));
+    println!("  verified vs sequential: max|Δ| = {:.2e}", d.max_abs_diff(&want));
+    assert!(d.max_abs_diff(&want) < 1e-2);
+
+    // ---------- repeated squaring extension ----------
+    println!("APSP by min-plus squaring (extension): n={n}, p={}", q * q);
+    let res2 = spmd::run(
+        q * q,
+        BackendProfile::shmem(),
+        MachineConfig::local().cost(),
+        |ctx| apsp_squaring::apsp_squaring_par(ctx, &comp, q, &src),
+    );
+    let d2 = apsp_squaring::saturate(apsp_squaring::collect_d(&res2.results, q, n / q));
+    println!("  verified vs sequential: max|Δ| = {:.2e}", d2.max_abs_diff(&want));
+    assert!(d2.max_abs_diff(&want) < 1e-2);
+    println!(
+        "  FW virtual T_P {:.4}s vs squaring {:.4}s (squaring trades flops for latency)",
+        res.t_parallel, res2.t_parallel
+    );
+
+    // ---------- modeled scaling (§5's isoefficiency Θ((√p log p)³)) ----------
+    let machine = MachineConfig::carver();
+    println!("\nmodeled FW scaling on Carver (n = 8192):");
+    for p in [4usize, 16, 64, 256] {
+        let qq = (p as f64).sqrt() as usize;
+        let msrc = floyd_warshall::FwSource::Proxy { n: 8192 };
+        let comp = Compute::Modeled { rate: machine.rate };
+        let r = spmd::run(p, BackendProfile::openmpi_fixed(), machine.cost(), |ctx| {
+            floyd_warshall::floyd_warshall_par(ctx, &comp, qq, &msrc)
+        });
+        let ts = seq::fw_ts(8192, machine.rate);
+        println!(
+            "  p={p:>3}: T_P={:.3}s  E={:.1}%",
+            r.t_parallel,
+            analysis::efficiency(ts, r.t_parallel, p) * 100.0
+        );
+    }
+    println!("floyd_warshall OK");
+}

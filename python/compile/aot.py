@@ -1,0 +1,76 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).  The HLO text
+parser reassigns ids, so text round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Usage (from python/):  ``python -m compile.aot --out-dir ../artifacts``
+Emits one ``<name>.hlo.txt`` per (operation, block size) plus a
+``manifest.json`` the rust runtime consumes.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: Block sizes baked into the artifact set.  The rust side picks the
+#: artifact matching its configured block edge and falls back to native
+#: gemm otherwise.  Powers of two keep the Pallas tiling exact.
+BLOCK_SIZES = (32, 64, 128, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--block-sizes",
+        default=",".join(str(b) for b in BLOCK_SIZES),
+        help="comma-separated block edges to emit artifacts for",
+    )
+    args = ap.parse_args()
+    blocks = tuple(int(b) for b in args.block_sizes.split(",") if b)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "entries": []}
+    for name, fn, specs in model.entries(blocks):
+        text = lower_entry(fn, specs)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "inputs": [list(s.shape) for s in specs],
+                "dtype": "f32",
+            }
+        )
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['entries'])} entries -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

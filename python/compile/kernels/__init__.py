@@ -1,0 +1,2 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+from . import matmul, minplus, ref  # noqa: F401

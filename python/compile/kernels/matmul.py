@@ -1,0 +1,124 @@
+"""L1 Pallas kernels: tiled block GEMM (+ accumulate, + add).
+
+The per-rank compute hot spot of the paper is the sub-matrix product that
+JBLAS/MKL performed on each core.  Here it is a Pallas kernel shaped for
+the TPU MXU: C is tiled into ``TILE x TILE`` VMEM blocks and a k-loop of
+``TILE``-wide panels streams through the systolic array, accumulating in
+f32.  BlockSpecs express the HBM->VMEM schedule (see DESIGN.md
+section "Hardware adaptation").
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so kernels are lowered to plain HLO ops.  TPU performance
+is *estimated* from the VMEM footprint / MXU shape in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The MXU is a 128x128 systolic array; 128 is the natural tile edge.
+MXU_TILE = 128
+
+
+def _pick_tile(n: int) -> int:
+    """Largest power-of-two tile <= min(n, MXU_TILE) that divides n."""
+    t = min(n, MXU_TILE)
+    while n % t:
+        t //= 2
+    return max(t, 1)
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nsteps: int):
+    """Grid point (i, j, k): o[i,j] (+)= x[i,k] @ y[k,j].
+
+    The k axis is the innermost grid dimension, so for a fixed (i, j) the
+    output tile stays resident in VMEM while ``nsteps`` input panels are
+    streamed past it — the classic output-stationary MXU schedule.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Block GEMM ``a @ b`` as a tiled Pallas call.
+
+    Shapes: a (m, k), b (k, n) -> (m, n); all dims must be tileable (they
+    are powers of two in this library).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    tm, tn, tk = _pick_tile(m), _pick_tile(n), _pick_tile(k)
+    nsteps = k // tk
+    grid = (m // tm, n // tn, nsteps)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nsteps=nsteps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((tk, tn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def _matmul_acc_kernel(c_ref, x_ref, y_ref, o_ref):
+    """Grid point (i, j, k): o[i,j] = c[i,j] + sum_k x[i,k] @ y[k,j]."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul_acc(c: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Fused multiply-accumulate ``c + a @ b`` (DNS partial-sum hot spot)."""
+    m, k = a.shape
+    _, n = b.shape
+    assert c.shape == (m, n)
+    tm, tn, tk = _pick_tile(m), _pick_tile(n), _pick_tile(k)
+    grid = (m // tm, n // tn, k // tk)
+    return pl.pallas_call(
+        _matmul_acc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tn), lambda i, j, s: (i, j)),
+            pl.BlockSpec((tm, tk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((tk, tn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(c, a, b)
+
+
+def _add_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def add(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Elementwise block sum — the ``reduceD (_ + _)`` combine operator."""
+    m, n = x.shape
+    tm, tn = _pick_tile(m), _pick_tile(n)
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(m // tm, n // tn),
+        in_specs=[
+            pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+            pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)

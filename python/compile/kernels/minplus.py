@@ -1,0 +1,92 @@
+"""L1 Pallas kernels for the Floyd-Warshall block updates (Alg. 3).
+
+Two kernels:
+
+* ``fw_update``   — one pivot-step update of a distance block:
+                    ``d[i,j] = min(d[i,j], kj[i] + ik[j])`` (lines 9-14 of
+                    Alg. 3, vectorized over the whole block).
+* ``minplus_matmul`` — tropical GEMM ``min_k (a[i,k] + b[k,j])`` used by
+                    the repeated-squaring APSP extension.  Same tiling
+                    discipline as the f32 GEMM kernel: the VPU has no
+                    (min,+) systolic array, so this runs on the vector
+                    unit with an output-stationary k-loop.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pick_tile
+
+#: Value standing in for "no edge"; finite so that +/min arithmetic stays
+#: NaN-free (matches rust/src/graph INF).  Plain python float: a traced
+#: jnp scalar would be captured as a constant, which pallas_call rejects.
+INF = 1e30
+
+
+def _fw_update_kernel(d_ref, ik_ref, kj_ref, o_ref):
+    """o = min(d, kj ⊕ ik): rank-1 outer min-plus against the pivot row/col."""
+    o_ref[...] = jnp.minimum(d_ref[...], kj_ref[...] + ik_ref[...])
+
+
+def fw_update(d: jax.Array, ik: jax.Array, kj: jax.Array) -> jax.Array:
+    """Pivot update of a (b, b) block; ik is (1, b), kj is (b, 1).
+
+    Tiled so each VMEM-resident (t, t) tile of ``d`` reads only the
+    matching (1, t) / (t, 1) pivot slivers.
+    """
+    b, b2 = d.shape
+    assert b == b2 and ik.shape == (1, b) and kj.shape == (b, 1)
+    t = _pick_tile(b)
+    return pl.pallas_call(
+        _fw_update_kernel,
+        grid=(b // t, b // t),
+        in_specs=[
+            pl.BlockSpec((t, t), lambda i, j: (i, j)),
+            pl.BlockSpec((1, t), lambda i, j: (0, j)),
+            pl.BlockSpec((t, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, t), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, b), jnp.float32),
+        interpret=True,
+    )(d, ik, kj)
+
+
+def _minplus_kernel(x_ref, y_ref, o_ref, *, tk: int):
+    """Grid point (i, j, s): o[i,j] = min(o[i,j], minplus(x[i,s], y[s,j]))."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, INF)
+
+    x = x_ref[...]
+    y = y_ref[...]
+    # (t, tk, 1) + (1, tk, t) -> reduce over k. Materializes a (t, tk, t)
+    # cube in VMEM; tiles are picked small enough that this fits.
+    cube = x[:, :, None] + y[None, :, :]
+    o_ref[...] = jnp.minimum(o_ref[...], jnp.min(cube, axis=1))
+
+
+def minplus_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Tropical GEMM over (b, b) blocks (APSP by repeated squaring)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    # The (t, tk, t) broadcast cube costs t*t*tk*4 bytes of VMEM: cap the
+    # tile edge at 32 so 32*32*32*4 = 128 KiB stays scratch-friendly.
+    tm = min(_pick_tile(m), 32)
+    tn = min(_pick_tile(n), 32)
+    tk = min(_pick_tile(k), 32)
+    grid = (m // tm, n // tn, k // tk)
+    return pl.pallas_call(
+        functools.partial(_minplus_kernel, tk=tk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((tk, tn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,56 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every kernel in this package must agree with the corresponding function
+here (see python/tests/).  These are also the functions whose lowered HLO
+would be used if Pallas were unavailable — they define the semantics.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(a, b):
+    """Plain block GEMM: ``a @ b`` in f32."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def matmul_acc(c, a, b):
+    """Fused multiply-accumulate on blocks: ``c + a @ b``.
+
+    This is the local-multiply + partial-sum hot spot of the DNS
+    algorithm (Alg. 2 in the paper): each rank multiplies its sub-blocks
+    and partial sums are combined along the z-dimension.
+    """
+    return c + jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def add(x, y):
+    """Block summation — the associative ``reduceD (_ + _)`` operator."""
+    return x + y
+
+
+def fw_update(d, ik, kj):
+    """One Floyd-Warshall pivot update on a block (Alg. 3, lines 9-14).
+
+    ``d``  : (b, b) block of the distance matrix
+    ``ik`` : (1, b) pivot-row segment  (the ``ik`` value in Alg. 3)
+    ``kj`` : (b, 1) pivot-column segment (the ``kj`` value in Alg. 3)
+
+    Returns ``min(d[i,j], kj[i] + ik[j])`` elementwise.
+    """
+    return jnp.minimum(d, kj + ik)
+
+
+#: "No edge" sentinel of the (min, +) semiring; results saturate here so
+#: that INF + INF does not escape the semiring (kept in sync with
+#: ``minplus.INF`` and rust/src/graph).
+INF = 1e30
+
+
+def minplus_matmul(a, b):
+    """Tropical (min-plus) matrix product: ``out[i,j] = min_k a[i,k]+b[k,j]``,
+    saturated at ``INF`` (INF is absorbing: INF + x = INF).
+
+    Used by the repeated-squaring APSP extension.  O(b^3) like GEMM but in
+    the (min, +) semiring.
+    """
+    return jnp.minimum(jnp.min(a[:, :, None] + b[None, :, :], axis=1), INF)

@@ -1,0 +1,68 @@
+"""L2: the per-rank compute graph of the FooPar reproduction.
+
+The paper's "model" is the block linear algebra each rank performs inside
+distributed-collection operations: sub-matrix GEMM (mapD / zipWithD of
+Alg. 1 and 2), block summation (reduceD combine), and the Floyd-Warshall
+pivot update (Alg. 3).  Each is a jitted jax function calling the L1
+Pallas kernels so that kernel + surrounding graph lower into a single HLO
+module per (operation, block-size) pair.
+
+These functions are lowered once by ``aot.py``; Python never runs on the
+rust request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as mmk
+from .kernels import minplus as mpk
+
+
+def block_matmul(a: jax.Array, b: jax.Array) -> tuple[jax.Array]:
+    """C = A @ B on (b, b) f32 blocks (the mapD multiply of Alg. 1/2)."""
+    return (mmk.matmul(a, b),)
+
+
+def block_matmul_acc(c: jax.Array, a: jax.Array, b: jax.Array) -> tuple[jax.Array]:
+    """C + A @ B — fused local multiply + partial-sum accumulate."""
+    return (mmk.matmul_acc(c, a, b),)
+
+
+def block_add(x: jax.Array, y: jax.Array) -> tuple[jax.Array]:
+    """X + Y — the associative ``reduceD (_ + _)`` combine operator."""
+    return (mmk.add(x, y),)
+
+
+def fw_update(d: jax.Array, ik: jax.Array, kj: jax.Array) -> tuple[jax.Array]:
+    """Floyd-Warshall pivot update on a block (Alg. 3 lines 9-14)."""
+    return (mpk.fw_update(d, ik, kj),)
+
+
+def minplus_matmul(a: jax.Array, b: jax.Array) -> tuple[jax.Array]:
+    """Tropical GEMM for the repeated-squaring APSP extension."""
+    return (mpk.minplus_matmul(a, b),)
+
+
+def f32(*shape: int) -> jax.ShapeDtypeStruct:
+    """Shorthand for an f32 ShapeDtypeStruct used as a lowering spec."""
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+#: Registry of everything the AOT pipeline emits, keyed by artifact name
+#: pattern.  ``{b}`` is substituted with each block size.  The rust
+#: runtime (rust/src/runtime/artifacts.rs) parses these names back.
+def entries(block_sizes):
+    out = []
+    for b in block_sizes:
+        out.append((f"matmul_b{b}", block_matmul, (f32(b, b), f32(b, b))))
+        out.append(
+            (f"matmul_acc_b{b}", block_matmul_acc, (f32(b, b), f32(b, b), f32(b, b)))
+        )
+        out.append((f"add_b{b}", block_add, (f32(b, b), f32(b, b))))
+        out.append(
+            (f"fw_update_b{b}", fw_update, (f32(b, b), f32(1, b), f32(b, 1)))
+        )
+        out.append(
+            (f"minplus_b{b}", minplus_matmul, (f32(b, b), f32(b, b)))
+        )
+    return out

@@ -1,0 +1,65 @@
+"""Artifact-level guarantees the rust runtime depends on.
+
+The PJRT CPU client can only execute plain HLO ops: a Pallas kernel
+accidentally lowered without ``interpret=True`` would emit a Mosaic
+``custom-call`` the loader cannot run.  These tests pin the contract.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def lowered():
+    """Lower every entry once at a small block size."""
+    return {
+        name: aot.lower_entry(fn, specs) for name, fn, specs in model.entries((16,))
+    }
+
+
+def test_no_custom_calls(lowered):
+    for name, text in lowered.items():
+        assert "custom-call" not in text, (
+            f"{name}: artifact contains a custom-call — was the Pallas kernel "
+            "lowered without interpret=True?"
+        )
+
+
+def test_single_entry_computation(lowered):
+    for name, text in lowered.items():
+        assert text.count("ENTRY") == 1, f"{name}: expected exactly one ENTRY"
+
+
+def test_output_is_tuple(lowered):
+    # aot lowers with return_tuple=True; the rust loader calls to_tuple1()
+    for name, text in lowered.items():
+        root_lines = [l for l in text.splitlines() if "ROOT" in l and "ENTRY" not in l]
+        assert any("tuple" in l or "(f32" in l for l in root_lines), (
+            f"{name}: root does not look like a tuple: {root_lines}"
+        )
+
+
+def test_f32_only(lowered):
+    # The rust Mat type is f32; any f64/bf16 creeping in would break the
+    # literal round-trip.
+    for name, text in lowered.items():
+        assert "f64[" not in text, f"{name}: unexpected f64"
+        assert "bf16[" not in text, f"{name}: unexpected bf16"
+
+
+def test_artifact_numerics_through_lowered_path():
+    """Execute the lowered HLO via jax itself and compare to direct eval —
+    guards against lowering-time constant folding bugs."""
+    b = 16
+    a = jax.random.normal(jax.random.PRNGKey(0), (b, b), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, b), jnp.float32)
+    (direct,) = model.block_matmul(a, x)
+    compiled = jax.jit(model.block_matmul).lower(a, x).compile()
+    (via_lowered,) = compiled(a, x)
+    np.testing.assert_allclose(direct, via_lowered, rtol=1e-6)

@@ -1,0 +1,184 @@
+"""Kernel-vs-ref correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes (powers of two, including non-square and
+non-tile-divisible-by-128 cases) and value distributions; every Pallas
+kernel must match the pure-jnp oracle in ``ref.py`` to f32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as mmk
+from compile.kernels import minplus as mpk
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Power-of-two edges exercise tile == edge, tile < 128, and multi-tile.
+EDGES = [1, 2, 4, 8, 16, 32, 64, 128, 256]
+SMALL_EDGES = [1, 2, 4, 8, 16, 32, 64]
+
+
+def rand(key, *shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ----------------------------------------------------------------- matmul
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.sampled_from(SMALL_EDGES),
+    k=st.sampled_from(SMALL_EDGES),
+    n=st.sampled_from(SMALL_EDGES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    ka, kb = keys(seed, 2)
+    a, b = rand(ka, m, k), rand(kb, k, n)
+    got = mmk.matmul(a, b)
+    want = ref.matmul(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b", EDGES)
+def test_matmul_square_blocks(b):
+    ka, kb = keys(b, 2)
+    x, y = rand(ka, b, b), rand(kb, b, b)
+    np.testing.assert_allclose(
+        mmk.matmul(x, y), ref.matmul(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_identity():
+    x = rand(keys(7, 1)[0], 64, 64)
+    eye = jnp.eye(64, dtype=jnp.float32)
+    np.testing.assert_allclose(mmk.matmul(x, eye), x, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(mmk.matmul(eye, x), x, rtol=1e-6, atol=1e-6)
+
+
+def test_matmul_zeros():
+    z = jnp.zeros((128, 128), jnp.float32)
+    x = rand(keys(9, 1)[0], 128, 128)
+    assert jnp.all(mmk.matmul(x, z) == 0)
+
+
+# ------------------------------------------------------------- matmul_acc
+
+
+@settings(max_examples=30, deadline=None)
+@given(b=st.sampled_from(SMALL_EDGES), seed=st.integers(0, 2**31 - 1))
+def test_matmul_acc_matches_ref(b, seed):
+    kc, ka, kb = keys(seed, 3)
+    c, a, x = rand(kc, b, b), rand(ka, b, b), rand(kb, b, b)
+    got = mmk.matmul_acc(c, a, x)
+    want = ref.matmul_acc(c, a, x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_acc_zero_c_equals_matmul():
+    ka, kb = keys(11, 2)
+    a, b = rand(ka, 64, 64), rand(kb, 64, 64)
+    z = jnp.zeros((64, 64), jnp.float32)
+    np.testing.assert_allclose(
+        mmk.matmul_acc(z, a, b), mmk.matmul(a, b), rtol=1e-6, atol=1e-6
+    )
+
+
+# -------------------------------------------------------------------- add
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.sampled_from(EDGES), seed=st.integers(0, 2**31 - 1))
+def test_add_matches_ref(b, seed):
+    ka, kb = keys(seed, 2)
+    x, y = rand(ka, b, b), rand(kb, b, b)
+    np.testing.assert_allclose(mmk.add(x, y), ref.add(x, y), rtol=0, atol=0)
+
+
+def test_add_commutative():
+    ka, kb = keys(3, 2)
+    x, y = rand(ka, 32, 32), rand(kb, 32, 32)
+    np.testing.assert_allclose(mmk.add(x, y), mmk.add(y, x))
+
+
+# -------------------------------------------------------------- fw_update
+
+
+def rand_dist(key, *shape):
+    """Distance-like values: non-negative with a sprinkle of INF."""
+    ka, kb = jax.random.split(key)
+    vals = jax.random.uniform(ka, shape, jnp.float32, 0.0, 100.0)
+    mask = jax.random.bernoulli(kb, 0.1, shape)
+    return jnp.where(mask, jnp.float32(mpk.INF), vals)
+
+
+@settings(max_examples=30, deadline=None)
+@given(b=st.sampled_from(SMALL_EDGES), seed=st.integers(0, 2**31 - 1))
+def test_fw_update_matches_ref(b, seed):
+    kd, ki, kj = keys(seed, 3)
+    d = rand_dist(kd, b, b)
+    ik = rand_dist(ki, 1, b)
+    kj = rand_dist(kj, b, 1)
+    got = mpk.fw_update(d, ik, kj)
+    want = ref.fw_update(d, ik, kj)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_fw_update_never_increases():
+    kd, ki, kj = keys(21, 3)
+    d = rand_dist(kd, 64, 64)
+    ik, kj = rand_dist(ki, 1, 64), rand_dist(kj, 64, 1)
+    assert jnp.all(mpk.fw_update(d, ik, kj) <= d)
+
+
+def test_fw_update_inf_pivot_is_noop():
+    d = rand_dist(keys(22, 1)[0], 32, 32)
+    inf_row = jnp.full((1, 32), jnp.float32(mpk.INF))
+    inf_col = jnp.full((32, 1), jnp.float32(mpk.INF))
+    np.testing.assert_allclose(mpk.fw_update(d, inf_row, inf_col), d)
+
+
+# --------------------------------------------------------- minplus_matmul
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([1, 2, 4, 8, 16, 32]),
+    k=st.sampled_from([1, 2, 4, 8, 16, 32]),
+    n=st.sampled_from([1, 2, 4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_minplus_matches_ref(m, k, n, seed):
+    ka, kb = keys(seed, 2)
+    a = rand_dist(ka, m, k)
+    b = rand_dist(kb, k, n)
+    got = mpk.minplus_matmul(a, b)
+    want = ref.minplus_matmul(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("b", [64, 128])
+def test_minplus_multi_tile(b):
+    ka, kb = keys(b, 2)
+    x, y = rand_dist(ka, b, b), rand_dist(kb, b, b)
+    np.testing.assert_allclose(
+        mpk.minplus_matmul(x, y), ref.minplus_matmul(x, y), rtol=1e-6
+    )
+
+
+def test_minplus_zero_diag_identity():
+    """A min-plus identity matrix (0 diag, INF off-diag) is a no-op."""
+    x = rand_dist(keys(5, 1)[0], 32, 32)
+    ident = jnp.full((32, 32), jnp.float32(mpk.INF)).at[
+        jnp.arange(32), jnp.arange(32)
+    ].set(0.0)
+    got = mpk.minplus_matmul(x, ident)
+    np.testing.assert_allclose(got, jnp.minimum(x, mpk.INF), rtol=1e-6)

@@ -1,0 +1,35 @@
+//! Bench: Fig. 5 (left) — MMM efficiency on Carver.
+//!
+//! Regenerates the left plot's series: efficiency vs. cores for
+//! n ∈ {10080, 20160, 30240, 40320}, backend = patched OpenMPI, plus the
+//! C/MPI baseline at n = 40320, and the §6 headline numbers.
+//!
+//! Run with:  cargo bench --bench fig5_carver
+
+use foopar::config::MachineConfig;
+use foopar::experiments::fig5;
+
+fn main() {
+    let machine = MachineConfig::carver();
+    println!("=== Fig. 5 left: Carver (MKL, patched OpenMPI) ===");
+    println!(
+        "rate {:.2} GF/s/core (empirical), peak {:.2} GF/s, p ≤ {}\n",
+        machine.rate / 1e9,
+        machine.peak / 1e9,
+        machine.max_cores
+    );
+    let t0 = std::time::Instant::now();
+    let rows = fig5::sweep(&machine, true);
+    println!("{}", fig5::render(&rows));
+
+    let (hl, vs_peak) = fig5::headline(&machine);
+    println!("headline (n={}, p={}):", hl.n, hl.p);
+    println!(
+        "  measured: {:.2} TFlop/s, {:.1}% of empirical peak, {:.1}% of theoretical",
+        hl.tflops,
+        hl.efficiency * 100.0,
+        vs_peak * 100.0
+    );
+    println!("  paper §6:  4.84 TFlop/s, 93.7%, 88.8%");
+    println!("\nbench wall time: {:.2}s", t0.elapsed().as_secs_f64());
+}

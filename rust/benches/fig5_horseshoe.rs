@@ -1,0 +1,30 @@
+//! Bench: Fig. 5 (right) — backend comparison on Horseshoe-6.
+//!
+//! Regenerates the right plot's series: efficiency vs. cores for four
+//! communication backends.  The paper's claim: the unmodified OpenMPI
+//! java bindings and MPJ-Express use Θ(p) reductions and fall behind;
+//! "slower" daemon-mode backends trade efficiency for convenience.
+//!
+//! Run with:  cargo bench --bench fig5_horseshoe
+
+use foopar::config::MachineConfig;
+use foopar::experiments::fig5;
+
+fn main() {
+    let machine = MachineConfig::horseshoe6();
+    println!("=== Fig. 5 right: Horseshoe-6 (generic BLAS, 4 backends) ===");
+    println!("rate {:.2} GF/s/core, p ≤ {}\n", machine.rate / 1e9, machine.max_cores);
+    let t0 = std::time::Instant::now();
+    let rows = fig5::sweep(&machine, false);
+    println!("{}", fig5::render(&rows));
+
+    // the per-backend summary at the most communication-bound point
+    println!("backend ranking at (n=2520, p=512):");
+    let mut at: Vec<_> = rows.iter().filter(|r| r.n == 2_520 && r.p == 512).collect();
+    at.sort_by(|a, b| b.efficiency.total_cmp(&a.efficiency));
+    for r in at {
+        println!("  {:>14}: {:.1}%", r.backend, r.efficiency * 100.0);
+    }
+    println!("paper §6 ordering: openmpi-fixed > fastmpj > openmpi-stock > mpj-express");
+    println!("\nbench wall time: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,36 @@
+//! Bench: isoefficiency verification for all three parallel systems
+//! (§4.2.1 generic MMM, §4.3 grid/DNS MMM, §5 Floyd-Warshall).
+//!
+//! Protocol 1 (iso-curve): grow W along the solved isoefficiency curve —
+//! measured efficiency must stay flat at the target.
+//! Protocol 2 (fixed-n): hold n — efficiency must decay with p, faster
+//! for the generic algorithm than for DNS.
+//!
+//! Run with:  cargo bench --bench isoeff
+
+use foopar::config::MachineConfig;
+use foopar::experiments::isoeff::{self, Algo};
+
+fn main() {
+    let machine = MachineConfig::carver();
+    let t0 = std::time::Instant::now();
+
+    for algo in [Algo::Generic, Algo::Dns, Algo::Fw] {
+        println!(
+            "=== isoefficiency curve: {} — paper: W ∈ {} (target E = {:.0}%) ===",
+            algo.name(),
+            algo.iso_label(),
+            isoeff::TARGET * 100.0
+        );
+        let rows = isoeff::iso_curve(&machine, algo);
+        println!("{}", isoeff::render(&rows, algo.iso_label()));
+    }
+
+    println!("=== fixed-n efficiency decay (n = 20160) ===");
+    for algo in [Algo::Generic, Algo::Dns] {
+        let rows = isoeff::fixed_n_decay(&machine, algo, 20_160);
+        println!("{}", isoeff::render(&rows, algo.iso_label()));
+    }
+
+    println!("bench wall time: {:.2}s", t0.elapsed().as_secs_f64());
+}

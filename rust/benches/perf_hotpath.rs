@@ -1,0 +1,114 @@
+//! Bench: hot-path microbenchmarks for the performance pass (§Perf in
+//! EXPERIMENTS.md).  Wall-clock, not virtual time:
+//!
+//! * fabric round-trip latency (L3 message hot path)
+//! * collective wall cost at large p (thread/fabric scaling)
+//! * DistSeq op overhead vs raw collectives (framework tax)
+//! * native vs PJRT block GEMM (L1/L2 compute path)
+//!
+//! Run with:  cargo bench --bench perf_hotpath
+
+use std::time::Instant;
+
+use foopar::comm::backend::BackendProfile;
+use foopar::comm::cost::CostParams;
+use foopar::data::dseq::DistSeq;
+use foopar::experiments::peak;
+use foopar::matrix::block::BlockSource;
+use foopar::runtime::compute::Compute;
+use foopar::spmd;
+
+fn main() {
+    println!("=== perf: L3 hot paths (wall clock) ===\n");
+
+    // fabric ping-pong latency
+    for &iters in &[10_000usize] {
+        let t0 = Instant::now();
+        spmd::run(2, BackendProfile::shmem(), CostParams::free(), |ctx| {
+            for i in 0..iters {
+                if ctx.rank == 0 {
+                    ctx.send(1, i as u64, 0u8);
+                    let _: u8 = ctx.recv(1, i as u64);
+                } else {
+                    let _: u8 = ctx.recv(0, i as u64);
+                    ctx.send(0, i as u64, 0u8);
+                }
+            }
+        });
+        let per_msg = t0.elapsed().as_secs_f64() / (iters as f64 * 2.0);
+        println!("fabric ping-pong: {:.2} µs/message ({iters} round trips)", per_msg * 1e6);
+    }
+
+    // reduce wall cost at increasing world sizes
+    for &p in &[8usize, 64, 512] {
+        let reps = 20;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            spmd::run(p, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+                DistSeq::range(ctx, ctx.world, |i| i as i64).reduce_d(|a, b| a + b)
+            });
+        }
+        let per_run = t0.elapsed().as_secs_f64() / reps as f64;
+        println!("spawn+reduce at p={p:>3}: {:.2} ms/run (incl. thread spawn)", per_run * 1e3);
+    }
+
+    // framework tax: DistSeq reduce vs hand-rolled sends (same pattern)
+    {
+        let p = 64;
+        let reps = 30;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            spmd::run(p, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+                DistSeq::range(ctx, ctx.world, |i| i as i64).reduce_d(|a, b| a + b)
+            });
+        }
+        let t_seq = t0.elapsed().as_secs_f64() / reps as f64;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            spmd::run(p, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+                // raw binomial reduce
+                let mut acc = ctx.rank as i64;
+                let mut mask = 1usize;
+                while mask < ctx.world {
+                    if ctx.rank & mask == 0 {
+                        let src = ctx.rank | mask;
+                        if src < ctx.world {
+                            let v: i64 = ctx.recv(src, 0xFF00 + mask as u64);
+                            acc += v;
+                        }
+                    } else {
+                        ctx.send(ctx.rank & !mask, 0xFF00 + mask as u64, acc);
+                        break;
+                    }
+                    mask <<= 1;
+                }
+            });
+        }
+        let t_raw = t0.elapsed().as_secs_f64() / reps as f64;
+        println!(
+            "framework tax at p={p}: DistSeq {:.2} ms vs raw {:.2} ms ({:+.1}%)",
+            t_seq * 1e3,
+            t_raw * 1e3,
+            (t_seq / t_raw - 1.0) * 100.0
+        );
+    }
+
+    // modeled DNS end-to-end wall (the fig5 inner loop)
+    {
+        let t0 = Instant::now();
+        let a = BlockSource::proxy(5_040, 1);
+        let b = BlockSource::proxy(5_040, 2);
+        let comp = Compute::Modeled { rate: 1e10 };
+        spmd::run(512, BackendProfile::openmpi_fixed(), CostParams::qdr_infiniband(), |ctx| {
+            foopar::algos::mmm_dns::mmm_dns(ctx, &comp, 8, &a, &b)
+        });
+        println!(
+            "modeled DNS p=512 end-to-end: {:.1} ms wall (one fig5 point)",
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    }
+
+    println!("\n=== perf: L1/L2 compute path (block GEMM) ===\n");
+    let rows = peak::sweep(5);
+    println!("{}", peak::render(&rows));
+}

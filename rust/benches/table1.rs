@@ -1,0 +1,37 @@
+//! Bench: Table 1 — runtimes of the distributed-sequence operations.
+//!
+//! Regenerates the paper's Table 1 as measurements: for every op, the
+//! virtual `T_P` across group sizes and element sizes, next to the
+//! closed-form prediction and the paper's Θ-expression.
+//!
+//! Run with:  cargo bench --bench table1
+//! (criterion is unavailable in this image's crate cache; benches are
+//! self-contained `harness = false` drivers printing paper-style tables.)
+
+use foopar::config::MachineConfig;
+use foopar::experiments::table1;
+
+fn main() {
+    let machine = MachineConfig::carver();
+    println!("=== Table 1: distributed-sequence op runtimes ===");
+    println!(
+        "machine: {} (ts = {:.1e}s, tw = {:.1e}s/B)\n",
+        machine.name, machine.ts, machine.tw
+    );
+    let t0 = std::time::Instant::now();
+    let rows = table1::sweep(&machine);
+    println!("{}", table1::render(&rows));
+    // aggregate fit quality per op
+    println!("model agreement (measured / predicted):");
+    for op in ["reduceD", "shiftD", "allToAllD", "allGatherD", "apply"] {
+        let ratios: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.op == op && r.predicted > 0.0)
+            .map(|r| r.measured / r.predicted)
+            .collect();
+        let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+        let max = ratios.iter().cloned().fold(0.0, f64::max);
+        println!("  {op:>11}: mean {mean:.3}, max {max:.3} over {} points", ratios.len());
+    }
+    println!("\nbench wall time: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,180 @@
+//! Extension: Cannon's algorithm — memory-efficient MMM on a 2-d grid.
+//!
+//! Not in the paper's evaluation, but the canonical demonstration of the
+//! one Table-1 operation its algorithms never exercise: **`shiftD`**.
+//! Cannon's algorithm multiplies with p = q² processes holding exactly
+//! one block of A and one of B each (Θ(n²/p) memory per rank vs the DNS
+//! algorithm's q-fold replication at p = q³), at the cost of 2(q−1)
+//! cyclic shifts:
+//!
+//! ```text
+//! skew:   A row i  shifted left  by i;  B column j shifted up by j
+//! repeat q times:  C += A_local · B_local;  shift A left 1, B up 1
+//! ```
+//!
+//! `T_P = q·(2(n/q)³/rate) + 2q·(t_s + t_w (n/q)²)`, cost-optimal with
+//! isoefficiency Θ(p^{3/2}) — between the generic (p^{5/3}) and DNS
+//! (p log p) variants; the ablation bench quantifies the trade.
+
+use crate::data::grid::GridN;
+use crate::matrix::block::{Block, BlockSource};
+use crate::runtime::compute::Compute;
+use crate::spmd::Ctx;
+
+pub struct CannonOutput {
+    /// `Some((i, j, block))` on every grid member.
+    pub c_block: Option<(usize, usize, Block)>,
+    pub t_local: f64,
+}
+
+/// Run Cannon's algorithm on a q×q grid (world ≥ q²); n = q·block edge.
+pub fn mmm_cannon(
+    ctx: &Ctx,
+    comp: &Compute,
+    q: usize,
+    a: &BlockSource,
+    b: &BlockSource,
+) -> CannonOutput {
+    assert_eq!(a.b, b.b);
+    let grid = GridN::square(ctx, q);
+
+    // Initial skew, expressed as the *source* indices each rank loads:
+    // rank (i, j) starts with A(i, (j+i) mod q) and B((i+j) mod q, j) —
+    // identical to physically shifting row i left by i / column j up by
+    // j, but with zero messages thanks to lazy block sources (the same
+    // MJBLProxy trick Alg. 1 uses).
+    let ga = grid.map_d(|c| a.block(c[0], (c[1] + c[0]) % q));
+    let gb = grid.map_d(|c| b.block((c[0] + c[1]) % q, c[1]));
+
+    let coord = ga.my_coord();
+    let mut a_cur = ga.into_local();
+    let mut b_cur = gb.into_local();
+    let mut acc: Option<Block> = None;
+
+    for step in 0..q {
+        // local multiply-accumulate
+        if let (Some(ab), Some(bb)) = (&a_cur, &b_cur) {
+            let prod = comp.matmul(ctx, ab, bb);
+            acc = Some(match acc {
+                None => prod,
+                Some(c) => comp.add(ctx, c, prod),
+            });
+        }
+        if step + 1 == q {
+            break;
+        }
+        // shift A left along my row (ySeq line), B up along my column
+        // (xSeq line) — Table 1's shiftD, Θ(t_s + t_w m) each.
+        let data_a = grid.map_d(|_| a_cur.take().expect("member lost A block"));
+        a_cur = data_a.into_seq_along(1).shift_d(-1).into_local();
+        let data_b = grid.map_d(|_| b_cur.take().expect("member lost B block"));
+        b_cur = data_b.into_seq_along(0).shift_d(-1).into_local();
+    }
+
+    let c_block = coord.zip(acc).map(|(c, blk)| (c[0], c[1], blk));
+    CannonOutput { c_block, t_local: ctx.now() }
+}
+
+/// Reassemble the result (verification).
+pub fn collect_c(results: &[CannonOutput], q: usize, b: usize) -> crate::matrix::dense::Mat {
+    use crate::matrix::dense::Mat;
+    let mut c = Mat::zeros(q * b, q * b);
+    let mut seen = 0;
+    for out in results {
+        if let Some((i, j, blk)) = &out.c_block {
+            c.set_block(*i, *j, &blk.materialize());
+            seen += 1;
+        }
+    }
+    assert_eq!(seen, q * q);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::seq::matmul_seq;
+    use crate::comm::backend::BackendProfile;
+    use crate::comm::cost::CostParams;
+    use crate::spmd::run;
+    use crate::testing::assert_allclose;
+
+    fn check(q: usize, bsz: usize, seed: u64) {
+        let a = BlockSource::real(bsz, seed);
+        let b = BlockSource::real(bsz, seed + 1);
+        let res = run(q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            mmm_cannon(ctx, &Compute::Native, q, &a, &b)
+        });
+        let c = collect_c(&res.results, q, bsz);
+        let want = matmul_seq(&a.assemble(q), &b.assemble(q));
+        assert_allclose(&c.data, &want.data, 1e-3, 1e-4);
+    }
+
+    #[test]
+    fn cannon_matches_sequential() {
+        check(1, 8, 1);
+        check(2, 8, 2);
+        check(3, 4, 3);
+        check(4, 4, 4);
+    }
+
+    #[test]
+    fn cannon_agrees_with_dns() {
+        let (q, bsz) = (2, 8);
+        let a = BlockSource::real(bsz, 91);
+        let b = BlockSource::real(bsz, 92);
+        let cannon = run(4, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            mmm_cannon(ctx, &Compute::Native, q, &a, &b)
+        });
+        let dns = run(8, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            crate::algos::mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &b)
+        });
+        let cc = collect_c(&cannon.results, q, bsz);
+        let cd = crate::algos::mmm_dns::collect_c(&dns.results, q, bsz);
+        assert_allclose(&cc.data, &cd.data, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn cannon_memory_vs_dns_processor_tradeoff() {
+        // same n: Cannon uses q² ranks where DNS uses q³ — modeled T_P of
+        // Cannon is higher (less parallelism) but per-rank communication
+        // uses shiftD (cheap) instead of reductions
+        let n = 4096;
+        let q2 = 8; // cannon grid 8x8 = 64 ranks
+        let q3 = 4; // dns grid 4x4x4 = 64 ranks — same p!
+        let machine = CostParams::qdr_infiniband();
+        let comp = Compute::Modeled { rate: 1e10 };
+        let ac = BlockSource::proxy(n / q2, 1);
+        let bc = BlockSource::proxy(n / q2, 2);
+        let cannon = run(64, BackendProfile::openmpi_fixed(), machine, |ctx| {
+            mmm_cannon(ctx, &comp, q2, &ac, &bc)
+        });
+        let ad = BlockSource::proxy(n / q3, 1);
+        let bd = BlockSource::proxy(n / q3, 2);
+        let dns = run(64, BackendProfile::openmpi_fixed(), machine, |ctx| {
+            crate::algos::mmm_dns::mmm_dns(ctx, &comp, q3, &ad, &bd)
+        });
+        // both do n³/p multiply work; both must be within 2x of each other
+        let ratio = cannon.t_parallel / dns.t_parallel;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "cannon {} vs dns {} (ratio {ratio})",
+            cannon.t_parallel,
+            dns.t_parallel
+        );
+    }
+
+    #[test]
+    fn cannon_modeled_proxies_stay_lazy() {
+        let a = BlockSource::proxy(128, 1);
+        let b = BlockSource::proxy(128, 2);
+        let res = run(9, BackendProfile::openmpi_fixed(), CostParams::qdr_infiniband(), |ctx| {
+            mmm_cannon(ctx, &Compute::Modeled { rate: 1e9 }, 3, &a, &b)
+        });
+        for out in &res.results {
+            if let Some((_, _, blk)) = &out.c_block {
+                assert!(blk.is_proxy());
+            }
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Hand-coded DNS matrix multiplication directly on the fabric — the
+//! analogue of the paper's "highly optimized parallel version of the DNS
+//! algorithm, using C/MPI" (§6).
+//!
+//! Functionally identical to [`crate::algos::mmm_dns`], but with **zero
+//! framework machinery**: no groups, no distributed sequences, no grid —
+//! raw rank arithmetic, explicit tags, a manually unrolled binomial
+//! reduction.  Comparing its virtual/wall time against Algorithm 2
+//! measures exactly what Fig. 5 measures between the C version and
+//! FooPar: the abstraction overhead (paper: "The C-version performs only
+//! slightly better").
+
+use crate::matrix::block::{Block, BlockSource};
+use crate::runtime::compute::Compute;
+use crate::spmd::Ctx;
+
+/// Tag namespace for the hand-rolled reduction (disjoint from group tags
+/// by construction: group ids are hash-mixed, this is a fixed pattern).
+const BASE_TAG: u64 = 0xC0DE_BA5E_0000_0000;
+
+pub struct BaselineOutput {
+    pub c_block: Option<(usize, usize, Block)>,
+    pub t_local: f64,
+}
+
+/// DNS multiply with p = q³ ranks, hand-coded.
+pub fn dns_baseline(
+    ctx: &Ctx,
+    comp: &Compute,
+    q: usize,
+    a: &BlockSource,
+    b: &BlockSource,
+) -> BaselineOutput {
+    let p = q * q * q;
+    if ctx.rank >= p {
+        return BaselineOutput { c_block: None, t_local: ctx.now() };
+    }
+    // row-major (i, j, k) layout — identical to GridN::cube
+    let (i, j, k) = (ctx.rank / (q * q), (ctx.rank / q) % q, ctx.rank % q);
+
+    // local product C_partial = A(i,k) · B(k,j)
+    let ab = a.block(i, k);
+    let bb = b.block(k, j);
+    let mut acc = comp.matmul(ctx, &ab, &bb);
+
+    // binomial reduction along the z-line (k = 0..q), root k=0
+    let line_base = (i * q + j) * q; // world rank of (i, j, 0)
+    let tag = BASE_TAG + (i * q + j) as u64;
+    let mut mask = 1usize;
+    let mut sent = false;
+    while mask < q {
+        if k & mask == 0 {
+            let src_k = k | mask;
+            if src_k < q {
+                let other: Block = ctx.recv(line_base + src_k, tag);
+                acc = comp.add(ctx, acc, other);
+            }
+        } else {
+            ctx.send(line_base + (k & !mask), tag, acc);
+            sent = true;
+            acc = Block::proxy(0, 0); // moved out; placeholder
+            break;
+        }
+        mask <<= 1;
+    }
+
+    let c_block = (!sent && k == 0).then_some((i, j, acc));
+    BaselineOutput { c_block, t_local: ctx.now() }
+}
+
+/// Reassemble the result (verification).
+pub fn collect_c(results: &[BaselineOutput], q: usize, b: usize) -> crate::matrix::dense::Mat {
+    use crate::matrix::dense::Mat;
+    let mut c = Mat::zeros(q * b, q * b);
+    let mut seen = 0;
+    for out in results {
+        if let Some((i, j, blk)) = &out.c_block {
+            c.set_block(*i, *j, &blk.materialize());
+            seen += 1;
+        }
+    }
+    assert_eq!(seen, q * q);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::seq::matmul_seq;
+    use crate::comm::backend::BackendProfile;
+    use crate::comm::cost::CostParams;
+    use crate::spmd::run;
+    use crate::testing::assert_allclose;
+
+    #[test]
+    fn baseline_matches_sequential() {
+        for (q, bsz) in [(2usize, 8usize), (3, 4)] {
+            let a = BlockSource::real(bsz, 51);
+            let b = BlockSource::real(bsz, 52);
+            let res = run(q * q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+                dns_baseline(ctx, &Compute::Native, q, &a, &b)
+            });
+            let c = collect_c(&res.results, q, bsz);
+            let want = matmul_seq(&a.assemble(q), &b.assemble(q));
+            assert_allclose(&c.data, &want.data, 1e-4, 1e-5);
+        }
+    }
+
+    #[test]
+    fn baseline_agrees_with_framework_dns() {
+        let (q, bsz) = (2, 8);
+        let a = BlockSource::real(bsz, 61);
+        let b = BlockSource::real(bsz, 62);
+        let base = run(8, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            dns_baseline(ctx, &Compute::Native, q, &a, &b)
+        });
+        let dns = run(8, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            crate::algos::mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &b)
+        });
+        let cb = collect_c(&base.results, q, bsz);
+        let cd = crate::algos::mmm_dns::collect_c(&dns.results, q, bsz);
+        assert_allclose(&cb.data, &cd.data, 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn baseline_virtual_time_close_to_framework() {
+        // modeled at the paper's scale: framework overhead (extra virtual
+        // time of Alg. 2 over the baseline) must be small
+        let q = 4;
+        let a = BlockSource::proxy(128, 1);
+        let b = BlockSource::proxy(128, 2);
+        let machine = CostParams::qdr_infiniband();
+        let comp = Compute::Modeled { rate: 1e10 };
+        let base = run(64, BackendProfile::openmpi_fixed(), machine, |ctx| {
+            dns_baseline(ctx, &comp, q, &a, &b)
+        });
+        let dns = run(64, BackendProfile::openmpi_fixed(), machine, |ctx| {
+            crate::algos::mmm_dns::mmm_dns(ctx, &comp, q, &a, &b)
+        });
+        let rel = (dns.t_parallel - base.t_parallel).abs() / base.t_parallel;
+        assert!(rel < 0.05, "framework overhead {:.1}% too large", rel * 100.0);
+    }
+}

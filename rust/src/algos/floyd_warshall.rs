@@ -1,0 +1,189 @@
+//! Algorithm 3: parallel Floyd-Warshall on a 2-d grid (§5).
+//!
+//! The paper's Scala:
+//! ```scala
+//! var grid = GridN(R, R) mapD { case i :: j :: Nil => BLOCKS(i)(j) }
+//! for (k <- 0 until n) {
+//!   val ik = grid.xSeq.mapD(_(k % B)).apply(k / B)
+//!   val kj = grid.ySeq.mapD(_.map(_(k % B))).apply(k / B)
+//!   grid = grid.mapD { block => …min(block(i)(j), ik(j) + kj(i))… }
+//! }
+//! ```
+//!
+//! Process (i, j) of the q×q grid (p = q², B = n/q) owns block (i, j) of
+//! the distance matrix.  For each pivot k: the pivot-row segment `ik`
+//! travels down each process *column* (`xSeq` + one-to-all `apply`), the
+//! pivot-column segment `kj` travels across each process *row* (`ySeq`),
+//! and every block updates in parallel.  `T_P = Θ(n(B + (t_s+t_w B)
+//! log q + B²/…))`, isoefficiency Θ((√p log p)³).
+
+use crate::data::grid::GridN;
+use crate::graph::Graph;
+use crate::matrix::block::Block;
+use crate::runtime::compute::{Compute, Seg};
+use crate::spmd::Ctx;
+
+/// Input supplier for the distributed distance matrix.
+#[derive(Clone)]
+pub enum FwSource {
+    /// Real mode: every rank deterministically generates the same graph
+    /// (SPMD) and extracts its own block.
+    Real { n: usize, density: f64, seed: u64 },
+    /// Modeled mode: blocks are size-only proxies.
+    Proxy { n: usize },
+}
+
+impl FwSource {
+    pub fn n(&self) -> usize {
+        match self {
+            FwSource::Real { n, .. } | FwSource::Proxy { n } => *n,
+        }
+    }
+
+    /// The (i, j) block of the initial distance matrix, edge `b`.
+    fn block(&self, i: usize, j: usize, b: usize) -> Block {
+        match self {
+            FwSource::Real { n, density, seed } => {
+                let g = Graph::random(*n, *density, *seed);
+                let mut blk = crate::matrix::dense::Mat::zeros(b, b);
+                for r in 0..b {
+                    for c in 0..b {
+                        blk.set(r, c, g.w.at(i * b + r, j * b + c));
+                    }
+                }
+                Block::Real(blk)
+            }
+            FwSource::Proxy { .. } => Block::proxy(b, (i * 1000 + j) as u64),
+        }
+    }
+}
+
+/// Outcome on one rank.
+pub struct FwOutput {
+    /// `Some((i, j, final block))` for grid members.
+    pub d_block: Option<(usize, usize, Block)>,
+    pub t_local: f64,
+}
+
+/// Run Algorithm 3 on a q×q grid (world must be ≥ q²); `n` divisible by q.
+pub fn floyd_warshall_par(ctx: &Ctx, comp: &Compute, q: usize, src: &FwSource) -> FwOutput {
+    let n = src.n();
+    assert_eq!(n % q, 0, "n must be divisible by q");
+    let b = n / q;
+
+    let grid = GridN::square(ctx, q);
+    // var grid = GridN(R, R) mapD { (i, j) => BLOCKS(i)(j) }
+    let mut data = grid.map_d(|c| src.block(c[0], c[1], b));
+
+    for k in 0..n {
+        let kb = k / b; // which block row/col holds the pivot
+        let kloc = k % b; // offset within the block
+
+        // ik: pivot-row segment for my process column —
+        //   grid.xSeq.mapD(_(k % B)).apply(k / B)
+        let ik = data
+            .x_seq()
+            .map_d(|blk| comp.block_row(ctx, &blk, kloc))
+            .apply(kb);
+
+        // kj: pivot-column segment for my process row —
+        //   grid.ySeq.mapD(_.map(_(k % B))).apply(k / B)
+        let kj = data
+            .y_seq()
+            .map_d(|blk| comp.block_col(ctx, &blk, kloc))
+            .apply(kb);
+
+        // grid = grid.mapD { block => min(block, kj ⊕ ik) }
+        data = data.map_d(|blk| match (&ik, &kj) {
+            (Some(ik), Some(kj)) => comp.fw_update(ctx, blk, ik, kj),
+            _ => blk, // non-members carry no data anyway
+        });
+    }
+
+    let d_block = data
+        .my_coord()
+        .map(|c| (c[0], c[1]))
+        .zip(data.into_local())
+        .map(|((i, j), blk)| (i, j, blk));
+    FwOutput { d_block, t_local: ctx.now() }
+}
+
+/// Reassemble the distributed result (verification / examples).
+pub fn collect_d(results: &[FwOutput], q: usize, b: usize) -> crate::matrix::dense::Mat {
+    use crate::matrix::dense::Mat;
+    let mut d = Mat::zeros(q * b, q * b);
+    let mut seen = 0;
+    for out in results {
+        if let Some((i, j, blk)) = &out.d_block {
+            d.set_block(*i, *j, &blk.materialize());
+            seen += 1;
+        }
+    }
+    assert_eq!(seen, q * q);
+    d
+}
+
+/// Convenience: a `Seg` pair check used by property tests.
+pub fn seg_len_ok(s: &Seg, b: usize) -> bool {
+    s.len() == b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::backend::BackendProfile;
+    use crate::comm::cost::CostParams;
+    use crate::graph::floyd_warshall_seq;
+    use crate::spmd::run;
+    use crate::testing::assert_allclose;
+
+    fn check_against_seq(n: usize, q: usize, density: f64, seed: u64) {
+        let src = FwSource::Real { n, density, seed };
+        let res = run(q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            floyd_warshall_par(ctx, &Compute::Native, q, &src)
+        });
+        let got = collect_d(&res.results, q, n / q);
+        let g = Graph::random(n, density, seed);
+        let want = floyd_warshall_seq(&g);
+        assert_allclose(&got.data, &want.data, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn fw_par_matches_seq_small() {
+        check_against_seq(8, 2, 0.4, 1);
+    }
+
+    #[test]
+    fn fw_par_matches_seq_q3() {
+        check_against_seq(12, 3, 0.3, 2);
+    }
+
+    #[test]
+    fn fw_par_matches_seq_sparse_and_dense() {
+        check_against_seq(16, 4, 0.05, 3);
+        check_against_seq(16, 2, 0.9, 4);
+    }
+
+    #[test]
+    fn fw_par_single_process_degenerates_to_seq() {
+        check_against_seq(8, 1, 0.5, 5);
+    }
+
+    #[test]
+    fn fw_modeled_runs_at_scale_without_data() {
+        // n=1024, q=4 modeled: 1024 pivots over proxies, no floats
+        let src = FwSource::Proxy { n: 1024 };
+        let res = run(
+            16,
+            BackendProfile::openmpi_fixed(),
+            CostParams::new(1e-6, 1e-9),
+            |ctx| floyd_warshall_par(ctx, &Compute::Modeled { rate: 1e9 }, 4, &src),
+        );
+        assert!(res.t_parallel > 0.0);
+        for out in &res.results {
+            if let Some((_, _, blk)) = &out.d_block {
+                assert!(blk.is_proxy());
+            }
+        }
+    }
+}

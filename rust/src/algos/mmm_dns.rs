@@ -1,0 +1,173 @@
+//! Algorithm 2: matrix-matrix multiplication with the Grid3D abstraction
+//! (the DNS communication pattern, §4.3).
+//!
+//! The paper's Scala:
+//! ```scala
+//! val G  = Grid3D(R, R, R)
+//! val GA = G mapD { case (i, j, k) => A(i)(k) }
+//! val GB = G mapD { case (i, j, k) => B(k)(j) }
+//! val C  = ((GA zipWithD GB)(_ * _) zSeq) reduceD (_ + _)
+//! ```
+//!
+//! Process (i,j,k) holds `A(i,k)` and `B(k,j)` (Fig. 4a), multiplies them
+//! locally (Fig. 4b), and partial products are summed along the z-axis
+//! onto the k=0 plane (Fig. 4c).  With p = q³:
+//! `T_P = Θ(n³/p) + Θ((n²/p^{2/3}) log p)`, isoefficiency Θ(p log p) —
+//! matching the DNS algorithm.
+
+use crate::data::grid::GridN;
+use crate::matrix::block::{Block, BlockSource};
+use crate::runtime::compute::Compute;
+use crate::spmd::Ctx;
+
+/// Outcome on one rank.
+pub struct DnsOutput {
+    /// `Some((i, j, block))` on the k=0 plane (the owners of C's blocks).
+    pub c_block: Option<(usize, usize, Block)>,
+    /// Virtual time when this rank finished.
+    pub t_local: f64,
+}
+
+/// Run Algorithm 2 on a q×q×q grid (requires `ctx.world >= q³`).
+///
+/// `a` / `b` supply the input blocks of edge `n/q`; `comp` decides real
+/// vs modeled execution.  Every rank participates SPMD-style; ranks
+/// outside the grid no-op and return `None`.
+pub fn mmm_dns(
+    ctx: &Ctx,
+    comp: &Compute,
+    q: usize,
+    a: &BlockSource,
+    b: &BlockSource,
+) -> DnsOutput {
+    assert_eq!(a.b, b.b, "block sizes of A and B must match");
+    let grid = GridN::cube(ctx, q);
+
+    // GA = G mapD { (i,j,k) => A(i)(k) };  GB = G mapD { (i,j,k) => B(k)(j) }
+    let ga = grid.map_d(|c| a.block(c[0], c[2]));
+    let gb = grid.map_d(|c| b.block(c[2], c[1]));
+
+    // (GA zipWithD GB)(_ * _)
+    let prod = ga.zip_with_d(gb, |x, y| comp.matmul(ctx, &x, &y));
+
+    // … zSeq reduceD (_ + _): sum partial products onto the k=0 plane.
+    let coord = prod.my_coord();
+    let c = prod.into_seq_along(2).reduce_d(|x, y| comp.add(ctx, x, y));
+
+    let c_block = match (c, coord) {
+        (Some(blk), Some(cd)) => Some((cd[0], cd[1], blk)),
+        _ => None,
+    };
+    DnsOutput { c_block, t_local: ctx.now() }
+}
+
+/// Gather per-rank C blocks into the full result matrix (verification /
+/// examples; not part of the timed algorithm).
+pub fn collect_c(results: &[DnsOutput], q: usize, b: usize) -> crate::matrix::dense::Mat {
+    use crate::matrix::dense::Mat;
+    let mut c = Mat::zeros(q * b, q * b);
+    let mut seen = 0;
+    for out in results {
+        if let Some((i, j, blk)) = &out.c_block {
+            c.set_block(*i, *j, &blk.materialize());
+            seen += 1;
+        }
+    }
+    assert_eq!(seen, q * q, "expected one C block per (i,j)");
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::seq::matmul_seq;
+    use crate::comm::backend::BackendProfile;
+    use crate::comm::cost::CostParams;
+    use crate::spmd::run;
+    use crate::testing::assert_allclose;
+
+    #[test]
+    fn dns_matches_sequential_q2() {
+        let (q, bsz) = (2, 8);
+        let a = BlockSource::real(bsz, 100);
+        let b = BlockSource::real(bsz, 200);
+        let res = run(q * q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            mmm_dns(ctx, &Compute::Native, q, &a, &b)
+        });
+        let c = collect_c(&res.results, q, bsz);
+        let want = matmul_seq(&a.assemble(q), &b.assemble(q));
+        assert_allclose(&c.data, &want.data, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn dns_matches_sequential_q3() {
+        let (q, bsz) = (3, 4);
+        let a = BlockSource::real(bsz, 7);
+        let b = BlockSource::real(bsz, 8);
+        let res = run(q * q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            mmm_dns(ctx, &Compute::Native, q, &a, &b)
+        });
+        let c = collect_c(&res.results, q, bsz);
+        let want = matmul_seq(&a.assemble(q), &b.assemble(q));
+        assert_allclose(&c.data, &want.data, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn dns_pattern_fig4_c_blocks_on_k0_plane() {
+        // Fig. 4: the (partial) result lands on process (i, j, 0).
+        let q = 2;
+        let a = BlockSource::real(4, 1);
+        let b = BlockSource::real(4, 2);
+        let res = run(8, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            mmm_dns(ctx, &Compute::Native, q, &a, &b)
+        });
+        for (rank, out) in res.results.iter().enumerate() {
+            let (i, j, k) = (rank / 4, (rank / 2) % 2, rank % 2);
+            if k == 0 {
+                let (ci, cj, _) = out.c_block.as_ref().expect("k=0 plane owns C");
+                assert_eq!((*ci, *cj), (i, j));
+            } else {
+                assert!(out.c_block.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn dns_modeled_charges_compute_and_comm() {
+        let q = 2;
+        let rate = 1e9;
+        let a = BlockSource::proxy(64, 1);
+        let b = BlockSource::proxy(64, 2);
+        let res = run(
+            8,
+            BackendProfile::openmpi_fixed(),
+            CostParams::new(1e-5, 1e-9),
+            |ctx| mmm_dns(ctx, &Compute::Modeled { rate }, q, &a, &b),
+        );
+        // every rank did one 64³ multiply; reduction adds comm + adds
+        let mult = 2.0 * 64f64.powi(3) / rate;
+        assert!(res.t_parallel > mult, "T_P {} <= mult {mult}", res.t_parallel);
+        // all C blocks are proxies, no data materialized
+        for out in &res.results {
+            if let Some((_, _, blk)) = &out.c_block {
+                assert!(blk.is_proxy());
+            }
+        }
+    }
+
+    #[test]
+    fn dns_extra_world_ranks_idle() {
+        let q = 2;
+        let a = BlockSource::real(4, 3);
+        let b = BlockSource::real(4, 4);
+        let res = run(10, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            mmm_dns(ctx, &Compute::Native, q, &a, &b)
+        });
+        assert!(res.results[8].c_block.is_none());
+        assert!(res.results[9].c_block.is_none());
+        assert_eq!(res.metrics[9].msgs_sent, 0);
+        let c = collect_c(&res.results, q, 4);
+        let want = matmul_seq(&a.assemble(q), &b.assemble(q));
+        assert_allclose(&c.data, &want.data, 1e-4, 1e-5);
+    }
+}

@@ -1,0 +1,24 @@
+//! The paper's algorithms, written against the FooPar public API.
+//!
+//! * [`mmm_generic`] — Algorithm 1: generic matrix-matrix multiplication
+//!   (zip/mapD/reduceD over q³ ranks, sequential ∀-loop, isoefficiency
+//!   Θ(p^{5/3})).
+//! * [`mmm_dns`] — Algorithm 2: Grid3D / DNS multiplication
+//!   (zipWithD · zSeq · reduceD, isoefficiency Θ(p log p)).
+//! * [`floyd_warshall`] — Algorithm 3: 2-d grid parallel Floyd-Warshall.
+//! * [`apsp_squaring`] — extension: APSP by repeated min-plus squaring on
+//!   the DNS grid (uses the tropical Pallas kernel).
+//! * [`cannon`] — extension: Cannon's 2-d algorithm (memory-efficient,
+//!   exercises `shiftD`; isoefficiency Θ(p^{3/2})).
+//! * [`dns_baseline`] — hand-coded DNS directly on the fabric, no
+//!   framework abstractions: the "C/MPI version" of §6 used to measure
+//!   FooPar's abstraction overhead.
+//! * [`seq`] — sequential references (`T_S`) and correctness oracles.
+
+pub mod dns_baseline;
+pub mod floyd_warshall;
+pub mod mmm_dns;
+pub mod mmm_generic;
+pub mod apsp_squaring;
+pub mod cannon;
+pub mod seq;

@@ -1,0 +1,55 @@
+//! Sequential references: `T_S` implementations and workload models.
+//!
+//! The problem size `W` of the isoefficiency analysis (§2) is *defined*
+//! as the sequential runtime, `W := T_S`.  For matrix-matrix
+//! multiplication `T_S = 2n³/rate`; for Floyd-Warshall `T_S = 2n³/rate`
+//! (n³ relax steps of one add + one min).
+
+use crate::matrix::dense::Mat;
+use crate::matrix::gemm;
+
+/// Sequential matrix product (native gemm) — the correctness oracle and
+/// single-core baseline for MMM experiments.
+pub fn matmul_seq(a: &Mat, b: &Mat) -> Mat {
+    gemm::matmul(a, b)
+}
+
+/// FLOPs of an n×n matrix multiplication.
+pub fn mmm_flops(n: usize) -> f64 {
+    2.0 * (n as f64).powi(3)
+}
+
+/// Modeled sequential runtime of MMM at `rate` flops/s.
+pub fn mmm_ts(n: usize, rate: f64) -> f64 {
+    mmm_flops(n) / rate
+}
+
+/// FLOPs of Floyd-Warshall on n vertices (one add + one compare per
+/// (i,j,k) triple).
+pub fn fw_flops(n: usize) -> f64 {
+    2.0 * (n as f64).powi(3)
+}
+
+/// Modeled sequential runtime of Floyd-Warshall at `rate` flops/s.
+pub fn fw_ts(n: usize, rate: f64) -> f64 {
+    fw_flops(n) / rate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flop_models() {
+        assert_eq!(mmm_flops(10), 2000.0);
+        assert_eq!(fw_flops(10), 2000.0);
+        assert_eq!(mmm_ts(10, 1000.0), 2.0);
+    }
+
+    #[test]
+    fn matmul_seq_is_gemm() {
+        let a = Mat::random(8, 8, 1);
+        let b = Mat::random(8, 8, 2);
+        assert_eq!(matmul_seq(&a, &b), gemm::matmul(&a, &b));
+    }
+}

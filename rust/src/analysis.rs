@@ -1,0 +1,217 @@
+//! Scalability analysis: efficiency, overhead, and the paper's
+//! closed-form runtime models + isoefficiency solvers (§2, §4, §5).
+//!
+//! The simulator *measures* `T_P`; this module supplies the analytic
+//! side: `T_S` models, predicted `T_P` from the paper's formulas, and
+//! solvers that invert the models ("what n keeps efficiency E at p
+//! cores?") so the isoefficiency benches can verify that measured
+//! efficiency stays flat along the predicted isoefficiency curve.
+
+use crate::algos::mmm_generic::NOP_COST;
+
+/// Efficiency `E = T_S / (p · T_P)` (§2).
+pub fn efficiency(ts: f64, tp: f64, p: usize) -> f64 {
+    ts / (p as f64 * tp)
+}
+
+/// Speedup `S = T_S / T_P`.
+pub fn speedup(ts: f64, tp: f64) -> f64 {
+    ts / tp
+}
+
+/// Overhead function `T_o(W, p) = p·T_P − T_S` (§2).
+pub fn overhead(ts: f64, tp: f64, p: usize) -> f64 {
+    p as f64 * tp - ts
+}
+
+/// Achieved flop rate `2n³ / T_P` of an n×n MMM, in flop/s.
+pub fn mmm_rate(n: usize, tp: f64) -> f64 {
+    2.0 * (n as f64).powi(3) / tp
+}
+
+fn log2c(x: usize) -> f64 {
+    (x.max(1) as f64).log2().ceil().max(0.0)
+}
+
+/// Model parameters shared by all predictions.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelParams {
+    /// Message start-up (s).
+    pub ts: f64,
+    /// Per-byte time (s/B).
+    pub tw: f64,
+    /// Per-core flop rate (flop/s).
+    pub rate: f64,
+}
+
+impl ModelParams {
+    /// Cost of transferring an m-float block (both endpoints occupied).
+    fn msg(&self, floats: f64) -> f64 {
+        self.ts + self.tw * 4.0 * floats
+    }
+}
+
+/// Predicted `T_P` of Algorithm 2 (Grid3D/DNS MMM, §4.3) at p = q³:
+/// local (n/q)³ multiply (at the block-size-dependent effective GEMM
+/// rate, see [`crate::runtime::compute::gemm_efficiency`]) + log q rounds
+/// of block-sum reduction.
+pub fn tp_dns(n: usize, p: usize, m: &ModelParams) -> f64 {
+    let q = (p as f64).cbrt().round().max(1.0);
+    let b = n as f64 / q;
+    let eff = crate::runtime::compute::gemm_efficiency(b as usize);
+    let mult = 2.0 * b.powi(3) / (m.rate * eff);
+    let rounds = log2c(q as usize);
+    let reduce = rounds * (m.msg(b * b) + b * b / m.rate);
+    mult + reduce
+}
+
+/// Predicted `T_P` of Algorithm 1 (generic MMM, §4.2.1) at p = q³:
+/// the DNS cost plus the q² sequential ∀-loop overhead (the `4p^{2/3}`
+/// term of the paper, with our calibrated per-iteration nop cost).
+pub fn tp_generic(n: usize, p: usize, m: &ModelParams) -> f64 {
+    let q = (p as f64).cbrt().round().max(1.0);
+    tp_dns(n, p, m) + (q * q - 1.0) * NOP_COST
+}
+
+/// Predicted `T_P` of Algorithm 3 (parallel Floyd-Warshall, §5) at
+/// p = q²: n pivots × (segment extract + 2 line-broadcasts + block
+/// update).
+pub fn tp_fw(n: usize, p: usize, m: &ModelParams) -> f64 {
+    let q = (p as f64).sqrt().round().max(1.0);
+    let b = n as f64 / q;
+    let rounds = log2c(q as usize);
+    let per_pivot = 2.0 * b / m.rate            // row+col extraction Θ(B)
+        + 2.0 * rounds * m.msg(b)                // two line broadcasts
+        + 2.0 * b * b / m.rate; // block update Θ(B²)
+    n as f64 * per_pivot
+}
+
+/// Sequential model `T_S = 2n³/rate` (MMM and FW alike).
+pub fn ts_n3(n: usize, m: &ModelParams) -> f64 {
+    2.0 * (n as f64).powi(3) / m.rate
+}
+
+/// Predicted efficiency of a (model, n, p) triple.
+pub fn model_efficiency(
+    tp: impl Fn(usize, usize, &ModelParams) -> f64,
+    n: usize,
+    p: usize,
+    m: &ModelParams,
+) -> f64 {
+    efficiency(ts_n3(n, m), tp(n, p, m), p)
+}
+
+/// Invert a `T_P` model: smallest n (multiple of `step`) whose modeled
+/// efficiency at p cores reaches `target`.  Returns `None` if not
+/// reached below `n_max` (the system is not scalable to that point).
+pub fn isoefficiency_n(
+    tp: impl Fn(usize, usize, &ModelParams) -> f64,
+    p: usize,
+    target: f64,
+    m: &ModelParams,
+    step: usize,
+    n_max: usize,
+) -> Option<usize> {
+    let mut n = step;
+    while n <= n_max {
+        if model_efficiency(&tp, n, p, m) >= target {
+            return Some(n);
+        }
+        // efficiency grows with n; exponential-then-linear probe
+        n += step.max(n / 2 / step * step);
+    }
+    None
+}
+
+/// The paper's asymptotic isoefficiency functions, for report labels.
+pub mod iso {
+    /// Generic algorithm (§4.2.1): `W ∈ Θ(p^{5/3})`.
+    pub fn generic(p: f64) -> f64 {
+        p.powf(5.0 / 3.0)
+    }
+
+    /// Grid/DNS algorithm (§4.3): `W ∈ Θ(p log p)`.
+    pub fn dns(p: f64) -> f64 {
+        p * p.log2().max(1.0)
+    }
+
+    /// Parallel Floyd-Warshall (§5): `W ∈ Θ((√p log p)³)`.
+    pub fn fw(p: f64) -> f64 {
+        (p.sqrt() * p.log2().max(1.0)).powi(3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> ModelParams {
+        ModelParams { ts: 2e-6, tw: 2.5e-10, rate: 1e10 }
+    }
+
+    #[test]
+    fn efficiency_bounds() {
+        let e = efficiency(100.0, 100.0 / 8.0, 8);
+        assert!((e - 1.0).abs() < 1e-12);
+        assert!(efficiency(100.0, 30.0, 8) < 0.5);
+    }
+
+    #[test]
+    fn overhead_zero_iff_perfect() {
+        assert_eq!(overhead(10.0, 10.0 / 4.0, 4), 0.0);
+        assert!(overhead(10.0, 4.0, 4) > 0.0);
+    }
+
+    #[test]
+    fn dns_model_efficiency_increases_with_n() {
+        let p = 64;
+        let e1 = model_efficiency(tp_dns, 512, p, &m());
+        let e2 = model_efficiency(tp_dns, 4096, p, &m());
+        let e3 = model_efficiency(tp_dns, 16384, p, &m());
+        assert!(e1 < e2 && e2 < e3, "{e1} {e2} {e3}");
+        assert!(e3 > 0.9, "large-n efficiency should approach 1: {e3}");
+    }
+
+    #[test]
+    fn dns_model_efficiency_decreases_with_p() {
+        let n = 4096;
+        let e1 = model_efficiency(tp_dns, n, 8, &m());
+        let e2 = model_efficiency(tp_dns, n, 512, &m());
+        assert!(e1 > e2, "{e1} vs {e2}");
+    }
+
+    #[test]
+    fn generic_worse_than_dns_at_large_p() {
+        let n = 8192;
+        let p = 512;
+        assert!(tp_generic(n, p, &m()) > tp_dns(n, p, &m()));
+    }
+
+    #[test]
+    fn isoefficiency_solver_finds_flat_curve() {
+        let mp = m();
+        let target = 0.8;
+        for p in [8usize, 64, 512] {
+            let n = isoefficiency_n(tp_dns, p, target, &mp, 64, 1 << 20).unwrap();
+            let e = model_efficiency(tp_dns, n, p, &mp);
+            assert!(e >= target, "p={p} n={n} e={e}");
+            // not wildly overshooting either (solver probes coarsely)
+            assert!(e <= 1.0);
+        }
+    }
+
+    #[test]
+    fn iso_curves_ordered() {
+        // generic grows strictly faster than dns asymptotically
+        assert!(iso::generic(4096.0) / iso::dns(4096.0) > iso::generic(64.0) / iso::dns(64.0));
+    }
+
+    #[test]
+    fn fw_model_scales() {
+        let mp = m();
+        // fixed n: more cores help until comm dominates
+        let e_small = model_efficiency(tp_fw, 4096, 4, &mp);
+        let e_big = model_efficiency(tp_fw, 4096, 1024, &mp);
+        assert!(e_small > e_big);
+    }
+}

@@ -1,0 +1,139 @@
+//! Minimal CLI argument parsing (the image's crate cache has no `clap`).
+//!
+//! Grammar: `repro <subcommand> [--flag value]... [--switch]... [pos]...`
+//! Flags may be `--key value` or `--key=value`; anything after `--` is
+//! positional.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        let mut rest_positional = false;
+        while let Some(a) = it.next() {
+            if rest_positional {
+                out.positional.push(a);
+                continue;
+            }
+            if a == "--" {
+                rest_positional = true;
+            } else if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.switches.push(key.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key) || self.flags.contains_key(key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key}: expected number, got '{v}'")),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Required flag.
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing required --{key}"))
+    }
+
+    /// Error on unknown subcommand.
+    pub fn unknown(&self) -> Result<()> {
+        match &self.subcommand {
+            Some(s) => bail!("unknown subcommand '{s}' (see `repro help`)"),
+            None => bail!("no subcommand (see `repro help`)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("mmm --n 1024 --p=27 --mode real extra");
+        assert_eq!(a.subcommand.as_deref(), Some("mmm"));
+        assert_eq!(a.get("n"), Some("1024"));
+        assert_eq!(a.get_usize("p", 0).unwrap(), 27);
+        assert_eq!(a.get_str("mode", "?"), "real");
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn switches_without_values() {
+        let a = parse("fig5 --verbose --machine carver");
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("machine"), Some("carver"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("x");
+        assert_eq!(a.get_usize("p", 8).unwrap(), 8);
+        assert_eq!(a.get_f64("r", 1.5).unwrap(), 1.5);
+        assert!(a.require("missing").is_err());
+        let bad = parse("x --p abc");
+        assert!(bad.get_usize("p", 0).is_err());
+    }
+
+    #[test]
+    fn double_dash_stops_flags() {
+        let a = parse("run -- --not-a-flag");
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+}

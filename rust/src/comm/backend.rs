@@ -1,0 +1,189 @@
+//! Communication backend profiles (the paper's FooPar-X configurations).
+//!
+//! §3 of the paper: a FooPar configuration is `FooPar-X-Y-Z` with X the
+//! communication module — `{OpenMPI, MPJ-Express, FastMPJ, SharedMemory}`.
+//! §6 shows the backends differ mainly in (a) which *algorithm* their
+//! collectives use and (b) software overhead on top of the interconnect:
+//!
+//! * the OpenMPI java-binding nightly implements `MPI_Reduce` with a
+//!   simplistic Θ(p) sequence of send/recvs (it does **not** call the
+//!   native reduction); the authors patched it to a Θ(log p) tree — our
+//!   [`BackendProfile::openmpi_fixed`] vs [`BackendProfile::openmpi_stock`];
+//! * MPJ-Express also uses a Θ(p) reduction and adds java-serialization
+//!   overhead — [`BackendProfile::mpj_express`];
+//! * FastMPJ is closed source; measured between the two —
+//!   [`BackendProfile::fastmpj`].
+//!
+//! A profile selects collective algorithms and multiplies the machine's
+//! base `CostParams`; switching backends changes **no algorithm code**,
+//! exactly the paper's portability claim.
+
+use super::cost::CostParams;
+
+/// Which reduction algorithm a backend's `reduceD` uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceAlgo {
+    /// Binomial tree: Θ(log p) rounds — native MPI behaviour.
+    Binomial,
+    /// Root receives p−1 messages sequentially: Θ(p) — the unpatched
+    /// OpenMPI-java / MPJ-Express behaviour the paper calls out.
+    Linear,
+}
+
+/// Broadcast algorithm (one-to-all).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BcastAlgo {
+    /// Recursive doubling / binomial tree: Θ(log p).
+    Binomial,
+    /// Root sends p−1 messages: Θ(p).
+    Linear,
+}
+
+/// All-gather algorithm (all-to-all broadcast).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllGatherAlgo {
+    /// Ring: (p−1) rounds of (t_s + t_w·m) — Table 1's Θ((ts+tw m)(p−1)).
+    Ring,
+    /// Recursive doubling: Θ(ts log p + tw m (p−1)) on a hypercube.
+    RecursiveDoubling,
+}
+
+/// A communication backend: algorithm selection + cost multipliers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BackendProfile {
+    pub name: &'static str,
+    pub reduce: ReduceAlgo,
+    pub bcast: BcastAlgo,
+    pub allgather: AllGatherAlgo,
+    /// Multiplier on the machine's `t_s` (software start-up overhead,
+    /// e.g. JVM/daemon dispatch).
+    pub ts_factor: f64,
+    /// Multiplier on the machine's `t_w` (e.g. serialization copies).
+    pub tw_factor: f64,
+}
+
+impl BackendProfile {
+    /// Effective cost parameters on a machine with base `machine` costs.
+    pub fn cost(&self, machine: CostParams) -> CostParams {
+        CostParams::new(machine.ts * self.ts_factor, machine.tw * self.tw_factor)
+    }
+
+    /// OpenMPI java bindings with the authors' Θ(log p) reduce patch —
+    /// the backend used for all Carver results.
+    pub const fn openmpi_fixed() -> Self {
+        BackendProfile {
+            name: "openmpi-fixed",
+            reduce: ReduceAlgo::Binomial,
+            bcast: BcastAlgo::Binomial,
+            allgather: AllGatherAlgo::Ring,
+            ts_factor: 1.0,
+            tw_factor: 1.0,
+        }
+    }
+
+    /// Unmodified OpenMPI java nightly: naive Θ(p) reduce.
+    pub const fn openmpi_stock() -> Self {
+        BackendProfile {
+            name: "openmpi-stock",
+            reduce: ReduceAlgo::Linear,
+            bcast: BcastAlgo::Binomial,
+            allgather: AllGatherAlgo::Ring,
+            ts_factor: 1.0,
+            tw_factor: 1.0,
+        }
+    }
+
+    /// MPJ-Express: Θ(p) reduce + daemon-mode dispatch (start-up ~tens of
+    /// µs) + java byte-serialization copies on the wire (§3.1's fallback
+    /// serializer; §6 notes the "advantages of slower backends (like
+    /// running in daemon mode)").
+    pub const fn mpj_express() -> Self {
+        BackendProfile {
+            name: "mpj-express",
+            reduce: ReduceAlgo::Linear,
+            bcast: BcastAlgo::Binomial,
+            allgather: AllGatherAlgo::Ring,
+            ts_factor: 20.0,
+            tw_factor: 4.0,
+        }
+    }
+
+    /// FastMPJ: native-ish transport, tree collectives, some java overhead.
+    pub const fn fastmpj() -> Self {
+        BackendProfile {
+            name: "fastmpj",
+            reduce: ReduceAlgo::Binomial,
+            bcast: BcastAlgo::Binomial,
+            allgather: AllGatherAlgo::Ring,
+            ts_factor: 2.0,
+            tw_factor: 1.3,
+        }
+    }
+
+    /// In-process shared memory (FooPar's SharedMemory module).
+    pub const fn shmem() -> Self {
+        BackendProfile {
+            name: "shmem",
+            reduce: ReduceAlgo::Binomial,
+            bcast: BcastAlgo::Binomial,
+            allgather: AllGatherAlgo::Ring,
+            ts_factor: 0.1,
+            tw_factor: 0.4,
+        }
+    }
+
+    /// Look up a profile by name (CLI / config files).
+    pub fn by_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "openmpi-fixed" => Self::openmpi_fixed(),
+            "openmpi-stock" => Self::openmpi_stock(),
+            "mpj-express" => Self::mpj_express(),
+            "fastmpj" => Self::fastmpj(),
+            "shmem" => Self::shmem(),
+            _ => return None,
+        })
+    }
+
+    /// All built-in profiles (Fig. 5 right sweeps these).
+    pub fn all() -> Vec<Self> {
+        vec![
+            Self::openmpi_fixed(),
+            Self::openmpi_stock(),
+            Self::mpj_express(),
+            Self::fastmpj(),
+        ]
+    }
+}
+
+impl Default for BackendProfile {
+    fn default() -> Self {
+        Self::openmpi_fixed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name_roundtrips() {
+        for b in BackendProfile::all() {
+            assert_eq!(BackendProfile::by_name(b.name).unwrap(), b);
+        }
+        assert!(BackendProfile::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn stock_is_linear_fixed_is_tree() {
+        assert_eq!(BackendProfile::openmpi_stock().reduce, ReduceAlgo::Linear);
+        assert_eq!(BackendProfile::openmpi_fixed().reduce, ReduceAlgo::Binomial);
+    }
+
+    #[test]
+    fn cost_applies_factors() {
+        let m = CostParams::new(1e-6, 1e-9);
+        let c = BackendProfile::mpj_express().cost(m);
+        assert!((c.ts - 20e-6).abs() < 1e-15);
+        assert!((c.tw - 4e-9).abs() < 1e-15);
+    }
+}

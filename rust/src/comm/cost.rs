@@ -1,0 +1,77 @@
+//! Communication cost model (Hockney / LogGP flavour).
+//!
+//! The paper (§2) models the cost of passing an `m`-word message as
+//! `t_c = t_s + t_w · m` where `t_s` is the start-up time and `t_w` the
+//! per-word transfer time.  We keep the same two-parameter model but in
+//! *bytes* and *seconds*: every message that crosses the fabric advances
+//! virtual clocks by `ts + tw_byte · bytes`.
+//!
+//! These parameters are per-machine (interconnect) and per-backend
+//! (software stack overhead multipliers) — see [`crate::comm::backend`]
+//! and [`crate::config`].
+
+/// Cost parameters of one (machine, backend) combination.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostParams {
+    /// Message start-up latency `t_s` in seconds.
+    pub ts: f64,
+    /// Per-byte transfer time `t_w` in seconds (1/bandwidth).
+    pub tw: f64,
+}
+
+impl CostParams {
+    pub const fn new(ts: f64, tw: f64) -> Self {
+        CostParams { ts, tw }
+    }
+
+    /// Cost in seconds of one point-to-point message of `bytes` bytes.
+    #[inline]
+    pub fn msg(&self, bytes: usize) -> f64 {
+        self.ts + self.tw * bytes as f64
+    }
+
+    /// 4X QDR InfiniBand (Carver): 32 Gb/s point-to-point → 4 GB/s,
+    /// `tw = 0.25 ns/B`; MPI start-up ≈ 2 µs.
+    pub const fn qdr_infiniband() -> Self {
+        CostParams::new(2.0e-6, 2.5e-10)
+    }
+
+    /// In-process shared memory: memcpy-speed transfer, negligible latency.
+    pub const fn shared_memory() -> Self {
+        CostParams::new(2.0e-7, 1.0e-10)
+    }
+
+    /// A zero-cost network, useful for isolating compute in tests.
+    pub const fn free() -> Self {
+        CostParams::new(0.0, 0.0)
+    }
+}
+
+impl Default for CostParams {
+    fn default() -> Self {
+        CostParams::qdr_infiniband()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msg_cost_is_affine() {
+        let c = CostParams::new(1.0e-6, 1.0e-9);
+        assert_eq!(c.msg(0), 1.0e-6);
+        let one_k = c.msg(1000);
+        let two_k = c.msg(2000);
+        // slope is tw per byte
+        assert!((two_k - one_k - 1.0e-6 * 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn presets_ordered_by_speed() {
+        let ib = CostParams::qdr_infiniband();
+        let shm = CostParams::shared_memory();
+        assert!(shm.ts < ib.ts);
+        assert!(shm.tw <= ib.tw);
+    }
+}

@@ -1,0 +1,168 @@
+//! Communication groups: the bridge between distributed collections and
+//! collectives.
+//!
+//! A group is an ordered subset of world ranks; element *i* of a
+//! distributed sequence lives on the group's *i*-th member (FooPar's
+//! static process↔data mapping, §3.3).  Groups own a private, collision-
+//! free tag namespace so independent groups (and successive operations on
+//! the same group) never cross-match messages — this is how FooPar makes
+//! "deadlocks and race conditions practically eliminated" concrete.
+//!
+//! Creating a group is purely local: the id is derived deterministically
+//! from the member list and a per-signature instance counter (consistent
+//! across members because the program is SPMD) — zero messages.
+
+use crate::spmd::Ctx;
+
+/// An ordered subset of world ranks with a private tag namespace.
+pub struct Group<'a> {
+    pub(crate) ctx: &'a Ctx,
+    ranks: Vec<usize>,
+    /// My position in `ranks`, if I am a member.
+    my_index: Option<usize>,
+    /// Tag-namespace base for this group instance.
+    id: u64,
+    /// Per-operation sequence number (bumped by every collective).
+    op_seq: std::cell::Cell<u64>,
+}
+
+impl<'a> Group<'a> {
+    /// The world group: all ranks in rank order.
+    pub fn world(ctx: &'a Ctx) -> Self {
+        Self::new(ctx, (0..ctx.world).collect())
+    }
+
+    /// A group over `ranks` (order defines group-rank numbering).
+    /// Every world rank may construct the group (SPMD), member or not.
+    pub fn new(ctx: &'a Ctx, ranks: Vec<usize>) -> Self {
+        debug_assert!(!ranks.is_empty(), "empty group");
+        debug_assert!(
+            ranks.iter().all(|&r| r < ctx.world),
+            "group rank outside world"
+        );
+        let id = ctx.alloc_group_id(&ranks);
+        let my_index = ranks.iter().position(|&r| r == ctx.rank);
+        Group { ctx, ranks, my_index, id, op_seq: std::cell::Cell::new(0) }
+    }
+
+    /// Number of members.
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Am I a member?
+    pub fn is_member(&self) -> bool {
+        self.my_index.is_some()
+    }
+
+    /// My group rank (panics for non-members; check `is_member` first).
+    pub fn index(&self) -> usize {
+        self.my_index.expect("rank is not a member of this group")
+    }
+
+    /// My group rank, if member.
+    pub fn try_index(&self) -> Option<usize> {
+        self.my_index
+    }
+
+    /// World rank of group member `i`.
+    pub fn world_rank(&self, i: usize) -> usize {
+        self.ranks[i]
+    }
+
+    /// All member world ranks in group order.
+    pub fn ranks(&self) -> &[usize] {
+        &self.ranks
+    }
+
+    /// Fresh tag for the next collective operation on this group.
+    /// Members stay aligned because SPMD programs invoke the same
+    /// sequence of collectives on the same group instance.
+    pub(crate) fn next_tag(&self) -> u64 {
+        let seq = self.op_seq.get();
+        self.op_seq.set(seq + 1);
+        self.id.wrapping_add(seq)
+    }
+
+    /// Send to group member `dst` (group rank) under `tag`.
+    pub(crate) fn send_to<T: crate::data::value::Data>(&self, dst: usize, tag: u64, v: T) {
+        self.ctx.send(self.ranks[dst], tag, v);
+    }
+
+    /// Receive from group member `src` (group rank) under `tag`.
+    pub(crate) fn recv_from<T: crate::data::value::Data>(&self, src: usize, tag: u64) -> T {
+        self.ctx.recv(self.ranks[src], tag)
+    }
+
+    /// Full-duplex exchange: send to member `dst` while receiving from
+    /// member `src` (one round of a ring/pairwise collective).
+    pub(crate) fn send_recv_with<T: crate::data::value::Data, U: crate::data::value::Data>(
+        &self,
+        dst: usize,
+        src: usize,
+        tag: u64,
+        v: T,
+    ) -> U {
+        self.ctx.send_recv(self.ranks[dst], self.ranks[src], tag, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::backend::BackendProfile;
+    use crate::comm::cost::CostParams;
+    use crate::spmd::run;
+
+    #[test]
+    fn world_group_indexing() {
+        let res = run(
+            4,
+            BackendProfile::openmpi_fixed(),
+            CostParams::free(),
+            |ctx| {
+                let g = Group::world(ctx);
+                assert_eq!(g.size(), 4);
+                assert!(g.is_member());
+                assert_eq!(g.index(), ctx.rank);
+                assert_eq!(g.world_rank(2), 2);
+                true
+            },
+        );
+        assert!(res.results.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn subgroup_membership() {
+        run(4, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            let g = Group::new(ctx, vec![1, 3]);
+            match ctx.rank {
+                1 => assert_eq!(g.index(), 0),
+                3 => assert_eq!(g.index(), 1),
+                _ => assert!(!g.is_member()),
+            }
+        });
+    }
+
+    #[test]
+    fn group_order_defines_group_rank() {
+        run(3, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            // reversed order: world rank 2 is group rank 0
+            let g = Group::new(ctx, vec![2, 1, 0]);
+            assert_eq!(g.index(), 2 - ctx.rank);
+        });
+    }
+
+    #[test]
+    fn tags_distinct_across_instances_and_ops() {
+        run(2, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            let g1 = Group::world(ctx);
+            let g2 = Group::world(ctx);
+            let t1a = g1.next_tag();
+            let t1b = g1.next_tag();
+            let t2a = g2.next_tag();
+            assert_ne!(t1a, t1b);
+            assert_ne!(t1a, t2a);
+        });
+    }
+}

@@ -1,0 +1,1 @@
+pub mod cost; pub mod fabric; pub mod backend; pub mod group; pub mod collectives;

@@ -1,0 +1,283 @@
+//! Machine + run configuration.
+//!
+//! A FooPar configuration is `FooPar-X-Y-Z` (§3): X the communication
+//! module, Y the networking substrate, Z the hardware.  Here Z is a
+//! [`MachineConfig`] — interconnect cost parameters and the calibrated
+//! per-core GEMM rate that efficiency is normalized against (the paper
+//! measures "empirical peak performance" with a single-core C+MKL/BLAS
+//! matmul; our analogue is `repro peak`, a single-rank PJRT block GEMM).
+//!
+//! Built-ins model the paper's two systems; config files use a minimal
+//! `key = value` dialect (see [`parse_kv`] — the image has no TOML crate,
+//! so the parser is in-tree and deliberately tiny).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::comm::cost::CostParams;
+
+/// A machine (the paper's `Z` axis): interconnect + per-core compute.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MachineConfig {
+    pub name: String,
+    /// Calibrated per-core GEMM rate in flops/s (the "empirical peak" the
+    /// paper normalizes efficiency by): 10.11 GF/s on Carver (MKL),
+    /// 4.55 GF/s on Horseshoe-6 (generic BLAS).
+    pub rate: f64,
+    /// Theoretical per-core peak (Carver: 10.67 GF/s).
+    pub peak: f64,
+    /// Interconnect start-up latency t_s (seconds).
+    pub ts: f64,
+    /// Interconnect per-byte time t_w (seconds/byte).
+    pub tw: f64,
+    /// Largest core count in the queue (Carver: 512).
+    pub max_cores: usize,
+    /// Backend names to sweep on this machine.
+    pub backends: Vec<String>,
+}
+
+impl MachineConfig {
+    pub fn cost(&self) -> CostParams {
+        CostParams::new(self.ts, self.tw)
+    }
+
+    /// Carver (NERSC iDataPlex, 4X QDR InfiniBand, MKL): the machine of
+    /// Fig. 5 left.
+    pub fn carver() -> Self {
+        MachineConfig {
+            name: "carver".into(),
+            rate: 10.11e9,
+            peak: 10.67e9,
+            ts: 2.0e-6,
+            tw: 2.5e-10,
+            max_cores: 512,
+            backends: vec!["openmpi-fixed".into()],
+        }
+    }
+
+    /// Horseshoe-6 (SDU, same interconnect class, generic BLAS): the
+    /// machine of Fig. 5 right — the backend-comparison testbed.
+    pub fn horseshoe6() -> Self {
+        MachineConfig {
+            name: "horseshoe6".into(),
+            rate: 4.55e9,
+            peak: 4.55e9,
+            ts: 2.5e-6,
+            tw: 2.5e-10,
+            max_cores: 512,
+            backends: vec![
+                "openmpi-fixed".into(),
+                "openmpi-stock".into(),
+                "mpj-express".into(),
+                "fastmpj".into(),
+            ],
+        }
+    }
+
+    /// A laptop-ish profile for real-mode runs (shared-memory costs).
+    pub fn local() -> Self {
+        MachineConfig {
+            name: "local".into(),
+            rate: 5.0e9,
+            peak: 5.0e9,
+            ts: 2.0e-7,
+            tw: 1.0e-10,
+            max_cores: 64,
+            backends: vec!["shmem".into()],
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "carver" => Some(Self::carver()),
+            "horseshoe6" | "horseshoe" => Some(Self::horseshoe6()),
+            "local" => Some(Self::local()),
+            _ => None,
+        }
+    }
+
+    /// Build from parsed key=value pairs.
+    pub fn from_kv(kv: &HashMap<String, Value>) -> Result<Self> {
+        let get = |k: &str| kv.get(k).ok_or_else(|| anyhow!("missing key '{k}'"));
+        Ok(MachineConfig {
+            name: get("name")?.as_str()?.to_string(),
+            rate: get("rate")?.as_f64()?,
+            peak: kv.get("peak").map(|v| v.as_f64()).transpose()?.unwrap_or(
+                get("rate")?.as_f64()?,
+            ),
+            ts: get("ts")?.as_f64()?,
+            tw: get("tw")?.as_f64()?,
+            max_cores: get("max_cores")?.as_f64()? as usize,
+            backends: match kv.get("backends") {
+                Some(v) => v.as_list()?.to_vec(),
+                None => vec!["openmpi-fixed".into()],
+            },
+        })
+    }
+
+    /// Load from a config file (see [`parse_kv`] for the dialect).
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let kv = parse_kv(&text)?;
+        Self::from_kv(&kv).with_context(|| format!("in {}", path.display()))
+    }
+
+    /// Resolve a CLI `--machine` argument: built-in name or file path.
+    pub fn resolve(spec: &str) -> Result<Self> {
+        if let Some(m) = Self::by_name(spec) {
+            return Ok(m);
+        }
+        let p = Path::new(spec);
+        if p.exists() {
+            return Self::load(p);
+        }
+        bail!("unknown machine '{spec}' (built-ins: carver, horseshoe6, local; or a config path)")
+    }
+}
+
+/// A parsed config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    List(Vec<String>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_list(&self) -> Result<&[String]> {
+        match self {
+            Value::List(v) => Ok(v),
+            _ => bail!("expected list, got {self:?}"),
+        }
+    }
+}
+
+/// Parse the minimal config dialect:
+///
+/// ```text
+/// # comment
+/// name = "carver"
+/// rate = 10.11e9
+/// backends = ["openmpi-fixed", "fastmpj"]
+/// ```
+pub fn parse_kv(text: &str) -> Result<HashMap<String, Value>> {
+    let mut out = HashMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected 'key = value'", lineno + 1))?;
+        let key = k.trim().to_string();
+        let val = parse_value(v.trim())
+            .with_context(|| format!("line {}: bad value for '{key}'", lineno + 1))?;
+        out.insert(key, val);
+    }
+    Ok(out)
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(inner) = s.strip_prefix('"').and_then(|t| t.strip_suffix('"')) {
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|t| t.strip_suffix(']')) {
+        let items = inner
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(|t| {
+                t.strip_prefix('"')
+                    .and_then(|u| u.strip_suffix('"'))
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("list items must be quoted strings: {t}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Value::List(items));
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| anyhow!("cannot parse '{s}' as number, string, or list"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_resolve() {
+        assert_eq!(MachineConfig::resolve("carver").unwrap().rate, 10.11e9);
+        assert_eq!(MachineConfig::resolve("horseshoe").unwrap().rate, 4.55e9);
+        assert!(MachineConfig::resolve("nope").is_err());
+    }
+
+    #[test]
+    fn parse_dialect() {
+        let kv = parse_kv(
+            r#"
+            # a machine
+            name = "test"
+            rate = 1.5e9
+            ts = 1e-6     # latency
+            tw = 2e-10
+            max_cores = 64
+            backends = ["a", "b"]
+            "#,
+        )
+        .unwrap();
+        let m = MachineConfig::from_kv(&kv).unwrap();
+        assert_eq!(m.name, "test");
+        assert_eq!(m.rate, 1.5e9);
+        assert_eq!(m.backends, vec!["a", "b"]);
+        assert_eq!(m.peak, 1.5e9); // defaults to rate
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_kv("just words").is_err());
+        assert!(parse_kv("x = [1, 2]").is_err()); // unquoted list items
+        assert!(parse_kv("x = nope").is_err());
+    }
+
+    #[test]
+    fn load_roundtrip_via_file() {
+        let dir = std::env::temp_dir().join("foopar_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.toml");
+        std::fs::write(
+            &p,
+            "name = \"filetest\"\nrate = 2e9\nts = 1e-6\ntw = 1e-10\nmax_cores = 8\n",
+        )
+        .unwrap();
+        let m = MachineConfig::resolve(p.to_str().unwrap()).unwrap();
+        assert_eq!(m.name, "filetest");
+        assert_eq!(m.max_cores, 8);
+    }
+
+    #[test]
+    fn carver_matches_paper_numbers() {
+        let c = MachineConfig::carver();
+        // §6: 10.11 GF/s empirical, 10.67 GF/s theoretical, 512 cores max
+        assert_eq!(c.rate, 10.11e9);
+        assert_eq!(c.peak, 10.67e9);
+        assert_eq!(c.max_cores, 512);
+    }
+}

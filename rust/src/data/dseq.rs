@@ -1,0 +1,406 @@
+//! Distributed sequences — FooPar's central data structure (§3.3).
+//!
+//! A `DistSeq<T>` is a sequence whose *i*-th element lives on the *i*-th
+//! member of its communication group (static process↔data mapping).  All
+//! inter-process communication happens through the group operations of
+//! Table 1 — `mapD`, `zipWithD`, `reduceD`, `shiftD`, `allToAllD`,
+//! `allGatherD`, `apply` — so user code contains no message passing at
+//! all, which is how FooPar "practically eliminates" deadlocks and races.
+//!
+//! SPMD semantics: *every* rank constructs the sequence (cheaply — the
+//! generator runs only for the element the rank owns, the lazy-proxy
+//! trick of Fig. 2/3), and *every group member* must call each subsequent
+//! group operation.  Non-members hold no element and no-op through the
+//! entire chain, returning `None` where a value would be produced.
+//!
+//! | op | communication | `T_P` (Table 1) |
+//! |---|---|---|
+//! | `map_d` | none | Θ(T_λ(m)) |
+//! | `zip_with_d` | none | Θ(T_λ(m)) |
+//! | `reduce_d` | tree/linear reduce | Θ(log p (t_s + t_w m + T_λ(m))) |
+//! | `shift_d` | cyclic point-to-point | Θ(t_s + t_w m) |
+//! | `all_to_all_d` | pairwise exchange | Θ((t_s + t_w m)(p−1)) |
+//! | `all_gather_d` | ring | Θ((t_s + t_w m)(p−1)) |
+//! | `apply` | binomial bcast | Θ(log p (t_s + t_w m)) |
+
+use crate::comm::collectives;
+use crate::comm::group::Group;
+use crate::data::value::Data;
+use crate::spmd::Ctx;
+
+/// A distributed sequence: element *i* lives on group member *i*.
+pub struct DistSeq<'a, T: Data> {
+    group: Group<'a>,
+    local: Option<T>,
+}
+
+impl<'a, T: Data> DistSeq<'a, T> {
+    /// Build a sequence of `ranks.len()` elements, element *i* owned by
+    /// world rank `ranks[i]`.  `gen` runs **only** on the owning rank and
+    /// only for its own index — every rank "generates the sequence" in
+    /// SPMD terms, but lazily (no space/time overhead, §3.2).
+    pub fn from_fn(ctx: &'a Ctx, ranks: Vec<usize>, gen: impl FnOnce(usize) -> T) -> Self {
+        let group = Group::new(ctx, ranks);
+        let local = group.try_index().map(gen);
+        DistSeq { group, local }
+    }
+
+    /// Sequence over world ranks `0..len` (the `0 to n` idiom of §3.2).
+    pub fn range(ctx: &'a Ctx, len: usize, gen: impl FnOnce(usize) -> T) -> Self {
+        Self::from_fn(ctx, (0..len).collect(), gen)
+    }
+
+    /// Wrap an existing group + local element (used by [`crate::data::grid`]).
+    pub(crate) fn from_parts(group: Group<'a>, local: Option<T>) -> Self {
+        DistSeq { group, local }
+    }
+
+    /// Number of elements (== group size).
+    pub fn len(&self) -> usize {
+        self.group.size()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Does this rank own an element?
+    pub fn is_member(&self) -> bool {
+        self.group.is_member()
+    }
+
+    /// My element index (== my group rank), if member.
+    pub fn index(&self) -> Option<usize> {
+        self.group.try_index()
+    }
+
+    /// Borrow my element, if member.
+    pub fn local(&self) -> Option<&T> {
+        self.local.as_ref()
+    }
+
+    /// Take my element out (consumes the sequence).
+    pub fn into_local(self) -> Option<T> {
+        self.local
+    }
+
+    /// The underlying communication group.
+    pub fn group(&self) -> &Group<'a> {
+        &self.group
+    }
+
+    // ------------------------------------------------ non-communicating
+
+    /// Transform each element in place — non-communicating, Θ(T_λ(m)).
+    /// The group "follows" the result (§3.3: chained functional style).
+    pub fn map_d<U: Data>(self, f: impl FnOnce(T) -> U) -> DistSeq<'a, U> {
+        DistSeq { local: self.local.map(f), group: self.group }
+    }
+
+    /// Like [`Self::map_d`] but the lambda also sees the element index.
+    pub fn map_d_indexed<U: Data>(self, f: impl FnOnce(usize, T) -> U) -> DistSeq<'a, U> {
+        let idx = self.group.try_index();
+        DistSeq {
+            local: self.local.map(|v| f(idx.expect("member without index"), v)),
+            group: self.group,
+        }
+    }
+
+    /// Combine elementwise with `other` (same group required) —
+    /// non-communicating, Θ(T_λ(m)).
+    pub fn zip_with_d<U: Data, V: Data>(
+        self,
+        other: DistSeq<'a, U>,
+        f: impl FnOnce(T, U) -> V,
+    ) -> DistSeq<'a, V> {
+        assert_eq!(
+            self.group.ranks(),
+            other.group.ranks(),
+            "zipWithD requires sequences over the same group"
+        );
+        let local = match (self.local, other.local) {
+            (Some(a), Some(b)) => Some(f(a, b)),
+            (None, None) => None,
+            _ => unreachable!("member/non-member mismatch between zipped sequences"),
+        };
+        DistSeq { local, group: self.group }
+    }
+
+    // ---------------------------------------------------- communicating
+
+    /// Reduce the sequence to its first member (group rank 0) with the
+    /// associative operator `op` — Θ(log p (t_s + t_w m + T_λ(m))) on
+    /// tree backends, Θ(p·…) on the naive ones (§6).
+    ///
+    /// Returns `Some(result)` on the root member, `None` elsewhere.
+    pub fn reduce_d(self, op: impl Fn(T, T) -> T) -> Option<T> {
+        let Some(local) = self.local else { return None };
+        collectives::reduce(&self.group, 0, local, op)
+    }
+
+    /// Reduce with the result broadcast back to all members.
+    pub fn all_reduce_d(self, op: impl Fn(T, T) -> T) -> Option<T>
+    where
+        T: Clone,
+    {
+        let local = self.local?;
+        Some(collectives::allreduce(&self.group, local, op))
+    }
+
+    /// Cyclic shift by `delta` — Θ(t_s + t_w m).
+    pub fn shift_d(self, delta: isize) -> DistSeq<'a, T> {
+        let local = self.local.map(|v| collectives::shift(&self.group, delta, v));
+        DistSeq { local, group: self.group }
+    }
+
+    /// Every member obtains the whole sequence — Θ((t_s + t_w m)(p−1)).
+    pub fn all_gather_d(&self) -> Option<Vec<T>>
+    where
+        T: Clone,
+    {
+        let local = self.local.as_ref()?;
+        Some(collectives::allgather(&self.group, local.clone()))
+    }
+
+    /// Inclusive prefix scan: member i ends up with
+    /// `v_0 ⊕ … ⊕ v_i` — Θ(log p (t_s + t_w m + T_λ(m))).
+    /// (Extension beyond Table 1; the natural companion of `reduce_d`.)
+    pub fn scan_d(self, op: impl Fn(T, T) -> T) -> DistSeq<'a, T>
+    where
+        T: Clone,
+    {
+        let local = self.local.map(|v| collectives::scan(&self.group, v, op));
+        DistSeq { local, group: self.group }
+    }
+
+    /// Gather the whole sequence at its first member (group rank 0) —
+    /// Θ((t_s + t_w m)(p−1)) linear gather.
+    pub fn gather_d(self) -> Option<Vec<T>> {
+        let local = self.local?;
+        collectives::gather(&self.group, 0, local)
+    }
+
+    /// Every member obtains element `i` (one-to-all broadcast from its
+    /// owner) — Θ(log p (t_s + t_w m)).  Table 1's `apply(i)`.
+    pub fn apply(&self, i: usize) -> Option<T>
+    where
+        T: Clone,
+    {
+        // Inert (non-member) chains no-op; members may legitimately hold
+        // their element even while others broadcast.
+        if self.local.is_none() {
+            return None;
+        }
+        let me = self.group.index();
+        let v = if me == i { self.local.clone() } else { None };
+        Some(collectives::bcast(&self.group, i, v))
+    }
+}
+
+impl<'a, T: Data> DistSeq<'a, Vec<T>> {
+    /// Personalized all-to-all (Table 1's `allToAllD`): member *i*'s j-th
+    /// sub-element is delivered to member *j*; the result on member *i*
+    /// is the vector of everyone's i-th sub-elements.
+    pub fn all_to_all_d(self) -> DistSeq<'a, Vec<T>> {
+        let local = self.local.map(|v| collectives::alltoall(&self.group, v));
+        DistSeq { local, group: self.group }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::backend::BackendProfile;
+    use crate::comm::cost::CostParams;
+    use crate::spmd::run;
+
+    fn fixed() -> BackendProfile {
+        BackendProfile::openmpi_fixed()
+    }
+    fn free() -> CostParams {
+        CostParams::free()
+    }
+
+    #[test]
+    fn popcount_example_from_paper() {
+        // §3.2: seq = 0 until worldSize-2; counts = seq mapD ones
+        fn ones(i: usize) -> u32 {
+            (i as u32).count_ones()
+        }
+        let p = 8;
+        let res = run(p, fixed(), free(), |ctx| {
+            let seq = DistSeq::range(ctx, ctx.world - 2, |i| i);
+            seq.map_d(|i| ones(i)).into_local()
+        });
+        for (rank, r) in res.results.iter().enumerate() {
+            if rank < p - 2 {
+                assert_eq!(*r, Some(ones(rank)));
+            } else {
+                assert_eq!(*r, None); // last two ranks hold no element
+            }
+        }
+    }
+
+    #[test]
+    fn generator_runs_only_on_owner() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static CALLS: AtomicUsize = AtomicUsize::new(0);
+        run(6, fixed(), free(), |ctx| {
+            let _ = DistSeq::range(ctx, 4, |i| {
+                CALLS.fetch_add(1, Ordering::SeqCst);
+                i as u64
+            });
+        });
+        // only the 4 owning ranks ran the generator (lazy SPMD, Fig. 2)
+        assert_eq!(CALLS.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn map_then_reduce() {
+        let res = run(5, fixed(), free(), |ctx| {
+            DistSeq::range(ctx, 5, |i| i as i64)
+                .map_d(|v| v * v)
+                .reduce_d(|a, b| a + b)
+        });
+        assert_eq!(res.results[0], Some(0 + 1 + 4 + 9 + 16));
+        assert!(res.results[1..].iter().all(Option::is_none));
+    }
+
+    #[test]
+    fn zip_with_d_combines_pairwise() {
+        let res = run(4, fixed(), free(), |ctx| {
+            let a = DistSeq::range(ctx, 4, |i| i as i64);
+            let b = DistSeq::range(ctx, 4, |i| 10 * i as i64);
+            a.zip_with_d(b, |x, y| x + y).reduce_d(|x, y| x + y)
+        });
+        assert_eq!(res.results[0], Some(0 + 11 + 22 + 33));
+    }
+
+    #[test]
+    fn shift_d_rotates_elements() {
+        let res = run(4, fixed(), free(), |ctx| {
+            DistSeq::range(ctx, 4, |i| i as i64).shift_d(1).into_local()
+        });
+        assert_eq!(
+            res.results,
+            vec![Some(3), Some(0), Some(1), Some(2)]
+        );
+    }
+
+    #[test]
+    fn all_gather_d_everywhere() {
+        let res = run(3, fixed(), free(), |ctx| {
+            DistSeq::range(ctx, 3, |i| i as u64 * 7).all_gather_d()
+        });
+        for r in &res.results {
+            assert_eq!(*r, Some(vec![0, 7, 14]));
+        }
+    }
+
+    #[test]
+    fn apply_broadcasts_ith_element() {
+        let res = run(6, fixed(), free(), |ctx| {
+            DistSeq::range(ctx, 6, |i| format!("e{i}")).apply(4)
+        });
+        assert!(res.results.iter().all(|r| r.as_deref() == Some("e4")));
+    }
+
+    #[test]
+    fn all_to_all_transposes() {
+        let p = 4;
+        let res = run(p, fixed(), free(), |ctx| {
+            DistSeq::range(ctx, p, |i| (0..p).map(|j| (i * 10 + j) as u64).collect::<Vec<_>>())
+                .all_to_all_d()
+                .into_local()
+        });
+        for (me, r) in res.results.iter().enumerate() {
+            let expect: Vec<u64> = (0..p).map(|i| (i * 10 + me) as u64).collect();
+            assert_eq!(r.as_ref(), Some(&expect));
+        }
+    }
+
+    #[test]
+    fn all_reduce_everywhere() {
+        let res = run(4, fixed(), free(), |ctx| {
+            DistSeq::range(ctx, 4, |i| i as i64 + 1).all_reduce_d(|a, b| a * b)
+        });
+        assert!(res.results.iter().all(|r| *r == Some(24)));
+    }
+
+    #[test]
+    fn subsequence_on_subset_of_ranks() {
+        // sequence over ranks {1, 3}: others no-op through the chain
+        let res = run(4, fixed(), free(), |ctx| {
+            DistSeq::from_fn(ctx, vec![1, 3], |i| (i as i64 + 1) * 100)
+                .map_d(|v| v + 1)
+                .reduce_d(|a, b| a + b)
+        });
+        assert_eq!(res.results, vec![None, Some(302), None, None]);
+    }
+
+    #[test]
+    fn chained_ops_reuse_group_without_crosstalk() {
+        // two sequences over the same ranks chained independently
+        let res = run(4, fixed(), free(), |ctx| {
+            let s1 = DistSeq::range(ctx, 4, |i| i as i64);
+            let s2 = DistSeq::range(ctx, 4, |i| 100 + i as i64);
+            let r1 = s1.map_d(|v| v).reduce_d(|a, b| a + b);
+            let r2 = s2.reduce_d(|a, b| a + b);
+            (r1, r2)
+        });
+        assert_eq!(res.results[0], (Some(6), Some(406)));
+    }
+
+    #[test]
+    fn map_d_indexed_sees_index() {
+        let res = run(3, fixed(), free(), |ctx| {
+            DistSeq::range(ctx, 3, |_| 0u64)
+                .map_d_indexed(|i, _| i as u64)
+                .into_local()
+        });
+        assert_eq!(res.results, vec![Some(0), Some(1), Some(2)]);
+    }
+
+    #[test]
+    fn scan_d_prefix_sums() {
+        let res = run(6, fixed(), free(), |ctx| {
+            DistSeq::range(ctx, 6, |i| i as i64 + 1)
+                .scan_d(|a, b| a + b)
+                .into_local()
+        });
+        // inclusive prefix sums of 1..=6
+        let expect: Vec<Option<i64>> =
+            vec![Some(1), Some(3), Some(6), Some(10), Some(15), Some(21)];
+        assert_eq!(res.results, expect);
+    }
+
+    #[test]
+    fn scan_d_preserves_order_noncommutative() {
+        let res = run(5, fixed(), free(), |ctx| {
+            DistSeq::range(ctx, 5, |i| format!("{i}"))
+                .scan_d(|a, b| a + &b)
+                .into_local()
+        });
+        assert_eq!(res.results[4].as_deref(), Some("01234"));
+        assert_eq!(res.results[0].as_deref(), Some("0"));
+    }
+
+    #[test]
+    fn gather_d_collects_at_root() {
+        let res = run(4, fixed(), free(), |ctx| {
+            DistSeq::range(ctx, 4, |i| i as u64 * 5).gather_d()
+        });
+        assert_eq!(res.results[0], Some(vec![0, 5, 10, 15]));
+        assert!(res.results[1..].iter().all(Option::is_none));
+    }
+
+    #[test]
+    #[should_panic(expected = "same group")]
+    fn zip_with_d_rejects_mismatched_groups() {
+        run(4, fixed(), free(), |ctx| {
+            let a = DistSeq::range(ctx, 4, |i| i as i64);
+            let b = DistSeq::range(ctx, 3, |i| i as i64);
+            let _ = a.zip_with_d(b, |x, y| x + y);
+        });
+    }
+}

@@ -1,0 +1,169 @@
+//! Distributed singletons — "distributed variables" (§3.3).
+//!
+//! The paper: *"In its current state, FooPar supports distributed
+//! singletons (aka. distributed variables), distributed sequences and
+//! distributed multidimensional sequences."*
+//!
+//! A `DistVar<T>` is a value owned by exactly one rank of a group, with
+//! SPMD-safe accessors: `read()` broadcasts it to every member
+//! (Θ(log p (t_s + t_w m))), `set(...)` replaces it on the owner,
+//! `move_to(...)` migrates ownership (Θ(t_s + t_w m)).
+
+use crate::comm::collectives;
+use crate::comm::group::Group;
+use crate::data::value::Data;
+use crate::spmd::Ctx;
+
+/// A single value owned by one member of a group.
+pub struct DistVar<'a, T: Data> {
+    group: Group<'a>,
+    /// Group rank of the current owner.
+    owner: usize,
+    /// The value, present only on the owner.
+    local: Option<T>,
+}
+
+impl<'a, T: Data> DistVar<'a, T> {
+    /// Create over the whole world, owned by group rank `owner`.
+    /// `init` runs only on the owner (lazy, like `DistSeq::from_fn`).
+    pub fn new(ctx: &'a Ctx, owner: usize, init: impl FnOnce() -> T) -> Self {
+        Self::over(ctx, (0..ctx.world).collect(), owner, init)
+    }
+
+    /// Create over an explicit group.
+    pub fn over(
+        ctx: &'a Ctx,
+        ranks: Vec<usize>,
+        owner: usize,
+        init: impl FnOnce() -> T,
+    ) -> Self {
+        assert!(owner < ranks.len(), "owner outside group");
+        let group = Group::new(ctx, ranks);
+        let local = (group.try_index() == Some(owner)).then(init);
+        DistVar { group, owner, local }
+    }
+
+    /// Group rank of the owner.
+    pub fn owner(&self) -> usize {
+        self.owner
+    }
+
+    /// Am I the owner?
+    pub fn is_owner(&self) -> bool {
+        self.group.try_index() == Some(self.owner)
+    }
+
+    /// Borrow the value if I own it.
+    pub fn local(&self) -> Option<&T> {
+        self.local.as_ref()
+    }
+
+    /// Broadcast the value to every group member —
+    /// Θ(log p (t_s + t_w m)).  Non-members get `None`.
+    pub fn read(&self) -> Option<T>
+    where
+        T: Clone,
+    {
+        if !self.group.is_member() {
+            return None;
+        }
+        Some(collectives::bcast(&self.group, self.owner, self.local.clone()))
+    }
+
+    /// Replace the value; `f` runs only on the owner.  Collective-free.
+    pub fn set(&mut self, f: impl FnOnce(Option<T>) -> T) {
+        if self.is_owner() {
+            let old = self.local.take();
+            self.local = Some(f(old));
+        }
+    }
+
+    /// Migrate ownership to group rank `new_owner` — one point-to-point
+    /// message, Θ(t_s + t_w m).
+    pub fn move_to(&mut self, new_owner: usize) {
+        assert!(new_owner < self.group.size());
+        if new_owner == self.owner {
+            return;
+        }
+        if self.group.is_member() {
+            let tag = self.group.next_tag();
+            let me = self.group.index();
+            if me == self.owner {
+                self.group
+                    .send_to(new_owner, tag, self.local.take().expect("owner without value"));
+            } else if me == new_owner {
+                self.local = Some(self.group.recv_from(self.owner, tag));
+            }
+        }
+        self.owner = new_owner;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::backend::BackendProfile;
+    use crate::comm::cost::CostParams;
+    use crate::spmd::run;
+
+    fn world(p: usize, f: impl Fn(&Ctx) -> Option<u64> + Sync) -> Vec<Option<u64>> {
+        run(p, BackendProfile::openmpi_fixed(), CostParams::free(), f).results
+    }
+
+    #[test]
+    fn init_only_on_owner() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static CALLS: AtomicUsize = AtomicUsize::new(0);
+        world(6, |ctx| {
+            let v = DistVar::new(ctx, 2, || {
+                CALLS.fetch_add(1, Ordering::SeqCst);
+                77u64
+            });
+            v.local().copied()
+        });
+        assert_eq!(CALLS.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn read_broadcasts_to_all() {
+        let res = world(5, |ctx| {
+            let v = DistVar::new(ctx, 3, || 42u64);
+            v.read()
+        });
+        assert!(res.iter().all(|r| *r == Some(42)));
+    }
+
+    #[test]
+    fn set_then_read() {
+        let res = world(4, |ctx| {
+            let mut v = DistVar::new(ctx, 0, || 1u64);
+            v.set(|old| old.unwrap() + 10);
+            v.read()
+        });
+        assert!(res.iter().all(|r| *r == Some(11)));
+    }
+
+    #[test]
+    fn move_to_transfers_ownership() {
+        let res = world(4, |ctx| {
+            let mut v = DistVar::new(ctx, 0, || ctx.rank as u64 + 100);
+            v.move_to(2);
+            assert_eq!(v.is_owner(), ctx.rank == 2);
+            // the moved value is rank 0's (it owned at init)
+            v.read()
+        });
+        assert!(res.iter().all(|r| *r == Some(100)));
+    }
+
+    #[test]
+    fn over_subgroup_outsiders_inert() {
+        let res = world(5, |ctx| {
+            let v = DistVar::over(ctx, vec![1, 3], 1, || 9u64);
+            v.read()
+        });
+        assert_eq!(res[1], Some(9));
+        assert_eq!(res[3], Some(9));
+        assert_eq!(res[0], None);
+        assert_eq!(res[4], None);
+    }
+}

@@ -1,0 +1,386 @@
+//! Multidimensional distributed sequences: `GridN` and the Cartesian
+//! grid abstraction of §4.3.
+//!
+//! The generic Algorithm 1 loses a factor `q²` to the sequential ∀-loop;
+//! FooPar's fix is constructors for arbitrary Cartesian grids whose
+//! process↔coordinate mapping is static (row-major).  A [`GridData`]
+//! holds one value per grid process; [`GridData::seq_along`] yields the
+//! distributed sequence over the grid *line* through the calling
+//! process's coordinate varying one dimension — `xSeq`, `ySeq`, `zSeq`
+//! in the paper's Scala (Alg. 2 uses `zSeq` for the DNS reduction,
+//! Alg. 3 uses `xSeq`/`ySeq` for the pivot row/column broadcasts).
+
+use crate::data::dseq::DistSeq;
+use crate::data::value::Data;
+use crate::comm::group::Group;
+use crate::spmd::Ctx;
+
+/// An N-dimensional Cartesian process grid (row-major rank layout).
+pub struct GridN<'a> {
+    ctx: &'a Ctx,
+    dims: Vec<usize>,
+}
+
+impl<'a> GridN<'a> {
+    /// Grid over world ranks `0 .. dims.iter().product()`.
+    /// Panics if the world is too small.
+    pub fn new(ctx: &'a Ctx, dims: Vec<usize>) -> Self {
+        let need: usize = dims.iter().product();
+        assert!(need >= 1, "grid must be non-empty");
+        assert!(
+            need <= ctx.world,
+            "grid {:?} needs {need} ranks, world has {}",
+            dims,
+            ctx.world
+        );
+        GridN { ctx, dims }
+    }
+
+    /// Cubic 3-d grid q×q×q (Alg. 2).
+    pub fn cube(ctx: &'a Ctx, q: usize) -> Self {
+        Self::new(ctx, vec![q, q, q])
+    }
+
+    /// Square 2-d grid q×q (Alg. 3).
+    pub fn square(ctx: &'a Ctx, q: usize) -> Self {
+        Self::new(ctx, vec![q, q])
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Number of grid processes.
+    pub fn size(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Row-major rank of `coord`.
+    pub fn rank_of(&self, coord: &[usize]) -> usize {
+        assert_eq!(coord.len(), self.dims.len());
+        let mut r = 0usize;
+        for (c, d) in coord.iter().zip(&self.dims) {
+            debug_assert!(c < d, "coordinate {c} out of bound {d}");
+            r = r * d + c;
+        }
+        r
+    }
+
+    /// Coordinate of world `rank`, if it is a grid process.
+    pub fn coord_of(&self, rank: usize) -> Option<Vec<usize>> {
+        if rank >= self.size() {
+            return None;
+        }
+        let mut rem = rank;
+        let mut coord = vec![0; self.dims.len()];
+        for i in (0..self.dims.len()).rev() {
+            coord[i] = rem % self.dims[i];
+            rem /= self.dims[i];
+        }
+        Some(coord)
+    }
+
+    /// This rank's coordinate, if it participates in the grid.
+    pub fn my_coord(&self) -> Option<Vec<usize>> {
+        self.coord_of(self.ctx.rank)
+    }
+
+    /// Am I a grid process?
+    pub fn is_member(&self) -> bool {
+        self.ctx.rank < self.size()
+    }
+
+    /// Distribute a value per grid process: `gen` runs only on the owner
+    /// with its own coordinate (lazy SPMD, like `DistSeq::from_fn`).
+    pub fn map_d<T: Data>(&self, gen: impl FnOnce(&[usize]) -> T) -> GridData<'a, T> {
+        let local = self.my_coord().map(|c| gen(&c));
+        GridData { ctx: self.ctx, dims: self.dims.clone(), local }
+    }
+
+    /// World ranks of the grid line through `coord` varying dimension
+    /// `dim`, ordered by that coordinate.
+    pub fn line_ranks(&self, coord: &[usize], dim: usize) -> Vec<usize> {
+        assert!(dim < self.dims.len());
+        let mut c = coord.to_vec();
+        (0..self.dims[dim])
+            .map(|v| {
+                c[dim] = v;
+                self.rank_of(&c)
+            })
+            .collect()
+    }
+}
+
+/// One value per grid process (the result of `GridN::map_d`).
+pub struct GridData<'a, T: Data> {
+    ctx: &'a Ctx,
+    dims: Vec<usize>,
+    local: Option<T>,
+}
+
+impl<'a, T: Data> GridData<'a, T> {
+    fn grid(&self) -> GridN<'a> {
+        GridN { ctx: self.ctx, dims: self.dims.clone() }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// My coordinate, if a grid member.
+    pub fn my_coord(&self) -> Option<Vec<usize>> {
+        self.grid().coord_of(self.ctx.rank)
+    }
+
+    pub fn local(&self) -> Option<&T> {
+        self.local.as_ref()
+    }
+
+    pub fn into_local(self) -> Option<T> {
+        self.local
+    }
+
+    /// Transform the local value — non-communicating (Table 1's mapD).
+    pub fn map_d<U: Data>(self, f: impl FnOnce(T) -> U) -> GridData<'a, U> {
+        GridData { ctx: self.ctx, dims: self.dims, local: self.local.map(f) }
+    }
+
+    /// Like `map_d` with the coordinate visible to the lambda.
+    pub fn map_d_at<U: Data>(self, f: impl FnOnce(&[usize], T) -> U) -> GridData<'a, U> {
+        let coord = self.my_coord();
+        GridData {
+            ctx: self.ctx,
+            dims: self.dims,
+            local: self.local.map(|v| f(&coord.expect("member without coord"), v)),
+        }
+    }
+
+    /// Elementwise combine with another grid of the same shape
+    /// (Table 1's zipWithD — non-communicating).
+    pub fn zip_with_d<U: Data, V: Data>(
+        self,
+        other: GridData<'a, U>,
+        f: impl FnOnce(T, U) -> V,
+    ) -> GridData<'a, V> {
+        assert_eq!(self.dims, other.dims, "zipWithD requires equal grid shapes");
+        let local = match (self.local, other.local) {
+            (Some(a), Some(b)) => Some(f(a, b)),
+            (None, None) => None,
+            _ => unreachable!("grid membership mismatch"),
+        };
+        GridData { ctx: self.ctx, dims: self.dims, local }
+    }
+
+    /// The distributed sequence over the grid line through my coordinate
+    /// varying dimension `dim` (paper: `xSeq`/`ySeq`/`zSeq` for dims
+    /// 0/1/2).  Requires `T: Clone`: the line's sequence borrows the
+    /// grid value.  Non-members return an inert sequence.
+    pub fn seq_along(&self, dim: usize) -> DistSeq<'a, T>
+    where
+        T: Clone,
+    {
+        match self.my_coord() {
+            Some(coord) => {
+                let ranks = self.grid().line_ranks(&coord, dim);
+                let group = Group::new(self.ctx, ranks);
+                DistSeq::from_parts(group, self.local.clone())
+            }
+            None => {
+                // Non-grid ranks build a trivial singleton group over
+                // themselves so the chain stays inert but well-formed.
+                let group = Group::new(self.ctx, vec![self.ctx.rank]);
+                DistSeq::from_parts(group, None)
+            }
+        }
+    }
+
+    /// `xSeq` — vary dimension 0.
+    pub fn x_seq(&self) -> DistSeq<'a, T>
+    where
+        T: Clone,
+    {
+        self.seq_along(0)
+    }
+
+    /// `ySeq` — vary dimension 1.
+    pub fn y_seq(&self) -> DistSeq<'a, T>
+    where
+        T: Clone,
+    {
+        self.seq_along(1)
+    }
+
+    /// `zSeq` — vary dimension 2 (the DNS reduction axis in Alg. 2).
+    pub fn z_seq(&self) -> DistSeq<'a, T>
+    where
+        T: Clone,
+    {
+        self.seq_along(2)
+    }
+
+    /// Consuming variant of [`Self::seq_along`] (avoids the `Clone`).
+    pub fn into_seq_along(self, dim: usize) -> DistSeq<'a, T> {
+        match self.my_coord() {
+            Some(coord) => {
+                let ranks = self.grid().line_ranks(&coord, dim);
+                let group = Group::new(self.ctx, ranks);
+                DistSeq::from_parts(group, self.local)
+            }
+            None => {
+                let group = Group::new(self.ctx, vec![self.ctx.rank]);
+                DistSeq::from_parts(group, None)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::backend::BackendProfile;
+    use crate::comm::cost::CostParams;
+    use crate::spmd::run;
+
+    fn fixed() -> BackendProfile {
+        BackendProfile::openmpi_fixed()
+    }
+    fn free() -> CostParams {
+        CostParams::free()
+    }
+
+    #[test]
+    fn rank_coord_roundtrip() {
+        run(24, fixed(), free(), |ctx| {
+            let g = GridN::new(ctx, vec![2, 3, 4]);
+            for r in 0..g.size() {
+                let c = g.coord_of(r).unwrap();
+                assert_eq!(g.rank_of(&c), r);
+                assert!(c[0] < 2 && c[1] < 3 && c[2] < 4);
+            }
+            assert_eq!(g.coord_of(24), None);
+        });
+    }
+
+    #[test]
+    fn row_major_layout() {
+        run(8, fixed(), free(), |ctx| {
+            let g = GridN::cube(ctx, 2);
+            assert_eq!(g.rank_of(&[0, 0, 0]), 0);
+            assert_eq!(g.rank_of(&[0, 0, 1]), 1);
+            assert_eq!(g.rank_of(&[0, 1, 0]), 2);
+            assert_eq!(g.rank_of(&[1, 0, 0]), 4);
+        });
+    }
+
+    #[test]
+    fn map_d_runs_only_on_members() {
+        let res = run(10, fixed(), free(), |ctx| {
+            let g = GridN::square(ctx, 3); // 9 processes, world 10
+            g.map_d(|c| (c[0] * 10 + c[1]) as u64).into_local()
+        });
+        for (rank, v) in res.results.iter().enumerate() {
+            if rank < 9 {
+                let (i, j) = (rank / 3, rank % 3);
+                assert_eq!(*v, Some((i * 10 + j) as u64));
+            } else {
+                assert_eq!(*v, None);
+            }
+        }
+    }
+
+    #[test]
+    fn line_ranks_along_each_dim() {
+        run(8, fixed(), free(), |ctx| {
+            let g = GridN::cube(ctx, 2);
+            // line through (1,0,1) varying dim 0 (x): (0,0,1), (1,0,1)
+            assert_eq!(g.line_ranks(&[1, 0, 1], 0), vec![1, 5]);
+            // varying dim 2 (z): (1,0,0), (1,0,1)
+            assert_eq!(g.line_ranks(&[1, 0, 1], 2), vec![4, 5]);
+        });
+    }
+
+    #[test]
+    fn z_seq_reduces_to_z0_plane() {
+        // 2x2x2 grid: value = 100*i + 10*j + k; reduce along z sums the
+        // two k-values onto the k=0 member.
+        let res = run(8, fixed(), free(), |ctx| {
+            let g = GridN::cube(ctx, 2);
+            let data = g.map_d(|c| (100 * c[0] + 10 * c[1] + c[2]) as i64);
+            data.into_seq_along(2).reduce_d(|a, b| a + b)
+        });
+        for rank in 0..8 {
+            let c = [(rank >> 2) & 1, (rank >> 1) & 1, rank & 1];
+            let expect = if c[2] == 0 {
+                Some((100 * c[0] + 10 * c[1]) as i64 * 2 + 1)
+            } else {
+                None
+            };
+            assert_eq!(res.results[rank], expect, "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn x_seq_apply_broadcasts_along_column() {
+        // 3x3 grid: apply(1) on xSeq gives everyone in column j the value
+        // of process (1, j).
+        let res = run(9, fixed(), free(), |ctx| {
+            let g = GridN::square(ctx, 3);
+            let data = g.map_d(|c| (10 * c[0] + c[1]) as u64);
+            data.x_seq().apply(1)
+        });
+        for rank in 0..9 {
+            let j = rank % 3;
+            assert_eq!(res.results[rank], Some((10 + j) as u64), "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn y_seq_varies_second_dim() {
+        let res = run(9, fixed(), free(), |ctx| {
+            let g = GridN::square(ctx, 3);
+            let data = g.map_d(|c| (10 * c[0] + c[1]) as u64);
+            data.y_seq().all_gather_d()
+        });
+        // row i gathers [10i, 10i+1, 10i+2]
+        for rank in 0..9 {
+            let i = rank / 3;
+            let expect: Vec<u64> = (0..3).map(|j| (10 * i + j) as u64).collect();
+            assert_eq!(res.results[rank], Some(expect), "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn zip_with_d_on_grids() {
+        let res = run(4, fixed(), free(), |ctx| {
+            let g = GridN::square(ctx, 2);
+            let a = g.map_d(|c| c[0] as i64);
+            let b = g.map_d(|c| c[1] as i64);
+            a.zip_with_d(b, |x, y| 10 * x + y).into_local()
+        });
+        assert_eq!(res.results, vec![Some(0), Some(1), Some(10), Some(11)]);
+    }
+
+    #[test]
+    fn non_member_chain_is_inert() {
+        let res = run(5, fixed(), free(), |ctx| {
+            let g = GridN::square(ctx, 2);
+            let data = g.map_d(|c| (c[0] + c[1]) as i64);
+            // rank 4 is not in the 2x2 grid: whole chain no-ops
+            data.x_seq().map_d(|v| v * 2).reduce_d(|a, b| a + b)
+        });
+        assert_eq!(res.results[4], None);
+        assert_eq!(res.metrics[4].msgs_sent, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "needs")]
+    fn grid_larger_than_world_panics() {
+        run(4, fixed(), free(), |ctx| {
+            let _ = GridN::cube(ctx, 2); // needs 8 > 4
+        });
+    }
+}

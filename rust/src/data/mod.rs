@@ -1,0 +1,4 @@
+pub mod dseq;
+pub mod dvar;
+pub mod grid;
+pub mod value;

@@ -1,0 +1,89 @@
+//! The [`Data`] trait: everything that can travel through the fabric.
+//!
+//! FooPar serializes collection elements with user-defined serializers
+//! (falling back to Java byte serialization).  In-process we never actually
+//! serialize — values move by ownership — but the *cost model* needs the
+//! wire size of every message, so `Data` exposes `byte_size`.
+//!
+//! `byte_size` should return the payload size a reasonable binary
+//! serializer would produce (element count × element width); framing
+//! overhead is absorbed into the backend's `t_s`.
+
+/// A value that can be sent between ranks.
+pub trait Data: Send + 'static {
+    /// Serialized payload size in bytes (drives the `t_w·m` cost term).
+    fn byte_size(&self) -> usize;
+}
+
+macro_rules! impl_data_scalar {
+    ($($t:ty),*) => {
+        $(impl Data for $t {
+            fn byte_size(&self) -> usize { std::mem::size_of::<$t>() }
+        })*
+    };
+}
+
+impl_data_scalar!(u8, i8, u16, i16, u32, i32, u64, i64, usize, isize, f32, f64, bool, char);
+
+impl Data for String {
+    fn byte_size(&self) -> usize {
+        self.len()
+    }
+}
+
+impl Data for () {
+    fn byte_size(&self) -> usize {
+        0
+    }
+}
+
+impl<T: Data> Data for Option<T> {
+    fn byte_size(&self) -> usize {
+        1 + self.as_ref().map_or(0, |v| v.byte_size())
+    }
+}
+
+impl<T: Data> Data for Vec<T> {
+    fn byte_size(&self) -> usize {
+        8 + self.iter().map(|v| v.byte_size()).sum::<usize>()
+    }
+}
+
+impl<A: Data, B: Data> Data for (A, B) {
+    fn byte_size(&self) -> usize {
+        self.0.byte_size() + self.1.byte_size()
+    }
+}
+
+impl<A: Data, B: Data, C: Data> Data for (A, B, C) {
+    fn byte_size(&self) -> usize {
+        self.0.byte_size() + self.1.byte_size() + self.2.byte_size()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_sizes() {
+        assert_eq!(3.14f32.byte_size(), 4);
+        assert_eq!(1u64.byte_size(), 8);
+        assert_eq!(().byte_size(), 0);
+    }
+
+    #[test]
+    fn vec_size_counts_elements() {
+        let v: Vec<f32> = vec![0.0; 100];
+        assert_eq!(v.byte_size(), 8 + 400);
+        let nested: Vec<Vec<f64>> = vec![vec![0.0; 10]; 3];
+        assert_eq!(nested.byte_size(), 8 + 3 * (8 + 80));
+    }
+
+    #[test]
+    fn option_and_tuple() {
+        assert_eq!(Some(1.0f64).byte_size(), 9);
+        assert_eq!(None::<f64>.byte_size(), 1);
+        assert_eq!((1u32, 2.0f32).byte_size(), 8);
+    }
+}

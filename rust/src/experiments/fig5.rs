@@ -1,0 +1,212 @@
+//! Fig. 5 reproduction: MMM efficiency vs. core count.
+//!
+//! Left plot (Carver): Algorithm 2 with the patched OpenMPI backend for
+//! n ∈ {~10000 … ~40000}, p ∈ {1, 8, …, 512}, plus the C/MPI baseline.
+//! Right plot (Horseshoe-6): backend sweep (openmpi-fixed / stock /
+//! mpj-express / fastmpj) showing the Θ(p)-reduction backends falling
+//! behind.
+//!
+//! Efficiency is `T_S / (p · T_P)` with `T_S = 2n³/rate` — exactly the
+//! paper's normalization against single-core empirical peak.  Runs are
+//! *modeled* (proxy blocks, virtual clocks): the paper's matrix sizes on
+//! a laptop.  Headline check: Carver @ (n≈40000, p=512) ⇒ ~88.8%
+//! efficiency.
+
+use crate::algos::{dns_baseline, mmm_dns};
+use crate::analysis;
+use crate::comm::backend::BackendProfile;
+use crate::config::MachineConfig;
+use crate::matrix::block::BlockSource;
+use crate::metrics::render_table;
+use crate::runtime::compute::Compute;
+use crate::spmd;
+
+/// One curve point.
+#[derive(Clone, Debug)]
+pub struct Fig5Row {
+    pub algo: &'static str,
+    pub backend: String,
+    pub n: usize,
+    pub p: usize,
+    pub t_parallel: f64,
+    pub efficiency: f64,
+    pub tflops: f64,
+}
+
+/// Paper-scale matrix sizes, divisible by every q ≤ 8 (lcm(1..8)=840).
+pub const NS_PAPER: [usize; 4] = [10_080, 20_160, 30_240, 40_320];
+
+/// Smaller sizes used for the Horseshoe-6 backend comparison, where the
+/// communication fraction (and hence the backend differences) is larger.
+pub const NS_SMALL: [usize; 4] = [2_520, 5_040, 10_080, 20_160];
+
+/// Cube core counts up to 512 (q = 1..8).
+pub const PS_CUBES: [usize; 8] = [1, 8, 27, 64, 125, 216, 343, 512];
+
+/// Matrix sizes for a machine's sweep (Fig. 5 legend).
+pub fn ns_for(machine: &MachineConfig) -> &'static [usize] {
+    if machine.backends.len() > 1 {
+        &NS_SMALL
+    } else {
+        &NS_PAPER
+    }
+}
+
+/// Run one modeled DNS point.
+pub fn run_point(
+    machine: &MachineConfig,
+    backend: BackendProfile,
+    n: usize,
+    p: usize,
+    baseline: bool,
+) -> Fig5Row {
+    let q = (p as f64).cbrt().round() as usize;
+    assert_eq!(q * q * q, p, "p must be a cube");
+    assert_eq!(n % q, 0, "n must divide by q");
+    let b = n / q;
+    let a = BlockSource::proxy(b, 1);
+    let bm = BlockSource::proxy(b, 2);
+    let comp = Compute::Modeled { rate: machine.rate };
+    let res = spmd::run(p, backend, machine.cost(), |ctx| {
+        if baseline {
+            dns_baseline::dns_baseline(ctx, &comp, q, &a, &bm).t_local
+        } else {
+            mmm_dns::mmm_dns(ctx, &comp, q, &a, &bm).t_local
+        }
+    });
+    let ts = analysis::ts_n3(n, &model(machine));
+    let eff = analysis::efficiency(ts, res.t_parallel, p);
+    Fig5Row {
+        algo: if baseline { "c-baseline" } else { "foopar-dns" },
+        backend: backend.name.to_string(),
+        n,
+        p,
+        t_parallel: res.t_parallel,
+        efficiency: eff,
+        tflops: analysis::mmm_rate(n, res.t_parallel) / 1e12,
+    }
+}
+
+pub fn model(machine: &MachineConfig) -> analysis::ModelParams {
+    analysis::ModelParams { ts: machine.ts, tw: machine.tw, rate: machine.rate }
+}
+
+/// Full sweep for one machine (the whole left or right plot).
+pub fn sweep(machine: &MachineConfig, with_baseline: bool) -> Vec<Fig5Row> {
+    let mut rows = Vec::new();
+    for bname in &machine.backends {
+        let backend = BackendProfile::by_name(bname)
+            .unwrap_or_else(|| panic!("unknown backend '{bname}'"));
+        for &n in ns_for(machine) {
+            for &p in &PS_CUBES {
+                if p > machine.max_cores {
+                    continue;
+                }
+                rows.push(run_point(machine, backend, n, p, false));
+            }
+        }
+    }
+    if with_baseline {
+        // The C/MPI comparison is run with the best backend only (§6).
+        let backend = BackendProfile::openmpi_fixed();
+        let n = *NS_PAPER.last().unwrap();
+        for &p in &PS_CUBES {
+            if p > machine.max_cores {
+                continue;
+            }
+            rows.push(run_point(machine, backend, n, p, true));
+        }
+    }
+    rows
+}
+
+/// Render rows as the paper-style series table.
+pub fn render(rows: &[Fig5Row]) -> String {
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.algo.to_string(),
+                r.backend.clone(),
+                r.n.to_string(),
+                r.p.to_string(),
+                format!("{:.3}", r.t_parallel),
+                format!("{:.1}%", r.efficiency * 100.0),
+                format!("{:.3}", r.tflops),
+            ]
+        })
+        .collect();
+    render_table(
+        &["algo", "backend", "n", "p", "T_P (s)", "efficiency", "TFlop/s"],
+        &table,
+    )
+}
+
+/// The headline claim of §6: Carver, n≈40000, p=512 ⇒ ~88.8% efficiency
+/// w.r.t. theoretical peak (93.7% of empirical).  Returns (row, eff_vs_peak).
+pub fn headline(machine: &MachineConfig) -> (Fig5Row, f64) {
+    let row = run_point(
+        machine,
+        BackendProfile::openmpi_fixed(),
+        *NS_PAPER.last().unwrap(),
+        512,
+        false,
+    );
+    let vs_peak = row.efficiency * machine.rate / machine.peak;
+    (row, vs_peak)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficiency_increases_with_n_at_fixed_p() {
+        let m = MachineConfig::carver();
+        let b = BackendProfile::openmpi_fixed();
+        let e1 = run_point(&m, b, 10_080, 216, false).efficiency;
+        let e2 = run_point(&m, b, 40_320, 216, false).efficiency;
+        assert!(e2 > e1, "{e2} vs {e1}");
+    }
+
+    #[test]
+    fn headline_efficiency_near_paper_value() {
+        // paper: 93.7% of empirical peak, 88.8% of theoretical at
+        // (40000, 512); accept the modeled value within a few points.
+        let (row, vs_peak) = headline(&MachineConfig::carver());
+        assert!(
+            row.efficiency > 0.85 && row.efficiency <= 1.0,
+            "empirical-peak efficiency {:.3} out of range",
+            row.efficiency
+        );
+        assert!(
+            vs_peak > 0.80 && vs_peak < 0.98,
+            "theoretical-peak efficiency {vs_peak:.3} out of range"
+        );
+    }
+
+    #[test]
+    fn stock_backend_loses_at_scale() {
+        // Fig. 5 right: Θ(p) reduction must hurt at p=512
+        let m = MachineConfig::horseshoe6();
+        let fixed = run_point(&m, BackendProfile::openmpi_fixed(), 5_040, 512, false);
+        let stock = run_point(&m, BackendProfile::openmpi_stock(), 5_040, 512, false);
+        assert!(
+            stock.efficiency < fixed.efficiency,
+            "stock {} !< fixed {}",
+            stock.efficiency,
+            fixed.efficiency
+        );
+    }
+
+    #[test]
+    fn baseline_slightly_better_than_framework() {
+        let m = MachineConfig::carver();
+        let b = BackendProfile::openmpi_fixed();
+        let foo = run_point(&m, b, 40_320, 512, false);
+        let c = run_point(&m, b, 40_320, 512, true);
+        // §6: "The C-version performs only slightly better."
+        assert!(c.efficiency >= foo.efficiency * 0.99);
+        assert!(c.efficiency <= foo.efficiency * 1.10);
+    }
+}

@@ -1,0 +1,18 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation.
+//!
+//! Shared between the CLI (`repro <experiment>`) and the bench harnesses
+//! (`cargo bench`), so a result can always be regenerated both ways.
+//!
+//! | module | reproduces |
+//! |---|---|
+//! | [`table1`] | Table 1 — runtimes of the distributed-sequence ops |
+//! | [`fig5`] | Fig. 5 — MMM efficiency on Carver / Horseshoe-6 |
+//! | [`isoeff`] | §4.2.1 / §4.3 / §5 — isoefficiency verification |
+//! | [`overhead`] | §6 — FooPar vs hand-coded DNS overhead |
+//! | [`peak`] | §6 — single-core "empirical peak" calibration |
+
+pub mod fig5;
+pub mod isoeff;
+pub mod overhead;
+pub mod peak;
+pub mod table1;

@@ -1,0 +1,110 @@
+//! §6 overhead experiment: FooPar (Alg. 2) vs the hand-coded DNS
+//! baseline, same machine, same workload — "the computation and
+//! communication overhead of using FooPar is neglectable".
+
+use crate::algos::{dns_baseline, mmm_dns};
+use crate::comm::backend::BackendProfile;
+use crate::config::MachineConfig;
+use crate::matrix::block::BlockSource;
+use crate::metrics::render_table;
+use crate::runtime::compute::Compute;
+use crate::spmd;
+
+#[derive(Clone, Debug)]
+pub struct OverheadRow {
+    pub n: usize,
+    pub p: usize,
+    pub t_foopar: f64,
+    pub t_baseline: f64,
+    /// (T_foopar − T_baseline) / T_baseline.
+    pub overhead: f64,
+    /// Extra messages sent by the framework versus the baseline.
+    pub msg_delta: i64,
+}
+
+pub fn measure(machine: &MachineConfig, n: usize, p: usize) -> OverheadRow {
+    let q = (p as f64).cbrt().round() as usize;
+    assert_eq!(q * q * q, p);
+    assert_eq!(n % q, 0);
+    let a = BlockSource::proxy(n / q, 1);
+    let b = BlockSource::proxy(n / q, 2);
+    let comp = Compute::Modeled { rate: machine.rate };
+    let backend = BackendProfile::openmpi_fixed();
+
+    let foo = spmd::run(p, backend, machine.cost(), |ctx| {
+        mmm_dns::mmm_dns(ctx, &comp, q, &a, &b).t_local
+    });
+    let base = spmd::run(p, backend, machine.cost(), |ctx| {
+        dns_baseline::dns_baseline(ctx, &comp, q, &a, &b).t_local
+    });
+
+    let foo_msgs: u64 = foo.metrics.iter().map(|m| m.msgs_sent).sum();
+    let base_msgs: u64 = base.metrics.iter().map(|m| m.msgs_sent).sum();
+    OverheadRow {
+        n,
+        p,
+        t_foopar: foo.t_parallel,
+        t_baseline: base.t_parallel,
+        overhead: (foo.t_parallel - base.t_parallel) / base.t_parallel,
+        msg_delta: foo_msgs as i64 - base_msgs as i64,
+    }
+}
+
+pub fn sweep(machine: &MachineConfig) -> Vec<OverheadRow> {
+    let mut rows = Vec::new();
+    for &p in &[8usize, 64, 216, 512] {
+        if p > machine.max_cores {
+            continue;
+        }
+        rows.push(measure(machine, 20_160, p));
+    }
+    rows
+}
+
+pub fn render(rows: &[OverheadRow]) -> String {
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.n.to_string(),
+                r.p.to_string(),
+                format!("{:.4}", r.t_foopar),
+                format!("{:.4}", r.t_baseline),
+                format!("{:+.2}%", r.overhead * 100.0),
+                r.msg_delta.to_string(),
+            ]
+        })
+        .collect();
+    render_table(
+        &["n", "p", "T_P foopar", "T_P baseline", "overhead", "msg Δ"],
+        &table,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overhead_is_negligible() {
+        let m = MachineConfig::carver();
+        for p in [8usize, 64] {
+            let r = measure(&m, 20_160, p);
+            assert!(
+                r.overhead.abs() < 0.05,
+                "p={p}: overhead {:.2}%",
+                r.overhead * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn same_message_pattern() {
+        // Alg. 2 and the baseline implement the same DNS reduction: the
+        // message counts must match exactly (the framework adds zero
+        // communication).
+        let m = MachineConfig::carver();
+        let r = measure(&m, 20_160, 27);
+        assert_eq!(r.msg_delta, 0, "framework sent {} extra messages", r.msg_delta);
+    }
+}

@@ -1,0 +1,98 @@
+//! Single-core "empirical peak" calibration (§6).
+//!
+//! The paper measures reference performance with a single-core C+MKL
+//! matrix multiplication; our analogue executes the AOT Pallas GEMM
+//! artifact through PJRT on one rank and reports flop/s, alongside the
+//! native-gemm rate.  The resulting number is what the `rate` field of a
+//! local [`crate::config::MachineConfig`] should be set to when running
+//! real-mode efficiency experiments on this host.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::matrix::dense::Mat;
+use crate::matrix::gemm;
+use crate::metrics::render_table;
+use crate::runtime::engine::EngineServer;
+
+#[derive(Clone, Debug)]
+pub struct PeakRow {
+    pub path: &'static str,
+    pub b: usize,
+    pub iters: usize,
+    pub secs: f64,
+    pub gflops: f64,
+}
+
+/// Measure native gemm at block size `b`.
+pub fn native_peak(b: usize, iters: usize) -> PeakRow {
+    let x = Mat::random(b, b, 1);
+    let y = Mat::random(b, b, 2);
+    // warmup
+    let mut sink = gemm::matmul(&x, &y);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        sink = gemm::matmul(&x, &y);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    std::hint::black_box(&sink);
+    let flops = gemm::gemm_flops(b, b, b) * iters as f64;
+    PeakRow { path: "native", b, iters, secs, gflops: flops / secs / 1e9 }
+}
+
+/// Measure the PJRT path (AOT Pallas artifact) at block size `b`.
+pub fn pjrt_peak(b: usize, iters: usize) -> Result<PeakRow> {
+    let srv = EngineServer::start_default()?;
+    let h = srv.handle();
+    let x = Mat::random(b, b, 1);
+    let y = Mat::random(b, b, 2);
+    let _ = h.matmul(x.clone(), y.clone())?; // warmup + compile
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let _ = h.matmul(x.clone(), y.clone())?;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let flops = gemm::gemm_flops(b, b, b) * iters as f64;
+    Ok(PeakRow { path: "pjrt", b, iters, secs, gflops: flops / secs / 1e9 })
+}
+
+/// Calibration sweep over block sizes; PJRT rows appear when artifacts
+/// are available.
+pub fn sweep(iters: usize) -> Vec<PeakRow> {
+    let mut rows = Vec::new();
+    for &b in &[32usize, 64, 128, 256] {
+        rows.push(native_peak(b, iters));
+        if let Ok(r) = pjrt_peak(b, iters) {
+            rows.push(r);
+        }
+    }
+    rows
+}
+
+pub fn render(rows: &[PeakRow]) -> String {
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.path.to_string(),
+                r.b.to_string(),
+                r.iters.to_string(),
+                format!("{:.4}", r.secs),
+                format!("{:.2}", r.gflops),
+            ]
+        })
+        .collect();
+    render_table(&["path", "block", "iters", "secs", "GFlop/s"], &table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_peak_positive() {
+        let r = native_peak(64, 3);
+        assert!(r.gflops > 0.01, "{}", r.gflops);
+    }
+}

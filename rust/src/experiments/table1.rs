@@ -1,0 +1,216 @@
+//! Table 1 reproduction: measured runtime of every distributed-sequence
+//! operation vs. the paper's closed-form `T_P`.
+//!
+//! Protocol: for each op, sweep group size p and element size m (bytes);
+//! run the op once on a fresh SPMD world with the machine's cost
+//! parameters; report the measured virtual `T_P` next to the paper's
+//! formula evaluated with the same `t_s`/`t_w` — and the ratio, which
+//! should hover near 1 (binomial trees use ⌈log₂ p⌉, rings exactly p−1,
+//! so small deviations from the idealized Θ-forms are expected and
+//! printed rather than hidden).
+
+use crate::comm::backend::BackendProfile;
+use crate::comm::cost::CostParams;
+use crate::config::MachineConfig;
+use crate::data::dseq::DistSeq;
+use crate::metrics::render_table;
+use crate::spmd;
+
+/// One measurement row.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub op: &'static str,
+    pub p: usize,
+    pub m_bytes: usize,
+    pub measured: f64,
+    pub predicted: f64,
+}
+
+fn payload(m_bytes: usize) -> Vec<f32> {
+    vec![1.0f32; (m_bytes.saturating_sub(8)) / 4]
+}
+
+fn msg(c: &CostParams, m_bytes: usize) -> f64 {
+    c.ts + c.tw * m_bytes as f64
+}
+
+fn log2c(p: usize) -> f64 {
+    (p.max(1) as f64).log2().ceil().max(0.0)
+}
+
+/// Run all Table-1 ops at one (p, m) point.
+pub fn measure_point(machine: &MachineConfig, p: usize, m_bytes: usize) -> Vec<Table1Row> {
+    let backend = BackendProfile::openmpi_fixed();
+    let cost = machine.cost();
+    let c = backend.cost(cost);
+    let mut rows = Vec::new();
+
+    let mut case = |op: &'static str,
+                    predicted: f64,
+                    f: &(dyn Fn(&spmd::Ctx) + Sync)| {
+        let res = spmd::run(p, backend, cost, |ctx| {
+            f(ctx);
+            ctx.now()
+        });
+        rows.push(Table1Row {
+            op,
+            p,
+            m_bytes,
+            measured: res.t_parallel,
+            predicted,
+        });
+    };
+
+    // mapD — non-communicating: T_P = T_λ(m) (here λ is free ⇒ 0)
+    case("mapD", 0.0, &|ctx| {
+        let _ = DistSeq::range(ctx, p, |_| payload(m_bytes)).map_d(|v| v);
+    });
+
+    // zipWithD — non-communicating
+    case("zipWithD", 0.0, &|ctx| {
+        let a = DistSeq::range(ctx, p, |_| payload(m_bytes));
+        let b = DistSeq::range(ctx, p, |_| payload(m_bytes));
+        let _ = a.zip_with_d(b, |x, _| x);
+    });
+
+    // reduceD — Θ(log p (ts + tw m + T_λ)) with free λ
+    case("reduceD", log2c(p) * msg(&c, m_bytes), &|ctx| {
+        let _ = DistSeq::range(ctx, p, |_| payload(m_bytes)).reduce_d(|a, _| a);
+    });
+
+    // shiftD — Θ(ts + tw m)
+    case("shiftD", if p > 1 { msg(&c, m_bytes) } else { 0.0 }, &|ctx| {
+        let _ = DistSeq::range(ctx, p, |_| payload(m_bytes)).shift_d(1);
+    });
+
+    // allToAllD — pairwise: (p−1)(ts + tw m); paper quotes the hypercube
+    // bound ts log p + tw m (p−1)
+    case("allToAllD", (p as f64 - 1.0) * msg(&c, m_bytes), &|ctx| {
+        let _ = DistSeq::range(ctx, p, |_| {
+            (0..p).map(|_| payload(m_bytes)).collect::<Vec<_>>()
+        })
+        .all_to_all_d();
+    });
+
+    // allGatherD — ring: (ts + tw m)(p−1)
+    case("allGatherD", (p as f64 - 1.0) * msg(&c, m_bytes), &|ctx| {
+        let _ = DistSeq::range(ctx, p, |_| payload(m_bytes)).all_gather_d();
+    });
+
+    // apply(i) — one-to-all bcast: Θ(log p (ts + tw m))
+    case("apply", log2c(p) * msg(&c, m_bytes), &|ctx| {
+        let _ = DistSeq::range(ctx, p, |_| payload(m_bytes)).apply(p / 2);
+    });
+
+    rows
+}
+
+/// Full sweep: p ∈ powers of two, m ∈ {1 KiB, 64 KiB, 1 MiB}.
+pub fn sweep(machine: &MachineConfig) -> Vec<Table1Row> {
+    let mut rows = Vec::new();
+    for &p in &[2usize, 4, 8, 16, 32, 64] {
+        for &m in &[1 << 10, 64 << 10, 1 << 20] {
+            rows.extend(measure_point(machine, p, m));
+        }
+    }
+    rows
+}
+
+/// Paper formula labels (for the printed table).
+pub fn paper_formula(op: &str) -> &'static str {
+    match op {
+        "mapD" | "zipWithD" => "Θ(T_λ(m))",
+        "reduceD" => "Θ(log p (ts+tw m+T_λ))",
+        "shiftD" => "Θ(ts + tw m)",
+        "allToAllD" => "Θ(ts log p + tw m (p-1))",
+        "allGatherD" => "Θ((ts + tw m)(p-1))",
+        "apply" => "Θ(log p (ts + tw m))",
+        _ => "?",
+    }
+}
+
+pub fn render(rows: &[Table1Row]) -> String {
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let ratio = if r.predicted > 0.0 { r.measured / r.predicted } else { 0.0 };
+            vec![
+                r.op.to_string(),
+                r.p.to_string(),
+                format!("{}", r.m_bytes),
+                format!("{:.3e}", r.measured),
+                format!("{:.3e}", r.predicted),
+                if r.predicted > 0.0 { format!("{ratio:.2}") } else { "-".into() },
+                paper_formula(r.op).to_string(),
+            ]
+        })
+        .collect();
+    render_table(
+        &["op", "p", "m (B)", "measured T_P", "predicted", "ratio", "paper"],
+        &table,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measured_matches_predicted_within_tolerance() {
+        let m = MachineConfig::carver();
+        for p in [4usize, 16] {
+            for rows in [measure_point(&m, p, 64 << 10)] {
+                for r in rows {
+                    if r.predicted == 0.0 {
+                        assert!(r.measured < 1e-9, "{}: nonzero {}", r.op, r.measured);
+                        continue;
+                    }
+                    let ratio = r.measured / r.predicted;
+                    assert!(
+                        (0.5..=2.0).contains(&ratio),
+                        "{} p={p}: measured {:.3e} predicted {:.3e}",
+                        r.op,
+                        r.measured,
+                        r.predicted
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scales_logarithmically() {
+        let m = MachineConfig::carver();
+        let r4: f64 = measure_point(&m, 4, 1 << 20)
+            .iter()
+            .find(|r| r.op == "reduceD")
+            .unwrap()
+            .measured;
+        let r64 = measure_point(&m, 64, 1 << 20)
+            .iter()
+            .find(|r| r.op == "reduceD")
+            .unwrap()
+            .measured;
+        // log₂ 64 / log₂ 4 = 3: expect ≈3×, definitely not 16×
+        let factor = r64 / r4;
+        assert!((2.0..5.0).contains(&factor), "factor {factor}");
+    }
+
+    #[test]
+    fn allgather_scales_linearly() {
+        let m = MachineConfig::carver();
+        let r4 = measure_point(&m, 4, 64 << 10)
+            .iter()
+            .find(|r| r.op == "allGatherD")
+            .unwrap()
+            .measured;
+        let r32 = measure_point(&m, 32, 64 << 10)
+            .iter()
+            .find(|r| r.op == "allGatherD")
+            .unwrap()
+            .measured;
+        let factor = r32 / r4;
+        // (32-1)/(4-1) ≈ 10.3
+        assert!((7.0..14.0).contains(&factor), "factor {factor}");
+    }
+}

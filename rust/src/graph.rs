@@ -1,0 +1,224 @@
+//! Weighted digraphs and the sequential Floyd-Warshall reference (§5).
+//!
+//! The distance matrix representation is a dense [`Mat`] with
+//! [`crate::matrix::gemm::INF`] marking "no edge" — the same convention
+//! as the L1 kernels (python/compile/kernels/minplus.py).
+
+use crate::matrix::dense::Mat;
+use crate::matrix::gemm::INF;
+use crate::testing::Rng;
+
+/// A weighted digraph as a dense distance/adjacency matrix.
+/// `w[(i,j)]` is the edge weight i→j, `INF` if absent, 0 on the diagonal.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Graph {
+    pub w: Mat,
+}
+
+impl Graph {
+    pub fn n(&self) -> usize {
+        self.w.rows
+    }
+
+    /// Random digraph: each off-diagonal edge present with probability
+    /// `density`, weight uniform in [1, 10).  Deterministic per seed.
+    pub fn random(n: usize, density: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut w = Mat::filled(n, n, INF);
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    w[(i, j)] = 0.0;
+                } else if rng.gen_bool(density) {
+                    w[(i, j)] = rng.gen_f32_range(1.0, 10.0);
+                }
+            }
+        }
+        Graph { w }
+    }
+
+    /// Build from an explicit weight matrix (diagonal forced to 0).
+    pub fn from_weights(mut w: Mat) -> Self {
+        assert_eq!(w.rows, w.cols);
+        for i in 0..w.rows {
+            w[(i, i)] = 0.0;
+        }
+        Graph { w }
+    }
+}
+
+/// Sequential Floyd-Warshall: all-pairs shortest paths in Θ(n³).
+/// This is the `T_S` reference of §5 and the correctness oracle for the
+/// parallel version.
+pub fn floyd_warshall_seq(g: &Graph) -> Mat {
+    let n = g.n();
+    let mut d = g.w.clone();
+    for k in 0..n {
+        // Hoist row k (it is invariant within the k-th sweep).
+        let rowk: Vec<f32> = d.row(k).to_vec();
+        for i in 0..n {
+            let dik = d.at(i, k);
+            if dik >= INF {
+                continue;
+            }
+            let row = &mut d.data[i * n..(i + 1) * n];
+            for (dv, &dkj) in row.iter_mut().zip(&rowk) {
+                let cand = dik + dkj;
+                if cand < *dv {
+                    *dv = cand;
+                }
+            }
+        }
+    }
+    d
+}
+
+/// Dijkstra from one source (binary-heap) — an independent APSP oracle
+/// used to cross-check Floyd-Warshall on non-negative graphs.
+pub fn dijkstra(g: &Graph, src: usize) -> Vec<f32> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    let n = g.n();
+    let mut dist = vec![INF; n];
+    dist[src] = 0.0;
+    // BinaryHeap over (cost-as-ordered-bits, node)
+    let key = |c: f32| c.to_bits();
+    let mut heap = BinaryHeap::new();
+    heap.push(Reverse((key(0.0), src)));
+    while let Some(Reverse((kb, u))) = heap.pop() {
+        let du = f32::from_bits(kb);
+        if du > dist[u] {
+            continue;
+        }
+        for v in 0..n {
+            let w = g.w.at(u, v);
+            if w >= INF {
+                continue;
+            }
+            let cand = du + w;
+            if cand < dist[v] {
+                dist[v] = cand;
+                heap.push(Reverse((key(cand), v)));
+            }
+        }
+    }
+    dist
+}
+
+/// All-pairs shortest paths via repeated min-plus squaring:
+/// `D^(2k) = D^k ⊗ D^k`, ⌈log₂ n⌉ squarings — a third oracle, and the
+/// sequential reference for the min-plus kernel extension.
+pub fn apsp_repeated_squaring(g: &Graph) -> Mat {
+    use crate::matrix::gemm::minplus_matmul;
+    let n = g.n();
+    let mut d = g.w.clone();
+    let mut span = 1usize;
+    while span < n {
+        d = minplus_matmul(&d, &d);
+        span *= 2;
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop_check;
+
+    #[test]
+    fn tiny_triangle() {
+        // 0 -> 1 (5), 1 -> 2 (2), 0 -> 2 (9): shortest 0->2 is 7
+        let mut w = Mat::filled(3, 3, INF);
+        w[(0, 1)] = 5.0;
+        w[(1, 2)] = 2.0;
+        w[(0, 2)] = 9.0;
+        let g = Graph::from_weights(w);
+        let d = floyd_warshall_seq(&g);
+        assert_eq!(d.at(0, 2), 7.0);
+        assert_eq!(d.at(0, 1), 5.0);
+        assert_eq!(d.at(2, 0), INF);
+    }
+
+    #[test]
+    fn diagonal_zero_preserved() {
+        let g = Graph::random(20, 0.3, 5);
+        let d = floyd_warshall_seq(&g);
+        for i in 0..20 {
+            assert_eq!(d.at(i, i), 0.0);
+        }
+    }
+
+    #[test]
+    fn fw_matches_dijkstra() {
+        prop_check("fw == dijkstra", 10, |rng| {
+            let n = 4 + rng.gen_range(28);
+            let g = Graph::random(n, 0.25, rng.next_u64());
+            let d = floyd_warshall_seq(&g);
+            for src in 0..n.min(5) {
+                let dj = dijkstra(&g, src);
+                for j in 0..n {
+                    let a = d.at(src, j);
+                    let b = dj[j];
+                    if a >= INF || b >= INF {
+                        assert!(a >= INF && b >= INF, "n={n} {src}->{j}: {a} vs {b}");
+                    } else {
+                        assert!((a - b).abs() <= 1e-3, "n={n} {src}->{j}: {a} vs {b}");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn fw_matches_repeated_squaring() {
+        prop_check("fw == min-plus squaring", 8, |rng| {
+            let n = 3 + rng.gen_range(20);
+            let g = Graph::random(n, 0.3, rng.next_u64());
+            let a = floyd_warshall_seq(&g);
+            let b = apsp_repeated_squaring(&g);
+            for i in 0..n {
+                for j in 0..n {
+                    let (x, y) = (a.at(i, j), b.at(i, j));
+                    if x >= INF || y >= INF {
+                        assert!(x >= INF && y >= INF);
+                    } else {
+                        assert!((x - y).abs() <= 1e-3);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn triangle_inequality_holds() {
+        let g = Graph::random(25, 0.4, 11);
+        let d = floyd_warshall_seq(&g);
+        for i in 0..25 {
+            for j in 0..25 {
+                for k in 0..25 {
+                    let (dij, dik, dkj) = (d.at(i, j), d.at(i, k), d.at(k, j));
+                    if dik < INF && dkj < INF {
+                        assert!(dij <= dik + dkj + 1e-3);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn density_extremes() {
+        let empty = Graph::random(10, 0.0, 1);
+        let d = floyd_warshall_seq(&empty);
+        for i in 0..10 {
+            for j in 0..10 {
+                if i != j {
+                    assert_eq!(d.at(i, j), INF);
+                }
+            }
+        }
+        let full = Graph::random(10, 1.0, 1);
+        let d = floyd_warshall_seq(&full);
+        assert!(d.data.iter().all(|&v| v < INF));
+    }
+}

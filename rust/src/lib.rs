@@ -1,0 +1,40 @@
+//! # foopar — FooPar reproduced in Rust (+ JAX/Pallas AOT compute)
+//!
+//! A data-structure-centric SPMD framework for distributed-memory parallel
+//! computing, reproducing Hargreaves & Merkle, *"FooPar: A Functional Object
+//! Oriented Parallel Framework in Scala"* (CS.DC 2013).
+//!
+//! Algorithms are written **solely** through group operations on distributed
+//! collections ([`data::DistSeq`], [`data::Grid`]) — `mapD`, `zipWithD`,
+//! `reduceD`, `shiftD`, `allToAllD`, `allGatherD`, `apply` — which eliminates
+//! explicit message passing (and with it deadlocks and races) while keeping
+//! every operation's parallel runtime analyzable (Table 1 of the paper).
+//!
+//! The per-rank compute hot spots (block GEMM, Floyd-Warshall pivot updates)
+//! are JAX/Pallas kernels AOT-lowered to HLO and executed through the PJRT C
+//! API ([`runtime`]); Python never runs on the request path.
+//!
+//! Because this reproduction targets a laptop rather than a 512-core
+//! InfiniBand cluster, ranks are OS threads exchanging real messages over an
+//! in-process [`comm::fabric`], and every message/compute advances a
+//! per-rank LogGP-style *virtual clock* (`ts + tw·bytes`); parallel time is
+//! the max clock at completion.  See DESIGN.md §3 for the substitution
+//! argument.
+
+pub mod analysis;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod data;
+pub mod graph;
+pub mod matrix;
+pub mod metrics;
+pub mod runtime;
+pub mod spmd;
+pub mod testing;
+
+pub mod algos;
+pub mod experiments;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,346 @@
+//! `repro` — the FooPar-reproduction leader binary.
+//!
+//! Subcommands map 1:1 onto the paper's evaluation (see DESIGN.md §5):
+//!
+//! ```text
+//! repro selftest                        end-to-end real-mode sanity (PJRT + algos)
+//! repro peak   [--iters N]              single-core empirical peak (§6 calibration)
+//! repro mmm    --algo dns|generic|baseline --n N --p P [--mode real|modeled] [--machine M]
+//! repro apsp   --n N --p P [--algo fw|squaring] [--mode real|modeled]
+//! repro table1 [--machine M]            Table 1: op runtimes vs formulas
+//! repro fig5   --machine carver|horseshoe6   Fig. 5 efficiency curves
+//! repro isoeff [--algo generic|dns|fw]  isoefficiency verification
+//! repro overhead [--machine M]          §6 framework-overhead comparison
+//! ```
+
+use anyhow::{bail, Result};
+
+use foopar::algos::{apsp_squaring, cannon, dns_baseline, floyd_warshall, mmm_dns, mmm_generic, seq};
+use foopar::analysis;
+use foopar::cli::Args;
+use foopar::comm::backend::BackendProfile;
+use foopar::config::MachineConfig;
+use foopar::experiments::{fig5, isoeff, overhead, peak, table1};
+use foopar::graph::{floyd_warshall_seq, Graph};
+use foopar::matrix::block::BlockSource;
+use foopar::runtime::compute::Compute;
+use foopar::runtime::engine::EngineServer;
+use foopar::spmd;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("help") | None => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        Some("selftest") => selftest(),
+        Some("peak") => cmd_peak(args),
+        Some("mmm") => cmd_mmm(args),
+        Some("apsp") => cmd_apsp(args),
+        Some("table1") => cmd_table1(args),
+        Some("fig5") => cmd_fig5(args),
+        Some("isoeff") => cmd_isoeff(args),
+        Some("overhead") => cmd_overhead(args),
+        _ => args.unknown(),
+    }
+}
+
+const HELP: &str = "\
+repro — FooPar reproduction (rust + JAX/Pallas AOT via PJRT)
+
+  selftest                          end-to-end real-mode sanity
+  peak     [--iters N]              single-core empirical peak (GFlop/s)
+  mmm      --p P [--n N] [--algo dns|generic|baseline] [--mode real|modeled] [--machine M]
+  apsp     --p P [--n N] [--algo fw|squaring] [--mode real|modeled]
+  table1   [--machine M]            Table 1: measured op runtimes vs formulas
+  fig5     [--machine carver|horseshoe6]   Fig. 5 efficiency curves
+  isoeff   [--algo generic|dns|fw] [--target E]   isoefficiency verification
+  overhead [--machine M]            framework vs hand-coded DNS";
+
+/// Parse a `--mode` flag into a Compute (PJRT-real prefers artifacts).
+fn compute_for(mode: &str, machine: &MachineConfig) -> Result<Compute> {
+    Ok(match mode {
+        "modeled" => Compute::Modeled { rate: machine.rate },
+        "real" => match EngineServer::start_default() {
+            Ok(srv) => {
+                // Leak the server: lives for the process (CLI runs one cmd).
+                let handle = srv.handle();
+                std::mem::forget(srv);
+                Compute::Pjrt(std::sync::Arc::new(handle))
+            }
+            Err(e) => {
+                eprintln!("note: PJRT unavailable ({e:#}); using native gemm");
+                Compute::Native
+            }
+        },
+        "native" => Compute::Native,
+        other => bail!("--mode must be real|modeled|native, got '{other}'"),
+    })
+}
+
+fn selftest() -> Result<()> {
+    println!("== selftest: PJRT engine ==");
+    match EngineServer::start_default() {
+        Ok(srv) => {
+            let h = srv.handle();
+            let a = foopar::matrix::dense::Mat::random(32, 32, 1);
+            let b = foopar::matrix::dense::Mat::random(32, 32, 2);
+            let (got, secs) = h.matmul(a.clone(), b.clone())?;
+            let want = foopar::matrix::gemm::matmul(&a, &b);
+            let diff = got.max_abs_diff(&want);
+            println!("  pallas matmul_b32 vs native: max|Δ| = {diff:.2e} ({secs:.4}s)  OK");
+            assert!(diff < 1e-3);
+        }
+        Err(e) => println!("  skipped (no artifacts): {e:#}"),
+    }
+
+    println!("== selftest: DNS MMM (real, q=2) ==");
+    let a = BlockSource::real(16, 11);
+    let b = BlockSource::real(16, 22);
+    let res = spmd::run(8, BackendProfile::openmpi_fixed(), MachineConfig::local().cost(), |ctx| {
+        mmm_dns::mmm_dns(ctx, &Compute::Native, 2, &a, &b)
+    });
+    let c = mmm_dns::collect_c(&res.results, 2, 16);
+    let want = seq::matmul_seq(&a.assemble(2), &b.assemble(2));
+    let diff = c.max_abs_diff(&want);
+    println!("  parallel vs sequential: max|Δ| = {diff:.2e}  OK");
+    assert!(diff < 1e-3);
+
+    println!("== selftest: Floyd-Warshall (real, q=2) ==");
+    let src = floyd_warshall::FwSource::Real { n: 16, density: 0.3, seed: 3 };
+    let res = spmd::run(4, BackendProfile::openmpi_fixed(), MachineConfig::local().cost(), |ctx| {
+        floyd_warshall::floyd_warshall_par(ctx, &Compute::Native, 2, &src)
+    });
+    let d = floyd_warshall::collect_d(&res.results, 2, 8);
+    let g = Graph::random(16, 0.3, 3);
+    let want = floyd_warshall_seq(&g);
+    let diff = d.max_abs_diff(&want);
+    println!("  parallel vs sequential: max|Δ| = {diff:.2e}  OK");
+    assert!(diff < 1e-3);
+
+    println!("== selftest: modeled Fig5 headline ==");
+    let (row, vs_peak) = fig5::headline(&MachineConfig::carver());
+    println!(
+        "  carver n={} p={}: E={:.1}% (vs theoretical peak {:.1}%; paper: 93.7%/88.8%)",
+        row.n,
+        row.p,
+        row.efficiency * 100.0,
+        vs_peak * 100.0
+    );
+    println!("selftest OK");
+    Ok(())
+}
+
+fn cmd_peak(args: &Args) -> Result<()> {
+    let iters = args.get_usize("iters", 10)?;
+    let rows = peak::sweep(iters);
+    println!("{}", peak::render(&rows));
+    if let Some(best) = rows
+        .iter()
+        .filter(|r| r.path == "pjrt")
+        .max_by(|a, b| a.gflops.total_cmp(&b.gflops))
+    {
+        println!(
+            "empirical peak (pjrt, b={}): {:.2} GFlop/s — set `rate` in your machine config",
+            best.b, best.gflops
+        );
+    }
+    Ok(())
+}
+
+fn cmd_mmm(args: &Args) -> Result<()> {
+    let machine = MachineConfig::resolve(args.get_str("machine", "local"))?;
+    let algo = args.get_str("algo", "dns");
+    let p = args.get_usize("p", 8)?;
+    // cannon runs on a q² grid; the others on q³
+    let q = if algo == "cannon" {
+        let q = (p as f64).sqrt().round() as usize;
+        if q * q != p {
+            bail!("--p must be a square for cannon (4, 16, 64, 256), got {p}");
+        }
+        q
+    } else {
+        let q = (p as f64).cbrt().round() as usize;
+        if q * q * q != p {
+            bail!("--p must be a cube (8, 27, 64, 125, 216, 343, 512), got {p}");
+        }
+        q
+    };
+    let mode = args.get_str("mode", "modeled");
+    let default_n = if mode == "modeled" { 40_320 } else { 16 * q };
+    let n = args.get_usize("n", default_n)?;
+    if n % q != 0 {
+        bail!("--n must be divisible by q={q}");
+    }
+    let comp = compute_for(mode, &machine)?;
+    let proxy = comp.is_modeled();
+    let a = BlockSource { b: n / q, seed: 1, proxy };
+    let b = BlockSource { b: n / q, seed: 2, proxy };
+    let backend = BackendProfile::by_name(args.get_str("backend", "openmpi-fixed"))
+        .ok_or_else(|| anyhow::anyhow!("unknown backend"))?;
+
+    let (t_parallel, wall, label) = match algo {
+        "dns" => {
+            let r = spmd::run(p, backend, machine.cost(), |ctx| {
+                mmm_dns::mmm_dns(ctx, &comp, q, &a, &b)
+            });
+            if !proxy {
+                let c = mmm_dns::collect_c(&r.results, q, n / q);
+                let want = seq::matmul_seq(&a.assemble(q), &b.assemble(q));
+                println!("verified: max|Δ| = {:.2e}", c.max_abs_diff(&want));
+            }
+            (r.t_parallel, r.wall, "foopar-dns")
+        }
+        "generic" => {
+            let r = spmd::run(p, backend, machine.cost(), |ctx| {
+                mmm_generic::mmm_generic(ctx, &comp, q, &a, &b)
+            });
+            if !proxy {
+                let c = mmm_generic::collect_c(&r.results, q, n / q);
+                let want = seq::matmul_seq(&a.assemble(q), &b.assemble(q));
+                println!("verified: max|Δ| = {:.2e}", c.max_abs_diff(&want));
+            }
+            (r.t_parallel, r.wall, "foopar-generic")
+        }
+        "baseline" => {
+            let r = spmd::run(p, backend, machine.cost(), |ctx| {
+                dns_baseline::dns_baseline(ctx, &comp, q, &a, &b)
+            });
+            (r.t_parallel, r.wall, "c-baseline")
+        }
+        "cannon" => {
+            let r = spmd::run(p, backend, machine.cost(), |ctx| {
+                cannon::mmm_cannon(ctx, &comp, q, &a, &b)
+            });
+            if !proxy {
+                let c = cannon::collect_c(&r.results, q, n / q);
+                let want = seq::matmul_seq(&a.assemble(q), &b.assemble(q));
+                println!("verified: max|Δ| = {:.2e}", c.max_abs_diff(&want));
+            }
+            (r.t_parallel, r.wall, "foopar-cannon")
+        }
+        other => bail!("--algo must be dns|generic|baseline|cannon, got '{other}'"),
+    };
+
+    let ts = analysis::ts_n3(n, &fig5::model(&machine));
+    println!(
+        "{label}: n={n} p={p} mode={mode}  T_P={t_parallel:.4}s  E={:.1}%  ({:.2} TFlop/s)  wall={:.2}s",
+        analysis::efficiency(ts, t_parallel, p) * 100.0,
+        analysis::mmm_rate(n, t_parallel) / 1e12,
+        wall.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_apsp(args: &Args) -> Result<()> {
+    let machine = MachineConfig::resolve(args.get_str("machine", "local"))?;
+    let p = args.get_usize("p", 4)?;
+    let q = (p as f64).sqrt().round() as usize;
+    if q * q != p {
+        bail!("--p must be a square (4, 16, 64, 256), got {p}");
+    }
+    let mode = args.get_str("mode", "real");
+    let n = args.get_usize("n", if mode == "modeled" { 8192 } else { 16 * q })?;
+    if n % q != 0 {
+        bail!("--n must be divisible by q={q}");
+    }
+    let comp = compute_for(mode, &machine)?;
+    let src = if comp.is_modeled() {
+        floyd_warshall::FwSource::Proxy { n }
+    } else {
+        floyd_warshall::FwSource::Real { n, density: 0.3, seed: 42 }
+    };
+    let algo = args.get_str("algo", "fw");
+    let backend = BackendProfile::openmpi_fixed();
+
+    let t_parallel = match algo {
+        "fw" => {
+            let r = spmd::run(p, backend, machine.cost(), |ctx| {
+                floyd_warshall::floyd_warshall_par(ctx, &comp, q, &src)
+            });
+            if let floyd_warshall::FwSource::Real { n, density, seed } = src {
+                let d = floyd_warshall::collect_d(&r.results, q, n / q);
+                let want = floyd_warshall_seq(&Graph::random(n, density, seed));
+                println!("verified: max|Δ| = {:.2e}", d.max_abs_diff(&want));
+            }
+            r.t_parallel
+        }
+        "squaring" => {
+            let r = spmd::run(p, backend, machine.cost(), |ctx| {
+                apsp_squaring::apsp_squaring_par(ctx, &comp, q, &src)
+            });
+            if let floyd_warshall::FwSource::Real { n, density, seed } = src {
+                let d = apsp_squaring::saturate(apsp_squaring::collect_d(&r.results, q, n / q));
+                let want = floyd_warshall_seq(&Graph::random(n, density, seed));
+                println!("verified: max|Δ| = {:.2e}", d.max_abs_diff(&want));
+            }
+            r.t_parallel
+        }
+        other => bail!("--algo must be fw|squaring, got '{other}'"),
+    };
+
+    let ts = seq::fw_ts(n, machine.rate);
+    println!(
+        "apsp-{algo}: n={n} p={p} mode={mode}  T_P={t_parallel:.4}s  E={:.1}%",
+        analysis::efficiency(ts, t_parallel, p) * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let machine = MachineConfig::resolve(args.get_str("machine", "carver"))?;
+    let rows = table1::sweep(&machine);
+    println!("{}", table1::render(&rows));
+    Ok(())
+}
+
+fn cmd_fig5(args: &Args) -> Result<()> {
+    let machine = MachineConfig::resolve(args.get_str("machine", "carver"))?;
+    let with_baseline = machine.name == "carver";
+    let rows = fig5::sweep(&machine, with_baseline);
+    println!("{}", fig5::render(&rows));
+    if machine.name == "carver" {
+        let (row, vs_peak) = fig5::headline(&machine);
+        println!(
+            "headline: n={} p={}: {:.1}% of empirical peak, {:.1}% of theoretical (paper: 93.7% / 88.8%)",
+            row.n, row.p, row.efficiency * 100.0, vs_peak * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_isoeff(args: &Args) -> Result<()> {
+    let machine = MachineConfig::resolve(args.get_str("machine", "carver"))?;
+    let algos: Vec<isoeff::Algo> = match args.get("algo") {
+        Some(s) => vec![isoeff::Algo::by_name(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown --algo '{s}'"))?],
+        None => vec![isoeff::Algo::Generic, isoeff::Algo::Dns, isoeff::Algo::Fw],
+    };
+    for algo in algos {
+        println!("== isoefficiency curve: {} (target E = {:.0}%) ==", algo.name(), isoeff::TARGET * 100.0);
+        let rows = isoeff::iso_curve(&machine, algo);
+        println!("{}", isoeff::render(&rows, algo.iso_label()));
+    }
+    Ok(())
+}
+
+fn cmd_overhead(args: &Args) -> Result<()> {
+    let machine = MachineConfig::resolve(args.get_str("machine", "carver"))?;
+    let rows = overhead::sweep(&machine);
+    println!("{}", overhead::render(&rows));
+    Ok(())
+}

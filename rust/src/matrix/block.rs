@@ -1,0 +1,194 @@
+//! Lazy matrix blocks — FooPar's `MJBLProxy` idea.
+//!
+//! Algorithm 1 of the paper fills the distributed matrices with
+//! `MJBLProxy(SEED, b)` objects: *lazy* blocks that know their size and
+//! seed but materialize data only when touched.  This is what lets an
+//! SPMD program "generate" the whole input on every rank with no space
+//! or time overhead (§3.2), and what lets our *modeled* mode run the
+//! paper's n=40000, p=512 configuration on a laptop: proxies flow
+//! through the full communication machinery with correct wire sizes,
+//! but no floats are ever allocated.
+
+use super::dense::Mat;
+use crate::data::value::Data;
+
+/// A block of a distributed matrix: materialized data or a lazy proxy.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Block {
+    /// Materialized data (real mode).
+    Real(Mat),
+    /// Lazy block: dimensions + generation seed (modeled mode, and the
+    /// deferred-generation trick of Alg. 1's `MJBLProxy`).
+    Proxy { rows: usize, cols: usize, seed: u64 },
+}
+
+impl Block {
+    pub fn real(m: Mat) -> Self {
+        Block::Real(m)
+    }
+
+    /// A lazy random block of edge `b` (square), like `MJBLProxy(seed, b)`.
+    pub fn proxy(b: usize, seed: u64) -> Self {
+        Block::Proxy { rows: b, cols: b, seed }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            Block::Real(m) => m.rows,
+            Block::Proxy { rows, .. } => *rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Block::Real(m) => m.cols,
+            Block::Proxy { cols, .. } => *cols,
+        }
+    }
+
+    pub fn is_proxy(&self) -> bool {
+        matches!(self, Block::Proxy { .. })
+    }
+
+    /// Materialize: proxies generate their deterministic random content.
+    pub fn materialize(&self) -> Mat {
+        match self {
+            Block::Real(m) => m.clone(),
+            Block::Proxy { rows, cols, seed } => Mat::random(*rows, *cols, *seed),
+        }
+    }
+
+    /// Borrow the data if real (panics on proxies — modeled-mode code
+    /// paths must never touch element data).
+    pub fn as_mat(&self) -> &Mat {
+        match self {
+            Block::Real(m) => m,
+            Block::Proxy { .. } => panic!("attempted to read data of a proxy block"),
+        }
+    }
+}
+
+/// A lazily-evaluated distributed matrix: hands out the (i, j) block of a
+/// conceptual (q·b)×(q·b) matrix.  Every rank constructs the source (it
+/// is just a seed), but only owners materialize blocks — the exact
+/// semantics of Alg. 1's `Array.fill(M, M)(MJBLProxy(SEED, b))`.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockSource {
+    /// Block edge.
+    pub b: usize,
+    /// Base seed of the whole matrix.
+    pub seed: u64,
+    /// If true, blocks stay proxies (modeled mode).
+    pub proxy: bool,
+}
+
+impl BlockSource {
+    pub fn real(b: usize, seed: u64) -> Self {
+        BlockSource { b, seed, proxy: false }
+    }
+
+    pub fn proxy(b: usize, seed: u64) -> Self {
+        BlockSource { b, seed, proxy: true }
+    }
+
+    /// Per-block seed: mixes (base, i, j) so blocks are independent but
+    /// reproducible from any rank.
+    pub fn block_seed(&self, i: usize, j: usize) -> u64 {
+        let mut s = self.seed ^ 0x51_7c_c1_b7_27_22_0a_95;
+        for v in [i as u64, j as u64] {
+            s ^= v.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            s = s.rotate_left(23).wrapping_mul(0x2545_F491_4F6C_DD1D);
+        }
+        s
+    }
+
+    /// The (i, j) block.
+    pub fn block(&self, i: usize, j: usize) -> Block {
+        let s = self.block_seed(i, j);
+        if self.proxy {
+            Block::proxy(self.b, s)
+        } else {
+            Block::Real(Mat::random(self.b, self.b, s))
+        }
+    }
+
+    /// Materialize the full q×q-block matrix (verification in real mode).
+    pub fn assemble(&self, q: usize) -> Mat {
+        let n = q * self.b;
+        let mut m = Mat::zeros(n, n);
+        for i in 0..q {
+            for j in 0..q {
+                m.set_block(i, j, &self.block(i, j).materialize());
+            }
+        }
+        m
+    }
+}
+
+impl Data for Block {
+    /// Wire size: proxies *cost* what their materialized form would —
+    /// the whole point of the modeled mode is that communication is
+    /// charged as if the data were real.
+    fn byte_size(&self) -> usize {
+        self.rows() * self.cols() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proxy_materializes_deterministically() {
+        let p = Block::proxy(8, 42);
+        assert_eq!(p.materialize(), Mat::random(8, 8, 42));
+        assert_eq!(p.materialize(), p.materialize());
+    }
+
+    #[test]
+    fn proxy_costs_like_real() {
+        let p = Block::proxy(16, 1);
+        let r = Block::real(Mat::zeros(16, 16));
+        assert_eq!(p.byte_size(), r.byte_size());
+        assert_eq!(p.byte_size(), 16 * 16 * 4);
+    }
+
+    #[test]
+    fn real_roundtrip() {
+        let m = Mat::random(4, 4, 3);
+        let b = Block::real(m.clone());
+        assert!(!b.is_proxy());
+        assert_eq!(b.as_mat(), &m);
+        assert_eq!(b.materialize(), m);
+    }
+
+    #[test]
+    #[should_panic(expected = "proxy")]
+    fn as_mat_panics_on_proxy() {
+        Block::proxy(4, 0).as_mat();
+    }
+
+    #[test]
+    fn source_blocks_reproducible_and_distinct() {
+        let s = BlockSource::real(8, 42);
+        assert_eq!(s.block(1, 2), s.block(1, 2));
+        assert_ne!(s.block(1, 2), s.block(2, 1));
+        assert_ne!(s.block(0, 0), BlockSource::real(8, 43).block(0, 0));
+    }
+
+    #[test]
+    fn proxy_source_matches_real_when_materialized() {
+        let r = BlockSource::real(4, 9);
+        let p = BlockSource::proxy(4, 9);
+        assert!(p.block(2, 3).is_proxy());
+        assert_eq!(p.block(2, 3).materialize(), r.block(2, 3).materialize());
+    }
+
+    #[test]
+    fn assemble_places_blocks() {
+        let s = BlockSource::real(4, 5);
+        let full = s.assemble(3);
+        assert_eq!(full.rows, 12);
+        assert_eq!(full.block(1, 2, 4), s.block(1, 2).materialize());
+    }
+}

@@ -1,0 +1,201 @@
+//! Dense row-major f32 matrices — the substrate the paper gets from
+//! JBLAS/MKL.  Blocks of the distributed matrices are `Mat`s; the heavy
+//! products go through [`crate::matrix::gemm`] (native) or the PJRT
+//! engine ([`crate::runtime`]).
+
+use crate::data::value::Data;
+use crate::testing::Rng;
+
+/// Dense row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Self {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Deterministic pseudo-random matrix in [-1, 1) — the analogue of the
+    /// paper's `MJBLProxy(SEED, b)` lazily-materialized random blocks.
+    pub fn random(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let data = (0..rows * cols)
+            .map(|_| rng.gen_f32_range(-1.0, 1.0))
+            .collect();
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Column `c` as a fresh vector.
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.set(c, r, self.at(r, c));
+            }
+        }
+        t
+    }
+
+    /// Extract the (bi, bj) block of edge `b` (matrix dims must be
+    /// divisible by `b`).  This is the "user partitions the input" step
+    /// FooPar deliberately leaves to the caller (§3.3).
+    pub fn block(&self, bi: usize, bj: usize, b: usize) -> Mat {
+        assert!(self.rows % b == 0 && self.cols % b == 0);
+        let mut out = Mat::zeros(b, b);
+        for r in 0..b {
+            let src = (bi * b + r) * self.cols + bj * b;
+            out.data[r * b..(r + 1) * b].copy_from_slice(&self.data[src..src + b]);
+        }
+        out
+    }
+
+    /// Write `blk` into position (bi, bj) of the block decomposition.
+    pub fn set_block(&mut self, bi: usize, bj: usize, blk: &Mat) {
+        let b = blk.rows;
+        assert_eq!(blk.cols, b);
+        for r in 0..b {
+            let dst = (bi * b + r) * self.cols + bj * b;
+            self.data[dst..dst + b].copy_from_slice(blk.row(r));
+        }
+    }
+
+    /// Frobenius norm (test diagnostics).
+    pub fn frob(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Maximum absolute elementwise difference.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+impl Data for Mat {
+    fn byte_size(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let mut m = Mat::zeros(2, 3);
+        m[(1, 2)] = 5.0;
+        assert_eq!(m.at(1, 2), 5.0);
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.0]);
+        assert_eq!(m.col(2), vec![0.0, 5.0]);
+    }
+
+    #[test]
+    fn eye_and_transpose() {
+        let e = Mat::eye(3);
+        assert_eq!(e.transpose(), e);
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = m.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.at(2, 1), 6.0);
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed() {
+        let a = Mat::random(4, 4, 7);
+        let b = Mat::random(4, 4, 7);
+        let c = Mat::random(4, 4, 8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.data.iter().all(|v| (-1.0..1.0).contains(v)));
+    }
+
+    #[test]
+    fn block_roundtrip() {
+        let m = Mat::random(8, 8, 1);
+        let blk = m.block(1, 0, 4);
+        assert_eq!(blk.at(0, 0), m.at(4, 0));
+        assert_eq!(blk.at(3, 3), m.at(7, 3));
+        let mut m2 = Mat::zeros(8, 8);
+        for bi in 0..2 {
+            for bj in 0..2 {
+                m2.set_block(bi, bj, &m.block(bi, bj, 4));
+            }
+        }
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn byte_size_is_4_per_element() {
+        assert_eq!(Mat::zeros(10, 3).byte_size(), 120);
+    }
+
+    #[test]
+    fn max_abs_diff_and_frob() {
+        let a = Mat::filled(2, 2, 1.0);
+        let b = Mat::filled(2, 2, 1.5);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+        assert!((a.frob() - 2.0).abs() < 1e-9);
+    }
+}

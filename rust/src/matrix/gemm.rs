@@ -1,0 +1,226 @@
+//! Native block linear algebra — the "BLAS" substitute.
+//!
+//! The paper runs MKL/JBLAS on each core; here the native fallback is a
+//! cache-blocked ikj GEMM.  It is used (a) when no PJRT artifact matches
+//! the block size, (b) as the baseline the PJRT path is compared against,
+//! and (c) for the (min,+) semiring where BLAS does not apply.
+
+use super::dense::Mat;
+
+/// Tile edge for the register/cache blocking of the native GEMM.
+const TILE: usize = 64;
+
+/// `C = A · B` (native, cache-blocked ikj).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_acc_into(&mut c, a, b);
+    c
+}
+
+/// `C += A · B` — the DNS partial-sum hot spot, accumulating in place.
+pub fn matmul_acc_into(c: &mut Mat, a: &Mat, b: &Mat) {
+    assert_eq!(a.cols, b.rows, "inner dims: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    // Tiled over (i, k) so each inner loop is a saxpy over a contiguous
+    // row of B — vectorizer-friendly, no transposes needed.
+    for it in (0..m).step_by(TILE) {
+        let ie = (it + TILE).min(m);
+        for kt in (0..k).step_by(TILE) {
+            let ke = (kt + TILE).min(k);
+            for i in it..ie {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for kk in kt..ke {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `A + B` elementwise (the reduceD combine).
+pub fn add(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    let data = a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect();
+    Mat { rows: a.rows, cols: a.cols, data }
+}
+
+/// "No edge" sentinel of the (min,+) semiring — kept in sync with
+/// python/compile/kernels/ref.py::INF.
+pub const INF: f32 = 1e30;
+
+/// Tropical product `out[i,j] = min(INF, min_k a[i,k] + b[k,j])`.
+pub fn minplus_matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = Mat::filled(m, n, INF);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let aik = arow[kk];
+            if aik >= INF {
+                continue;
+            }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for (ov, bv) in orow.iter_mut().zip(brow) {
+                let cand = aik + bv;
+                if cand < *ov {
+                    *ov = cand;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Floyd-Warshall pivot update on a block (Alg. 3 lines 9-14):
+/// `d[i,j] = min(d[i,j], kj[i] + ik[j])`, where `ik` is the pivot-row
+/// segment and `kj` the pivot-column segment.
+pub fn fw_update_into(d: &mut Mat, ik: &[f32], kj: &[f32]) {
+    assert_eq!(ik.len(), d.cols);
+    assert_eq!(kj.len(), d.rows);
+    for i in 0..d.rows {
+        let base = kj[i];
+        if base >= INF {
+            continue;
+        }
+        let row = &mut d.data[i * d.cols..(i + 1) * d.cols];
+        for (dv, &ikv) in row.iter_mut().zip(ik) {
+            let cand = base + ikv;
+            if cand < *dv {
+                *dv = cand;
+            }
+        }
+    }
+}
+
+/// FLOP count of an (m,k)x(k,n) GEMM (2 flops per MAC) — used by the
+/// modeled-compute mode and the efficiency reports.
+pub fn gemm_flops(m: usize, k: usize, n: usize) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_allclose, prop_check, Rng};
+
+    /// Triple-loop reference for the blocked implementation.
+    fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0f32;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive_various_shapes() {
+        prop_check("gemm vs naive", 25, |rng: &mut Rng| {
+            let m = 1 + rng.gen_range(40);
+            let k = 1 + rng.gen_range(40);
+            let n = 1 + rng.gen_range(40);
+            let a = Mat::random(m, k, rng.next_u64());
+            let b = Mat::random(k, n, rng.next_u64());
+            let got = matmul(&a, &b);
+            let want = matmul_naive(&a, &b);
+            assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+        });
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::random(65, 65, 3); // crosses the TILE boundary
+        let got = matmul(&a, &Mat::eye(65));
+        assert_allclose(&got.data, &a.data, 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn acc_accumulates() {
+        let a = Mat::random(8, 8, 1);
+        let b = Mat::random(8, 8, 2);
+        let mut c = matmul(&a, &b);
+        matmul_acc_into(&mut c, &a, &b);
+        let twice = matmul(&a, &b);
+        let want: Vec<f32> = twice.data.iter().map(|v| v * 2.0).collect();
+        assert_allclose(&c.data, &want, 1e-5, 1e-6);
+    }
+
+    #[test]
+    fn add_elementwise() {
+        let a = Mat::filled(3, 3, 1.0);
+        let b = Mat::filled(3, 3, 2.5);
+        assert_eq!(add(&a, &b), Mat::filled(3, 3, 3.5));
+    }
+
+    #[test]
+    fn minplus_identity_and_saturation() {
+        // min-plus identity: 0 diagonal, INF elsewhere
+        let mut ident = Mat::filled(4, 4, INF);
+        for i in 0..4 {
+            ident[(i, i)] = 0.0;
+        }
+        let a = Mat::random(4, 4, 9);
+        let got = minplus_matmul(&a, &ident);
+        assert_allclose(&got.data, &a.data, 1e-6, 1e-7);
+        // all-INF inputs stay INF (saturation, no overflow)
+        let inf = Mat::filled(4, 4, INF);
+        let out = minplus_matmul(&inf, &inf);
+        assert!(out.data.iter().all(|&v| v == INF));
+    }
+
+    #[test]
+    fn minplus_small_example() {
+        // 2x2: out[0,0] = min(a00+b00, a01+b10)
+        let a = Mat::from_vec(2, 2, vec![1., 5., 2., 1.]);
+        let b = Mat::from_vec(2, 2, vec![3., 9., 1., 1.]);
+        let out = minplus_matmul(&a, &b);
+        assert_eq!(out.at(0, 0), 4.0); // min(1+3, 5+1) = 4
+        assert_eq!(out.at(0, 1), 6.0); // min(1+9, 5+1) = 6
+        assert_eq!(out.at(1, 0), 2.0); // min(2+3, 1+1) = 2
+    }
+
+    #[test]
+    fn fw_update_improves_paths() {
+        let mut d = Mat::from_vec(2, 2, vec![0., 10., 10., 0.]);
+        // pivot row segment ik = [0, 1], pivot col segment kj = [1, 0]
+        fw_update_into(&mut d, &[0., 1.], &[1., 0.]);
+        assert_eq!(d.at(0, 1), 2.0); // 10 -> kj[0]+ik[1] = 1+1 = 2
+        assert_eq!(d.at(0, 0), 0.0);
+    }
+
+    #[test]
+    fn fw_update_never_increases() {
+        prop_check("fw monotone", 20, |rng: &mut Rng| {
+            let b = 1 + rng.gen_range(20);
+            let before = Mat::random(b, b, rng.next_u64());
+            let ik: Vec<f32> = (0..b).map(|_| rng.gen_f32()).collect();
+            let kj: Vec<f32> = (0..b).map(|_| rng.gen_f32()).collect();
+            let mut after = before.clone();
+            fw_update_into(&mut after, &ik, &kj);
+            for (a, bv) in after.data.iter().zip(&before.data) {
+                assert!(a <= bv);
+            }
+        });
+    }
+
+    #[test]
+    fn flop_count() {
+        assert_eq!(gemm_flops(2, 3, 4), 48.0);
+    }
+}

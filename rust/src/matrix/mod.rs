@@ -1,0 +1,3 @@
+pub mod dense;
+pub mod gemm;
+pub mod block;

@@ -1,0 +1,206 @@
+//! Per-rank metrics: message/byte/flop counters and virtual-time split.
+//!
+//! Every [`crate::spmd::Ctx`] owns a `RankMetrics`; the SPMD launcher
+//! collects them at join and [`Report`] aggregates across ranks.  These
+//! counters are what the bench harness prints next to the paper's numbers
+//! (e.g. bytes on the wire per reduceD at p ranks — directly comparable to
+//! the `t_w·m·f(p)` terms in Table 1).
+
+use std::cell::Cell;
+
+/// Counters owned by one rank.  `Cell`-based: ranks are single threads, the
+/// struct is never shared, but ops take `&Ctx`.
+#[derive(Debug, Default)]
+pub struct RankMetrics {
+    pub msgs_sent: Cell<u64>,
+    pub bytes_sent: Cell<u64>,
+    pub msgs_recv: Cell<u64>,
+    pub bytes_recv: Cell<u64>,
+    /// Floating-point operations this rank performed (modeled or real).
+    pub flops: Cell<f64>,
+    /// Virtual seconds spent in communication (send + recv wait).
+    pub comm_time: Cell<f64>,
+    /// Virtual seconds spent computing.
+    pub compute_time: Cell<f64>,
+    /// Collective operations entered.
+    pub collectives: Cell<u64>,
+}
+
+impl RankMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn on_send(&self, bytes: usize, secs: f64) {
+        self.msgs_sent.set(self.msgs_sent.get() + 1);
+        self.bytes_sent.set(self.bytes_sent.get() + bytes as u64);
+        self.comm_time.set(self.comm_time.get() + secs);
+    }
+
+    #[inline]
+    pub fn on_recv(&self, bytes: usize, wait_secs: f64) {
+        self.msgs_recv.set(self.msgs_recv.get() + 1);
+        self.bytes_recv.set(self.bytes_recv.get() + bytes as u64);
+        self.comm_time.set(self.comm_time.get() + wait_secs);
+    }
+
+    #[inline]
+    pub fn on_compute(&self, flops: f64, secs: f64) {
+        self.flops.set(self.flops.get() + flops);
+        self.compute_time.set(self.compute_time.get() + secs);
+    }
+
+    #[inline]
+    pub fn on_collective(&self) {
+        self.collectives.set(self.collectives.get() + 1);
+    }
+
+    /// Snapshot into a plain (Send) summary for cross-thread collection.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            msgs_sent: self.msgs_sent.get(),
+            bytes_sent: self.bytes_sent.get(),
+            msgs_recv: self.msgs_recv.get(),
+            bytes_recv: self.bytes_recv.get(),
+            flops: self.flops.get(),
+            comm_time: self.comm_time.get(),
+            compute_time: self.compute_time.get(),
+            collectives: self.collectives.get(),
+        }
+    }
+}
+
+/// Plain-old-data snapshot of one rank's counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub msgs_sent: u64,
+    pub bytes_sent: u64,
+    pub msgs_recv: u64,
+    pub bytes_recv: u64,
+    pub flops: f64,
+    pub comm_time: f64,
+    pub compute_time: f64,
+    pub collectives: u64,
+}
+
+/// Aggregate over all ranks of a run.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub ranks: usize,
+    pub total: MetricsSnapshot,
+    pub max_comm_time: f64,
+    pub max_compute_time: f64,
+}
+
+impl Report {
+    pub fn aggregate(per_rank: &[MetricsSnapshot]) -> Self {
+        let mut total = MetricsSnapshot::default();
+        let mut max_comm = 0.0f64;
+        let mut max_comp = 0.0f64;
+        for m in per_rank {
+            total.msgs_sent += m.msgs_sent;
+            total.bytes_sent += m.bytes_sent;
+            total.msgs_recv += m.msgs_recv;
+            total.bytes_recv += m.bytes_recv;
+            total.flops += m.flops;
+            total.comm_time += m.comm_time;
+            total.compute_time += m.compute_time;
+            total.collectives += m.collectives;
+            max_comm = max_comm.max(m.comm_time);
+            max_comp = max_comp.max(m.compute_time);
+        }
+        Report {
+            ranks: per_rank.len(),
+            total,
+            max_comm_time: max_comm,
+            max_compute_time: max_comp,
+        }
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "p={} msgs={} bytes={} flops={:.3e} comm(max)={:.3}ms compute(max)={:.3}ms",
+            self.ranks,
+            self.total.msgs_sent,
+            self.total.bytes_sent,
+            self.total.flops,
+            self.max_comm_time * 1e3,
+            self.max_compute_time * 1e3,
+        )
+    }
+}
+
+/// Render an aligned text table (used by the CLI and bench harnesses to
+/// print paper-style tables).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            if i > 0 {
+                line.push_str("  ");
+            }
+            line.push_str(&format!("{:>width$}", c, width = widths[i]));
+        }
+        line
+    };
+    let hdr: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&hdr, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = RankMetrics::new();
+        m.on_send(100, 1e-6);
+        m.on_send(50, 1e-6);
+        m.on_recv(100, 2e-6);
+        m.on_compute(1e6, 1e-3);
+        let s = m.snapshot();
+        assert_eq!(s.msgs_sent, 2);
+        assert_eq!(s.bytes_sent, 150);
+        assert_eq!(s.msgs_recv, 1);
+        assert!((s.comm_time - 4e-6).abs() < 1e-12);
+        assert_eq!(s.flops, 1e6);
+    }
+
+    #[test]
+    fn report_aggregates_and_maxes() {
+        let a = MetricsSnapshot { comm_time: 1.0, msgs_sent: 3, ..Default::default() };
+        let b = MetricsSnapshot { comm_time: 2.0, msgs_sent: 4, ..Default::default() };
+        let r = Report::aggregate(&[a, b]);
+        assert_eq!(r.ranks, 2);
+        assert_eq!(r.total.msgs_sent, 7);
+        assert_eq!(r.max_comm_time, 2.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            &["p", "time"],
+            &[vec!["8".into(), "1.5".into()], vec!["512".into(), "2.25".into()]],
+        );
+        assert!(t.contains("p"));
+        assert!(t.lines().count() == 4);
+    }
+}

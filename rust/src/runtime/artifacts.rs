@@ -1,0 +1,173 @@
+//! Artifact discovery: locate and enumerate `artifacts/*.hlo.txt`.
+//!
+//! The AOT pipeline (`python/compile/aot.py`) emits one HLO-text module
+//! per (operation, block-size) pair, named `<op>_b<edge>.hlo.txt`, plus a
+//! `manifest.json`.  This module finds the directory and parses the names
+//! back; [`super::engine`] compiles them on demand.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Block operations with AOT artifacts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Op {
+    Matmul,
+    MatmulAcc,
+    Add,
+    FwUpdate,
+    MinPlus,
+}
+
+impl Op {
+    pub fn stem(&self) -> &'static str {
+        match self {
+            Op::Matmul => "matmul",
+            Op::MatmulAcc => "matmul_acc",
+            Op::Add => "add",
+            Op::FwUpdate => "fw_update",
+            Op::MinPlus => "minplus",
+        }
+    }
+
+    pub fn all() -> [Op; 5] {
+        [Op::Matmul, Op::MatmulAcc, Op::Add, Op::FwUpdate, Op::MinPlus]
+    }
+}
+
+/// `matmul_b128.hlo.txt`-style artifact file name.
+pub fn artifact_file(op: Op, b: usize) -> String {
+    format!("{}_b{}.hlo.txt", op.stem(), b)
+}
+
+/// Locate the artifacts directory: `$FOOPAR_ARTIFACTS`, else `artifacts/`
+/// relative to the current dir or up to 3 parents (so tests and examples
+/// work from target subdirectories).
+pub fn default_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("FOOPAR_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        return p.is_dir().then_some(p);
+    }
+    let mut base = std::env::current_dir().ok()?;
+    for _ in 0..4 {
+        let cand = base.join("artifacts");
+        if cand.join("manifest.json").is_file() {
+            return Some(cand);
+        }
+        if !base.pop() {
+            break;
+        }
+    }
+    None
+}
+
+/// The set of artifacts present in a directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactSet {
+    dir: PathBuf,
+    /// (op, block edge) pairs with an artifact on disk.
+    entries: BTreeSet<(Op, usize)>,
+}
+
+impl ArtifactSet {
+    /// Scan `dir` for `<op>_b<edge>.hlo.txt` files.
+    pub fn discover(dir: &Path) -> Result<Self> {
+        if !dir.is_dir() {
+            bail!("artifact directory {} does not exist (run `make artifacts`)", dir.display());
+        }
+        let mut entries = BTreeSet::new();
+        for e in std::fs::read_dir(dir).context("reading artifact dir")? {
+            let name = e?.file_name();
+            let name = name.to_string_lossy();
+            if let Some((op, b)) = parse_name(&name) {
+                entries.insert((op, b));
+            }
+        }
+        if entries.is_empty() {
+            bail!("no *.hlo.txt artifacts in {} (run `make artifacts`)", dir.display());
+        }
+        Ok(ArtifactSet { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Discover at the default location.
+    pub fn discover_default() -> Result<Self> {
+        let dir = default_dir()
+            .context("artifacts/ not found — run `make artifacts` or set FOOPAR_ARTIFACTS")?;
+        Self::discover(&dir)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn has(&self, op: Op, b: usize) -> bool {
+        self.entries.contains(&(op, b))
+    }
+
+    pub fn path(&self, op: Op, b: usize) -> PathBuf {
+        self.dir.join(artifact_file(op, b))
+    }
+
+    /// Block edges available for `op`, ascending.
+    pub fn sizes(&self, op: Op) -> Vec<usize> {
+        self.entries.iter().filter(|(o, _)| *o == op).map(|&(_, b)| b).collect()
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &(Op, usize)> {
+        self.entries.iter()
+    }
+}
+
+/// Parse `<op>_b<edge>.hlo.txt` back into (Op, edge).
+pub fn parse_name(name: &str) -> Option<(Op, usize)> {
+    let stem = name.strip_suffix(".hlo.txt")?;
+    // ops with underscores first (matmul_acc before matmul would misparse)
+    for op in [Op::MatmulAcc, Op::FwUpdate, Op::Matmul, Op::Add, Op::MinPlus] {
+        if let Some(rest) = stem.strip_prefix(op.stem()) {
+            if let Some(bs) = rest.strip_prefix("_b") {
+                if let Ok(b) = bs.parse::<usize>() {
+                    return Some((op, b));
+                }
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_roundtrip() {
+        for op in Op::all() {
+            for b in [32usize, 64, 128, 256] {
+                let f = artifact_file(op, b);
+                assert_eq!(parse_name(&f), Some((op, b)), "{f}");
+            }
+        }
+    }
+
+    #[test]
+    fn parse_rejects_noise() {
+        assert_eq!(parse_name("manifest.json"), None);
+        assert_eq!(parse_name("matmul_b.hlo.txt"), None);
+        assert_eq!(parse_name("matmul_bXX.hlo.txt"), None);
+        assert_eq!(parse_name("matmul_b64.txt"), None);
+    }
+
+    #[test]
+    fn matmul_acc_not_shadowed_by_matmul() {
+        assert_eq!(parse_name("matmul_acc_b32.hlo.txt"), Some((Op::MatmulAcc, 32)));
+    }
+
+    #[test]
+    fn discover_real_artifacts_if_present() {
+        // Runs against the repo's artifacts/ when built via `make test`.
+        if let Some(dir) = default_dir() {
+            let set = ArtifactSet::discover(&dir).unwrap();
+            assert!(set.has(Op::Matmul, 32) || !set.sizes(Op::Matmul).is_empty());
+        }
+    }
+}

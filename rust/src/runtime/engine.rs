@@ -1,0 +1,327 @@
+//! The PJRT execution engine and its device-server thread.
+//!
+//! [`Engine`] owns a `PjRtClient` (CPU) plus a compile-on-demand cache of
+//! loaded executables, one per `(op, block-size)` artifact.  Because the
+//! `xla` crate's client is `Rc`-based (`!Send`), the engine runs on one
+//! dedicated thread ([`EngineServer`]) and SPMD ranks submit work through
+//! a cloneable, thread-safe [`EngineHandle`] — the same discipline as a
+//! per-node accelerator command queue.
+//!
+//! Interchange is HLO **text** (see python/compile/aot.py and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile`.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifacts::{ArtifactSet, Op};
+use crate::matrix::dense::Mat;
+
+/// Single-threaded PJRT engine (lives on the server thread).
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts: ArtifactSet,
+    cache: HashMap<(Op, usize), xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    pub fn new(artifacts: ArtifactSet) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, artifacts, cache: HashMap::new() })
+    }
+
+    pub fn artifacts(&self) -> &ArtifactSet {
+        &self.artifacts
+    }
+
+    fn executable(&mut self, op: Op, b: usize) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(&(op, b)) {
+            if !self.artifacts.has(op, b) {
+                bail!("no artifact for {:?} at block size {b}", op);
+            }
+            let path = self.artifacts.path(op, b);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            self.cache.insert((op, b), exe);
+        }
+        Ok(&self.cache[&(op, b)])
+    }
+
+    fn literal(m: &Mat) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(&m.data).reshape(&[m.rows as i64, m.cols as i64])?)
+    }
+
+    /// Execute `op` at block size `b` on `inputs`; returns the single
+    /// output matrix with shape `(rows, cols)`.
+    pub fn exec(&mut self, op: Op, b: usize, inputs: &[&Mat], rows: usize, cols: usize) -> Result<Mat> {
+        let exe = self.executable(op, b)?;
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|m| Self::literal(m)).collect::<Result<_>>()?;
+        let out = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = out.to_tuple1()?;
+        let data = out.to_vec::<f32>()?;
+        if data.len() != rows * cols {
+            bail!("{:?}_b{b}: expected {}x{} output, got {} elements", op, rows, cols, data.len());
+        }
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+
+    /// Block GEMM via the Pallas artifact: inputs (b,b)·(b,b) → (b,b).
+    pub fn matmul(&mut self, a: &Mat, b: &Mat) -> Result<Mat> {
+        let n = a.rows;
+        self.exec(Op::Matmul, n, &[a, b], n, n)
+    }
+
+    pub fn matmul_acc(&mut self, c: &Mat, a: &Mat, b: &Mat) -> Result<Mat> {
+        let n = a.rows;
+        self.exec(Op::MatmulAcc, n, &[c, a, b], n, n)
+    }
+
+    pub fn add(&mut self, x: &Mat, y: &Mat) -> Result<Mat> {
+        let n = x.rows;
+        self.exec(Op::Add, n, &[x, y], n, x.cols)
+    }
+
+    /// FW pivot update: d (b,b), ik (1,b), kj (b,1) → (b,b).
+    pub fn fw_update(&mut self, d: &Mat, ik: &Mat, kj: &Mat) -> Result<Mat> {
+        let n = d.rows;
+        self.exec(Op::FwUpdate, n, &[d, ik, kj], n, n)
+    }
+
+    pub fn minplus(&mut self, a: &Mat, b: &Mat) -> Result<Mat> {
+        let n = a.rows;
+        self.exec(Op::MinPlus, n, &[a, b], n, n)
+    }
+}
+
+// ------------------------------------------------------- server + handle
+
+struct Request {
+    op: Op,
+    b: usize,
+    inputs: Vec<Mat>,
+    rows: usize,
+    cols: usize,
+    reply: mpsc::Sender<Result<(Mat, f64)>>,
+}
+
+/// Thread-safe, cloneable handle to the device-server thread.
+///
+/// `exec` returns the result matrix plus the *device execution seconds*
+/// (excluding queue wait) so callers can charge virtual compute time.
+pub struct EngineHandle {
+    tx: Mutex<mpsc::Sender<Request>>,
+    artifacts: ArtifactSet,
+}
+
+impl EngineHandle {
+    pub fn supports(&self, op: Op, b: usize) -> bool {
+        self.artifacts.has(op, b)
+    }
+
+    pub fn artifacts(&self) -> &ArtifactSet {
+        &self.artifacts
+    }
+
+    pub fn exec(
+        &self,
+        op: Op,
+        b: usize,
+        inputs: Vec<Mat>,
+        rows: usize,
+        cols: usize,
+    ) -> Result<(Mat, f64)> {
+        let (rtx, rrx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().unwrap();
+            tx.send(Request { op, b, inputs, rows, cols, reply: rtx })
+                .map_err(|_| anyhow!("engine server is gone"))?;
+        }
+        rrx.recv().map_err(|_| anyhow!("engine server dropped reply"))?
+    }
+
+    pub fn matmul(&self, a: Mat, b: Mat) -> Result<(Mat, f64)> {
+        let n = a.rows;
+        self.exec(Op::Matmul, n, vec![a, b], n, n)
+    }
+
+    pub fn matmul_acc(&self, c: Mat, a: Mat, b: Mat) -> Result<(Mat, f64)> {
+        let n = a.rows;
+        self.exec(Op::MatmulAcc, n, vec![c, a, b], n, n)
+    }
+
+    pub fn add(&self, x: Mat, y: Mat) -> Result<(Mat, f64)> {
+        let n = x.rows;
+        let c = x.cols;
+        self.exec(Op::Add, n, vec![x, y], n, c)
+    }
+
+    pub fn fw_update(&self, d: Mat, ik: Mat, kj: Mat) -> Result<(Mat, f64)> {
+        let n = d.rows;
+        self.exec(Op::FwUpdate, n, vec![d, ik, kj], n, n)
+    }
+
+    pub fn minplus(&self, a: Mat, b: Mat) -> Result<(Mat, f64)> {
+        let n = a.rows;
+        self.exec(Op::MinPlus, n, vec![a, b], n, n)
+    }
+}
+
+/// Owns the device-server thread; dropping it shuts the server down.
+pub struct EngineServer {
+    tx: mpsc::Sender<Request>,
+    artifacts: ArtifactSet,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EngineServer {
+    /// Spawn the server with artifacts discovered at the default location.
+    pub fn start_default() -> Result<Self> {
+        Self::start(ArtifactSet::discover_default()?)
+    }
+
+    /// Spawn the server thread; the PJRT client is created on that thread
+    /// (it is `!Send`).
+    pub fn start(artifacts: ArtifactSet) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let arts = artifacts.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                let mut engine = match Engine::new(arts) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    let t0 = Instant::now();
+                    let refs: Vec<&Mat> = req.inputs.iter().collect();
+                    let res = engine
+                        .exec(req.op, req.b, &refs, req.rows, req.cols)
+                        .map(|m| (m, t0.elapsed().as_secs_f64()));
+                    let _ = req.reply.send(res);
+                }
+            })
+            .expect("spawn pjrt-engine thread");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died before ready"))?
+            .context("starting PJRT engine")?;
+        Ok(EngineServer { tx, artifacts, join: Some(join) })
+    }
+
+    /// A fresh handle for sharing with SPMD ranks.
+    pub fn handle(&self) -> EngineHandle {
+        EngineHandle { tx: Mutex::new(self.tx.clone()), artifacts: self.artifacts.clone() }
+    }
+}
+
+impl Drop for EngineServer {
+    fn drop(&mut self) {
+        // Close the channel so the server loop exits, then join.
+        let (dummy_tx, _) = mpsc::channel();
+        drop(std::mem::replace(&mut self.tx, dummy_tx));
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::gemm;
+    use crate::testing::assert_allclose;
+
+    fn server() -> Option<EngineServer> {
+        match EngineServer::start_default() {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("skipping PJRT test (no artifacts): {e:#}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn pjrt_matmul_matches_native() {
+        let Some(srv) = server() else { return };
+        let h = srv.handle();
+        let a = Mat::random(32, 32, 1);
+        let b = Mat::random(32, 32, 2);
+        let (got, secs) = h.matmul(a.clone(), b.clone()).unwrap();
+        let want = gemm::matmul(&a, &b);
+        assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+        assert!(secs > 0.0);
+    }
+
+    #[test]
+    fn pjrt_matmul_acc_matches_native() {
+        let Some(srv) = server() else { return };
+        let h = srv.handle();
+        let c = Mat::random(32, 32, 3);
+        let a = Mat::random(32, 32, 4);
+        let b = Mat::random(32, 32, 5);
+        let (got, _) = h.matmul_acc(c.clone(), a.clone(), b.clone()).unwrap();
+        let mut want = c;
+        gemm::matmul_acc_into(&mut want, &a, &b);
+        assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn pjrt_fw_update_matches_native() {
+        let Some(srv) = server() else { return };
+        let h = srv.handle();
+        let d = Mat::random(32, 32, 7);
+        let ik = Mat::random(1, 32, 8);
+        let kj = Mat::random(32, 1, 9);
+        let (got, _) = h.fw_update(d.clone(), ik.clone(), kj.clone()).unwrap();
+        let mut want = d;
+        gemm::fw_update_into(&mut want, ik.row(0), &kj.col(0));
+        assert_allclose(&got.data, &want.data, 1e-5, 1e-6);
+    }
+
+    #[test]
+    fn handle_usable_from_many_threads() {
+        let Some(srv) = server() else { return };
+        let h = std::sync::Arc::new(srv.handle());
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let h = h.clone();
+                s.spawn(move || {
+                    let a = Mat::random(32, 32, t);
+                    let b = Mat::eye(32);
+                    let (got, _) = h.matmul(a.clone(), b).unwrap();
+                    assert_allclose(&got.data, &a.data, 1e-5, 1e-6);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn missing_artifact_errors_cleanly() {
+        let Some(srv) = server() else { return };
+        let h = srv.handle();
+        let a = Mat::random(17, 17, 1); // 17 is not an artifact size
+        let r = h.matmul(a.clone(), a);
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT artifacts (HLO text lowered from JAX/Pallas)
+//! and execute them from the rank hot path.
+//!
+//! Architecture note: the `xla` crate's `PjRtClient` is `Rc`-based
+//! (`!Send`), so the client lives on a dedicated **device-server thread**
+//! ([`engine::EngineServer`]) and ranks talk to it through a channel RPC
+//! ([`engine::EngineHandle`]) — the same shape as a per-node accelerator
+//! queue.  Python never runs here; artifacts were produced once by
+//! `make artifacts`.
+
+pub mod artifacts;
+pub mod compute;
+pub mod engine;

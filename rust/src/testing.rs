@@ -1,0 +1,138 @@
+//! In-tree test/bench support: deterministic RNG and a tiny property-based
+//! testing harness.
+//!
+//! The image's crate cache has neither `proptest` nor `rand`, so this module
+//! provides the minimum machinery the test suite needs: a fast, seedable
+//! xorshift generator and a [`prop_check`] driver that runs a closure over
+//! many generated cases and reports the failing seed (so failures are
+//! reproducible by construction).
+
+/// xorshift64* — tiny, fast, good-enough statistical quality for test-case
+/// generation and synthetic workloads (not cryptographic).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Seeded constructor; seed 0 is remapped (xorshift fixed point).
+    pub fn new(seed: u64) -> Self {
+        Rng { state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed } }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in `[0, n)`. `n` must be > 0.
+    pub fn gen_range(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    pub fn gen_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn gen_f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.gen_f32() * (hi - lo)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.gen_range(xs.len())]
+    }
+
+    pub fn gen_bool(&mut self, p_true: f64) -> bool {
+        self.gen_f64() < p_true
+    }
+}
+
+/// Run `f` over `cases` generated cases. Each case gets an [`Rng`] derived
+/// from a fixed base seed + case index; on panic the failing seed is
+/// reported so the case can be replayed with `Rng::new(seed)`.
+pub fn prop_check<F: Fn(&mut Rng)>(name: &str, cases: u64, f: F) {
+    let base_seed: u64 = 0xF00_BA5;
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9));
+        let mut rng = Rng::new(seed);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = res {
+            panic!("property '{name}' failed on case {i} (seed={seed:#x}): {e:?}");
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close (abs + rel tolerance).
+pub fn assert_allclose(got: &[f32], want: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= tol,
+            "mismatch at {i}: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_range_bounds() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let v = r.gen_range(13);
+            assert!(v < 13);
+            let f = r.gen_f32();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn rng_distribution_roughly_uniform() {
+        let mut r = Rng::new(99);
+        let mut buckets = [0usize; 8];
+        for _ in 0..80_000 {
+            buckets[r.gen_range(8)] += 1;
+        }
+        for &b in &buckets {
+            assert!((8_000..12_000).contains(&b), "bucket count {b} out of range");
+        }
+    }
+
+    #[test]
+    fn allclose_passes_and_fails() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-6);
+        let r = std::panic::catch_unwind(|| assert_allclose(&[1.0], &[2.0], 1e-5, 1e-6));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn prop_check_reports_seed() {
+        let r = std::panic::catch_unwind(|| prop_check("always-fails", 1, |_| panic!("boom")));
+        assert!(r.is_err());
+    }
+}

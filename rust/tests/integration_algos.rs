@@ -1,0 +1,219 @@
+//! Cross-module integration: the paper's algorithms against sequential
+//! oracles, across grid shapes, modes, and compute paths (incl. PJRT
+//! when artifacts are present).
+
+use std::sync::Arc;
+
+use foopar::algos::{apsp_squaring, dns_baseline, floyd_warshall, mmm_dns, mmm_generic, seq};
+use foopar::comm::backend::BackendProfile;
+use foopar::comm::cost::CostParams;
+use foopar::config::MachineConfig;
+use foopar::graph::{floyd_warshall_seq, Graph};
+use foopar::matrix::block::BlockSource;
+use foopar::matrix::gemm::INF;
+use foopar::runtime::compute::Compute;
+use foopar::runtime::engine::EngineServer;
+use foopar::spmd;
+use foopar::testing::{assert_allclose, prop_check, Rng};
+
+fn fixed() -> BackendProfile {
+    BackendProfile::openmpi_fixed()
+}
+
+#[test]
+fn dns_random_shapes_match_oracle() {
+    prop_check("dns vs oracle", 8, |rng: &mut Rng| {
+        let q = *rng.choose(&[1usize, 2, 3]);
+        let b = *rng.choose(&[4usize, 8, 16]);
+        let a = BlockSource::real(b, rng.next_u64());
+        let bm = BlockSource::real(b, rng.next_u64());
+        let res = spmd::run(q * q * q, fixed(), CostParams::free(), |ctx| {
+            mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &bm)
+        });
+        let c = mmm_dns::collect_c(&res.results, q, b);
+        let want = seq::matmul_seq(&a.assemble(q), &bm.assemble(q));
+        assert_allclose(&c.data, &want.data, 1e-3, 1e-4);
+    });
+}
+
+#[test]
+fn all_three_mmm_algorithms_agree() {
+    prop_check("dns == generic == baseline", 6, |rng: &mut Rng| {
+        let q = *rng.choose(&[2usize, 3]);
+        let b = 8;
+        let a = BlockSource::real(b, rng.next_u64());
+        let bm = BlockSource::real(b, rng.next_u64());
+        let p = q * q * q;
+        let dns = spmd::run(p, fixed(), CostParams::free(), |ctx| {
+            mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &bm)
+        });
+        let gen = spmd::run(p, fixed(), CostParams::free(), |ctx| {
+            mmm_generic::mmm_generic(ctx, &Compute::Native, q, &a, &bm)
+        });
+        let base = spmd::run(p, fixed(), CostParams::free(), |ctx| {
+            dns_baseline::dns_baseline(ctx, &Compute::Native, q, &a, &bm)
+        });
+        let c1 = mmm_dns::collect_c(&dns.results, q, b);
+        let c2 = mmm_generic::collect_c(&gen.results, q, b);
+        let c3 = dns_baseline::collect_c(&base.results, q, b);
+        assert_allclose(&c1.data, &c2.data, 1e-5, 1e-6);
+        assert_allclose(&c1.data, &c3.data, 1e-5, 1e-6);
+    });
+}
+
+#[test]
+fn fw_random_graphs_match_oracle() {
+    prop_check("fw par vs seq", 8, |rng: &mut Rng| {
+        let q = *rng.choose(&[1usize, 2, 4]);
+        let b = *rng.choose(&[4usize, 8]);
+        let n = q * b;
+        let density = rng.gen_f64();
+        let seed = rng.next_u64();
+        let src = floyd_warshall::FwSource::Real { n, density, seed };
+        let res = spmd::run(q * q, fixed(), CostParams::free(), |ctx| {
+            floyd_warshall::floyd_warshall_par(ctx, &Compute::Native, q, &src)
+        });
+        let d = floyd_warshall::collect_d(&res.results, q, b);
+        let want = floyd_warshall_seq(&Graph::random(n, density, seed));
+        assert_allclose(&d.data, &want.data, 1e-3, 1e-3);
+    });
+}
+
+#[test]
+fn squaring_and_fw_agree_on_random_graphs() {
+    prop_check("squaring vs fw", 6, |rng: &mut Rng| {
+        let q = 2;
+        let n = 16;
+        let src = floyd_warshall::FwSource::Real {
+            n,
+            density: 0.2 + rng.gen_f64() * 0.6,
+            seed: rng.next_u64(),
+        };
+        let sq = spmd::run(4, fixed(), CostParams::free(), |ctx| {
+            apsp_squaring::apsp_squaring_par(ctx, &Compute::Native, q, &src)
+        });
+        let fw = spmd::run(4, fixed(), CostParams::free(), |ctx| {
+            floyd_warshall::floyd_warshall_par(ctx, &Compute::Native, q, &src)
+        });
+        let a = apsp_squaring::saturate(apsp_squaring::collect_d(&sq.results, q, n / q));
+        let b = floyd_warshall::collect_d(&fw.results, q, n / q);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            if *x >= INF || *y >= INF {
+                assert!(*x >= INF && *y >= INF);
+            } else {
+                assert!((x - y).abs() <= 1e-3);
+            }
+        }
+    });
+}
+
+#[test]
+fn pjrt_full_stack_mmm() {
+    // The end-to-end three-layer check: rust coordinator → DistSeq/Grid →
+    // PJRT executes the AOT Pallas GEMM per block.
+    let Ok(srv) = EngineServer::start_default() else {
+        eprintln!("skipping (run `make artifacts`)");
+        return;
+    };
+    let comp = Compute::Pjrt(Arc::new(srv.handle()));
+    let q = 2;
+    let b = 32; // artifact size
+    let a = BlockSource::real(b, 77);
+    let bm = BlockSource::real(b, 78);
+    let res = spmd::run(8, fixed(), MachineConfig::local().cost(), |ctx| {
+        mmm_dns::mmm_dns(ctx, &comp, q, &a, &bm)
+    });
+    let c = mmm_dns::collect_c(&res.results, q, b);
+    let want = seq::matmul_seq(&a.assemble(q), &bm.assemble(q));
+    assert_allclose(&c.data, &want.data, 1e-3, 1e-4);
+    // PJRT compute time was charged to the clocks
+    assert!(res.t_parallel > 0.0);
+}
+
+#[test]
+fn pjrt_full_stack_fw() {
+    let Ok(srv) = EngineServer::start_default() else {
+        eprintln!("skipping (run `make artifacts`)");
+        return;
+    };
+    let comp = Compute::Pjrt(Arc::new(srv.handle()));
+    let q = 2;
+    let n = 64; // blocks of 32 → fw_update_b32 artifact
+    let src = floyd_warshall::FwSource::Real { n, density: 0.3, seed: 5 };
+    let res = spmd::run(4, fixed(), MachineConfig::local().cost(), |ctx| {
+        floyd_warshall::floyd_warshall_par(ctx, &comp, q, &src)
+    });
+    let d = floyd_warshall::collect_d(&res.results, q, n / q);
+    let want = floyd_warshall_seq(&Graph::random(n, 0.3, 5));
+    assert_allclose(&d.data, &want.data, 1e-3, 1e-3);
+}
+
+#[test]
+fn modeled_and_real_dns_have_same_message_pattern() {
+    // the cost model's core soundness property: proxies travel exactly
+    // like real blocks (same msgs, same bytes)
+    let q = 2;
+    let b = 16;
+    let real = spmd::run(8, fixed(), CostParams::qdr_infiniband(), |ctx| {
+        let a = BlockSource::real(b, 1);
+        let bm = BlockSource::real(b, 2);
+        mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &bm);
+    });
+    let modeled = spmd::run(8, fixed(), CostParams::qdr_infiniband(), |ctx| {
+        let a = BlockSource::proxy(b, 1);
+        let bm = BlockSource::proxy(b, 2);
+        mmm_dns::mmm_dns(ctx, &Compute::Modeled { rate: 1e9 }, q, &a, &bm);
+    });
+    for (r, m) in real.metrics.iter().zip(&modeled.metrics) {
+        assert_eq!(r.msgs_sent, m.msgs_sent);
+        assert_eq!(r.bytes_sent, m.bytes_sent);
+    }
+}
+
+#[test]
+fn generic_pays_more_virtual_time_than_dns_at_scale() {
+    // §4.2.1 vs §4.3: same problem, the ∀-loop version is slower
+    let q = 4;
+    let b = 256;
+    let a = BlockSource::proxy(b, 1);
+    let bm = BlockSource::proxy(b, 2);
+    let comp = Compute::Modeled { rate: 1e10 };
+    let machine = CostParams::qdr_infiniband();
+    let dns = spmd::run(64, fixed(), machine, |ctx| {
+        mmm_dns::mmm_dns(ctx, &comp, q, &a, &bm).t_local
+    });
+    let gen = spmd::run(64, fixed(), machine, |ctx| {
+        mmm_generic::mmm_generic(ctx, &comp, q, &a, &bm).t_local
+    });
+    assert!(
+        gen.t_parallel > dns.t_parallel,
+        "generic {} !> dns {}",
+        gen.t_parallel,
+        dns.t_parallel
+    );
+}
+
+#[test]
+fn wall_clock_speedup_with_real_threads() {
+    // real mode actually runs in parallel on the machine: the wall time
+    // of p=8 must beat 8x the single-block time substantially (weak
+    // check to stay robust on loaded CI boxes)
+    let q = 2;
+    let b = 128;
+    let a = BlockSource::real(b, 1);
+    let bm = BlockSource::real(b, 2);
+    let t0 = std::time::Instant::now();
+    let _ = seq::matmul_seq(&a.assemble(q), &bm.assemble(q));
+    let t_seq = t0.elapsed();
+    let run = spmd::run(8, fixed(), CostParams::free(), |ctx| {
+        mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &bm)
+    });
+    // 8 ranks compute 8 sub-products of (n/2)³ = n³/8 each in parallel +
+    // reduction; wall should be well under the sequential time
+    assert!(
+        run.wall < t_seq * 3,
+        "parallel wall {:?} vs seq {:?}",
+        run.wall,
+        t_seq
+    );
+}

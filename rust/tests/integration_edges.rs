@@ -1,0 +1,146 @@
+//! Edge cases and failure injection: the framework must degrade loudly
+//! and informatively, never silently.
+
+use foopar::algos::{cannon, floyd_warshall, mmm_dns};
+use foopar::comm::backend::BackendProfile;
+use foopar::comm::cost::CostParams;
+use foopar::data::dseq::DistSeq;
+use foopar::data::dvar::DistVar;
+use foopar::matrix::block::BlockSource;
+use foopar::runtime::compute::Compute;
+use foopar::spmd;
+
+fn fixed() -> BackendProfile {
+    BackendProfile::openmpi_fixed()
+}
+
+#[test]
+fn single_rank_world_everything_degenerates_gracefully() {
+    // p = 1: every collective is the identity; no messages at all
+    let res = spmd::run(1, fixed(), CostParams::qdr_infiniband(), |ctx| {
+        let s = DistSeq::range(ctx, 1, |i| i as i64 + 5);
+        let r = s.map_d(|v| v * 2).all_reduce_d(|a, b| a + b);
+        assert_eq!(r, Some(10));
+        let v = DistVar::new(ctx, 0, || 3u64);
+        assert_eq!(v.read(), Some(3));
+        let a = BlockSource::real(8, 1);
+        let b = BlockSource::real(8, 2);
+        mmm_dns::mmm_dns(ctx, &Compute::Native, 1, &a, &b)
+    });
+    assert_eq!(res.metrics[0].msgs_sent, 0);
+    assert!(res.results[0].c_block.is_some());
+}
+
+#[test]
+fn recv_type_mismatch_panics_with_type_name() {
+    let r = std::panic::catch_unwind(|| {
+        spmd::run(2, fixed(), CostParams::free(), |ctx| {
+            if ctx.rank == 0 {
+                ctx.send(1, 7, 123u64);
+            } else {
+                // wrong type on purpose
+                let _: String = ctx.recv(0, 7);
+            }
+        });
+    });
+    let msg = format!(
+        "{:?}",
+        r.unwrap_err().downcast_ref::<String>().cloned().unwrap_or_default()
+    );
+    assert!(msg.contains("type mismatch"), "{msg}");
+    assert!(msg.contains("String"), "{msg}");
+}
+
+#[test]
+fn zero_byte_messages_cost_only_ts() {
+    let res = spmd::run(2, fixed(), CostParams::new(1.0, 1e30), |ctx| {
+        // () has byte_size 0: astronomically large tw must not matter
+        if ctx.rank == 0 {
+            ctx.send(1, 1, ());
+        } else {
+            let () = ctx.recv(0, 1);
+        }
+        ctx.now()
+    });
+    assert!(res.t_parallel <= 2.0 + 1e-9, "{}", res.t_parallel);
+}
+
+#[test]
+fn empty_density_graph_fw_still_correct() {
+    let src = floyd_warshall::FwSource::Real { n: 8, density: 0.0, seed: 1 };
+    let res = spmd::run(4, fixed(), CostParams::free(), |ctx| {
+        floyd_warshall::floyd_warshall_par(ctx, &Compute::Native, 2, &src)
+    });
+    let d = floyd_warshall::collect_d(&res.results, 2, 4);
+    for i in 0..8 {
+        for j in 0..8 {
+            if i == j {
+                assert_eq!(d.at(i, j), 0.0);
+            } else {
+                assert!(d.at(i, j) >= foopar::matrix::gemm::INF);
+            }
+        }
+    }
+}
+
+#[test]
+fn cannon_q1_is_local_multiply() {
+    let a = BlockSource::real(16, 1);
+    let b = BlockSource::real(16, 2);
+    let res = spmd::run(1, fixed(), CostParams::free(), |ctx| {
+        cannon::mmm_cannon(ctx, &Compute::Native, 1, &a, &b)
+    });
+    assert_eq!(res.metrics[0].msgs_sent, 0);
+    let c = cannon::collect_c(&res.results, 1, 16);
+    let want = foopar::algos::seq::matmul_seq(&a.assemble(1), &b.assemble(1));
+    assert!(c.max_abs_diff(&want) < 1e-4);
+}
+
+#[test]
+fn distvar_chain_read_set_move() {
+    let res = spmd::run(6, fixed(), CostParams::free(), |ctx| {
+        let mut v = DistVar::new(ctx, 0, || 1u64);
+        for owner in 1..4 {
+            v.move_to(owner);
+            v.set(|old| old.unwrap() * 10 + owner as u64);
+        }
+        v.read()
+    });
+    // 1 -> 11 -> 112 -> 1123
+    assert!(res.results.iter().all(|r| *r == Some(1123)));
+}
+
+#[test]
+fn mixed_collectives_and_pool_reuse_many_worlds() {
+    // hammer the pool with alternating world sizes and op mixes — no
+    // crosstalk between consecutive SPMD worlds sharing workers
+    for round in 0..10u64 {
+        let p = [2usize, 7, 16, 5][round as usize % 4];
+        let res = spmd::run(p, fixed(), CostParams::free(), move |ctx| {
+            let s = DistSeq::range(ctx, ctx.world, move |i| i as u64 + round);
+            s.scan_d(|a, b| a + b).all_gather_d()
+        });
+        let expect: Vec<u64> = (0..p as u64)
+            .scan(0, |acc, i| {
+                *acc += i + round;
+                Some(*acc)
+            })
+            .collect();
+        for r in &res.results {
+            assert_eq!(r.as_ref(), Some(&expect), "round {round} p={p}");
+        }
+    }
+}
+
+#[test]
+fn metrics_account_every_byte() {
+    // global conservation: total bytes sent == total bytes received
+    let res = spmd::run(8, fixed(), CostParams::qdr_infiniband(), |ctx| {
+        let s = DistSeq::range(ctx, ctx.world, |i| vec![i as f32; 100]);
+        let _ = s.all_gather_d();
+    });
+    let sent: u64 = res.metrics.iter().map(|m| m.bytes_sent).sum();
+    let recv: u64 = res.metrics.iter().map(|m| m.bytes_recv).sum();
+    assert_eq!(sent, recv);
+    assert!(sent > 0);
+}

@@ -1,0 +1,137 @@
+//! Smoke + shape tests for the experiment drivers (Table 1, Fig. 5,
+//! isoefficiency, overhead): every reported quantity must exist, be
+//! finite, and satisfy the paper's qualitative claims.
+
+use foopar::comm::backend::BackendProfile;
+use foopar::config::MachineConfig;
+use foopar::experiments::{fig5, isoeff, overhead, table1};
+
+#[test]
+fn table1_all_ops_present_and_sane() {
+    let m = MachineConfig::carver();
+    let rows = table1::measure_point(&m, 8, 64 << 10);
+    let ops: Vec<&str> = rows.iter().map(|r| r.op).collect();
+    for op in ["mapD", "zipWithD", "reduceD", "shiftD", "allToAllD", "allGatherD", "apply"] {
+        assert!(ops.contains(&op), "missing {op}");
+    }
+    for r in &rows {
+        assert!(r.measured.is_finite() && r.measured >= 0.0);
+    }
+}
+
+#[test]
+fn table1_ordering_matches_theory() {
+    // at fixed (p, m): shift < apply ≤ reduce < allgather (ring)
+    let m = MachineConfig::carver();
+    let rows = table1::measure_point(&m, 32, 256 << 10);
+    let get = |op: &str| rows.iter().find(|r| r.op == op).unwrap().measured;
+    assert!(get("shiftD") < get("apply"));
+    assert!(get("apply") <= get("reduceD") + 1e-12);
+    assert!(get("reduceD") < get("allGatherD"));
+}
+
+#[test]
+fn fig5_carver_sweep_shape() {
+    let m = MachineConfig::carver();
+    let rows = fig5::sweep(&m, true);
+    // full grid present
+    assert!(rows.iter().filter(|r| r.algo == "foopar-dns").count() >= 32);
+    assert!(rows.iter().any(|r| r.algo == "c-baseline"));
+    // efficiency monotone in n at p=512
+    let e = |n: usize| {
+        rows.iter()
+            .find(|r| r.algo == "foopar-dns" && r.n == n && r.p == 512)
+            .unwrap()
+            .efficiency
+    };
+    assert!(e(10_080) < e(20_160));
+    assert!(e(20_160) < e(40_320));
+    // TFlop/s at the headline point is in the paper's ballpark (4.84)
+    let hl = rows
+        .iter()
+        .find(|r| r.algo == "foopar-dns" && r.n == 40_320 && r.p == 512)
+        .unwrap();
+    assert!(
+        (3.5..6.0).contains(&hl.tflops),
+        "headline TFlop/s {} out of range",
+        hl.tflops
+    );
+}
+
+#[test]
+fn fig5_horseshoe_backend_ordering() {
+    let m = MachineConfig::horseshoe6();
+    let rows = fig5::sweep(&m, false);
+    // at the smallest n and largest p, the paper's ordering must hold:
+    // tree-reduce backends above linear-reduce backends
+    let e = |backend: &str| {
+        rows.iter()
+            .find(|r| r.backend == backend && r.n == 2_520 && r.p == 512)
+            .map(|r| r.efficiency)
+            .unwrap()
+    };
+    let fixed = e("openmpi-fixed");
+    let stock = e("openmpi-stock");
+    let mpj = e("mpj-express");
+    let fast = e("fastmpj");
+    assert!(fixed > stock, "fixed {fixed} !> stock {stock}");
+    assert!(stock > mpj, "stock {stock} !> mpj {mpj}");
+    assert!(fixed > fast, "fixed {fixed} !> fastmpj {fast}");
+    // and the drop must be visible (several efficiency points) for the
+    // daemon-mode backend
+    assert!(mpj < fixed - 0.03, "mpj {mpj} not visibly below fixed {fixed}");
+}
+
+#[test]
+fn headline_matches_paper() {
+    let (row, vs_peak) = fig5::headline(&MachineConfig::carver());
+    // paper §6: 93.7% of empirical, 88.8% of theoretical peak
+    assert!((row.efficiency - 0.937).abs() < 0.03, "empirical {}", row.efficiency);
+    assert!((vs_peak - 0.888).abs() < 0.03, "theoretical {vs_peak}");
+}
+
+#[test]
+fn isoeff_curves_flat_for_all_algorithms() {
+    let m = MachineConfig::carver();
+    for algo in [isoeff::Algo::Dns, isoeff::Algo::Fw] {
+        let rows = isoeff::iso_curve(&m, algo);
+        assert!(rows.len() >= 3, "{}: too few points", algo.name());
+        for r in &rows {
+            assert!(
+                (r.measured_eff - isoeff::TARGET).abs() < 0.2,
+                "{} p={}: E={:.3}",
+                algo.name(),
+                r.p,
+                r.measured_eff
+            );
+        }
+    }
+}
+
+#[test]
+fn isoeff_problem_growth_ordering() {
+    // W(p) along the iso-curve grows faster for generic than for DNS
+    let m = MachineConfig::carver();
+    let gen = isoeff::iso_curve(&m, isoeff::Algo::Generic);
+    let dns = isoeff::iso_curve(&m, isoeff::Algo::Dns);
+    let g_last = gen.last().unwrap();
+    let d_last = dns.iter().find(|r| r.p == g_last.p);
+    if let Some(d) = d_last {
+        assert!(g_last.w >= d.w);
+    }
+}
+
+#[test]
+fn overhead_small_and_pattern_identical() {
+    let m = MachineConfig::carver();
+    let rows = overhead::sweep(&m);
+    for r in &rows {
+        assert!(
+            r.overhead.abs() < 0.05,
+            "p={}: overhead {:.2}%",
+            r.p,
+            r.overhead * 100.0
+        );
+        assert_eq!(r.msg_delta, 0, "p={}: framework sent extra messages", r.p);
+    }
+}
