@@ -6,7 +6,9 @@
 //!
 //! Run with:  cargo run --release --example backend_compare
 
-use foopar::comm::backend::BackendProfile;
+use std::sync::Arc;
+
+use foopar::comm::backend::{registry, Backend, BackendProfile};
 use foopar::config::MachineConfig;
 use foopar::experiments::fig5;
 
@@ -19,12 +21,13 @@ fn main() {
         machine.rate / 1e9
     );
     println!("{:>14} {:>6} {:>10} {:>8}", "backend", "p", "T_P (s)", "E");
-    for backend in BackendProfile::all() {
+    for profile in BackendProfile::all() {
+        let backend = registry::by_name(profile.name).expect("built-in backend registered");
         for p in [8usize, 64, 216, 512] {
-            let row = fig5::run_point(&machine, backend, n, p, false);
+            let row = fig5::run_point(&machine, &backend, n, p, false);
             println!(
                 "{:>14} {:>6} {:>10.3} {:>7.1}%",
-                backend.name,
+                backend.name(),
                 p,
                 row.t_parallel,
                 row.efficiency * 100.0
@@ -34,9 +37,10 @@ fn main() {
 
     // The crossover claim: at p=512 the tree-reduce backend must beat the
     // linear-reduce ones.
-    let fixed = fig5::run_point(&machine, BackendProfile::openmpi_fixed(), n, 512, false);
-    let stock = fig5::run_point(&machine, BackendProfile::openmpi_stock(), n, 512, false);
-    let mpj = fig5::run_point(&machine, BackendProfile::mpj_express(), n, 512, false);
+    let arc = |b: BackendProfile| -> Arc<dyn Backend> { Arc::new(b) };
+    let fixed = fig5::run_point(&machine, &arc(BackendProfile::openmpi_fixed()), n, 512, false);
+    let stock = fig5::run_point(&machine, &arc(BackendProfile::openmpi_stock()), n, 512, false);
+    let mpj = fig5::run_point(&machine, &arc(BackendProfile::mpj_express()), n, 512, false);
     assert!(fixed.efficiency > stock.efficiency);
     assert!(stock.efficiency > mpj.efficiency); // mpj adds serialization costs
     println!(

@@ -8,12 +8,11 @@ use std::sync::Arc;
 
 use foopar::algos::{apsp_squaring, floyd_warshall, seq};
 use foopar::analysis;
-use foopar::comm::backend::BackendProfile;
 use foopar::config::MachineConfig;
 use foopar::graph::{floyd_warshall_seq, Graph};
 use foopar::runtime::compute::Compute;
 use foopar::runtime::engine::EngineServer;
-use foopar::spmd;
+use foopar::Runtime;
 
 fn main() {
     let q = 2;
@@ -34,14 +33,16 @@ fn main() {
         }
     };
 
+    let local = Runtime::builder()
+        .world(q * q)
+        .backend("shmem")
+        .machine("local")
+        .build()
+        .expect("floyd_warshall runtime");
+
     // ---------- Algorithm 3 ----------
     println!("Floyd-Warshall (Alg. 3): n={n}, p={}, path: {path}", q * q);
-    let res = spmd::run(
-        q * q,
-        BackendProfile::shmem(),
-        MachineConfig::local().cost(),
-        |ctx| floyd_warshall::floyd_warshall_par(ctx, &comp, q, &src),
-    );
+    let res = local.run(|ctx| floyd_warshall::floyd_warshall_par(ctx, &comp, q, &src));
     let d = floyd_warshall::collect_d(&res.results, q, n / q);
     let want = floyd_warshall_seq(&Graph::random(n, density, seed));
     println!("  verified vs sequential: max|Δ| = {:.2e}", d.max_abs_diff(&want));
@@ -49,12 +50,7 @@ fn main() {
 
     // ---------- repeated squaring extension ----------
     println!("APSP by min-plus squaring (extension): n={n}, p={}", q * q);
-    let res2 = spmd::run(
-        q * q,
-        BackendProfile::shmem(),
-        MachineConfig::local().cost(),
-        |ctx| apsp_squaring::apsp_squaring_par(ctx, &comp, q, &src),
-    );
+    let res2 = local.run(|ctx| apsp_squaring::apsp_squaring_par(ctx, &comp, q, &src));
     let d2 = apsp_squaring::saturate(apsp_squaring::collect_d(&res2.results, q, n / q));
     println!("  verified vs sequential: max|Δ| = {:.2e}", d2.max_abs_diff(&want));
     assert!(d2.max_abs_diff(&want) < 1e-2);
@@ -70,9 +66,11 @@ fn main() {
         let qq = (p as f64).sqrt() as usize;
         let msrc = floyd_warshall::FwSource::Proxy { n: 8192 };
         let comp = Compute::Modeled { rate: machine.rate };
-        let r = spmd::run(p, BackendProfile::openmpi_fixed(), machine.cost(), |ctx| {
-            floyd_warshall::floyd_warshall_par(ctx, &comp, qq, &msrc)
-        });
+        let r = Runtime::builder()
+            .world(p)
+            .machine_config(&machine)
+            .run(|ctx| floyd_warshall::floyd_warshall_par(ctx, &comp, qq, &msrc))
+            .expect("floyd_warshall runtime");
         let ts = seq::fw_ts(8192, machine.rate);
         println!(
             "  p={p:>3}: T_P={:.3}s  E={:.1}%",

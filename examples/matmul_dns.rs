@@ -9,19 +9,20 @@
 //! (n = 40320, p = 512) and the Fig. 5 headline efficiency is printed.
 //!
 //! Run with:  cargo run --release --example matmul_dns
-//! (needs `make artifacts` for the PJRT path; falls back to native gemm)
+//! (needs `make artifacts` + the `pjrt` feature for the PJRT path;
+//! falls back to native gemm)
 
 use std::sync::Arc;
 
 use foopar::algos::{mmm_dns, seq};
 use foopar::analysis;
-use foopar::comm::backend::BackendProfile;
+use foopar::comm::backend::registry;
 use foopar::config::MachineConfig;
 use foopar::experiments::fig5;
 use foopar::matrix::block::BlockSource;
 use foopar::runtime::compute::Compute;
 use foopar::runtime::engine::EngineServer;
-use foopar::spmd;
+use foopar::Runtime;
 
 fn main() {
     // ---------- real mode: q=2 grid, 64x64 blocks, PJRT kernels ----------
@@ -43,12 +44,12 @@ fn main() {
 
     let a = BlockSource::real(b, 0xA);
     let bm = BlockSource::real(b, 0xB);
-    let res = spmd::run(
-        q * q * q,
-        BackendProfile::shmem(),
-        MachineConfig::local().cost(),
-        |ctx| mmm_dns::mmm_dns(ctx, &comp, q, &a, &bm),
-    );
+    let res = Runtime::builder()
+        .world(q * q * q)
+        .backend("shmem")
+        .machine("local")
+        .run(|ctx| mmm_dns::mmm_dns(ctx, &comp, q, &a, &bm))
+        .expect("matmul_dns runtime");
     let c = mmm_dns::collect_c(&res.results, q, b);
     let want = seq::matmul_seq(&a.assemble(q), &bm.assemble(q));
     let diff = c.max_abs_diff(&want);
@@ -73,8 +74,9 @@ fn main() {
 
     // speedup curve snippet
     println!("\nspeedup at n=20160 (modeled, Carver):");
+    let fixed = registry::by_name("openmpi-fixed").expect("built-in backend");
     for p in [8usize, 64, 512] {
-        let r = fig5::run_point(&machine, BackendProfile::openmpi_fixed(), 20_160, p, false);
+        let r = fig5::run_point(&machine, &fixed, 20_160, p, false);
         let ts = analysis::ts_n3(r.n, &fig5::model(&machine));
         println!(
             "  p={p:>3}: T_P={:.2}s  S={:.1}  E={:.1}%",

@@ -14,10 +14,8 @@
 //!
 //! Run with:  cargo run --release --example popcount
 
-use foopar::comm::backend::BackendProfile;
-use foopar::config::MachineConfig;
 use foopar::data::dseq::DistSeq;
-use foopar::spmd;
+use foopar::Runtime;
 
 fn ones(i: usize) -> u32 {
     (i as u32).count_ones() // i.toBinaryString.count(_ == '1')
@@ -25,11 +23,11 @@ fn ones(i: usize) -> u32 {
 
 fn main() {
     let world = 8;
-    let res = spmd::run(
-        world,
-        BackendProfile::shmem(),
-        MachineConfig::local().cost(),
-        |ctx| {
+    let res = Runtime::builder()
+        .world(world)
+        .backend("shmem")
+        .machine("local")
+        .run(|ctx| {
             // val seq = 0 to worldSize - 3  (i.e. worldSize-2 elements)
             let seq = DistSeq::range(ctx, ctx.world - 2, |i| i);
             // val counts = seq mapD ones
@@ -41,8 +39,8 @@ fn main() {
             };
             println!("{}:{}", ctx.rank, shown);
             counts.into_local()
-        },
-    );
+        })
+        .expect("popcount runtime");
 
     // Fig. 3: ranks 0..worldSize-2 hold Some(popcount), the rest None.
     for (rank, c) in res.results.iter().enumerate() {

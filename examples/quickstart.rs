@@ -4,33 +4,39 @@
 //!
 //! Demonstrates the SPMD + distributed-collections style of §3: every
 //! rank runs this same code; all communication happens through group
-//! operations on `DistSeq` — no sends, no receives, no locks.
+//! operations on `DistSeq` — no sends, no receives, no locks.  The
+//! world is configured through the `Runtime` builder: pick a world
+//! size, a communication backend (by registry name), and a machine.
 
-use foopar::comm::backend::BackendProfile;
-use foopar::config::MachineConfig;
 use foopar::data::dseq::DistSeq;
-use foopar::spmd;
+use foopar::Runtime;
 
 fn main() {
     let p = 8;
-    let machine = MachineConfig::local();
 
-    // spmd::run spawns p ranks over an in-process fabric; the closure is
-    // the SPMD program.
-    let result = spmd::run(p, BackendProfile::shmem(), machine.cost(), |ctx| {
-        // A distributed sequence: element i lives on rank i (lazy: the
-        // generator runs only on the owner).
-        let seq = DistSeq::range(ctx, ctx.world, |i| (i + 1) as i64);
+    // Runtime::builder() configures the SPMD world: `world` ranks over an
+    // in-process fabric, collectives dispatched through the named
+    // backend, message costs from the named machine.  The closure is the
+    // SPMD program.
+    let result = Runtime::builder()
+        .world(p)
+        .backend("shmem")
+        .machine("local")
+        .run(|ctx| {
+            // A distributed sequence: element i lives on rank i (lazy: the
+            // generator runs only on the owner).
+            let seq = DistSeq::range(ctx, ctx.world, |i| (i + 1) as i64);
 
-        // map, then reduce with an associative operator: the classic
-        // chained functional style, fully parallel.
-        let sum_of_squares = seq.map_d(|v| v * v).all_reduce_d(|a, b| a + b);
+            // map, then reduce with an associative operator: the classic
+            // chained functional style, fully parallel.
+            let sum_of_squares = seq.map_d(|v| v * v).all_reduce_d(|a, b| a + b);
 
-        // every rank got the result (allReduce); do a rank-local check
-        let expect: i64 = (1..=ctx.world as i64).map(|v| v * v).sum();
-        assert_eq!(sum_of_squares, Some(expect));
-        sum_of_squares.unwrap()
-    });
+            // every rank got the result (allReduce); do a rank-local check
+            let expect: i64 = (1..=ctx.world as i64).map(|v| v * v).sum();
+            assert_eq!(sum_of_squares, Some(expect));
+            sum_of_squares.unwrap()
+        })
+        .expect("quickstart runtime");
 
     println!("sum of squares over {p} ranks: {}", result.results[0]);
     println!("virtual parallel time: {:.2} µs", result.t_parallel * 1e6);
@@ -39,8 +45,15 @@ fn main() {
         result.metrics.iter().map(|m| m.msgs_sent).sum::<u64>()
     );
 
-    // Second pattern: a cyclic shift pipeline (Table 1's shiftD).
-    let shifted = spmd::run(p, BackendProfile::shmem(), machine.cost(), |ctx| {
+    // Second pattern: a cyclic shift pipeline (Table 1's shiftD).  A
+    // built runtime is reusable across runs.
+    let rt = Runtime::builder()
+        .world(p)
+        .backend("shmem")
+        .machine("local")
+        .build()
+        .expect("quickstart runtime");
+    let shifted = rt.run(|ctx| {
         DistSeq::range(ctx, ctx.world, |i| i as u64)
             .shift_d(3)
             .into_local()

@@ -9,11 +9,10 @@
 
 use foopar::algos::{apsp_squaring, floyd_warshall, seq};
 use foopar::analysis;
-use foopar::comm::backend::BackendProfile;
 use foopar::config::MachineConfig;
 use foopar::metrics::render_table;
 use foopar::runtime::compute::Compute;
-use foopar::spmd;
+use foopar::Runtime;
 
 fn main() {
     let machine = MachineConfig::carver();
@@ -30,9 +29,11 @@ fn main() {
             }
             let src = floyd_warshall::FwSource::Proxy { n };
             let comp = Compute::Modeled { rate: machine.rate };
-            let r = spmd::run(p, BackendProfile::openmpi_fixed(), machine.cost(), |ctx| {
-                floyd_warshall::floyd_warshall_par(ctx, &comp, q, &src)
-            });
+            let r = Runtime::builder()
+                .world(p)
+                .machine_config(&machine)
+                .run(|ctx| floyd_warshall::floyd_warshall_par(ctx, &comp, q, &src))
+                .expect("bench runtime");
             let ts = seq::fw_ts(n, machine.rate);
             rows.push(vec![
                 n.to_string(),
@@ -55,12 +56,13 @@ fn main() {
         let n = 4_096;
         let src = floyd_warshall::FwSource::Proxy { n };
         let comp = Compute::Modeled { rate: machine.rate };
-        let fw = spmd::run(p, BackendProfile::openmpi_fixed(), machine.cost(), |ctx| {
-            floyd_warshall::floyd_warshall_par(ctx, &comp, q, &src)
-        });
-        let sq = spmd::run(p, BackendProfile::openmpi_fixed(), machine.cost(), |ctx| {
-            apsp_squaring::apsp_squaring_par(ctx, &comp, q, &src)
-        });
+        let rt = Runtime::builder()
+            .world(p)
+            .machine_config(&machine)
+            .build()
+            .expect("bench runtime");
+        let fw = rt.run(|ctx| floyd_warshall::floyd_warshall_par(ctx, &comp, q, &src));
+        let sq = rt.run(|ctx| apsp_squaring::apsp_squaring_par(ctx, &comp, q, &src));
         rows.push(vec![
             n.to_string(),
             p.to_string(),
@@ -80,9 +82,12 @@ fn main() {
     let n = 128;
     let q = 2;
     let src = floyd_warshall::FwSource::Real { n, density: 0.3, seed: 7 };
-    let r = spmd::run(4, BackendProfile::shmem(), MachineConfig::local().cost(), |ctx| {
-        floyd_warshall::floyd_warshall_par(ctx, &Compute::Native, q, &src)
-    });
+    let r = Runtime::builder()
+        .world(4)
+        .backend("shmem")
+        .machine("local")
+        .run(|ctx| floyd_warshall::floyd_warshall_par(ctx, &Compute::Native, q, &src))
+        .expect("bench runtime");
     println!(
         "\nreal-mode spot check: n={n}, p=4 — wall {:.3}s, virtual T_P {:.4}s",
         r.wall.as_secs_f64(),

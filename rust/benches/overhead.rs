@@ -9,14 +9,13 @@
 
 use foopar::algos::{cannon, mmm_dns, mmm_generic};
 use foopar::analysis;
-use foopar::comm::backend::BackendProfile;
 use foopar::comm::cost::CostParams;
 use foopar::config::MachineConfig;
 use foopar::experiments::overhead;
 use foopar::matrix::block::BlockSource;
 use foopar::metrics::render_table;
 use foopar::runtime::compute::Compute;
-use foopar::spmd;
+use foopar::Runtime;
 
 fn main() {
     let machine = MachineConfig::carver();
@@ -36,28 +35,26 @@ fn main() {
     println!("\n=== ablation: MMM decompositions at p=64, n=20160 (modeled) ===\n");
     let machine_cost = CostParams::qdr_infiniband();
     let comp = Compute::Modeled { rate: machine.rate };
-    let backend = BackendProfile::openmpi_fixed();
+    let rt = Runtime::builder()
+        .world(64)
+        .cost(machine_cost)
+        .build()
+        .expect("bench runtime");
     let n = 20_160;
     let ts = analysis::ts_n3(n, &foopar::experiments::fig5::model(&machine));
     let mut table = Vec::new();
 
     let a3 = BlockSource::proxy(n / 4, 1);
     let b3 = BlockSource::proxy(n / 4, 2);
-    let dns = spmd::run(64, backend, machine_cost, |ctx| {
-        mmm_dns::mmm_dns(ctx, &comp, 4, &a3, &b3).t_local
-    });
+    let dns = rt.run(|ctx| mmm_dns::mmm_dns(ctx, &comp, 4, &a3, &b3).t_local);
     table.push(("dns (q³=64)", dns.t_parallel));
 
-    let gen = spmd::run(64, backend, machine_cost, |ctx| {
-        mmm_generic::mmm_generic(ctx, &comp, 4, &a3, &b3).t_local
-    });
+    let gen = rt.run(|ctx| mmm_generic::mmm_generic(ctx, &comp, 4, &a3, &b3).t_local);
     table.push(("generic (q³=64)", gen.t_parallel));
 
     let a2 = BlockSource::proxy(n / 8, 1);
     let b2 = BlockSource::proxy(n / 8, 2);
-    let can = spmd::run(64, backend, machine_cost, |ctx| {
-        cannon::mmm_cannon(ctx, &comp, 8, &a2, &b2).t_local
-    });
+    let can = rt.run(|ctx| cannon::mmm_cannon(ctx, &comp, 8, &a2, &b2).t_local);
     table.push(("cannon (q²=64)", can.t_parallel));
 
     let rows: Vec<Vec<String>> = table

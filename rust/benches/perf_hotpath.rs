@@ -10,13 +10,12 @@
 
 use std::time::Instant;
 
-use foopar::comm::backend::BackendProfile;
 use foopar::comm::cost::CostParams;
 use foopar::data::dseq::DistSeq;
 use foopar::experiments::peak;
 use foopar::matrix::block::BlockSource;
 use foopar::runtime::compute::Compute;
-use foopar::spmd;
+use foopar::Runtime;
 
 fn main() {
     println!("=== perf: L3 hot paths (wall clock) ===\n");
@@ -24,7 +23,13 @@ fn main() {
     // fabric ping-pong latency
     for &iters in &[10_000usize] {
         let t0 = Instant::now();
-        spmd::run(2, BackendProfile::shmem(), CostParams::free(), |ctx| {
+        let rt = Runtime::builder()
+            .world(2)
+            .backend("shmem")
+            .cost(CostParams::free())
+            .build()
+            .expect("bench runtime");
+        rt.run(|ctx| {
             for i in 0..iters {
                 if ctx.rank == 0 {
                     ctx.send(1, i as u64, 0u8);
@@ -42,9 +47,14 @@ fn main() {
     // reduce wall cost at increasing world sizes
     for &p in &[8usize, 64, 512] {
         let reps = 20;
+        let rt = Runtime::builder()
+            .world(p)
+            .cost(CostParams::free())
+            .build()
+            .expect("bench runtime");
         let t0 = Instant::now();
         for _ in 0..reps {
-            spmd::run(p, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            rt.run(|ctx| {
                 DistSeq::range(ctx, ctx.world, |i| i as i64).reduce_d(|a, b| a + b)
             });
         }
@@ -56,16 +66,21 @@ fn main() {
     {
         let p = 64;
         let reps = 30;
+        let rt = Runtime::builder()
+            .world(p)
+            .cost(CostParams::free())
+            .build()
+            .expect("bench runtime");
         let t0 = Instant::now();
         for _ in 0..reps {
-            spmd::run(p, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            rt.run(|ctx| {
                 DistSeq::range(ctx, ctx.world, |i| i as i64).reduce_d(|a, b| a + b)
             });
         }
         let t_seq = t0.elapsed().as_secs_f64() / reps as f64;
         let t0 = Instant::now();
         for _ in 0..reps {
-            spmd::run(p, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            rt.run(|ctx| {
                 // raw binomial reduce
                 let mut acc = ctx.rank as i64;
                 let mut mask = 1usize;
@@ -99,9 +114,11 @@ fn main() {
         let a = BlockSource::proxy(5_040, 1);
         let b = BlockSource::proxy(5_040, 2);
         let comp = Compute::Modeled { rate: 1e10 };
-        spmd::run(512, BackendProfile::openmpi_fixed(), CostParams::qdr_infiniband(), |ctx| {
-            foopar::algos::mmm_dns::mmm_dns(ctx, &comp, 8, &a, &b)
-        });
+        Runtime::builder()
+            .world(512)
+            .cost(CostParams::qdr_infiniband())
+            .run(|ctx| foopar::algos::mmm_dns::mmm_dns(ctx, &comp, 8, &a, &b))
+            .expect("bench runtime");
         println!(
             "modeled DNS p=512 end-to-end: {:.1} ms wall (one fig5 point)",
             t0.elapsed().as_secs_f64() * 1e3

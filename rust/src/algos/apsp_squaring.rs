@@ -135,7 +135,7 @@ mod tests {
     use crate::comm::backend::BackendProfile;
     use crate::comm::cost::CostParams;
     use crate::graph::floyd_warshall_seq;
-    use crate::spmd::run;
+    use crate::testing::spmd_run as run;
     use crate::testing::assert_allclose;
 
     fn check(n: usize, q: usize, density: f64, seed: u64) {

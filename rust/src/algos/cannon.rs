@@ -96,7 +96,7 @@ mod tests {
     use crate::algos::seq::matmul_seq;
     use crate::comm::backend::BackendProfile;
     use crate::comm::cost::CostParams;
-    use crate::spmd::run;
+    use crate::testing::spmd_run as run;
     use crate::testing::assert_allclose;
 
     fn check(q: usize, bsz: usize, seed: u64) {

@@ -134,7 +134,7 @@ mod tests {
     use crate::comm::backend::BackendProfile;
     use crate::comm::cost::CostParams;
     use crate::graph::floyd_warshall_seq;
-    use crate::spmd::run;
+    use crate::testing::spmd_run as run;
     use crate::testing::assert_allclose;
 
     fn check_against_seq(n: usize, q: usize, density: f64, seed: u64) {

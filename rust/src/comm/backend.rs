@@ -1,4 +1,6 @@
-//! Communication backend profiles (the paper's FooPar-X configurations).
+//! Communication backends (the paper's FooPar-X configurations): the
+//! [`Backend`] trait, the name-keyed [`registry`], and the built-in
+//! [`BackendProfile`]s.
 //!
 //! §3 of the paper: a FooPar configuration is `FooPar-X-Y-Z` with X the
 //! communication module — `{OpenMPI, MPJ-Express, FastMPJ, SharedMemory}`.
@@ -14,10 +16,19 @@
 //! * FastMPJ is closed source; measured between the two —
 //!   [`BackendProfile::fastmpj`].
 //!
-//! A profile selects collective algorithms and multiplies the machine's
-//! base `CostParams`; switching backends changes **no algorithm code**,
-//! exactly the paper's portability claim.
+//! A [`Backend`] supplies (a) a strategy object implementing
+//! [`Collectives`] and (b) a shaping of the machine's base
+//! [`CostParams`]; switching backends changes **no algorithm code**,
+//! exactly the paper's portability claim.  Backends live in a global
+//! name-keyed [`registry`]: the built-ins are pre-registered, and user
+//! code can [`registry::register`] its own `Backend` implementation —
+//! with custom algorithm choices, custom cost shaping, or an entirely
+//! custom [`Collectives`] strategy — and select it by name through
+//! [`Runtime::builder`](crate::spmd::Runtime::builder).
 
+use std::sync::Arc;
+
+use super::collectives::{Collectives, StandardCollectives};
 use super::cost::CostParams;
 
 /// Which reduction algorithm a backend's `reduceD` uses.
@@ -48,7 +59,41 @@ pub enum AllGatherAlgo {
     RecursiveDoubling,
 }
 
-/// A communication backend: algorithm selection + cost multipliers.
+/// A communication backend: collective strategy + cost shaping.
+///
+/// Implementations are registered by name in the [`registry`] and
+/// selected via `Runtime::builder().backend("name")`.  The two methods
+/// mirror the paper's observation that backends differ in *algorithms*
+/// ([`Backend::collectives`]) and *software overhead*
+/// ([`Backend::cost`]).
+pub trait Backend: Send + Sync + 'static {
+    /// Registry key (and display name) of this backend.
+    fn name(&self) -> &str;
+
+    /// The collective strategy object ranks dispatch through.  Called
+    /// once per rank at SPMD launch.
+    fn collectives(&self) -> Arc<dyn Collectives>;
+
+    /// Shape the machine's base cost parameters (software start-up and
+    /// serialization overhead).  Default: the interconnect cost as-is.
+    fn cost(&self, machine: CostParams) -> CostParams {
+        machine
+    }
+
+    /// The built-in profile behind this backend, if any.  Custom
+    /// backends return `None` (the default); [`BackendProfile::by_name`]
+    /// is implemented on top of this.
+    fn profile(&self) -> Option<BackendProfile> {
+        None
+    }
+}
+
+/// A built-in backend: named algorithm selection + cost multipliers.
+///
+/// This is the declarative subset of [`Backend`] — enough to model every
+/// backend of the paper's evaluation.  For anything it cannot express
+/// (adaptive algorithm choice, topology-aware costs, a from-scratch
+/// [`Collectives`]), implement [`Backend`] directly and register it.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct BackendProfile {
     pub name: &'static str,
@@ -66,6 +111,15 @@ impl BackendProfile {
     /// Effective cost parameters on a machine with base `machine` costs.
     pub fn cost(&self, machine: CostParams) -> CostParams {
         CostParams::new(machine.ts * self.ts_factor, machine.tw * self.tw_factor)
+    }
+
+    /// The strategy set this profile selects.
+    pub fn strategies(&self) -> StandardCollectives {
+        StandardCollectives {
+            bcast: self.bcast,
+            reduce: self.reduce,
+            allgather: self.allgather,
+        }
     }
 
     /// OpenMPI java bindings with the authors' Θ(log p) reduce patch —
@@ -132,19 +186,14 @@ impl BackendProfile {
         }
     }
 
-    /// Look up a profile by name (CLI / config files).
+    /// Look up a built-in profile by name through the [`registry`].
+    /// Custom backends resolve too, but only if they expose a profile
+    /// ([`Backend::profile`]); prefer [`registry::by_name`] otherwise.
     pub fn by_name(name: &str) -> Option<Self> {
-        Some(match name {
-            "openmpi-fixed" => Self::openmpi_fixed(),
-            "openmpi-stock" => Self::openmpi_stock(),
-            "mpj-express" => Self::mpj_express(),
-            "fastmpj" => Self::fastmpj(),
-            "shmem" => Self::shmem(),
-            _ => return None,
-        })
+        registry::by_name(name).and_then(|b| b.profile())
     }
 
-    /// All built-in profiles (Fig. 5 right sweeps these).
+    /// The built-in comparison profiles (Fig. 5 right sweeps these).
     pub fn all() -> Vec<Self> {
         vec![
             Self::openmpi_fixed(),
@@ -158,6 +207,76 @@ impl BackendProfile {
 impl Default for BackendProfile {
     fn default() -> Self {
         Self::openmpi_fixed()
+    }
+}
+
+impl Backend for BackendProfile {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn collectives(&self) -> Arc<dyn Collectives> {
+        Arc::new(self.strategies())
+    }
+
+    fn cost(&self, machine: CostParams) -> CostParams {
+        // delegates to the inherent method (inherent impls win the
+        // `BackendProfile::cost` path lookup)
+        BackendProfile::cost(self, machine)
+    }
+
+    fn profile(&self) -> Option<BackendProfile> {
+        Some(*self)
+    }
+}
+
+/// The global name-keyed backend registry.
+///
+/// The five built-in profiles are pre-registered on first use;
+/// [`register`] adds (or replaces, by name) a user backend for the rest
+/// of the process.  Lookup order is registration order, so sweeps like
+/// Fig. 5's stay deterministic.
+pub mod registry {
+    use std::sync::{Mutex, OnceLock};
+
+    use super::{Arc, Backend, BackendProfile};
+
+    fn store() -> &'static Mutex<Vec<Arc<dyn Backend>>> {
+        static STORE: OnceLock<Mutex<Vec<Arc<dyn Backend>>>> = OnceLock::new();
+        STORE.get_or_init(|| {
+            let builtins: Vec<Arc<dyn Backend>> = vec![
+                Arc::new(BackendProfile::openmpi_fixed()),
+                Arc::new(BackendProfile::openmpi_stock()),
+                Arc::new(BackendProfile::mpj_express()),
+                Arc::new(BackendProfile::fastmpj()),
+                Arc::new(BackendProfile::shmem()),
+            ];
+            Mutex::new(builtins)
+        })
+    }
+
+    /// Register a backend under its [`Backend::name`], replacing any
+    /// previous backend of the same name (built-ins included).
+    pub fn register(backend: Arc<dyn Backend>) {
+        let mut s = store().lock().unwrap();
+        let name = backend.name().to_string();
+        s.retain(|b| b.name() != name);
+        s.push(backend);
+    }
+
+    /// Look a backend up by name.
+    pub fn by_name(name: &str) -> Option<Arc<dyn Backend>> {
+        store().lock().unwrap().iter().find(|b| b.name() == name).cloned()
+    }
+
+    /// All registered backends, in registration order.
+    pub fn all() -> Vec<Arc<dyn Backend>> {
+        store().lock().unwrap().clone()
+    }
+
+    /// Registered backend names, in registration order.
+    pub fn names() -> Vec<String> {
+        store().lock().unwrap().iter().map(|b| b.name().to_string()).collect()
     }
 }
 
@@ -185,5 +304,55 @@ mod tests {
         let c = BackendProfile::mpj_express().cost(m);
         assert!((c.ts - 20e-6).abs() < 1e-15);
         assert!((c.tw - 4e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn trait_cost_agrees_with_inherent_cost() {
+        let m = CostParams::new(1e-6, 1e-9);
+        for p in BackendProfile::all() {
+            let b: &dyn Backend = &p;
+            assert_eq!(b.cost(m), p.cost(m), "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn registry_preloads_builtins() {
+        for name in ["openmpi-fixed", "openmpi-stock", "mpj-express", "fastmpj", "shmem"] {
+            let b = registry::by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(b.name(), name);
+            assert!(b.profile().is_some());
+        }
+        assert!(registry::by_name("no-such-backend").is_none());
+    }
+
+    #[test]
+    fn registry_register_replace_and_list() {
+        struct Dummy;
+        impl Backend for Dummy {
+            fn name(&self) -> &str {
+                "unit-test-dummy"
+            }
+            fn collectives(&self) -> Arc<dyn super::Collectives> {
+                Arc::new(crate::comm::collectives::StandardCollectives::default())
+            }
+        }
+        registry::register(Arc::new(Dummy));
+        let got = registry::by_name("unit-test-dummy").unwrap();
+        assert_eq!(got.name(), "unit-test-dummy");
+        assert!(got.profile().is_none());
+        assert!(registry::names().iter().any(|n| n == "unit-test-dummy"));
+        // replacing by the same name keeps exactly one entry
+        registry::register(Arc::new(Dummy));
+        let count = registry::names().iter().filter(|n| *n == "unit-test-dummy").count();
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    fn profile_strategies_match_fields() {
+        let p = BackendProfile::openmpi_stock();
+        let s = p.strategies();
+        assert_eq!(s.reduce, ReduceAlgo::Linear);
+        assert_eq!(s.bcast, BcastAlgo::Binomial);
+        assert_eq!(s.allgather, AllGatherAlgo::Ring);
     }
 }

@@ -1,390 +1,174 @@
-//! Collective operations over [`Group`]s, implemented as explicit message
-//! rounds so their costs *emerge* from the fabric's virtual-time model.
+//! The pluggable collective-operations layer: the [`Collectives`] trait
+//! and the built-in [`StandardCollectives`] strategy set.
 //!
-//! | collective | algorithm | emergent cost | paper (Table 1 / §2) |
-//! |---|---|---|---|
-//! | `bcast` | binomial tree | (ts+tw·m)·⌈log p⌉ | (ts+tw·m) log p |
-//! | `bcast` | linear | (ts+tw·m)·(p−1) at root | — (naive backends) |
-//! | `reduce` | binomial tree | (ts+tw·m+T_λ)·⌈log p⌉ | log p(ts+tw·m+T_λ(m)) |
-//! | `reduce` | linear | (ts+tw·m+T_λ)·(p−1) at root | Θ(p) (stock OpenMPI-java) |
-//! | `allgather` | ring | (ts+tw·m)·(p−1) | (ts+tw·m)(p−1) |
-//! | `allgather` | recursive doubling | ts·log p + tw·m·(p−1) | ts log p + tw m(p−1) |
-//! | `alltoall` | pairwise rounds | (ts+tw·m)·(p−1) | ts log p + tw m(p−1)¹ |
-//! | `shift` | point-to-point | ts+tw·m | ts+tw·m |
-//! | `barrier` | dissemination | ts·⌈log p⌉ | — |
+//! §3 of the paper: a FooPar configuration `FooPar-X-Y-Z` varies the
+//! communication module X without touching algorithm code.  This module
+//! is the seam that makes that concrete in this reproduction:
 //!
-//! ¹ Table 1 quotes the hypercube store-and-forward bound; a pairwise
-//! exchange has the same optimal `tw·m(p−1)` term and `(p−1)·ts` instead
-//! of `ts·log p` — the Table-1 bench prints both predictions next to the
-//! measurement.
-//!
-//! The *dispatching* entry points ([`bcast`], [`reduce`], [`allgather`])
-//! pick the algorithm from the calling context's [`BackendProfile`] —
-//! switching backends changes no algorithm code (the paper's §6 point:
-//! the stock OpenMPI java bindings silently used a Θ(p) reduction).
+//! * [`Collectives`] — the object-safe interface every backend provides
+//!   (bcast, reduce, allgather, alltoall, shift, barrier, gather,
+//!   scatter, scan, allreduce) over type-erased
+//!   [`Msg`](crate::comm::message::Msg) values;
+//! * [`StandardCollectives`] — the built-in implementation, which
+//!   dispatches each operation to one of the textbook algorithms in
+//!   [`crate::comm::algorithms`] according to per-operation enum
+//!   selectors (this is how `openmpi-stock` gets its Θ(p) reduction and
+//!   `openmpi-fixed` its Θ(log p) tree, §6);
+//! * user code never calls this layer directly: the generic entry points
+//!   are methods on [`Group`](crate::comm::group::Group) (`g.reduce(…)`,
+//!   `g.bcast(…)`, …), which erase/downcast values and dispatch through
+//!   the active backend's `Arc<dyn Collectives>` held by the rank
+//!   [`Ctx`](crate::spmd::Ctx).
 //!
 //! All collectives must be called by **every member** of the group (SPMD)
 //! and by **no non-member** — distributed collections enforce this.
+//!
+//! To plug in a custom strategy set, implement this trait (the functions
+//! in [`crate::comm::algorithms`] are reusable building blocks) and
+//! return it from a [`Backend`](crate::comm::backend::Backend)
+//! registered with [`crate::comm::backend::registry`].
 
+use crate::comm::algorithms as algo;
 use crate::comm::backend::{AllGatherAlgo, BcastAlgo, ReduceAlgo};
 use crate::comm::group::Group;
-use crate::data::value::Data;
+use crate::comm::message::Msg;
 
-// ------------------------------------------------------------------ bcast
+pub use crate::comm::algorithms::ReduceFn;
 
-/// One-to-all broadcast from group rank `root`.  `value` must be `Some` at
-/// the root (others may pass `None`).  Returns the value everywhere.
-pub fn bcast<T: Data + Clone>(g: &Group, root: usize, value: Option<T>) -> T {
-    g.ctx.metrics.on_collective();
-    match g.ctx.backend.bcast {
-        BcastAlgo::Binomial => bcast_binomial(g, root, value),
-        BcastAlgo::Linear => bcast_linear(g, root, value),
+/// Collective operations over a [`Group`], type-erased so backends are
+/// swappable at runtime (`Arc<dyn Collectives>`).
+///
+/// Implementations must use the group's tag namespace
+/// ([`Group::next_tag`]) for every message round so independent groups
+/// and successive operations never cross-match, and must preserve
+/// group-rank fold order for `reduce`/`scan` (associativity is the only
+/// requirement on `op`, not commutativity).
+pub trait Collectives: Send + Sync {
+    /// One-to-all broadcast from group rank `root`.  `value` must be
+    /// `Some` at the root (others pass `None`); the payload must be
+    /// duplicable ([`Msg::cloneable`]).  Returns the value everywhere.
+    fn bcast(&self, g: &Group, root: usize, value: Option<Msg>) -> Msg;
+
+    /// All-to-one reduction delivered at group rank `root`; non-roots
+    /// get `None`.  `op(a, b)` receives `a` from the lower group rank.
+    fn reduce(&self, g: &Group, root: usize, value: Msg, op: ReduceFn<'_>) -> Option<Msg>;
+
+    /// All-to-all broadcast: everyone obtains the group-ordered vector.
+    /// The payload must be duplicable.
+    fn allgather(&self, g: &Group, value: Msg) -> Vec<Msg>;
+
+    /// Personalized all-to-all: `items[j]` goes to member `j`; entry *i*
+    /// of the result came from member *i*.
+    fn alltoall(&self, g: &Group, items: Vec<Msg>) -> Vec<Msg>;
+
+    /// Cyclic shift by `delta` group ranks.
+    fn shift(&self, g: &Group, delta: isize, value: Msg) -> Msg;
+
+    /// Synchronize all members.
+    fn barrier(&self, g: &Group);
+
+    /// All-to-one gather: root obtains the group-ordered vector.
+    fn gather(&self, g: &Group, root: usize, value: Msg) -> Option<Vec<Msg>>;
+
+    /// One-to-all scatter: root distributes `values[i]` to member i.
+    fn scatter(&self, g: &Group, root: usize, values: Option<Vec<Msg>>) -> Msg;
+
+    /// Inclusive prefix scan in group order.  Payload and `op` results
+    /// must be duplicable.
+    fn scan(&self, g: &Group, value: Msg, op: ReduceFn<'_>) -> Msg;
+
+    /// Reduce-to-rank-0 then broadcast: everyone gets the folded value.
+    /// Payload and `op` results must be duplicable.
+    fn allreduce(&self, g: &Group, value: Msg, op: ReduceFn<'_>) -> Msg {
+        let r = self.reduce(g, 0, value, op);
+        self.bcast(g, 0, r)
     }
 }
 
-/// Binomial-tree broadcast: ⌈log₂ p⌉ rounds (MPICH shape, any p).
-pub fn bcast_binomial<T: Data + Clone>(g: &Group, root: usize, value: Option<T>) -> T {
-    let p = g.size();
-    let me = g.index();
-    let tag = g.next_tag();
-    let rel = (me + p - root) % p;
-    let mut val: Option<T> = if rel == 0 {
-        Some(value.expect("bcast root must supply a value"))
-    } else {
-        None
-    };
+/// The built-in strategy set: per-operation algorithm selectors over the
+/// implementations in [`crate::comm::algorithms`].
+///
+/// A [`BackendProfile`](crate::comm::backend::BackendProfile) is exactly
+/// a named `StandardCollectives` plus cost multipliers; custom backends
+/// can construct one directly, mix individual algorithms, or implement
+/// [`Collectives`] from scratch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StandardCollectives {
+    pub bcast: BcastAlgo,
+    pub reduce: ReduceAlgo,
+    pub allgather: AllGatherAlgo,
+}
 
-    // Receive phase: wait for the parent (lowest set bit of rel).
-    let mut mask = 1usize;
-    while mask < p {
-        if rel & mask != 0 {
-            let src = (me + p - mask) % p;
-            val = Some(g.recv_from(src, tag));
-            break;
+impl Default for StandardCollectives {
+    /// Tree collectives everywhere — native MPI behaviour.
+    fn default() -> Self {
+        StandardCollectives {
+            bcast: BcastAlgo::Binomial,
+            reduce: ReduceAlgo::Binomial,
+            allgather: AllGatherAlgo::Ring,
         }
-        mask <<= 1;
     }
-    // Send phase: fan out to children below my entry mask.
-    mask >>= 1;
-    let v = val.expect("bcast: no value after receive phase");
-    while mask > 0 {
-        if rel + mask < p {
-            let dst = (me + mask) % p;
-            g.send_to(dst, tag, v.clone());
+}
+
+impl Collectives for StandardCollectives {
+    fn bcast(&self, g: &Group, root: usize, value: Option<Msg>) -> Msg {
+        match self.bcast {
+            BcastAlgo::Binomial => algo::bcast_binomial(g, root, value),
+            BcastAlgo::Linear => algo::bcast_linear(g, root, value),
         }
-        mask >>= 1;
     }
-    v
-}
 
-/// Linear broadcast: root sends p−1 sequential messages (naive backends).
-pub fn bcast_linear<T: Data + Clone>(g: &Group, root: usize, value: Option<T>) -> T {
-    let p = g.size();
-    let me = g.index();
-    let tag = g.next_tag();
-    if me == root {
-        let v = value.expect("bcast root must supply a value");
-        for i in 0..p {
-            if i != root {
-                g.send_to(i, tag, v.clone());
-            }
+    fn reduce(&self, g: &Group, root: usize, value: Msg, op: ReduceFn<'_>) -> Option<Msg> {
+        match self.reduce {
+            ReduceAlgo::Binomial => algo::reduce_binomial(g, root, value, op),
+            ReduceAlgo::Linear => algo::reduce_linear(g, root, value, op),
         }
-        v
-    } else {
-        g.recv_from(root, tag)
     }
-}
 
-// ----------------------------------------------------------------- reduce
-
-/// All-to-one reduction with associative `op`, delivered at group rank
-/// `root`.  Non-roots get `None`.  `op(a, b)` receives `a` from the lower
-/// group rank — associativity is the only requirement (paper Table 1).
-pub fn reduce<T: Data>(
-    g: &Group,
-    root: usize,
-    value: T,
-    op: impl Fn(T, T) -> T,
-) -> Option<T> {
-    g.ctx.metrics.on_collective();
-    match g.ctx.backend.reduce {
-        ReduceAlgo::Binomial => reduce_binomial(g, root, value, op),
-        ReduceAlgo::Linear => reduce_linear(g, root, value, op),
-    }
-}
-
-/// Binomial-tree reduction: ⌈log₂ p⌉ rounds.
-pub fn reduce_binomial<T: Data>(
-    g: &Group,
-    root: usize,
-    value: T,
-    op: impl Fn(T, T) -> T,
-) -> Option<T> {
-    let p = g.size();
-    let me = g.index();
-    let tag = g.next_tag();
-    let rel = (me + p - root) % p;
-    let mut acc = value;
-    let mut mask = 1usize;
-    while mask < p {
-        if rel & mask == 0 {
-            let src_rel = rel | mask;
-            if src_rel < p {
-                let src = (me + mask) % p;
-                let other: T = g.recv_from(src, tag);
-                // lower relative rank on the left keeps fold order
-                acc = op(acc, other);
-            }
-        } else {
-            let dst = (me + p - mask) % p;
-            g.send_to(dst, tag, acc);
-            return None;
-        }
-        mask <<= 1;
-    }
-    Some(acc)
-}
-
-/// Linear reduction: the root sequentially receives and folds p−1
-/// messages — the Θ(p) behaviour of the stock OpenMPI java bindings and
-/// MPJ-Express that §6 of the paper calls out.
-pub fn reduce_linear<T: Data>(
-    g: &Group,
-    root: usize,
-    value: T,
-    op: impl Fn(T, T) -> T,
-) -> Option<T> {
-    let p = g.size();
-    let me = g.index();
-    let tag = g.next_tag();
-    if me == root {
-        // Receive everything (p−1 serialized transfers at the root), then
-        // fold in group-rank order for deterministic bracketing:
-        // ((v0 ⊕ v1) ⊕ v2) ⊕ …
-        let mut vals: Vec<Option<T>> = (0..p).map(|_| None).collect();
-        vals[root] = Some(value);
-        for i in 0..p {
-            if i != root {
-                vals[i] = Some(g.recv_from(i, tag));
-            }
-        }
-        let mut it = vals.into_iter().map(Option::unwrap);
-        let first = it.next().unwrap();
-        Some(it.fold(first, &op))
-    } else {
-        g.send_to(root, tag, value);
-        None
-    }
-}
-
-// -------------------------------------------------------------- allgather
-
-/// All-to-all broadcast: every member contributes one value; everyone
-/// obtains the full group-ordered vector.
-pub fn allgather<T: Data + Clone>(g: &Group, value: T) -> Vec<T> {
-    g.ctx.metrics.on_collective();
-    match g.ctx.backend.allgather {
-        AllGatherAlgo::Ring => allgather_ring(g, value),
-        AllGatherAlgo::RecursiveDoubling => {
-            if g.size().is_power_of_two() {
-                allgather_rd(g, value)
-            } else {
-                allgather_ring(g, value)
+    fn allgather(&self, g: &Group, value: Msg) -> Vec<Msg> {
+        match self.allgather {
+            AllGatherAlgo::Ring => algo::allgather_ring(g, value),
+            AllGatherAlgo::RecursiveDoubling => {
+                if g.size().is_power_of_two() {
+                    algo::allgather_recursive_doubling(g, value)
+                } else {
+                    algo::allgather_ring(g, value)
+                }
             }
         }
     }
-}
 
-/// Ring all-gather: p−1 rounds of neighbour exchange —
-/// (ts + tw·m)(p−1), Table 1's `allGatherD` bound.
-pub fn allgather_ring<T: Data + Clone>(g: &Group, value: T) -> Vec<T> {
-    let p = g.size();
-    let me = g.index();
-    let mut out: Vec<Option<T>> = (0..p).map(|_| None).collect();
-    out[me] = Some(value.clone());
-    if p == 1 {
-        return out.into_iter().map(Option::unwrap).collect();
+    fn alltoall(&self, g: &Group, items: Vec<Msg>) -> Vec<Msg> {
+        algo::alltoall_pairwise(g, items)
     }
-    let right = (me + 1) % p;
-    let left = (me + p - 1) % p;
-    let mut cur = value;
-    for r in 0..p - 1 {
-        let tag = g.next_tag();
-        cur = g.send_recv_with(right, left, tag, cur);
-        let idx = (me + p - 1 - r) % p;
-        out[idx] = Some(cur.clone());
+
+    fn shift(&self, g: &Group, delta: isize, value: Msg) -> Msg {
+        algo::shift_cyclic(g, delta, value)
     }
-    out.into_iter().map(Option::unwrap).collect()
-}
 
-/// Recursive-doubling all-gather (power-of-two groups):
-/// ts·log p + tw·m·(p−1).
-pub fn allgather_rd<T: Data + Clone>(g: &Group, value: T) -> Vec<T> {
-    let p = g.size();
-    let me = g.index();
-    debug_assert!(p.is_power_of_two());
-    // accumulated[i] = value of group rank (base + i) for current window
-    let mut have: Vec<(usize, T)> = vec![(me, value)];
-    let mut mask = 1usize;
-    while mask < p {
-        let partner = me ^ mask;
-        let tag = g.next_tag();
-        // lower half sends first (deterministic, but eager sends make
-        // order irrelevant for progress)
-        let mine: Vec<(u64, T)> =
-            have.clone().into_iter().map(|(i, v)| (i as u64, v)).collect();
-        let theirs: Vec<(u64, T)> = g.send_recv_with(partner, partner, tag, mine);
-        have.extend(theirs.into_iter().map(|(i, v)| (i as usize, v)));
-        mask <<= 1;
+    fn barrier(&self, g: &Group) {
+        algo::barrier_dissemination(g)
     }
-    let mut out: Vec<Option<T>> = (0..p).map(|_| None).collect();
-    for (i, v) in have {
-        out[i] = Some(v);
+
+    fn gather(&self, g: &Group, root: usize, value: Msg) -> Option<Vec<Msg>> {
+        algo::gather_linear(g, root, value)
     }
-    out.into_iter().map(Option::unwrap).collect()
-}
 
-// --------------------------------------------------------------- alltoall
-
-/// Personalized all-to-all: `items[j]` is delivered to group rank `j`;
-/// returns the vector whose i-th entry came from group rank `i`.
-/// Pairwise-exchange: p−1 rounds of (ts + tw·m).
-pub fn alltoall<T: Data>(g: &Group, items: Vec<T>) -> Vec<T> {
-    g.ctx.metrics.on_collective();
-    let p = g.size();
-    let me = g.index();
-    assert_eq!(items.len(), p, "alltoall needs one item per member");
-    let mut items: Vec<Option<T>> = items.into_iter().map(Some).collect();
-    let mut out: Vec<Option<T>> = (0..p).map(|_| None).collect();
-    out[me] = items[me].take();
-    for r in 1..p {
-        let tag = g.next_tag();
-        let dst = (me + r) % p;
-        let src = (me + p - r) % p;
-        let sent = items[dst].take().expect("item already sent");
-        out[src] = Some(g.send_recv_with(dst, src, tag, sent));
+    fn scatter(&self, g: &Group, root: usize, values: Option<Vec<Msg>>) -> Msg {
+        algo::scatter_linear(g, root, values)
     }
-    out.into_iter().map(Option::unwrap).collect()
-}
 
-// ------------------------------------------------------------------ shift
-
-/// Cyclic shift by `delta`: my value goes to group rank `(me+delta) mod p`;
-/// I receive from `(me−delta) mod p`.  Cost ts + tw·m (cross-section
-/// bandwidth O(p) assumed, §2).
-pub fn shift<T: Data>(g: &Group, delta: isize, value: T) -> T {
-    g.ctx.metrics.on_collective();
-    let p = g.size() as isize;
-    let me = g.index() as isize;
-    let d = delta.rem_euclid(p);
-    if d == 0 {
-        return value;
+    fn scan(&self, g: &Group, value: Msg, op: ReduceFn<'_>) -> Msg {
+        algo::scan_hillis_steele(g, value, op)
     }
-    let tag = g.next_tag();
-    let dst = ((me + d) % p) as usize;
-    let src = ((me - d).rem_euclid(p)) as usize;
-    g.send_recv_with(dst, src, tag, value)
-}
-
-// ---------------------------------------------------------------- barrier
-
-/// Dissemination barrier: ⌈log₂ p⌉ rounds of empty messages.
-pub fn barrier(g: &Group) {
-    g.ctx.metrics.on_collective();
-    let p = g.size();
-    let me = g.index();
-    let mut round = 1usize;
-    while round < p {
-        let tag = g.next_tag();
-        let () = g.send_recv_with((me + round) % p, (me + p - round) % p, tag, ());
-        round <<= 1;
-    }
-}
-
-// ---------------------------------------------------------- gather/scatter
-
-/// All-to-one gather (linear): root obtains the group-ordered vector.
-pub fn gather<T: Data>(g: &Group, root: usize, value: T) -> Option<Vec<T>> {
-    g.ctx.metrics.on_collective();
-    let p = g.size();
-    let me = g.index();
-    let tag = g.next_tag();
-    if me == root {
-        let mut out: Vec<Option<T>> = (0..p).map(|_| None).collect();
-        out[root] = Some(value);
-        for i in 0..p {
-            if i != root {
-                out[i] = Some(g.recv_from(i, tag));
-            }
-        }
-        Some(out.into_iter().map(Option::unwrap).collect())
-    } else {
-        g.send_to(root, tag, value);
-        None
-    }
-}
-
-/// One-to-all scatter (linear): root distributes `values[i]` to member i.
-pub fn scatter<T: Data>(g: &Group, root: usize, values: Option<Vec<T>>) -> T {
-    g.ctx.metrics.on_collective();
-    let p = g.size();
-    let me = g.index();
-    let tag = g.next_tag();
-    if me == root {
-        let values = values.expect("scatter root must supply values");
-        assert_eq!(values.len(), p);
-        let mut opts: Vec<Option<T>> = values.into_iter().map(Some).collect();
-        let mine = opts[root].take().unwrap();
-        for (i, slot) in opts.into_iter().enumerate() {
-            if i != root {
-                g.send_to(i, tag, slot.unwrap());
-            }
-        }
-        mine
-    } else {
-        g.recv_from(root, tag)
-    }
-}
-
-// ------------------------------------------------------------------- scan
-
-/// Inclusive prefix scan (Hillis-Steele): member i obtains
-/// `v_0 ⊕ v_1 ⊕ … ⊕ v_i` in group order — ⌈log₂ p⌉ rounds of
-/// (t_s + t_w·m).  `op` must be associative.
-pub fn scan<T: Data + Clone>(g: &Group, value: T, op: impl Fn(T, T) -> T) -> T {
-    g.ctx.metrics.on_collective();
-    let p = g.size();
-    let me = g.index();
-    let mut acc = value;
-    let mut dist = 1usize;
-    while dist < p {
-        let tag = g.next_tag();
-        if me + dist < p {
-            g.send_to(me + dist, tag, acc.clone());
-        }
-        if me >= dist {
-            let prefix: T = g.recv_from(me - dist, tag);
-            acc = op(prefix, acc);
-        }
-        dist <<= 1;
-    }
-    acc
-}
-
-// -------------------------------------------------------------- allreduce
-
-/// Reduce to rank 0 then broadcast: everyone gets the folded value.
-pub fn allreduce<T: Data + Clone>(g: &Group, value: T, op: impl Fn(T, T) -> T) -> T {
-    let r = reduce(g, 0, value, op);
-    bcast(g, 0, r)
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::comm::backend::BackendProfile;
     use crate::comm::cost::CostParams;
-    use crate::spmd::run;
+    use crate::comm::group::Group;
+    use crate::testing::spmd_run as run;
 
     fn fixed() -> BackendProfile {
         BackendProfile::openmpi_fixed()
@@ -398,7 +182,7 @@ mod tests {
         for p in [1, 2, 3, 4, 5, 7, 8, 16] {
             let res = run(p, fixed(), free(), |ctx| {
                 let g = Group::world(ctx);
-                bcast(&g, 0, if ctx.rank == 0 { Some(1234u64) } else { None })
+                g.bcast(0, if ctx.rank == 0 { Some(1234u64) } else { None })
             });
             assert!(res.results.iter().all(|&v| v == 1234), "p={p}");
         }
@@ -410,7 +194,7 @@ mod tests {
             for root in 0..p {
                 let res = run(p, fixed(), free(), |ctx| {
                     let g = Group::world(ctx);
-                    bcast(&g, root, if ctx.rank == root { Some(ctx.rank as u64) } else { None })
+                    g.bcast(root, if ctx.rank == root { Some(ctx.rank as u64) } else { None })
                 });
                 assert!(res.results.iter().all(|&v| v == root as u64));
             }
@@ -421,7 +205,7 @@ mod tests {
     fn bcast_linear_matches_binomial_result() {
         let res = run(6, BackendProfile::openmpi_stock(), free(), |ctx| {
             let g = Group::world(ctx);
-            bcast_linear(&g, 2, if ctx.rank == 2 { Some(99i64) } else { None })
+            g.bcast(2, if ctx.rank == 2 { Some(99i64) } else { None })
         });
         assert!(res.results.iter().all(|&v| v == 99));
     }
@@ -431,7 +215,7 @@ mod tests {
         for p in [1, 2, 3, 4, 5, 8, 13] {
             let res = run(p, fixed(), free(), |ctx| {
                 let g = Group::world(ctx);
-                reduce(&g, 0, ctx.rank as i64, |a, b| a + b)
+                g.reduce(0, ctx.rank as i64, |a, b| a + b)
             });
             let expect: i64 = (0..p as i64).sum();
             assert_eq!(res.results[0], Some(expect), "p={p}");
@@ -446,7 +230,7 @@ mod tests {
         for root in 0..5 {
             let res = run(5, BackendProfile::openmpi_stock(), free(), |ctx| {
                 let g = Group::world(ctx);
-                reduce(&g, root, (ctx.rank + 1) as i64, |a, b| a + b)
+                g.reduce(root, (ctx.rank + 1) as i64, |a, b| a + b)
             });
             assert_eq!(res.results[root], Some(15));
         }
@@ -463,7 +247,7 @@ mod tests {
             for p in [2, 3, 4, 7, 8] {
                 let res = run(p, backend, free(), |ctx| {
                     let g = Group::world(ctx);
-                    reduce(&g, 0, format!("{}.", ctx.rank), |a, b| a + &b)
+                    g.reduce(0, format!("{}.", ctx.rank), |a, b| a + &b)
                 });
                 let expect: String = (0..p).map(|r| format!("{r}.")).collect();
                 assert_eq!(res.results[0].as_deref(), Some(expect.as_str()), "{name} p={p}");
@@ -476,7 +260,7 @@ mod tests {
         for p in [1, 2, 3, 5, 8] {
             let res = run(p, fixed(), free(), |ctx| {
                 let g = Group::world(ctx);
-                allgather(&g, ctx.rank as u64 * 10)
+                g.allgather(ctx.rank as u64 * 10)
             });
             let expect: Vec<u64> = (0..p as u64).map(|r| r * 10).collect();
             assert!(res.results.iter().all(|v| *v == expect), "p={p}");
@@ -485,14 +269,42 @@ mod tests {
 
     #[test]
     fn allgather_rd_matches_ring() {
+        use crate::comm::backend::{AllGatherAlgo, BcastAlgo, ReduceAlgo};
+        let rd = BackendProfile {
+            name: "rd-test",
+            reduce: ReduceAlgo::Binomial,
+            bcast: BcastAlgo::Binomial,
+            allgather: AllGatherAlgo::RecursiveDoubling,
+            ts_factor: 1.0,
+            tw_factor: 1.0,
+        };
         for p in [2, 4, 8, 16] {
-            let res = run(p, fixed(), free(), |ctx| {
+            let res = run(p, rd, free(), |ctx| {
                 let g = Group::world(ctx);
-                allgather_rd(&g, format!("r{}", ctx.rank))
+                g.allgather(format!("r{}", ctx.rank))
             });
             let expect: Vec<String> = (0..p).map(|r| format!("r{r}")).collect();
             assert!(res.results.iter().all(|v| *v == expect), "p={p}");
         }
+    }
+
+    #[test]
+    fn allgather_rd_falls_back_on_non_power_of_two() {
+        use crate::comm::backend::{AllGatherAlgo, BcastAlgo, ReduceAlgo};
+        let rd = BackendProfile {
+            name: "rd-test",
+            reduce: ReduceAlgo::Binomial,
+            bcast: BcastAlgo::Binomial,
+            allgather: AllGatherAlgo::RecursiveDoubling,
+            ts_factor: 1.0,
+            tw_factor: 1.0,
+        };
+        let res = run(6, rd, free(), |ctx| {
+            let g = Group::world(ctx);
+            g.allgather(ctx.rank as u64)
+        });
+        let expect: Vec<u64> = (0..6).collect();
+        assert!(res.results.iter().all(|v| *v == expect));
     }
 
     #[test]
@@ -502,7 +314,7 @@ mod tests {
                 let g = Group::world(ctx);
                 // items[j] = me*100 + j
                 let items: Vec<u64> = (0..p).map(|j| (ctx.rank * 100 + j) as u64).collect();
-                alltoall(&g, items)
+                g.alltoall(items)
             });
             for (me, got) in res.results.iter().enumerate() {
                 let expect: Vec<u64> = (0..p).map(|i| (i * 100 + me) as u64).collect();
@@ -517,7 +329,7 @@ mod tests {
             for delta in [-3isize, -1, 0, 1, 2, 7] {
                 let res = run(p, fixed(), free(), |ctx| {
                     let g = Group::world(ctx);
-                    shift(&g, delta, ctx.rank as i64)
+                    g.shift(delta, ctx.rank as i64)
                 });
                 for me in 0..p {
                     let src = (me as isize - delta).rem_euclid(p as isize);
@@ -531,9 +343,8 @@ mod tests {
     fn gather_scatter_roundtrip() {
         let res = run(6, fixed(), free(), |ctx| {
             let g = Group::world(ctx);
-            let gathered = gather(&g, 3, ctx.rank as u64);
-            let back = scatter(&g, 3, gathered.map(|v| v.iter().map(|x| x * 2).collect()));
-            back
+            let gathered = g.gather(3, ctx.rank as u64);
+            g.scatter(3, gathered.map(|v| v.iter().map(|x| x * 2).collect()))
         });
         for (me, &v) in res.results.iter().enumerate() {
             assert_eq!(v, me as u64 * 2);
@@ -544,9 +355,19 @@ mod tests {
     fn allreduce_everywhere() {
         let res = run(7, fixed(), free(), |ctx| {
             let g = Group::world(ctx);
-            allreduce(&g, ctx.rank as i64, |a, b| a.max(b))
+            g.allreduce(ctx.rank as i64, |a, b| a.max(b))
         });
         assert!(res.results.iter().all(|&v| v == 6));
+    }
+
+    #[test]
+    fn scan_prefixes_in_group_order() {
+        let res = run(6, fixed(), free(), |ctx| {
+            let g = Group::world(ctx);
+            g.scan(ctx.rank as i64 + 1, |a, b| a + b)
+        });
+        let expect: Vec<i64> = vec![1, 3, 6, 10, 15, 21];
+        assert_eq!(res.results, expect);
     }
 
     #[test]
@@ -554,7 +375,7 @@ mod tests {
         for p in [1, 2, 3, 8, 9] {
             run(p, fixed(), free(), |ctx| {
                 let g = Group::world(ctx);
-                barrier(&g);
+                g.barrier();
             });
         }
     }
@@ -564,7 +385,7 @@ mod tests {
         let res = run(6, fixed(), free(), |ctx| {
             let g = Group::new(ctx, vec![1, 3, 5]);
             if g.is_member() {
-                Some(reduce(&g, 0, ctx.rank as i64, |a, b| a + b))
+                Some(g.reduce(0, ctx.rank as i64, |a, b| a + b))
             } else {
                 None
             }
@@ -585,7 +406,7 @@ mod tests {
         for (p, rounds) in [(2usize, 1.0f64), (4, 2.0), (8, 3.0), (16, 4.0)] {
             let res = run(p, fixed(), unit_cost(), |ctx| {
                 let g = Group::world(ctx);
-                bcast(&g, 0, if ctx.rank == 0 { Some(0u8) } else { None });
+                g.bcast(0, if ctx.rank == 0 { Some(0u8) } else { None });
                 ctx.now()
             });
             let t = res.results.iter().cloned().fold(0.0, f64::max);
@@ -601,7 +422,7 @@ mod tests {
         for p in [2usize, 4, 8, 16] {
             let res = run(p, BackendProfile::openmpi_stock(), unit_cost(), |ctx| {
                 let g = Group::world(ctx);
-                reduce(&g, 0, 0u8, |a, _| a);
+                g.reduce(0, 0u8, |a, _| a);
                 ctx.now()
             });
             // root serializes p-1 incoming transfers of cost 1
@@ -618,7 +439,7 @@ mod tests {
         for (p, rounds) in [(2usize, 1.0f64), (4, 2.0), (8, 3.0), (16, 4.0)] {
             let res = run(p, fixed(), unit_cost(), |ctx| {
                 let g = Group::world(ctx);
-                reduce(&g, 0, 0u8, |a, _| a);
+                g.reduce(0, 0u8, |a, _| a);
                 ctx.now()
             });
             assert!(
@@ -634,7 +455,7 @@ mod tests {
         for p in [2usize, 4, 8] {
             let res = run(p, fixed(), unit_cost(), |ctx| {
                 let g = Group::world(ctx);
-                allgather(&g, 0u8);
+                g.allgather(0u8);
                 ctx.now()
             });
             let t = res.results.iter().cloned().fold(0.0, f64::max);
@@ -646,7 +467,7 @@ mod tests {
     fn shift_costs_one_message() {
         let res = run(8, fixed(), unit_cost(), |ctx| {
             let g = Group::world(ctx);
-            shift(&g, 3, 0u8);
+            g.shift(3, 0u8);
             ctx.now()
         });
         let t = res.results.iter().cloned().fold(0.0, f64::max);

@@ -20,11 +20,12 @@
 //! deadlocks impossible; the timeout is our test oracle for that claim
 //! (a deadlock in the framework would fail loudly, not hang CI).
 
-use std::any::Any;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
+
+use crate::comm::message::Msg;
 
 /// Wall-clock bound on a blocking receive before we declare deadlock.
 pub const RECV_TIMEOUT: Duration = Duration::from_secs(60);
@@ -37,7 +38,8 @@ pub struct Envelope {
     pub bytes: usize,
     /// Sender's virtual clock at send initiation (transfer-ready time).
     pub ready: f64,
-    pub payload: Box<dyn Any + Send>,
+    /// The erased payload (generic sends are wrapped by `Ctx`).
+    pub payload: Msg,
 }
 
 #[derive(Default)]
@@ -75,11 +77,28 @@ impl Fabric {
     }
 
     /// Deliver an envelope to `dst`'s mailbox.
+    ///
+    /// Panics (with sender, destination, and tag diagnostics) if `dst`'s
+    /// mailbox is closed: the destination rank already exited, so the
+    /// message could never be received — silently queueing it would turn
+    /// a collective-membership bug into a downstream deadlock.
     pub fn post(&self, dst: usize, env: Envelope) {
         let mb = &self.boxes[dst];
-        let mut inner = mb.inner.lock().unwrap();
-        debug_assert!(!inner.closed, "post to closed mailbox {dst}");
-        inner.queue.push_back(env);
+        {
+            let mut inner = mb.inner.lock().unwrap();
+            if inner.closed {
+                // drop the guard before panicking so the mutex is not
+                // poisoned for diagnostics readers
+                drop(inner);
+                panic!(
+                    "rank {}: post(dst={dst}, tag={:#x}, {} bytes) to closed mailbox — \
+                     rank {dst} already exited; sending to a non-participant is a \
+                     collective-membership bug",
+                    env.src, env.tag, env.bytes
+                );
+            }
+            inner.queue.push_back(env);
+        }
         self.boxes[dst].seq.fetch_add(1, Ordering::Release);
         // Only the owning rank ever blocks on its own mailbox — a single
         // waiter, so notify_one suffices (perf: avoids thundering-herd
@@ -150,7 +169,7 @@ mod tests {
     use std::thread;
 
     fn env(src: usize, tag: u64, val: i64) -> Envelope {
-        Envelope { src, tag, bytes: 8, ready: 0.0, payload: Box::new(val) }
+        Envelope { src, tag, bytes: 8, ready: 0.0, payload: Msg::new(val) }
     }
 
     #[test]
@@ -158,7 +177,7 @@ mod tests {
         let f = Fabric::new(2);
         f.post(1, env(0, 7, 42));
         let e = f.take(1, 0, 7);
-        assert_eq!(*e.payload.downcast_ref::<i64>().unwrap(), 42);
+        assert_eq!(e.payload.downcast::<i64>(), 42);
     }
 
     #[test]
@@ -167,8 +186,8 @@ mod tests {
         f.post(1, env(0, 1, 10));
         f.post(1, env(0, 2, 20));
         // take tag 2 first even though tag 1 arrived first
-        assert_eq!(*f.take(1, 0, 2).payload.downcast_ref::<i64>().unwrap(), 20);
-        assert_eq!(*f.take(1, 0, 1).payload.downcast_ref::<i64>().unwrap(), 10);
+        assert_eq!(f.take(1, 0, 2).payload.downcast::<i64>(), 20);
+        assert_eq!(f.take(1, 0, 1).payload.downcast::<i64>(), 10);
     }
 
     #[test]
@@ -176,8 +195,8 @@ mod tests {
         let f = Fabric::new(3);
         f.post(2, env(0, 5, 100));
         f.post(2, env(1, 5, 200));
-        assert_eq!(*f.take(2, 1, 5).payload.downcast_ref::<i64>().unwrap(), 200);
-        assert_eq!(*f.take(2, 0, 5).payload.downcast_ref::<i64>().unwrap(), 100);
+        assert_eq!(f.take(2, 1, 5).payload.downcast::<i64>(), 200);
+        assert_eq!(f.take(2, 0, 5).payload.downcast::<i64>(), 100);
     }
 
     #[test]
@@ -186,7 +205,7 @@ mod tests {
         let f2 = f.clone();
         let h = thread::spawn(move || {
             let e = f2.take(1, 0, 9);
-            *e.payload.downcast_ref::<i64>().unwrap()
+            e.payload.downcast::<i64>()
         });
         thread::sleep(Duration::from_millis(20));
         f.post(1, env(0, 9, 77));
@@ -196,8 +215,36 @@ mod tests {
     #[test]
     fn ready_stamp_preserved() {
         let f = Fabric::new(2);
-        f.post(1, Envelope { src: 0, tag: 0, bytes: 4, ready: 1.25, payload: Box::new(0i64) });
+        f.post(1, Envelope { src: 0, tag: 0, bytes: 4, ready: 1.25, payload: Msg::new(0i64) });
         assert_eq!(f.take(1, 0, 0).ready, 1.25);
+    }
+
+    #[test]
+    fn post_to_closed_mailbox_panics_with_diagnostics() {
+        let f = Fabric::new(2);
+        f.close(1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f.post(1, env(0, 0x2A, 7));
+        }));
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string panic>".into());
+        assert!(msg.contains("closed mailbox"), "{msg}");
+        assert!(msg.contains("rank 0"), "{msg}");
+        assert!(msg.contains("dst=1"), "{msg}");
+        assert!(msg.contains("0x2a"), "{msg}");
+        // nothing was queued
+        assert_eq!(f.pending(1), 0);
+    }
+
+    #[test]
+    fn open_mailboxes_unaffected_by_closed_sibling() {
+        let f = Fabric::new(3);
+        f.close(2);
+        f.post(1, env(0, 1, 5));
+        assert_eq!(f.take(1, 0, 1).payload.downcast::<i64>(), 5);
     }
 
     #[test]

@@ -11,12 +11,21 @@
 //! Creating a group is purely local: the id is derived deterministically
 //! from the member list and a per-signature instance counter (consistent
 //! across members because the program is SPMD) — zero messages.
+//!
+//! Groups are also the **user-facing collective API**: `g.reduce(…)`,
+//! `g.bcast(…)`, `g.allgather(…)`, … erase their generic values into
+//! [`Msg`]s and dispatch through the active backend's
+//! [`Collectives`](crate::comm::collectives::Collectives) trait object —
+//! the algorithm executed (tree vs linear vs ring …) is whatever the
+//! backend selected, with zero changes to calling code.
 
+use crate::comm::message::Msg;
+use crate::data::value::Data;
 use crate::spmd::Ctx;
 
 /// An ordered subset of world ranks with a private tag namespace.
 pub struct Group<'a> {
-    pub(crate) ctx: &'a Ctx,
+    ctx: &'a Ctx,
     ranks: Vec<usize>,
     /// My position in `ranks`, if I am a member.
     my_index: Option<usize>,
@@ -43,6 +52,11 @@ impl<'a> Group<'a> {
         let id = ctx.alloc_group_id(&ranks);
         let my_index = ranks.iter().position(|&r| r == ctx.rank);
         Group { ctx, ranks, my_index, id, op_seq: std::cell::Cell::new(0) }
+    }
+
+    /// The rank context this group lives in.
+    pub fn ctx(&self) -> &'a Ctx {
+        self.ctx
     }
 
     /// Number of members.
@@ -75,35 +89,162 @@ impl<'a> Group<'a> {
         &self.ranks
     }
 
-    /// Fresh tag for the next collective operation on this group.
-    /// Members stay aligned because SPMD programs invoke the same
-    /// sequence of collectives on the same group instance.
-    pub(crate) fn next_tag(&self) -> u64 {
+    /// Fresh tag for the next collective operation (or message round) on
+    /// this group.  Members stay aligned because SPMD programs invoke the
+    /// same sequence of collectives on the same group instance.  Public
+    /// so custom [`Collectives`](crate::comm::collectives::Collectives)
+    /// strategies can allocate rounds.
+    pub fn next_tag(&self) -> u64 {
         let seq = self.op_seq.get();
         self.op_seq.set(seq + 1);
         self.id.wrapping_add(seq)
     }
 
+    // ------------------------------------------------ point-to-point (T)
+
     /// Send to group member `dst` (group rank) under `tag`.
-    pub(crate) fn send_to<T: crate::data::value::Data>(&self, dst: usize, tag: u64, v: T) {
+    pub(crate) fn send_to<T: Data>(&self, dst: usize, tag: u64, v: T) {
         self.ctx.send(self.ranks[dst], tag, v);
     }
 
     /// Receive from group member `src` (group rank) under `tag`.
-    pub(crate) fn recv_from<T: crate::data::value::Data>(&self, src: usize, tag: u64) -> T {
+    pub(crate) fn recv_from<T: Data>(&self, src: usize, tag: u64) -> T {
         self.ctx.recv(self.ranks[src], tag)
+    }
+
+    // ---------------------------------------------- point-to-point (Msg)
+    //
+    // The erased plumbing collective strategies are built from: group-
+    // rank addressed sends/receives of `Msg` payloads.  Costs and metrics
+    // are identical to the generic variants.
+
+    /// Send an erased message to group member `dst` under `tag`.
+    pub fn send_msg_to(&self, dst: usize, tag: u64, msg: Msg) {
+        self.ctx.send_msg(self.ranks[dst], tag, msg);
+    }
+
+    /// Receive an erased message from group member `src` under `tag`.
+    pub fn recv_msg_from(&self, src: usize, tag: u64) -> Msg {
+        self.ctx.recv_msg(self.ranks[src], tag)
     }
 
     /// Full-duplex exchange: send to member `dst` while receiving from
     /// member `src` (one round of a ring/pairwise collective).
-    pub(crate) fn send_recv_with<T: crate::data::value::Data, U: crate::data::value::Data>(
-        &self,
-        dst: usize,
-        src: usize,
-        tag: u64,
-        v: T,
-    ) -> U {
-        self.ctx.send_recv(self.ranks[dst], self.ranks[src], tag, v)
+    pub fn send_recv_msg_with(&self, dst: usize, src: usize, tag: u64, msg: Msg) -> Msg {
+        self.ctx.send_recv_msg(self.ranks[dst], self.ranks[src], tag, msg)
+    }
+
+    // ------------------------------------------------------- collectives
+    //
+    // Generic entry points: erase, dispatch through the backend's
+    // `dyn Collectives`, downcast.  These are what `DistSeq` / `Grid` /
+    // `DistVar` (and user code) call; the algorithm behind each op is the
+    // active backend's choice.
+
+    /// One-to-all broadcast from group rank `root`.  `value` must be
+    /// `Some` at the root (others may pass `None`).  Returns the value
+    /// everywhere.  Θ(log p (t_s + t_w m)) on tree backends.
+    pub fn bcast<T: Data + Clone>(&self, root: usize, value: Option<T>) -> T {
+        self.ctx.metrics.on_collective();
+        self.ctx
+            .collectives()
+            .bcast(self, root, value.map(Msg::cloneable))
+            .downcast::<T>()
+    }
+
+    /// All-to-one reduction with associative `op`, delivered at group
+    /// rank `root`.  Non-roots get `None`.  `op(a, b)` receives `a` from
+    /// the lower group rank — associativity is the only requirement
+    /// (paper Table 1).
+    pub fn reduce<T: Data>(&self, root: usize, value: T, op: impl Fn(T, T) -> T) -> Option<T> {
+        self.ctx.metrics.on_collective();
+        let erased = |a: Msg, b: Msg| Msg::new(op(a.downcast::<T>(), b.downcast::<T>()));
+        self.ctx
+            .collectives()
+            .reduce(self, root, Msg::new(value), &erased)
+            .map(|m| m.downcast::<T>())
+    }
+
+    /// Reduce to group rank 0 then broadcast: everyone gets the folded
+    /// value.
+    pub fn allreduce<T: Data + Clone>(&self, value: T, op: impl Fn(T, T) -> T) -> T {
+        self.ctx.metrics.on_collective();
+        let erased = |a: Msg, b: Msg| Msg::cloneable(op(a.downcast::<T>(), b.downcast::<T>()));
+        self.ctx
+            .collectives()
+            .allreduce(self, Msg::cloneable(value), &erased)
+            .downcast::<T>()
+    }
+
+    /// All-to-all broadcast: every member contributes one value; everyone
+    /// obtains the full group-ordered vector.
+    pub fn allgather<T: Data + Clone>(&self, value: T) -> Vec<T> {
+        self.ctx.metrics.on_collective();
+        self.ctx
+            .collectives()
+            .allgather(self, Msg::cloneable(value))
+            .into_iter()
+            .map(|m| m.downcast::<T>())
+            .collect()
+    }
+
+    /// Personalized all-to-all: `items[j]` is delivered to group rank
+    /// `j`; returns the vector whose i-th entry came from group rank `i`.
+    pub fn alltoall<T: Data>(&self, items: Vec<T>) -> Vec<T> {
+        self.ctx.metrics.on_collective();
+        let items = items.into_iter().map(Msg::new).collect();
+        self.ctx
+            .collectives()
+            .alltoall(self, items)
+            .into_iter()
+            .map(|m| m.downcast::<T>())
+            .collect()
+    }
+
+    /// Cyclic shift by `delta`: my value goes to group rank
+    /// `(me+delta) mod p`; I receive from `(me−delta) mod p`.
+    pub fn shift<T: Data>(&self, delta: isize, value: T) -> T {
+        self.ctx.metrics.on_collective();
+        self.ctx
+            .collectives()
+            .shift(self, delta, Msg::new(value))
+            .downcast::<T>()
+    }
+
+    /// Synchronize all members.
+    pub fn barrier(&self) {
+        self.ctx.metrics.on_collective();
+        self.ctx.collectives().barrier(self);
+    }
+
+    /// All-to-one gather: root obtains the group-ordered vector.
+    pub fn gather<T: Data>(&self, root: usize, value: T) -> Option<Vec<T>> {
+        self.ctx.metrics.on_collective();
+        self.ctx
+            .collectives()
+            .gather(self, root, Msg::new(value))
+            .map(|v| v.into_iter().map(|m| m.downcast::<T>()).collect())
+    }
+
+    /// One-to-all scatter: root distributes `values[i]` to member i.
+    pub fn scatter<T: Data>(&self, root: usize, values: Option<Vec<T>>) -> T {
+        self.ctx.metrics.on_collective();
+        let values = values.map(|v| v.into_iter().map(Msg::new).collect());
+        self.ctx
+            .collectives()
+            .scatter(self, root, values)
+            .downcast::<T>()
+    }
+
+    /// Inclusive prefix scan: member i obtains `v_0 ⊕ v_1 ⊕ … ⊕ v_i` in
+    /// group order.  `op` must be associative.
+    pub fn scan<T: Data + Clone>(&self, value: T, op: impl Fn(T, T) -> T) -> T {
+        self.ctx.metrics.on_collective();
+        let erased = |a: Msg, b: Msg| Msg::cloneable(op(a.downcast::<T>(), b.downcast::<T>()));
+        self.ctx
+            .collectives()
+            .scan(self, Msg::cloneable(value), &erased)
+            .downcast::<T>()
     }
 }
 
@@ -112,7 +253,7 @@ mod tests {
     use super::*;
     use crate::comm::backend::BackendProfile;
     use crate::comm::cost::CostParams;
-    use crate::spmd::run;
+    use crate::testing::spmd_run as run;
 
     #[test]
     fn world_group_indexing() {
@@ -164,5 +305,17 @@ mod tests {
             assert_ne!(t1a, t1b);
             assert_ne!(t1a, t2a);
         });
+    }
+
+    #[test]
+    fn collective_methods_count_metrics() {
+        let res = run(4, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            let g = Group::world(ctx);
+            let _ = g.allreduce(1u64, |a, b| a + b);
+            g.barrier();
+        });
+        for m in &res.metrics {
+            assert_eq!(m.collectives, 2);
+        }
     }
 }

@@ -1,0 +1,157 @@
+//! Type-erased message payloads — the interchange type of the pluggable
+//! [`Collectives`](crate::comm::collectives::Collectives) layer.
+//!
+//! Rust trait objects cannot have generic methods, but collective
+//! operations are generic over the element type `T: Data`.  [`Msg`]
+//! bridges the two: a `Msg` owns an erased value together with its
+//! modeled wire size (so the virtual-time cost model keeps working
+//! end-to-end) and, when the original type was `Clone`, a cloning thunk
+//! (so tree/ring algorithms can fan a value out to several peers).
+//!
+//! The generic user-facing entry points on
+//! [`Group`](crate::comm::group::Group) wrap values into `Msg`s, dispatch
+//! through the active backend's `dyn Collectives`, and downcast the
+//! results — user code never sees a `Msg` unless it implements a custom
+//! collectives strategy.
+
+use std::any::Any;
+
+use crate::data::value::Data;
+
+/// An erased value travelling through a collective: payload + modeled
+/// wire size + (optionally) a cloning thunk.
+pub struct Msg {
+    payload: Box<dyn Any + Send>,
+    bytes: usize,
+    clone_fn: Option<fn(&(dyn Any + Send)) -> Box<dyn Any + Send>>,
+}
+
+fn clone_box<T: Data + Clone>(any: &(dyn Any + Send)) -> Box<dyn Any + Send> {
+    let v = any
+        .downcast_ref::<T>()
+        .expect("cloneable Msg payload type drifted");
+    Box::new(v.clone())
+}
+
+impl Msg {
+    /// Erase a value.  The resulting message is *not* duplicable — fine
+    /// for point-to-point hops and fold-style collectives (reduce,
+    /// gather, alltoall, shift), which never copy payloads.
+    pub fn new<T: Data>(value: T) -> Self {
+        let bytes = value.byte_size();
+        Msg { payload: Box::new(value), bytes, clone_fn: None }
+    }
+
+    /// Erase a cloneable value.  Required by fan-out collectives (bcast,
+    /// allgather, scan), whose algorithms send the same value to several
+    /// peers.
+    pub fn cloneable<T: Data + Clone>(value: T) -> Self {
+        let bytes = value.byte_size();
+        Msg { payload: Box::new(value), bytes, clone_fn: Some(clone_box::<T>) }
+    }
+
+    /// Modeled wire size in bytes (drives the `t_w·m` cost term).
+    #[inline]
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Can this message be duplicated?
+    pub fn is_cloneable(&self) -> bool {
+        self.clone_fn.is_some()
+    }
+
+    /// Duplicate the payload.  Panics for messages built with
+    /// [`Msg::new`] — collective algorithms that fan out values must be
+    /// fed via [`Msg::cloneable`] (the `Group` entry points enforce this
+    /// with `T: Clone` bounds).
+    pub fn dup(&self) -> Msg {
+        let f = self
+            .clone_fn
+            .expect("collective algorithm needs a cloneable value (wrap with Msg::cloneable)");
+        Msg { payload: f(self.payload.as_ref()), bytes: self.bytes, clone_fn: self.clone_fn }
+    }
+
+    /// Recover the value, or give the message back on type mismatch.
+    pub fn try_downcast<T: Data>(self) -> Result<T, Msg> {
+        let Msg { payload, bytes, clone_fn } = self;
+        match payload.downcast::<T>() {
+            Ok(v) => Ok(*v),
+            Err(payload) => Err(Msg { payload, bytes, clone_fn }),
+        }
+    }
+
+    /// Recover the value; panics with the expected type name on
+    /// mismatch.  Used by the `Group` wrappers, where the type is pinned
+    /// by construction.
+    pub fn downcast<T: Data>(self) -> T {
+        self.try_downcast::<T>().unwrap_or_else(|_| {
+            panic!(
+                "Msg payload type mismatch (expected {})",
+                std::any::type_name::<T>()
+            )
+        })
+    }
+}
+
+/// `Msg` is itself `Data`, so erased values can be bundled into larger
+/// messages (e.g. the recursive-doubling all-gather ships a
+/// `Vec<(u64, Msg)>` per round) with byte accounting identical to the
+/// equivalent concrete `Vec<(u64, T)>`.
+impl Data for Msg {
+    fn byte_size(&self) -> usize {
+        self.bytes
+    }
+}
+
+impl std::fmt::Debug for Msg {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Msg")
+            .field("bytes", &self.bytes)
+            .field("cloneable", &self.is_cloneable())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_preserves_value_and_bytes() {
+        let m = Msg::new(vec![1.0f32; 10]);
+        assert_eq!(m.bytes(), 8 + 40);
+        assert_eq!(m.downcast::<Vec<f32>>(), vec![1.0f32; 10]);
+    }
+
+    #[test]
+    fn cloneable_dup_is_deep() {
+        let m = Msg::cloneable("hello".to_string());
+        let d = m.dup();
+        assert_eq!(d.bytes(), m.bytes());
+        assert_eq!(m.downcast::<String>(), "hello");
+        assert_eq!(d.downcast::<String>(), "hello");
+    }
+
+    #[test]
+    #[should_panic(expected = "cloneable")]
+    fn plain_msg_refuses_dup() {
+        let _ = Msg::new(1u64).dup();
+    }
+
+    #[test]
+    fn try_downcast_returns_msg_on_mismatch() {
+        let m = Msg::new(1u64);
+        let back = m.try_downcast::<String>().unwrap_err();
+        assert_eq!(back.bytes(), 8);
+        assert_eq!(back.downcast::<u64>(), 1);
+    }
+
+    #[test]
+    fn bundle_bytes_match_concrete_vec() {
+        // Vec<(u64, Msg)> must cost the same as Vec<(u64, T)>
+        let items: Vec<(u64, Msg)> = (0..3).map(|i| (i, Msg::new(0.5f64))).collect();
+        let concrete: Vec<(u64, f64)> = (0..3).map(|i| (i, 0.5f64)).collect();
+        assert_eq!(Msg::new(items).bytes(), concrete.byte_size());
+    }
+}

@@ -1,1 +1,37 @@
-pub mod cost; pub mod fabric; pub mod backend; pub mod group; pub mod collectives;
+//! The communication layer, bottom-up:
+//!
+//! * [`cost`] — the two-parameter (`t_s`, `t_w`) virtual-time cost model
+//!   of §2;
+//! * [`fabric`] — in-process mailboxes with MPI-style `(src, tag)`
+//!   matching; every envelope advances virtual clocks;
+//! * [`message`] — [`message::Msg`], the type-erased payload that lets
+//!   collective strategies be trait objects while values stay generic at
+//!   the API surface;
+//! * [`algorithms`] — the textbook collective algorithms (binomial /
+//!   linear / ring / recursive-doubling / pairwise …) as explicit
+//!   message rounds over a group, reusable as building blocks;
+//! * [`collectives`] — the pluggable [`collectives::Collectives`] trait
+//!   each backend implements, plus the enum-dispatched
+//!   [`collectives::StandardCollectives`] used by all built-ins;
+//! * [`backend`] — the [`backend::Backend`] trait (collective strategy +
+//!   cost shaping), the built-in [`backend::BackendProfile`]s modeling
+//!   the paper's FooPar-X modules, and the name-keyed
+//!   [`backend::registry`] user backends plug into;
+//! * [`group`] — ordered rank subsets with private tag namespaces and
+//!   the **user-facing collective methods** (`g.reduce(…)`,
+//!   `g.bcast(…)`, …) that dispatch through the active backend.
+//!
+//! Data-structure code ([`crate::data`]) and algorithms only ever touch
+//! [`group::Group`] methods; which algorithm executes — and at what
+//! software overhead — is decided by the backend selected on
+//! [`Runtime::builder`](crate::spmd::Runtime::builder), exactly the
+//! paper's claim that switching `FooPar-X` configurations changes no
+//! algorithm code.
+
+pub mod algorithms;
+pub mod backend;
+pub mod collectives;
+pub mod cost;
+pub mod fabric;
+pub mod group;
+pub mod message;

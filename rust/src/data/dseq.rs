@@ -23,7 +23,6 @@
 //! | `all_gather_d` | ring | Θ((t_s + t_w m)(p−1)) |
 //! | `apply` | binomial bcast | Θ(log p (t_s + t_w m)) |
 
-use crate::comm::collectives;
 use crate::comm::group::Group;
 use crate::data::value::Data;
 use crate::spmd::Ctx;
@@ -135,7 +134,7 @@ impl<'a, T: Data> DistSeq<'a, T> {
     /// Returns `Some(result)` on the root member, `None` elsewhere.
     pub fn reduce_d(self, op: impl Fn(T, T) -> T) -> Option<T> {
         let Some(local) = self.local else { return None };
-        collectives::reduce(&self.group, 0, local, op)
+        self.group.reduce(0, local, op)
     }
 
     /// Reduce with the result broadcast back to all members.
@@ -144,12 +143,12 @@ impl<'a, T: Data> DistSeq<'a, T> {
         T: Clone,
     {
         let local = self.local?;
-        Some(collectives::allreduce(&self.group, local, op))
+        Some(self.group.allreduce(local, op))
     }
 
     /// Cyclic shift by `delta` — Θ(t_s + t_w m).
     pub fn shift_d(self, delta: isize) -> DistSeq<'a, T> {
-        let local = self.local.map(|v| collectives::shift(&self.group, delta, v));
+        let local = self.local.map(|v| self.group.shift(delta, v));
         DistSeq { local, group: self.group }
     }
 
@@ -159,7 +158,7 @@ impl<'a, T: Data> DistSeq<'a, T> {
         T: Clone,
     {
         let local = self.local.as_ref()?;
-        Some(collectives::allgather(&self.group, local.clone()))
+        Some(self.group.allgather(local.clone()))
     }
 
     /// Inclusive prefix scan: member i ends up with
@@ -169,7 +168,7 @@ impl<'a, T: Data> DistSeq<'a, T> {
     where
         T: Clone,
     {
-        let local = self.local.map(|v| collectives::scan(&self.group, v, op));
+        let local = self.local.map(|v| self.group.scan(v, op));
         DistSeq { local, group: self.group }
     }
 
@@ -177,7 +176,7 @@ impl<'a, T: Data> DistSeq<'a, T> {
     /// Θ((t_s + t_w m)(p−1)) linear gather.
     pub fn gather_d(self) -> Option<Vec<T>> {
         let local = self.local?;
-        collectives::gather(&self.group, 0, local)
+        self.group.gather(0, local)
     }
 
     /// Every member obtains element `i` (one-to-all broadcast from its
@@ -193,7 +192,7 @@ impl<'a, T: Data> DistSeq<'a, T> {
         }
         let me = self.group.index();
         let v = if me == i { self.local.clone() } else { None };
-        Some(collectives::bcast(&self.group, i, v))
+        Some(self.group.bcast(i, v))
     }
 }
 
@@ -202,7 +201,7 @@ impl<'a, T: Data> DistSeq<'a, Vec<T>> {
     /// sub-element is delivered to member *j*; the result on member *i*
     /// is the vector of everyone's i-th sub-elements.
     pub fn all_to_all_d(self) -> DistSeq<'a, Vec<T>> {
-        let local = self.local.map(|v| collectives::alltoall(&self.group, v));
+        let local = self.local.map(|v| self.group.alltoall(v));
         DistSeq { local, group: self.group }
     }
 }
@@ -212,7 +211,7 @@ mod tests {
     use super::*;
     use crate::comm::backend::BackendProfile;
     use crate::comm::cost::CostParams;
-    use crate::spmd::run;
+    use crate::testing::spmd_run as run;
 
     fn fixed() -> BackendProfile {
         BackendProfile::openmpi_fixed()

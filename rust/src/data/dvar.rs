@@ -9,7 +9,6 @@
 //! (Θ(log p (t_s + t_w m))), `set(...)` replaces it on the owner,
 //! `move_to(...)` migrates ownership (Θ(t_s + t_w m)).
 
-use crate::comm::collectives;
 use crate::comm::group::Group;
 use crate::data::value::Data;
 use crate::spmd::Ctx;
@@ -67,7 +66,7 @@ impl<'a, T: Data> DistVar<'a, T> {
         if !self.group.is_member() {
             return None;
         }
-        Some(collectives::bcast(&self.group, self.owner, self.local.clone()))
+        Some(self.group.bcast(self.owner, self.local.clone()))
     }
 
     /// Replace the value; `f` runs only on the owner.  Collective-free.
@@ -104,7 +103,7 @@ mod tests {
     use super::*;
     use crate::comm::backend::BackendProfile;
     use crate::comm::cost::CostParams;
-    use crate::spmd::run;
+    use crate::testing::spmd_run as run;
 
     fn world(p: usize, f: impl Fn(&Ctx) -> Option<u64> + Sync) -> Vec<Option<u64>> {
         run(p, BackendProfile::openmpi_fixed(), CostParams::free(), f).results

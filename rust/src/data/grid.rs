@@ -243,7 +243,7 @@ mod tests {
     use super::*;
     use crate::comm::backend::BackendProfile;
     use crate::comm::cost::CostParams;
-    use crate::spmd::run;
+    use crate::testing::spmd_run as run;
 
     fn fixed() -> BackendProfile {
         BackendProfile::openmpi_fixed()

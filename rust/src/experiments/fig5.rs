@@ -12,14 +12,16 @@
 //! a laptop.  Headline check: Carver @ (n≈40000, p=512) ⇒ ~88.8%
 //! efficiency.
 
+use std::sync::Arc;
+
 use crate::algos::{dns_baseline, mmm_dns};
 use crate::analysis;
-use crate::comm::backend::BackendProfile;
+use crate::comm::backend::{registry, Backend, BackendProfile};
 use crate::config::MachineConfig;
 use crate::matrix::block::BlockSource;
 use crate::metrics::render_table;
 use crate::runtime::compute::Compute;
-use crate::spmd;
+use crate::spmd::Runtime;
 
 /// One curve point.
 #[derive(Clone, Debug)]
@@ -52,10 +54,10 @@ pub fn ns_for(machine: &MachineConfig) -> &'static [usize] {
     }
 }
 
-/// Run one modeled DNS point.
+/// Run one modeled DNS point against any registered (or ad-hoc) backend.
 pub fn run_point(
     machine: &MachineConfig,
-    backend: BackendProfile,
+    backend: &Arc<dyn Backend>,
     n: usize,
     p: usize,
     baseline: bool,
@@ -67,18 +69,23 @@ pub fn run_point(
     let a = BlockSource::proxy(b, 1);
     let bm = BlockSource::proxy(b, 2);
     let comp = Compute::Modeled { rate: machine.rate };
-    let res = spmd::run(p, backend, machine.cost(), |ctx| {
-        if baseline {
-            dns_baseline::dns_baseline(ctx, &comp, q, &a, &bm).t_local
-        } else {
-            mmm_dns::mmm_dns(ctx, &comp, q, &a, &bm).t_local
-        }
-    });
+    let res = Runtime::builder()
+        .world(p)
+        .backend_obj(backend.clone())
+        .machine_config(machine)
+        .run(|ctx| {
+            if baseline {
+                dns_baseline::dns_baseline(ctx, &comp, q, &a, &bm).t_local
+            } else {
+                mmm_dns::mmm_dns(ctx, &comp, q, &a, &bm).t_local
+            }
+        })
+        .expect("fig5 runtime");
     let ts = analysis::ts_n3(n, &model(machine));
     let eff = analysis::efficiency(ts, res.t_parallel, p);
     Fig5Row {
         algo: if baseline { "c-baseline" } else { "foopar-dns" },
-        backend: backend.name.to_string(),
+        backend: backend.name().to_string(),
         n,
         p,
         t_parallel: res.t_parallel,
@@ -95,26 +102,26 @@ pub fn model(machine: &MachineConfig) -> analysis::ModelParams {
 pub fn sweep(machine: &MachineConfig, with_baseline: bool) -> Vec<Fig5Row> {
     let mut rows = Vec::new();
     for bname in &machine.backends {
-        let backend = BackendProfile::by_name(bname)
+        let backend = registry::by_name(bname)
             .unwrap_or_else(|| panic!("unknown backend '{bname}'"));
         for &n in ns_for(machine) {
             for &p in &PS_CUBES {
                 if p > machine.max_cores {
                     continue;
                 }
-                rows.push(run_point(machine, backend, n, p, false));
+                rows.push(run_point(machine, &backend, n, p, false));
             }
         }
     }
     if with_baseline {
         // The C/MPI comparison is run with the best backend only (§6).
-        let backend = BackendProfile::openmpi_fixed();
+        let backend: Arc<dyn Backend> = Arc::new(BackendProfile::openmpi_fixed());
         let n = *NS_PAPER.last().unwrap();
         for &p in &PS_CUBES {
             if p > machine.max_cores {
                 continue;
             }
-            rows.push(run_point(machine, backend, n, p, true));
+            rows.push(run_point(machine, &backend, n, p, true));
         }
     }
     rows
@@ -145,13 +152,8 @@ pub fn render(rows: &[Fig5Row]) -> String {
 /// The headline claim of §6: Carver, n≈40000, p=512 ⇒ ~88.8% efficiency
 /// w.r.t. theoretical peak (93.7% of empirical).  Returns (row, eff_vs_peak).
 pub fn headline(machine: &MachineConfig) -> (Fig5Row, f64) {
-    let row = run_point(
-        machine,
-        BackendProfile::openmpi_fixed(),
-        *NS_PAPER.last().unwrap(),
-        512,
-        false,
-    );
+    let backend: Arc<dyn Backend> = Arc::new(BackendProfile::openmpi_fixed());
+    let row = run_point(machine, &backend, *NS_PAPER.last().unwrap(), 512, false);
     let vs_peak = row.efficiency * machine.rate / machine.peak;
     (row, vs_peak)
 }
@@ -160,12 +162,16 @@ pub fn headline(machine: &MachineConfig) -> (Fig5Row, f64) {
 mod tests {
     use super::*;
 
+    fn arc(p: BackendProfile) -> Arc<dyn Backend> {
+        Arc::new(p)
+    }
+
     #[test]
     fn efficiency_increases_with_n_at_fixed_p() {
         let m = MachineConfig::carver();
-        let b = BackendProfile::openmpi_fixed();
-        let e1 = run_point(&m, b, 10_080, 216, false).efficiency;
-        let e2 = run_point(&m, b, 40_320, 216, false).efficiency;
+        let b = arc(BackendProfile::openmpi_fixed());
+        let e1 = run_point(&m, &b, 10_080, 216, false).efficiency;
+        let e2 = run_point(&m, &b, 40_320, 216, false).efficiency;
         assert!(e2 > e1, "{e2} vs {e1}");
     }
 
@@ -189,8 +195,8 @@ mod tests {
     fn stock_backend_loses_at_scale() {
         // Fig. 5 right: Θ(p) reduction must hurt at p=512
         let m = MachineConfig::horseshoe6();
-        let fixed = run_point(&m, BackendProfile::openmpi_fixed(), 5_040, 512, false);
-        let stock = run_point(&m, BackendProfile::openmpi_stock(), 5_040, 512, false);
+        let fixed = run_point(&m, &arc(BackendProfile::openmpi_fixed()), 5_040, 512, false);
+        let stock = run_point(&m, &arc(BackendProfile::openmpi_stock()), 5_040, 512, false);
         assert!(
             stock.efficiency < fixed.efficiency,
             "stock {} !< fixed {}",
@@ -202,9 +208,9 @@ mod tests {
     #[test]
     fn baseline_slightly_better_than_framework() {
         let m = MachineConfig::carver();
-        let b = BackendProfile::openmpi_fixed();
-        let foo = run_point(&m, b, 40_320, 512, false);
-        let c = run_point(&m, b, 40_320, 512, true);
+        let b = arc(BackendProfile::openmpi_fixed());
+        let foo = run_point(&m, &b, 40_320, 512, false);
+        let c = run_point(&m, &b, 40_320, 512, true);
         // §6: "The C-version performs only slightly better."
         assert!(c.efficiency >= foo.efficiency * 0.99);
         assert!(c.efficiency <= foo.efficiency * 1.10);

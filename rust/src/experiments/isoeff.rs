@@ -18,7 +18,7 @@ use crate::config::MachineConfig;
 use crate::matrix::block::BlockSource;
 use crate::metrics::render_table;
 use crate::runtime::compute::Compute;
-use crate::spmd;
+use crate::spmd::Runtime;
 
 pub const TARGET: f64 = 0.75;
 
@@ -83,30 +83,29 @@ impl Algo {
     pub fn run(&self, machine: &MachineConfig, n: usize, p: usize) -> f64 {
         let q = self.q(p);
         let comp = Compute::Modeled { rate: machine.rate };
-        let backend = BackendProfile::openmpi_fixed();
+        let rt = Runtime::builder()
+            .world(p)
+            .backend_profile(BackendProfile::openmpi_fixed())
+            .machine_config(machine)
+            .build()
+            .expect("isoeff runtime");
         match self {
             Algo::Generic => {
                 let a = BlockSource::proxy(n / q, 1);
                 let b = BlockSource::proxy(n / q, 2);
-                spmd::run(p, backend, machine.cost(), |ctx| {
-                    mmm_generic::mmm_generic(ctx, &comp, q, &a, &b).t_local
-                })
-                .t_parallel
+                rt.run(|ctx| mmm_generic::mmm_generic(ctx, &comp, q, &a, &b).t_local)
+                    .t_parallel
             }
             Algo::Dns => {
                 let a = BlockSource::proxy(n / q, 1);
                 let b = BlockSource::proxy(n / q, 2);
-                spmd::run(p, backend, machine.cost(), |ctx| {
-                    mmm_dns::mmm_dns(ctx, &comp, q, &a, &b).t_local
-                })
-                .t_parallel
+                rt.run(|ctx| mmm_dns::mmm_dns(ctx, &comp, q, &a, &b).t_local)
+                    .t_parallel
             }
             Algo::Fw => {
                 let src = floyd_warshall::FwSource::Proxy { n };
-                spmd::run(p, backend, machine.cost(), |ctx| {
-                    floyd_warshall::floyd_warshall_par(ctx, &comp, q, &src).t_local
-                })
-                .t_parallel
+                rt.run(|ctx| floyd_warshall::floyd_warshall_par(ctx, &comp, q, &src).t_local)
+                    .t_parallel
             }
         }
     }

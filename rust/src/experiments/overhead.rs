@@ -8,7 +8,7 @@ use crate::config::MachineConfig;
 use crate::matrix::block::BlockSource;
 use crate::metrics::render_table;
 use crate::runtime::compute::Compute;
-use crate::spmd;
+use crate::spmd::Runtime;
 
 #[derive(Clone, Debug)]
 pub struct OverheadRow {
@@ -29,14 +29,15 @@ pub fn measure(machine: &MachineConfig, n: usize, p: usize) -> OverheadRow {
     let a = BlockSource::proxy(n / q, 1);
     let b = BlockSource::proxy(n / q, 2);
     let comp = Compute::Modeled { rate: machine.rate };
-    let backend = BackendProfile::openmpi_fixed();
+    let rt = Runtime::builder()
+        .world(p)
+        .backend_profile(BackendProfile::openmpi_fixed())
+        .machine_config(machine)
+        .build()
+        .expect("overhead runtime");
 
-    let foo = spmd::run(p, backend, machine.cost(), |ctx| {
-        mmm_dns::mmm_dns(ctx, &comp, q, &a, &b).t_local
-    });
-    let base = spmd::run(p, backend, machine.cost(), |ctx| {
-        dns_baseline::dns_baseline(ctx, &comp, q, &a, &b).t_local
-    });
+    let foo = rt.run(|ctx| mmm_dns::mmm_dns(ctx, &comp, q, &a, &b).t_local);
+    let base = rt.run(|ctx| dns_baseline::dns_baseline(ctx, &comp, q, &a, &b).t_local);
 
     let foo_msgs: u64 = foo.metrics.iter().map(|m| m.msgs_sent).sum();
     let base_msgs: u64 = base.metrics.iter().map(|m| m.msgs_sent).sum();

@@ -14,7 +14,7 @@ use crate::comm::cost::CostParams;
 use crate::config::MachineConfig;
 use crate::data::dseq::DistSeq;
 use crate::metrics::render_table;
-use crate::spmd;
+use crate::spmd::{Ctx, Runtime};
 
 /// One measurement row.
 #[derive(Clone, Debug)]
@@ -43,12 +43,18 @@ pub fn measure_point(machine: &MachineConfig, p: usize, m_bytes: usize) -> Vec<T
     let backend = BackendProfile::openmpi_fixed();
     let cost = machine.cost();
     let c = backend.cost(cost);
+    let rt = Runtime::builder()
+        .world(p)
+        .backend_profile(backend)
+        .cost(cost)
+        .build()
+        .expect("table1 runtime");
     let mut rows = Vec::new();
 
     let mut case = |op: &'static str,
                     predicted: f64,
-                    f: &(dyn Fn(&spmd::Ctx) + Sync)| {
-        let res = spmd::run(p, backend, cost, |ctx| {
+                    f: &(dyn Fn(&Ctx) + Sync)| {
+        let res = rt.run(|ctx| {
             f(ctx);
             ctx.now()
         });

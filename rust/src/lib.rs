@@ -10,6 +10,11 @@
 //! explicit message passing (and with it deadlocks and races) while keeping
 //! every operation's parallel runtime analyzable (Table 1 of the paper).
 //!
+//! Runs start at [`Runtime::builder`]: world size, a communication
+//! backend chosen by name from the [`comm::backend::registry`] (the
+//! paper's swappable `FooPar-X` modules — user backends plug in via the
+//! [`Backend`] and [`Collectives`] traits), and machine cost parameters.
+//!
 //! The per-rank compute hot spots (block GEMM, Floyd-Warshall pivot updates)
 //! are JAX/Pallas kernels AOT-lowered to HLO and executed through the PJRT C
 //! API ([`runtime`]); Python never runs on the request path.
@@ -35,6 +40,10 @@ pub mod testing;
 
 pub mod algos;
 pub mod experiments;
+
+pub use comm::backend::{Backend, BackendProfile};
+pub use comm::collectives::Collectives;
+pub use spmd::{Runtime, RuntimeBuilder};
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -18,14 +18,14 @@ use anyhow::{bail, Result};
 use foopar::algos::{apsp_squaring, cannon, dns_baseline, floyd_warshall, mmm_dns, mmm_generic, seq};
 use foopar::analysis;
 use foopar::cli::Args;
-use foopar::comm::backend::BackendProfile;
+use foopar::comm::backend::registry;
 use foopar::config::MachineConfig;
 use foopar::experiments::{fig5, isoeff, overhead, peak, table1};
 use foopar::graph::{floyd_warshall_seq, Graph};
 use foopar::matrix::block::BlockSource;
 use foopar::runtime::compute::Compute;
 use foopar::runtime::engine::EngineServer;
-use foopar::spmd;
+use foopar::Runtime;
 
 fn main() {
     let args = match Args::from_env() {
@@ -48,6 +48,13 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("selftest") => selftest(),
+        Some("backends") => {
+            println!("registered communication backends:");
+            for name in registry::names() {
+                println!("  {name}");
+            }
+            Ok(())
+        }
         Some("peak") => cmd_peak(args),
         Some("mmm") => cmd_mmm(args),
         Some("apsp") => cmd_apsp(args),
@@ -69,7 +76,8 @@ repro — FooPar reproduction (rust + JAX/Pallas AOT via PJRT)
   table1   [--machine M]            Table 1: measured op runtimes vs formulas
   fig5     [--machine carver|horseshoe6]   Fig. 5 efficiency curves
   isoeff   [--algo generic|dns|fw] [--target E]   isoefficiency verification
-  overhead [--machine M]            framework vs hand-coded DNS";
+  overhead [--machine M]            framework vs hand-coded DNS
+  backends                          list registered communication backends";
 
 /// Parse a `--mode` flag into a Compute (PJRT-real prefers artifacts).
 fn compute_for(mode: &str, machine: &MachineConfig) -> Result<Compute> {
@@ -111,9 +119,10 @@ fn selftest() -> Result<()> {
     println!("== selftest: DNS MMM (real, q=2) ==");
     let a = BlockSource::real(16, 11);
     let b = BlockSource::real(16, 22);
-    let res = spmd::run(8, BackendProfile::openmpi_fixed(), MachineConfig::local().cost(), |ctx| {
-        mmm_dns::mmm_dns(ctx, &Compute::Native, 2, &a, &b)
-    });
+    let res = Runtime::builder()
+        .world(8)
+        .machine("local")
+        .run(|ctx| mmm_dns::mmm_dns(ctx, &Compute::Native, 2, &a, &b))?;
     let c = mmm_dns::collect_c(&res.results, 2, 16);
     let want = seq::matmul_seq(&a.assemble(2), &b.assemble(2));
     let diff = c.max_abs_diff(&want);
@@ -122,9 +131,10 @@ fn selftest() -> Result<()> {
 
     println!("== selftest: Floyd-Warshall (real, q=2) ==");
     let src = floyd_warshall::FwSource::Real { n: 16, density: 0.3, seed: 3 };
-    let res = spmd::run(4, BackendProfile::openmpi_fixed(), MachineConfig::local().cost(), |ctx| {
-        floyd_warshall::floyd_warshall_par(ctx, &Compute::Native, 2, &src)
-    });
+    let res = Runtime::builder()
+        .world(4)
+        .machine("local")
+        .run(|ctx| floyd_warshall::floyd_warshall_par(ctx, &Compute::Native, 2, &src))?;
     let d = floyd_warshall::collect_d(&res.results, 2, 8);
     let g = Graph::random(16, 0.3, 3);
     let want = floyd_warshall_seq(&g);
@@ -190,14 +200,15 @@ fn cmd_mmm(args: &Args) -> Result<()> {
     let proxy = comp.is_modeled();
     let a = BlockSource { b: n / q, seed: 1, proxy };
     let b = BlockSource { b: n / q, seed: 2, proxy };
-    let backend = BackendProfile::by_name(args.get_str("backend", "openmpi-fixed"))
-        .ok_or_else(|| anyhow::anyhow!("unknown backend"))?;
+    let rt = Runtime::builder()
+        .world(p)
+        .backend(args.get_str("backend", "openmpi-fixed"))
+        .machine_config(&machine)
+        .build()?;
 
     let (t_parallel, wall, label) = match algo {
         "dns" => {
-            let r = spmd::run(p, backend, machine.cost(), |ctx| {
-                mmm_dns::mmm_dns(ctx, &comp, q, &a, &b)
-            });
+            let r = rt.run(|ctx| mmm_dns::mmm_dns(ctx, &comp, q, &a, &b));
             if !proxy {
                 let c = mmm_dns::collect_c(&r.results, q, n / q);
                 let want = seq::matmul_seq(&a.assemble(q), &b.assemble(q));
@@ -206,9 +217,7 @@ fn cmd_mmm(args: &Args) -> Result<()> {
             (r.t_parallel, r.wall, "foopar-dns")
         }
         "generic" => {
-            let r = spmd::run(p, backend, machine.cost(), |ctx| {
-                mmm_generic::mmm_generic(ctx, &comp, q, &a, &b)
-            });
+            let r = rt.run(|ctx| mmm_generic::mmm_generic(ctx, &comp, q, &a, &b));
             if !proxy {
                 let c = mmm_generic::collect_c(&r.results, q, n / q);
                 let want = seq::matmul_seq(&a.assemble(q), &b.assemble(q));
@@ -217,15 +226,11 @@ fn cmd_mmm(args: &Args) -> Result<()> {
             (r.t_parallel, r.wall, "foopar-generic")
         }
         "baseline" => {
-            let r = spmd::run(p, backend, machine.cost(), |ctx| {
-                dns_baseline::dns_baseline(ctx, &comp, q, &a, &b)
-            });
+            let r = rt.run(|ctx| dns_baseline::dns_baseline(ctx, &comp, q, &a, &b));
             (r.t_parallel, r.wall, "c-baseline")
         }
         "cannon" => {
-            let r = spmd::run(p, backend, machine.cost(), |ctx| {
-                cannon::mmm_cannon(ctx, &comp, q, &a, &b)
-            });
+            let r = rt.run(|ctx| cannon::mmm_cannon(ctx, &comp, q, &a, &b));
             if !proxy {
                 let c = cannon::collect_c(&r.results, q, n / q);
                 let want = seq::matmul_seq(&a.assemble(q), &b.assemble(q));
@@ -265,13 +270,15 @@ fn cmd_apsp(args: &Args) -> Result<()> {
         floyd_warshall::FwSource::Real { n, density: 0.3, seed: 42 }
     };
     let algo = args.get_str("algo", "fw");
-    let backend = BackendProfile::openmpi_fixed();
+    let rt = Runtime::builder()
+        .world(p)
+        .backend(args.get_str("backend", "openmpi-fixed"))
+        .machine_config(&machine)
+        .build()?;
 
     let t_parallel = match algo {
         "fw" => {
-            let r = spmd::run(p, backend, machine.cost(), |ctx| {
-                floyd_warshall::floyd_warshall_par(ctx, &comp, q, &src)
-            });
+            let r = rt.run(|ctx| floyd_warshall::floyd_warshall_par(ctx, &comp, q, &src));
             if let floyd_warshall::FwSource::Real { n, density, seed } = src {
                 let d = floyd_warshall::collect_d(&r.results, q, n / q);
                 let want = floyd_warshall_seq(&Graph::random(n, density, seed));
@@ -280,9 +287,7 @@ fn cmd_apsp(args: &Args) -> Result<()> {
             r.t_parallel
         }
         "squaring" => {
-            let r = spmd::run(p, backend, machine.cost(), |ctx| {
-                apsp_squaring::apsp_squaring_par(ctx, &comp, q, &src)
-            });
+            let r = rt.run(|ctx| apsp_squaring::apsp_squaring_par(ctx, &comp, q, &src));
             if let floyd_warshall::FwSource::Real { n, density, seed } = src {
                 let d = apsp_squaring::saturate(apsp_squaring::collect_d(&r.results, q, n / q));
                 let want = floyd_warshall_seq(&Graph::random(n, density, seed));

@@ -283,7 +283,7 @@ mod tests {
     use super::*;
     use crate::comm::backend::BackendProfile;
     use crate::comm::cost::CostParams;
-    use crate::spmd::run;
+    use crate::testing::spmd_run as run;
     use crate::testing::assert_allclose;
 
     fn with_ctx<R: Send>(f: impl Fn(&Ctx) -> R + Sync) -> R {

@@ -1,253 +1,361 @@
 //! The PJRT execution engine and its device-server thread.
 //!
-//! [`Engine`] owns a `PjRtClient` (CPU) plus a compile-on-demand cache of
-//! loaded executables, one per `(op, block-size)` artifact.  Because the
-//! `xla` crate's client is `Rc`-based (`!Send`), the engine runs on one
-//! dedicated thread ([`EngineServer`]) and SPMD ranks submit work through
-//! a cloneable, thread-safe [`EngineHandle`] — the same discipline as a
-//! per-node accelerator command queue.
+//! `Engine` owns a `PjRtClient` (CPU) plus a
+//! compile-on-demand cache of loaded executables, one per
+//! `(op, block-size)` artifact.  Because the `xla` crate's client is
+//! `Rc`-based (`!Send`), the engine runs on one dedicated thread
+//! ([`EngineServer`]) and SPMD ranks submit work through a cloneable,
+//! thread-safe [`EngineHandle`] — the same discipline as a per-node
+//! accelerator command queue.
 //!
-//! Interchange is HLO **text** (see python/compile/aot.py and
-//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` →
-//! `XlaComputation::from_proto` → `client.compile`.
+//! Interchange is HLO **text** (see python/compile/aot.py):
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile`.
+//!
+//! The whole execution path is gated behind the `pjrt` cargo feature
+//! (the `xla` crate is not part of the baseline image).  Without the
+//! feature, [`EngineServer::start`] / [`EngineServer::start_default`]
+//! report "unavailable" and every caller falls back to the native gemm
+//! path — the same behaviour as missing artifacts, so `--mode real`
+//! keeps working everywhere.
 
-use std::collections::HashMap;
-use std::sync::mpsc;
-use std::sync::Mutex;
-use std::time::Instant;
+#[cfg(feature = "pjrt")]
+pub use self::real::Engine;
+pub use self::imp::{EngineHandle, EngineServer};
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use self::real as imp;
+#[cfg(not(feature = "pjrt"))]
+use self::stub as imp;
 
-use super::artifacts::{ArtifactSet, Op};
-use crate::matrix::dense::Mat;
+#[cfg(feature = "pjrt")]
+mod real {
+    use std::collections::HashMap;
+    use std::sync::mpsc;
+    use std::sync::Mutex;
+    use std::time::Instant;
 
-/// Single-threaded PJRT engine (lives on the server thread).
-pub struct Engine {
-    client: xla::PjRtClient,
-    artifacts: ArtifactSet,
-    cache: HashMap<(Op, usize), xla::PjRtLoadedExecutable>,
-}
+    use anyhow::{anyhow, bail, Context, Result};
 
-impl Engine {
-    pub fn new(artifacts: ArtifactSet) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client, artifacts, cache: HashMap::new() })
+    use super::super::artifacts::{ArtifactSet, Op};
+    use crate::matrix::dense::Mat;
+
+    /// Single-threaded PJRT engine (lives on the server thread).
+    pub struct Engine {
+        client: xla::PjRtClient,
+        artifacts: ArtifactSet,
+        cache: HashMap<(Op, usize), xla::PjRtLoadedExecutable>,
     }
 
-    pub fn artifacts(&self) -> &ArtifactSet {
-        &self.artifacts
-    }
+    impl Engine {
+        pub fn new(artifacts: ArtifactSet) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Engine { client, artifacts, cache: HashMap::new() })
+        }
 
-    fn executable(&mut self, op: Op, b: usize) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.cache.contains_key(&(op, b)) {
-            if !self.artifacts.has(op, b) {
-                bail!("no artifact for {:?} at block size {b}", op);
+        pub fn artifacts(&self) -> &ArtifactSet {
+            &self.artifacts
+        }
+
+        fn executable(&mut self, op: Op, b: usize) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.cache.contains_key(&(op, b)) {
+                if !self.artifacts.has(op, b) {
+                    bail!("no artifact for {:?} at block size {b}", op);
+                }
+                let path = self.artifacts.path(op, b);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                )
+                .with_context(|| format!("parsing {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {}", path.display()))?;
+                self.cache.insert((op, b), exe);
             }
-            let path = self.artifacts.path(op, b);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .with_context(|| format!("parsing {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", path.display()))?;
-            self.cache.insert((op, b), exe);
+            Ok(&self.cache[&(op, b)])
         }
-        Ok(&self.cache[&(op, b)])
-    }
 
-    fn literal(m: &Mat) -> Result<xla::Literal> {
-        Ok(xla::Literal::vec1(&m.data).reshape(&[m.rows as i64, m.cols as i64])?)
-    }
-
-    /// Execute `op` at block size `b` on `inputs`; returns the single
-    /// output matrix with shape `(rows, cols)`.
-    pub fn exec(&mut self, op: Op, b: usize, inputs: &[&Mat], rows: usize, cols: usize) -> Result<Mat> {
-        let exe = self.executable(op, b)?;
-        let lits: Vec<xla::Literal> =
-            inputs.iter().map(|m| Self::literal(m)).collect::<Result<_>>()?;
-        let out = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = out.to_tuple1()?;
-        let data = out.to_vec::<f32>()?;
-        if data.len() != rows * cols {
-            bail!("{:?}_b{b}: expected {}x{} output, got {} elements", op, rows, cols, data.len());
+        fn literal(m: &Mat) -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(&m.data).reshape(&[m.rows as i64, m.cols as i64])?)
         }
-        Ok(Mat::from_vec(rows, cols, data))
+
+        /// Execute `op` at block size `b` on `inputs`; returns the single
+        /// output matrix with shape `(rows, cols)`.
+        pub fn exec(
+            &mut self,
+            op: Op,
+            b: usize,
+            inputs: &[&Mat],
+            rows: usize,
+            cols: usize,
+        ) -> Result<Mat> {
+            let exe = self.executable(op, b)?;
+            let lits: Vec<xla::Literal> =
+                inputs.iter().map(|m| Self::literal(m)).collect::<Result<_>>()?;
+            let out = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            let out = out.to_tuple1()?;
+            let data = out.to_vec::<f32>()?;
+            if data.len() != rows * cols {
+                bail!("{:?}_b{b}: expected {}x{} output, got {} elements", op, rows, cols, data.len());
+            }
+            Ok(Mat::from_vec(rows, cols, data))
+        }
+
+        /// Block GEMM via the Pallas artifact: inputs (b,b)·(b,b) → (b,b).
+        pub fn matmul(&mut self, a: &Mat, b: &Mat) -> Result<Mat> {
+            let n = a.rows;
+            self.exec(Op::Matmul, n, &[a, b], n, n)
+        }
+
+        pub fn matmul_acc(&mut self, c: &Mat, a: &Mat, b: &Mat) -> Result<Mat> {
+            let n = a.rows;
+            self.exec(Op::MatmulAcc, n, &[c, a, b], n, n)
+        }
+
+        pub fn add(&mut self, x: &Mat, y: &Mat) -> Result<Mat> {
+            let n = x.rows;
+            self.exec(Op::Add, n, &[x, y], n, x.cols)
+        }
+
+        /// FW pivot update: d (b,b), ik (1,b), kj (b,1) → (b,b).
+        pub fn fw_update(&mut self, d: &Mat, ik: &Mat, kj: &Mat) -> Result<Mat> {
+            let n = d.rows;
+            self.exec(Op::FwUpdate, n, &[d, ik, kj], n, n)
+        }
+
+        pub fn minplus(&mut self, a: &Mat, b: &Mat) -> Result<Mat> {
+            let n = a.rows;
+            self.exec(Op::MinPlus, n, &[a, b], n, n)
+        }
     }
 
-    /// Block GEMM via the Pallas artifact: inputs (b,b)·(b,b) → (b,b).
-    pub fn matmul(&mut self, a: &Mat, b: &Mat) -> Result<Mat> {
-        let n = a.rows;
-        self.exec(Op::Matmul, n, &[a, b], n, n)
-    }
+    // --------------------------------------------------- server + handle
 
-    pub fn matmul_acc(&mut self, c: &Mat, a: &Mat, b: &Mat) -> Result<Mat> {
-        let n = a.rows;
-        self.exec(Op::MatmulAcc, n, &[c, a, b], n, n)
-    }
-
-    pub fn add(&mut self, x: &Mat, y: &Mat) -> Result<Mat> {
-        let n = x.rows;
-        self.exec(Op::Add, n, &[x, y], n, x.cols)
-    }
-
-    /// FW pivot update: d (b,b), ik (1,b), kj (b,1) → (b,b).
-    pub fn fw_update(&mut self, d: &Mat, ik: &Mat, kj: &Mat) -> Result<Mat> {
-        let n = d.rows;
-        self.exec(Op::FwUpdate, n, &[d, ik, kj], n, n)
-    }
-
-    pub fn minplus(&mut self, a: &Mat, b: &Mat) -> Result<Mat> {
-        let n = a.rows;
-        self.exec(Op::MinPlus, n, &[a, b], n, n)
-    }
-}
-
-// ------------------------------------------------------- server + handle
-
-struct Request {
-    op: Op,
-    b: usize,
-    inputs: Vec<Mat>,
-    rows: usize,
-    cols: usize,
-    reply: mpsc::Sender<Result<(Mat, f64)>>,
-}
-
-/// Thread-safe, cloneable handle to the device-server thread.
-///
-/// `exec` returns the result matrix plus the *device execution seconds*
-/// (excluding queue wait) so callers can charge virtual compute time.
-pub struct EngineHandle {
-    tx: Mutex<mpsc::Sender<Request>>,
-    artifacts: ArtifactSet,
-}
-
-impl EngineHandle {
-    pub fn supports(&self, op: Op, b: usize) -> bool {
-        self.artifacts.has(op, b)
-    }
-
-    pub fn artifacts(&self) -> &ArtifactSet {
-        &self.artifacts
-    }
-
-    pub fn exec(
-        &self,
+    struct Request {
         op: Op,
         b: usize,
         inputs: Vec<Mat>,
         rows: usize,
         cols: usize,
-    ) -> Result<(Mat, f64)> {
-        let (rtx, rrx) = mpsc::channel();
-        {
-            let tx = self.tx.lock().unwrap();
-            tx.send(Request { op, b, inputs, rows, cols, reply: rtx })
-                .map_err(|_| anyhow!("engine server is gone"))?;
+        reply: mpsc::Sender<Result<(Mat, f64)>>,
+    }
+
+    /// Thread-safe, cloneable handle to the device-server thread.
+    ///
+    /// `exec` returns the result matrix plus the *device execution
+    /// seconds* (excluding queue wait) so callers can charge virtual
+    /// compute time.
+    pub struct EngineHandle {
+        tx: Mutex<mpsc::Sender<Request>>,
+        artifacts: ArtifactSet,
+    }
+
+    impl EngineHandle {
+        pub fn supports(&self, op: Op, b: usize) -> bool {
+            self.artifacts.has(op, b)
         }
-        rrx.recv().map_err(|_| anyhow!("engine server dropped reply"))?
-    }
 
-    pub fn matmul(&self, a: Mat, b: Mat) -> Result<(Mat, f64)> {
-        let n = a.rows;
-        self.exec(Op::Matmul, n, vec![a, b], n, n)
-    }
+        pub fn artifacts(&self) -> &ArtifactSet {
+            &self.artifacts
+        }
 
-    pub fn matmul_acc(&self, c: Mat, a: Mat, b: Mat) -> Result<(Mat, f64)> {
-        let n = a.rows;
-        self.exec(Op::MatmulAcc, n, vec![c, a, b], n, n)
-    }
+        pub fn exec(
+            &self,
+            op: Op,
+            b: usize,
+            inputs: Vec<Mat>,
+            rows: usize,
+            cols: usize,
+        ) -> Result<(Mat, f64)> {
+            let (rtx, rrx) = mpsc::channel();
+            {
+                let tx = self.tx.lock().unwrap();
+                tx.send(Request { op, b, inputs, rows, cols, reply: rtx })
+                    .map_err(|_| anyhow!("engine server is gone"))?;
+            }
+            rrx.recv().map_err(|_| anyhow!("engine server dropped reply"))?
+        }
 
-    pub fn add(&self, x: Mat, y: Mat) -> Result<(Mat, f64)> {
-        let n = x.rows;
-        let c = x.cols;
-        self.exec(Op::Add, n, vec![x, y], n, c)
-    }
+        pub fn matmul(&self, a: Mat, b: Mat) -> Result<(Mat, f64)> {
+            let n = a.rows;
+            self.exec(Op::Matmul, n, vec![a, b], n, n)
+        }
 
-    pub fn fw_update(&self, d: Mat, ik: Mat, kj: Mat) -> Result<(Mat, f64)> {
-        let n = d.rows;
-        self.exec(Op::FwUpdate, n, vec![d, ik, kj], n, n)
-    }
+        pub fn matmul_acc(&self, c: Mat, a: Mat, b: Mat) -> Result<(Mat, f64)> {
+            let n = a.rows;
+            self.exec(Op::MatmulAcc, n, vec![c, a, b], n, n)
+        }
 
-    pub fn minplus(&self, a: Mat, b: Mat) -> Result<(Mat, f64)> {
-        let n = a.rows;
-        self.exec(Op::MinPlus, n, vec![a, b], n, n)
-    }
-}
+        pub fn add(&self, x: Mat, y: Mat) -> Result<(Mat, f64)> {
+            let n = x.rows;
+            let c = x.cols;
+            self.exec(Op::Add, n, vec![x, y], n, c)
+        }
 
-/// Owns the device-server thread; dropping it shuts the server down.
-pub struct EngineServer {
-    tx: mpsc::Sender<Request>,
-    artifacts: ArtifactSet,
-    join: Option<std::thread::JoinHandle<()>>,
-}
+        pub fn fw_update(&self, d: Mat, ik: Mat, kj: Mat) -> Result<(Mat, f64)> {
+            let n = d.rows;
+            self.exec(Op::FwUpdate, n, vec![d, ik, kj], n, n)
+        }
 
-impl EngineServer {
-    /// Spawn the server with artifacts discovered at the default location.
-    pub fn start_default() -> Result<Self> {
-        Self::start(ArtifactSet::discover_default()?)
-    }
-
-    /// Spawn the server thread; the PJRT client is created on that thread
-    /// (it is `!Send`).
-    pub fn start(artifacts: ArtifactSet) -> Result<Self> {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let arts = artifacts.clone();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let join = std::thread::Builder::new()
-            .name("pjrt-engine".into())
-            .spawn(move || {
-                let mut engine = match Engine::new(arts) {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok(()));
-                        e
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                while let Ok(req) = rx.recv() {
-                    let t0 = Instant::now();
-                    let refs: Vec<&Mat> = req.inputs.iter().collect();
-                    let res = engine
-                        .exec(req.op, req.b, &refs, req.rows, req.cols)
-                        .map(|m| (m, t0.elapsed().as_secs_f64()));
-                    let _ = req.reply.send(res);
-                }
-            })
-            .expect("spawn pjrt-engine thread");
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("engine thread died before ready"))?
-            .context("starting PJRT engine")?;
-        Ok(EngineServer { tx, artifacts, join: Some(join) })
-    }
-
-    /// A fresh handle for sharing with SPMD ranks.
-    pub fn handle(&self) -> EngineHandle {
-        EngineHandle { tx: Mutex::new(self.tx.clone()), artifacts: self.artifacts.clone() }
-    }
-}
-
-impl Drop for EngineServer {
-    fn drop(&mut self) {
-        // Close the channel so the server loop exits, then join.
-        let (dummy_tx, _) = mpsc::channel();
-        drop(std::mem::replace(&mut self.tx, dummy_tx));
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
+        pub fn minplus(&self, a: Mat, b: Mat) -> Result<(Mat, f64)> {
+            let n = a.rows;
+            self.exec(Op::MinPlus, n, vec![a, b], n, n)
         }
     }
+
+    /// Owns the device-server thread; dropping it shuts the server down.
+    pub struct EngineServer {
+        tx: mpsc::Sender<Request>,
+        artifacts: ArtifactSet,
+        join: Option<std::thread::JoinHandle<()>>,
+    }
+
+    impl EngineServer {
+        /// Spawn the server with artifacts discovered at the default
+        /// location.
+        pub fn start_default() -> Result<Self> {
+            Self::start(ArtifactSet::discover_default()?)
+        }
+
+        /// Spawn the server thread; the PJRT client is created on that
+        /// thread (it is `!Send`).
+        pub fn start(artifacts: ArtifactSet) -> Result<Self> {
+            let (tx, rx) = mpsc::channel::<Request>();
+            let arts = artifacts.clone();
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+            let join = std::thread::Builder::new()
+                .name("pjrt-engine".into())
+                .spawn(move || {
+                    let mut engine = match Engine::new(arts) {
+                        Ok(e) => {
+                            let _ = ready_tx.send(Ok(()));
+                            e
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    while let Ok(req) = rx.recv() {
+                        let t0 = Instant::now();
+                        let refs: Vec<&Mat> = req.inputs.iter().collect();
+                        let res = engine
+                            .exec(req.op, req.b, &refs, req.rows, req.cols)
+                            .map(|m| (m, t0.elapsed().as_secs_f64()));
+                        let _ = req.reply.send(res);
+                    }
+                })
+                .expect("spawn pjrt-engine thread");
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("engine thread died before ready"))?
+                .context("starting PJRT engine")?;
+            Ok(EngineServer { tx, artifacts, join: Some(join) })
+        }
+
+        /// A fresh handle for sharing with SPMD ranks.
+        pub fn handle(&self) -> EngineHandle {
+            EngineHandle { tx: Mutex::new(self.tx.clone()), artifacts: self.artifacts.clone() }
+        }
+    }
+
+    impl Drop for EngineServer {
+        fn drop(&mut self) {
+            // Close the channel so the server loop exits, then join.
+            let (dummy_tx, _) = mpsc::channel();
+            drop(std::mem::replace(&mut self.tx, dummy_tx));
+            if let Some(j) = self.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
 }
 
-#[cfg(test)]
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    //! Featureless stand-ins with the same public surface: construction
+    //! always fails, `supports` is always false, so callers (the
+    //! [`Compute`](crate::runtime::compute::Compute) layer, the CLI, the
+    //! examples) take their native fallback paths.
+
+    use anyhow::{bail, Result};
+
+    use super::super::artifacts::{ArtifactSet, Op};
+    use crate::matrix::dense::Mat;
+
+    const UNAVAILABLE: &str =
+        "PJRT engine unavailable: crate built without the `pjrt` feature \
+         (requires the `xla` dependency)";
+
+    /// Stub handle: supports nothing, executes nothing.
+    pub struct EngineHandle {
+        _private: (),
+    }
+
+    impl EngineHandle {
+        pub fn supports(&self, _op: Op, _b: usize) -> bool {
+            false
+        }
+
+        pub fn exec(
+            &self,
+            _op: Op,
+            _b: usize,
+            _inputs: Vec<Mat>,
+            _rows: usize,
+            _cols: usize,
+        ) -> Result<(Mat, f64)> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn matmul(&self, _a: Mat, _b: Mat) -> Result<(Mat, f64)> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn matmul_acc(&self, _c: Mat, _a: Mat, _b: Mat) -> Result<(Mat, f64)> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn add(&self, _x: Mat, _y: Mat) -> Result<(Mat, f64)> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn fw_update(&self, _d: Mat, _ik: Mat, _kj: Mat) -> Result<(Mat, f64)> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn minplus(&self, _a: Mat, _b: Mat) -> Result<(Mat, f64)> {
+            bail!(UNAVAILABLE)
+        }
+    }
+
+    /// Stub server: never starts.
+    pub struct EngineServer {
+        _private: (),
+    }
+
+    impl EngineServer {
+        pub fn start_default() -> Result<Self> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn start(_artifacts: ArtifactSet) -> Result<Self> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn handle(&self) -> EngineHandle {
+            EngineHandle { _private: () }
+        }
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
+    use crate::matrix::dense::Mat;
     use crate::matrix::gemm;
     use crate::testing::assert_allclose;
 
@@ -323,5 +431,16 @@ mod tests {
         let a = Mat::random(17, 17, 1); // 17 is not an artifact size
         let r = h.matmul(a.clone(), a);
         assert!(r.is_err());
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_server_reports_unavailable() {
+        let err = EngineServer::start_default().unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"), "{err:#}");
     }
 }

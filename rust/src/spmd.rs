@@ -1,9 +1,23 @@
-//! SPMD runtime: rank contexts and the thread-per-rank launcher.
+//! SPMD runtime: rank contexts, the [`Runtime`] builder entry point, and
+//! the thread-per-rank launcher.
 //!
 //! FooPar programs are SPMD: every rank runs the same closure; distributed
-//! collections decide per-rank behaviour (§3.2 of the paper).  [`run`]
-//! spawns `world` OS threads over a shared [`Fabric`], hands each a [`Ctx`]
-//! and collects results, per-rank virtual clocks and metrics at the join.
+//! collections decide per-rank behaviour (§3.2 of the paper).  A run is
+//! configured through the builder —
+//!
+//! ```text
+//! let res = Runtime::builder()
+//!     .world(8)                 // number of ranks
+//!     .backend("shmem")         // registry lookup (or .backend_profile /
+//!                               //  .backend_obj for explicit objects)
+//!     .machine("carver")        // interconnect costs (or .cost(...))
+//!     .run(|ctx| ...)?;         // the SPMD closure, once per rank
+//! ```
+//!
+//! — which spawns `world` OS threads over a shared [`Fabric`], hands each
+//! a [`Ctx`] wired to the backend's
+//! [`Collectives`](crate::comm::collectives::Collectives) strategy, and
+//! collects results, per-rank virtual clocks and metrics at the join.
 //!
 //! The parallel runtime reported for a run, `T_P`, is the **maximum
 //! virtual clock** over ranks — exactly the quantity the paper's
@@ -14,22 +28,29 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::comm::backend::BackendProfile;
+use anyhow::anyhow;
+
+use crate::comm::backend::{registry, Backend, BackendProfile};
+use crate::comm::collectives::Collectives;
 use crate::comm::cost::CostParams;
 use crate::comm::fabric::{Envelope, Fabric};
+use crate::comm::message::Msg;
+use crate::config::MachineConfig;
 use crate::data::value::Data;
 use crate::metrics::{MetricsSnapshot, RankMetrics};
 
-/// Per-rank execution context: identity, clock, fabric access, metrics.
+/// Per-rank execution context: identity, clock, fabric access, metrics,
+/// and the active backend's collective strategy.
 pub struct Ctx {
     pub rank: usize,
     pub world: usize,
     fabric: Arc<Fabric>,
     /// Virtual time in seconds (the paper's cost model §2).
     clock: Cell<f64>,
-    /// Effective cost parameters (machine base × backend factors).
+    /// Effective cost parameters (machine base × backend shaping).
     pub cost: CostParams,
-    pub backend: BackendProfile,
+    backend: Arc<dyn Backend>,
+    collectives: Arc<dyn Collectives>,
     pub metrics: RankMetrics,
     /// Group-signature → number of groups created with that signature;
     /// used to give every group instance a distinct tag namespace that is
@@ -41,19 +62,38 @@ impl Ctx {
     fn new(
         rank: usize,
         fabric: Arc<Fabric>,
-        backend: BackendProfile,
+        backend: Arc<dyn Backend>,
         machine: CostParams,
     ) -> Self {
+        let cost = backend.cost(machine);
+        let collectives = backend.collectives();
         Ctx {
             rank,
             world: fabric.world(),
             fabric,
             clock: Cell::new(0.0),
-            cost: backend.cost(machine),
+            cost,
             backend,
+            collectives,
             metrics: RankMetrics::new(),
             tag_alloc: RefCell::new(HashMap::new()),
         }
+    }
+
+    /// The active communication backend.
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    /// Name of the active backend (registry key).
+    pub fn backend_name(&self) -> &str {
+        self.backend.name()
+    }
+
+    /// The active backend's collective strategy object — what
+    /// [`Group`](crate::comm::group::Group) methods dispatch through.
+    pub fn collectives(&self) -> &dyn Collectives {
+        self.collectives.as_ref()
     }
 
     /// Current virtual time of this rank (seconds).
@@ -89,22 +129,23 @@ impl Ctx {
     /// linear broadcast cost Θ(p) at the root; receiver-side occupancy
     /// makes a linear reduction cost Θ(p) at the root — both emergent.
     pub fn send<T: Data>(&self, dst: usize, tag: u64, value: T) {
+        self.send_msg(dst, tag, Msg::new(value));
+    }
+
+    /// Erased variant of [`Ctx::send`]: every payload crossing the fabric
+    /// is a [`Msg`], so generic and collective traffic share one cost and
+    /// metrics path.
+    pub fn send_msg(&self, dst: usize, tag: u64, msg: Msg) {
         debug_assert!(dst < self.world, "send to rank {dst} outside world");
         debug_assert_ne!(dst, self.rank, "self-send is a framework bug");
-        let bytes = value.byte_size();
+        let bytes = msg.bytes();
         let ready = self.clock.get();
         let secs = self.cost.msg(bytes);
         self.clock.set(ready + secs);
         self.metrics.on_send(bytes, secs);
         self.fabric.post(
             dst,
-            Envelope {
-                src: self.rank,
-                tag,
-                bytes,
-                ready,
-                payload: Box::new(value),
-            },
+            Envelope { src: self.rank, tag, bytes, ready, payload: msg },
         );
     }
 
@@ -113,19 +154,23 @@ impl Ctx {
     /// The transfer starts at `max(own_clock, sender_ready)` and occupies
     /// the receiver for `ts + tw·bytes`.
     pub fn recv<T: Data>(&self, src: usize, tag: u64) -> T {
+        self.recv_msg(src, tag).try_downcast::<T>().unwrap_or_else(|_| {
+            panic!(
+                "rank {}: recv(src={src}, tag={tag:#x}) payload type mismatch (expected {})",
+                self.rank,
+                std::any::type_name::<T>()
+            )
+        })
+    }
+
+    /// Erased variant of [`Ctx::recv`].
+    pub fn recv_msg(&self, src: usize, tag: u64) -> Msg {
         let env = self.fabric.take(self.rank, src, tag);
         let before = self.clock.get();
         let after = before.max(env.ready) + self.cost.msg(env.bytes);
         self.clock.set(after);
         self.metrics.on_recv(env.bytes, after - before);
-        *env
-            .payload
-            .downcast::<T>()
-            .unwrap_or_else(|_| panic!(
-                "rank {}: recv(src={src}, tag={tag:#x}) payload type mismatch (expected {})",
-                self.rank,
-                std::any::type_name::<T>()
-            ))
+        env.payload
     }
 
     /// Combined send + receive as one **full-duplex round** (single-port
@@ -142,11 +187,24 @@ impl Ctx {
         tag: u64,
         value: T,
     ) -> U {
-        let bytes_out = value.byte_size();
+        self.send_recv_msg(dst, src, tag, Msg::new(value))
+            .try_downcast::<U>()
+            .unwrap_or_else(|_| {
+                panic!(
+                    "rank {}: send_recv(src={src}, tag={tag:#x}) payload type mismatch (expected {})",
+                    self.rank,
+                    std::any::type_name::<U>()
+                )
+            })
+    }
+
+    /// Erased variant of [`Ctx::send_recv`].
+    pub fn send_recv_msg(&self, dst: usize, src: usize, tag: u64, msg: Msg) -> Msg {
+        let bytes_out = msg.bytes();
         let ready = self.clock.get();
         self.fabric.post(
             dst,
-            Envelope { src: self.rank, tag, bytes: bytes_out, ready, payload: Box::new(value) },
+            Envelope { src: self.rank, tag, bytes: bytes_out, ready, payload: msg },
         );
         let env = self.fabric.take(self.rank, src, tag);
         let start = ready.max(env.ready);
@@ -155,14 +213,7 @@ impl Ctx {
         self.clock.set(after);
         self.metrics.on_send(bytes_out, 0.0);
         self.metrics.on_recv(env.bytes, after - ready);
-        *env
-            .payload
-            .downcast::<U>()
-            .unwrap_or_else(|_| panic!(
-                "rank {}: send_recv(src={src}, tag={tag:#x}) payload type mismatch (expected {})",
-                self.rank,
-                std::any::type_name::<U>()
-            ))
+        env.payload
     }
 
     /// Allocate the tag namespace for a new group over `ranks`.
@@ -204,15 +255,191 @@ pub struct RunResult<R> {
     pub metrics: Vec<MetricsSnapshot>,
 }
 
-/// Launch `world` ranks running `f` in SPMD over a fresh fabric.
+// ------------------------------------------------------------- Runtime
+
+/// A configured SPMD runtime: world size + backend + machine costs.
 ///
-/// `f` runs once per rank; the returned [`RunResult`] orders everything by
-/// rank.  Rank panics propagate (with rank id) after all ranks finished or
-/// died — the deadlock timeout in [`Fabric::take`] guarantees progress.
-///
-/// Ranks execute on the process-wide [`pool`] of reusable worker threads:
-/// spawning 512 OS threads per run used to dominate the end-to-end driver
-/// wall time (§Perf in EXPERIMENTS.md).
+/// Build one with [`Runtime::builder`], then [`Runtime::run`] any number
+/// of SPMD closures on it (sweeps reuse one runtime per configuration).
+pub struct Runtime {
+    world: usize,
+    backend: Arc<dyn Backend>,
+    machine: CostParams,
+}
+
+impl Runtime {
+    /// Start configuring a runtime.  Defaults: `world(1)`, backend
+    /// `"openmpi-fixed"`, machine `CostParams::default()` (QDR
+    /// InfiniBand).
+    pub fn builder() -> RuntimeBuilder {
+        RuntimeBuilder {
+            world: 1,
+            backend: BackendChoice::Object(Arc::new(BackendProfile::openmpi_fixed())),
+            machine: MachineChoice::Cost(CostParams::default()),
+        }
+    }
+
+    /// Number of ranks this runtime launches.
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    /// The configured backend.
+    pub fn backend(&self) -> &Arc<dyn Backend> {
+        &self.backend
+    }
+
+    /// The machine's base cost parameters (before backend shaping).
+    pub fn machine_cost(&self) -> CostParams {
+        self.machine
+    }
+
+    /// Launch `world` ranks running `f` in SPMD over a fresh fabric.
+    ///
+    /// `f` runs once per rank; the returned [`RunResult`] orders
+    /// everything by rank.  Rank panics propagate (with rank id) after
+    /// all ranks finished or died — the deadlock timeout in
+    /// [`Fabric::take`] guarantees progress.
+    ///
+    /// Ranks execute on the process-wide [`pool`] of reusable worker
+    /// threads: spawning 512 OS threads per run used to dominate the
+    /// end-to-end driver wall time (§Perf in EXPERIMENTS.md).
+    pub fn run<R, F>(&self, f: F) -> RunResult<R>
+    where
+        R: Send,
+        F: Fn(&Ctx) -> R + Sync,
+    {
+        let world = self.world;
+        assert!(world > 0);
+        let fabric = Fabric::new(world);
+        let wall0 = Instant::now();
+        let slots: Vec<Mutex<Option<(R, f64, MetricsSnapshot)>>> =
+            (0..world).map(|_| Mutex::new(None)).collect();
+
+        pool::scoped_run(world, &|rank| {
+            let ctx = Ctx::new(rank, fabric.clone(), self.backend.clone(), self.machine);
+            let r = f(&ctx);
+            fabric.close(rank);
+            *slots[rank].lock().unwrap() = Some((r, ctx.now(), ctx.metrics.snapshot()));
+        });
+
+        let wall = wall0.elapsed();
+        let mut results = Vec::with_capacity(world);
+        let mut clocks = Vec::with_capacity(world);
+        let mut metrics = Vec::with_capacity(world);
+        for s in slots {
+            let (r, c, m) = s
+                .into_inner()
+                .unwrap()
+                .expect("rank finished without result");
+            results.push(r);
+            clocks.push(c);
+            metrics.push(m);
+        }
+        let t_parallel = clocks.iter().cloned().fold(0.0, f64::max);
+        RunResult { results, t_parallel, clocks, wall, metrics }
+    }
+}
+
+enum BackendChoice {
+    /// Resolved through the registry at [`RuntimeBuilder::build`] time.
+    Named(String),
+    Object(Arc<dyn Backend>),
+}
+
+enum MachineChoice {
+    /// Resolved through [`MachineConfig::resolve`] at build time.
+    Named(String),
+    Cost(CostParams),
+}
+
+/// Builder for [`Runtime`] — the entry point of every SPMD program.
+pub struct RuntimeBuilder {
+    world: usize,
+    backend: BackendChoice,
+    machine: MachineChoice,
+}
+
+impl RuntimeBuilder {
+    /// Number of ranks (must be > 0).
+    pub fn world(mut self, world: usize) -> Self {
+        self.world = world;
+        self
+    }
+
+    /// Select the communication backend by registry name (built-ins:
+    /// `openmpi-fixed`, `openmpi-stock`, `mpj-express`, `fastmpj`,
+    /// `shmem` — plus anything registered via
+    /// [`registry::register`]).  Resolved at [`RuntimeBuilder::build`].
+    pub fn backend(mut self, name: &str) -> Self {
+        self.backend = BackendChoice::Named(name.to_string());
+        self
+    }
+
+    /// Use an explicit backend object (bypasses the registry).
+    pub fn backend_obj(mut self, backend: Arc<dyn Backend>) -> Self {
+        self.backend = BackendChoice::Object(backend);
+        self
+    }
+
+    /// Use an explicit built-in profile (bypasses the registry).
+    pub fn backend_profile(self, profile: BackendProfile) -> Self {
+        self.backend_obj(Arc::new(profile))
+    }
+
+    /// Select the machine by name or config-file path (see
+    /// [`MachineConfig::resolve`]); its interconnect `t_s`/`t_w` become
+    /// the base cost parameters.  Resolved at [`RuntimeBuilder::build`].
+    pub fn machine(mut self, spec: &str) -> Self {
+        self.machine = MachineChoice::Named(spec.to_string());
+        self
+    }
+
+    /// Use an explicit machine config's interconnect costs.
+    pub fn machine_config(self, machine: &MachineConfig) -> Self {
+        self.cost(machine.cost())
+    }
+
+    /// Use raw cost parameters (tests: `CostParams::free()`).
+    pub fn cost(mut self, cost: CostParams) -> Self {
+        self.machine = MachineChoice::Cost(cost);
+        self
+    }
+
+    /// Resolve names against the backend registry / machine configs.
+    pub fn build(self) -> crate::Result<Runtime> {
+        if self.world == 0 {
+            return Err(anyhow!("world size must be positive"));
+        }
+        let backend = match self.backend {
+            BackendChoice::Object(b) => b,
+            BackendChoice::Named(name) => registry::by_name(&name).ok_or_else(|| {
+                anyhow!(
+                    "unknown backend '{name}' (registered: {})",
+                    registry::names().join(", ")
+                )
+            })?,
+        };
+        let machine = match self.machine {
+            MachineChoice::Cost(c) => c,
+            MachineChoice::Named(spec) => MachineConfig::resolve(&spec)?.cost(),
+        };
+        Ok(Runtime { world: self.world, backend, machine })
+    }
+
+    /// Build and immediately run `f` (the common single-shot path).
+    pub fn run<R, F>(self, f: F) -> crate::Result<RunResult<R>>
+    where
+        R: Send,
+        F: Fn(&Ctx) -> R + Sync,
+    {
+        Ok(self.build()?.run(f))
+    }
+}
+
+/// Positional launcher retained for one PR while downstream code moves to
+/// [`Runtime::builder`].
+#[deprecated(note = "use Runtime::builder().world(p).backend_profile(b).cost(m).run(f)")]
 pub fn run<R, F>(
     world: usize,
     backend: BackendProfile,
@@ -223,43 +450,23 @@ where
     R: Send,
     F: Fn(&Ctx) -> R + Sync,
 {
-    assert!(world > 0);
-    let fabric = Fabric::new(world);
-    let wall0 = Instant::now();
-    let slots: Vec<Mutex<Option<(R, f64, MetricsSnapshot)>>> =
-        (0..world).map(|_| Mutex::new(None)).collect();
-
-    pool::scoped_run(world, &|rank| {
-        let ctx = Ctx::new(rank, fabric.clone(), backend, machine);
-        let r = f(&ctx);
-        fabric.close(rank);
-        *slots[rank].lock().unwrap() = Some((r, ctx.now(), ctx.metrics.snapshot()));
-    });
-
-    let wall = wall0.elapsed();
-    let mut results = Vec::with_capacity(world);
-    let mut clocks = Vec::with_capacity(world);
-    let mut metrics = Vec::with_capacity(world);
-    for s in slots {
-        let (r, c, m) = s
-            .into_inner()
-            .unwrap()
-            .expect("rank finished without result");
-        results.push(r);
-        clocks.push(c);
-        metrics.push(m);
-    }
-    let t_parallel = clocks.iter().cloned().fold(0.0, f64::max);
-    RunResult { results, t_parallel, clocks, wall, metrics }
+    Runtime::builder()
+        .world(world)
+        .backend_profile(backend)
+        .cost(machine)
+        .build()
+        .expect("invalid SPMD configuration (world size must be positive)")
+        .run(f)
 }
 
 /// A process-wide pool of reusable rank worker threads.
 ///
-/// `spmd::run` is called hundreds of times per bench sweep (every Fig. 5 /
-/// isoefficiency point is a fresh SPMD world); spawning and joining p OS
-/// threads each time cost ~35 µs/thread — ~18 ms of the ~23 ms p=512
-/// end-to-end driver.  The pool amortizes that: workers are checked out
-/// per run, execute one rank closure, and return to the free list.
+/// `Runtime::run` is called hundreds of times per bench sweep (every
+/// Fig. 5 / isoefficiency point is a fresh SPMD world); spawning and
+/// joining p OS threads each time cost ~35 µs/thread — ~18 ms of the
+/// ~23 ms p=512 end-to-end driver.  The pool amortizes that: workers are
+/// checked out per run, execute one rank closure, and return to the free
+/// list.
 ///
 /// Scoped-execution safety: the submitted closure is lifetime-erased, but
 /// [`scoped_run`] does not return until **every** checked-out worker has
@@ -443,6 +650,7 @@ pub mod pool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testing::spmd_run;
 
     fn free() -> (BackendProfile, CostParams) {
         (BackendProfile::openmpi_fixed(), CostParams::new(1.0, 0.001))
@@ -451,7 +659,7 @@ mod tests {
     #[test]
     fn run_returns_rank_ordered_results() {
         let (b, m) = free();
-        let res = run(8, b, m, |ctx| ctx.rank * 10);
+        let res = spmd_run(8, b, m, |ctx| ctx.rank * 10);
         assert_eq!(res.results, vec![0, 10, 20, 30, 40, 50, 60, 70]);
         assert_eq!(res.t_parallel, 0.0);
     }
@@ -460,7 +668,7 @@ mod tests {
     fn send_recv_advances_clocks() {
         let (b, m) = free();
         // rank 0 sends 1000 "bytes"-worth Vec<f32> (8 + 4*248 = 1000)
-        let res = run(2, b, m, |ctx| {
+        let res = spmd_run(2, b, m, |ctx| {
             if ctx.rank == 0 {
                 ctx.send(1, 42, vec![0f32; 248]);
             } else {
@@ -478,7 +686,7 @@ mod tests {
     #[test]
     fn late_receiver_starts_transfer_at_own_clock() {
         let (b, m) = free();
-        let res = run(2, b, m, |ctx| {
+        let res = spmd_run(2, b, m, |ctx| {
             if ctx.rank == 0 {
                 ctx.send(1, 1, 0u8); // cost ts + tw = 1.001
             } else {
@@ -494,7 +702,7 @@ mod tests {
     #[test]
     fn compute_advances_clock_and_flops() {
         let (b, m) = free();
-        let res = run(1, b, m, |ctx| {
+        let res = spmd_run(1, b, m, |ctx| {
             ctx.advance_compute(0.5, 1e9);
             ctx.now()
         });
@@ -505,7 +713,7 @@ mod tests {
     #[test]
     fn group_ids_consistent_across_ranks() {
         let (b, m) = free();
-        let res = run(4, b, m, |ctx| {
+        let res = spmd_run(4, b, m, |ctx| {
             let a = ctx.alloc_group_id(&[0, 1, 2, 3]);
             let b2 = ctx.alloc_group_id(&[0, 1, 2, 3]); // second instance differs
             let c = ctx.alloc_group_id(&[0, 2]);
@@ -524,7 +732,7 @@ mod tests {
     #[test]
     fn timed_compute_charges_wall_time() {
         let (b, m) = free();
-        let res = run(1, b, m, |ctx| {
+        let res = spmd_run(1, b, m, |ctx| {
             let v = ctx.timed_compute(100.0, || {
                 std::thread::sleep(Duration::from_millis(5));
                 123
@@ -538,7 +746,80 @@ mod tests {
     #[test]
     fn wall_clock_measured() {
         let (b, m) = free();
-        let res = run(2, b, m, |_| std::thread::sleep(Duration::from_millis(2)));
+        let res = spmd_run(2, b, m, |_| std::thread::sleep(Duration::from_millis(2)));
         assert!(res.wall >= Duration::from_millis(2));
+    }
+
+    // ------------------------------------------------ Runtime builder
+
+    #[test]
+    fn builder_defaults_build() {
+        let rt = Runtime::builder().build().unwrap();
+        assert_eq!(rt.world(), 1);
+        assert_eq!(rt.backend().name(), "openmpi-fixed");
+        assert_eq!(rt.machine_cost(), CostParams::default());
+    }
+
+    #[test]
+    fn builder_resolves_backend_by_name() {
+        let rt = Runtime::builder().world(3).backend("shmem").build().unwrap();
+        assert_eq!(rt.backend().name(), "shmem");
+        let res = rt.run(|ctx| ctx.backend_name().to_string());
+        assert!(res.results.iter().all(|n| n == "shmem"));
+    }
+
+    #[test]
+    fn builder_rejects_unknown_backend_and_zero_world() {
+        assert!(Runtime::builder().backend("no-such").build().is_err());
+        assert!(Runtime::builder().world(0).build().is_err());
+    }
+
+    #[test]
+    fn builder_resolves_machine_by_name() {
+        let rt = Runtime::builder().machine("carver").build().unwrap();
+        let carver = MachineConfig::carver().cost();
+        assert_eq!(rt.machine_cost(), carver);
+        assert!(Runtime::builder().machine("no-such-machine").build().is_err());
+    }
+
+    #[test]
+    fn runtime_is_reusable_across_runs() {
+        let rt = Runtime::builder()
+            .world(4)
+            .backend_profile(BackendProfile::shmem())
+            .cost(CostParams::free())
+            .build()
+            .unwrap();
+        for round in 0..3u64 {
+            let res = rt.run(move |ctx| ctx.rank as u64 + round);
+            assert_eq!(res.results, vec![round, round + 1, round + 2, round + 3]);
+        }
+    }
+
+    #[test]
+    fn backend_cost_shaping_applies() {
+        // mpj-express multiplies ts by 20
+        let rt = Runtime::builder()
+            .world(2)
+            .backend("mpj-express")
+            .cost(CostParams::new(1.0, 0.0))
+            .build()
+            .unwrap();
+        let res = rt.run(|ctx| {
+            if ctx.rank == 0 {
+                ctx.send(1, 1, 0u8);
+            } else {
+                let _: u8 = ctx.recv(0, 1);
+            }
+            ctx.now()
+        });
+        assert!((res.results[0] - 20.0).abs() < 1e-9, "{}", res.results[0]);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_positional_shim_still_works() {
+        let res = run(2, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| ctx.rank);
+        assert_eq!(res.results, vec![0, 1]);
     }
 }

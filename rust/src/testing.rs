@@ -7,6 +7,33 @@
 //! many generated cases and reports the failing seed (so failures are
 //! reproducible by construction).
 
+use crate::comm::backend::BackendProfile;
+use crate::comm::cost::CostParams;
+use crate::spmd::{Ctx, RunResult, Runtime};
+
+/// Launch an SPMD world for a test: positional convenience over
+/// [`Runtime::builder`] with an explicit profile and raw cost
+/// parameters.  This is what unit and integration tests call instead of
+/// the deprecated `spmd::run`.
+pub fn spmd_run<R, F>(
+    world: usize,
+    backend: BackendProfile,
+    machine: CostParams,
+    f: F,
+) -> RunResult<R>
+where
+    R: Send,
+    F: Fn(&Ctx) -> R + Sync,
+{
+    Runtime::builder()
+        .world(world)
+        .backend_profile(backend)
+        .cost(machine)
+        .build()
+        .expect("invalid SPMD configuration (world size must be positive)")
+        .run(f)
+}
+
 /// xorshift64* — tiny, fast, good-enough statistical quality for test-case
 /// generation and synthetic workloads (not cryptographic).
 #[derive(Clone, Debug)]

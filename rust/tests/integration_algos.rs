@@ -13,7 +13,7 @@ use foopar::matrix::block::BlockSource;
 use foopar::matrix::gemm::INF;
 use foopar::runtime::compute::Compute;
 use foopar::runtime::engine::EngineServer;
-use foopar::spmd;
+use foopar::testing::spmd_run;
 use foopar::testing::{assert_allclose, prop_check, Rng};
 
 fn fixed() -> BackendProfile {
@@ -27,7 +27,7 @@ fn dns_random_shapes_match_oracle() {
         let b = *rng.choose(&[4usize, 8, 16]);
         let a = BlockSource::real(b, rng.next_u64());
         let bm = BlockSource::real(b, rng.next_u64());
-        let res = spmd::run(q * q * q, fixed(), CostParams::free(), |ctx| {
+        let res = spmd_run(q * q * q, fixed(), CostParams::free(), |ctx| {
             mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &bm)
         });
         let c = mmm_dns::collect_c(&res.results, q, b);
@@ -44,13 +44,13 @@ fn all_three_mmm_algorithms_agree() {
         let a = BlockSource::real(b, rng.next_u64());
         let bm = BlockSource::real(b, rng.next_u64());
         let p = q * q * q;
-        let dns = spmd::run(p, fixed(), CostParams::free(), |ctx| {
+        let dns = spmd_run(p, fixed(), CostParams::free(), |ctx| {
             mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &bm)
         });
-        let gen = spmd::run(p, fixed(), CostParams::free(), |ctx| {
+        let gen = spmd_run(p, fixed(), CostParams::free(), |ctx| {
             mmm_generic::mmm_generic(ctx, &Compute::Native, q, &a, &bm)
         });
-        let base = spmd::run(p, fixed(), CostParams::free(), |ctx| {
+        let base = spmd_run(p, fixed(), CostParams::free(), |ctx| {
             dns_baseline::dns_baseline(ctx, &Compute::Native, q, &a, &bm)
         });
         let c1 = mmm_dns::collect_c(&dns.results, q, b);
@@ -70,7 +70,7 @@ fn fw_random_graphs_match_oracle() {
         let density = rng.gen_f64();
         let seed = rng.next_u64();
         let src = floyd_warshall::FwSource::Real { n, density, seed };
-        let res = spmd::run(q * q, fixed(), CostParams::free(), |ctx| {
+        let res = spmd_run(q * q, fixed(), CostParams::free(), |ctx| {
             floyd_warshall::floyd_warshall_par(ctx, &Compute::Native, q, &src)
         });
         let d = floyd_warshall::collect_d(&res.results, q, b);
@@ -89,10 +89,10 @@ fn squaring_and_fw_agree_on_random_graphs() {
             density: 0.2 + rng.gen_f64() * 0.6,
             seed: rng.next_u64(),
         };
-        let sq = spmd::run(4, fixed(), CostParams::free(), |ctx| {
+        let sq = spmd_run(4, fixed(), CostParams::free(), |ctx| {
             apsp_squaring::apsp_squaring_par(ctx, &Compute::Native, q, &src)
         });
-        let fw = spmd::run(4, fixed(), CostParams::free(), |ctx| {
+        let fw = spmd_run(4, fixed(), CostParams::free(), |ctx| {
             floyd_warshall::floyd_warshall_par(ctx, &Compute::Native, q, &src)
         });
         let a = apsp_squaring::saturate(apsp_squaring::collect_d(&sq.results, q, n / q));
@@ -120,7 +120,7 @@ fn pjrt_full_stack_mmm() {
     let b = 32; // artifact size
     let a = BlockSource::real(b, 77);
     let bm = BlockSource::real(b, 78);
-    let res = spmd::run(8, fixed(), MachineConfig::local().cost(), |ctx| {
+    let res = spmd_run(8, fixed(), MachineConfig::local().cost(), |ctx| {
         mmm_dns::mmm_dns(ctx, &comp, q, &a, &bm)
     });
     let c = mmm_dns::collect_c(&res.results, q, b);
@@ -140,7 +140,7 @@ fn pjrt_full_stack_fw() {
     let q = 2;
     let n = 64; // blocks of 32 → fw_update_b32 artifact
     let src = floyd_warshall::FwSource::Real { n, density: 0.3, seed: 5 };
-    let res = spmd::run(4, fixed(), MachineConfig::local().cost(), |ctx| {
+    let res = spmd_run(4, fixed(), MachineConfig::local().cost(), |ctx| {
         floyd_warshall::floyd_warshall_par(ctx, &comp, q, &src)
     });
     let d = floyd_warshall::collect_d(&res.results, q, n / q);
@@ -154,12 +154,12 @@ fn modeled_and_real_dns_have_same_message_pattern() {
     // like real blocks (same msgs, same bytes)
     let q = 2;
     let b = 16;
-    let real = spmd::run(8, fixed(), CostParams::qdr_infiniband(), |ctx| {
+    let real = spmd_run(8, fixed(), CostParams::qdr_infiniband(), |ctx| {
         let a = BlockSource::real(b, 1);
         let bm = BlockSource::real(b, 2);
         mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &bm);
     });
-    let modeled = spmd::run(8, fixed(), CostParams::qdr_infiniband(), |ctx| {
+    let modeled = spmd_run(8, fixed(), CostParams::qdr_infiniband(), |ctx| {
         let a = BlockSource::proxy(b, 1);
         let bm = BlockSource::proxy(b, 2);
         mmm_dns::mmm_dns(ctx, &Compute::Modeled { rate: 1e9 }, q, &a, &bm);
@@ -179,10 +179,10 @@ fn generic_pays_more_virtual_time_than_dns_at_scale() {
     let bm = BlockSource::proxy(b, 2);
     let comp = Compute::Modeled { rate: 1e10 };
     let machine = CostParams::qdr_infiniband();
-    let dns = spmd::run(64, fixed(), machine, |ctx| {
+    let dns = spmd_run(64, fixed(), machine, |ctx| {
         mmm_dns::mmm_dns(ctx, &comp, q, &a, &bm).t_local
     });
-    let gen = spmd::run(64, fixed(), machine, |ctx| {
+    let gen = spmd_run(64, fixed(), machine, |ctx| {
         mmm_generic::mmm_generic(ctx, &comp, q, &a, &bm).t_local
     });
     assert!(
@@ -205,7 +205,7 @@ fn wall_clock_speedup_with_real_threads() {
     let t0 = std::time::Instant::now();
     let _ = seq::matmul_seq(&a.assemble(q), &bm.assemble(q));
     let t_seq = t0.elapsed();
-    let run = spmd::run(8, fixed(), CostParams::free(), |ctx| {
+    let run = spmd_run(8, fixed(), CostParams::free(), |ctx| {
         mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &bm)
     });
     // 8 ranks compute 8 sub-products of (n/2)³ = n³/8 each in parallel +

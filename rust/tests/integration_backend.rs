@@ -1,0 +1,572 @@
+//! The pluggable-backend layer, end to end:
+//!
+//! * registry round-trip — register a custom [`Backend`], look it up by
+//!   name, launch a `Runtime` on it, observe its cost shaping;
+//! * custom [`Collectives`] strategies plug in without touching
+//!   algorithm code;
+//! * dispatch parity — every built-in backend's trait-dispatched
+//!   collectives (`Group` methods → `dyn Collectives` → algorithm
+//!   strategies) produce **identical results and identical virtual-time
+//!   costs** to the seed's free-function implementations, reproduced
+//!   here as raw message patterns over `Ctx`.
+
+use std::sync::Arc;
+
+use foopar::comm::algorithms::ReduceFn;
+use foopar::comm::backend::{registry, AllGatherAlgo, BackendProfile, BcastAlgo, ReduceAlgo};
+use foopar::comm::collectives::StandardCollectives;
+use foopar::comm::cost::CostParams;
+use foopar::comm::group::Group;
+use foopar::comm::message::Msg;
+use foopar::spmd::Ctx;
+use foopar::testing::spmd_run;
+use foopar::{Backend, Collectives, Runtime};
+
+// ------------------------------------------------------------ registry
+
+/// A backend that only reshapes costs (double start-up latency).
+struct DoubleStartup;
+
+impl Backend for DoubleStartup {
+    fn name(&self) -> &str {
+        "test-double-ts"
+    }
+    fn collectives(&self) -> Arc<dyn Collectives> {
+        Arc::new(StandardCollectives::default())
+    }
+    fn cost(&self, machine: CostParams) -> CostParams {
+        CostParams::new(machine.ts * 2.0, machine.tw)
+    }
+}
+
+#[test]
+fn registry_roundtrip_register_lookup_run() {
+    registry::register(Arc::new(DoubleStartup));
+    let found = registry::by_name("test-double-ts").expect("registered backend resolves");
+    assert_eq!(found.name(), "test-double-ts");
+    assert!(found.profile().is_none(), "custom backend has no built-in profile");
+    assert!(registry::names().iter().any(|n| n == "test-double-ts"));
+
+    // one point-to-point message at ts=1, tw=0: the custom backend must
+    // charge exactly double the stock cost
+    let send_once = |backend: &str| {
+        Runtime::builder()
+            .world(2)
+            .backend(backend)
+            .cost(CostParams::new(1.0, 0.0))
+            .run(|ctx| {
+                if ctx.rank == 0 {
+                    ctx.send(1, 7, 42u64);
+                } else {
+                    let v: u64 = ctx.recv(0, 7);
+                    assert_eq!(v, 42);
+                }
+                ctx.now()
+            })
+            .expect("runtime with registered backend")
+            .t_parallel
+    };
+    let doubled = send_once("test-double-ts");
+    let plain = send_once("openmpi-fixed");
+    assert!((doubled - 2.0 * plain).abs() < 1e-12, "{doubled} vs 2x{plain}");
+}
+
+#[test]
+fn builder_reports_unknown_backend_with_candidates() {
+    let err = Runtime::builder().backend("definitely-not-registered").build().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("definitely-not-registered"), "{msg}");
+    assert!(msg.contains("openmpi-fixed"), "{msg}");
+}
+
+// ------------------------------------------- custom Collectives impl
+
+/// A from-scratch strategy set: every op delegates to the *linear* /
+/// baseline algorithms, like the naive backends §6 calls out.
+struct AllLinear;
+
+impl Collectives for AllLinear {
+    fn bcast(&self, g: &Group, root: usize, value: Option<Msg>) -> Msg {
+        foopar::comm::algorithms::bcast_linear(g, root, value)
+    }
+    fn reduce(&self, g: &Group, root: usize, value: Msg, op: ReduceFn<'_>) -> Option<Msg> {
+        foopar::comm::algorithms::reduce_linear(g, root, value, op)
+    }
+    fn allgather(&self, g: &Group, value: Msg) -> Vec<Msg> {
+        foopar::comm::algorithms::allgather_ring(g, value)
+    }
+    fn alltoall(&self, g: &Group, items: Vec<Msg>) -> Vec<Msg> {
+        foopar::comm::algorithms::alltoall_pairwise(g, items)
+    }
+    fn shift(&self, g: &Group, delta: isize, value: Msg) -> Msg {
+        foopar::comm::algorithms::shift_cyclic(g, delta, value)
+    }
+    fn barrier(&self, g: &Group) {
+        foopar::comm::algorithms::barrier_dissemination(g)
+    }
+    fn gather(&self, g: &Group, root: usize, value: Msg) -> Option<Vec<Msg>> {
+        foopar::comm::algorithms::gather_linear(g, root, value)
+    }
+    fn scatter(&self, g: &Group, root: usize, values: Option<Vec<Msg>>) -> Msg {
+        foopar::comm::algorithms::scatter_linear(g, root, values)
+    }
+    fn scan(&self, g: &Group, value: Msg, op: ReduceFn<'_>) -> Msg {
+        foopar::comm::algorithms::scan_hillis_steele(g, value, op)
+    }
+}
+
+struct AllLinearBackend;
+
+impl Backend for AllLinearBackend {
+    fn name(&self) -> &str {
+        "test-all-linear"
+    }
+    fn collectives(&self) -> Arc<dyn Collectives> {
+        Arc::new(AllLinear)
+    }
+}
+
+#[test]
+fn custom_collectives_strategy_matches_equivalent_profile() {
+    registry::register(Arc::new(AllLinearBackend));
+    // openmpi-stock = linear reduce, same ring allgather, factor-1 costs,
+    // but binomial bcast — so compare on reduce, where both are linear.
+    let reduce_time = |backend: &str| {
+        Runtime::builder()
+            .world(8)
+            .backend(backend)
+            .cost(CostParams::new(1.0, 0.0))
+            .run(|ctx| {
+                let g = Group::world(ctx);
+                let r = g.reduce(0, ctx.rank as i64, |a, b| a + b);
+                (r, ctx.now())
+            })
+            .expect("runtime")
+            .results
+    };
+    let custom = reduce_time("test-all-linear");
+    let stock = reduce_time("openmpi-stock");
+    assert_eq!(custom[0].0, Some(28));
+    for (c, s) in custom.iter().zip(&stock) {
+        assert_eq!(c.0, s.0);
+        assert!((c.1 - s.1).abs() < 1e-12, "custom {} vs stock {}", c.1, s.1);
+    }
+}
+
+// ------------------------------------------------- dispatch parity
+//
+// Reference implementations: the seed's free-function collectives as
+// literal message patterns over raw `Ctx` sends/receives (world group,
+// fixed tag bases).  Tags differ from the Group path — tags never enter
+// the cost model — but every message's (src, dst, bytes, ordering) is
+// identical, so virtual time must match to the last bit-op.
+
+type V = Vec<f32>;
+
+fn vadd(a: V, b: V) -> V {
+    a.into_iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+fn ref_bcast(ctx: &Ctx, algo: BcastAlgo, root: usize, value: Option<V>, tag: u64) -> V {
+    let p = ctx.world;
+    let me = ctx.rank;
+    match algo {
+        BcastAlgo::Binomial => {
+            let rel = (me + p - root) % p;
+            let mut val: Option<V> = if rel == 0 { Some(value.unwrap()) } else { None };
+            let mut mask = 1usize;
+            while mask < p {
+                if rel & mask != 0 {
+                    let src = (me + p - mask) % p;
+                    val = Some(ctx.recv(src, tag));
+                    break;
+                }
+                mask <<= 1;
+            }
+            mask >>= 1;
+            let v = val.unwrap();
+            while mask > 0 {
+                if rel + mask < p {
+                    let dst = (me + mask) % p;
+                    ctx.send(dst, tag, v.clone());
+                }
+                mask >>= 1;
+            }
+            v
+        }
+        BcastAlgo::Linear => {
+            if me == root {
+                let v = value.unwrap();
+                for i in 0..p {
+                    if i != root {
+                        ctx.send(i, tag, v.clone());
+                    }
+                }
+                v
+            } else {
+                ctx.recv(root, tag)
+            }
+        }
+    }
+}
+
+fn ref_reduce(ctx: &Ctx, algo: ReduceAlgo, root: usize, value: V, tag: u64) -> Option<V> {
+    let p = ctx.world;
+    let me = ctx.rank;
+    match algo {
+        ReduceAlgo::Binomial => {
+            let rel = (me + p - root) % p;
+            let mut acc = value;
+            let mut mask = 1usize;
+            while mask < p {
+                if rel & mask == 0 {
+                    let src_rel = rel | mask;
+                    if src_rel < p {
+                        let src = (me + mask) % p;
+                        let other: V = ctx.recv(src, tag);
+                        acc = vadd(acc, other);
+                    }
+                } else {
+                    let dst = (me + p - mask) % p;
+                    ctx.send(dst, tag, acc);
+                    return None;
+                }
+                mask <<= 1;
+            }
+            Some(acc)
+        }
+        ReduceAlgo::Linear => {
+            if me == root {
+                let mut vals: Vec<Option<V>> = (0..p).map(|_| None).collect();
+                vals[root] = Some(value);
+                for i in 0..p {
+                    if i != root {
+                        vals[i] = Some(ctx.recv(i, tag));
+                    }
+                }
+                let mut it = vals.into_iter().map(Option::unwrap);
+                let first = it.next().unwrap();
+                Some(it.fold(first, vadd))
+            } else {
+                ctx.send(root, tag, value);
+                None
+            }
+        }
+    }
+}
+
+fn ref_allgather_ring(ctx: &Ctx, value: V, base_tag: u64) -> Vec<V> {
+    let p = ctx.world;
+    let me = ctx.rank;
+    let mut out: Vec<Option<V>> = (0..p).map(|_| None).collect();
+    out[me] = Some(value.clone());
+    if p == 1 {
+        return out.into_iter().map(Option::unwrap).collect();
+    }
+    let right = (me + 1) % p;
+    let left = (me + p - 1) % p;
+    let mut cur = value;
+    for r in 0..p - 1 {
+        cur = ctx.send_recv(right, left, base_tag + r as u64, cur);
+        let idx = (me + p - 1 - r) % p;
+        out[idx] = Some(cur.clone());
+    }
+    out.into_iter().map(Option::unwrap).collect()
+}
+
+fn ref_alltoall(ctx: &Ctx, items: Vec<V>, base_tag: u64) -> Vec<V> {
+    let p = ctx.world;
+    let me = ctx.rank;
+    let mut items: Vec<Option<V>> = items.into_iter().map(Some).collect();
+    let mut out: Vec<Option<V>> = (0..p).map(|_| None).collect();
+    out[me] = items[me].take();
+    for r in 1..p {
+        let dst = (me + r) % p;
+        let src = (me + p - r) % p;
+        let sent = items[dst].take().unwrap();
+        out[src] = Some(ctx.send_recv(dst, src, base_tag + r as u64, sent));
+    }
+    out.into_iter().map(Option::unwrap).collect()
+}
+
+fn ref_shift(ctx: &Ctx, delta: isize, value: V, tag: u64) -> V {
+    let p = ctx.world as isize;
+    let me = ctx.rank as isize;
+    let d = delta.rem_euclid(p);
+    if d == 0 {
+        return value;
+    }
+    let dst = ((me + d) % p) as usize;
+    let src = ((me - d).rem_euclid(p)) as usize;
+    ctx.send_recv(dst, src, tag, value)
+}
+
+fn ref_scan(ctx: &Ctx, value: V, base_tag: u64) -> V {
+    let p = ctx.world;
+    let me = ctx.rank;
+    let mut acc = value;
+    let mut dist = 1usize;
+    let mut round = 0u64;
+    while dist < p {
+        let tag = base_tag + round;
+        if me + dist < p {
+            ctx.send(me + dist, tag, acc.clone());
+        }
+        if me >= dist {
+            let prefix: V = ctx.recv(me - dist, tag);
+            acc = vadd(prefix, acc);
+        }
+        dist <<= 1;
+        round += 1;
+    }
+    acc
+}
+
+fn ref_gather(ctx: &Ctx, root: usize, value: V, tag: u64) -> Option<Vec<V>> {
+    let p = ctx.world;
+    let me = ctx.rank;
+    if me == root {
+        let mut out: Vec<Option<V>> = (0..p).map(|_| None).collect();
+        out[root] = Some(value);
+        for i in 0..p {
+            if i != root {
+                out[i] = Some(ctx.recv(i, tag));
+            }
+        }
+        Some(out.into_iter().map(Option::unwrap).collect())
+    } else {
+        ctx.send(root, tag, value);
+        None
+    }
+}
+
+fn ref_scatter(ctx: &Ctx, root: usize, values: Option<Vec<V>>, tag: u64) -> V {
+    let p = ctx.world;
+    let me = ctx.rank;
+    if me == root {
+        let values = values.unwrap();
+        let mut opts: Vec<Option<V>> = values.into_iter().map(Some).collect();
+        let mine = opts[root].take().unwrap();
+        for (i, slot) in opts.into_iter().enumerate() {
+            if i != root {
+                ctx.send(i, tag, slot.unwrap());
+            }
+        }
+        mine
+    } else {
+        ctx.recv(root, tag)
+    }
+}
+
+fn ref_barrier(ctx: &Ctx, base_tag: u64) {
+    let p = ctx.world;
+    let me = ctx.rank;
+    let mut round = 1usize;
+    let mut seq = 0u64;
+    while round < p {
+        let () = ctx.send_recv((me + round) % p, (me + p - round) % p, base_tag + seq, ());
+        round <<= 1;
+        seq += 1;
+    }
+}
+
+fn payload(rank: usize) -> V {
+    (0..100).map(|i| (rank * 100 + i) as f32).collect()
+}
+
+/// Run one op both ways under identical (backend, machine) configs and
+/// assert results and virtual costs agree exactly.
+fn assert_parity<R>(
+    label: &str,
+    p: usize,
+    profile: BackendProfile,
+    via_group: impl Fn(&Ctx) -> R + Sync,
+    via_reference: impl Fn(&Ctx) -> R + Sync,
+) where
+    R: Send + PartialEq + std::fmt::Debug,
+{
+    let machine = CostParams::qdr_infiniband();
+    let g = spmd_run(p, profile, machine, |ctx| (via_group(ctx), ctx.now()));
+    let r = spmd_run(p, profile, machine, |ctx| (via_reference(ctx), ctx.now()));
+    for (rank, (gv, rv)) in g.results.iter().zip(&r.results).enumerate() {
+        assert_eq!(gv.0, rv.0, "{label} backend={} p={p} rank={rank}: results", profile.name);
+        assert!(
+            (gv.1 - rv.1).abs() <= 1e-12 * gv.1.abs().max(1e-30),
+            "{label} backend={} p={p} rank={rank}: cost {} vs {}",
+            profile.name,
+            gv.1,
+            rv.1
+        );
+    }
+    assert!(
+        (g.t_parallel - r.t_parallel).abs() <= 1e-12 * g.t_parallel.abs().max(1e-30),
+        "{label} backend={} p={p}: T_P {} vs {}",
+        profile.name,
+        g.t_parallel,
+        r.t_parallel
+    );
+}
+
+#[test]
+fn dispatch_parity_all_builtin_backends() {
+    const T: u64 = 0x5EED_0000;
+    // every built-in, plus a synthetic profile exercising the linear
+    // bcast path (no built-in selects it) and non-unit cost factors
+    let mut profiles = BackendProfile::all();
+    profiles.push(BackendProfile {
+        name: "parity-linear-bcast",
+        reduce: ReduceAlgo::Linear,
+        bcast: BcastAlgo::Linear,
+        allgather: AllGatherAlgo::Ring,
+        ts_factor: 3.0,
+        tw_factor: 0.5,
+    });
+    for profile in profiles {
+        for p in [2usize, 4, 7, 8] {
+            let root = p / 2;
+            assert_parity(
+                "bcast",
+                p,
+                profile,
+                move |ctx| {
+                    let g = Group::world(ctx);
+                    g.bcast(root, (ctx.rank == root).then(|| payload(root)))
+                },
+                move |ctx| {
+                    ref_bcast(
+                        ctx,
+                        profile.bcast,
+                        root,
+                        (ctx.rank == root).then(|| payload(root)),
+                        T,
+                    )
+                },
+            );
+            assert_parity(
+                "reduce",
+                p,
+                profile,
+                move |ctx| {
+                    let g = Group::world(ctx);
+                    g.reduce(root, payload(ctx.rank), vadd)
+                },
+                move |ctx| ref_reduce(ctx, profile.reduce, root, payload(ctx.rank), T + 1),
+            );
+            assert_parity(
+                "allgather",
+                p,
+                profile,
+                |ctx| {
+                    let g = Group::world(ctx);
+                    g.allgather(payload(ctx.rank))
+                },
+                |ctx| ref_allgather_ring(ctx, payload(ctx.rank), T + 0x100),
+            );
+            assert_parity(
+                "alltoall",
+                p,
+                profile,
+                |ctx| {
+                    let g = Group::world(ctx);
+                    g.alltoall((0..ctx.world).map(payload).collect())
+                },
+                |ctx| ref_alltoall(ctx, (0..ctx.world).map(payload).collect(), T + 0x200),
+            );
+            assert_parity(
+                "shift",
+                p,
+                profile,
+                |ctx| {
+                    let g = Group::world(ctx);
+                    g.shift(-1, payload(ctx.rank))
+                },
+                |ctx| ref_shift(ctx, -1, payload(ctx.rank), T + 0x300),
+            );
+            assert_parity(
+                "scan",
+                p,
+                profile,
+                |ctx| {
+                    let g = Group::world(ctx);
+                    g.scan(payload(ctx.rank), vadd)
+                },
+                |ctx| ref_scan(ctx, payload(ctx.rank), T + 0x400),
+            );
+            assert_parity(
+                "gather",
+                p,
+                profile,
+                move |ctx| {
+                    let g = Group::world(ctx);
+                    g.gather(root, payload(ctx.rank))
+                },
+                move |ctx| ref_gather(ctx, root, payload(ctx.rank), T + 0x500),
+            );
+            assert_parity(
+                "scatter",
+                p,
+                profile,
+                move |ctx| {
+                    let g = Group::world(ctx);
+                    g.scatter(root, (ctx.rank == root).then(|| (0..ctx.world).map(payload).collect()))
+                },
+                move |ctx| {
+                    ref_scatter(
+                        ctx,
+                        root,
+                        (ctx.rank == root).then(|| (0..ctx.world).map(payload).collect()),
+                        T + 0x600,
+                    )
+                },
+            );
+            assert_parity(
+                "barrier",
+                p,
+                profile,
+                |ctx| {
+                    let g = Group::world(ctx);
+                    g.barrier();
+                    ctx.now()
+                },
+                |ctx| {
+                    ref_barrier(ctx, T + 0x700);
+                    ctx.now()
+                },
+            );
+        }
+    }
+}
+
+#[test]
+fn custom_backend_runs_mmm_dns_end_to_end() {
+    use foopar::algos::{mmm_dns, seq};
+    use foopar::matrix::block::BlockSource;
+    use foopar::runtime::compute::Compute;
+
+    struct TestGrid;
+    impl Backend for TestGrid {
+        fn name(&self) -> &str {
+            "test-grid-backend"
+        }
+        fn collectives(&self) -> Arc<dyn Collectives> {
+            Arc::new(StandardCollectives::default())
+        }
+        fn cost(&self, machine: CostParams) -> CostParams {
+            CostParams::new(machine.ts * 0.25, machine.tw * 0.5)
+        }
+    }
+    registry::register(Arc::new(TestGrid));
+
+    let (q, b) = (2, 8);
+    let a = BlockSource::real(b, 31);
+    let bm = BlockSource::real(b, 32);
+    let res = Runtime::builder()
+        .world(q * q * q)
+        .backend("test-grid-backend")
+        .cost(CostParams::shared_memory())
+        .run(|ctx| mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &bm))
+        .expect("custom backend runtime");
+    let c = mmm_dns::collect_c(&res.results, q, b);
+    let want = seq::matmul_seq(&a.assemble(q), &bm.assemble(q));
+    assert!(c.max_abs_diff(&want) < 1e-3);
+}

@@ -9,7 +9,7 @@
 use foopar::comm::backend::BackendProfile;
 use foopar::comm::cost::CostParams;
 use foopar::data::dseq::DistSeq;
-use foopar::spmd;
+use foopar::testing::spmd_run;
 use foopar::testing::{prop_check, Rng};
 
 fn backends() -> [BackendProfile; 4] {
@@ -42,7 +42,7 @@ fn reduce_equals_sequential_fold_any_backend_any_group() {
         let ranks = random_ranks(rng, world);
         let expect: i64 = ranks.iter().enumerate().map(|(i, _)| (i * i) as i64).sum();
         let r = ranks.clone();
-        let res = spmd::run(world, backend, CostParams::free(), move |ctx| {
+        let res = spmd_run(world, backend, CostParams::free(), move |ctx| {
             DistSeq::from_fn(ctx, r.clone(), |i| (i * i) as i64).reduce_d(|a, b| a + b)
         });
         let root = ranks[0];
@@ -79,7 +79,7 @@ fn reduce_fold_order_preserved_for_noncommutative_op() {
             .map(|&s| (1, s, 0, 1))
             .reduce(mul)
             .unwrap();
-        let res = spmd::run(p, backend, CostParams::free(), move |ctx| {
+        let res = spmd_run(p, backend, CostParams::free(), move |ctx| {
             DistSeq::range(ctx, ctx.world, |i| {
                 let s = (i as i64) + 2;
                 vec![1i64, s, 0, 1]
@@ -101,7 +101,7 @@ fn allgather_identical_and_ordered_everywhere() {
         let backend = *rng.choose(&backends());
         let ranks = random_ranks(rng, world);
         let r = ranks.clone();
-        let res = spmd::run(world, backend, CostParams::free(), move |ctx| {
+        let res = spmd_run(world, backend, CostParams::free(), move |ctx| {
             DistSeq::from_fn(ctx, r.clone(), |i| i as u64 * 3 + 1).all_gather_d()
         });
         let expect: Vec<u64> = (0..ranks.len()).map(|i| i as u64 * 3 + 1).collect();
@@ -116,7 +116,7 @@ fn shift_is_a_rotation_bijection() {
     prop_check("shiftD bijection", 30, |rng| {
         let p = 1 + rng.gen_range(12);
         let delta = rng.gen_range(25) as isize - 12;
-        let res = spmd::run(
+        let res = spmd_run(
             p,
             *rng.choose(&backends()),
             CostParams::free(),
@@ -142,7 +142,7 @@ fn shift_is_a_rotation_bijection() {
 fn alltoall_is_transpose() {
     prop_check("allToAllD transpose", 25, |rng| {
         let p = 1 + rng.gen_range(10);
-        let res = spmd::run(
+        let res = spmd_run(
             p,
             *rng.choose(&backends()),
             CostParams::free(),
@@ -168,7 +168,7 @@ fn apply_agrees_with_owner_value() {
     prop_check("apply == owner element", 30, |rng| {
         let p = 1 + rng.gen_range(12);
         let i = rng.gen_range(p);
-        let res = spmd::run(
+        let res = spmd_run(
             p,
             *rng.choose(&backends()),
             CostParams::free(),
@@ -193,7 +193,7 @@ fn chained_op_sequences_never_deadlock_or_crosstalk() {
         let ops: Vec<usize> = (0..1 + rng.gen_range(5)).map(|_| rng.gen_range(4)).collect();
         let r = ranks.clone();
         let o = ops.clone();
-        let res = spmd::run(world, backend, CostParams::free(), move |ctx| {
+        let res = spmd_run(world, backend, CostParams::free(), move |ctx| {
             let mut seq = DistSeq::from_fn(ctx, r.clone(), |i| i as i64);
             for op in &o {
                 seq = match op {
@@ -221,7 +221,7 @@ fn chained_op_sequences_never_deadlock_or_crosstalk() {
 fn results_identical_across_backends() {
     // backend choice changes cost, never semantics
     let compute = |backend: BackendProfile| {
-        spmd::run(9, backend, CostParams::qdr_infiniband(), move |ctx| {
+        spmd_run(9, backend, CostParams::qdr_infiniband(), move |ctx| {
             let s = DistSeq::range(ctx, ctx.world, |i| (i as i64 + 1) * 7);
             s.map_d(|v| v * v).all_reduce_d(|a, b| a + b).unwrap()
         })
@@ -243,7 +243,7 @@ fn virtual_clocks_monotone_and_bounded() {
     prop_check("clock sanity", 15, |rng| {
         let p = 2 + rng.gen_range(10);
         let machine = CostParams::new(1e-6, 1e-9);
-        let res = spmd::run(
+        let res = spmd_run(
             p,
             *rng.choose(&backends()),
             machine,

@@ -8,7 +8,7 @@ use foopar::data::dseq::DistSeq;
 use foopar::data::dvar::DistVar;
 use foopar::matrix::block::BlockSource;
 use foopar::runtime::compute::Compute;
-use foopar::spmd;
+use foopar::testing::spmd_run;
 
 fn fixed() -> BackendProfile {
     BackendProfile::openmpi_fixed()
@@ -17,7 +17,7 @@ fn fixed() -> BackendProfile {
 #[test]
 fn single_rank_world_everything_degenerates_gracefully() {
     // p = 1: every collective is the identity; no messages at all
-    let res = spmd::run(1, fixed(), CostParams::qdr_infiniband(), |ctx| {
+    let res = spmd_run(1, fixed(), CostParams::qdr_infiniband(), |ctx| {
         let s = DistSeq::range(ctx, 1, |i| i as i64 + 5);
         let r = s.map_d(|v| v * 2).all_reduce_d(|a, b| a + b);
         assert_eq!(r, Some(10));
@@ -34,7 +34,7 @@ fn single_rank_world_everything_degenerates_gracefully() {
 #[test]
 fn recv_type_mismatch_panics_with_type_name() {
     let r = std::panic::catch_unwind(|| {
-        spmd::run(2, fixed(), CostParams::free(), |ctx| {
+        spmd_run(2, fixed(), CostParams::free(), |ctx| {
             if ctx.rank == 0 {
                 ctx.send(1, 7, 123u64);
             } else {
@@ -53,7 +53,7 @@ fn recv_type_mismatch_panics_with_type_name() {
 
 #[test]
 fn zero_byte_messages_cost_only_ts() {
-    let res = spmd::run(2, fixed(), CostParams::new(1.0, 1e30), |ctx| {
+    let res = spmd_run(2, fixed(), CostParams::new(1.0, 1e30), |ctx| {
         // () has byte_size 0: astronomically large tw must not matter
         if ctx.rank == 0 {
             ctx.send(1, 1, ());
@@ -68,7 +68,7 @@ fn zero_byte_messages_cost_only_ts() {
 #[test]
 fn empty_density_graph_fw_still_correct() {
     let src = floyd_warshall::FwSource::Real { n: 8, density: 0.0, seed: 1 };
-    let res = spmd::run(4, fixed(), CostParams::free(), |ctx| {
+    let res = spmd_run(4, fixed(), CostParams::free(), |ctx| {
         floyd_warshall::floyd_warshall_par(ctx, &Compute::Native, 2, &src)
     });
     let d = floyd_warshall::collect_d(&res.results, 2, 4);
@@ -87,7 +87,7 @@ fn empty_density_graph_fw_still_correct() {
 fn cannon_q1_is_local_multiply() {
     let a = BlockSource::real(16, 1);
     let b = BlockSource::real(16, 2);
-    let res = spmd::run(1, fixed(), CostParams::free(), |ctx| {
+    let res = spmd_run(1, fixed(), CostParams::free(), |ctx| {
         cannon::mmm_cannon(ctx, &Compute::Native, 1, &a, &b)
     });
     assert_eq!(res.metrics[0].msgs_sent, 0);
@@ -98,7 +98,7 @@ fn cannon_q1_is_local_multiply() {
 
 #[test]
 fn distvar_chain_read_set_move() {
-    let res = spmd::run(6, fixed(), CostParams::free(), |ctx| {
+    let res = spmd_run(6, fixed(), CostParams::free(), |ctx| {
         let mut v = DistVar::new(ctx, 0, || 1u64);
         for owner in 1..4 {
             v.move_to(owner);
@@ -116,7 +116,7 @@ fn mixed_collectives_and_pool_reuse_many_worlds() {
     // crosstalk between consecutive SPMD worlds sharing workers
     for round in 0..10u64 {
         let p = [2usize, 7, 16, 5][round as usize % 4];
-        let res = spmd::run(p, fixed(), CostParams::free(), move |ctx| {
+        let res = spmd_run(p, fixed(), CostParams::free(), move |ctx| {
             let s = DistSeq::range(ctx, ctx.world, move |i| i as u64 + round);
             s.scan_d(|a, b| a + b).all_gather_d()
         });
@@ -135,7 +135,7 @@ fn mixed_collectives_and_pool_reuse_many_worlds() {
 #[test]
 fn metrics_account_every_byte() {
     // global conservation: total bytes sent == total bytes received
-    let res = spmd::run(8, fixed(), CostParams::qdr_infiniband(), |ctx| {
+    let res = spmd_run(8, fixed(), CostParams::qdr_infiniband(), |ctx| {
         let s = DistSeq::range(ctx, ctx.world, |i| vec![i as f32; 100]);
         let _ = s.all_gather_d();
     });

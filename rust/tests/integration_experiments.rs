@@ -2,7 +2,6 @@
 //! isoefficiency, overhead): every reported quantity must exist, be
 //! finite, and satisfy the paper's qualitative claims.
 
-use foopar::comm::backend::BackendProfile;
 use foopar::config::MachineConfig;
 use foopar::experiments::{fig5, isoeff, overhead, table1};
 
