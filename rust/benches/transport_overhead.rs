@@ -1,0 +1,97 @@
+//! Transport overhead microbench: per-message wall cost of the shared-
+//! memory fabric vs the TCP loopback transport (encode → socket →
+//! decode), plus one collective, on identical workloads.
+//!
+//! Run with:  cargo bench --bench transport_overhead
+//!
+//! The virtual-time results are transport-independent by construction
+//! (that is asserted by tests/integration_transport.rs); this bench
+//! measures the *real* cost of crossing the wire — the price of
+//! distributed-memory deployment per message, which the modeled `t_s`
+//! of a TCP-backend profile should eventually be calibrated against.
+
+use std::time::Instant;
+
+use foopar::comm::cost::CostParams;
+use foopar::comm::group::Group;
+use foopar::Runtime;
+
+/// One-way per-message wall time of a ping-pong between 2 ranks.
+fn pingpong(transport: &str, iters: usize, payload: usize) -> f64 {
+    let rt = Runtime::builder()
+        .world(2)
+        .cost(CostParams::free())
+        .transport(transport)
+        .build()
+        .expect("build runtime");
+    let res = rt.run(|ctx| {
+        let v = vec![7u8; payload];
+        let t0 = Instant::now();
+        for i in 0..iters {
+            if ctx.rank == 0 {
+                ctx.send(1, i as u64, v.clone());
+                let _: Vec<u8> = ctx.recv(1, i as u64);
+            } else {
+                let r: Vec<u8> = ctx.recv(0, i as u64);
+                ctx.send(0, i as u64, r);
+            }
+        }
+        t0.elapsed().as_secs_f64()
+    });
+    res.results[0] / (iters as f64 * 2.0)
+}
+
+/// Wall time of `iters` allgathers of `payload` bytes per rank on p=4.
+fn allgather(transport: &str, iters: usize, payload: usize) -> f64 {
+    let rt = Runtime::builder()
+        .world(4)
+        .cost(CostParams::free())
+        .transport(transport)
+        .build()
+        .expect("build runtime");
+    let res = rt.run(|ctx| {
+        let v = vec![ctx.rank as f32; payload / 4];
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let g = Group::world(ctx);
+            let got = g.allgather(v.clone());
+            assert_eq!(got.len(), 4);
+        }
+        t0.elapsed().as_secs_f64()
+    });
+    res.results.iter().cloned().fold(0.0, f64::max) / iters as f64
+}
+
+fn main() {
+    println!("== transport overhead: shmem vs tcp loopback ==\n");
+    println!("ping-pong (2 ranks, one-way per message):");
+    println!("{:>10}  {:>12}  {:>12}  {:>7}", "payload", "shmem", "tcp", "ratio");
+    for payload in [0usize, 1 << 10, 1 << 16] {
+        let iters = if payload >= 1 << 16 { 200 } else { 1000 };
+        let shm = pingpong("local", iters, payload);
+        let tcp = pingpong("tcp-loopback", iters, payload);
+        println!(
+            "{:>8} B  {:>9.2} µs  {:>9.2} µs  {:>6.1}x",
+            payload,
+            shm * 1e6,
+            tcp * 1e6,
+            tcp / shm.max(1e-12)
+        );
+    }
+
+    println!("\nring allgather (4 ranks, per operation):");
+    println!("{:>10}  {:>12}  {:>12}  {:>7}", "payload", "shmem", "tcp", "ratio");
+    for payload in [1usize << 10, 1 << 16] {
+        let iters = if payload >= 1 << 16 { 100 } else { 500 };
+        let shm = allgather("local", iters, payload);
+        let tcp = allgather("tcp-loopback", iters, payload);
+        println!(
+            "{:>8} B  {:>9.2} µs  {:>9.2} µs  {:>6.1}x",
+            payload,
+            shm * 1e6,
+            tcp * 1e6,
+            tcp / shm.max(1e-12)
+        );
+    }
+    println!("\ntransport_overhead OK");
+}

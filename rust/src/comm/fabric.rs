@@ -1,9 +1,12 @@
-//! The in-process message fabric: mailboxes, tags, and virtual-time stamps.
+//! The in-process message fabric — the shared-memory [`Transport`].
 //!
 //! Ranks are OS threads; a message is an [`Envelope`] posted into the
 //! destination rank's [`Mailbox`].  Matching is by `(src, tag)` with
 //! out-of-order buffering (a rank may receive messages in any arrival
-//! order but consumes them selectively, like MPI tag matching).
+//! order but consumes them selectively, like MPI tag matching).  Since
+//! all ranks share one address space, payloads move by **ownership** —
+//! no serialization ever happens on this transport; the wire codec is
+//! only exercised by [`tcp`](crate::comm::transport::tcp).
 //!
 //! **Virtual time.**  Both endpoints are occupied for the full transfer
 //! `ts + tw·bytes` (the paper's §2 cost model; "telephone" semantics):
@@ -16,51 +19,15 @@
 //! serializes p−1 incoming transfers.
 //!
 //! Deadlock detection: `take` panics after [`RECV_TIMEOUT`] with a
-//! diagnostic.  FooPar's design claim is that group operations make
-//! deadlocks impossible; the timeout is our test oracle for that claim
-//! (a deadlock in the framework would fail loudly, not hang CI).
+//! diagnostic (see [`Mailbox::take`]).
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::sync::Arc;
 
-use crate::comm::message::Msg;
+pub use crate::comm::transport::{Envelope, RECV_TIMEOUT};
+use crate::comm::transport::{Mailbox, Transport};
 
-/// Wall-clock bound on a blocking receive before we declare deadlock.
-pub const RECV_TIMEOUT: Duration = Duration::from_secs(60);
-
-/// One message in flight.
-pub struct Envelope {
-    pub src: usize,
-    pub tag: u64,
-    /// Modeled wire size (drives cost and metrics).
-    pub bytes: usize,
-    /// Sender's virtual clock at send initiation (transfer-ready time).
-    pub ready: f64,
-    /// The erased payload (generic sends are wrapped by `Ctx`).
-    pub payload: Msg,
-}
-
-#[derive(Default)]
-struct MailboxInner {
-    queue: VecDeque<Envelope>,
-    /// Ranks that have exited (posting to them is a bug; receiving from
-    /// them can never succeed).
-    closed: bool,
-}
-
-/// One rank's incoming message buffer.
-#[derive(Default)]
-pub struct Mailbox {
-    inner: Mutex<MailboxInner>,
-    cv: Condvar,
-    /// Bumped on every post; lets `take` spin-wait for new arrivals
-    /// without touching the mutex (§Perf).
-    seq: AtomicU64,
-}
-
-/// The fabric connecting `world` ranks.
+/// The in-process fabric connecting `world` ranks: one [`Mailbox`] per
+/// rank in shared memory.
 pub struct Fabric {
     boxes: Vec<Mailbox>,
 }
@@ -76,97 +43,70 @@ impl Fabric {
         self.boxes.len()
     }
 
-    /// Deliver an envelope to `dst`'s mailbox.
-    ///
-    /// Panics (with sender, destination, and tag diagnostics) if `dst`'s
-    /// mailbox is closed: the destination rank already exited, so the
-    /// message could never be received — silently queueing it would turn
-    /// a collective-membership bug into a downstream deadlock.
+    /// Deliver an envelope to `dst`'s mailbox (panics with diagnostics
+    /// if `dst` already exited — see [`Mailbox::post`]).
     pub fn post(&self, dst: usize, env: Envelope) {
-        let mb = &self.boxes[dst];
-        {
-            let mut inner = mb.inner.lock().unwrap();
-            if inner.closed {
-                // drop the guard before panicking so the mutex is not
-                // poisoned for diagnostics readers
-                drop(inner);
-                panic!(
-                    "rank {}: post(dst={dst}, tag={:#x}, {} bytes) to closed mailbox — \
-                     rank {dst} already exited; sending to a non-participant is a \
-                     collective-membership bug",
-                    env.src, env.tag, env.bytes
-                );
-            }
-            inner.queue.push_back(env);
-        }
-        self.boxes[dst].seq.fetch_add(1, Ordering::Release);
-        // Only the owning rank ever blocks on its own mailbox — a single
-        // waiter, so notify_one suffices (perf: avoids thundering-herd
-        // wakeups; see EXPERIMENTS.md §Perf).
-        mb.cv.notify_one();
+        self.boxes[dst].post(dst, env);
     }
 
     /// Blocking, selective receive: first buffered envelope matching
     /// `(src, tag)`.  Panics after [`RECV_TIMEOUT`] (deadlock oracle).
-    ///
-    /// Deliberately futex-based with **no spin phase**: a bounded spin
-    /// (tried in the §Perf pass, both lock-scan and lock-free `seq`
-    /// variants) regressed ping-pong latency up to 9× on low-core-count
-    /// hosts — the spinner burns the quantum the *sender* needs.  The
-    /// `seq` counter is kept for diagnostics.
     pub fn take(&self, me: usize, src: usize, tag: u64) -> Envelope {
-        let mb = &self.boxes[me];
-        let mut inner = mb.inner.lock().unwrap();
-        loop {
-            if let Some(pos) = inner
-                .queue
-                .iter()
-                .position(|e| e.src == src && e.tag == tag)
-            {
-                return inner.queue.remove(pos).unwrap();
-            }
-            let pending: Vec<(usize, u64)> =
-                inner.queue.iter().map(|e| (e.src, e.tag)).collect();
-            let (guard, res) = mb
-                .cv
-                .wait_timeout(inner, RECV_TIMEOUT)
-                .unwrap();
-            inner = guard;
-            if res.timed_out()
-                && !inner
-                    .queue
-                    .iter()
-                    .any(|e| e.src == src && e.tag == tag)
-            {
-                panic!(
-                    "rank {me}: recv(src={src}, tag={tag:#x}) timed out after {RECV_TIMEOUT:?} \
-                     — deadlock? pending envelopes: {pending:?}"
-                );
-            }
-        }
+        self.boxes[me].take(me, src, tag)
     }
 
     /// Non-blocking probe for a matching envelope.
     pub fn probe(&self, me: usize, src: usize, tag: u64) -> bool {
-        let inner = self.boxes[me].inner.lock().unwrap();
-        inner.queue.iter().any(|e| e.src == src && e.tag == tag)
+        self.boxes[me].probe(src, tag)
     }
 
     /// Number of buffered envelopes for rank `me` (diagnostics).
     pub fn pending(&self, me: usize) -> usize {
-        self.boxes[me].inner.lock().unwrap().queue.len()
+        self.boxes[me].pending()
     }
 
-    /// Mark a rank's mailbox closed (rank exited).
+    /// Mark a rank's mailbox closed (rank exited).  Idempotent.
     pub fn close(&self, me: usize) {
-        self.boxes[me].inner.lock().unwrap().closed = true;
+        let _ = self.boxes[me].close();
+    }
+}
+
+impl Transport for Fabric {
+    fn world(&self) -> usize {
+        Fabric::world(self)
+    }
+
+    fn name(&self) -> &'static str {
+        "shmem"
+    }
+
+    fn post(&self, dst: usize, env: Envelope) {
+        Fabric::post(self, dst, env);
+    }
+
+    fn take(&self, me: usize, src: usize, tag: u64) -> Envelope {
+        Fabric::take(self, me, src, tag)
+    }
+
+    fn probe(&self, me: usize, src: usize, tag: u64) -> bool {
+        Fabric::probe(self, me, src, tag)
+    }
+
+    fn pending(&self, me: usize) -> usize {
+        Fabric::pending(self, me)
+    }
+
+    fn close(&self, me: usize) {
+        Fabric::close(self, me);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::message::Msg;
     use std::thread;
+    use std::time::Duration;
 
     fn env(src: usize, tag: u64, val: i64) -> Envelope {
         Envelope { src, tag, bytes: 8, ready: 0.0, payload: Msg::new(val) }
@@ -237,6 +177,46 @@ mod tests {
         assert!(msg.contains("0x2a"), "{msg}");
         // nothing was queued
         assert_eq!(f.pending(1), 0);
+    }
+
+    #[test]
+    fn take_on_closed_mailbox_panics_with_diagnostics() {
+        let f = Fabric::new(2);
+        f.close(1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = f.take(1, 0, 0x3B);
+        }));
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string panic>".into());
+        assert!(msg.contains("closed mailbox"), "{msg}");
+        assert!(msg.contains("rank 1"), "{msg}");
+        assert!(msg.contains("src=0"), "{msg}");
+        assert!(msg.contains("0x3b"), "{msg}");
+    }
+
+    #[test]
+    fn take_blocked_then_closed_panics_promptly() {
+        // a rank blocked in take must fail as soon as its mailbox closes,
+        // not after the 60 s deadlock timeout
+        let f = Fabric::new(2);
+        let f2 = f.clone();
+        let h = thread::spawn(move || {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _ = f2.take(1, 0, 1);
+            }))
+        });
+        thread::sleep(Duration::from_millis(20));
+        f.close(1);
+        let res = h.join().unwrap();
+        let err = res.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string panic>".into());
+        assert!(msg.contains("closed mailbox"), "{msg}");
     }
 
     #[test]

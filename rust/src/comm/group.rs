@@ -20,7 +20,7 @@
 //! backend selected, with zero changes to calling code.
 
 use crate::comm::message::Msg;
-use crate::data::value::Data;
+use crate::comm::wire::WireData;
 use crate::spmd::Ctx;
 
 /// An ordered subset of world ranks with a private tag namespace.
@@ -103,12 +103,12 @@ impl<'a> Group<'a> {
     // ------------------------------------------------ point-to-point (T)
 
     /// Send to group member `dst` (group rank) under `tag`.
-    pub(crate) fn send_to<T: Data>(&self, dst: usize, tag: u64, v: T) {
+    pub(crate) fn send_to<T: WireData>(&self, dst: usize, tag: u64, v: T) {
         self.ctx.send(self.ranks[dst], tag, v);
     }
 
     /// Receive from group member `src` (group rank) under `tag`.
-    pub(crate) fn recv_from<T: Data>(&self, src: usize, tag: u64) -> T {
+    pub(crate) fn recv_from<T: WireData>(&self, src: usize, tag: u64) -> T {
         self.ctx.recv(self.ranks[src], tag)
     }
 
@@ -144,7 +144,7 @@ impl<'a> Group<'a> {
     /// One-to-all broadcast from group rank `root`.  `value` must be
     /// `Some` at the root (others may pass `None`).  Returns the value
     /// everywhere.  Θ(log p (t_s + t_w m)) on tree backends.
-    pub fn bcast<T: Data + Clone>(&self, root: usize, value: Option<T>) -> T {
+    pub fn bcast<T: WireData + Clone>(&self, root: usize, value: Option<T>) -> T {
         self.ctx.metrics.on_collective();
         self.ctx
             .collectives()
@@ -156,7 +156,7 @@ impl<'a> Group<'a> {
     /// rank `root`.  Non-roots get `None`.  `op(a, b)` receives `a` from
     /// the lower group rank — associativity is the only requirement
     /// (paper Table 1).
-    pub fn reduce<T: Data>(&self, root: usize, value: T, op: impl Fn(T, T) -> T) -> Option<T> {
+    pub fn reduce<T: WireData>(&self, root: usize, value: T, op: impl Fn(T, T) -> T) -> Option<T> {
         self.ctx.metrics.on_collective();
         let erased = |a: Msg, b: Msg| Msg::new(op(a.downcast::<T>(), b.downcast::<T>()));
         self.ctx
@@ -167,7 +167,7 @@ impl<'a> Group<'a> {
 
     /// Reduce to group rank 0 then broadcast: everyone gets the folded
     /// value.
-    pub fn allreduce<T: Data + Clone>(&self, value: T, op: impl Fn(T, T) -> T) -> T {
+    pub fn allreduce<T: WireData + Clone>(&self, value: T, op: impl Fn(T, T) -> T) -> T {
         self.ctx.metrics.on_collective();
         let erased = |a: Msg, b: Msg| Msg::cloneable(op(a.downcast::<T>(), b.downcast::<T>()));
         self.ctx
@@ -178,7 +178,7 @@ impl<'a> Group<'a> {
 
     /// All-to-all broadcast: every member contributes one value; everyone
     /// obtains the full group-ordered vector.
-    pub fn allgather<T: Data + Clone>(&self, value: T) -> Vec<T> {
+    pub fn allgather<T: WireData + Clone>(&self, value: T) -> Vec<T> {
         self.ctx.metrics.on_collective();
         self.ctx
             .collectives()
@@ -190,7 +190,7 @@ impl<'a> Group<'a> {
 
     /// Personalized all-to-all: `items[j]` is delivered to group rank
     /// `j`; returns the vector whose i-th entry came from group rank `i`.
-    pub fn alltoall<T: Data>(&self, items: Vec<T>) -> Vec<T> {
+    pub fn alltoall<T: WireData>(&self, items: Vec<T>) -> Vec<T> {
         self.ctx.metrics.on_collective();
         let items = items.into_iter().map(Msg::new).collect();
         self.ctx
@@ -203,7 +203,7 @@ impl<'a> Group<'a> {
 
     /// Cyclic shift by `delta`: my value goes to group rank
     /// `(me+delta) mod p`; I receive from `(me−delta) mod p`.
-    pub fn shift<T: Data>(&self, delta: isize, value: T) -> T {
+    pub fn shift<T: WireData>(&self, delta: isize, value: T) -> T {
         self.ctx.metrics.on_collective();
         self.ctx
             .collectives()
@@ -218,7 +218,7 @@ impl<'a> Group<'a> {
     }
 
     /// All-to-one gather: root obtains the group-ordered vector.
-    pub fn gather<T: Data>(&self, root: usize, value: T) -> Option<Vec<T>> {
+    pub fn gather<T: WireData>(&self, root: usize, value: T) -> Option<Vec<T>> {
         self.ctx.metrics.on_collective();
         self.ctx
             .collectives()
@@ -227,7 +227,7 @@ impl<'a> Group<'a> {
     }
 
     /// One-to-all scatter: root distributes `values[i]` to member i.
-    pub fn scatter<T: Data>(&self, root: usize, values: Option<Vec<T>>) -> T {
+    pub fn scatter<T: WireData>(&self, root: usize, values: Option<Vec<T>>) -> T {
         self.ctx.metrics.on_collective();
         let values = values.map(|v| v.into_iter().map(Msg::new).collect());
         self.ctx
@@ -238,7 +238,7 @@ impl<'a> Group<'a> {
 
     /// Inclusive prefix scan: member i obtains `v_0 ⊕ v_1 ⊕ … ⊕ v_i` in
     /// group order.  `op` must be associative.
-    pub fn scan<T: Data + Clone>(&self, value: T, op: impl Fn(T, T) -> T) -> T {
+    pub fn scan<T: WireData + Clone>(&self, value: T, op: impl Fn(T, T) -> T) -> T {
         self.ctx.metrics.on_collective();
         let erased = |a: Msg, b: Msg| Msg::cloneable(op(a.downcast::<T>(), b.downcast::<T>()));
         self.ctx

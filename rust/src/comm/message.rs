@@ -2,11 +2,23 @@
 //! [`Collectives`](crate::comm::collectives::Collectives) layer.
 //!
 //! Rust trait objects cannot have generic methods, but collective
-//! operations are generic over the element type `T: Data`.  [`Msg`]
+//! operations are generic over the element type `T: WireData`.  [`Msg`]
 //! bridges the two: a `Msg` owns an erased value together with its
 //! modeled wire size (so the virtual-time cost model keeps working
-//! end-to-end) and, when the original type was `Clone`, a cloning thunk
-//! (so tree/ring algorithms can fan a value out to several peers).
+//! end-to-end), a monomorphized encoder (so the value can cross a
+//! process boundary on wire transports), and, when the original type was
+//! `Clone`, a cloning thunk (so tree/ring algorithms can fan a value out
+//! to several peers).
+//!
+//! A `Msg` exists in one of two states:
+//!
+//! * **local** — the erased `Box<dyn Any>` as constructed by the sender;
+//!   the only state the in-process fabric ever sees (ownership moves, no
+//!   copy);
+//! * **encoded** — raw bytes as produced by [`Msg::encode_into`] and
+//!   reconstituted by a wire transport's reader thread.  Decoding back
+//!   to the concrete type happens lazily at the [`Msg::downcast`] site,
+//!   guarded by the [`type_fingerprint`] carried in the header.
 //!
 //! The generic user-facing entry points on
 //! [`Group`](crate::comm::group::Group) wrap values into `Msg`s, dispatch
@@ -16,38 +28,77 @@
 
 use std::any::Any;
 
+use crate::comm::wire::{type_fingerprint, WireData, WireError, WireReader};
 use crate::data::value::Data;
 
-/// An erased value travelling through a collective: payload + modeled
-/// wire size + (optionally) a cloning thunk.
-pub struct Msg {
-    payload: Box<dyn Any + Send>,
-    bytes: usize,
-    clone_fn: Option<fn(&(dyn Any + Send)) -> Box<dyn Any + Send>>,
+type CloneFn = fn(&(dyn Any + Send)) -> Box<dyn Any + Send>;
+type EncodeFn = fn(&(dyn Any + Send), &mut Vec<u8>);
+
+enum Payload {
+    /// In-process: the erased value itself plus its monomorphized thunks.
+    Local {
+        value: Box<dyn Any + Send>,
+        clone_fn: Option<CloneFn>,
+        encode_fn: EncodeFn,
+    },
+    /// Arrived over a wire transport: the value's encoding, decoded
+    /// lazily at the `downcast` site.
+    Encoded(Vec<u8>),
 }
 
-fn clone_box<T: Data + Clone>(any: &(dyn Any + Send)) -> Box<dyn Any + Send> {
+/// An erased value travelling through a collective: payload + modeled
+/// wire size + codec/cloning thunks.
+pub struct Msg {
+    payload: Payload,
+    bytes: usize,
+    /// Fingerprint of the erased type (wire-side `downcast` guard).
+    type_fp: u64,
+}
+
+fn clone_box<T: WireData + Clone>(any: &(dyn Any + Send)) -> Box<dyn Any + Send> {
     let v = any
         .downcast_ref::<T>()
         .expect("cloneable Msg payload type drifted");
     Box::new(v.clone())
 }
 
+fn encode_box<T: WireData>(any: &(dyn Any + Send), out: &mut Vec<u8>) {
+    any.downcast_ref::<T>()
+        .expect("Msg payload type drifted")
+        .encode(out)
+}
+
 impl Msg {
     /// Erase a value.  The resulting message is *not* duplicable — fine
     /// for point-to-point hops and fold-style collectives (reduce,
     /// gather, alltoall, shift), which never copy payloads.
-    pub fn new<T: Data>(value: T) -> Self {
+    pub fn new<T: WireData>(value: T) -> Self {
         let bytes = value.byte_size();
-        Msg { payload: Box::new(value), bytes, clone_fn: None }
+        Msg {
+            payload: Payload::Local {
+                value: Box::new(value),
+                clone_fn: None,
+                encode_fn: encode_box::<T>,
+            },
+            bytes,
+            type_fp: type_fingerprint::<T>(),
+        }
     }
 
     /// Erase a cloneable value.  Required by fan-out collectives (bcast,
     /// allgather, scan), whose algorithms send the same value to several
     /// peers.
-    pub fn cloneable<T: Data + Clone>(value: T) -> Self {
+    pub fn cloneable<T: WireData + Clone>(value: T) -> Self {
         let bytes = value.byte_size();
-        Msg { payload: Box::new(value), bytes, clone_fn: Some(clone_box::<T>) }
+        Msg {
+            payload: Payload::Local {
+                value: Box::new(value),
+                clone_fn: Some(clone_box::<T>),
+                encode_fn: encode_box::<T>,
+            },
+            bytes,
+            type_fp: type_fingerprint::<T>(),
+        }
     }
 
     /// Modeled wire size in bytes (drives the `t_w·m` cost term).
@@ -56,41 +107,120 @@ impl Msg {
         self.bytes
     }
 
-    /// Can this message be duplicated?
+    /// Can this message be duplicated?  Encoded messages always can
+    /// (duplicating bytes needs no `Clone` on the original type).
     pub fn is_cloneable(&self) -> bool {
-        self.clone_fn.is_some()
+        match &self.payload {
+            Payload::Local { clone_fn, .. } => clone_fn.is_some(),
+            Payload::Encoded(_) => true,
+        }
     }
 
-    /// Duplicate the payload.  Panics for messages built with
+    /// Did this message arrive over a wire transport (payload still in
+    /// encoded form)?
+    pub fn is_encoded(&self) -> bool {
+        matches!(self.payload, Payload::Encoded(_))
+    }
+
+    /// Duplicate the payload.  Panics for local messages built with
     /// [`Msg::new`] — collective algorithms that fan out values must be
     /// fed via [`Msg::cloneable`] (the `Group` entry points enforce this
     /// with `T: Clone` bounds).
     pub fn dup(&self) -> Msg {
-        let f = self
-            .clone_fn
-            .expect("collective algorithm needs a cloneable value (wrap with Msg::cloneable)");
-        Msg { payload: f(self.payload.as_ref()), bytes: self.bytes, clone_fn: self.clone_fn }
+        let payload = match &self.payload {
+            Payload::Local { value, clone_fn, encode_fn } => {
+                let f = clone_fn.expect(
+                    "collective algorithm needs a cloneable value (wrap with Msg::cloneable)",
+                );
+                Payload::Local {
+                    value: f(value.as_ref()),
+                    clone_fn: *clone_fn,
+                    encode_fn: *encode_fn,
+                }
+            }
+            Payload::Encoded(buf) => Payload::Encoded(buf.clone()),
+        };
+        Msg { payload, bytes: self.bytes, type_fp: self.type_fp }
     }
 
     /// Recover the value, or give the message back on type mismatch.
-    pub fn try_downcast<T: Data>(self) -> Result<T, Msg> {
-        let Msg { payload, bytes, clone_fn } = self;
-        match payload.downcast::<T>() {
-            Ok(v) => Ok(*v),
-            Err(payload) => Err(Msg { payload, bytes, clone_fn }),
+    /// Encoded payloads are decoded here (the one codec invocation per
+    /// wire hop); a fingerprint mismatch returns the message untouched.
+    pub fn try_downcast<T: WireData>(self) -> Result<T, Msg> {
+        if self.type_fp != type_fingerprint::<T>() {
+            return Err(self);
+        }
+        match self.payload {
+            Payload::Local { value, clone_fn, encode_fn } => match value.downcast::<T>() {
+                Ok(v) => Ok(*v),
+                Err(value) => Err(Msg {
+                    payload: Payload::Local { value, clone_fn, encode_fn },
+                    bytes: self.bytes,
+                    type_fp: self.type_fp,
+                }),
+            },
+            Payload::Encoded(buf) => {
+                let mut r = WireReader::new(&buf);
+                let v = T::decode(&mut r).unwrap_or_else(|e| {
+                    panic!(
+                        "wire decode of {} failed: {e} ({} payload bytes)",
+                        std::any::type_name::<T>(),
+                        buf.len()
+                    )
+                });
+                // a decode that reads fewer bytes than encode wrote is a
+                // codec bug — surface it here, not as silent truncation
+                assert_eq!(
+                    r.remaining(),
+                    0,
+                    "wire decode of {} left {} of {} payload bytes unconsumed — \
+                     encode/decode of this WireData impl disagree",
+                    std::any::type_name::<T>(),
+                    r.remaining(),
+                    buf.len()
+                );
+                Ok(v)
+            }
         }
     }
 
     /// Recover the value; panics with the expected type name on
     /// mismatch.  Used by the `Group` wrappers, where the type is pinned
     /// by construction.
-    pub fn downcast<T: Data>(self) -> T {
+    pub fn downcast<T: WireData>(self) -> T {
         self.try_downcast::<T>().unwrap_or_else(|_| {
             panic!(
                 "Msg payload type mismatch (expected {})",
                 std::any::type_name::<T>()
             )
         })
+    }
+
+    /// Append this message's wire form to `out`: type fingerprint,
+    /// modeled size, payload length, payload encoding.  Called by wire
+    /// transports for every outgoing envelope (and by the nested-`Msg`
+    /// [`WireData`] impl for erased bundles).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.type_fp.to_le_bytes());
+        out.extend_from_slice(&(self.bytes as u64).to_le_bytes());
+        let len_pos = out.len();
+        out.extend_from_slice(&[0u8; 8]);
+        match &self.payload {
+            Payload::Local { value, encode_fn, .. } => encode_fn(value.as_ref(), out),
+            Payload::Encoded(buf) => out.extend_from_slice(buf),
+        }
+        let plen = (out.len() - len_pos - 8) as u64;
+        out[len_pos..len_pos + 8].copy_from_slice(&plen.to_le_bytes());
+    }
+
+    /// Read one wire-form message (the inverse of [`Msg::encode_into`]).
+    /// The payload stays encoded until `downcast`.
+    pub fn decode_from(r: &mut WireReader<'_>) -> Result<Msg, WireError> {
+        let type_fp = r.u64()?;
+        let bytes = r.len()?;
+        let plen = r.len()?;
+        let payload = r.take(plen)?.to_vec();
+        Ok(Msg { payload: Payload::Encoded(payload), bytes, type_fp })
     }
 }
 
@@ -104,11 +234,24 @@ impl Data for Msg {
     }
 }
 
+/// `Msg` is also `WireData`, so those bundles cross process boundaries:
+/// the nested message's header travels inside the outer payload and the
+/// inner value stays encoded until *its* `downcast`.
+impl WireData for Msg {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.encode_into(out);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Msg::decode_from(r)
+    }
+}
+
 impl std::fmt::Debug for Msg {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Msg")
             .field("bytes", &self.bytes)
             .field("cloneable", &self.is_cloneable())
+            .field("encoded", &self.is_encoded())
             .finish()
     }
 }
@@ -153,5 +296,66 @@ mod tests {
         let items: Vec<(u64, Msg)> = (0..3).map(|i| (i, Msg::new(0.5f64))).collect();
         let concrete: Vec<(u64, f64)> = (0..3).map(|i| (i, 0.5f64)).collect();
         assert_eq!(Msg::new(items).bytes(), concrete.byte_size());
+    }
+
+    // ------------------------------------------------------- wire form
+
+    fn wire_hop(m: &Msg) -> Msg {
+        let mut buf = Vec::new();
+        m.encode_into(&mut buf);
+        let mut r = WireReader::new(&buf);
+        let back = Msg::decode_from(&mut r).expect("decode");
+        assert_eq!(r.remaining(), 0);
+        back
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_value_bytes_and_type() {
+        let m = Msg::new(vec![1.5f64, -2.5, 3.5]);
+        let bytes = m.bytes();
+        let back = wire_hop(&m);
+        assert!(back.is_encoded());
+        assert_eq!(back.bytes(), bytes);
+        assert_eq!(back.downcast::<Vec<f64>>(), vec![1.5, -2.5, 3.5]);
+    }
+
+    #[test]
+    fn wire_downcast_to_wrong_type_is_rejected() {
+        let back = wire_hop(&Msg::new(7u64));
+        // fingerprint guard: no misdecode, the message comes back
+        let err = back.try_downcast::<f64>().unwrap_err();
+        assert_eq!(err.downcast::<u64>(), 7);
+    }
+
+    #[test]
+    fn encoded_msg_is_always_cloneable() {
+        // Msg::new gives no clone thunk, but the encoded form dups freely
+        let back = wire_hop(&Msg::new(String::from("x")));
+        assert!(back.is_cloneable());
+        assert_eq!(back.dup().downcast::<String>(), "x");
+        assert_eq!(back.downcast::<String>(), "x");
+    }
+
+    #[test]
+    fn double_hop_reencodes_without_decoding() {
+        // forwarders (e.g. bcast interior nodes) re-encode the raw bytes
+        let m = Msg::cloneable(vec![9u64, 8, 7]);
+        let once = wire_hop(&m);
+        let twice = wire_hop(&once);
+        assert_eq!(twice.bytes(), m.bytes());
+        assert_eq!(twice.downcast::<Vec<u64>>(), vec![9, 8, 7]);
+    }
+
+    #[test]
+    fn nested_bundles_cross_the_wire() {
+        // the recursive-doubling all-gather's round payload
+        let bundle: Vec<(u64, Msg)> =
+            vec![(0, Msg::new(10i64)), (3, Msg::new(30i64))];
+        let back = wire_hop(&Msg::new(bundle)).downcast::<Vec<(u64, Msg)>>();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].0, 0);
+        assert_eq!(back[1].0, 3);
+        assert_eq!(back[0].1.dup().downcast::<i64>(), 10);
+        assert_eq!(back[1].1.dup().downcast::<i64>(), 30);
     }
 }

@@ -2,11 +2,17 @@
 //!
 //! * [`cost`] — the two-parameter (`t_s`, `t_w`) virtual-time cost model
 //!   of §2;
+//! * [`transport`] — the [`transport::Transport`] trait (rank-to-rank
+//!   envelope delivery) and its implementations: the in-process
+//!   [`fabric`] and the multi-process [`transport::tcp`] backend with
+//!   its re-exec [`transport::launch`]er;
 //! * [`fabric`] — in-process mailboxes with MPI-style `(src, tag)`
 //!   matching; every envelope advances virtual clocks;
+//! * [`wire`] — the [`wire::WireData`] encode/decode codec for payloads
+//!   that cross a process boundary;
 //! * [`message`] — [`message::Msg`], the type-erased payload that lets
 //!   collective strategies be trait objects while values stay generic at
-//!   the API surface;
+//!   the API surface (and, via its encoded form, cross processes);
 //! * [`algorithms`] — the textbook collective algorithms (binomial /
 //!   linear / ring / recursive-doubling / pairwise …) as explicit
 //!   message rounds over a group, reusable as building blocks;
@@ -24,7 +30,9 @@
 //! Data-structure code ([`crate::data`]) and algorithms only ever touch
 //! [`group::Group`] methods; which algorithm executes — and at what
 //! software overhead — is decided by the backend selected on
-//! [`Runtime::builder`](crate::spmd::Runtime::builder), exactly the
+//! [`Runtime::builder`](crate::spmd::Runtime::builder), and which
+//! substrate carries the messages (threads over shared memory, OS
+//! processes over TCP) by the transport selected there — exactly the
 //! paper's claim that switching `FooPar-X` configurations changes no
 //! algorithm code.
 
@@ -35,3 +43,5 @@ pub mod cost;
 pub mod fabric;
 pub mod group;
 pub mod message;
+pub mod transport;
+pub mod wire;

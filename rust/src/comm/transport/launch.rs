@@ -1,0 +1,277 @@
+//! Multi-process launcher: re-exec spawning with env-var rendezvous.
+//!
+//! `Runtime::builder().transport("tcp")` turns one program into an
+//! MPI-style multi-process run, no external launcher required:
+//!
+//! 1. the **parent** process (no `FOOPAR_TCP_RANK` in its environment)
+//!    becomes rank 0.  It binds a rendezvous listener plus its own data
+//!    listener, then re-execs its own binary (`current_exe`, same
+//!    arguments) once per remaining rank with three environment
+//!    variables set: [`ENV_RANK`], [`ENV_WORLD`], [`ENV_RENDEZVOUS`];
+//! 2. each **worker** re-runs `main` from the top, reaches the same
+//!    `Runtime::run` call (SPMD symmetry), binds its data listener, and
+//!    reports `rank port` over the rendezvous connection;
+//! 3. the parent collects all registrations, broadcasts the full
+//!    rank→port map back over the same connections, and every process
+//!    builds its [`TcpTransport::endpoint`].  Loopback-only by design —
+//!    this is the CI-friendly single-host story.
+//!
+//! Because workers re-execute `main`, code before the `run` call runs in
+//! every process: keep it idempotent, and gate output or expensive
+//! side-effects on [`child_rank`] (see `examples/matmul_dns_tcp.rs`).
+//! After `run` returns, the parent has waited on every worker and
+//! verified exit status; workers should simply return from `main`.
+//!
+//! One multi-process run per program execution: the rendezvous address
+//! in a worker's environment refers to the parent's *first* run, so a
+//! second `transport("tcp")` run panics with an explanation instead of
+//! hanging.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::process::{Child, Command};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context};
+
+use super::tcp::TcpTransport;
+use std::sync::Arc;
+
+/// Worker rank (absent in the parent/launcher process).
+pub const ENV_RANK: &str = "FOOPAR_TCP_RANK";
+/// Total number of ranks, for cross-checking the builder configuration.
+pub const ENV_WORLD: &str = "FOOPAR_TCP_WORLD";
+/// `host:port` of the parent's rendezvous listener.
+pub const ENV_RENDEZVOUS: &str = "FOOPAR_TCP_RENDEZVOUS";
+
+/// How long the parent waits for all workers to register (a worker that
+/// dies before registering fails the run within this bound, not never).
+const RENDEZVOUS_TIMEOUT: Duration = Duration::from_secs(30);
+
+static USED: AtomicBool = AtomicBool::new(false);
+
+/// `Some(rank)` when this process is a spawned worker of a multi-process
+/// run; `None` in the parent (which doubles as rank 0).
+pub fn child_rank() -> Option<usize> {
+    std::env::var(ENV_RANK).ok()?.parse().ok()
+}
+
+/// Spawned worker processes with kill-on-drop: any parent failure path
+/// (rendezvous bail, rank-0 panic, clock-gather failure) reaps the
+/// workers instead of orphaning N−1 re-exec'd processes that would each
+/// burn a 60 s deadlock timeout before dying on their own.
+struct Workers(Vec<Child>);
+
+impl Drop for Workers {
+    fn drop(&mut self) {
+        for child in &mut self.0 {
+            if matches!(child.try_wait(), Ok(None)) {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
+    }
+}
+
+/// One process's view of an established multi-process world.
+pub struct ProcWorld {
+    rank: usize,
+    world: usize,
+    transport: Arc<TcpTransport>,
+    /// Spawned workers (parent only).
+    children: Workers,
+}
+
+impl ProcWorld {
+    /// This process's rank (parent: 0).
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn transport(&self) -> Arc<TcpTransport> {
+        self.transport.clone()
+    }
+
+    /// Parent: non-blocking liveness poll — `Err` if any worker already
+    /// exited with a failure status.  Lets the parent fail fast (with
+    /// the worker's exit status) instead of blocking on a receive that
+    /// can never complete.  Workers: no-op.
+    pub fn check_children(&mut self) -> crate::Result<()> {
+        for (i, child) in self.children.0.iter_mut().enumerate() {
+            if let Some(status) = child.try_wait()? {
+                if !status.success() {
+                    bail!("tcp worker rank {} exited with {status} mid-run", i + 1);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Parent: wait for every worker and fail if any exited non-zero.
+    /// Workers: no-op.
+    pub fn finish(mut self) -> crate::Result<()> {
+        let mut failures = Vec::new();
+        for (i, child) in self.children.0.iter_mut().enumerate() {
+            let rank = i + 1;
+            match child.wait() {
+                Ok(status) if status.success() => {}
+                Ok(status) => failures.push(format!("rank {rank} exited with {status}")),
+                Err(e) => failures.push(format!("rank {rank} wait failed: {e}")),
+            }
+        }
+        if failures.is_empty() {
+            Ok(())
+        } else {
+            Err(anyhow!("tcp worker process failures: {}", failures.join("; ")))
+        }
+    }
+}
+
+/// Establish the multi-process world for `world` ranks (parent or
+/// worker, decided by the environment — see module docs).
+pub fn establish(world: usize) -> crate::Result<ProcWorld> {
+    if USED.swap(true, Ordering::SeqCst) {
+        bail!(
+            "transport(\"tcp\") supports one multi-process run per program execution \
+             (workers re-exec main and rendezvous with the parent's first run); \
+             use transport(\"tcp-loopback\") for repeated in-process wire runs"
+        );
+    }
+    match child_rank() {
+        Some(rank) => establish_worker(rank, world),
+        None => establish_parent(world),
+    }
+}
+
+fn establish_parent(world: usize) -> crate::Result<ProcWorld> {
+    let rendezvous = TcpListener::bind("127.0.0.1:0").context("bind rendezvous listener")?;
+    let rdv_addr = rendezvous.local_addr()?;
+    let listener = TcpListener::bind("127.0.0.1:0").context("bind rank 0 data listener")?;
+
+    let exe = std::env::current_exe().context("resolve current_exe for re-exec")?;
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut children = Workers(Vec::with_capacity(world - 1));
+    for rank in 1..world {
+        let child = Command::new(&exe)
+            .args(&args)
+            .env(ENV_RANK, rank.to_string())
+            .env(ENV_WORLD, world.to_string())
+            .env(ENV_RENDEZVOUS, rdv_addr.to_string())
+            .spawn()
+            .with_context(|| format!("re-exec {} for rank {rank}", exe.display()))?;
+        children.0.push(child);
+    }
+
+    // Collect `rank port` registrations, with a deadline and early
+    // failure if a worker dies before registering.
+    let mut ports: Vec<Option<u16>> = vec![None; world];
+    ports[0] = Some(listener.local_addr()?.port());
+    let mut socks: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
+    rendezvous.set_nonblocking(true)?;
+    let deadline = Instant::now() + RENDEZVOUS_TIMEOUT;
+    let mut registered = 1;
+    while registered < world {
+        match rendezvous.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false)?;
+                stream.set_read_timeout(Some(RENDEZVOUS_TIMEOUT))?;
+                let mut line = String::new();
+                BufReader::new(stream.try_clone()?).read_line(&mut line)?;
+                let mut it = line.split_whitespace();
+                let rank: usize = it
+                    .next()
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| anyhow!("bad rendezvous registration {line:?}"))?;
+                let port: u16 = it
+                    .next()
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| anyhow!("bad rendezvous registration {line:?}"))?;
+                if rank == 0 || rank >= world || ports[rank].is_some() {
+                    bail!("duplicate or out-of-range rendezvous rank {rank}");
+                }
+                ports[rank] = Some(port);
+                socks[rank] = Some(stream);
+                registered += 1;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                for (i, child) in children.0.iter_mut().enumerate() {
+                    if let Some(status) = child.try_wait()? {
+                        bail!(
+                            "tcp worker rank {} exited with {status} before registering",
+                            i + 1
+                        );
+                    }
+                }
+                if Instant::now() > deadline {
+                    bail!(
+                        "rendezvous timed out after {RENDEZVOUS_TIMEOUT:?} with \
+                         {registered}/{world} ranks registered"
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+
+    // Broadcast the full port map.
+    let map = ports
+        .iter()
+        .map(|p| p.unwrap().to_string())
+        .collect::<Vec<_>>()
+        .join(" ");
+    for sock in socks.iter_mut().flatten() {
+        writeln!(sock, "{map}").context("send port map to worker")?;
+    }
+
+    let peers = ports
+        .iter()
+        .map(|p| SocketAddr::from(([127, 0, 0, 1], p.unwrap())))
+        .collect();
+    let transport = TcpTransport::endpoint(0, world, listener, peers);
+    Ok(ProcWorld { rank: 0, world, transport, children })
+}
+
+fn establish_worker(rank: usize, world: usize) -> crate::Result<ProcWorld> {
+    let env_world: usize = std::env::var(ENV_WORLD)
+        .context("worker missing FOOPAR_TCP_WORLD")?
+        .parse()
+        .context("FOOPAR_TCP_WORLD not an integer")?;
+    if env_world != world {
+        bail!(
+            "SPMD asymmetry: spawned for world {env_world} but Runtime::builder() \
+             requested world {world} — parent and workers must execute the same run"
+        );
+    }
+    let rdv = std::env::var(ENV_RENDEZVOUS).context("worker missing FOOPAR_TCP_RENDEZVOUS")?;
+    let listener = TcpListener::bind("127.0.0.1:0").context("bind worker data listener")?;
+    let port = listener.local_addr()?.port();
+
+    let mut stream = TcpStream::connect(&rdv)
+        .with_context(|| format!("rank {rank}: connect rendezvous {rdv}"))?;
+    writeln!(stream, "{rank} {port}").context("register with rendezvous")?;
+    let mut line = String::new();
+    stream
+        .set_read_timeout(Some(RENDEZVOUS_TIMEOUT))
+        .context("rendezvous read timeout")?;
+    BufReader::new(stream).read_line(&mut line).context("read port map")?;
+    let ports: Vec<u16> = line
+        .split_whitespace()
+        .map(|s| s.parse())
+        .collect::<Result<_, _>>()
+        .context("parse port map")?;
+    if ports.len() != world {
+        bail!("port map has {} entries, expected {world}", ports.len());
+    }
+    let peers = ports
+        .iter()
+        .map(|&p| SocketAddr::from(([127, 0, 0, 1], p)))
+        .collect();
+    let transport = TcpTransport::endpoint(rank, world, listener, peers);
+    Ok(ProcWorld { rank, world, transport, children: Workers(Vec::new()) })
+}

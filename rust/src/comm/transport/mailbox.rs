@@ -1,0 +1,146 @@
+//! The per-rank mailbox: `(src, tag)`-matched buffering shared by every
+//! transport.
+//!
+//! Carved out of the PR 1 `Fabric` so wire transports reuse the exact
+//! matching, blocking, and deadlock-oracle semantics: the in-process
+//! [`Fabric`](crate::comm::fabric::Fabric) owns one mailbox per rank and
+//! posts into it directly; [`TcpTransport`](super::tcp::TcpTransport)
+//! owns one mailbox per *local* rank and has socket reader threads post
+//! decoded frames into it.  `take` never knows which.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::Envelope;
+
+/// Wall-clock bound on a blocking receive before we declare deadlock.
+///
+/// FooPar's design claim is that group operations make deadlocks
+/// impossible; the timeout is our test oracle for that claim (a deadlock
+/// in the framework fails loudly instead of hanging CI).
+pub const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+#[derive(Default)]
+struct MailboxInner {
+    queue: VecDeque<Envelope>,
+    /// The owning rank has exited (posting to it is a bug; receiving
+    /// from it can never succeed).
+    closed: bool,
+}
+
+/// One rank's incoming message buffer.
+#[derive(Default)]
+pub struct Mailbox {
+    inner: Mutex<MailboxInner>,
+    cv: Condvar,
+    /// Bumped on every post; lets tooling observe arrivals without
+    /// touching the mutex (§Perf; kept for diagnostics).
+    seq: AtomicU64,
+}
+
+impl Mailbox {
+    /// Buffer an envelope addressed to rank `dst` (the mailbox owner).
+    ///
+    /// Panics (with sender, destination, and tag diagnostics) if the
+    /// mailbox is closed: the destination rank already exited, so the
+    /// message could never be received — silently queueing it would turn
+    /// a collective-membership bug into a downstream deadlock.
+    pub fn post(&self, dst: usize, env: Envelope) {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if inner.closed {
+                // drop the guard before panicking so the mutex is not
+                // poisoned for diagnostics readers
+                drop(inner);
+                panic!(
+                    "rank {}: post(dst={dst}, tag={:#x}, {} bytes) to closed mailbox — \
+                     rank {dst} already exited; sending to a non-participant is a \
+                     collective-membership bug",
+                    env.src, env.tag, env.bytes
+                );
+            }
+            inner.queue.push_back(env);
+        }
+        self.seq.fetch_add(1, Ordering::Release);
+        // Only the owning rank ever blocks on its own mailbox — a single
+        // waiter, so notify_one suffices (perf: avoids thundering-herd
+        // wakeups; see EXPERIMENTS.md §Perf).
+        self.cv.notify_one();
+    }
+
+    /// Blocking, selective receive by rank `me` (the mailbox owner):
+    /// first buffered envelope matching `(src, tag)`.  Panics after
+    /// [`RECV_TIMEOUT`] (deadlock oracle), and panics immediately — with
+    /// the same rank/src/tag diagnostics as [`Mailbox::post`] — if the
+    /// mailbox is already closed (receiving after exit is a
+    /// collective-membership bug, not a reason to block for a minute).
+    ///
+    /// Deliberately futex-based with **no spin phase**: a bounded spin
+    /// (tried in the §Perf pass, both lock-scan and lock-free `seq`
+    /// variants) regressed ping-pong latency up to 9× on low-core-count
+    /// hosts — the spinner burns the quantum the *sender* needs.
+    pub fn take(&self, me: usize, src: usize, tag: u64) -> Envelope {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(pos) = inner
+                .queue
+                .iter()
+                .position(|e| e.src == src && e.tag == tag)
+            {
+                return inner.queue.remove(pos).unwrap();
+            }
+            if inner.closed {
+                let pending: Vec<(usize, u64)> =
+                    inner.queue.iter().map(|e| (e.src, e.tag)).collect();
+                drop(inner);
+                panic!(
+                    "rank {me}: recv(src={src}, tag={tag:#x}) on closed mailbox — \
+                     rank {me} already exited; receiving after exit is a \
+                     collective-membership bug (pending envelopes: {pending:?})"
+                );
+            }
+            let pending: Vec<(usize, u64)> =
+                inner.queue.iter().map(|e| (e.src, e.tag)).collect();
+            let (guard, res) = self.cv.wait_timeout(inner, RECV_TIMEOUT).unwrap();
+            inner = guard;
+            if res.timed_out()
+                && !inner
+                    .queue
+                    .iter()
+                    .any(|e| e.src == src && e.tag == tag)
+            {
+                panic!(
+                    "rank {me}: recv(src={src}, tag={tag:#x}) timed out after {RECV_TIMEOUT:?} \
+                     — deadlock? pending envelopes: {pending:?}"
+                );
+            }
+        }
+    }
+
+    /// Non-blocking probe for a matching envelope.
+    pub fn probe(&self, src: usize, tag: u64) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner.queue.iter().any(|e| e.src == src && e.tag == tag)
+    }
+
+    /// Number of buffered envelopes (diagnostics).
+    pub fn pending(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Mark the owning rank exited.  Idempotent; returns `true` only on
+    /// the open→closed transition (so callers keeping shutdown counters
+    /// stay correct under double-close).
+    pub fn close(&self) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let transitioned = !inner.closed;
+        inner.closed = true;
+        drop(inner);
+        // wake a blocked `take` so it panics with diagnostics instead of
+        // sleeping out the timeout
+        self.cv.notify_one();
+        transitioned
+    }
+}

@@ -1,0 +1,105 @@
+//! The wire-level transport subsystem: pluggable rank-to-rank delivery.
+//!
+//! The paper's FooPar-X configurations promise "easy access to different
+//! communication backends for distributed memory architectures" (§3).
+//! PR 1 made the *collective strategy* pluggable; this layer makes the
+//! *delivery substrate* pluggable too:
+//!
+//! ```text
+//!   algorithms.rs      textbook collectives as explicit message rounds
+//!        │
+//!   collectives.rs     pluggable per-backend strategy objects
+//!        │
+//!   group.rs / Ctx     tag namespaces, virtual-time cost model
+//!        │
+//!   Transport (this)   post / take / probe / close over Envelopes
+//!        ├── Fabric            in-process shared-memory mailboxes
+//!        └── TcpTransport      length-prefixed frames over TCP sockets
+//! ```
+//!
+//! A [`Transport`] moves [`Envelope`]s between ranks.  The in-process
+//! implementation is [`Fabric`](crate::comm::fabric::Fabric) (ranks are
+//! threads, payloads move by ownership); [`tcp::TcpTransport`] carries
+//! the same envelopes across OS processes as length-prefixed frames,
+//! encoding payloads with the [`wire`](crate::comm::wire) codec.  All
+//! collective algorithms run unchanged over either — the portability
+//! claim, end to end.
+//!
+//! Multi-process runs are launched by [`launch`]: a re-exec-based
+//! spawner with env-var rendezvous, selected with
+//! `Runtime::builder().transport("tcp")`.
+
+use crate::comm::message::Msg;
+
+pub mod launch;
+pub mod mailbox;
+pub mod tcp;
+
+pub use mailbox::{Mailbox, RECV_TIMEOUT};
+
+/// One message in flight between two ranks.
+pub struct Envelope {
+    pub src: usize,
+    pub tag: u64,
+    /// Modeled wire size (drives cost and metrics).
+    pub bytes: usize,
+    /// Sender's virtual clock at send initiation (transfer-ready time).
+    pub ready: f64,
+    /// The erased payload (generic sends are wrapped by `Ctx`).
+    pub payload: Msg,
+}
+
+/// Rank-to-rank envelope delivery — the seam between the cost-modeled
+/// messaging layer ([`Ctx`](crate::spmd::Ctx)) and the physical
+/// substrate (shared memory, TCP, …).
+///
+/// Semantics every implementation must provide (they are what the
+/// collective algorithms rely on):
+///
+/// * **selective receive** — [`Transport::take`] blocks until an
+///   envelope matching `(src, tag)` is buffered for `me`, consuming it;
+///   arrival order is unconstrained (MPI-style tag matching);
+/// * **deadlock oracle** — `take` panics with diagnostics after
+///   [`RECV_TIMEOUT`] instead of hanging forever;
+/// * **closed-mailbox detection** — delivering to, or taking from, a
+///   rank that already [`Transport::close`]d fails loudly with rank/tag
+///   diagnostics (a collective-membership bug must not become a silent
+///   deadlock).  *Where* it surfaces is transport-specific: shared
+///   memory panics synchronously in the posting rank; wire transports
+///   detect it at the receiving process's delivery thread (non-zero
+///   exit in multi-process mode, printed error + the stranded sender's
+///   deadlock oracle in loopback mode);
+/// * **virtual-time transparency** — the `ready` stamp and modeled
+///   `bytes` of an envelope are delivered unmodified, so the §2 cost
+///   model is identical on every transport.
+pub trait Transport: Send + Sync {
+    /// Number of ranks this transport connects.
+    fn world(&self) -> usize;
+
+    /// Short name for diagnostics (`"shmem"`, `"tcp"`).
+    fn name(&self) -> &'static str;
+
+    /// Deliver an envelope to `dst`'s mailbox.
+    fn post(&self, dst: usize, env: Envelope);
+
+    /// Blocking selective receive: first buffered envelope matching
+    /// `(src, tag)` addressed to `me`.
+    fn take(&self, me: usize, src: usize, tag: u64) -> Envelope;
+
+    /// Non-blocking probe for a matching envelope.
+    ///
+    /// Advisory only: `true` means the envelope is buffered and `take`
+    /// will return immediately; `false` is **not** proof of absence.  On
+    /// wire transports a frame the peer already posted may still be in
+    /// flight (socket buffers, reader threads), whereas the shared-memory
+    /// fabric makes posts visible synchronously — portable callers must
+    /// not turn `false` into a protocol decision, only into "keep
+    /// waiting".
+    fn probe(&self, me: usize, src: usize, tag: u64) -> bool;
+
+    /// Number of buffered envelopes for rank `me` (diagnostics).
+    fn pending(&self, me: usize) -> usize;
+
+    /// Mark rank `me` exited: its mailbox refuses further traffic.
+    fn close(&self, me: usize);
+}

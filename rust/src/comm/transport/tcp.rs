@@ -1,0 +1,353 @@
+//! [`TcpTransport`]: rank-to-rank delivery over TCP sockets with
+//! length-prefixed frames — the distributed-memory [`Transport`].
+//!
+//! Topology: every rank owns a loopback `TcpListener`; a process holds
+//! one or more *local* ranks (one per process in multi-process runs via
+//! [`launch`](super::launch); all of them in the in-test
+//! [`TcpTransport::loopback`] mode).  Outgoing traffic to rank `d` goes
+//! over one lazily-established connection per destination, shared by
+//! every local rank (frames are self-describing, so multiplexing is
+//! free); each accepted connection gets a detached **reader thread**
+//! that decodes frames into the destination rank's [`Mailbox`] — from
+//! there on, tag matching, blocking receive, and the deadlock oracle are
+//! exactly the shared-memory semantics.
+//!
+//! Frame format (all integers little-endian):
+//!
+//! ```text
+//! u32  frame length (bytes after this field)
+//! u64  src rank
+//! u64  tag
+//! u64  modeled envelope size (cost-model bytes, not frame bytes)
+//! u64  sender virtual-clock `ready` stamp (f64 bits)
+//! ...  Msg wire form (type fingerprint, modeled size, payload)
+//! ```
+//!
+//! The `ready` stamp and modeled size cross the wire unmodified, so the
+//! §2 virtual-time cost model — and therefore every emergent collective
+//! cost — is identical to the in-process fabric.  The *payload* is the
+//! [`wire`](crate::comm::wire) encoding; decoding back to the concrete
+//! type happens lazily at the receiver's `downcast`.
+//!
+//! Even in single-process `loopback` mode every envelope makes a real
+//! kernel round trip (encode → socket → decode) — that is the point:
+//! the transport-parity tests drive the full wire path without needing
+//! process orchestration.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::{Envelope, Mailbox, Transport};
+use crate::comm::message::Msg;
+use crate::comm::wire::{WireError, WireReader};
+
+/// How long `post` retries connecting to a peer's listener before
+/// declaring it dead (covers rendezvous-to-first-send races).
+const CONNECT_RETRY: Duration = Duration::from_millis(50);
+const CONNECT_ATTEMPTS: usize = 100;
+
+/// TCP transport endpoint set for one process (see module docs).
+pub struct TcpTransport {
+    world: usize,
+    /// Mailbox per rank; `Some` only for ranks local to this process.
+    boxes: Vec<Option<Mailbox>>,
+    /// Listener address of every rank.
+    peers: Vec<SocketAddr>,
+    /// Outgoing connection per destination rank (lazy, shared by all
+    /// local ranks; a frame is written atomically under the lock).
+    conns: Vec<Mutex<Option<TcpStream>>>,
+    /// Local ranks that have not yet closed; at zero, sockets shut down.
+    open_local: Mutex<usize>,
+    shutdown: AtomicBool,
+}
+
+impl TcpTransport {
+    /// All `world` ranks in this process, each with its own loopback
+    /// listener — full wire path, no process orchestration.  This is
+    /// what `Runtime::builder().transport("tcp-loopback")` runs on.
+    pub fn loopback(world: usize) -> std::io::Result<Arc<Self>> {
+        let mut listeners = Vec::with_capacity(world);
+        let mut peers = Vec::with_capacity(world);
+        for rank in 0..world {
+            let l = TcpListener::bind("127.0.0.1:0")?;
+            peers.push(l.local_addr()?);
+            listeners.push((rank, l));
+        }
+        Ok(Self::start(world, listeners, peers))
+    }
+
+    /// One local rank (`me`) with its already-bound listener plus the
+    /// full peer address map — the multi-process endpoint built by
+    /// [`launch::establish`](super::launch::establish).
+    pub fn endpoint(
+        me: usize,
+        world: usize,
+        listener: TcpListener,
+        peers: Vec<SocketAddr>,
+    ) -> Arc<Self> {
+        assert_eq!(peers.len(), world, "peer map must cover the world");
+        Self::start(world, vec![(me, listener)], peers)
+    }
+
+    fn start(
+        world: usize,
+        listeners: Vec<(usize, TcpListener)>,
+        peers: Vec<SocketAddr>,
+    ) -> Arc<Self> {
+        let mut boxes: Vec<Option<Mailbox>> = (0..world).map(|_| None).collect();
+        for (rank, _) in &listeners {
+            boxes[*rank] = Some(Mailbox::default());
+        }
+        let t = Arc::new(TcpTransport {
+            world,
+            boxes,
+            peers,
+            conns: (0..world).map(|_| Mutex::new(None)).collect(),
+            open_local: Mutex::new(listeners.len()),
+            shutdown: AtomicBool::new(false),
+        });
+        for (rank, listener) in listeners {
+            let tt = t.clone();
+            std::thread::Builder::new()
+                .name(format!("foopar-tcp-accept-{rank}"))
+                .spawn(move || tt.accept_loop(rank, listener))
+                .expect("spawn tcp accept thread");
+        }
+        t
+    }
+
+    /// Accept incoming connections for local rank `rank`, one detached
+    /// reader thread per connection.
+    fn accept_loop(self: Arc<Self>, rank: usize, listener: TcpListener) {
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if self.shutdown.load(Ordering::Acquire) {
+                        break; // the wake-up connection from shutdown_io
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let tt = self.clone();
+                    std::thread::Builder::new()
+                        .name(format!("foopar-tcp-read-{rank}"))
+                        .spawn(move || tt.reader_loop(rank, stream))
+                        .expect("spawn tcp reader thread");
+                }
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Decode one frame body (everything after the length prefix).
+    fn parse_frame(buf: &[u8]) -> Result<Envelope, WireError> {
+        let mut r = WireReader::new(buf);
+        let src = r.len()?;
+        let tag = r.u64()?;
+        let bytes = r.len()?;
+        let ready = f64::from_bits(r.u64()?);
+        let payload = Msg::decode_from(&mut r)?;
+        Ok(Envelope { src, tag, bytes, ready, payload })
+    }
+
+    /// Drain one connection: decode frames into `rank`'s mailbox until
+    /// the peer closes (EOF) or shutdown resets the socket.
+    ///
+    /// Delivery failures (malformed frame, closed-mailbox delivery)
+    /// happen on this detached thread, where an ordinary panic would die
+    /// silently.  In multi-process mode (one local rank) the process
+    /// exits non-zero so the launcher reports the failure immediately —
+    /// the shared-memory "fail loudly" story.  In loopback mode (many
+    /// ranks of a test binary share this process) the error is printed
+    /// and the connection dropped, so only the affected run fails — via
+    /// the stranded peer's deadlock oracle — instead of every test in
+    /// the binary dying with it.
+    fn reader_loop(&self, rank: usize, mut stream: TcpStream) {
+        let mut len4 = [0u8; 4];
+        loop {
+            if stream.read_exact(&mut len4).is_err() {
+                break; // EOF (peer closed) or shutdown reset
+            }
+            let len = u32::from_le_bytes(len4) as usize;
+            let mut buf = vec![0u8; len];
+            if stream.read_exact(&mut buf).is_err() {
+                break;
+            }
+            let deliver = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let env = Self::parse_frame(&buf).unwrap_or_else(|e| {
+                    panic!("rank {rank}: malformed tcp frame ({len} bytes): {e}")
+                });
+                self.boxes[rank]
+                    .as_ref()
+                    .expect("reader for non-local rank")
+                    .post(rank, env);
+            }));
+            if let Err(e) = deliver {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .map(|s| s.as_str())
+                    .or_else(|| e.downcast_ref::<&str>().copied())
+                    .unwrap_or("<non-string panic>");
+                eprintln!("fatal tcp transport error delivering to rank {rank}: {msg}");
+                let local_ranks = self.boxes.iter().filter(|b| b.is_some()).count();
+                if local_ranks == 1 {
+                    std::process::exit(101);
+                }
+                break;
+            }
+        }
+    }
+
+    fn connect(&self, dst: usize) -> TcpStream {
+        for attempt in 0..CONNECT_ATTEMPTS {
+            match TcpStream::connect(self.peers[dst]) {
+                Ok(s) => {
+                    let _ = s.set_nodelay(true);
+                    return s;
+                }
+                Err(e) if attempt + 1 == CONNECT_ATTEMPTS => panic!(
+                    "tcp connect to rank {dst} at {} failed after {CONNECT_ATTEMPTS} attempts: {e}",
+                    self.peers[dst]
+                ),
+                Err(_) => std::thread::sleep(CONNECT_RETRY),
+            }
+        }
+        unreachable!()
+    }
+
+    /// Tear down sockets once every local rank has closed: drop outgoing
+    /// connections (peers' readers see EOF) and wake our accept loops
+    /// with a dummy connection so they observe the shutdown flag.
+    fn shutdown_io(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        for c in &self.conns {
+            *c.lock().unwrap() = None;
+        }
+        for (rank, mb) in self.boxes.iter().enumerate() {
+            if mb.is_some() {
+                let _ = TcpStream::connect(self.peers[rank]);
+            }
+        }
+    }
+
+    fn mailbox(&self, me: usize) -> &Mailbox {
+        self.boxes[me]
+            .as_ref()
+            .unwrap_or_else(|| panic!("rank {me} is not local to this process"))
+    }
+}
+
+impl Transport for TcpTransport {
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn post(&self, dst: usize, env: Envelope) {
+        // frame = len | src | tag | bytes | ready | msg wire form.
+        // Capacity is a hint only — env.bytes is the *modeled* size,
+        // which for lazy proxy payloads is orders of magnitude larger
+        // than their encoding, so cap it instead of pre-allocating GBs.
+        let mut frame = Vec::with_capacity(4 + 32 + 24 + env.bytes.min(1 << 20));
+        frame.extend_from_slice(&[0u8; 4]);
+        frame.extend_from_slice(&(env.src as u64).to_le_bytes());
+        frame.extend_from_slice(&env.tag.to_le_bytes());
+        frame.extend_from_slice(&(env.bytes as u64).to_le_bytes());
+        frame.extend_from_slice(&env.ready.to_bits().to_le_bytes());
+        env.payload.encode_into(&mut frame);
+        let len = u32::try_from(frame.len() - 4).expect("frame over 4 GiB");
+        frame[0..4].copy_from_slice(&len.to_le_bytes());
+
+        let mut guard = self.conns[dst].lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(self.connect(dst));
+        }
+        if let Err(e) = guard.as_mut().unwrap().write_all(&frame) {
+            panic!(
+                "rank {}: tcp send (dst={dst}, tag={:#x}, {} bytes) failed: {e}",
+                env.src, env.tag, env.bytes
+            );
+        }
+    }
+
+    fn take(&self, me: usize, src: usize, tag: u64) -> Envelope {
+        self.mailbox(me).take(me, src, tag)
+    }
+
+    fn probe(&self, me: usize, src: usize, tag: u64) -> bool {
+        self.mailbox(me).probe(src, tag)
+    }
+
+    fn pending(&self, me: usize) -> usize {
+        self.mailbox(me).pending()
+    }
+
+    fn close(&self, me: usize) {
+        // only an open→closed transition decrements, so close (like
+        // Fabric's) is idempotent and the shutdown count stays correct
+        if self.mailbox(me).close() {
+            let mut open = self.open_local.lock().unwrap();
+            *open -= 1;
+            if *open == 0 {
+                self.shutdown_io();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_delivers_across_real_sockets() {
+        let t = TcpTransport::loopback(2).expect("bind loopback");
+        t.post(
+            1,
+            Envelope { src: 0, tag: 7, bytes: 8, ready: 1.5, payload: Msg::new(42u64) },
+        );
+        let env = t.take(1, 0, 7);
+        assert_eq!(env.src, 0);
+        assert_eq!(env.ready, 1.5);
+        assert_eq!(env.bytes, 8);
+        assert!(env.payload.is_encoded());
+        assert_eq!(env.payload.downcast::<u64>(), 42);
+        t.close(0);
+        t.close(1);
+    }
+
+    #[test]
+    fn loopback_selective_matching_and_probe() {
+        let t = TcpTransport::loopback(2).expect("bind loopback");
+        t.post(1, Envelope { src: 0, tag: 1, bytes: 8, ready: 0.0, payload: Msg::new(10i64) });
+        t.post(1, Envelope { src: 0, tag: 2, bytes: 8, ready: 0.0, payload: Msg::new(20i64) });
+        // wait for the reader thread to buffer both
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while t.pending(1) < 2 {
+            assert!(std::time::Instant::now() < deadline, "frames never arrived");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(t.probe(1, 0, 2));
+        assert!(!t.probe(1, 0, 3));
+        assert_eq!(t.take(1, 0, 2).payload.downcast::<i64>(), 20);
+        assert_eq!(t.take(1, 0, 1).payload.downcast::<i64>(), 10);
+        t.close(0);
+        t.close(1);
+    }
+
+    #[test]
+    fn multiple_sources_multiplex_onto_one_mailbox() {
+        let t = TcpTransport::loopback(3).expect("bind loopback");
+        t.post(2, Envelope { src: 0, tag: 5, bytes: 8, ready: 0.0, payload: Msg::new(100i64) });
+        t.post(2, Envelope { src: 1, tag: 5, bytes: 8, ready: 0.0, payload: Msg::new(200i64) });
+        assert_eq!(t.take(2, 1, 5).payload.downcast::<i64>(), 200);
+        assert_eq!(t.take(2, 0, 5).payload.downcast::<i64>(), 100);
+        for r in 0..3 {
+            t.close(r);
+        }
+    }
+}

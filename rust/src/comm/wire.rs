@@ -1,0 +1,470 @@
+//! The wire codec: [`WireData`] encode/decode for everything that may
+//! cross a process boundary.
+//!
+//! FooPar serializes collection elements with user-defined serializers,
+//! falling back to Java byte serialization (§3.1).  Our equivalent is
+//! explicit: a type is sendable iff it implements [`WireData`] — a
+//! little-endian binary codec on top of [`Data`]'s byte-size accounting.
+//! The in-process [`Fabric`](crate::comm::fabric::Fabric) never calls it
+//! (payloads move by ownership); [`TcpTransport`]
+//! (crate::comm::transport::tcp) encodes every envelope payload with it
+//! and the receiver decodes lazily at the `downcast` site, so the codec
+//! cost is paid exactly once per wire hop.
+//!
+//! Format conventions (all integers little-endian):
+//!
+//! * fixed-width numbers as their `to_le_bytes`; `usize`/`isize` always
+//!   as 8 bytes (cross-arch stable);
+//! * `Vec<T>` / `String` as a `u64` length followed by the elements;
+//! * `Option<T>` as a presence byte followed by the value;
+//! * enums ([`Block`], [`Seg`]) as a variant byte followed by fields;
+//! * [`Msg`](crate::comm::message::Msg) as a self-describing header
+//!   (type fingerprint, modeled size, payload length) + payload — this
+//!   is what lets erased bundles like the recursive-doubling all-gather's
+//!   `Vec<(u64, Msg)>` nest across the wire.
+//!
+//! Decoding is bounds-checked ([`WireReader`] never panics on truncated
+//! input — it returns [`WireError`]); *type* safety across the wire is
+//! enforced by the [`type_fingerprint`] carried in every `Msg` header,
+//! which `downcast` checks before decoding.
+
+use crate::data::value::Data;
+use crate::matrix::block::Block;
+use crate::matrix::dense::Mat;
+use crate::runtime::compute::Seg;
+
+/// Decode failure: the bytes do not describe a value of the requested
+/// type.  Always a framework/protocol bug (SPMD symmetry pins the type
+/// of every message), so callers surface it loudly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// Fewer bytes than the value needs.
+    Truncated { need: usize, have: usize },
+    /// Structurally invalid (bad variant byte, invalid UTF-8, …).
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { need, have } => {
+                write!(f, "truncated wire data: need {need} bytes, have {have}")
+            }
+            WireError::Malformed(what) => write!(f, "malformed wire data: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Bounds-checked cursor over received bytes.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        WireReader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Consume the next `n` bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated { need: n, have: self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A `u64` that must fit a `usize` (lengths, counts).
+    pub fn len(&mut self) -> Result<usize, WireError> {
+        self.u64()?
+            .try_into()
+            .map_err(|_| WireError::Malformed("length exceeds usize"))
+    }
+}
+
+/// A [`Data`] value with a binary wire format — the bound on everything
+/// that travels through [`Group`](crate::comm::group::Group) collectives
+/// and [`Ctx`](crate::spmd::Ctx) point-to-point sends.
+///
+/// Implementations must round-trip: `decode(encode(v)) == v`, and the
+/// encoding must be a pure function of the value (the transport-parity
+/// tests assert bit-identical collective results across transports).
+pub trait WireData: Data + Sized {
+    /// Append this value's encoding to `out`.
+    fn encode(&self, out: &mut Vec<u8>);
+
+    /// Decode one value, consuming exactly its encoding from `r`.
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError>;
+
+    /// Bulk hook: encode a slice of values.  Element-wise by default;
+    /// fixed-width primitives override it (one `reserve`, contiguous
+    /// writes) so `Vec<f32>` / `Mat` payloads — the dominant wire
+    /// traffic — avoid per-element reallocation checks.
+    fn encode_slice(items: &[Self], out: &mut Vec<u8>) {
+        for v in items {
+            v.encode(out);
+        }
+    }
+
+    /// Bulk hook: decode `n` values.  Element-wise by default;
+    /// fixed-width primitives override it with a single bounds check
+    /// over the whole run instead of one per element.
+    fn decode_many(n: usize, r: &mut WireReader<'_>) -> Result<Vec<Self>, WireError> {
+        // cap the pre-allocation: a corrupt length must not OOM before
+        // the element decode fails
+        let mut out = Vec::with_capacity(n.min(r.remaining().max(1)));
+        for _ in 0..n {
+            out.push(Self::decode(r)?);
+        }
+        Ok(out)
+    }
+}
+
+/// Fingerprint of a type — carried in every
+/// [`Msg`](crate::comm::message::Msg) wire header so a cross-process
+/// `downcast` to the wrong type fails loudly instead of misdecoding.
+/// Derived from [`std::any::TypeId`] (hashed with the deterministic,
+/// unkeyed [`DefaultHasher`](std::collections::hash_map::DefaultHasher)
+/// rather than walking the type-name string — this runs on every
+/// `Msg` construction and downcast, including the shmem hot path).
+/// Stable within one binary (multi-process runs re-exec the same
+/// executable), which is the only place it is compared.
+pub fn type_fingerprint<T: 'static>() -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    std::any::TypeId::of::<T>().hash(&mut h);
+    h.finish()
+}
+
+// --------------------------------------------------------------- scalars
+
+macro_rules! impl_wire_num {
+    ($($t:ty),*) => {$(
+        impl WireData for $t {
+            fn encode(&self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+            fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+                Ok(<$t>::from_le_bytes(
+                    r.take(std::mem::size_of::<$t>())?.try_into().unwrap(),
+                ))
+            }
+            fn encode_slice(items: &[Self], out: &mut Vec<u8>) {
+                out.reserve(std::mem::size_of_val(items));
+                for v in items {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            fn decode_many(n: usize, r: &mut WireReader<'_>) -> Result<Vec<Self>, WireError> {
+                const W: usize = std::mem::size_of::<$t>();
+                let nb = n
+                    .checked_mul(W)
+                    .ok_or(WireError::Malformed("element count overflow"))?;
+                let bytes = r.take(nb)?;
+                Ok(bytes
+                    .chunks_exact(W)
+                    .map(|c| <$t>::from_le_bytes(c.try_into().unwrap()))
+                    .collect())
+            }
+        }
+    )*};
+}
+
+impl_wire_num!(u8, i8, u16, i16, u32, i32, u64, i64, f32, f64);
+
+impl WireData for usize {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (*self as u64).encode(out);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        r.len()
+    }
+}
+
+impl WireData for isize {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (*self as i64).encode(out);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        i64::decode(r)?
+            .try_into()
+            .map_err(|_| WireError::Malformed("isize out of range"))
+    }
+}
+
+impl WireData for bool {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(*self as u8);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        match r.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(WireError::Malformed("bool byte not 0/1")),
+        }
+    }
+}
+
+impl WireData for char {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (*self as u32).encode(out);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        char::from_u32(u32::decode(r)?).ok_or(WireError::Malformed("invalid char scalar"))
+    }
+}
+
+impl WireData for () {
+    fn encode(&self, _out: &mut Vec<u8>) {}
+    fn decode(_r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------ containers
+
+impl WireData for String {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (self.len() as u64).encode(out);
+        out.extend_from_slice(self.as_bytes());
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        let n = r.len()?;
+        let bytes = r.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::Malformed("invalid UTF-8"))
+    }
+}
+
+// Routed through the bulk hooks, so `Vec<f32>`/`Vec<u8>` payloads get
+// the primitives' contiguous fast path while nested element types fall
+// back to element-wise encode/decode.
+impl<T: WireData> WireData for Vec<T> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (self.len() as u64).encode(out);
+        T::encode_slice(self, out);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        let n = r.len()?;
+        T::decode_many(n, r)
+    }
+}
+
+impl<T: WireData> WireData for Option<T> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            None => out.push(0),
+            Some(v) => {
+                out.push(1);
+                v.encode(out);
+            }
+        }
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        match r.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(T::decode(r)?)),
+            _ => Err(WireError::Malformed("Option tag not 0/1")),
+        }
+    }
+}
+
+impl<A: WireData, B: WireData> WireData for (A, B) {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.0.encode(out);
+        self.1.encode(out);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok((A::decode(r)?, B::decode(r)?))
+    }
+}
+
+impl<A: WireData, B: WireData, C: WireData> WireData for (A, B, C) {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.0.encode(out);
+        self.1.encode(out);
+        self.2.encode(out);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok((A::decode(r)?, B::decode(r)?, C::decode(r)?))
+    }
+}
+
+// ---------------------------------------------------------- matrix types
+
+impl WireData for Mat {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (self.rows as u64).encode(out);
+        (self.cols as u64).encode(out);
+        f32::encode_slice(&self.data, out);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        let rows = r.len()?;
+        let cols = r.len()?;
+        let n = rows
+            .checked_mul(cols)
+            .ok_or(WireError::Malformed("matrix dims overflow"))?;
+        let data = f32::decode_many(n, r)?;
+        Ok(Mat { rows, cols, data })
+    }
+}
+
+impl WireData for Block {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Block::Real(m) => {
+                out.push(0);
+                m.encode(out);
+            }
+            Block::Proxy { rows, cols, seed } => {
+                out.push(1);
+                rows.encode(out);
+                cols.encode(out);
+                seed.encode(out);
+            }
+        }
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        match r.u8()? {
+            0 => Ok(Block::Real(Mat::decode(r)?)),
+            1 => Ok(Block::Proxy {
+                rows: usize::decode(r)?,
+                cols: usize::decode(r)?,
+                seed: u64::decode(r)?,
+            }),
+            _ => Err(WireError::Malformed("Block variant byte")),
+        }
+    }
+}
+
+impl WireData for Seg {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Seg::Real(v) => {
+                out.push(0);
+                v.encode(out);
+            }
+            Seg::Proxy { len } => {
+                out.push(1);
+                len.encode(out);
+            }
+        }
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        match r.u8()? {
+            0 => Ok(Seg::Real(Vec::<f32>::decode(r)?)),
+            1 => Ok(Seg::Proxy { len: usize::decode(r)? }),
+            _ => Err(WireError::Malformed("Seg variant byte")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: WireData + PartialEq + std::fmt::Debug>(v: T) {
+        let mut buf = Vec::new();
+        v.encode(&mut buf);
+        let mut r = WireReader::new(&buf);
+        let back = T::decode(&mut r).expect("decode");
+        assert_eq!(back, v);
+        assert_eq!(r.remaining(), 0, "decode must consume exactly the encoding");
+    }
+
+    #[test]
+    fn scalars_roundtrip() {
+        roundtrip(0u8);
+        roundtrip(-7i8);
+        roundtrip(0xBEEFu16);
+        roundtrip(-1234i16);
+        roundtrip(0xDEAD_BEEFu32);
+        roundtrip(i32::MIN);
+        roundtrip(u64::MAX);
+        roundtrip(i64::MIN);
+        roundtrip(usize::MAX);
+        roundtrip(-42isize);
+        roundtrip(3.14f32);
+        roundtrip(f64::NEG_INFINITY);
+        roundtrip(true);
+        roundtrip('λ');
+        roundtrip(());
+    }
+
+    #[test]
+    fn f32_bit_exact() {
+        // bit-exactness matters for the transport-parity claim
+        let v = f32::from_bits(0x7F80_0001); // a signaling NaN payload
+        let mut buf = Vec::new();
+        v.encode(&mut buf);
+        let back = f32::decode(&mut WireReader::new(&buf)).unwrap();
+        assert_eq!(back.to_bits(), v.to_bits());
+    }
+
+    #[test]
+    fn containers_roundtrip() {
+        roundtrip(String::from("héllo wörld"));
+        roundtrip(vec![1u64, 2, 3]);
+        roundtrip(Vec::<f64>::new());
+        roundtrip(vec![vec![1.5f64], vec![], vec![2.5, 3.5]]);
+        roundtrip(Some(9u32));
+        roundtrip(None::<String>);
+        roundtrip((1u64, -2i64));
+        roundtrip((1usize, 2usize, String::from("c")));
+    }
+
+    #[test]
+    fn matrix_types_roundtrip() {
+        roundtrip(Mat::random(5, 3, 42));
+        roundtrip(Block::Real(Mat::random(4, 4, 7)));
+        roundtrip(Block::Proxy { rows: 64, cols: 32, seed: 0xAB });
+        roundtrip(Seg::Real(vec![1.0, -2.0, 3.5]));
+        roundtrip(Seg::Proxy { len: 100 });
+    }
+
+    #[test]
+    fn truncated_input_errors_not_panics() {
+        let mut buf = Vec::new();
+        vec![1.0f64; 4].encode(&mut buf);
+        for cut in 0..buf.len() {
+            let res = Vec::<f64>::decode(&mut WireReader::new(&buf[..cut]));
+            assert!(res.is_err(), "cut at {cut} must fail");
+        }
+    }
+
+    #[test]
+    fn malformed_variants_error() {
+        assert_eq!(
+            bool::decode(&mut WireReader::new(&[2])),
+            Err(WireError::Malformed("bool byte not 0/1"))
+        );
+        assert!(Block::decode(&mut WireReader::new(&[9])).is_err());
+        let mut bad_str = Vec::new();
+        (2u64).encode(&mut bad_str);
+        bad_str.extend_from_slice(&[0xFF, 0xFE]);
+        assert!(String::decode(&mut WireReader::new(&bad_str)).is_err());
+    }
+
+    #[test]
+    fn fingerprints_distinguish_types() {
+        assert_ne!(type_fingerprint::<u64>(), type_fingerprint::<i64>());
+        assert_ne!(type_fingerprint::<Vec<f32>>(), type_fingerprint::<Vec<f64>>());
+        assert_eq!(type_fingerprint::<String>(), type_fingerprint::<String>());
+    }
+}

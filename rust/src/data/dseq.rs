@@ -24,6 +24,7 @@
 //! | `apply` | binomial bcast | Θ(log p (t_s + t_w m)) |
 
 use crate::comm::group::Group;
+use crate::comm::wire::WireData;
 use crate::data::value::Data;
 use crate::spmd::Ctx;
 
@@ -132,7 +133,10 @@ impl<'a, T: Data> DistSeq<'a, T> {
     /// tree backends, Θ(p·…) on the naive ones (§6).
     ///
     /// Returns `Some(result)` on the root member, `None` elsewhere.
-    pub fn reduce_d(self, op: impl Fn(T, T) -> T) -> Option<T> {
+    pub fn reduce_d(self, op: impl Fn(T, T) -> T) -> Option<T>
+    where
+        T: WireData,
+    {
         let Some(local) = self.local else { return None };
         self.group.reduce(0, local, op)
     }
@@ -140,14 +144,17 @@ impl<'a, T: Data> DistSeq<'a, T> {
     /// Reduce with the result broadcast back to all members.
     pub fn all_reduce_d(self, op: impl Fn(T, T) -> T) -> Option<T>
     where
-        T: Clone,
+        T: WireData + Clone,
     {
         let local = self.local?;
         Some(self.group.allreduce(local, op))
     }
 
     /// Cyclic shift by `delta` — Θ(t_s + t_w m).
-    pub fn shift_d(self, delta: isize) -> DistSeq<'a, T> {
+    pub fn shift_d(self, delta: isize) -> DistSeq<'a, T>
+    where
+        T: WireData,
+    {
         let local = self.local.map(|v| self.group.shift(delta, v));
         DistSeq { local, group: self.group }
     }
@@ -155,7 +162,7 @@ impl<'a, T: Data> DistSeq<'a, T> {
     /// Every member obtains the whole sequence — Θ((t_s + t_w m)(p−1)).
     pub fn all_gather_d(&self) -> Option<Vec<T>>
     where
-        T: Clone,
+        T: WireData + Clone,
     {
         let local = self.local.as_ref()?;
         Some(self.group.allgather(local.clone()))
@@ -166,7 +173,7 @@ impl<'a, T: Data> DistSeq<'a, T> {
     /// (Extension beyond Table 1; the natural companion of `reduce_d`.)
     pub fn scan_d(self, op: impl Fn(T, T) -> T) -> DistSeq<'a, T>
     where
-        T: Clone,
+        T: WireData + Clone,
     {
         let local = self.local.map(|v| self.group.scan(v, op));
         DistSeq { local, group: self.group }
@@ -174,7 +181,10 @@ impl<'a, T: Data> DistSeq<'a, T> {
 
     /// Gather the whole sequence at its first member (group rank 0) —
     /// Θ((t_s + t_w m)(p−1)) linear gather.
-    pub fn gather_d(self) -> Option<Vec<T>> {
+    pub fn gather_d(self) -> Option<Vec<T>>
+    where
+        T: WireData,
+    {
         let local = self.local?;
         self.group.gather(0, local)
     }
@@ -183,7 +193,7 @@ impl<'a, T: Data> DistSeq<'a, T> {
     /// owner) — Θ(log p (t_s + t_w m)).  Table 1's `apply(i)`.
     pub fn apply(&self, i: usize) -> Option<T>
     where
-        T: Clone,
+        T: WireData + Clone,
     {
         // Inert (non-member) chains no-op; members may legitimately hold
         // their element even while others broadcast.
@@ -196,7 +206,7 @@ impl<'a, T: Data> DistSeq<'a, T> {
     }
 }
 
-impl<'a, T: Data> DistSeq<'a, Vec<T>> {
+impl<'a, T: WireData> DistSeq<'a, Vec<T>> {
     /// Personalized all-to-all (Table 1's `allToAllD`): member *i*'s j-th
     /// sub-element is delivered to member *j*; the result on member *i*
     /// is the vector of everyone's i-th sub-elements.

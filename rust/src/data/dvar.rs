@@ -10,6 +10,7 @@
 //! `move_to(...)` migrates ownership (Θ(t_s + t_w m)).
 
 use crate::comm::group::Group;
+use crate::comm::wire::WireData;
 use crate::data::value::Data;
 use crate::spmd::Ctx;
 
@@ -61,7 +62,7 @@ impl<'a, T: Data> DistVar<'a, T> {
     /// Θ(log p (t_s + t_w m)).  Non-members get `None`.
     pub fn read(&self) -> Option<T>
     where
-        T: Clone,
+        T: WireData + Clone,
     {
         if !self.group.is_member() {
             return None;
@@ -79,7 +80,10 @@ impl<'a, T: Data> DistVar<'a, T> {
 
     /// Migrate ownership to group rank `new_owner` — one point-to-point
     /// message, Θ(t_s + t_w m).
-    pub fn move_to(&mut self, new_owner: usize) {
+    pub fn move_to(&mut self, new_owner: usize)
+    where
+        T: WireData,
+    {
         assert!(new_owner < self.group.size());
         if new_owner == self.owner {
             return;

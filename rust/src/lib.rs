@@ -13,7 +13,10 @@
 //! Runs start at [`Runtime::builder`]: world size, a communication
 //! backend chosen by name from the [`comm::backend::registry`] (the
 //! paper's swappable `FooPar-X` modules — user backends plug in via the
-//! [`Backend`] and [`Collectives`] traits), and machine cost parameters.
+//! [`Backend`] and [`Collectives`] traits), a transport (`"local"`
+//! threads over shared memory, or `"tcp"` for one OS process per rank
+//! over the [`comm::transport`] wire subsystem — the paper's
+//! distributed-memory story), and machine cost parameters.
 //!
 //! The per-rank compute hot spots (block GEMM, Floyd-Warshall pivot updates)
 //! are JAX/Pallas kernels AOT-lowered to HLO and executed through the PJRT C
@@ -43,6 +46,8 @@ pub mod experiments;
 
 pub use comm::backend::{Backend, BackendProfile};
 pub use comm::collectives::Collectives;
+pub use comm::transport::Transport;
+pub use comm::wire::WireData;
 pub use spmd::{Runtime, RuntimeBuilder};
 
 /// Crate-wide result type.

@@ -72,6 +72,7 @@ repro — FooPar reproduction (rust + JAX/Pallas AOT via PJRT)
   selftest                          end-to-end real-mode sanity
   peak     [--iters N]              single-core empirical peak (GFlop/s)
   mmm      --p P [--n N] [--algo dns|generic|baseline] [--mode real|modeled] [--machine M]
+           [--transport local|tcp-loopback] [--backend B]
   apsp     --p P [--n N] [--algo fw|squaring] [--mode real|modeled]
   table1   [--machine M]            Table 1: measured op runtimes vs formulas
   fig5     [--machine carver|horseshoe6]   Fig. 5 efficiency curves
@@ -200,9 +201,20 @@ fn cmd_mmm(args: &Args) -> Result<()> {
     let proxy = comp.is_modeled();
     let a = BlockSource { b: n / q, seed: 1, proxy };
     let b = BlockSource { b: n / q, seed: 2, proxy };
+    let transport = args.get_str("transport", "local");
+    if transport == "tcp" {
+        // multi-process tcp re-execs the binary and returns local-only
+        // results; this driver verifies by indexing all ranks, so only
+        // the in-process transports are supported here
+        bail!(
+            "repro mmm supports --transport local|tcp-loopback; for the multi-process \
+             tcp transport see `cargo run --release --example matmul_dns_tcp`"
+        );
+    }
     let rt = Runtime::builder()
         .world(p)
         .backend(args.get_str("backend", "openmpi-fixed"))
+        .transport(transport)
         .machine_config(&machine)
         .build()?;
 

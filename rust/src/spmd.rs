@@ -1,5 +1,6 @@
 //! SPMD runtime: rank contexts, the [`Runtime`] builder entry point, and
-//! the thread-per-rank launcher.
+//! the rank launchers (thread-per-rank in-process, process-per-rank over
+//! TCP).
 //!
 //! FooPar programs are SPMD: every rank runs the same closure; distributed
 //! collections decide per-rank behaviour (§3.2 of the paper).  A run is
@@ -10,12 +11,17 @@
 //!     .world(8)                 // number of ranks
 //!     .backend("shmem")         // registry lookup (or .backend_profile /
 //!                               //  .backend_obj for explicit objects)
+//!     .transport("tcp")         // delivery substrate: "local" (threads
+//!                               //  over shared memory, the default),
+//!                               //  "tcp-loopback", or "tcp" (one OS
+//!                               //  process per rank, re-exec spawner)
 //!     .machine("carver")        // interconnect costs (or .cost(...))
 //!     .run(|ctx| ...)?;         // the SPMD closure, once per rank
 //! ```
 //!
-//! — which spawns `world` OS threads over a shared [`Fabric`], hands each
-//! a [`Ctx`] wired to the backend's
+//! — which launches `world` ranks over the selected
+//! [`Transport`](crate::comm::transport::Transport), hands each a
+//! [`Ctx`] wired to the backend's
 //! [`Collectives`](crate::comm::collectives::Collectives) strategy, and
 //! collects results, per-rank virtual clocks and metrics at the join.
 //!
@@ -33,18 +39,20 @@ use anyhow::anyhow;
 use crate::comm::backend::{registry, Backend, BackendProfile};
 use crate::comm::collectives::Collectives;
 use crate::comm::cost::CostParams;
-use crate::comm::fabric::{Envelope, Fabric};
+use crate::comm::fabric::Fabric;
 use crate::comm::message::Msg;
+use crate::comm::transport::tcp::TcpTransport;
+use crate::comm::transport::{launch, Envelope, Transport};
+use crate::comm::wire::WireData;
 use crate::config::MachineConfig;
-use crate::data::value::Data;
 use crate::metrics::{MetricsSnapshot, RankMetrics};
 
-/// Per-rank execution context: identity, clock, fabric access, metrics,
-/// and the active backend's collective strategy.
+/// Per-rank execution context: identity, clock, transport access,
+/// metrics, and the active backend's collective strategy.
 pub struct Ctx {
     pub rank: usize,
     pub world: usize,
-    fabric: Arc<Fabric>,
+    transport: Arc<dyn Transport>,
     /// Virtual time in seconds (the paper's cost model §2).
     clock: Cell<f64>,
     /// Effective cost parameters (machine base × backend shaping).
@@ -61,7 +69,7 @@ pub struct Ctx {
 impl Ctx {
     fn new(
         rank: usize,
-        fabric: Arc<Fabric>,
+        transport: Arc<dyn Transport>,
         backend: Arc<dyn Backend>,
         machine: CostParams,
     ) -> Self {
@@ -69,8 +77,8 @@ impl Ctx {
         let collectives = backend.collectives();
         Ctx {
             rank,
-            world: fabric.world(),
-            fabric,
+            world: transport.world(),
+            transport,
             clock: Cell::new(0.0),
             cost,
             backend,
@@ -128,22 +136,26 @@ impl Ctx {
     /// clock starting at `max(own, ready)`.  Sender-side occupancy makes a
     /// linear broadcast cost Θ(p) at the root; receiver-side occupancy
     /// makes a linear reduction cost Θ(p) at the root — both emergent.
-    pub fn send<T: Data>(&self, dst: usize, tag: u64, value: T) {
+    pub fn send<T: WireData>(&self, dst: usize, tag: u64, value: T) {
         self.send_msg(dst, tag, Msg::new(value));
     }
 
-    /// Erased variant of [`Ctx::send`]: every payload crossing the fabric
-    /// is a [`Msg`], so generic and collective traffic share one cost and
-    /// metrics path.
+    /// Erased variant of [`Ctx::send`]: every payload crossing the
+    /// transport is a [`Msg`], so generic and collective traffic share
+    /// one cost and metrics path.
     pub fn send_msg(&self, dst: usize, tag: u64, msg: Msg) {
         debug_assert!(dst < self.world, "send to rank {dst} outside world");
         debug_assert_ne!(dst, self.rank, "self-send is a framework bug");
+        debug_assert_ne!(
+            tag, CLOCK_GATHER_TAG,
+            "tag u64::MAX is reserved for the runtime's end-of-run clock gather"
+        );
         let bytes = msg.bytes();
         let ready = self.clock.get();
         let secs = self.cost.msg(bytes);
         self.clock.set(ready + secs);
         self.metrics.on_send(bytes, secs);
-        self.fabric.post(
+        self.transport.post(
             dst,
             Envelope { src: self.rank, tag, bytes, ready, payload: msg },
         );
@@ -153,7 +165,7 @@ impl Ctx {
     ///
     /// The transfer starts at `max(own_clock, sender_ready)` and occupies
     /// the receiver for `ts + tw·bytes`.
-    pub fn recv<T: Data>(&self, src: usize, tag: u64) -> T {
+    pub fn recv<T: WireData>(&self, src: usize, tag: u64) -> T {
         self.recv_msg(src, tag).try_downcast::<T>().unwrap_or_else(|_| {
             panic!(
                 "rank {}: recv(src={src}, tag={tag:#x}) payload type mismatch (expected {})",
@@ -165,7 +177,7 @@ impl Ctx {
 
     /// Erased variant of [`Ctx::recv`].
     pub fn recv_msg(&self, src: usize, tag: u64) -> Msg {
-        let env = self.fabric.take(self.rank, src, tag);
+        let env = self.transport.take(self.rank, src, tag);
         let before = self.clock.get();
         let after = before.max(env.ready) + self.cost.msg(env.bytes);
         self.clock.set(after);
@@ -180,7 +192,7 @@ impl Ctx {
     /// ring/pairwise collectives — a ring all-gather round costs
     /// `ts + tw·m`, not `2(ts + tw·m)`, matching §2's model where a
     /// circular shift is `t_s + t_w·m`.
-    pub fn send_recv<T: Data, U: Data>(
+    pub fn send_recv<T: WireData, U: WireData>(
         &self,
         dst: usize,
         src: usize,
@@ -200,13 +212,17 @@ impl Ctx {
 
     /// Erased variant of [`Ctx::send_recv`].
     pub fn send_recv_msg(&self, dst: usize, src: usize, tag: u64, msg: Msg) -> Msg {
+        debug_assert_ne!(
+            tag, CLOCK_GATHER_TAG,
+            "tag u64::MAX is reserved for the runtime's end-of-run clock gather"
+        );
         let bytes_out = msg.bytes();
         let ready = self.clock.get();
-        self.fabric.post(
+        self.transport.post(
             dst,
             Envelope { src: self.rank, tag, bytes: bytes_out, ready, payload: msg },
         );
-        let env = self.fabric.take(self.rank, src, tag);
+        let env = self.transport.take(self.rank, src, tag);
         let start = ready.max(env.ready);
         let cost = self.cost.msg(bytes_out).max(self.cost.msg(env.bytes));
         let after = start + cost;
@@ -235,15 +251,25 @@ impl Ctx {
         id
     }
 
-    #[doc(hidden)]
-    pub fn fabric(&self) -> &Arc<Fabric> {
-        &self.fabric
+    /// The transport carrying this rank's messages (shared memory or
+    /// TCP; see [`crate::comm::transport`]).
+    pub fn transport(&self) -> &Arc<dyn Transport> {
+        &self.transport
     }
 }
 
 /// Outcome of one SPMD run.
+///
+/// In-process transports fill every vector with one entry per rank.  In
+/// a multi-process run (`transport("tcp")`) each OS process only holds
+/// its own rank's state, so `results` and `metrics` have exactly one
+/// entry (the local rank's); `clocks` and `t_parallel` are global on
+/// rank 0 — the launcher gathers final clocks — and local elsewhere.
+/// Cross-rank data products should be gathered *inside* the closure with
+/// group collectives (see `examples/matmul_dns_tcp.rs`).
 pub struct RunResult<R> {
-    /// Per-rank return values, indexed by rank.
+    /// Per-rank return values, indexed by rank (multi-process: the local
+    /// rank's value only).
     pub results: Vec<R>,
     /// Parallel virtual runtime `T_P = max_r clock_r` (seconds).
     pub t_parallel: f64,
@@ -265,17 +291,26 @@ pub struct Runtime {
     world: usize,
     backend: Arc<dyn Backend>,
     machine: CostParams,
+    transport: TransportChoice,
 }
+
+/// Reserved tag for the launcher's end-of-run clock gather in
+/// multi-process mode.  `Ctx::send_msg`/`send_recv_msg` debug-assert
+/// that user traffic never uses it (group tags are hash-derived, so the
+/// collision odds are ~2⁻⁶⁴ per operation — but reserved means checked,
+/// not hoped).
+const CLOCK_GATHER_TAG: u64 = u64::MAX;
 
 impl Runtime {
     /// Start configuring a runtime.  Defaults: `world(1)`, backend
     /// `"openmpi-fixed"`, machine `CostParams::default()` (QDR
-    /// InfiniBand).
+    /// InfiniBand), transport `"local"` (threads over shared memory).
     pub fn builder() -> RuntimeBuilder {
         RuntimeBuilder {
             world: 1,
             backend: BackendChoice::Object(Arc::new(BackendProfile::openmpi_fixed())),
             machine: MachineChoice::Cost(CostParams::default()),
+            transport: None,
         }
     }
 
@@ -294,16 +329,30 @@ impl Runtime {
         self.machine
     }
 
-    /// Launch `world` ranks running `f` in SPMD over a fresh fabric.
+    /// Name of the configured transport.
+    pub fn transport_name(&self) -> &'static str {
+        match self.transport {
+            TransportChoice::InProcess => "local",
+            TransportChoice::TcpLoopback => "tcp-loopback",
+            TransportChoice::Tcp => "tcp",
+        }
+    }
+
+    /// Launch `world` ranks running `f` in SPMD over a fresh transport.
     ///
     /// `f` runs once per rank; the returned [`RunResult`] orders
-    /// everything by rank.  Rank panics propagate (with rank id) after
-    /// all ranks finished or died — the deadlock timeout in
-    /// [`Fabric::take`] guarantees progress.
+    /// everything by rank (see its docs for multi-process semantics).
+    /// Rank panics propagate (with rank id) after all ranks finished or
+    /// died — the deadlock timeout in
+    /// [`Mailbox::take`](crate::comm::transport::Mailbox::take)
+    /// guarantees progress.
     ///
-    /// Ranks execute on the process-wide [`pool`] of reusable worker
-    /// threads: spawning 512 OS threads per run used to dominate the
-    /// end-to-end driver wall time (§Perf in EXPERIMENTS.md).
+    /// In-process ranks execute on the process-wide [`pool`] of reusable
+    /// worker threads: spawning 512 OS threads per run used to dominate
+    /// the end-to-end driver wall time (§Perf in EXPERIMENTS.md).  With
+    /// `transport("tcp")` each rank is an OS process instead (rank 0 is
+    /// the calling process; the rest are re-exec'd workers, see
+    /// [`launch`]).
     pub fn run<R, F>(&self, f: F) -> RunResult<R>
     where
         R: Send,
@@ -311,15 +360,32 @@ impl Runtime {
     {
         let world = self.world;
         assert!(world > 0);
-        let fabric = Fabric::new(world);
+        match self.transport {
+            TransportChoice::InProcess => self.run_threads(Fabric::new(world), f),
+            TransportChoice::TcpLoopback => self.run_threads(
+                TcpTransport::loopback(world).expect("bind tcp-loopback listeners"),
+                f,
+            ),
+            TransportChoice::Tcp => self.run_processes(f),
+        }
+    }
+
+    /// Thread-per-rank launch over any transport whose ranks are all
+    /// local to this process.
+    fn run_threads<R, F>(&self, transport: Arc<dyn Transport>, f: F) -> RunResult<R>
+    where
+        R: Send,
+        F: Fn(&Ctx) -> R + Sync,
+    {
+        let world = self.world;
         let wall0 = Instant::now();
         let slots: Vec<Mutex<Option<(R, f64, MetricsSnapshot)>>> =
             (0..world).map(|_| Mutex::new(None)).collect();
 
         pool::scoped_run(world, &|rank| {
-            let ctx = Ctx::new(rank, fabric.clone(), self.backend.clone(), self.machine);
+            let ctx = Ctx::new(rank, transport.clone(), self.backend.clone(), self.machine);
             let r = f(&ctx);
-            fabric.close(rank);
+            transport.close(rank);
             *slots[rank].lock().unwrap() = Some((r, ctx.now(), ctx.metrics.snapshot()));
         });
 
@@ -339,6 +405,74 @@ impl Runtime {
         let t_parallel = clocks.iter().cloned().fold(0.0, f64::max);
         RunResult { results, t_parallel, clocks, wall, metrics }
     }
+
+    /// Process-per-rank launch: this process runs one rank (0 in the
+    /// parent, `FOOPAR_TCP_RANK` in a spawned worker); the rest of the
+    /// world lives in sibling processes reached over TCP loopback.
+    fn run_processes<R, F>(&self, f: F) -> RunResult<R>
+    where
+        R: Send,
+        F: Fn(&Ctx) -> R + Sync,
+    {
+        let world = self.world;
+        if world == 1 {
+            return self.run_threads(Fabric::new(1), f);
+        }
+        let mut proc = launch::establish(world).expect("establish tcp multi-process world");
+        let me = proc.rank();
+        let transport: Arc<dyn Transport> = proc.transport();
+        let wall0 = Instant::now();
+        let ctx = Ctx::new(me, transport.clone(), self.backend.clone(), self.machine);
+        let r = f(&ctx);
+
+        // End-of-run clock gather so rank 0 reports the true T_P =
+        // max_r clock_r.  Zero modeled bytes: launcher bookkeeping must
+        // not perturb the virtual-time results.
+        let (clocks, t_parallel) = if me == 0 {
+            let mut all = vec![0.0f64; world];
+            all[0] = ctx.now();
+            for src in 1..world {
+                // Poll-with-liveness instead of a bare blocking take: a
+                // worker that died mid-run can never post its clock, and
+                // failing fast with its exit status beats a 60 s
+                // "deadlock?" timeout.  Falls through to the blocking
+                // take (and its deadlock oracle) once the envelope — or
+                // nothing at all — is in flight.
+                let timeout = crate::comm::transport::RECV_TIMEOUT;
+                let deadline = Instant::now() + timeout;
+                while !transport.probe(0, src, CLOCK_GATHER_TAG) {
+                    proc.check_children().expect("tcp worker process died mid-run");
+                    assert!(
+                        Instant::now() <= deadline,
+                        "rank 0: clock gather from rank {src} timed out after {timeout:?} \
+                         — worker process alive but hung?"
+                    );
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                let env = transport.take(0, src, CLOCK_GATHER_TAG);
+                all[src] = env.payload.downcast::<f64>();
+            }
+            let t = all.iter().cloned().fold(0.0, f64::max);
+            (all, t)
+        } else {
+            transport.post(
+                0,
+                Envelope {
+                    src: me,
+                    tag: CLOCK_GATHER_TAG,
+                    bytes: 0,
+                    ready: ctx.now(),
+                    payload: Msg::new(ctx.now()),
+                },
+            );
+            (vec![ctx.now()], ctx.now())
+        };
+        transport.close(me);
+        let metrics = vec![ctx.metrics.snapshot()];
+        let wall = wall0.elapsed();
+        proc.finish().expect("tcp worker process failed");
+        RunResult { results: vec![r], t_parallel, clocks, wall, metrics }
+    }
 }
 
 enum BackendChoice {
@@ -353,11 +487,26 @@ enum MachineChoice {
     Cost(CostParams),
 }
 
+/// Which delivery substrate carries envelopes (resolved at build time).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum TransportChoice {
+    /// Threads over shared-memory mailboxes ([`Fabric`]).
+    InProcess,
+    /// Threads over real TCP loopback sockets (full wire path, single
+    /// process — what the transport-parity tests run on).
+    TcpLoopback,
+    /// One OS process per rank over TCP loopback ([`launch`]).
+    Tcp,
+}
+
 /// Builder for [`Runtime`] — the entry point of every SPMD program.
 pub struct RuntimeBuilder {
     world: usize,
     backend: BackendChoice,
     machine: MachineChoice,
+    /// Transport name, resolved at [`RuntimeBuilder::build`]
+    /// (`None` = default in-process).
+    transport: Option<String>,
 }
 
 impl RuntimeBuilder {
@@ -406,7 +555,28 @@ impl RuntimeBuilder {
         self
     }
 
-    /// Resolve names against the backend registry / machine configs.
+    /// Select the delivery substrate:
+    ///
+    /// * `"local"` (alias `"shmem"`) — threads over in-process
+    ///   shared-memory mailboxes (the default);
+    /// * `"tcp-loopback"` — threads, but every envelope crosses a real
+    ///   TCP loopback socket through the wire codec (full wire path
+    ///   without process orchestration; what the parity tests use);
+    /// * `"tcp"` — one OS process per rank over TCP loopback, spawned by
+    ///   the re-exec [`launch`]er (payload types must implement
+    ///   [`WireData`]; results come back local-only, see [`RunResult`]).
+    ///
+    /// Orthogonal to [`RuntimeBuilder::backend`]: the backend decides
+    /// *which algorithm* a collective runs, the transport decides *what
+    /// carries its messages* — any combination works, with identical
+    /// results.
+    pub fn transport(mut self, name: &str) -> Self {
+        self.transport = Some(name.to_string());
+        self
+    }
+
+    /// Resolve names against the backend registry / machine configs /
+    /// transport table.
     pub fn build(self) -> crate::Result<Runtime> {
         if self.world == 0 {
             return Err(anyhow!("world size must be positive"));
@@ -424,7 +594,19 @@ impl RuntimeBuilder {
             MachineChoice::Cost(c) => c,
             MachineChoice::Named(spec) => MachineConfig::resolve(&spec)?.cost(),
         };
-        Ok(Runtime { world: self.world, backend, machine })
+        let transport = match self.transport.as_deref() {
+            None | Some("local") | Some("shmem") | Some("inprocess") => {
+                TransportChoice::InProcess
+            }
+            Some("tcp-loopback") => TransportChoice::TcpLoopback,
+            Some("tcp") => TransportChoice::Tcp,
+            Some(other) => {
+                return Err(anyhow!(
+                    "unknown transport '{other}' (available: local, tcp-loopback, tcp)"
+                ))
+            }
+        };
+        Ok(Runtime { world: self.world, backend, machine, transport })
     }
 
     /// Build and immediately run `f` (the common single-shot path).
@@ -435,28 +617,6 @@ impl RuntimeBuilder {
     {
         Ok(self.build()?.run(f))
     }
-}
-
-/// Positional launcher retained for one PR while downstream code moves to
-/// [`Runtime::builder`].
-#[deprecated(note = "use Runtime::builder().world(p).backend_profile(b).cost(m).run(f)")]
-pub fn run<R, F>(
-    world: usize,
-    backend: BackendProfile,
-    machine: CostParams,
-    f: F,
-) -> RunResult<R>
-where
-    R: Send,
-    F: Fn(&Ctx) -> R + Sync,
-{
-    Runtime::builder()
-        .world(world)
-        .backend_profile(backend)
-        .cost(machine)
-        .build()
-        .expect("invalid SPMD configuration (world size must be positive)")
-        .run(f)
 }
 
 /// A process-wide pool of reusable rank worker threads.
@@ -816,10 +976,51 @@ mod tests {
         assert!((res.results[0] - 20.0).abs() < 1e-9, "{}", res.results[0]);
     }
 
+    // --------------------------------------------------- transports
+
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_positional_shim_still_works() {
-        let res = run(2, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| ctx.rank);
-        assert_eq!(res.results, vec![0, 1]);
+    fn builder_resolves_transports_and_rejects_unknown() {
+        for (name, expect) in [
+            ("local", "local"),
+            ("shmem", "local"),
+            ("tcp-loopback", "tcp-loopback"),
+            ("tcp", "tcp"),
+        ] {
+            let rt = Runtime::builder().transport(name).build().unwrap();
+            assert_eq!(rt.transport_name(), expect, "{name}");
+        }
+        assert_eq!(Runtime::builder().build().unwrap().transport_name(), "local");
+        let err = Runtime::builder().transport("carrier-pigeon").build().unwrap_err();
+        assert!(format!("{err:#}").contains("carrier-pigeon"));
+    }
+
+    #[test]
+    fn tcp_loopback_run_matches_in_process_results() {
+        let mk = |transport: &str| {
+            Runtime::builder()
+                .world(4)
+                .backend_profile(BackendProfile::openmpi_fixed())
+                .cost(CostParams::new(1.0, 0.001))
+                .transport(transport)
+                .build()
+                .unwrap()
+                .run(|ctx| {
+                    if ctx.rank == 0 {
+                        ctx.send(1, 9, vec![1.5f64, 2.5]);
+                        0.0
+                    } else if ctx.rank == 1 {
+                        let v: Vec<f64> = ctx.recv(0, 9);
+                        v.iter().sum()
+                    } else {
+                        -1.0
+                    }
+                })
+        };
+        let shm = mk("local");
+        let tcp = mk("tcp-loopback");
+        assert_eq!(shm.results, tcp.results);
+        // virtual time is transport-independent by construction
+        assert_eq!(shm.clocks, tcp.clocks);
+        assert_eq!(shm.t_parallel, tcp.t_parallel);
     }
 }

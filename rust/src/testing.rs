@@ -13,8 +13,9 @@ use crate::spmd::{Ctx, RunResult, Runtime};
 
 /// Launch an SPMD world for a test: positional convenience over
 /// [`Runtime::builder`] with an explicit profile and raw cost
-/// parameters.  This is what unit and integration tests call instead of
-/// the deprecated `spmd::run`.
+/// parameters.  This is the test-suite entry point (the deprecated
+/// positional `spmd::run` shim was removed once callers migrated to the
+/// builder).
 pub fn spmd_run<R, F>(
     world: usize,
     backend: BackendProfile,
