@@ -1,0 +1,75 @@
+//! Failure path of a real multi-process run: a worker **dying
+//! mid-collective** must fail the run promptly — with the dead rank's
+//! exit status and the stranded receive's (rank, src, tag) — instead of
+//! every surviving process burning the 60 s deadlock oracle.
+//!
+//! Run with:  cargo run --release --example tcp_failfast
+//!
+//! Like every `transport("tcp")` program, workers re-exec this `main`
+//! (see `comm::transport::launch`).  Rank 2 exits between frames — a
+//! clean socket close, the hard case no torn-frame detector can see —
+//! while every other rank blocks in an allreduce that can never
+//! complete.  The parent's liveness watchdog must (a) poison the local
+//! transport so rank 0's blocked `wait()` panics with the root cause,
+//! and (b) reap the surviving workers so they don't hang as orphans.
+
+use std::time::{Duration, Instant};
+
+use foopar::comm::cost::CostParams;
+use foopar::comm::group::Group;
+use foopar::comm::transport::launch;
+use foopar::Runtime;
+
+const WORLD: usize = 4;
+
+fn main() {
+    let is_worker = launch::child_rank().is_some();
+    let t0 = Instant::now();
+    let r = std::panic::catch_unwind(|| {
+        Runtime::builder()
+            .world(WORLD)
+            .cost(CostParams::free())
+            .transport("tcp")
+            .run(|ctx| {
+                let g = Group::world(ctx);
+                if ctx.rank == 2 {
+                    // die mid-collective with a clean socket close
+                    std::process::exit(3);
+                }
+                g.allreduce(ctx.rank as u64, |a, b| a + b)
+            })
+    });
+
+    if is_worker {
+        // Surviving workers normally never get here — the parent's
+        // watchdog kills them once rank 2's death is detected.  If one
+        // does unwind (or its run returns Err) on its own, exit non-zero
+        // so the parent's accounting stays truthful.
+        let clean = matches!(&r, Ok(run) if run.is_ok());
+        std::process::exit(if clean { 0 } else { 101 });
+    }
+
+    // Parent (rank 0): the run must have failed, promptly, blaming rank 2.
+    let elapsed = t0.elapsed();
+    let msg = match r {
+        Ok(Ok(_)) => panic!("run succeeded despite rank 2 dying mid-collective"),
+        Ok(Err(e)) => format!("{e:#}"),
+        Err(e) => e
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string panic>".into()),
+    };
+    // The watchdog pins the root cause before reaping the survivors, so
+    // the failure must name rank 2 — never a killed sibling.
+    assert!(msg.contains("rank 2"), "failure does not name the dead worker: {msg}");
+    assert!(
+        elapsed < Duration::from_secs(30),
+        "failure was not prompt: {elapsed:?} (deadlock oracle is 60 s)"
+    );
+    println!(
+        "worker death surfaced in {:.2}s with: {}",
+        elapsed.as_secs_f64(),
+        msg.lines().next().unwrap_or("")
+    );
+    println!("tcp_failfast OK");
+}

@@ -1,0 +1,191 @@
+//! Communication–computation overlap: blocking vs pipelined Cannon/DNS.
+//!
+//! Run with:  cargo bench --bench overlap_pipeline
+//!
+//! For each (algorithm, grid, block, machine) configuration this driver
+//! runs the blocking algorithm and its pipelined variant (non-blocking
+//! `*_start` handles, overlap-aware `max(T_comm, T_comp)` clock) in
+//! modeled mode and reports both virtual `T_P`s, the speedup, and the
+//! comm time the pipeline hid.  Results are emitted to
+//! `BENCH_overlap.json` to anchor the perf trajectory in CI — the
+//! pipelined `T_P` must trend strictly below blocking wherever the
+//! network is visible next to the GEMM.
+
+use std::io::Write;
+
+use foopar::algos::{cannon, mmm_dns};
+use foopar::comm::backend::BackendProfile;
+use foopar::comm::cost::CostParams;
+use foopar::matrix::block::BlockSource;
+use foopar::metrics::render_table;
+use foopar::runtime::compute::Compute;
+use foopar::Runtime;
+
+struct Outcome {
+    algo: &'static str,
+    q: usize,
+    p: usize,
+    b: usize,
+    machine: &'static str,
+    t_blocking: f64,
+    t_pipelined: f64,
+    hidden_max: f64,
+}
+
+fn run_modeled<R: Send>(
+    world: usize,
+    machine: CostParams,
+    f: impl Fn(&foopar::spmd::Ctx) -> R + Sync,
+) -> foopar::spmd::RunResult<R> {
+    Runtime::builder()
+        .world(world)
+        .backend_profile(BackendProfile::openmpi_fixed())
+        .cost(machine)
+        .build()
+        .expect("build runtime")
+        .run(f)
+}
+
+fn bench_cannon(q: usize, b: usize, machine: (&'static str, CostParams), rate: f64) -> Outcome {
+    let a = BlockSource::proxy(b, 1);
+    let bb = BlockSource::proxy(b, 2);
+    let comp = Compute::Modeled { rate };
+    let blocking = run_modeled(q * q, machine.1, |ctx| {
+        cannon::mmm_cannon(ctx, &comp, q, &a, &bb).t_local
+    });
+    let pipelined = run_modeled(q * q, machine.1, |ctx| {
+        cannon::mmm_cannon_pipelined(ctx, &comp, q, &a, &bb).t_local
+    });
+    let hidden_max = pipelined
+        .metrics
+        .iter()
+        .map(|m| m.overlap_hidden)
+        .fold(0.0, f64::max);
+    Outcome {
+        algo: "cannon",
+        q,
+        p: q * q,
+        b,
+        machine: machine.0,
+        t_blocking: blocking.t_parallel,
+        t_pipelined: pipelined.t_parallel,
+        hidden_max,
+    }
+}
+
+fn bench_dns(
+    q: usize,
+    b: usize,
+    chunks: usize,
+    machine: (&'static str, CostParams),
+    rate: f64,
+) -> Outcome {
+    let a = BlockSource::proxy(b, 1);
+    let bb = BlockSource::proxy(b, 2);
+    let comp = Compute::Modeled { rate };
+    let blocking = run_modeled(q * q * q, machine.1, |ctx| {
+        mmm_dns::mmm_dns(ctx, &comp, q, &a, &bb).t_local
+    });
+    let pipelined = run_modeled(q * q * q, machine.1, |ctx| {
+        mmm_dns::mmm_dns_pipelined(ctx, &comp, q, &a, &bb, chunks).t_local
+    });
+    let hidden_max = pipelined
+        .metrics
+        .iter()
+        .map(|m| m.overlap_hidden)
+        .fold(0.0, f64::max);
+    Outcome {
+        algo: "dns",
+        q,
+        p: q * q * q,
+        b,
+        machine: machine.0,
+        t_blocking: blocking.t_parallel,
+        t_pipelined: pipelined.t_parallel,
+        hidden_max,
+    }
+}
+
+fn main() {
+    // Two interconnect regimes: a commodity gigabit-class network where
+    // shifts/reductions are clearly visible next to the GEMM, and the
+    // paper's QDR InfiniBand where they are thin but nonzero.
+    let gigabit = ("gigabit", CostParams::new(5.0e-5, 1.0e-8));
+    let qdr = ("qdr-ib", CostParams::qdr_infiniband());
+
+    let outcomes = vec![
+        bench_cannon(4, 256, gigabit, 1e10),
+        bench_cannon(8, 256, gigabit, 1e10),
+        bench_cannon(8, 512, qdr, 1e11),
+        bench_dns(2, 256, 4, gigabit, 1e10),
+        bench_dns(4, 128, 4, gigabit, 1e10),
+        bench_dns(4, 512, 8, qdr, 1e11),
+    ];
+
+    println!("== comm-comp overlap: blocking vs pipelined (virtual T_P, modeled) ==\n");
+    let rows: Vec<Vec<String>> = outcomes
+        .iter()
+        .map(|o| {
+            vec![
+                o.algo.to_string(),
+                format!("{}", o.p),
+                format!("{}", o.b),
+                o.machine.to_string(),
+                format!("{:.3e}", o.t_blocking),
+                format!("{:.3e}", o.t_pipelined),
+                format!("{:.3}x", o.t_blocking / o.t_pipelined),
+                format!("{:.3e}", o.hidden_max),
+            ]
+        })
+        .collect();
+    let headers = [
+        "algo",
+        "p",
+        "b",
+        "machine",
+        "T_P blocking",
+        "T_P pipelined",
+        "speedup",
+        "hidden(max)",
+    ];
+    println!("{}", render_table(&headers, &rows));
+
+    let wins = outcomes.iter().filter(|o| o.t_pipelined < o.t_blocking).count();
+    println!("{wins}/{} configurations pipeline strictly faster", outcomes.len());
+
+    // Hand-rolled JSON (no serde in the image's crate cache).
+    let entries: Vec<String> = outcomes
+        .iter()
+        .map(|o| {
+            format!(
+                "  {{\"algo\": \"{}\", \"q\": {}, \"p\": {}, \"b\": {}, \"machine\": \"{}\", \
+                 \"t_p_blocking\": {:.9e}, \"t_p_pipelined\": {:.9e}, \"speedup\": {:.4}, \
+                 \"overlap_hidden_max\": {:.9e}}}",
+                o.algo,
+                o.q,
+                o.p,
+                o.b,
+                o.machine,
+                o.t_blocking,
+                o.t_pipelined,
+                o.t_blocking / o.t_pipelined,
+                o.hidden_max
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n\"bench\": \"overlap_pipeline\",\n\"unit\": \"virtual seconds (modeled)\",\n\
+         \"pipelined_strict_wins\": {},\n\"configs\": {},\n\"results\": [\n{}\n]\n}}\n",
+        wins,
+        outcomes.len(),
+        entries.join(",\n")
+    );
+    let mut f = std::fs::File::create("BENCH_overlap.json").expect("create BENCH_overlap.json");
+    f.write_all(json.as_bytes()).expect("write BENCH_overlap.json");
+    println!("\nwrote BENCH_overlap.json");
+
+    if wins == 0 {
+        eprintln!("ERROR: no configuration pipelined faster than blocking");
+        std::process::exit(1);
+    }
+}

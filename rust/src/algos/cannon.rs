@@ -75,6 +75,70 @@ pub fn mmm_cannon(
     CannonOutput { c_block, t_local: ctx.now() }
 }
 
+/// Pipelined Cannon: **prefetch the next blocks while multiplying the
+/// current ones**.  Each step clones its A/B blocks, starts their cyclic
+/// shifts with [`DistSeq::shift_d_start`](crate::data::dseq::DistSeq),
+/// multiplies the (unmoved) current blocks, and only then `wait()`s —
+/// so on the overlap-aware clock a step costs
+/// `max(T_mult, t_s + t_w (n/q)²)` instead of the blocking
+/// `T_mult + 2(t_s + t_w (n/q)²)`:
+///
+/// ```text
+/// T_P = skew + q·max(2(n/q)³/rate, t_s + t_w (n/q)²) + last multiply
+/// ```
+///
+/// (The A-row and B-column shifts travel disjoint grid lines, so their
+/// comm timelines overlap each other as well as the GEMM.)  Results are
+/// **bit-identical** to [`mmm_cannon`]: the same block values make the
+/// same multiply-accumulate sequence — only the schedule changes.
+pub fn mmm_cannon_pipelined(
+    ctx: &Ctx,
+    comp: &Compute,
+    q: usize,
+    a: &BlockSource,
+    b: &BlockSource,
+) -> CannonOutput {
+    assert_eq!(a.b, b.b);
+    let grid = GridN::square(ctx, q);
+
+    let ga = grid.map_d(|c| a.block(c[0], (c[1] + c[0]) % q));
+    let gb = grid.map_d(|c| b.block((c[0] + c[1]) % q, c[1]));
+
+    let coord = ga.my_coord();
+    let mut a_cur = ga.into_local();
+    let mut b_cur = gb.into_local();
+    let mut acc: Option<Block> = None;
+
+    for step in 0..q {
+        // Prefetch: start shifting copies of the current blocks before
+        // touching the GEMM — the wire time hides under the multiply.
+        let pending = if step + 1 < q {
+            let da = grid.map_d(|_| a_cur.clone().expect("member lost A block"));
+            let ha = da.into_seq_along(1).shift_d_start(-1);
+            let db = grid.map_d(|_| b_cur.clone().expect("member lost B block"));
+            let hb = db.into_seq_along(0).shift_d_start(-1);
+            Some((ha, hb))
+        } else {
+            None
+        };
+        // local multiply-accumulate on the *current* blocks
+        if let (Some(ab), Some(bb)) = (&a_cur, &b_cur) {
+            let prod = comp.matmul(ctx, ab, bb);
+            acc = Some(match acc {
+                None => prod,
+                Some(c) => comp.add(ctx, c, prod),
+            });
+        }
+        if let Some((ha, hb)) = pending {
+            a_cur = ha.wait().into_local();
+            b_cur = hb.wait().into_local();
+        }
+    }
+
+    let c_block = coord.zip(acc).map(|(c, blk)| (c[0], c[1], blk));
+    CannonOutput { c_block, t_local: ctx.now() }
+}
+
 /// Reassemble the result (verification).
 pub fn collect_c(results: &[CannonOutput], q: usize, b: usize) -> crate::matrix::dense::Mat {
     use crate::matrix::dense::Mat;
@@ -162,6 +226,64 @@ mod tests {
             cannon.t_parallel,
             dns.t_parallel
         );
+    }
+
+    #[test]
+    fn pipelined_cannon_bit_identical_to_blocking() {
+        for (q, bsz, seed) in [(2usize, 8usize, 21u64), (3, 4, 22), (4, 4, 23)] {
+            let a = BlockSource::real(bsz, seed);
+            let b = BlockSource::real(bsz, seed + 1);
+            let blocking = run(q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+                mmm_cannon(ctx, &Compute::Native, q, &a, &b)
+            });
+            let pipelined =
+                run(q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+                    mmm_cannon_pipelined(ctx, &Compute::Native, q, &a, &b)
+                });
+            let cb = collect_c(&blocking.results, q, bsz);
+            let cp = collect_c(&pipelined.results, q, bsz);
+            // exact: same kernel, same multiply-accumulate order
+            assert_eq!(cb.data, cp.data, "q={q}");
+        }
+    }
+
+    #[test]
+    fn pipelined_cannon_t_p_strictly_below_blocking() {
+        // comm-visible modeled config: shifts cost real virtual time
+        let q = 4;
+        let machine = CostParams::new(5e-5, 1e-8); // slow gigabit-ish net
+        let comp = Compute::Modeled { rate: 1e10 };
+        let a = BlockSource::proxy(256, 1);
+        let b = BlockSource::proxy(256, 2);
+        let blocking = run(q * q, BackendProfile::openmpi_fixed(), machine, |ctx| {
+            mmm_cannon(ctx, &comp, q, &a, &b)
+        });
+        let pipelined = run(q * q, BackendProfile::openmpi_fixed(), machine, |ctx| {
+            mmm_cannon_pipelined(ctx, &comp, q, &a, &b)
+        });
+        assert!(
+            pipelined.t_parallel < blocking.t_parallel,
+            "pipelined {} !< blocking {}",
+            pipelined.t_parallel,
+            blocking.t_parallel
+        );
+        // the hidden comm shows up in the overlap metric
+        let hidden: f64 = pipelined.metrics.iter().map(|m| m.overlap_hidden).sum();
+        assert!(hidden > 0.0);
+    }
+
+    #[test]
+    fn pipelined_cannon_modeled_proxies_stay_lazy() {
+        let a = BlockSource::proxy(128, 1);
+        let b = BlockSource::proxy(128, 2);
+        let res = run(9, BackendProfile::openmpi_fixed(), CostParams::qdr_infiniband(), |ctx| {
+            mmm_cannon_pipelined(ctx, &Compute::Modeled { rate: 1e9 }, 3, &a, &b)
+        });
+        for out in &res.results {
+            if let Some((_, _, blk)) = &out.c_block {
+                assert!(blk.is_proxy());
+            }
+        }
     }
 
     #[test]

@@ -15,6 +15,8 @@
 //! `T_P = Θ(n³/p) + Θ((n²/p^{2/3}) log p)`, isoefficiency Θ(p log p) —
 //! matching the DNS algorithm.
 
+use crate::comm::group::Group;
+use crate::data::dseq::DistSeq;
 use crate::data::grid::GridN;
 use crate::matrix::block::{Block, BlockSource};
 use crate::runtime::compute::Compute;
@@ -56,6 +58,85 @@ pub fn mmm_dns(
 
     let c_block = match (c, coord) {
         (Some(blk), Some(cd)) => Some((cd[0], cd[1], blk)),
+        _ => None,
+    };
+    DnsOutput { c_block, t_local: ctx.now() }
+}
+
+/// Pipelined DNS: compute the local product **panel by panel** and start
+/// each panel's z-axis reduction while the next panel multiplies — the
+/// "prefetch next block while multiplying the current one" schedule, so
+/// most of the Θ((n²/p^{2/3}) log p) reduction hides under the Θ(n³/p)
+/// GEMM on the overlap-aware clock:
+///
+/// ```text
+/// T_P ≈ Θ(n³/p) + (1/K)·Θ((n²/p^{2/3}) log p)      (K = chunks)
+/// ```
+///
+/// At most one reduction handle is outstanding at a time (start panel
+/// `c+1`'s GEMM, wait panel `c`'s reduce), keeping the comm schedule
+/// single-port like the blocking run.  Results are **bit-identical** to
+/// [`mmm_dns`]: the native kernel accumulates each element over `k` in
+/// the same order whether B is whole or column-sliced, each column's
+/// z-fold order is unchanged, and the panel hstack reassembles the exact
+/// block (modeled runs reassemble the exact proxy metadata).
+pub fn mmm_dns_pipelined(
+    ctx: &Ctx,
+    comp: &Compute,
+    q: usize,
+    a: &BlockSource,
+    b: &BlockSource,
+    chunks: usize,
+) -> DnsOutput {
+    assert_eq!(a.b, b.b, "block sizes of A and B must match");
+    assert!(chunks >= 1, "need at least one panel");
+    let grid = GridN::cube(ctx, q);
+
+    let ga = grid.map_d(|c| a.block(c[0], c[2]));
+    let gb = grid.map_d(|c| b.block(c[2], c[1]));
+    let coord = grid.my_coord();
+    let a_blk = ga.into_local();
+    let b_blk = gb.into_local();
+
+    let bcols = b.b;
+    let k = chunks.min(bcols).max(1);
+    let zranks = coord.as_ref().map(|c| grid.line_ranks(c, 2));
+
+    let mut panels: Vec<Option<Block>> = (0..k).map(|_| None).collect();
+    let mut pending: Option<(usize, crate::data::dseq::PendingReduce<'_, '_, Block>)> = None;
+    for c in 0..k {
+        let (lo, hi) = (c * bcols / k, (c + 1) * bcols / k);
+        // panel GEMM on the main clock — overlaps the previous panel's
+        // in-flight reduction
+        let prod = match (&a_blk, &b_blk) {
+            (Some(ab), Some(bb)) => Some(comp.matmul_panel(ctx, ab, bb, lo, hi)),
+            _ => None,
+        };
+        if let Some((idx, h)) = pending.take() {
+            panels[idx] = h.wait();
+        }
+        // start this panel's z-reduction; it rides under panel c+1's GEMM
+        let zseq = match (&zranks, prod) {
+            (Some(ranks), Some(p)) => {
+                DistSeq::from_parts(Group::new(ctx, ranks.clone()), Some(p))
+            }
+            _ => DistSeq::from_parts(Group::new(ctx, vec![ctx.rank]), None),
+        };
+        pending = Some((c, zseq.reduce_d_start(|x, y| comp.add(ctx, x, y))));
+    }
+    if let Some((idx, h)) = pending.take() {
+        panels[idx] = h.wait();
+    }
+
+    // Reassemble on the k=0 plane (group rank 0 of every z-line).
+    let c_block = match coord {
+        Some(cd) if cd[2] == 0 => {
+            let blocks: Vec<Block> = panels
+                .into_iter()
+                .map(|p| p.expect("k=0 member missing a reduced panel"))
+                .collect();
+            Some((cd[0], cd[1], Block::hstack(blocks)))
+        }
         _ => None,
     };
     DnsOutput { c_block, t_local: ctx.now() }
@@ -153,6 +234,59 @@ mod tests {
                 assert!(blk.is_proxy());
             }
         }
+    }
+
+    #[test]
+    fn pipelined_dns_bit_identical_to_blocking() {
+        for (q, bsz, chunks) in [(2usize, 8usize, 1usize), (2, 8, 3), (3, 6, 4)] {
+            let a = BlockSource::real(bsz, 300 + chunks as u64);
+            let b = BlockSource::real(bsz, 400 + chunks as u64);
+            let blocking =
+                run(q * q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+                    mmm_dns(ctx, &Compute::Native, q, &a, &b)
+                });
+            let pipelined =
+                run(q * q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+                    mmm_dns_pipelined(ctx, &Compute::Native, q, &a, &b, chunks)
+                });
+            let cb = collect_c(&blocking.results, q, bsz);
+            let cp = collect_c(&pipelined.results, q, bsz);
+            // exact: same kernel fp order per element, same z-fold order
+            assert_eq!(cb.data, cp.data, "q={q} chunks={chunks}");
+        }
+    }
+
+    #[test]
+    fn pipelined_dns_t_p_strictly_below_blocking() {
+        let q = 2;
+        let machine = CostParams::new(5e-5, 1e-8); // comm-visible network
+        let comp = Compute::Modeled { rate: 1e10 };
+        let a = BlockSource::proxy(256, 1);
+        let b = BlockSource::proxy(256, 2);
+        let blocking = run(q * q * q, BackendProfile::openmpi_fixed(), machine, |ctx| {
+            mmm_dns(ctx, &comp, q, &a, &b)
+        });
+        let pipelined = run(q * q * q, BackendProfile::openmpi_fixed(), machine, |ctx| {
+            mmm_dns_pipelined(ctx, &comp, q, &a, &b, 4)
+        });
+        // identical proxy metadata…
+        for (bl, pi) in blocking.results.iter().zip(&pipelined.results) {
+            match (&bl.c_block, &pi.c_block) {
+                (Some((i, j, x)), Some((i2, j2, y))) => {
+                    assert_eq!((i, j), (i2, j2));
+                    assert_eq!(x, y);
+                }
+                (None, None) => {}
+                _ => panic!("c_block placement diverged"),
+            }
+        }
+        // …at strictly lower overlapped T_P
+        assert!(
+            pipelined.t_parallel < blocking.t_parallel,
+            "pipelined {} !< blocking {}",
+            pipelined.t_parallel,
+            blocking.t_parallel
+        );
     }
 
     #[test]

@@ -4,12 +4,16 @@
 //!   (zip/mapD/reduceD over q³ ranks, sequential ∀-loop, isoefficiency
 //!   Θ(p^{5/3})).
 //! * [`mmm_dns`] — Algorithm 2: Grid3D / DNS multiplication
-//!   (zipWithD · zSeq · reduceD, isoefficiency Θ(p log p)).
+//!   (zipWithD · zSeq · reduceD, isoefficiency Θ(p log p)); plus
+//!   `mmm_dns_pipelined`, the chunked-reduction overlap variant built on
+//!   the non-blocking `reduce_d_start` handles.
 //! * [`floyd_warshall`] — Algorithm 3: 2-d grid parallel Floyd-Warshall.
 //! * [`apsp_squaring`] — extension: APSP by repeated min-plus squaring on
 //!   the DNS grid (uses the tropical Pallas kernel).
 //! * [`cannon`] — extension: Cannon's 2-d algorithm (memory-efficient,
-//!   exercises `shiftD`; isoefficiency Θ(p^{3/2})).
+//!   exercises `shiftD`; isoefficiency Θ(p^{3/2})); plus
+//!   `mmm_cannon_pipelined`, which prefetches the next blocks with
+//!   `shift_d_start` while multiplying the current ones.
 //! * [`dns_baseline`] — hand-coded DNS directly on the fabric, no
 //!   framework abstractions: the "C/MPI version" of §6 used to measure
 //!   FooPar's abstraction overhead.

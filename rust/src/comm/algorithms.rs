@@ -32,20 +32,32 @@
 //! rounds with [`Group::send_msg_to`] / [`Group::recv_msg_from`] /
 //! [`Group::send_recv_msg_with`].
 
+use crate::comm::backend::{BcastAlgo, ReduceAlgo};
 use crate::comm::group::Group;
 use crate::comm::message::Msg;
+use crate::comm::nb::{GroupOp, OpOutput};
 
 /// Erased associative combiner: `op(a, b)` receives `a` from the lower
 /// group rank, exactly like the generic `op(a: T, b: T) -> T`.
 pub type ReduceFn<'a> = &'a (dyn Fn(Msg, Msg) -> Msg + 'a);
 
+/// Owned erased combiner — the form carried inside a non-blocking
+/// handle, whose deferred fold outlives the `*_start` call frame.
+pub type OwnedReduceFn<'f> = Box<dyn Fn(Msg, Msg) -> Msg + 'f>;
+
 // ------------------------------------------------------------------ bcast
 
 /// Binomial-tree broadcast: ⌈log₂ p⌉ rounds (MPICH shape, any p).
 pub fn bcast_binomial(g: &Group, root: usize, value: Option<Msg>) -> Msg {
+    let tag = g.next_tag();
+    bcast_binomial_with_tag(g, root, value, tag)
+}
+
+/// [`bcast_binomial`] rounds under a caller-allocated tag (so composed
+/// operations like the split allreduce can allocate every tag at start).
+fn bcast_binomial_with_tag(g: &Group, root: usize, value: Option<Msg>, tag: u64) -> Msg {
     let p = g.size();
     let me = g.index();
-    let tag = g.next_tag();
     let rel = (me + p - root) % p;
     let mut val: Option<Msg> = if rel == 0 {
         Some(value.expect("bcast root must supply a value"))
@@ -78,9 +90,14 @@ pub fn bcast_binomial(g: &Group, root: usize, value: Option<Msg>) -> Msg {
 
 /// Linear broadcast: root sends p−1 sequential messages (naive backends).
 pub fn bcast_linear(g: &Group, root: usize, value: Option<Msg>) -> Msg {
+    let tag = g.next_tag();
+    bcast_linear_with_tag(g, root, value, tag)
+}
+
+/// [`bcast_linear`] rounds under a caller-allocated tag.
+fn bcast_linear_with_tag(g: &Group, root: usize, value: Option<Msg>, tag: u64) -> Msg {
     let p = g.size();
     let me = g.index();
-    let tag = g.next_tag();
     if me == root {
         let v = value.expect("bcast root must supply a value");
         for i in 0..p {
@@ -127,27 +144,33 @@ pub fn reduce_binomial(g: &Group, root: usize, value: Msg, op: ReduceFn) -> Opti
 /// messages — the Θ(p) behaviour of the stock OpenMPI java bindings and
 /// MPJ-Express that §6 of the paper calls out.
 pub fn reduce_linear(g: &Group, root: usize, value: Msg, op: ReduceFn) -> Option<Msg> {
-    let p = g.size();
     let me = g.index();
     let tag = g.next_tag();
     if me == root {
-        // Receive everything (p−1 serialized transfers at the root), then
-        // fold in group-rank order for deterministic bracketing:
-        // ((v0 ⊕ v1) ⊕ v2) ⊕ …
-        let mut vals: Vec<Option<Msg>> = (0..p).map(|_| None).collect();
-        vals[root] = Some(value);
-        for i in 0..p {
-            if i != root {
-                vals[i] = Some(g.recv_msg_from(i, tag));
-            }
-        }
-        let mut it = vals.into_iter().map(Option::unwrap);
-        let first = it.next().unwrap();
-        Some(it.fold(first, |a, b| op(a, b)))
+        Some(reduce_linear_root_with_tag(g, root, value, op, tag))
     } else {
         g.send_msg_to(root, tag, value);
         None
     }
+}
+
+/// The root side of [`reduce_linear`] under a caller-allocated tag:
+/// receive everything (p−1 serialized transfers at the root), then fold
+/// in group-rank order for deterministic bracketing:
+/// ((v0 ⊕ v1) ⊕ v2) ⊕ …  Shared with the deferred phase of
+/// [`reduce_linear_start`].
+fn reduce_linear_root_with_tag(g: &Group, root: usize, value: Msg, op: ReduceFn, tag: u64) -> Msg {
+    let p = g.size();
+    let mut vals: Vec<Option<Msg>> = (0..p).map(|_| None).collect();
+    vals[root] = Some(value);
+    for (i, slot) in vals.iter_mut().enumerate() {
+        if i != root {
+            *slot = Some(g.recv_msg_from(i, tag));
+        }
+    }
+    let mut it = vals.into_iter().map(Option::unwrap);
+    let first = it.next().unwrap();
+    it.fold(first, |a, b| op(a, b))
 }
 
 // -------------------------------------------------------------- allgather
@@ -261,43 +284,55 @@ pub fn barrier_dissemination(g: &Group) {
 
 /// All-to-one gather (linear): root obtains the group-ordered vector.
 pub fn gather_linear(g: &Group, root: usize, value: Msg) -> Option<Vec<Msg>> {
-    let p = g.size();
     let me = g.index();
     let tag = g.next_tag();
     if me == root {
-        let mut out: Vec<Option<Msg>> = (0..p).map(|_| None).collect();
-        out[root] = Some(value);
-        for i in 0..p {
-            if i != root {
-                out[i] = Some(g.recv_msg_from(i, tag));
-            }
-        }
-        Some(out.into_iter().map(Option::unwrap).collect())
+        Some(gather_linear_root_with_tag(g, root, value, tag))
     } else {
         g.send_msg_to(root, tag, value);
         None
     }
 }
 
+/// The root side of [`gather_linear`] under a caller-allocated tag
+/// (shared with the deferred phase of [`gather_linear_start`]).
+fn gather_linear_root_with_tag(g: &Group, root: usize, value: Msg, tag: u64) -> Vec<Msg> {
+    let p = g.size();
+    let mut out: Vec<Option<Msg>> = (0..p).map(|_| None).collect();
+    out[root] = Some(value);
+    for (i, slot) in out.iter_mut().enumerate() {
+        if i != root {
+            *slot = Some(g.recv_msg_from(i, tag));
+        }
+    }
+    out.into_iter().map(Option::unwrap).collect()
+}
+
 /// One-to-all scatter (linear): root distributes `values[i]` to member i.
 pub fn scatter_linear(g: &Group, root: usize, values: Option<Vec<Msg>>) -> Msg {
-    let p = g.size();
     let me = g.index();
     let tag = g.next_tag();
     if me == root {
-        let values = values.expect("scatter root must supply values");
-        assert_eq!(values.len(), p);
-        let mut opts: Vec<Option<Msg>> = values.into_iter().map(Some).collect();
-        let mine = opts[root].take().unwrap();
-        for (i, slot) in opts.into_iter().enumerate() {
-            if i != root {
-                g.send_msg_to(i, tag, slot.unwrap());
-            }
-        }
-        mine
+        scatter_linear_root_with_tag(g, root, values, tag)
     } else {
         g.recv_msg_from(root, tag)
     }
+}
+
+/// The root side of [`scatter_linear`] under a caller-allocated tag
+/// (shared with the start phase of [`scatter_linear_start`]).
+fn scatter_linear_root_with_tag(g: &Group, root: usize, values: Option<Vec<Msg>>, tag: u64) -> Msg {
+    let p = g.size();
+    let values = values.expect("scatter root must supply values");
+    assert_eq!(values.len(), p);
+    let mut opts: Vec<Option<Msg>> = values.into_iter().map(Some).collect();
+    let mine = opts[root].take().unwrap();
+    for (i, slot) in opts.into_iter().enumerate() {
+        if i != root {
+            g.send_msg_to(i, tag, slot.unwrap());
+        }
+    }
+    mine
 }
 
 // ------------------------------------------------------------------- scan
@@ -322,4 +357,442 @@ pub fn scan_hillis_steele(g: &Group, value: Msg, op: ReduceFn) -> Msg {
         dist <<= 1;
     }
     acc
+}
+
+// ======================================================== *_start forms
+//
+// Split-phase variants of the algorithms above, backing the
+// `Collectives::*_start` methods (see [`crate::comm::nb`]): the start
+// phase allocates **all** of the operation's tags (so SPMD members stay
+// tag-aligned no matter how start and wait interleave with other group
+// traffic) and posts every send that depends on no receive; the rest —
+// receives, tree forwards, folds — runs at `wait()` on the handle's
+// forked comm timeline.  Message-for-message these execute the exact
+// rounds of their blocking counterparts, so results are bit-identical;
+// only the clock accounting differs (max instead of sum across the
+// overlap region).
+
+/// Non-blocking [`shift_cyclic`]: the outgoing value is posted at start;
+/// `wait()` completes the duplex round at `max(send, recv)` cost.
+pub fn shift_cyclic_start<'f>(g: &Group, delta: isize, value: Msg) -> GroupOp<'f> {
+    let p = g.size() as isize;
+    let me = g.index() as isize;
+    let d = delta.rem_euclid(p);
+    let t0 = g.ctx().now();
+    if d == 0 {
+        return GroupOp::ready(g, t0, t0, OpOutput::One(value));
+    }
+    let tag = g.next_tag();
+    let dst = ((me + d) % p) as usize;
+    let src = ((me - d).rem_euclid(p)) as usize;
+    let sent_bytes = value.bytes();
+    g.post_msg_to(dst, tag, value);
+    let probe = Some((g.world_rank(src), tag));
+    GroupOp::deferred(g, t0, t0, probe, move |g: &Group| {
+        OpOutput::One(g.recv_duplex_from(src, tag, sent_bytes))
+    })
+}
+
+/// Non-blocking [`bcast_binomial`]: the root's whole fan-out happens at
+/// start (on the comm timeline); interior/leaf nodes defer the
+/// parent-receive + forwards to `wait()`.
+pub fn bcast_binomial_start<'f>(g: &Group, root: usize, value: Option<Msg>) -> GroupOp<'f> {
+    let p = g.size();
+    let me = g.index();
+    let tag = g.next_tag();
+    let rel = (me + p - root) % p;
+    let t0 = g.ctx().now();
+    if rel == 0 {
+        let v = value.expect("bcast root must supply a value");
+        let ((), end) = g.ctx().with_clock(t0, || {
+            let mut mask = p.next_power_of_two() >> 1;
+            while mask > 0 {
+                if rel + mask < p {
+                    g.send_msg_to((me + mask) % p, tag, v.dup());
+                }
+                mask >>= 1;
+            }
+        });
+        return GroupOp::ready(g, t0, end, OpOutput::One(v));
+    }
+    // parent = strip the lowest set bit of my root-relative rank
+    let lsb = rel & rel.wrapping_neg();
+    let parent = (me + p - lsb) % p;
+    let probe = Some((g.world_rank(parent), tag));
+    GroupOp::deferred(g, t0, t0, probe, move |g: &Group| {
+        let v = g.recv_msg_from(parent, tag);
+        let mut mask = lsb >> 1;
+        while mask > 0 {
+            if rel + mask < p {
+                g.send_msg_to((me + mask) % p, tag, v.dup());
+            }
+            mask >>= 1;
+        }
+        OpOutput::One(v)
+    })
+}
+
+/// Non-blocking [`bcast_linear`].
+pub fn bcast_linear_start<'f>(g: &Group, root: usize, value: Option<Msg>) -> GroupOp<'f> {
+    let p = g.size();
+    let me = g.index();
+    let tag = g.next_tag();
+    let t0 = g.ctx().now();
+    if me == root {
+        let v = value.expect("bcast root must supply a value");
+        let ((), end) = g.ctx().with_clock(t0, || {
+            for i in 0..p {
+                if i != root {
+                    g.send_msg_to(i, tag, v.dup());
+                }
+            }
+        });
+        return GroupOp::ready(g, t0, end, OpOutput::One(v));
+    }
+    let probe = Some((g.world_rank(root), tag));
+    GroupOp::deferred(g, t0, t0, probe, move |g: &Group| {
+        OpOutput::One(g.recv_msg_from(root, tag))
+    })
+}
+
+/// Non-blocking [`reduce_binomial`]: a member whose role is pure
+/// contribution (no receives before its send — every leaf) completes at
+/// start; interior nodes and the root defer their receive/fold rounds.
+pub fn reduce_binomial_start<'f>(
+    g: &Group,
+    root: usize,
+    value: Msg,
+    op: OwnedReduceFn<'f>,
+) -> GroupOp<'f> {
+    let p = g.size();
+    let me = g.index();
+    let tag = g.next_tag();
+    let rel = (me + p - root) % p;
+    let t0 = g.ctx().now();
+    // Simulate the blocking round structure: receives (in round order)
+    // until the first set bit of `rel` says "send and retire".
+    let mut recvs: Vec<usize> = Vec::new();
+    let mut send_to: Option<usize> = None;
+    let mut mask = 1usize;
+    while mask < p {
+        if rel & mask == 0 {
+            let src_rel = rel | mask;
+            if src_rel < p {
+                recvs.push((me + mask) % p);
+            }
+        } else {
+            send_to = Some((me + p - mask) % p);
+            break;
+        }
+        mask <<= 1;
+    }
+    if recvs.is_empty() {
+        return match send_to {
+            Some(dst) => {
+                let ((), end) = g.ctx().with_clock(t0, || g.send_msg_to(dst, tag, value));
+                GroupOp::ready(g, t0, end, OpOutput::MaybeOne(None))
+            }
+            None => GroupOp::ready(g, t0, t0, OpOutput::MaybeOne(Some(value))), // p == 1
+        };
+    }
+    let probe = Some((g.world_rank(recvs[0]), tag));
+    GroupOp::deferred(g, t0, t0, probe, move |g: &Group| {
+        let mut acc = value;
+        for src in recvs {
+            let other = g.recv_msg_from(src, tag);
+            // lower relative rank on the left keeps fold order
+            acc = op(acc, other);
+        }
+        match send_to {
+            Some(dst) => {
+                g.send_msg_to(dst, tag, acc);
+                OpOutput::MaybeOne(None)
+            }
+            None => OpOutput::MaybeOne(Some(acc)),
+        }
+    })
+}
+
+/// Non-blocking [`reduce_linear`]: non-roots contribute at start; the
+/// root defers its p−1 serialized receives + in-order fold.
+pub fn reduce_linear_start<'f>(
+    g: &Group,
+    root: usize,
+    value: Msg,
+    op: OwnedReduceFn<'f>,
+) -> GroupOp<'f> {
+    let p = g.size();
+    let me = g.index();
+    let tag = g.next_tag();
+    let t0 = g.ctx().now();
+    if me != root {
+        let ((), end) = g.ctx().with_clock(t0, || g.send_msg_to(root, tag, value));
+        return GroupOp::ready(g, t0, end, OpOutput::MaybeOne(None));
+    }
+    if p == 1 {
+        return GroupOp::ready(g, t0, t0, OpOutput::MaybeOne(Some(value)));
+    }
+    let first_src = if root == 0 { 1 } else { 0 };
+    let probe = Some((g.world_rank(first_src), tag));
+    GroupOp::deferred(g, t0, t0, probe, move |g: &Group| {
+        OpOutput::MaybeOne(Some(reduce_linear_root_with_tag(g, root, value, &*op, tag)))
+    })
+}
+
+/// Non-blocking [`allgather_ring`]: the first ring round's send (my own
+/// value) is posted at start; `wait()` completes that round and runs the
+/// remaining p−2.
+pub fn allgather_ring_start<'f>(g: &Group, value: Msg) -> GroupOp<'f> {
+    let p = g.size();
+    let me = g.index();
+    let t0 = g.ctx().now();
+    if p == 1 {
+        return GroupOp::ready(g, t0, t0, OpOutput::Many(vec![value]));
+    }
+    let tags: Vec<u64> = (0..p - 1).map(|_| g.next_tag()).collect();
+    let right = (me + 1) % p;
+    let left = (me + p - 1) % p;
+    let sent_bytes = value.bytes();
+    g.post_msg_to(right, tags[0], value.dup());
+    let probe = Some((g.world_rank(left), tags[0]));
+    GroupOp::deferred(g, t0, t0, probe, move |g: &Group| {
+        let mut out: Vec<Option<Msg>> = (0..p).map(|_| None).collect();
+        out[me] = Some(value);
+        let mut cur = g.recv_duplex_from(left, tags[0], sent_bytes);
+        out[(me + p - 1) % p] = Some(cur.dup());
+        for (r, tag) in tags.iter().enumerate().skip(1) {
+            cur = g.send_recv_msg_with(right, left, *tag, cur);
+            out[(me + p - 1 - r) % p] = Some(cur.dup());
+        }
+        OpOutput::Many(out.into_iter().map(Option::unwrap).collect())
+    })
+}
+
+/// Non-blocking [`allgather_recursive_doubling`] (power-of-two groups):
+/// the round-0 bundle (my own value) is posted at start.
+pub fn allgather_recursive_doubling_start<'f>(g: &Group, value: Msg) -> GroupOp<'f> {
+    let p = g.size();
+    let me = g.index();
+    debug_assert!(p.is_power_of_two());
+    let t0 = g.ctx().now();
+    if p == 1 {
+        return GroupOp::ready(g, t0, t0, OpOutput::Many(vec![value]));
+    }
+    let rounds = p.trailing_zeros() as usize;
+    let tags: Vec<u64> = (0..rounds).map(|_| g.next_tag()).collect();
+    let partner0 = me ^ 1;
+    let bundle0 = Msg::new(vec![(me as u64, value.dup())]);
+    let sent_bytes = bundle0.bytes();
+    g.post_msg_to(partner0, tags[0], bundle0);
+    let probe = Some((g.world_rank(partner0), tags[0]));
+    GroupOp::deferred(g, t0, t0, probe, move |g: &Group| {
+        let mut have: Vec<(usize, Msg)> = vec![(me, value)];
+        let theirs = g
+            .recv_duplex_from(partner0, tags[0], sent_bytes)
+            .downcast::<Vec<(u64, Msg)>>();
+        have.extend(theirs.into_iter().map(|(i, v)| (i as usize, v)));
+        let mut mask = 2usize;
+        for tag in tags.iter().skip(1) {
+            let partner = me ^ mask;
+            let mine: Vec<(u64, Msg)> =
+                have.iter().map(|(i, v)| (*i as u64, v.dup())).collect();
+            let theirs = g
+                .send_recv_msg_with(partner, partner, *tag, Msg::new(mine))
+                .downcast::<Vec<(u64, Msg)>>();
+            have.extend(theirs.into_iter().map(|(i, v)| (i as usize, v)));
+            mask <<= 1;
+        }
+        let mut out: Vec<Option<Msg>> = (0..p).map(|_| None).collect();
+        for (i, v) in have {
+            out[i] = Some(v);
+        }
+        OpOutput::Many(out.into_iter().map(Option::unwrap).collect())
+    })
+}
+
+/// Non-blocking [`alltoall_pairwise`]: round 1's personalized item is
+/// posted at start; the remaining p−2 exchange rounds run at `wait()`.
+pub fn alltoall_pairwise_start<'f>(g: &Group, items: Vec<Msg>) -> GroupOp<'f> {
+    let p = g.size();
+    let me = g.index();
+    assert_eq!(items.len(), p, "alltoall needs one item per member");
+    let t0 = g.ctx().now();
+    let mut items: Vec<Option<Msg>> = items.into_iter().map(Some).collect();
+    let mut out: Vec<Option<Msg>> = (0..p).map(|_| None).collect();
+    out[me] = items[me].take();
+    if p == 1 {
+        return GroupOp::ready(
+            g,
+            t0,
+            t0,
+            OpOutput::Many(out.into_iter().map(Option::unwrap).collect()),
+        );
+    }
+    let tags: Vec<u64> = (0..p - 1).map(|_| g.next_tag()).collect();
+    let dst1 = (me + 1) % p;
+    let src1 = (me + p - 1) % p;
+    let first = items[dst1].take().expect("item already sent");
+    let sent_bytes = first.bytes();
+    g.post_msg_to(dst1, tags[0], first);
+    let probe = Some((g.world_rank(src1), tags[0]));
+    GroupOp::deferred(g, t0, t0, probe, move |g: &Group| {
+        out[src1] = Some(g.recv_duplex_from(src1, tags[0], sent_bytes));
+        for r in 2..p {
+            let dst = (me + r) % p;
+            let src = (me + p - r) % p;
+            let sent = items[dst].take().expect("item already sent");
+            out[src] = Some(g.send_recv_msg_with(dst, src, tags[r - 1], sent));
+        }
+        OpOutput::Many(out.into_iter().map(Option::unwrap).collect())
+    })
+}
+
+/// Non-blocking [`barrier_dissemination`]: round 0's empty message is
+/// posted at start.
+pub fn barrier_dissemination_start<'f>(g: &Group) -> GroupOp<'f> {
+    let p = g.size();
+    let me = g.index();
+    let t0 = g.ctx().now();
+    if p == 1 {
+        return GroupOp::ready(g, t0, t0, OpOutput::Unit);
+    }
+    let rounds = p.next_power_of_two().trailing_zeros() as usize;
+    let tags: Vec<u64> = (0..rounds).map(|_| g.next_tag()).collect();
+    let token = Msg::new(());
+    let sent_bytes = token.bytes();
+    g.post_msg_to((me + 1) % p, tags[0], token);
+    let probe = Some((g.world_rank((me + p - 1) % p), tags[0]));
+    GroupOp::deferred(g, t0, t0, probe, move |g: &Group| {
+        let _ = g.recv_duplex_from((me + p - 1) % p, tags[0], sent_bytes);
+        let mut round = 2usize;
+        for tag in tags.iter().skip(1) {
+            let _ = g.send_recv_msg_with(
+                (me + round) % p,
+                (me + p - round) % p,
+                *tag,
+                Msg::new(()),
+            );
+            round <<= 1;
+        }
+        OpOutput::Unit
+    })
+}
+
+/// Non-blocking [`gather_linear`]: non-roots contribute at start; the
+/// root defers its receives.
+pub fn gather_linear_start<'f>(g: &Group, root: usize, value: Msg) -> GroupOp<'f> {
+    let p = g.size();
+    let me = g.index();
+    let tag = g.next_tag();
+    let t0 = g.ctx().now();
+    if me != root {
+        let ((), end) = g.ctx().with_clock(t0, || g.send_msg_to(root, tag, value));
+        return GroupOp::ready(g, t0, end, OpOutput::MaybeMany(None));
+    }
+    if p == 1 {
+        return GroupOp::ready(g, t0, t0, OpOutput::MaybeMany(Some(vec![value])));
+    }
+    let first_src = if root == 0 { 1 } else { 0 };
+    let probe = Some((g.world_rank(first_src), tag));
+    GroupOp::deferred(g, t0, t0, probe, move |g: &Group| {
+        OpOutput::MaybeMany(Some(gather_linear_root_with_tag(g, root, value, tag)))
+    })
+}
+
+/// Non-blocking [`scatter_linear`]: the root's whole distribution
+/// happens at start; non-roots defer their receive.
+pub fn scatter_linear_start<'f>(g: &Group, root: usize, values: Option<Vec<Msg>>) -> GroupOp<'f> {
+    let me = g.index();
+    let tag = g.next_tag();
+    let t0 = g.ctx().now();
+    if me == root {
+        let (mine, end) = g
+            .ctx()
+            .with_clock(t0, || scatter_linear_root_with_tag(g, root, values, tag));
+        return GroupOp::ready(g, t0, end, OpOutput::One(mine));
+    }
+    let probe = Some((g.world_rank(root), tag));
+    GroupOp::deferred(g, t0, t0, probe, move |g: &Group| {
+        OpOutput::One(g.recv_msg_from(root, tag))
+    })
+}
+
+/// Non-blocking [`scan_hillis_steele`]: round 0's send (my own value) is
+/// posted at start; later rounds depend on folds and run at `wait()`.
+pub fn scan_hillis_steele_start<'f>(g: &Group, value: Msg, op: OwnedReduceFn<'f>) -> GroupOp<'f> {
+    let p = g.size();
+    let me = g.index();
+    let t0 = g.ctx().now();
+    if p == 1 {
+        return GroupOp::ready(g, t0, t0, OpOutput::One(value));
+    }
+    let rounds = p.next_power_of_two().trailing_zeros() as usize;
+    let tags: Vec<u64> = (0..rounds).map(|_| g.next_tag()).collect();
+    let mut comm_clock = t0;
+    if me + 1 < p {
+        let ((), end) = g.ctx().with_clock(t0, || g.send_msg_to(me + 1, tags[0], value.dup()));
+        comm_clock = end;
+    }
+    let probe = (me >= 1).then(|| (g.world_rank(me - 1), tags[0]));
+    GroupOp::deferred(g, t0, comm_clock, probe, move |g: &Group| {
+        let mut acc = value;
+        let mut dist = 1usize;
+        for (r, tag) in tags.iter().enumerate() {
+            if r > 0 && me + dist < p {
+                g.send_msg_to(me + dist, *tag, acc.dup());
+            }
+            if me >= dist {
+                let prefix = g.recv_msg_from(me - dist, *tag);
+                acc = op(prefix, acc);
+            }
+            dist <<= 1;
+        }
+        OpOutput::One(acc)
+    })
+}
+
+/// Non-blocking allreduce for the standard strategy set: the split
+/// reduce-to-0's start phase runs now (leaf contributions hit the wire
+/// immediately) and the follow-up broadcast's tag is allocated now, so
+/// members stay tag-aligned; the reduce remainder and the bcast rounds
+/// run at `wait()` on the handle's comm timeline.
+pub fn allreduce_std_start<'f>(
+    g: &Group,
+    value: Msg,
+    op: OwnedReduceFn<'f>,
+    reduce: ReduceAlgo,
+    bcast: BcastAlgo,
+) -> GroupOp<'f> {
+    let inner = match reduce {
+        ReduceAlgo::Binomial => reduce_binomial_start(g, 0, value, op),
+        ReduceAlgo::Linear => reduce_linear_start(g, 0, value, op),
+    };
+    let bcast_tag = g.next_tag();
+    let (t0, comm_clock) = (inner.fork_t0(), inner.fork_comm_clock());
+    if g.size() == 1 {
+        // single member: both stages are no-ops, the value is already in
+        let r = inner.finish_inline(g).maybe_one().expect("p=1 reduce yields a value");
+        return GroupOp::ready(g, t0, comm_clock, OpOutput::One(r));
+    }
+    // A pure contributor's reduce completed at start (probe None); its
+    // first outstanding receive is the follow-up bcast from its parent.
+    let probe = inner.probe_target().or_else(|| {
+        let me = g.index();
+        let parent = match bcast {
+            BcastAlgo::Binomial => {
+                let lsb = me & me.wrapping_neg();
+                (me + g.size() - lsb) % g.size()
+            }
+            BcastAlgo::Linear => 0,
+        };
+        Some((g.world_rank(parent), bcast_tag))
+    });
+    GroupOp::deferred(g, t0, comm_clock, probe, move |g: &Group| {
+        let r = inner.finish_inline(g).maybe_one();
+        let v = match bcast {
+            BcastAlgo::Binomial => bcast_binomial_with_tag(g, 0, r, bcast_tag),
+            BcastAlgo::Linear => bcast_linear_with_tag(g, 0, r, bcast_tag),
+        };
+        OpOutput::One(v)
+    })
 }

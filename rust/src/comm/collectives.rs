@@ -32,8 +32,9 @@ use crate::comm::algorithms as algo;
 use crate::comm::backend::{AllGatherAlgo, BcastAlgo, ReduceAlgo};
 use crate::comm::group::Group;
 use crate::comm::message::Msg;
+use crate::comm::nb::{GroupOp, OpOutput};
 
-pub use crate::comm::algorithms::ReduceFn;
+pub use crate::comm::algorithms::{OwnedReduceFn, ReduceFn};
 
 /// Collective operations over a [`Group`], type-erased so backends are
 /// swappable at runtime (`Arc<dyn Collectives>`).
@@ -82,6 +83,109 @@ pub trait Collectives: Send + Sync {
     fn allreduce(&self, g: &Group, value: Msg, op: ReduceFn<'_>) -> Msg {
         let r = self.reduce(g, 0, value, op);
         self.bcast(g, 0, r)
+    }
+
+    // ------------------------------------------ non-blocking (*_start)
+    //
+    // Every collective has a handle-based form: `*_start` returns a
+    // [`GroupOp`] whose `wait()` yields the same result as the blocking
+    // call, with the operation's message rounds running on a forked comm
+    // timeline so the caller's clock advances by `max(T_comm, T_comp)`
+    // across the start→wait window (see [`crate::comm::nb`]).
+    //
+    // The defaults defer the *whole* blocking operation to `wait()` —
+    // correct results and overlap-aware clocks for any custom
+    // `Collectives` for free.  Implementations may override with
+    // genuinely split phases (post dependency-free sends at start, give
+    // `test()` a probe target), as [`StandardCollectives`] does via the
+    // `*_start` functions in [`crate::comm::algorithms`].  Like their
+    // blocking counterparts, `*_start`/`wait()` must be called by every
+    // member in SPMD order.
+    //
+    // Dispatch note: a handle cannot borrow `self` (it outlives the
+    // call), so the deferred default closures re-resolve the strategy
+    // through the **group's active backend** at `wait()` — for the
+    // installed strategy (the only way `Group` methods ever reach this
+    // trait) that is `self`.  A strategy object used standalone, apart
+    // from the runtime's installed backend, must override `*_start` if
+    // it needs its own algorithms to run there.
+
+    /// Non-blocking [`Collectives::bcast`].
+    fn bcast_start<'f>(&self, g: &Group, root: usize, value: Option<Msg>) -> GroupOp<'f> {
+        GroupOp::run_deferred(g, move |g: &Group| {
+            OpOutput::One(g.ctx().collectives().bcast(g, root, value))
+        })
+    }
+
+    /// Non-blocking [`Collectives::reduce`].
+    fn reduce_start<'f>(
+        &self,
+        g: &Group,
+        root: usize,
+        value: Msg,
+        op: OwnedReduceFn<'f>,
+    ) -> GroupOp<'f> {
+        GroupOp::run_deferred(g, move |g: &Group| {
+            OpOutput::MaybeOne(g.ctx().collectives().reduce(g, root, value, &*op))
+        })
+    }
+
+    /// Non-blocking [`Collectives::allgather`].
+    fn allgather_start<'f>(&self, g: &Group, value: Msg) -> GroupOp<'f> {
+        GroupOp::run_deferred(g, move |g: &Group| {
+            OpOutput::Many(g.ctx().collectives().allgather(g, value))
+        })
+    }
+
+    /// Non-blocking [`Collectives::alltoall`].
+    fn alltoall_start<'f>(&self, g: &Group, items: Vec<Msg>) -> GroupOp<'f> {
+        GroupOp::run_deferred(g, move |g: &Group| {
+            OpOutput::Many(g.ctx().collectives().alltoall(g, items))
+        })
+    }
+
+    /// Non-blocking [`Collectives::shift`].
+    fn shift_start<'f>(&self, g: &Group, delta: isize, value: Msg) -> GroupOp<'f> {
+        GroupOp::run_deferred(g, move |g: &Group| {
+            OpOutput::One(g.ctx().collectives().shift(g, delta, value))
+        })
+    }
+
+    /// Non-blocking [`Collectives::barrier`].
+    fn barrier_start<'f>(&self, g: &Group) -> GroupOp<'f> {
+        GroupOp::run_deferred(g, move |g: &Group| {
+            g.ctx().collectives().barrier(g);
+            OpOutput::Unit
+        })
+    }
+
+    /// Non-blocking [`Collectives::gather`].
+    fn gather_start<'f>(&self, g: &Group, root: usize, value: Msg) -> GroupOp<'f> {
+        GroupOp::run_deferred(g, move |g: &Group| {
+            OpOutput::MaybeMany(g.ctx().collectives().gather(g, root, value))
+        })
+    }
+
+    /// Non-blocking [`Collectives::scatter`].
+    fn scatter_start<'f>(&self, g: &Group, root: usize, values: Option<Vec<Msg>>) -> GroupOp<'f> {
+        GroupOp::run_deferred(g, move |g: &Group| {
+            OpOutput::One(g.ctx().collectives().scatter(g, root, values))
+        })
+    }
+
+    /// Non-blocking [`Collectives::scan`].
+    fn scan_start<'f>(&self, g: &Group, value: Msg, op: OwnedReduceFn<'f>) -> GroupOp<'f> {
+        GroupOp::run_deferred(g, move |g: &Group| {
+            OpOutput::One(g.ctx().collectives().scan(g, value, &*op))
+        })
+    }
+
+    /// Non-blocking [`Collectives::allreduce`] (reduce then bcast, both
+    /// deferred onto the comm timeline).
+    fn allreduce_start<'f>(&self, g: &Group, value: Msg, op: OwnedReduceFn<'f>) -> GroupOp<'f> {
+        GroupOp::run_deferred(g, move |g: &Group| {
+            OpOutput::One(g.ctx().collectives().allreduce(g, value, &*op))
+        })
     }
 }
 
@@ -160,6 +264,71 @@ impl Collectives for StandardCollectives {
 
     fn scan(&self, g: &Group, value: Msg, op: ReduceFn<'_>) -> Msg {
         algo::scan_hillis_steele(g, value, op)
+    }
+
+    // Split-phase overrides: dependency-free sends posted at start,
+    // `test()` given a probe target — same rounds, same results, overlap
+    // on the clock.  Algorithm selection mirrors the blocking methods.
+
+    fn bcast_start<'f>(&self, g: &Group, root: usize, value: Option<Msg>) -> GroupOp<'f> {
+        match self.bcast {
+            BcastAlgo::Binomial => algo::bcast_binomial_start(g, root, value),
+            BcastAlgo::Linear => algo::bcast_linear_start(g, root, value),
+        }
+    }
+
+    fn reduce_start<'f>(
+        &self,
+        g: &Group,
+        root: usize,
+        value: Msg,
+        op: OwnedReduceFn<'f>,
+    ) -> GroupOp<'f> {
+        match self.reduce {
+            ReduceAlgo::Binomial => algo::reduce_binomial_start(g, root, value, op),
+            ReduceAlgo::Linear => algo::reduce_linear_start(g, root, value, op),
+        }
+    }
+
+    fn allgather_start<'f>(&self, g: &Group, value: Msg) -> GroupOp<'f> {
+        match self.allgather {
+            AllGatherAlgo::Ring => algo::allgather_ring_start(g, value),
+            AllGatherAlgo::RecursiveDoubling => {
+                if g.size().is_power_of_two() {
+                    algo::allgather_recursive_doubling_start(g, value)
+                } else {
+                    algo::allgather_ring_start(g, value)
+                }
+            }
+        }
+    }
+
+    fn alltoall_start<'f>(&self, g: &Group, items: Vec<Msg>) -> GroupOp<'f> {
+        algo::alltoall_pairwise_start(g, items)
+    }
+
+    fn shift_start<'f>(&self, g: &Group, delta: isize, value: Msg) -> GroupOp<'f> {
+        algo::shift_cyclic_start(g, delta, value)
+    }
+
+    fn barrier_start<'f>(&self, g: &Group) -> GroupOp<'f> {
+        algo::barrier_dissemination_start(g)
+    }
+
+    fn gather_start<'f>(&self, g: &Group, root: usize, value: Msg) -> GroupOp<'f> {
+        algo::gather_linear_start(g, root, value)
+    }
+
+    fn scatter_start<'f>(&self, g: &Group, root: usize, values: Option<Vec<Msg>>) -> GroupOp<'f> {
+        algo::scatter_linear_start(g, root, values)
+    }
+
+    fn scan_start<'f>(&self, g: &Group, value: Msg, op: OwnedReduceFn<'f>) -> GroupOp<'f> {
+        algo::scan_hillis_steele_start(g, value, op)
+    }
+
+    fn allreduce_start<'f>(&self, g: &Group, value: Msg, op: OwnedReduceFn<'f>) -> GroupOp<'f> {
+        algo::allreduce_std_start(g, value, op, self.reduce, self.bcast)
     }
 }
 

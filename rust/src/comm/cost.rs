@@ -9,6 +9,13 @@
 //! These parameters are per-machine (interconnect) and per-backend
 //! (software stack overhead multipliers) — see [`crate::comm::backend`]
 //! and [`crate::config`].
+//!
+//! **Overlap rule.**  Blocking operations advance a rank's clock
+//! serially.  A non-blocking group operation ([`crate::comm::nb`]) runs
+//! its message rounds on a *forked* clock instead; the handle's `wait()`
+//! merges `clock = max(main, fork)`, so across an overlap region a rank
+//! pays `max(T_comm, T_comp)` rather than the sum — the cost-model
+//! expression of communication–computation overlap.
 
 /// Cost parameters of one (machine, backend) combination.
 #[derive(Clone, Copy, Debug, PartialEq)]

@@ -69,6 +69,14 @@ impl Fabric {
     pub fn close(&self, me: usize) {
         let _ = self.boxes[me].close();
     }
+
+    /// Poison every mailbox (a rank died): blocked receives fail
+    /// promptly with `reason` — see [`Mailbox::fail`].
+    pub fn fail(&self, reason: &str) {
+        for b in &self.boxes {
+            b.fail(reason);
+        }
+    }
 }
 
 impl Transport for Fabric {
@@ -98,6 +106,10 @@ impl Transport for Fabric {
 
     fn close(&self, me: usize) {
         Fabric::close(self, me);
+    }
+
+    fn fail(&self, reason: &str) {
+        Fabric::fail(self, reason);
     }
 }
 
@@ -225,6 +237,29 @@ mod tests {
         f.close(2);
         f.post(1, env(0, 1, 5));
         assert_eq!(f.take(1, 0, 1).payload.downcast::<i64>(), 5);
+    }
+
+    #[test]
+    fn fail_wakes_blocked_take_promptly_with_diagnostics() {
+        let f = Fabric::new(2);
+        let f2 = f.clone();
+        let t0 = std::time::Instant::now();
+        let h = thread::spawn(move || {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _ = f2.take(0, 1, 0x5C);
+            }))
+        });
+        thread::sleep(Duration::from_millis(20));
+        f.fail("rank 1 died mid-run: boom");
+        let err = h.join().unwrap().unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(5), "poison was not prompt");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string panic>".into());
+        assert!(msg.contains("rank 1 died mid-run: boom"), "{msg}");
+        assert!(msg.contains("src=1"), "{msg}");
+        assert!(msg.contains("0x5c"), "{msg}");
     }
 
     #[test]

@@ -19,7 +19,9 @@
 //! the algorithm executed (tree vs linear vs ring …) is whatever the
 //! backend selected, with zero changes to calling code.
 
+use crate::comm::algorithms::OwnedReduceFn;
 use crate::comm::message::Msg;
+use crate::comm::nb::{BarrierOp, GatherOp, Op, ReduceOp, VecOp};
 use crate::comm::wire::WireData;
 use crate::spmd::Ctx;
 
@@ -100,6 +102,12 @@ impl<'a> Group<'a> {
         self.id.wrapping_add(seq)
     }
 
+    /// This group instance's tag-namespace base — the identity a pending
+    /// operation is checked against at `wait()`.
+    pub(crate) fn id(&self) -> u64 {
+        self.id
+    }
+
     // ------------------------------------------------ point-to-point (T)
 
     /// Send to group member `dst` (group rank) under `tag`.
@@ -132,6 +140,22 @@ impl<'a> Group<'a> {
     /// member `src` (one round of a ring/pairwise collective).
     pub fn send_recv_msg_with(&self, dst: usize, src: usize, tag: u64, msg: Msg) -> Msg {
         self.ctx.send_recv_msg(self.ranks[dst], self.ranks[src], tag, msg)
+    }
+
+    /// Post half of a split duplex round (the start phase of a
+    /// non-blocking exchange): the message is stamped ready at the
+    /// current clock and **no** clock advances — the round is paid once,
+    /// by [`Group::recv_duplex_from`] at completion.
+    pub fn post_msg_to(&self, dst: usize, tag: u64, msg: Msg) {
+        self.ctx.post_only(self.ranks[dst], tag, msg);
+    }
+
+    /// Completing receive of a split duplex round started with
+    /// [`Group::post_msg_to`]: pays `max(send, recv)` once, starting at
+    /// `max(own_clock, sender_ready)` — exactly one
+    /// [`Group::send_recv_msg_with`] round, split in two.
+    pub fn recv_duplex_from(&self, src: usize, tag: u64, sent_bytes: usize) -> Msg {
+        self.ctx.recv_duplex(self.ranks[src], tag, sent_bytes)
     }
 
     // ------------------------------------------------------- collectives
@@ -245,6 +269,122 @@ impl<'a> Group<'a> {
             .collectives()
             .scan(self, Msg::cloneable(value), &erased)
             .downcast::<T>()
+    }
+
+    // ---------------------------------------- non-blocking collectives
+    //
+    // Handle-based `*_start` forms of every collective above: the
+    // operation's dependency-free sends are posted immediately, the rest
+    // runs at the handle's `wait()` on a forked comm timeline, and the
+    // rank's clock advances by `max(T_comm, T_comp)` across the
+    // start→wait window (see [`crate::comm::nb`]).  SPMD contract is
+    // unchanged: every member must call `*_start` and then `wait()`, in
+    // the same order.
+
+    /// Non-blocking [`Group::bcast`].
+    pub fn bcast_start<T: WireData + Clone>(&self, root: usize, value: Option<T>) -> Op<'_, T> {
+        self.ctx.metrics.on_collective();
+        let raw = self
+            .ctx
+            .collectives()
+            .bcast_start(self, root, value.map(Msg::cloneable));
+        Op::new(self, raw)
+    }
+
+    /// Non-blocking [`Group::reduce`].
+    pub fn reduce_start<'g, T: WireData>(
+        &'g self,
+        root: usize,
+        value: T,
+        op: impl Fn(T, T) -> T + 'g,
+    ) -> ReduceOp<'g, T> {
+        self.ctx.metrics.on_collective();
+        let erased: OwnedReduceFn<'g> =
+            Box::new(move |a: Msg, b: Msg| Msg::new(op(a.downcast::<T>(), b.downcast::<T>())));
+        let raw = self
+            .ctx
+            .collectives()
+            .reduce_start(self, root, Msg::new(value), erased);
+        ReduceOp::new(self, raw)
+    }
+
+    /// Non-blocking [`Group::allreduce`].
+    pub fn allreduce_start<'g, T: WireData + Clone>(
+        &'g self,
+        value: T,
+        op: impl Fn(T, T) -> T + 'g,
+    ) -> Op<'g, T> {
+        self.ctx.metrics.on_collective();
+        let erased: OwnedReduceFn<'g> = Box::new(move |a: Msg, b: Msg| {
+            Msg::cloneable(op(a.downcast::<T>(), b.downcast::<T>()))
+        });
+        let raw = self
+            .ctx
+            .collectives()
+            .allreduce_start(self, Msg::cloneable(value), erased);
+        Op::new(self, raw)
+    }
+
+    /// Non-blocking [`Group::allgather`].
+    pub fn allgather_start<T: WireData + Clone>(&self, value: T) -> VecOp<'_, T> {
+        self.ctx.metrics.on_collective();
+        let raw = self.ctx.collectives().allgather_start(self, Msg::cloneable(value));
+        VecOp::new(self, raw)
+    }
+
+    /// Non-blocking [`Group::alltoall`].
+    pub fn alltoall_start<T: WireData>(&self, items: Vec<T>) -> VecOp<'_, T> {
+        self.ctx.metrics.on_collective();
+        let items = items.into_iter().map(Msg::new).collect();
+        let raw = self.ctx.collectives().alltoall_start(self, items);
+        VecOp::new(self, raw)
+    }
+
+    /// Non-blocking [`Group::shift`] — the prefetch primitive behind the
+    /// pipelined Cannon/DNS variants.
+    pub fn shift_start<T: WireData>(&self, delta: isize, value: T) -> Op<'_, T> {
+        self.ctx.metrics.on_collective();
+        let raw = self.ctx.collectives().shift_start(self, delta, Msg::new(value));
+        Op::new(self, raw)
+    }
+
+    /// Non-blocking [`Group::barrier`].
+    pub fn barrier_start(&self) -> BarrierOp<'_> {
+        self.ctx.metrics.on_collective();
+        let raw = self.ctx.collectives().barrier_start(self);
+        BarrierOp::new(self, raw)
+    }
+
+    /// Non-blocking [`Group::gather`].
+    pub fn gather_start<T: WireData>(&self, root: usize, value: T) -> GatherOp<'_, T> {
+        self.ctx.metrics.on_collective();
+        let raw = self.ctx.collectives().gather_start(self, root, Msg::new(value));
+        GatherOp::new(self, raw)
+    }
+
+    /// Non-blocking [`Group::scatter`].
+    pub fn scatter_start<T: WireData>(&self, root: usize, values: Option<Vec<T>>) -> Op<'_, T> {
+        self.ctx.metrics.on_collective();
+        let values = values.map(|v| v.into_iter().map(Msg::new).collect());
+        let raw = self.ctx.collectives().scatter_start(self, root, values);
+        Op::new(self, raw)
+    }
+
+    /// Non-blocking [`Group::scan`].
+    pub fn scan_start<'g, T: WireData + Clone>(
+        &'g self,
+        value: T,
+        op: impl Fn(T, T) -> T + 'g,
+    ) -> Op<'g, T> {
+        self.ctx.metrics.on_collective();
+        let erased: OwnedReduceFn<'g> = Box::new(move |a: Msg, b: Msg| {
+            Msg::cloneable(op(a.downcast::<T>(), b.downcast::<T>()))
+        });
+        let raw = self
+            .ctx
+            .collectives()
+            .scan_start(self, Msg::cloneable(value), erased);
+        Op::new(self, raw)
     }
 }
 

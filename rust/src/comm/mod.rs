@@ -23,9 +23,15 @@
 //!   cost shaping), the built-in [`backend::BackendProfile`]s modeling
 //!   the paper's FooPar-X modules, and the name-keyed
 //!   [`backend::registry`] user backends plug into;
+//! * [`nb`] — non-blocking group operations: the erased [`nb::GroupOp`]
+//!   handle every `Collectives::*_start` returns, plus the typed
+//!   `wait()`/`test()` wrappers — communication overlaps computation and
+//!   the virtual clock advances by `max(T_comm, T_comp)` across the
+//!   overlap region;
 //! * [`group`] — ordered rank subsets with private tag namespaces and
 //!   the **user-facing collective methods** (`g.reduce(…)`,
-//!   `g.bcast(…)`, …) that dispatch through the active backend.
+//!   `g.bcast(…)`, …, plus their `*_start` non-blocking forms) that
+//!   dispatch through the active backend.
 //!
 //! Data-structure code ([`crate::data`]) and algorithms only ever touch
 //! [`group::Group`] methods; which algorithm executes — and at what
@@ -43,5 +49,6 @@ pub mod cost;
 pub mod fabric;
 pub mod group;
 pub mod message;
+pub mod nb;
 pub mod transport;
 pub mod wire;

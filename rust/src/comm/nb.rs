@@ -1,0 +1,607 @@
+//! Non-blocking group operations: handle-based async collectives with
+//! communication–computation overlap.
+//!
+//! Every collective in the [`Collectives`](super::collectives::Collectives)
+//! trait has a `*_start` form returning a handle.  A handle splits the
+//! operation into two phases:
+//!
+//! 1. **start** — everything that depends on nothing is done eagerly:
+//!    the operation's tags are allocated, and sends whose payload is
+//!    already in hand (a shift's outgoing block, a broadcast root's
+//!    fan-out, a reduction leaf's contribution) are posted immediately;
+//! 2. **wait** — the deferred remainder (receives, tree forwards,
+//!    folds) runs when the caller claims the result.
+//!
+//! **The overlap-aware clock rule.**  At `*_start` the rank's virtual
+//! clock is *forked*: the operation's message rounds (and any compute
+//! inside its fold operators) advance the fork — its private *comm
+//! timeline* — while the rank's main clock keeps advancing with whatever
+//! the rank computes in between.  `wait()` *merges*:
+//!
+//! ```text
+//!     clock  =  max(main clock, comm timeline)
+//!            =  t_start + max(T_comp, T_comm)
+//! ```
+//!
+//! instead of the blocking `t_start + T_comp + T_comm` — so pipelined
+//! algorithms (Cannon/DNS prefetch variants, see [`crate::algos`]) show
+//! their overlap in `T_P` and the isoefficiency analysis, exactly the
+//! classic route to closing the gap to peak.  The comm time hidden this
+//! way is recorded per rank in
+//! [`RankMetrics::overlap_hidden`](crate::metrics::RankMetrics).
+//!
+//! **SPMD contract.**  `*_start` and `wait()` are collective calls like
+//! their blocking counterparts: every member must call both, in the same
+//! order, on the same group instance.  Dropping a handle without
+//! `wait()`ing strands the peers (their deadlock oracle will fire).
+//! `test()` is advisory and free of clock effects: `true` means the
+//! first outstanding receive is already buffered and `wait()` will
+//! likely not block in wall time — `false` is not proof of absence (see
+//! [`Transport::probe`](crate::comm::transport::Transport::probe)).
+//!
+//! The erased [`GroupOp`] is the object-safe currency of the
+//! [`Collectives`](super::collectives::Collectives) trait; user code
+//! sees the typed wrappers ([`Op`], [`ReduceOp`], [`VecOp`],
+//! [`GatherOp`], [`BarrierOp`]) returned by the `Group::*_start`
+//! methods, or the data-layer handles (`PendingSeq`, `PendingReduce`,
+//! `PendingApply`, `PendingRead`) built on top of them.
+
+use std::marker::PhantomData;
+
+use crate::comm::group::Group;
+use crate::comm::message::Msg;
+use crate::comm::wire::WireData;
+
+/// Result shape of an erased in-flight collective.
+pub enum OpOutput {
+    /// A value everywhere (bcast, shift, scatter, scan, allreduce).
+    One(Msg),
+    /// A value at the root only (reduce).
+    MaybeOne(Option<Msg>),
+    /// The group-ordered vector everywhere (allgather, alltoall).
+    Many(Vec<Msg>),
+    /// The group-ordered vector at the root only (gather).
+    MaybeMany(Option<Vec<Msg>>),
+    /// Nothing (barrier).
+    Unit,
+}
+
+impl OpOutput {
+    pub fn one(self) -> Msg {
+        match self {
+            OpOutput::One(m) => m,
+            _ => panic!("pending operation did not produce a single value"),
+        }
+    }
+
+    pub fn maybe_one(self) -> Option<Msg> {
+        match self {
+            OpOutput::MaybeOne(m) => m,
+            _ => panic!("pending operation did not produce a root value"),
+        }
+    }
+
+    pub fn many(self) -> Vec<Msg> {
+        match self {
+            OpOutput::Many(v) => v,
+            _ => panic!("pending operation did not produce a vector"),
+        }
+    }
+
+    pub fn maybe_many(self) -> Option<Vec<Msg>> {
+        match self {
+            OpOutput::MaybeMany(v) => v,
+            _ => panic!("pending operation did not produce a root vector"),
+        }
+    }
+
+    pub fn unit(self) {
+        match self {
+            OpOutput::Unit => {}
+            _ => panic!("pending operation unexpectedly produced a value"),
+        }
+    }
+}
+
+enum Phase<'f> {
+    /// The operation completed in its start phase (root-side fan-out,
+    /// leaf-side contribution, p = 1, zero-delta shift, …).
+    Ready(OpOutput),
+    /// The deferred remainder: receives / forwards / folds, run on the
+    /// comm timeline inside `wait()`.  The group is passed back in at
+    /// wait — the closure captures only protocol state, never the group,
+    /// so data-layer handles can own their group alongside the op.
+    Deferred(Box<dyn for<'x, 'y> FnOnce(&'x Group<'y>) -> OpOutput + 'f>),
+}
+
+/// An in-flight group operation over erased [`Msg`] values — what the
+/// [`Collectives`](super::collectives::Collectives) `*_start` methods
+/// return.  See the module docs for the phase split and the clock rule.
+#[must_use = "a pending group operation must be wait()ed by every member — \
+              dropping the handle strands its peers"]
+pub struct GroupOp<'f> {
+    /// Guard against waiting on a different group than started on.
+    group_id: u64,
+    /// Main-clock value at `*_start` (fork point).
+    t0: f64,
+    /// Comm-timeline clock after the start phase.
+    comm_clock: f64,
+    /// First outstanding receive `(world src, tag)`, if known — the
+    /// probe target of `test()`.
+    probe: Option<(usize, u64)>,
+    phase: Phase<'f>,
+}
+
+impl<'f> GroupOp<'f> {
+    /// An operation whose start phase completed it (its sends, if any,
+    /// advanced the comm timeline to `comm_clock`).
+    pub fn ready(g: &Group, t0: f64, comm_clock: f64, out: OpOutput) -> Self {
+        GroupOp {
+            group_id: g.id(),
+            t0,
+            comm_clock,
+            probe: None,
+            phase: Phase::Ready(out),
+        }
+    }
+
+    /// An operation with a deferred remainder.  `comm_clock` is the comm
+    /// timeline after the start phase's sends; `probe` names the first
+    /// outstanding receive for `test()`.
+    pub fn deferred(
+        g: &Group,
+        t0: f64,
+        comm_clock: f64,
+        probe: Option<(usize, u64)>,
+        f: impl for<'x, 'y> FnOnce(&'x Group<'y>) -> OpOutput + 'f,
+    ) -> Self {
+        GroupOp {
+            group_id: g.id(),
+            t0,
+            comm_clock,
+            probe,
+            phase: Phase::Deferred(Box::new(f)),
+        }
+    }
+
+    /// Fully-deferred fallback: run the whole blocking operation on the
+    /// comm timeline at `wait()`.  This is how the `Collectives` trait
+    /// defaults every `*_start` — results and the overlap clock rule are
+    /// correct for any custom strategy for free; split-phase
+    /// implementations (early sends, meaningful `test()`) are an
+    /// override, not an obligation.
+    pub fn run_deferred(
+        g: &Group,
+        f: impl for<'x, 'y> FnOnce(&'x Group<'y>) -> OpOutput + 'f,
+    ) -> Self {
+        let t0 = g.ctx().now();
+        Self::deferred(g, t0, t0, None, f)
+    }
+
+    // Composition accessors (crate-internal): a multi-stage operation
+    // (e.g. allreduce = reduce then bcast) wraps an inner handle in an
+    // outer one — the outer adopts the inner's fork state and runs the
+    // inner's remainder inline on its own comm timeline.
+
+    /// Fork point of this operation (main clock at `*_start`).
+    pub(crate) fn fork_t0(&self) -> f64 {
+        self.t0
+    }
+
+    /// Comm-timeline clock after this operation's start phase.
+    pub(crate) fn fork_comm_clock(&self) -> f64 {
+        self.comm_clock
+    }
+
+    /// The `test()` probe target, if any.
+    pub(crate) fn probe_target(&self) -> Option<(usize, u64)> {
+        self.probe
+    }
+
+    /// Run the deferred remainder on the **current** clock — no fork, no
+    /// merge.  Only valid inside an enclosing handle's deferred phase
+    /// whose comm timeline was seeded with this handle's
+    /// [`fork_comm_clock`](Self::fork_comm_clock).
+    pub(crate) fn finish_inline(self, g: &Group) -> OpOutput {
+        assert_eq!(
+            self.group_id,
+            g.id(),
+            "pending operation waited on a different group than it started on"
+        );
+        match self.phase {
+            Phase::Ready(out) => out,
+            Phase::Deferred(f) => f(g),
+        }
+    }
+
+    /// Advisory completion probe (no clock effects): is the first
+    /// outstanding receive already buffered?  Handles that completed at
+    /// start report `true`; deferred handles without a tracked receive
+    /// (fully-deferred defaults) report `false` — unknown is not
+    /// completion, and `false` already means only "keep waiting".
+    pub fn test(&self, g: &Group) -> bool {
+        match (&self.phase, self.probe) {
+            (Phase::Ready(_), _) => true,
+            (Phase::Deferred(_), None) => false,
+            (Phase::Deferred(_), Some((src, tag))) => {
+                let ctx = g.ctx();
+                ctx.transport().probe(ctx.rank, src, tag)
+            }
+        }
+    }
+
+    /// Complete the operation: run the deferred remainder on the comm
+    /// timeline, then merge `clock = max(clock, comm timeline)`.
+    ///
+    /// Must be called with the same group the operation started on.
+    pub fn wait(self, g: &Group) -> OpOutput {
+        assert_eq!(
+            self.group_id,
+            g.id(),
+            "pending operation waited on a different group than it started on"
+        );
+        let ctx = g.ctx();
+        let (out, comm_end) = match self.phase {
+            Phase::Ready(out) => (out, self.comm_clock),
+            Phase::Deferred(f) => ctx.with_clock(self.comm_clock, || f(g)),
+        };
+        ctx.finish_overlap(self.t0, comm_end);
+        out
+    }
+}
+
+// ---------------------------------------------------------------- typed
+
+macro_rules! handle_common {
+    () => {
+        /// Advisory completion probe — see [`GroupOp::test`].
+        pub fn test(&self) -> bool {
+            self.raw.test(self.g)
+        }
+    };
+}
+
+/// Handle of a pending collective producing one `T` everywhere
+/// (bcast, shift, scatter, scan, allreduce).
+#[must_use = "a pending group operation must be wait()ed by every member"]
+pub struct Op<'g, T: WireData> {
+    g: &'g Group<'g>,
+    raw: GroupOp<'g>,
+    _t: PhantomData<fn() -> T>,
+}
+
+impl<'g, T: WireData> Op<'g, T> {
+    pub(crate) fn new(g: &'g Group<'g>, raw: GroupOp<'g>) -> Self {
+        Op { g, raw, _t: PhantomData }
+    }
+
+    handle_common!();
+
+    /// Complete and claim the value (merges the overlap clocks).
+    pub fn wait(self) -> T {
+        self.raw.wait(self.g).one().downcast::<T>()
+    }
+}
+
+/// Handle of a pending reduction: `Some(T)` at the root, `None` elsewhere.
+#[must_use = "a pending group operation must be wait()ed by every member"]
+pub struct ReduceOp<'g, T: WireData> {
+    g: &'g Group<'g>,
+    raw: GroupOp<'g>,
+    _t: PhantomData<fn() -> T>,
+}
+
+impl<'g, T: WireData> ReduceOp<'g, T> {
+    pub(crate) fn new(g: &'g Group<'g>, raw: GroupOp<'g>) -> Self {
+        ReduceOp { g, raw, _t: PhantomData }
+    }
+
+    handle_common!();
+
+    pub fn wait(self) -> Option<T> {
+        self.raw.wait(self.g).maybe_one().map(|m| m.downcast::<T>())
+    }
+}
+
+/// Handle of a pending allgather/alltoall: the group-ordered vector.
+#[must_use = "a pending group operation must be wait()ed by every member"]
+pub struct VecOp<'g, T: WireData> {
+    g: &'g Group<'g>,
+    raw: GroupOp<'g>,
+    _t: PhantomData<fn() -> T>,
+}
+
+impl<'g, T: WireData> VecOp<'g, T> {
+    pub(crate) fn new(g: &'g Group<'g>, raw: GroupOp<'g>) -> Self {
+        VecOp { g, raw, _t: PhantomData }
+    }
+
+    handle_common!();
+
+    pub fn wait(self) -> Vec<T> {
+        self.raw
+            .wait(self.g)
+            .many()
+            .into_iter()
+            .map(|m| m.downcast::<T>())
+            .collect()
+    }
+}
+
+/// Handle of a pending gather: `Some(vec)` at the root, `None` elsewhere.
+#[must_use = "a pending group operation must be wait()ed by every member"]
+pub struct GatherOp<'g, T: WireData> {
+    g: &'g Group<'g>,
+    raw: GroupOp<'g>,
+    _t: PhantomData<fn() -> T>,
+}
+
+impl<'g, T: WireData> GatherOp<'g, T> {
+    pub(crate) fn new(g: &'g Group<'g>, raw: GroupOp<'g>) -> Self {
+        GatherOp { g, raw, _t: PhantomData }
+    }
+
+    handle_common!();
+
+    pub fn wait(self) -> Option<Vec<T>> {
+        self.raw
+            .wait(self.g)
+            .maybe_many()
+            .map(|v| v.into_iter().map(|m| m.downcast::<T>()).collect())
+    }
+}
+
+/// Handle of a pending barrier.
+#[must_use = "a pending group operation must be wait()ed by every member"]
+pub struct BarrierOp<'g> {
+    g: &'g Group<'g>,
+    raw: GroupOp<'g>,
+}
+
+impl<'g> BarrierOp<'g> {
+    pub(crate) fn new(g: &'g Group<'g>, raw: GroupOp<'g>) -> Self {
+        BarrierOp { g, raw }
+    }
+
+    handle_common!();
+
+    pub fn wait(self) {
+        self.raw.wait(self.g).unit()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::comm::backend::BackendProfile;
+    use crate::comm::cost::CostParams;
+    use crate::comm::group::Group;
+    use crate::testing::spmd_run as run;
+
+    fn fixed() -> BackendProfile {
+        BackendProfile::openmpi_fixed()
+    }
+
+    /// ts = 1, tw = 0: clocks count message rounds.
+    fn unit_cost() -> CostParams {
+        CostParams::new(1.0, 0.0)
+    }
+
+    #[test]
+    fn shift_overlap_clock_is_max_not_sum() {
+        let res = run(4, fixed(), unit_cost(), |ctx| {
+            let g = Group::world(ctx);
+            let h = g.shift_start(1, ctx.rank as u64);
+            ctx.advance_compute(3.0, 0.0); // overlaps the 1-round shift
+            let v = h.wait();
+            (v, ctx.now())
+        });
+        for (me, (v, t)) in res.results.iter().enumerate() {
+            assert_eq!(*v, ((me + 3) % 4) as u64, "value at rank {me}");
+            // blocking: 3 (compute) + 1 (shift) = 4; overlapped: max = 3
+            assert!((t - 3.0).abs() < 1e-12, "rank {me}: clock {t}");
+        }
+    }
+
+    #[test]
+    fn shift_without_compute_costs_like_blocking() {
+        let res = run(4, fixed(), unit_cost(), |ctx| {
+            let g = Group::world(ctx);
+            let h = g.shift_start(1, 0u8);
+            h.wait();
+            ctx.now()
+        });
+        assert!(res.results.iter().all(|t| (t - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn zero_delta_shift_is_ready_immediately() {
+        let res = run(3, fixed(), unit_cost(), |ctx| {
+            let g = Group::world(ctx);
+            let h = g.shift_start(0, ctx.rank as u64);
+            assert!(h.test());
+            (h.wait(), ctx.now())
+        });
+        for (me, (v, t)) in res.results.iter().enumerate() {
+            assert_eq!(*v, me as u64);
+            assert_eq!(*t, 0.0);
+        }
+    }
+
+    #[test]
+    fn bcast_overlap_hides_tree_rounds() {
+        let res = run(4, fixed(), unit_cost(), |ctx| {
+            let g = Group::world(ctx);
+            let h = g.bcast_start(0, (ctx.rank == 0).then_some(42u64));
+            ctx.advance_compute(5.0, 0.0);
+            let v = h.wait();
+            (v, ctx.now())
+        });
+        // blocking T_P for p=4 binomial bcast is 2 rounds → 2 + 5 = 7;
+        // overlapped: every rank's comm timeline (≤ 2) hides under 5.
+        for (me, (v, t)) in res.results.iter().enumerate() {
+            assert_eq!(*v, 42, "rank {me}");
+            assert!((t - 5.0).abs() < 1e-12, "rank {me}: clock {t}");
+        }
+    }
+
+    #[test]
+    fn reduce_start_preserves_fold_order() {
+        for p in [2, 3, 4, 7, 8] {
+            let res = run(p, fixed(), CostParams::free(), |ctx| {
+                let g = Group::world(ctx);
+                let h = g.reduce_start(0, format!("{}.", ctx.rank), |a, b| a + &b);
+                h.wait()
+            });
+            let expect: String = (0..p).map(|r| format!("{r}.")).collect();
+            assert_eq!(res.results[0].as_deref(), Some(expect.as_str()), "p={p}");
+            assert!(res.results[1..].iter().all(Option::is_none));
+        }
+    }
+
+    #[test]
+    fn reduce_overlap_at_root_hides_comm() {
+        let res = run(8, fixed(), unit_cost(), |ctx| {
+            let g = Group::world(ctx);
+            let h = g.reduce_start(0, 1u64, |a, b| a + b);
+            ctx.advance_compute(10.0, 0.0);
+            let v = h.wait();
+            (v, ctx.now())
+        });
+        assert_eq!(res.results[0].0, Some(8));
+        // binomial reduce is 3 rounds at the root for p=8; all hidden
+        assert!((res.results[0].1 - 10.0).abs() < 1e-12, "{}", res.results[0].1);
+        let t_p = res.results.iter().map(|r| r.1).fold(0.0, f64::max);
+        assert!((t_p - 10.0).abs() < 1e-12, "T_P {t_p}");
+    }
+
+    #[test]
+    fn overlap_hidden_metric_records_savings() {
+        let res = run(2, fixed(), unit_cost(), |ctx| {
+            let g = Group::world(ctx);
+            let h = g.shift_start(1, 0u8);
+            ctx.advance_compute(3.0, 0.0);
+            h.wait();
+        });
+        // the 1-second shift was fully hidden on both ranks
+        for m in &res.metrics {
+            assert!((m.overlap_hidden - 1.0).abs() < 1e-12, "{}", m.overlap_hidden);
+        }
+    }
+
+    #[test]
+    fn allgather_start_matches_blocking_values() {
+        for p in [1, 2, 3, 5, 8] {
+            let res = run(p, fixed(), CostParams::free(), |ctx| {
+                let g = Group::world(ctx);
+                let h = g.allgather_start(ctx.rank as u64 * 10);
+                ctx.advance_compute(1.0, 0.0);
+                h.wait()
+            });
+            let expect: Vec<u64> = (0..p as u64).map(|r| r * 10).collect();
+            assert!(res.results.iter().all(|v| *v == expect), "p={p}");
+        }
+    }
+
+    #[test]
+    fn alltoall_start_transposes() {
+        for p in [1, 2, 4, 6] {
+            let res = run(p, fixed(), CostParams::free(), |ctx| {
+                let g = Group::world(ctx);
+                let items: Vec<u64> = (0..p).map(|j| (ctx.rank * 100 + j) as u64).collect();
+                let h = g.alltoall_start(items);
+                h.wait()
+            });
+            for (me, got) in res.results.iter().enumerate() {
+                let expect: Vec<u64> = (0..p).map(|i| (i * 100 + me) as u64).collect();
+                assert_eq!(*got, expect, "p={p} me={me}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_scatter_scan_barrier_allreduce_start_values() {
+        let res = run(6, fixed(), CostParams::free(), |ctx| {
+            let g = Group::world(ctx);
+            let gathered = g.gather_start(3, ctx.rank as u64).wait();
+            let doubled = g
+                .scatter_start(3, gathered.map(|v| v.iter().map(|x| x * 2).collect()))
+                .wait();
+            let prefix = g.scan_start(ctx.rank as i64 + 1, |a, b| a + b).wait();
+            g.barrier_start().wait();
+            let top = g.allreduce_start(ctx.rank as i64, |a, b| a.max(b)).wait();
+            (doubled, prefix, top)
+        });
+        for (me, (d, s, t)) in res.results.iter().enumerate() {
+            assert_eq!(*d, me as u64 * 2);
+            assert_eq!(*s, ((me + 1) * (me + 2) / 2) as i64);
+            assert_eq!(*t, 5);
+        }
+    }
+
+    #[test]
+    fn test_turns_true_once_the_peer_posted() {
+        let res = run(2, fixed(), CostParams::free(), |ctx| {
+            let g = Group::world(ctx);
+            let h = g.shift_start(1, ctx.rank as u64);
+            // the peer's start already posted on the shmem fabric; spin
+            // with a generous bound so wire transports would pass too
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+            while !h.test() {
+                assert!(std::time::Instant::now() < deadline, "test() never turned true");
+                std::thread::yield_now();
+            }
+            h.wait()
+        });
+        assert_eq!(res.results, vec![1, 0]);
+    }
+
+    #[test]
+    fn two_outstanding_ops_on_one_group_do_not_cross() {
+        let res = run(4, fixed(), CostParams::free(), |ctx| {
+            let g = Group::world(ctx);
+            let h1 = g.shift_start(1, ctx.rank as u64);
+            let h2 = g.shift_start(2, (ctx.rank * 100) as u64);
+            let a = h1.wait();
+            let b = h2.wait();
+            (a, b)
+        });
+        for (me, (a, b)) in res.results.iter().enumerate() {
+            assert_eq!(*a, ((me + 3) % 4) as u64);
+            assert_eq!(*b, (((me + 2) % 4) * 100) as u64);
+        }
+    }
+
+    #[test]
+    fn waits_in_reverse_start_order_complete() {
+        // out-of-order waits are legal: tags keep rounds apart
+        let res = run(3, fixed(), CostParams::free(), |ctx| {
+            let g = Group::world(ctx);
+            let h1 = g.shift_start(1, ctx.rank as u64);
+            let h2 = g.shift_start(1, (ctx.rank + 10) as u64);
+            let b = h2.wait();
+            let a = h1.wait();
+            (a, b)
+        });
+        for (me, (a, b)) in res.results.iter().enumerate() {
+            assert_eq!(*a, ((me + 2) % 3) as u64);
+            assert_eq!(*b, (((me + 2) % 3) + 10) as u64);
+        }
+    }
+
+    #[test]
+    fn wrong_group_wait_panics() {
+        let r = std::panic::catch_unwind(|| {
+            run(2, fixed(), CostParams::free(), |ctx| {
+                let g1 = Group::world(ctx);
+                let g2 = Group::world(ctx);
+                let h = crate::comm::algorithms::shift_cyclic_start(
+                    &g1,
+                    1,
+                    crate::comm::message::Msg::new(0u8),
+                );
+                let _ = h.wait(&g2);
+            });
+        });
+        assert!(r.is_err());
+    }
+}

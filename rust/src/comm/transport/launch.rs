@@ -31,12 +31,13 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::process::{Child, Command};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context};
 
 use super::tcp::TcpTransport;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Worker rank (absent in the parent/launcher process).
 pub const ENV_RANK: &str = "FOOPAR_TCP_RANK";
@@ -79,8 +80,14 @@ pub struct ProcWorld {
     rank: usize,
     world: usize,
     transport: Arc<TcpTransport>,
-    /// Spawned workers (parent only).
-    children: Workers,
+    /// Spawned workers (parent only).  Behind `Arc<Mutex<…>>` so the
+    /// liveness watchdog can poll from its own thread; the watchdog only
+    /// holds a `Weak`, so kill-on-drop still fires if the parent unwinds.
+    children: Arc<Mutex<Workers>>,
+    /// First worker failure observed (set by the watchdog before it
+    /// reaps the survivors).  [`ProcWorld::check_children`] reports this
+    /// root cause instead of blaming a sibling the watchdog killed.
+    first_failure: Arc<OnceLock<String>>,
 }
 
 impl ProcWorld {
@@ -101,8 +108,16 @@ impl ProcWorld {
     /// exited with a failure status.  Lets the parent fail fast (with
     /// the worker's exit status) instead of blocking on a receive that
     /// can never complete.  Workers: no-op.
-    pub fn check_children(&mut self) -> crate::Result<()> {
-        for (i, child) in self.children.0.iter_mut().enumerate() {
+    pub fn check_children(&self) -> crate::Result<()> {
+        let mut kids = self.children.lock().unwrap();
+        // Checked under the children lock: the watchdog records its
+        // verdict (and reaps the survivors) while holding it, so once
+        // we are here any verdict is visible — and it wins, because a
+        // naive scan would blame a sibling the watchdog signal-killed.
+        if let Some(reason) = self.first_failure.get() {
+            bail!("{reason}");
+        }
+        for (i, child) in kids.0.iter_mut().enumerate() {
             if let Some(status) = child.try_wait()? {
                 if !status.success() {
                     bail!("tcp worker rank {} exited with {status} mid-run", i + 1);
@@ -112,17 +127,109 @@ impl ProcWorld {
         Ok(())
     }
 
+    /// Parent: has worker `rank` already exited successfully?  Lets the
+    /// end-of-run clock gather distinguish "frame still in flight" from
+    /// "worker exited cleanly without ever posting it" (user code
+    /// calling `exit(0)` mid-run — invisible to the failure watchdog).
+    pub fn child_exited_ok(&self, rank: usize) -> bool {
+        let mut kids = self.children.lock().unwrap();
+        match rank.checked_sub(1).and_then(|i| kids.0.get_mut(i)) {
+            Some(child) => matches!(child.try_wait(), Ok(Some(s)) if s.success()),
+            None => false,
+        }
+    }
+
+    /// Parent: spawn a background liveness watchdog that polls the
+    /// worker processes and, when one exits with a failure status,
+    /// poisons the local transport — so a receive blocked on the dead
+    /// rank (e.g. a non-blocking handle's `wait()`) panics promptly with
+    /// the worker's exit status and the stranded (rank, src, tag)
+    /// diagnostics instead of hanging out the deadlock timeout.
+    ///
+    /// Returns `None` on workers (nothing to watch).  The thread exits
+    /// when `stop` is set or the `ProcWorld` is dropped (it only holds a
+    /// `Weak` to the children, preserving kill-on-drop).
+    pub fn spawn_watchdog(
+        &self,
+        stop: Arc<std::sync::atomic::AtomicBool>,
+    ) -> Option<std::thread::JoinHandle<()>> {
+        if self.children.lock().unwrap().0.is_empty() {
+            return None;
+        }
+        let kids = Arc::downgrade(&self.children);
+        let transport = self.transport.clone();
+        let first_failure = self.first_failure.clone();
+        let handle = std::thread::Builder::new()
+            .name("foopar-tcp-watchdog".into())
+            .spawn(move || loop {
+                if stop.load(Ordering::Acquire) {
+                    return;
+                }
+                let Some(kids) = kids.upgrade() else { return };
+                let mut dead: Option<String> = None;
+                {
+                    let mut guard = kids.lock().unwrap();
+                    for (i, child) in guard.0.iter_mut().enumerate() {
+                        match child.try_wait() {
+                            Ok(Some(status)) if !status.success() => {
+                                dead = Some(format!(
+                                    "tcp worker rank {} exited with {status} mid-run",
+                                    i + 1
+                                ));
+                                break;
+                            }
+                            _ => {}
+                        }
+                    }
+                    if let Some(reason) = &dead {
+                        // Pin the root cause before reaping: once the
+                        // survivors are signal-killed, a naive child
+                        // scan would blame the wrong rank.
+                        let _ = first_failure.set(reason.clone());
+                        // A dead worker dooms the run.  Sibling workers
+                        // blocked on the dead rank cannot be poisoned
+                        // from here (their mailboxes live in their own
+                        // processes) — reap them now instead of letting
+                        // them burn their own deadlock timeout.
+                        for child in guard.0.iter_mut() {
+                            if matches!(child.try_wait(), Ok(None)) {
+                                let _ = child.kill();
+                            }
+                        }
+                    }
+                }
+                drop(kids);
+                if let Some(reason) = dead {
+                    use super::Transport;
+                    transport.fail(&reason);
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            })
+            .expect("spawn tcp watchdog thread");
+        Some(handle)
+    }
+
     /// Parent: wait for every worker and fail if any exited non-zero.
     /// Workers: no-op.
-    pub fn finish(mut self) -> crate::Result<()> {
+    pub fn finish(self) -> crate::Result<()> {
         let mut failures = Vec::new();
-        for (i, child) in self.children.0.iter_mut().enumerate() {
-            let rank = i + 1;
-            match child.wait() {
-                Ok(status) if status.success() => {}
-                Ok(status) => failures.push(format!("rank {rank} exited with {status}")),
-                Err(e) => failures.push(format!("rank {rank} wait failed: {e}")),
+        {
+            let mut kids = self.children.lock().unwrap();
+            for (i, child) in kids.0.iter_mut().enumerate() {
+                let rank = i + 1;
+                match child.wait() {
+                    Ok(status) if status.success() => {}
+                    Ok(status) => failures.push(format!("rank {rank} exited with {status}")),
+                    Err(e) => failures.push(format!("rank {rank} wait failed: {e}")),
+                }
             }
+        }
+        // The watchdog's pinned verdict wins outright: the survivors'
+        // signal-kill statuses are collateral from its reaping, not
+        // failures of their own.
+        if let Some(reason) = self.first_failure.get() {
+            return Err(anyhow!("{reason}"));
         }
         if failures.is_empty() {
             Ok(())
@@ -234,7 +341,13 @@ fn establish_parent(world: usize) -> crate::Result<ProcWorld> {
         .map(|p| SocketAddr::from(([127, 0, 0, 1], p.unwrap())))
         .collect();
     let transport = TcpTransport::endpoint(0, world, listener, peers);
-    Ok(ProcWorld { rank: 0, world, transport, children })
+    Ok(ProcWorld {
+        rank: 0,
+        world,
+        transport,
+        children: Arc::new(Mutex::new(children)),
+        first_failure: Arc::new(OnceLock::new()),
+    })
 }
 
 fn establish_worker(rank: usize, world: usize) -> crate::Result<ProcWorld> {
@@ -273,5 +386,11 @@ fn establish_worker(rank: usize, world: usize) -> crate::Result<ProcWorld> {
         .map(|&p| SocketAddr::from(([127, 0, 0, 1], p)))
         .collect();
     let transport = TcpTransport::endpoint(rank, world, listener, peers);
-    Ok(ProcWorld { rank, world, transport, children: Workers(Vec::new()) })
+    Ok(ProcWorld {
+        rank,
+        world,
+        transport,
+        children: Arc::new(Mutex::new(Workers(Vec::new()))),
+        first_failure: Arc::new(OnceLock::new()),
+    })
 }

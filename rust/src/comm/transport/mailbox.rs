@@ -28,6 +28,11 @@ struct MailboxInner {
     /// The owning rank has exited (posting to it is a bug; receiving
     /// from it can never succeed).
     closed: bool,
+    /// A peer failure makes every pending/future receive hopeless (a
+    /// rank died mid-run, a wire frame arrived torn).  Blocked and
+    /// future `take`s panic promptly with this root cause and their own
+    /// (rank, src, tag) instead of burning the deadlock timeout.
+    poisoned: Option<String>,
 }
 
 /// One rank's incoming message buffer.
@@ -91,6 +96,15 @@ impl Mailbox {
             {
                 return inner.queue.remove(pos).unwrap();
             }
+            if let Some(reason) = inner.poisoned.clone() {
+                let pending: Vec<(usize, u64)> =
+                    inner.queue.iter().map(|e| (e.src, e.tag)).collect();
+                drop(inner);
+                panic!(
+                    "rank {me}: recv(src={src}, tag={tag:#x}) failed: {reason} \
+                     (pending envelopes: {pending:?})"
+                );
+            }
             if inner.closed {
                 let pending: Vec<(usize, u64)> =
                     inner.queue.iter().map(|e| (e.src, e.tag)).collect();
@@ -128,6 +142,21 @@ impl Mailbox {
     /// Number of buffered envelopes (diagnostics).
     pub fn pending(&self) -> usize {
         self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Poison the mailbox: a peer failure (dead rank, torn wire frame)
+    /// makes every pending/future receive hopeless.  Blocked `take`s
+    /// wake immediately and panic with `reason` plus their own
+    /// (rank, src, tag) diagnostics.  Posting stays allowed (the failure
+    /// is propagated through receivers, not senders — avoiding a race on
+    /// which side trips first).  Idempotent: the first reason wins.
+    pub fn fail(&self, reason: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.poisoned.is_none() {
+            inner.poisoned = Some(reason.to_string());
+        }
+        drop(inner);
+        self.cv.notify_all();
     }
 
     /// Mark the owning rank exited.  Idempotent; returns `true` only on

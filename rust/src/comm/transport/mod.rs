@@ -102,4 +102,12 @@ pub trait Transport: Send + Sync {
 
     /// Mark rank `me` exited: its mailbox refuses further traffic.
     fn close(&self, me: usize);
+
+    /// Poison every mailbox local to this process: blocked and future
+    /// receives panic **promptly** with `reason` plus their own
+    /// (rank, src, tag) diagnostics.  Called when a rank or peer process
+    /// dies mid-run, so collectives blocked on the dead rank — including
+    /// a non-blocking handle's `wait()` — surface the root cause instead
+    /// of burning the [`RECV_TIMEOUT`] deadlock oracle.
+    fn fail(&self, reason: &str);
 }

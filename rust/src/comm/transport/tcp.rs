@@ -166,12 +166,46 @@ impl TcpTransport {
     fn reader_loop(&self, rank: usize, mut stream: TcpStream) {
         let mut len4 = [0u8; 4];
         loop {
-            if stream.read_exact(&mut len4).is_err() {
-                break; // EOF (peer closed) or shutdown reset
+            // Read the length prefix in two steps so a clean
+            // between-frames close (0-byte read — normal end-of-run) is
+            // distinguishable from a peer dying mid-header.
+            match stream.read(&mut len4[..1]) {
+                Ok(0) | Err(_) => break, // clean EOF or shutdown reset
+                Ok(_) => {}
+            }
+            if stream.read_exact(&mut len4[1..]).is_err() {
+                // 1-3 header bytes then EOF: the peer died mid-send.
+                if !self.shutdown.load(Ordering::Acquire) {
+                    Transport::fail(
+                        self,
+                        &format!(
+                            "torn tcp frame header — peer feeding rank {rank} \
+                             died mid-send"
+                        ),
+                    );
+                }
+                break;
             }
             let len = u32::from_le_bytes(len4) as usize;
             let mut buf = vec![0u8; len];
             if stream.read_exact(&mut buf).is_err() {
+                // A frame header with no (complete) body: the peer died
+                // mid-send.  Unlike a clean between-frames EOF (normal
+                // end-of-run), a torn frame is always a failure — poison
+                // every local mailbox (not just this connection's
+                // destination: sibling ranks blocked on the same dead
+                // peer are equally stranded) so blocked receives fail
+                // promptly with diagnostics instead of burning the
+                // deadlock timeout.
+                if !self.shutdown.load(Ordering::Acquire) {
+                    Transport::fail(
+                        self,
+                        &format!(
+                            "torn tcp frame ({len}-byte body never arrived) — \
+                             peer feeding rank {rank} died mid-send"
+                        ),
+                    );
+                }
                 break;
             }
             let deliver = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -297,6 +331,12 @@ impl Transport for TcpTransport {
             }
         }
     }
+
+    fn fail(&self, reason: &str) {
+        for mb in self.boxes.iter().flatten() {
+            mb.fail(reason);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -335,6 +375,40 @@ mod tests {
         assert!(!t.probe(1, 0, 3));
         assert_eq!(t.take(1, 0, 2).payload.downcast::<i64>(), 20);
         assert_eq!(t.take(1, 0, 1).payload.downcast::<i64>(), 10);
+        t.close(0);
+        t.close(1);
+    }
+
+    #[test]
+    fn torn_frame_poisons_blocked_take_promptly() {
+        // A peer that dies mid-send leaves a frame header with no body.
+        // The receive blocked on that message must fail with diagnostics
+        // promptly, not after the 60 s deadlock oracle.
+        let t = TcpTransport::loopback(2).expect("bind loopback");
+        let t2 = t.clone();
+        let t0 = std::time::Instant::now();
+        let h = std::thread::spawn(move || {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _ = t2.take(0, 1, 0x77);
+            }))
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        {
+            // hand-roll a torn frame: header promises 100 bytes, only 10
+            // ever arrive before the "sender" dies
+            let mut s = TcpStream::connect(t.peers[0]).expect("connect to rank 0 listener");
+            s.write_all(&100u32.to_le_bytes()).unwrap();
+            s.write_all(&[0u8; 10]).unwrap();
+        } // drop = peer death
+        let err = h.join().unwrap().unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(20), "poison was not prompt");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string panic>".into());
+        assert!(msg.contains("torn tcp frame"), "{msg}");
+        assert!(msg.contains("src=1"), "{msg}");
+        assert!(msg.contains("0x77"), "{msg}");
         t.close(0);
         t.close(1);
     }

@@ -13,17 +13,43 @@
 //! group operation.  Non-members hold no element and no-op through the
 //! entire chain, returning `None` where a value would be produced.
 //!
-//! | op | communication | `T_P` (Table 1) |
-//! |---|---|---|
-//! | `map_d` | none | Θ(T_λ(m)) |
-//! | `zip_with_d` | none | Θ(T_λ(m)) |
-//! | `reduce_d` | tree/linear reduce | Θ(log p (t_s + t_w m + T_λ(m))) |
-//! | `shift_d` | cyclic point-to-point | Θ(t_s + t_w m) |
-//! | `all_to_all_d` | pairwise exchange | Θ((t_s + t_w m)(p−1)) |
-//! | `all_gather_d` | ring | Θ((t_s + t_w m)(p−1)) |
-//! | `apply` | binomial bcast | Θ(log p (t_s + t_w m)) |
+//! | op | communication | `T_P` (Table 1) | overlapped `T_P` (`*_start`) |
+//! |---|---|---|---|
+//! | `map_d` | none | Θ(T_λ(m)) | — |
+//! | `zip_with_d` | none | Θ(T_λ(m)) | — |
+//! | `reduce_d` / `reduce_d_start` | tree/linear reduce | Θ(log p (t_s + t_w m + T_λ(m))) | max(T_comp, Θ(log p (t_s + t_w m + T_λ(m)))) |
+//! | `shift_d` / `shift_d_start` | cyclic point-to-point | Θ(t_s + t_w m) | max(T_comp, Θ(t_s + t_w m)) |
+//! | `all_to_all_d` | pairwise exchange | Θ((t_s + t_w m)(p−1)) | — |
+//! | `all_gather_d` | ring | Θ((t_s + t_w m)(p−1)) | — |
+//! | `apply` / `apply_start` | binomial bcast | Θ(log p (t_s + t_w m)) | max(T_comp, Θ(log p (t_s + t_w m))) |
+//!
+//! **Non-blocking forms.**  The `*_start` variants return a handle
+//! (`PendingSeq` / `PendingReduce` / `PendingApply`) with `wait()` and
+//! `test()`; the operation's communication runs on a forked comm
+//! timeline while the rank computes, and `wait()` merges with the
+//! **overlap-aware clock rule**: across a start→wait window the rank's
+//! clock advances by `max(T_comm, T_comp)` instead of the sum (the
+//! "overlapped `T_P`" column — `T_comp` is whatever the rank computed in
+//! between).  See [`crate::comm::nb`].  Every member must `wait()` every
+//! handle, in start order — the same SPMD discipline as the blocking
+//! operations.
+//!
+//! **Ownership convention.**  Every group operation **consumes** the
+//! sequence (`self` by value): chains read left-to-right, transformed
+//! sequences carry their group forward (`map_d`, `zip_with_d`,
+//! `shift_d`, `scan_d`, `all_to_all_d` return the next `DistSeq`;
+//! `*_start` forms return the pending handle that yields it), and
+//! terminal operations (`reduce_d`, `all_gather_d`, `gather_d`, `apply`)
+//! return plain values.  To keep using a sequence after a terminal
+//! operation, keep your own clone of the element (`local()` borrows it)
+//! — no group operation secretly clones or borrows.
 
+use std::marker::PhantomData;
+
+use crate::comm::algorithms::OwnedReduceFn;
 use crate::comm::group::Group;
+use crate::comm::message::Msg;
+use crate::comm::nb::GroupOp;
 use crate::comm::wire::WireData;
 use crate::data::value::Data;
 use crate::spmd::Ctx;
@@ -160,12 +186,12 @@ impl<'a, T: Data> DistSeq<'a, T> {
     }
 
     /// Every member obtains the whole sequence — Θ((t_s + t_w m)(p−1)).
-    pub fn all_gather_d(&self) -> Option<Vec<T>>
+    pub fn all_gather_d(self) -> Option<Vec<T>>
     where
         T: WireData + Clone,
     {
-        let local = self.local.as_ref()?;
-        Some(self.group.allgather(local.clone()))
+        let local = self.local?;
+        Some(self.group.allgather(local))
     }
 
     /// Inclusive prefix scan: member i ends up with
@@ -191,18 +217,74 @@ impl<'a, T: Data> DistSeq<'a, T> {
 
     /// Every member obtains element `i` (one-to-all broadcast from its
     /// owner) — Θ(log p (t_s + t_w m)).  Table 1's `apply(i)`.
-    pub fn apply(&self, i: usize) -> Option<T>
+    pub fn apply(self, i: usize) -> Option<T>
     where
         T: WireData + Clone,
     {
-        // Inert (non-member) chains no-op; members may legitimately hold
-        // their element even while others broadcast.
-        if self.local.is_none() {
-            return None;
-        }
+        // Inert (non-member) chains no-op.
+        let local = self.local?;
         let me = self.group.index();
-        let v = if me == i { self.local.clone() } else { None };
+        let v = (me == i).then_some(local);
         Some(self.group.bcast(i, v))
+    }
+
+    // ------------------------------------- non-blocking (handle) forms
+
+    /// Non-blocking [`Self::shift_d`]: the outgoing element is posted
+    /// immediately; compute until [`PendingSeq::wait`] claims the
+    /// shifted sequence.  Across the window the clock advances by
+    /// `max(T_comm, T_comp)` — the prefetch primitive of the pipelined
+    /// Cannon variant.
+    pub fn shift_d_start(self, delta: isize) -> PendingSeq<'a, T>
+    where
+        T: WireData,
+    {
+        let DistSeq { group, local } = self;
+        let raw = local.map(|v| {
+            group.ctx().metrics.on_collective();
+            group.ctx().collectives().shift_start(&group, delta, Msg::new(v))
+        });
+        PendingSeq { group, raw, _t: PhantomData }
+    }
+
+    /// Non-blocking [`Self::reduce_d`]: contributions are sent
+    /// immediately (a pure leaf completes at start); receive/fold rounds
+    /// run at [`PendingReduce::wait`] on the comm timeline — the chunked
+    /// z-reduction primitive of the pipelined DNS variant.
+    pub fn reduce_d_start<'f>(self, op: impl Fn(T, T) -> T + 'f) -> PendingReduce<'a, 'f, T>
+    where
+        T: WireData,
+    {
+        let DistSeq { group, local } = self;
+        let raw = local.map(|v| {
+            group.ctx().metrics.on_collective();
+            let erased: OwnedReduceFn<'f> =
+                Box::new(move |a: Msg, b: Msg| Msg::new(op(a.downcast::<T>(), b.downcast::<T>())));
+            group
+                .ctx()
+                .collectives()
+                .reduce_start(&group, 0, Msg::new(v), erased)
+        });
+        PendingReduce { group, raw, _t: PhantomData }
+    }
+
+    /// Non-blocking [`Self::apply`]: the owner's fan-out starts
+    /// immediately; every member claims the broadcast element at
+    /// [`PendingApply::wait`].  This is the overlap form of the
+    /// `seq_along`/`x_seq`/`y_seq` line broadcasts (Alg. 3's pivot row
+    /// and column).
+    pub fn apply_start(self, i: usize) -> PendingApply<'a, T>
+    where
+        T: WireData + Clone,
+    {
+        let DistSeq { group, local } = self;
+        let raw = local.map(|v| {
+            group.ctx().metrics.on_collective();
+            let me = group.index();
+            let value = (me == i).then(|| Msg::cloneable(v));
+            group.ctx().collectives().bcast_start(&group, i, value)
+        });
+        PendingApply { group, raw, _t: PhantomData }
     }
 }
 
@@ -213,6 +295,90 @@ impl<'a, T: WireData> DistSeq<'a, Vec<T>> {
     pub fn all_to_all_d(self) -> DistSeq<'a, Vec<T>> {
         let local = self.local.map(|v| self.group.alltoall(v));
         DistSeq { local, group: self.group }
+    }
+}
+
+// ------------------------------------------------------ pending handles
+
+/// A [`DistSeq`] in flight: the result of [`DistSeq::shift_d_start`].
+/// Owns the group; non-members hold an inert (always-ready) handle.
+#[must_use = "a pending sequence must be wait()ed by every member"]
+pub struct PendingSeq<'a, T: WireData> {
+    group: Group<'a>,
+    raw: Option<GroupOp<'static>>,
+    _t: PhantomData<fn() -> T>,
+}
+
+impl<'a, T: WireData> PendingSeq<'a, T> {
+    /// Advisory: is the incoming element already buffered?
+    pub fn test(&self) -> bool {
+        self.raw.as_ref().map_or(true, |r| r.test(&self.group))
+    }
+
+    /// Claim the shifted sequence (merges the overlap clocks).
+    pub fn wait(self) -> DistSeq<'a, T> {
+        let PendingSeq { group, raw, .. } = self;
+        let local = raw.map(|r| r.wait(&group).one().downcast::<T>());
+        DistSeq::from_parts(group, local)
+    }
+
+    /// `zipWithD` over the pending value: wait, then combine elementwise
+    /// with `other` — lets a chain like
+    /// `a.shift_d_start(-1) … zip_with_d(b, f)` read exactly like its
+    /// blocking counterpart while the shift overlapped whatever ran in
+    /// between.
+    pub fn zip_with_d<U: Data, V: Data>(
+        self,
+        other: DistSeq<'a, U>,
+        f: impl FnOnce(T, U) -> V,
+    ) -> DistSeq<'a, V> {
+        self.wait().zip_with_d(other, f)
+    }
+}
+
+/// A reduction in flight: the result of [`DistSeq::reduce_d_start`].
+/// `wait()` yields `Some(folded)` on the first member, `None` elsewhere.
+#[must_use = "a pending reduction must be wait()ed by every member"]
+pub struct PendingReduce<'a, 'f, T: WireData> {
+    group: Group<'a>,
+    raw: Option<GroupOp<'f>>,
+    _t: PhantomData<fn() -> T>,
+}
+
+impl<'a, 'f, T: WireData> PendingReduce<'a, 'f, T> {
+    /// Advisory: is the first incoming contribution already buffered?
+    pub fn test(&self) -> bool {
+        self.raw.as_ref().map_or(true, |r| r.test(&self.group))
+    }
+
+    /// Claim the reduction result (merges the overlap clocks).
+    pub fn wait(self) -> Option<T> {
+        let PendingReduce { group, raw, .. } = self;
+        raw.and_then(|r| r.wait(&group).maybe_one())
+            .map(|m| m.downcast::<T>())
+    }
+}
+
+/// An element broadcast in flight: the result of
+/// [`DistSeq::apply_start`].  `wait()` yields `Some(element_i)` on every
+/// member, `None` on non-members.
+#[must_use = "a pending broadcast must be wait()ed by every member"]
+pub struct PendingApply<'a, T: WireData> {
+    group: Group<'a>,
+    raw: Option<GroupOp<'static>>,
+    _t: PhantomData<fn() -> T>,
+}
+
+impl<'a, T: WireData> PendingApply<'a, T> {
+    /// Advisory: is the broadcast element already buffered?
+    pub fn test(&self) -> bool {
+        self.raw.as_ref().map_or(true, |r| r.test(&self.group))
+    }
+
+    /// Claim the broadcast element (merges the overlap clocks).
+    pub fn wait(self) -> Option<T> {
+        let PendingApply { group, raw, .. } = self;
+        raw.map(|r| r.wait(&group).one().downcast::<T>())
     }
 }
 
@@ -401,6 +567,68 @@ mod tests {
         });
         assert_eq!(res.results[0], Some(vec![0, 5, 10, 15]));
         assert!(res.results[1..].iter().all(Option::is_none));
+    }
+
+    // ------------------------------------------------- pending handles
+
+    #[test]
+    fn shift_d_start_overlaps_compute() {
+        let res = run(4, fixed(), CostParams::new(1.0, 0.0), |ctx| {
+            let pending = DistSeq::range(ctx, 4, |i| i as i64).shift_d_start(1);
+            ctx.advance_compute(3.0, 0.0); // overlaps the 1-round shift
+            (pending.wait().into_local(), ctx.now())
+        });
+        let vals: Vec<Option<i64>> = res.results.iter().map(|r| r.0).collect();
+        assert_eq!(vals, vec![Some(3), Some(0), Some(1), Some(2)]);
+        // blocking: 3 + 1 = 4; overlapped: max(3, 1) = 3
+        for (_, t) in &res.results {
+            assert!((t - 3.0).abs() < 1e-12, "clock {t}");
+        }
+    }
+
+    #[test]
+    fn pending_zip_with_d_matches_blocking_chain() {
+        let res = run(4, fixed(), free(), |ctx| {
+            let a = DistSeq::range(ctx, 4, |i| i as i64);
+            let b = DistSeq::range(ctx, 4, |i| 10 * i as i64);
+            a.shift_d_start(1).zip_with_d(b, |x, y| x + y).into_local()
+        });
+        // shifted a = [3,0,1,2]; b = [0,10,20,30]
+        assert_eq!(
+            res.results,
+            vec![Some(3), Some(10), Some(21), Some(32)]
+        );
+    }
+
+    #[test]
+    fn reduce_d_start_folds_in_order() {
+        let res = run(5, fixed(), free(), |ctx| {
+            let pending = DistSeq::range(ctx, 5, |i| format!("{i}")).reduce_d_start(|a, b| a + &b);
+            ctx.advance_compute(1.0, 0.0);
+            pending.wait()
+        });
+        assert_eq!(res.results[0].as_deref(), Some("01234"));
+        assert!(res.results[1..].iter().all(Option::is_none));
+    }
+
+    #[test]
+    fn apply_start_broadcasts_ith_element() {
+        let res = run(6, fixed(), free(), |ctx| {
+            let pending = DistSeq::range(ctx, 6, |i| format!("e{i}")).apply_start(4);
+            pending.wait()
+        });
+        assert!(res.results.iter().all(|r| r.as_deref() == Some("e4")));
+    }
+
+    #[test]
+    fn pending_handles_are_inert_on_non_members() {
+        let res = run(4, fixed(), free(), |ctx| {
+            let pending = DistSeq::from_fn(ctx, vec![1, 3], |i| i as i64).shift_d_start(1);
+            let _ = pending.test(); // advisory; must not panic on non-members
+            pending.wait().into_local()
+        });
+        assert_eq!(res.results, vec![None, Some(1), None, Some(0)]);
+        assert_eq!(res.metrics[0].msgs_sent, 0);
     }
 
     #[test]

@@ -9,7 +9,11 @@
 //! (Θ(log p (t_s + t_w m))), `set(...)` replaces it on the owner,
 //! `move_to(...)` migrates ownership (Θ(t_s + t_w m)).
 
+use std::marker::PhantomData;
+
 use crate::comm::group::Group;
+use crate::comm::message::Msg;
+use crate::comm::nb::GroupOp;
 use crate::comm::wire::WireData;
 use crate::data::value::Data;
 use crate::spmd::Ctx;
@@ -70,6 +74,24 @@ impl<'a, T: Data> DistVar<'a, T> {
         Some(self.group.bcast(self.owner, self.local.clone()))
     }
 
+    /// Non-blocking [`Self::read`]: the owner's fan-out starts
+    /// immediately; every member claims the value at
+    /// [`PendingRead::wait`], with the broadcast overlapping whatever
+    /// the rank computes in between (`max(T_comm, T_comp)` on the
+    /// clock — see [`crate::comm::nb`]).  Non-members get an inert
+    /// handle whose `wait()` is `None`.
+    pub fn read_start(&self) -> PendingRead<'_, T>
+    where
+        T: WireData + Clone,
+    {
+        let raw = self.group.is_member().then(|| {
+            self.group.ctx().metrics.on_collective();
+            let v = self.local.clone().map(Msg::cloneable);
+            self.group.ctx().collectives().bcast_start(&self.group, self.owner, v)
+        });
+        PendingRead { group: &self.group, raw, _t: PhantomData }
+    }
+
     /// Replace the value; `f` runs only on the owner.  Collective-free.
     pub fn set(&mut self, f: impl FnOnce(Option<T>) -> T) {
         if self.is_owner() {
@@ -99,6 +121,29 @@ impl<'a, T: Data> DistVar<'a, T> {
             }
         }
         self.owner = new_owner;
+    }
+}
+
+/// A distributed-variable read in flight: the result of
+/// [`DistVar::read_start`].  `wait()` yields `Some(value)` on every
+/// member, `None` on non-members.
+#[must_use = "a pending read must be wait()ed by every member"]
+pub struct PendingRead<'g, T: WireData> {
+    group: &'g Group<'g>,
+    raw: Option<GroupOp<'g>>,
+    _t: PhantomData<fn() -> T>,
+}
+
+impl<'g, T: WireData> PendingRead<'g, T> {
+    /// Advisory: is the broadcast value already buffered?
+    pub fn test(&self) -> bool {
+        self.raw.as_ref().map_or(true, |r| r.test(self.group))
+    }
+
+    /// Claim the value (merges the overlap clocks).
+    pub fn wait(self) -> Option<T> {
+        let PendingRead { group, raw, .. } = self;
+        raw.map(|r| r.wait(group).one().downcast::<T>())
     }
 }
 
@@ -156,6 +201,27 @@ mod tests {
             v.read()
         });
         assert!(res.iter().all(|r| *r == Some(100)));
+    }
+
+    #[test]
+    fn read_start_broadcasts_with_overlap() {
+        use crate::comm::cost::CostParams as CP;
+        let res = run(
+            4,
+            BackendProfile::openmpi_fixed(),
+            CP::new(1.0, 0.0),
+            |ctx| {
+                let v = DistVar::new(ctx, 1, || 77u64);
+                let h = v.read_start();
+                ctx.advance_compute(4.0, 0.0);
+                (h.wait(), ctx.now())
+            },
+        );
+        for (r, t) in &res.results {
+            assert_eq!(*r, Some(77));
+            // the 2-round binomial bcast hides entirely under 4s compute
+            assert!((t - 4.0).abs() < 1e-12, "clock {t}");
+        }
     }
 
     #[test]

@@ -179,6 +179,12 @@ impl<'a, T: Data> GridData<'a, T> {
     /// varying dimension `dim` (paper: `xSeq`/`ySeq`/`zSeq` for dims
     /// 0/1/2).  Requires `T: Clone`: the line's sequence borrows the
     /// grid value.  Non-members return an inert sequence.
+    ///
+    /// The returned sequence supports the whole `DistSeq` API, including
+    /// the non-blocking forms: `data.x_seq().apply_start(k)` broadcasts
+    /// element `k` along every column while the rank keeps computing
+    /// (Alg. 3's pivot row/column with comm–comp overlap), and the
+    /// pipelined DNS variant chunks `z_seq` reductions the same way.
     pub fn seq_along(&self, dim: usize) -> DistSeq<'a, T>
     where
         T: Clone,

@@ -66,6 +66,31 @@ impl Block {
             Block::Proxy { .. } => panic!("attempted to read data of a proxy block"),
         }
     }
+
+    /// Horizontal concatenation of column panels — reassembling a block
+    /// computed panel-by-panel (the pipelined DNS variant).  Real panels
+    /// concatenate data; proxy panels merge into a proxy of the combined
+    /// width with the derived seed 0, exactly like every modeled-mode
+    /// product block — so a panel-wise modeled run reassembles to the
+    /// same block metadata as the blocking one.
+    pub fn hstack(parts: Vec<Block>) -> Block {
+        assert!(!parts.is_empty(), "hstack of zero blocks");
+        if parts.len() == 1 {
+            return parts.into_iter().next().unwrap();
+        }
+        let rows = parts[0].rows();
+        assert!(parts.iter().all(|b| b.rows() == rows), "hstack needs equal row counts");
+        if parts.iter().any(Block::is_proxy) {
+            assert!(
+                parts.iter().all(Block::is_proxy),
+                "hstack of mixed real/proxy panels is a mode-confusion bug"
+            );
+            let cols = parts.iter().map(Block::cols).sum();
+            return Block::Proxy { rows, cols, seed: 0 };
+        }
+        let mats: Vec<&Mat> = parts.iter().map(Block::as_mat).collect();
+        Block::Real(Mat::hstack(&mats))
+    }
 }
 
 /// A lazily-evaluated distributed matrix: hands out the (i, j) block of a

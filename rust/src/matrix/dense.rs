@@ -68,6 +68,34 @@ impl Mat {
         (0..self.rows).map(|r| self.at(r, c)).collect()
     }
 
+    /// Columns `[lo, hi)` as a fresh `rows × (hi−lo)` matrix (the column
+    /// panels of the pipelined DNS variant).
+    pub fn col_slice(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.cols, "col_slice [{lo}, {hi}) of {} cols", self.cols);
+        let w = hi - lo;
+        let mut data = Vec::with_capacity(self.rows * w);
+        for r in 0..self.rows {
+            data.extend_from_slice(&self.data[r * self.cols + lo..r * self.cols + hi]);
+        }
+        Mat { rows: self.rows, cols: w, data }
+    }
+
+    /// Horizontal concatenation of equal-height matrices (reassembling
+    /// the pipelined DNS column panels).
+    pub fn hstack(parts: &[&Mat]) -> Mat {
+        assert!(!parts.is_empty(), "hstack of zero matrices");
+        let rows = parts[0].rows;
+        assert!(parts.iter().all(|m| m.rows == rows), "hstack needs equal row counts");
+        let cols: usize = parts.iter().map(|m| m.cols).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for m in parts {
+                data.extend_from_slice(m.row(r));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
         for r in 0..self.rows {
@@ -149,6 +177,16 @@ mod tests {
         assert_eq!(m.at(1, 2), 5.0);
         assert_eq!(m.row(1), &[0.0, 0.0, 5.0]);
         assert_eq!(m.col(2), vec![0.0, 5.0]);
+    }
+
+    #[test]
+    fn col_slice_then_hstack_roundtrips() {
+        let m = Mat::random(5, 9, 11);
+        let a = m.col_slice(0, 3);
+        let b = m.col_slice(3, 4);
+        let c = m.col_slice(4, 9);
+        assert_eq!(a.cols, 3);
+        assert_eq!(Mat::hstack(&[&a, &b, &c]), m);
     }
 
     #[test]

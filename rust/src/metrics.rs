@@ -24,6 +24,13 @@ pub struct RankMetrics {
     pub compute_time: Cell<f64>,
     /// Collective operations entered.
     pub collectives: Cell<u64>,
+    /// Virtual seconds of communication hidden by non-blocking group
+    /// operations — comm time that did not extend the rank's clock
+    /// because the main timeline had already advanced past it (compute,
+    /// or other operations merged earlier; the `max(T_comm, T_comp)`
+    /// overlap rule).  Per region: `min(comm elapsed, main elapsed)` —
+    /// i.e. the clock savings versus running the operation blocking.
+    pub overlap_hidden: Cell<f64>,
 }
 
 impl RankMetrics {
@@ -56,6 +63,11 @@ impl RankMetrics {
         self.collectives.set(self.collectives.get() + 1);
     }
 
+    #[inline]
+    pub fn on_overlap(&self, hidden_secs: f64) {
+        self.overlap_hidden.set(self.overlap_hidden.get() + hidden_secs);
+    }
+
     /// Snapshot into a plain (Send) summary for cross-thread collection.
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
@@ -67,6 +79,7 @@ impl RankMetrics {
             comm_time: self.comm_time.get(),
             compute_time: self.compute_time.get(),
             collectives: self.collectives.get(),
+            overlap_hidden: self.overlap_hidden.get(),
         }
     }
 }
@@ -82,6 +95,7 @@ pub struct MetricsSnapshot {
     pub comm_time: f64,
     pub compute_time: f64,
     pub collectives: u64,
+    pub overlap_hidden: f64,
 }
 
 /// Aggregate over all ranks of a run.
@@ -107,6 +121,7 @@ impl Report {
             total.comm_time += m.comm_time;
             total.compute_time += m.compute_time;
             total.collectives += m.collectives;
+            total.overlap_hidden += m.overlap_hidden;
             max_comm = max_comm.max(m.comm_time);
             max_comp = max_comp.max(m.compute_time);
         }

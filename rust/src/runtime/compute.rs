@@ -156,6 +156,35 @@ impl Compute {
         }
     }
 
+    /// `A · B[:, lo..hi)` — one column panel of the product (the
+    /// pipelined DNS variant computes its block panel-by-panel so each
+    /// panel's z-reduction can overlap the next panel's GEMM).
+    ///
+    /// Bit-identity: the native kernel accumulates each `c[i][j]` over
+    /// `k` in the same order whether `B` is whole or column-sliced, so
+    /// the hstack of all panels equals the full-block product exactly.
+    /// Modeled mode charges the panel's share of the full GEMM at the
+    /// *full block's* efficiency — the panel split is a schedule choice,
+    /// not a smaller GEMM (the kernel still streams the whole A block) —
+    /// so the total modeled compute equals the blocking run's.
+    pub fn matmul_panel(&self, ctx: &Ctx, a: &Block, b: &Block, lo: usize, hi: usize) -> Block {
+        debug_assert!(lo < hi && hi <= b.cols(), "panel [{lo}, {hi}) of {} cols", b.cols());
+        let flops = gemm::gemm_flops(a.rows(), a.cols(), hi - lo);
+        match self {
+            Compute::Modeled { rate } => {
+                let eff = gemm_efficiency(a.rows().min(b.cols()).min(a.cols()));
+                ctx.advance_compute(flops / (rate * eff), flops);
+                Block::Proxy { rows: a.rows(), cols: hi - lo, seed: 0 }
+            }
+            // PJRT artifacts are square-block-only; panels take the
+            // native path like any other unsupported shape.
+            _ => ctx.timed_compute(flops, || {
+                let panel = b.as_mat().col_slice(lo, hi);
+                Block::Real(gemm::matmul(a.as_mat(), &panel))
+            }),
+        }
+    }
+
     /// `C + A · B` on blocks (DNS partial sums).
     pub fn matmul_acc(&self, ctx: &Ctx, c: Block, a: &Block, b: &Block) -> Block {
         let flops = gemm::gemm_flops(a.rows(), a.cols(), b.cols())
@@ -301,6 +330,40 @@ mod tests {
         });
         let want = gemm::matmul(&Mat::random(16, 16, 1), &Mat::random(16, 16, 2));
         assert_allclose(&got.as_mat().data, &want.data, 1e-5, 1e-6);
+    }
+
+    #[test]
+    fn panel_matmul_bit_identical_to_full_product() {
+        let got = with_ctx(|ctx| {
+            let a = Block::real(Mat::random(24, 24, 5));
+            let b = Block::real(Mat::random(24, 24, 6));
+            let full = Compute::Native.matmul(ctx, &a, &b);
+            let panels: Vec<crate::matrix::block::Block> = [(0usize, 7usize), (7, 16), (16, 24)]
+                .iter()
+                .map(|&(lo, hi)| Compute::Native.matmul_panel(ctx, &a, &b, lo, hi))
+                .collect();
+            (full, crate::matrix::block::Block::hstack(panels))
+        });
+        // exact equality, not allclose: same kernel, same fp order
+        assert_eq!(got.0.as_mat().data, got.1.as_mat().data);
+    }
+
+    #[test]
+    fn panel_matmul_modeled_totals_match_full_block() {
+        let rate = 1e9;
+        let (t_full, t_panels) = with_ctx(|ctx| {
+            let a = Block::proxy(64, 1);
+            let b = Block::proxy(64, 2);
+            let t0 = ctx.now();
+            let _ = Compute::Modeled { rate }.matmul(ctx, &a, &b);
+            let t1 = ctx.now();
+            for (lo, hi) in [(0usize, 32usize), (32, 64)] {
+                let p = Compute::Modeled { rate }.matmul_panel(ctx, &a, &b, lo, hi);
+                assert!(p.is_proxy());
+            }
+            (t1 - t0, ctx.now() - t1)
+        });
+        assert!((t_full - t_panels).abs() < 1e-15, "full {t_full} vs panels {t_panels}");
     }
 
     #[test]

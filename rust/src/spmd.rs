@@ -64,6 +64,9 @@ pub struct Ctx {
     /// used to give every group instance a distinct tag namespace that is
     /// consistent across members without any coordination messages.
     tag_alloc: RefCell<HashMap<u64, u64>>,
+    /// Non-zero while the clock is forked onto a non-blocking operation's
+    /// comm timeline (see [`Ctx::with_clock`]) — guards against nesting.
+    overlap_depth: Cell<u32>,
 }
 
 impl Ctx {
@@ -85,6 +88,7 @@ impl Ctx {
             collectives,
             metrics: RankMetrics::new(),
             tag_alloc: RefCell::new(HashMap::new()),
+            overlap_depth: Cell::new(0),
         }
     }
 
@@ -229,6 +233,104 @@ impl Ctx {
         self.clock.set(after);
         self.metrics.on_send(bytes_out, 0.0);
         self.metrics.on_recv(env.bytes, after - ready);
+        env.payload
+    }
+
+    // ------------------------------------------- non-blocking primitives
+    //
+    // The split-phase machinery behind `comm::nb`: a non-blocking group
+    // operation *forks* the virtual clock at `*_start` (the fork is the
+    // operation's private comm timeline), runs its deferred message
+    // rounds on the fork inside `wait()`, and finally *merges* by taking
+    // the max of the main clock and the fork — which is exactly the
+    // overlap-aware cost rule: across an overlap region a rank's clock
+    // advances by `max(T_comm, T_comp)` instead of their sum.
+
+    /// Run `f` with the clock forked to `at`; every send/receive/compute
+    /// inside charges the fork.  Returns `f`'s result and the fork's
+    /// final value; the main clock is restored untouched.  Panics on
+    /// nesting (a deferred phase must not `wait()` another handle).
+    ///
+    /// Unwind-safe: if `f` panics (a mailbox-poison failure surfacing
+    /// through a handle's `wait()` is an expected event), a drop guard
+    /// restores the main clock — folding in the fork's progress so a
+    /// caught panic leaves `now()` consistent — and clears the nesting
+    /// flag, instead of leaving the rank stuck on the fork.
+    pub(crate) fn with_clock<R>(&self, at: f64, f: impl FnOnce() -> R) -> (R, f64) {
+        assert_eq!(
+            self.overlap_depth.get(),
+            0,
+            "rank {}: nested overlap region — a pending operation's wait() must not \
+             run inside another pending operation's deferred phase",
+            self.rank
+        );
+        struct Unfork<'c> {
+            ctx: &'c Ctx,
+            saved: f64,
+        }
+        impl Drop for Unfork<'_> {
+            fn drop(&mut self) {
+                let fork_end = self.ctx.clock.replace(self.saved);
+                if std::thread::panicking() && fork_end > self.saved {
+                    self.ctx.clock.set(fork_end);
+                }
+                self.ctx.overlap_depth.set(0);
+            }
+        }
+        self.overlap_depth.set(1);
+        let saved = self.clock.replace(at);
+        let guard = Unfork { ctx: self, saved };
+        let r = f();
+        let end = self.clock.get();
+        drop(guard);
+        (r, end)
+    }
+
+    /// Merge a completed comm timeline back into the main clock:
+    /// `clock = max(clock, comm_end)`.  The time both timelines spent
+    /// advancing concurrently is recorded as overlap-hidden comm time.
+    pub(crate) fn finish_overlap(&self, t0: f64, comm_end: f64) {
+        let main = self.clock.get();
+        let hidden = (main - t0).min(comm_end - t0).max(0.0);
+        if hidden > 0.0 {
+            self.metrics.on_overlap(hidden);
+        }
+        if comm_end > main {
+            self.clock.set(comm_end);
+        }
+    }
+
+    /// Post half of a split duplex exchange: deliver `msg` to `dst`
+    /// stamped ready at the current clock, advancing **no** clock — the
+    /// transfer is paid once, by [`Ctx::recv_duplex`] at completion
+    /// (single-port duplex, like [`Ctx::send_recv_msg`] split in two).
+    pub(crate) fn post_only(&self, dst: usize, tag: u64, msg: Msg) {
+        debug_assert!(dst < self.world, "send to rank {dst} outside world");
+        debug_assert_ne!(dst, self.rank, "self-send is a framework bug");
+        debug_assert_ne!(
+            tag, CLOCK_GATHER_TAG,
+            "tag u64::MAX is reserved for the runtime's end-of-run clock gather"
+        );
+        let bytes = msg.bytes();
+        self.metrics.on_send(bytes, 0.0);
+        self.transport.post(
+            dst,
+            Envelope { src: self.rank, tag, bytes, ready: self.clock.get(), payload: msg },
+        );
+    }
+
+    /// Completing receive of a split duplex exchange started with
+    /// [`Ctx::post_only`]: the round costs `max(send, recv)` once,
+    /// starting at `max(own_clock, sender_ready)` — identical to the
+    /// blocking [`Ctx::send_recv_msg`] when no compute was interleaved.
+    pub(crate) fn recv_duplex(&self, src: usize, tag: u64, sent_bytes: usize) -> Msg {
+        let env = self.transport.take(self.rank, src, tag);
+        let before = self.clock.get();
+        let start = before.max(env.ready);
+        let cost = self.cost.msg(sent_bytes).max(self.cost.msg(env.bytes));
+        let after = start + cost;
+        self.clock.set(after);
+        self.metrics.on_recv(env.bytes, after - before);
         env.payload
     }
 
@@ -384,7 +486,23 @@ impl Runtime {
 
         pool::scoped_run(world, &|rank| {
             let ctx = Ctx::new(rank, transport.clone(), self.backend.clone(), self.machine);
-            let r = f(&ctx);
+            let r = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&ctx))) {
+                Ok(r) => r,
+                Err(e) => {
+                    // A dying rank strands every peer blocked on a message
+                    // it will never send.  Poison the transport so blocked
+                    // receives fail promptly with the root cause (and the
+                    // stranded rank/src/tag) instead of burning the 60 s
+                    // deadlock timeout.
+                    let msg = e
+                        .downcast_ref::<String>()
+                        .map(|s| s.as_str())
+                        .or_else(|| e.downcast_ref::<&str>().copied())
+                        .unwrap_or("<non-string panic>");
+                    transport.fail(&format!("rank {rank} died mid-run: {msg}"));
+                    std::panic::resume_unwind(e);
+                }
+            };
             transport.close(rank);
             *slots[rank].lock().unwrap() = Some((r, ctx.now(), ctx.metrics.snapshot()));
         });
@@ -418,10 +536,16 @@ impl Runtime {
         if world == 1 {
             return self.run_threads(Fabric::new(1), f);
         }
-        let mut proc = launch::establish(world).expect("establish tcp multi-process world");
+        let proc = launch::establish(world).expect("establish tcp multi-process world");
         let me = proc.rank();
         let transport: Arc<dyn Transport> = proc.transport();
         let wall0 = Instant::now();
+        // Parent only: poll worker liveness in the background and poison
+        // the local transport when one dies, so a collective blocked on
+        // the dead rank fails promptly with its exit status instead of
+        // hanging until the deadlock oracle fires.
+        let watchdog_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let watchdog = proc.spawn_watchdog(watchdog_stop.clone());
         let ctx = Ctx::new(me, transport.clone(), self.backend.clone(), self.machine);
         let r = f(&ctx);
 
@@ -440,8 +564,22 @@ impl Runtime {
                 // nothing at all — is in flight.
                 let timeout = crate::comm::transport::RECV_TIMEOUT;
                 let deadline = Instant::now() + timeout;
+                // Clean-exit grace: a worker that already exited 0 may
+                // still have its clock frame in flight for a moment —
+                // but not for seconds.  Past the grace window, a clean
+                // exit with no clock means the worker's closure left
+                // the process early (exit(0) mid-run), which no failure
+                // watchdog can flag; name it instead of the bare
+                // 60 s "hung?" timeout.
+                let grace = Instant::now() + Duration::from_secs(5);
                 while !transport.probe(0, src, CLOCK_GATHER_TAG) {
                     proc.check_children().expect("tcp worker process died mid-run");
+                    assert!(
+                        !(Instant::now() > grace && proc.child_exited_ok(src)),
+                        "rank 0: worker rank {src} exited successfully without posting \
+                         its end-of-run clock — did its SPMD closure exit the process \
+                         early?"
+                    );
                     assert!(
                         Instant::now() <= deadline,
                         "rank 0: clock gather from rank {src} timed out after {timeout:?} \
@@ -468,6 +606,10 @@ impl Runtime {
             (vec![ctx.now()], ctx.now())
         };
         transport.close(me);
+        watchdog_stop.store(true, std::sync::atomic::Ordering::Release);
+        if let Some(h) = watchdog {
+            let _ = h.join();
+        }
         let metrics = vec![ctx.metrics.snapshot()];
         let wall = wall0.elapsed();
         proc.finish().expect("tcp worker process failed");

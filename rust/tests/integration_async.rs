@@ -1,0 +1,224 @@
+//! Non-blocking collectives, end to end: `*_start`/`wait()` parity with
+//! the blocking forms (values **and** virtual clocks when no compute is
+//! interleaved), overlap-aware clocks when compute is interleaved,
+//! transport independence of the pipelined Cannon/DNS variants, and the
+//! failure path — a rank dying mid-collective must surface rank/src/tag
+//! diagnostics promptly instead of hanging a blocked `wait()`.
+
+use std::time::{Duration, Instant};
+
+use foopar::algos::{cannon, mmm_dns};
+use foopar::comm::backend::BackendProfile;
+use foopar::comm::cost::CostParams;
+use foopar::comm::group::Group;
+use foopar::matrix::block::BlockSource;
+use foopar::runtime::compute::Compute;
+use foopar::spmd::{Ctx, RunResult};
+use foopar::Runtime;
+
+fn fixed() -> BackendProfile {
+    BackendProfile::openmpi_fixed()
+}
+
+fn go<R, F>(transport: &str, world: usize, cost: CostParams, f: F) -> RunResult<R>
+where
+    R: Send,
+    F: Fn(&Ctx) -> R + Sync,
+{
+    Runtime::builder()
+        .world(world)
+        .backend_profile(fixed())
+        .cost(cost)
+        .transport(transport)
+        .build()
+        .expect("build runtime")
+        .run(f)
+}
+
+/// With no compute between start and wait, every `*_start` must cost
+/// exactly what its blocking form costs — the overlap machinery has to
+/// be invisible when there is nothing to overlap.
+#[test]
+fn adjacent_start_wait_clocks_match_blocking() {
+    let cost = CostParams::qdr_infiniband();
+    for p in [2usize, 4, 5, 8] {
+        let blocking = go("local", p, cost, |ctx| {
+            let g = Group::world(ctx);
+            let s = g.shift(1, vec![1.5f64; 32]);
+            let b = g.bcast(0, (ctx.rank == 0).then(|| s.clone()));
+            let r = g.reduce(0, b.iter().sum::<f64>(), |a, b| a + b);
+            let ar = g.allreduce(ctx.rank as u64, |a, b| a + b);
+            let ag = g.allgather(ctx.rank as u64);
+            (r, ar, ag, ctx.now().to_bits())
+        });
+        let pending = go("local", p, cost, |ctx| {
+            let g = Group::world(ctx);
+            let s = g.shift_start(1, vec![1.5f64; 32]).wait();
+            let b = g.bcast_start(0, (ctx.rank == 0).then(|| s.clone())).wait();
+            let r = g.reduce_start(0, b.iter().sum::<f64>(), |a, b| a + b).wait();
+            let ar = g.allreduce_start(ctx.rank as u64, |a, b| a + b).wait();
+            let ag = g.allgather_start(ctx.rank as u64).wait();
+            (r, ar, ag, ctx.now().to_bits())
+        });
+        assert_eq!(blocking.results, pending.results, "p={p}");
+        assert_eq!(blocking.clocks, pending.clocks, "p={p}");
+    }
+}
+
+/// The headline: interleaved compute hides comm, `T_P` drops from
+/// compute + comm to max(compute, comm).
+#[test]
+fn overlap_t_p_is_max_of_comm_and_comp() {
+    let unit = CostParams::new(1.0, 0.0);
+    let p = 8;
+    let blocking = go("local", p, unit, |ctx| {
+        let g = Group::world(ctx);
+        let v = g.shift(1, 0u8);
+        ctx.advance_compute(5.0, 0.0);
+        let _ = v;
+        ctx.now()
+    });
+    let overlapped = go("local", p, unit, |ctx| {
+        let g = Group::world(ctx);
+        let h = g.shift_start(1, 0u8);
+        ctx.advance_compute(5.0, 0.0);
+        let _ = h.wait();
+        ctx.now()
+    });
+    assert!((blocking.t_parallel - 6.0).abs() < 1e-12, "{}", blocking.t_parallel);
+    assert!((overlapped.t_parallel - 5.0).abs() < 1e-12, "{}", overlapped.t_parallel);
+}
+
+/// Every `*_start` must produce bit-identical results and clocks on the
+/// shared-memory fabric and on tcp-loopback (real sockets + wire codec).
+#[test]
+fn start_forms_transport_parity() {
+    let cost = CostParams::qdr_infiniband();
+    let run_all = |transport: &str| {
+        go(transport, 6, cost, |ctx| {
+            let g = Group::world(ctx);
+            let h1 = g.shift_start(2, format!("s{}", ctx.rank));
+            ctx.advance_compute(1e-5, 0.0);
+            let s = h1.wait();
+            let b = g.bcast_start(1, (ctx.rank == 1).then(|| vec![2.5f64, -1.0])).wait();
+            let r = g.reduce_start(0, format!("{}.", ctx.rank), |a, b| a + &b).wait();
+            let ag = g.allgather_start((ctx.rank as u64, s.clone())).wait();
+            let aa = g
+                .alltoall_start((0..6).map(|j| ctx.rank * 10 + j).collect::<Vec<usize>>())
+                .wait();
+            let ga = g.gather_start(2, ctx.rank as i64 * 3).wait();
+            let sc = g.scan_start(ctx.rank as u64 + 1, |a, b| a + b).wait();
+            g.barrier_start().wait();
+            let ar = g.allreduce_start(ctx.rank as i64, |a, b| a.min(b)).wait();
+            ((s, b, r), (ag, aa), (ga, sc, ar), ctx.now().to_bits())
+        })
+    };
+    let shm = run_all("local");
+    let tcp = run_all("tcp-loopback");
+    assert_eq!(shm.results, tcp.results, "results diverged across transports");
+    assert_eq!(shm.clocks, tcp.clocks, "virtual clocks diverged across transports");
+}
+
+/// Pipelined Cannon: bit-identical product across transports and vs the
+/// blocking algorithm (real data, native kernel).
+#[test]
+fn pipelined_cannon_bit_identical_across_transports() {
+    let (q, bsz) = (2usize, 8usize);
+    let a = BlockSource::real(bsz, 61);
+    let b = BlockSource::real(bsz, 62);
+    let collect = |transport: &str, pipelined: bool| {
+        let res = go(transport, q * q, CostParams::free(), |ctx| {
+            if pipelined {
+                cannon::mmm_cannon_pipelined(ctx, &Compute::Native, q, &a, &b)
+            } else {
+                cannon::mmm_cannon(ctx, &Compute::Native, q, &a, &b)
+            }
+        });
+        cannon::collect_c(&res.results, q, bsz)
+    };
+    let shm_pipe = collect("local", true);
+    let tcp_pipe = collect("tcp-loopback", true);
+    let shm_block = collect("local", false);
+    assert_eq!(shm_pipe.data, tcp_pipe.data, "pipelined Cannon diverged across transports");
+    assert_eq!(shm_pipe.data, shm_block.data, "pipelined Cannon diverged from blocking");
+}
+
+/// Pipelined DNS: bit-identical product across transports and vs the
+/// blocking algorithm (real data, native kernel).
+#[test]
+fn pipelined_dns_bit_identical_across_transports() {
+    let (q, bsz, chunks) = (2usize, 8usize, 3usize);
+    let a = BlockSource::real(bsz, 71);
+    let b = BlockSource::real(bsz, 72);
+    let collect = |transport: &str, pipelined: bool| {
+        let res = go(transport, q * q * q, CostParams::free(), |ctx| {
+            if pipelined {
+                mmm_dns::mmm_dns_pipelined(ctx, &Compute::Native, q, &a, &b, chunks)
+            } else {
+                mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &b)
+            }
+        });
+        mmm_dns::collect_c(&res.results, q, bsz)
+    };
+    let shm_pipe = collect("local", true);
+    let tcp_pipe = collect("tcp-loopback", true);
+    let shm_block = collect("local", false);
+    assert_eq!(shm_pipe.data, tcp_pipe.data, "pipelined DNS diverged across transports");
+    assert_eq!(shm_pipe.data, shm_block.data, "pipelined DNS diverged from blocking");
+}
+
+/// A worker dying mid-collective must fail the blocked `wait()` promptly
+/// — with the dead rank and the stranded receive's (src, tag) — on both
+/// thread transports, not after the 60 s deadlock oracle.
+#[test]
+fn dying_rank_fails_blocked_wait_promptly() {
+    for transport in ["local", "tcp-loopback"] {
+        let t0 = Instant::now();
+        let r = std::panic::catch_unwind(|| {
+            go(transport, 2, CostParams::free(), |ctx| {
+                let g = Group::world(ctx);
+                if ctx.rank == 1 {
+                    panic!("worker died mid-collective");
+                }
+                let h = g.shift_start(1, 7u64);
+                h.wait()
+            })
+        });
+        let err = r.expect_err("run must fail");
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "{transport}: failure was not prompt ({:?})",
+            t0.elapsed()
+        );
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string panic>".into());
+        assert!(msg.contains("rank 1 died mid-run"), "{transport}: {msg}");
+        assert!(msg.contains("worker died mid-collective"), "{transport}: {msg}");
+        assert!(msg.contains("src=1"), "{transport}: {msg}");
+    }
+}
+
+/// Same failure discipline for a blocking collective: the poison must
+/// reach an ordinary `recv` too (the non-blocking path shares it).
+#[test]
+fn dying_rank_fails_blocking_collective_promptly() {
+    let t0 = Instant::now();
+    let r = std::panic::catch_unwind(|| {
+        go("local", 3, CostParams::free(), |ctx| {
+            let g = Group::world(ctx);
+            if ctx.rank == 2 {
+                panic!("boom");
+            }
+            g.allgather(ctx.rank as u64)
+        })
+    });
+    let err = r.expect_err("run must fail");
+    assert!(t0.elapsed() < Duration::from_secs(30));
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .unwrap_or_else(|| "<non-string panic>".into());
+    assert!(msg.contains("rank 2 died mid-run"), "{msg}");
+}

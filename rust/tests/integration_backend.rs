@@ -153,6 +153,29 @@ fn custom_collectives_strategy_matches_equivalent_profile() {
     }
 }
 
+#[test]
+fn custom_collectives_get_nonblocking_defaults_for_free() {
+    // `AllLinear` overrides none of the `*_start` methods: the trait
+    // defaults defer the whole blocking op onto the handle's comm
+    // timeline — results match, and the overlap clock rule applies.
+    registry::register(Arc::new(AllLinearBackend));
+    let res = Runtime::builder()
+        .world(4)
+        .backend("test-all-linear")
+        .cost(CostParams::new(1.0, 0.0))
+        .run(|ctx| {
+            let g = Group::world(ctx);
+            let h = g.allreduce_start(ctx.rank as i64, |a, b| a + b);
+            ctx.advance_compute(50.0, 0.0); // hides the linear reduce+bcast
+            (h.wait(), ctx.now())
+        })
+        .expect("runtime");
+    for (v, t) in &res.results {
+        assert_eq!(*v, 6);
+        assert!((t - 50.0).abs() < 1e-12, "comm not hidden: clock {t}");
+    }
+}
+
 // ------------------------------------------------- dispatch parity
 //
 // Reference implementations: the seed's free-function collectives as

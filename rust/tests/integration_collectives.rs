@@ -200,8 +200,13 @@ fn chained_op_sequences_never_deadlock_or_crosstalk() {
                     0 => seq.map_d(|v| v + 1),
                     1 => seq.shift_d(1),
                     2 => {
+                        // all_gather_d consumes the sequence (ownership
+                        // convention); rebuild from the gathered vector
                         let g = seq.all_gather_d();
-                        seq.map_d(move |v| v + g.map_or(0, |xs| xs.len() as i64))
+                        DistSeq::from_fn(ctx, r.clone(), move |i| {
+                            let xs = g.expect("member gathered the sequence");
+                            xs[i] + xs.len() as i64
+                        })
                     }
                     _ => {
                         let total = seq.all_reduce_d(|a, b| a + b);
