@@ -1,0 +1,162 @@
+//! Bench: packed GEMM microkernel vs the frozen seed kernel.
+//!
+//! Run with:  cargo bench --bench gemm_kernel
+//!
+//! For each block edge b ∈ {256, 512, 1024} this driver wall-times
+//!
+//! * the **seed** kernel ([`gemm::matmul_seed_ikj`], the PR-0 scalar
+//!   cache-blocked ikj loop, frozen forever as the trajectory origin),
+//! * the **packed** register-tiled kernel at 1, 2 and 4
+//!   `threads_per_rank`,
+//!
+//! and emits `BENCH_gemm.json` — the perf-trajectory artifact CI uploads
+//! next to `BENCH_overlap.json`.  A committed baseline lives at the repo
+//! root; regenerate it on quiet hardware when the kernel changes.
+//!
+//! The packed kernel must beat the seed by ≥ 4× single-threaded at
+//! b = 512 on commodity AVX hardware; the run fails loudly if it is not
+//! at least faster, so CI catches kernel regressions.
+
+use std::io::Write;
+use std::time::Instant;
+
+use foopar::matrix::dense::Mat;
+use foopar::matrix::gemm;
+use foopar::metrics::render_table;
+
+struct Row {
+    kernel: &'static str,
+    b: usize,
+    threads: usize,
+    iters: usize,
+    secs_per_iter: f64,
+    gflops: f64,
+    speedup_vs_seed: f64,
+}
+
+/// Wall-time `f` for `iters` repetitions after one warmup, returning
+/// seconds per iteration.
+fn time_iters<F: FnMut()>(mut f: F, iters: usize) -> f64 {
+    f(); // warmup (primes scratch pools / worker checkout)
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Iteration count targeting roughly a second of seed-kernel work per
+/// configuration (clamped so b = 1024 stays CI-friendly).
+fn iters_for(b: usize) -> usize {
+    match b {
+        0..=256 => 12,
+        257..=512 => 6,
+        _ => 2,
+    }
+}
+
+fn main() {
+    let mut rows: Vec<Row> = Vec::new();
+
+    for &b in &[256usize, 512, 1024] {
+        let x = Mat::random(b, b, 1);
+        let y = Mat::random(b, b, 2);
+        let iters = iters_for(b);
+        let flops = gemm::gemm_flops(b, b, b);
+
+        let seed_secs = time_iters(
+            || {
+                std::hint::black_box(gemm::matmul_seed_ikj(&x, &y));
+            },
+            iters,
+        );
+        rows.push(Row {
+            kernel: "seed",
+            b,
+            threads: 1,
+            iters,
+            secs_per_iter: seed_secs,
+            gflops: flops / seed_secs / 1e9,
+            speedup_vs_seed: 1.0,
+        });
+
+        for &threads in &[1usize, 2, 4] {
+            let secs = time_iters(
+                || {
+                    std::hint::black_box(gemm::matmul_mt(&x, &y, threads));
+                },
+                iters,
+            );
+            rows.push(Row {
+                kernel: "packed",
+                b,
+                threads,
+                iters,
+                secs_per_iter: secs,
+                gflops: flops / secs / 1e9,
+                speedup_vs_seed: seed_secs / secs,
+            });
+        }
+    }
+
+    println!("== packed GEMM kernel vs frozen seed (wall clock) ==\n");
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.kernel.to_string(),
+                r.b.to_string(),
+                r.threads.to_string(),
+                r.iters.to_string(),
+                format!("{:.4}", r.secs_per_iter),
+                format!("{:.2}", r.gflops),
+                format!("{:.2}x", r.speedup_vs_seed),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            &["kernel", "b", "threads", "iters", "s/iter", "GFlop/s", "vs seed"],
+            &table
+        )
+    );
+
+    // Hand-rolled JSON (no serde in the image's crate cache).
+    let entries: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "  {{\"kernel\": \"{}\", \"b\": {}, \"threads\": {}, \"iters\": {}, \
+                 \"secs_per_iter\": {:.6e}, \"gflops\": {:.4}, \"speedup_vs_seed\": {:.4}}}",
+                r.kernel, r.b, r.threads, r.iters, r.secs_per_iter, r.gflops, r.speedup_vs_seed
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n\"bench\": \"gemm_kernel\",\n\"unit\": \"wall seconds\",\n\
+         \"seed_kernel\": \"PR-0 scalar cache-blocked ikj (frozen)\",\n\
+         \"results\": [\n{}\n]\n}}\n",
+        entries.join(",\n")
+    );
+    let mut f = std::fs::File::create("BENCH_gemm.json").expect("create BENCH_gemm.json");
+    f.write_all(json.as_bytes()).expect("write BENCH_gemm.json");
+    println!("wrote BENCH_gemm.json");
+
+    // Regression tripwire: the packed kernel must not fall behind the
+    // seed anywhere (the ≥4× target is asserted on quiet hardware; CI
+    // machines are noisy/heterogeneous, so the hard gate is 1×).
+    let regressions: Vec<&Row> = rows
+        .iter()
+        .filter(|r| r.kernel == "packed" && r.speedup_vs_seed < 1.0)
+        .collect();
+    if !regressions.is_empty() {
+        for r in &regressions {
+            eprintln!(
+                "ERROR: packed kernel slower than seed at b={} threads={} ({:.2}x)",
+                r.b, r.threads, r.speedup_vs_seed
+            );
+        }
+        std::process::exit(1);
+    }
+}

@@ -286,6 +286,9 @@ fn establish_parent(world: usize) -> crate::Result<ProcWorld> {
         match rendezvous.accept() {
             Ok((stream, _)) => {
                 stream.set_nonblocking(false)?;
+                // tiny line-oriented control messages: defeat Nagle so
+                // the port-map round trip is not delayed
+                let _ = stream.set_nodelay(true);
                 stream.set_read_timeout(Some(RENDEZVOUS_TIMEOUT))?;
                 let mut line = String::new();
                 BufReader::new(stream.try_clone()?).read_line(&mut line)?;
@@ -367,6 +370,8 @@ fn establish_worker(rank: usize, world: usize) -> crate::Result<ProcWorld> {
 
     let mut stream = TcpStream::connect(&rdv)
         .with_context(|| format!("rank {rank}: connect rendezvous {rdv}"))?;
+    // registration + port map are single short lines — defeat Nagle
+    let _ = stream.set_nodelay(true);
     writeln!(stream, "{rank} {port}").context("register with rendezvous")?;
     let mut line = String::new();
     stream

@@ -34,7 +34,7 @@
 //! the transport-parity tests drive the full wire path without needing
 //! process orchestration.
 
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -62,6 +62,38 @@ pub struct TcpTransport {
     /// Local ranks that have not yet closed; at zero, sockets shut down.
     open_local: Mutex<usize>,
     shutdown: AtomicBool,
+    /// Reusable frame-payload buffers: `post` encodes each outgoing
+    /// message into a pooled `Vec<u8>` instead of allocating per frame
+    /// (block-sized payloads make per-send allocation a measurable tax).
+    frame_pool: Mutex<Vec<Vec<u8>>>,
+}
+
+/// Upper bound on pooled frame buffers kept alive (the pool exists to
+/// amortize steady-state sends, not to retain peak memory).
+const FRAME_POOL_MAX: usize = 16;
+
+/// Write one frame as a **single vectored write** — stack header plus
+/// pooled payload, no concatenation copy — falling back to `write_all`
+/// for the rare short write.  Retries `Interrupted` like `write_all`
+/// does internally (the multi-process launcher forks workers, so
+/// signals mid-send are a real event, not a failure).
+fn write_frame(stream: &mut TcpStream, header: &[u8], payload: &[u8]) -> std::io::Result<()> {
+    let n = loop {
+        match stream.write_vectored(&[IoSlice::new(header), IoSlice::new(payload)]) {
+            Ok(n) => break n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    };
+    if n >= header.len() + payload.len() {
+        return Ok(());
+    }
+    if n < header.len() {
+        stream.write_all(&header[n..])?;
+        stream.write_all(payload)
+    } else {
+        stream.write_all(&payload[n - header.len()..])
+    }
 }
 
 impl TcpTransport {
@@ -108,6 +140,7 @@ impl TcpTransport {
             conns: (0..world).map(|_| Mutex::new(None)).collect(),
             open_local: Mutex::new(listeners.len()),
             shutdown: AtomicBool::new(false),
+            frame_pool: Mutex::new(Vec::new()),
         });
         for (rank, listener) in listeners {
             let tt = t.clone();
@@ -270,6 +303,22 @@ impl TcpTransport {
             .as_ref()
             .unwrap_or_else(|| panic!("rank {me} is not local to this process"))
     }
+
+    /// Check a payload buffer out of the frame pool (empty, capacity
+    /// retained from earlier frames).
+    fn take_frame_buf(&self) -> Vec<u8> {
+        let mut buf = self.frame_pool.lock().unwrap().pop().unwrap_or_default();
+        buf.clear();
+        buf
+    }
+
+    /// Return a payload buffer to the pool (dropped when full).
+    fn give_frame_buf(&self, buf: Vec<u8>) {
+        let mut pool = self.frame_pool.lock().unwrap();
+        if pool.len() < FRAME_POOL_MAX {
+            pool.push(buf);
+        }
+    }
 }
 
 impl Transport for TcpTransport {
@@ -282,30 +331,34 @@ impl Transport for TcpTransport {
     }
 
     fn post(&self, dst: usize, env: Envelope) {
-        // frame = len | src | tag | bytes | ready | msg wire form.
-        // Capacity is a hint only — env.bytes is the *modeled* size,
-        // which for lazy proxy payloads is orders of magnitude larger
-        // than their encoding, so cap it instead of pre-allocating GBs.
-        let mut frame = Vec::with_capacity(4 + 32 + 24 + env.bytes.min(1 << 20));
-        frame.extend_from_slice(&[0u8; 4]);
-        frame.extend_from_slice(&(env.src as u64).to_le_bytes());
-        frame.extend_from_slice(&env.tag.to_le_bytes());
-        frame.extend_from_slice(&(env.bytes as u64).to_le_bytes());
-        frame.extend_from_slice(&env.ready.to_bits().to_le_bytes());
-        env.payload.encode_into(&mut frame);
-        let len = u32::try_from(frame.len() - 4).expect("frame over 4 GiB");
-        frame[0..4].copy_from_slice(&len.to_le_bytes());
+        // frame = len | src | tag | bytes | ready | msg wire form.  The
+        // fixed 36-byte head lives on the stack; the payload encoding
+        // goes into a pooled, reusable buffer; the two leave the process
+        // as one vectored write — no per-frame allocation, no
+        // header+payload concatenation copy.
+        let mut payload = self.take_frame_buf();
+        env.payload.encode_into(&mut payload);
+        let len = u32::try_from(32 + payload.len()).expect("frame over 4 GiB");
+        let mut header = [0u8; 36];
+        header[0..4].copy_from_slice(&len.to_le_bytes());
+        header[4..12].copy_from_slice(&(env.src as u64).to_le_bytes());
+        header[12..20].copy_from_slice(&env.tag.to_le_bytes());
+        header[20..28].copy_from_slice(&(env.bytes as u64).to_le_bytes());
+        header[28..36].copy_from_slice(&env.ready.to_bits().to_le_bytes());
 
-        let mut guard = self.conns[dst].lock().unwrap();
-        if guard.is_none() {
-            *guard = Some(self.connect(dst));
+        {
+            let mut guard = self.conns[dst].lock().unwrap();
+            if guard.is_none() {
+                *guard = Some(self.connect(dst));
+            }
+            if let Err(e) = write_frame(guard.as_mut().unwrap(), &header, &payload) {
+                panic!(
+                    "rank {}: tcp send (dst={dst}, tag={:#x}, {} bytes) failed: {e}",
+                    env.src, env.tag, env.bytes
+                );
+            }
         }
-        if let Err(e) = guard.as_mut().unwrap().write_all(&frame) {
-            panic!(
-                "rank {}: tcp send (dst={dst}, tag={:#x}, {} bytes) failed: {e}",
-                env.src, env.tag, env.bytes
-            );
-        }
+        self.give_frame_buf(payload);
     }
 
     fn take(&self, me: usize, src: usize, tag: u64) -> Envelope {

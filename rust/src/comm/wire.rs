@@ -321,7 +321,7 @@ impl WireData for Mat {
             .checked_mul(cols)
             .ok_or(WireError::Malformed("matrix dims overflow"))?;
         let data = f32::decode_many(n, r)?;
-        Ok(Mat { rows, cols, data })
+        Ok(Mat { rows, cols, data: data.into() })
     }
 }
 

@@ -34,6 +34,12 @@ pub struct MachineConfig {
     pub tw: f64,
     /// Largest core count in the queue (Carver: 512).
     pub max_cores: usize,
+    /// Cores each rank's block kernels use (the BLAS-threads-per-process
+    /// knob).  The paper runs one single-threaded BLAS per core, so every
+    /// built-in machine says 1; raise it (config file `threads_per_rank`,
+    /// CLI `--threads`, or `Runtime::builder().threads_per_rank(..)`) to
+    /// run fewer, fatter ranks — results are bit-identical either way.
+    pub threads_per_rank: usize,
     /// Backend names to sweep on this machine.
     pub backends: Vec<String>,
 }
@@ -53,6 +59,7 @@ impl MachineConfig {
             ts: 2.0e-6,
             tw: 2.5e-10,
             max_cores: 512,
+            threads_per_rank: 1,
             backends: vec!["openmpi-fixed".into()],
         }
     }
@@ -67,6 +74,7 @@ impl MachineConfig {
             ts: 2.5e-6,
             tw: 2.5e-10,
             max_cores: 512,
+            threads_per_rank: 1,
             backends: vec![
                 "openmpi-fixed".into(),
                 "openmpi-stock".into(),
@@ -85,6 +93,7 @@ impl MachineConfig {
             ts: 2.0e-7,
             tw: 1.0e-10,
             max_cores: 64,
+            threads_per_rank: 1,
             backends: vec!["shmem".into()],
         }
     }
@@ -110,6 +119,12 @@ impl MachineConfig {
             ts: get("ts")?.as_f64()?,
             tw: get("tw")?.as_f64()?,
             max_cores: get("max_cores")?.as_f64()? as usize,
+            threads_per_rank: kv
+                .get("threads_per_rank")
+                .map(|v| v.as_f64())
+                .transpose()?
+                .map(|v| (v as usize).max(1))
+                .unwrap_or(1),
             backends: match kv.get("backends") {
                 Some(v) => v.as_list()?.to_vec(),
                 None => vec!["openmpi-fixed".into()],
@@ -248,6 +263,16 @@ mod tests {
         assert_eq!(m.rate, 1.5e9);
         assert_eq!(m.backends, vec!["a", "b"]);
         assert_eq!(m.peak, 1.5e9); // defaults to rate
+        assert_eq!(m.threads_per_rank, 1); // defaults to 1 BLAS thread
+    }
+
+    #[test]
+    fn threads_per_rank_parses_and_clamps() {
+        let base = "name = \"t\"\nrate = 1e9\nts = 1e-6\ntw = 1e-10\nmax_cores = 8\n";
+        let kv = parse_kv(&format!("{base}threads_per_rank = 4\n")).unwrap();
+        assert_eq!(MachineConfig::from_kv(&kv).unwrap().threads_per_rank, 4);
+        let kv = parse_kv(&format!("{base}threads_per_rank = 0\n")).unwrap();
+        assert_eq!(MachineConfig::from_kv(&kv).unwrap().threads_per_rank, 1);
     }
 
     #[test]

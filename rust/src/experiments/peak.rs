@@ -1,44 +1,96 @@
-//! Single-core "empirical peak" calibration (§6).
+//! Single-core / single-rank "empirical peak" calibration (§6).
 //!
 //! The paper measures reference performance with a single-core C+MKL
-//! matrix multiplication; our analogue executes the AOT Pallas GEMM
-//! artifact through PJRT on one rank and reports flop/s, alongside the
-//! native-gemm rate.  The resulting number is what the `rate` field of a
-//! local [`crate::config::MachineConfig`] should be set to when running
-//! real-mode efficiency experiments on this host.
+//! matrix multiplication and normalizes every efficiency figure by it.
+//! Our analogue sweeps three paths per block size:
+//!
+//! * **seed** — the frozen PR-0 scalar ikj kernel
+//!   ([`gemm::matmul_seed_ikj`]), the fixed origin of the perf
+//!   trajectory;
+//! * **native** — the packed register-tiled kernel at 1/2/4
+//!   `threads_per_rank`, measured through the real
+//!   [`Compute::Native`](crate::runtime::compute::Compute) + metrics
+//!   path, so the reported GFlop/s is read back from
+//!   [`MetricsSnapshot::gflops`](crate::metrics::MetricsSnapshot::gflops)
+//!   — exactly the figure real-mode runs surface per rank;
+//! * **pjrt** — the AOT Pallas artifact, when available.
+//!
+//! The best native/pjrt number is what the `rate` field of a local
+//! [`MachineConfig`] should be set to; [`efficiency_report`] renders the
+//! achieved-vs-empirical-vs-theoretical comparison like the paper's
+//! 93.7% / 88.8% headline.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::comm::cost::CostParams;
+use crate::config::MachineConfig;
+use crate::matrix::block::Block;
 use crate::matrix::dense::Mat;
 use crate::matrix::gemm;
 use crate::metrics::render_table;
+use crate::runtime::compute::Compute;
 use crate::runtime::engine::EngineServer;
+use crate::Runtime;
 
 #[derive(Clone, Debug)]
 pub struct PeakRow {
     pub path: &'static str,
     pub b: usize,
+    pub threads: usize,
     pub iters: usize,
     pub secs: f64,
     pub gflops: f64,
 }
 
-/// Measure native gemm at block size `b`.
-pub fn native_peak(b: usize, iters: usize) -> PeakRow {
+/// Measure the frozen seed kernel at block size `b` (the denominator of
+/// the BENCH_gemm.json speedups).
+pub fn seed_peak(b: usize, iters: usize) -> PeakRow {
     let x = Mat::random(b, b, 1);
     let y = Mat::random(b, b, 2);
     // warmup
-    let mut sink = gemm::matmul(&x, &y);
+    let mut sink = gemm::matmul_seed_ikj(&x, &y);
     let t0 = Instant::now();
     for _ in 0..iters {
-        sink = gemm::matmul(&x, &y);
+        sink = gemm::matmul_seed_ikj(&x, &y);
     }
     let secs = t0.elapsed().as_secs_f64();
     std::hint::black_box(&sink);
     let flops = gemm::gemm_flops(b, b, b) * iters as f64;
-    PeakRow { path: "native", b, iters, secs, gflops: flops / secs / 1e9 }
+    PeakRow { path: "seed", b, threads: 1, iters, secs, gflops: flops / secs / 1e9 }
+}
+
+/// Measure the packed native kernel at block size `b` with `threads`
+/// cores — through a real single-rank run, so the GFlop/s figure is the
+/// rank's own [`MetricsSnapshot::gflops`](crate::metrics::MetricsSnapshot)
+/// (what every real-mode experiment reports), not a side channel.
+pub fn native_peak_mt(b: usize, iters: usize, threads: usize) -> PeakRow {
+    let x = Mat::random(b, b, 1);
+    let y = Mat::random(b, b, 2);
+    // warmup outside the measured context (also primes the scratch pool
+    // and the per-rank workers)
+    std::hint::black_box(gemm::matmul_mt(&x, &y, threads));
+    let xb = Block::real(x);
+    let yb = Block::real(y);
+    let res = Runtime::builder()
+        .world(1)
+        .cost(CostParams::free())
+        .threads_per_rank(threads)
+        .build()
+        .expect("peak runtime")
+        .run(|ctx| {
+            for _ in 0..iters {
+                std::hint::black_box(Compute::Native.matmul(ctx, &xb, &yb));
+            }
+        });
+    let m = res.metrics[0];
+    PeakRow { path: "native", b, threads, iters, secs: m.compute_time, gflops: m.gflops() }
+}
+
+/// Single-threaded packed-kernel rate (calibration shorthand).
+pub fn native_peak(b: usize, iters: usize) -> PeakRow {
+    native_peak_mt(b, iters, 1)
 }
 
 /// Measure the PJRT path (AOT Pallas artifact) at block size `b`.
@@ -54,15 +106,18 @@ pub fn pjrt_peak(b: usize, iters: usize) -> Result<PeakRow> {
     }
     let secs = t0.elapsed().as_secs_f64();
     let flops = gemm::gemm_flops(b, b, b) * iters as f64;
-    Ok(PeakRow { path: "pjrt", b, iters, secs, gflops: flops / secs / 1e9 })
+    Ok(PeakRow { path: "pjrt", b, threads: 1, iters, secs, gflops: flops / secs / 1e9 })
 }
 
-/// Calibration sweep over block sizes; PJRT rows appear when artifacts
-/// are available.
+/// Calibration sweep: seed baseline, packed kernel at 1/2/4 threads,
+/// and PJRT rows when artifacts are available.
 pub fn sweep(iters: usize) -> Vec<PeakRow> {
     let mut rows = Vec::new();
-    for &b in &[32usize, 64, 128, 256] {
-        rows.push(native_peak(b, iters));
+    for &b in &[64usize, 128, 256, 512] {
+        rows.push(seed_peak(b, iters));
+        for &threads in &[1usize, 2, 4] {
+            rows.push(native_peak_mt(b, iters, threads));
+        }
         if let Ok(r) = pjrt_peak(b, iters) {
             rows.push(r);
         }
@@ -77,13 +132,46 @@ pub fn render(rows: &[PeakRow]) -> String {
             vec![
                 r.path.to_string(),
                 r.b.to_string(),
+                r.threads.to_string(),
                 r.iters.to_string(),
                 format!("{:.4}", r.secs),
                 format!("{:.2}", r.gflops),
             ]
         })
         .collect();
-    render_table(&["path", "block", "iters", "secs", "GFlop/s"], &table)
+    render_table(&["path", "block", "threads", "iters", "secs", "GFlop/s"], &table)
+}
+
+/// §6-style efficiency lines: the best measured rate per thread count
+/// against the machine's empirical (`rate`) and theoretical (`peak`)
+/// per-core figures — the same two percentages the paper quotes
+/// (93.7% / 88.8% on Carver).
+pub fn efficiency_report(rows: &[PeakRow], machine: &MachineConfig) -> String {
+    let mut out = String::new();
+    let mut threads_seen: Vec<usize> = rows
+        .iter()
+        .filter(|r| r.path == "native")
+        .map(|r| r.threads)
+        .collect();
+    threads_seen.sort_unstable();
+    threads_seen.dedup();
+    for t in threads_seen {
+        if let Some(best) = rows
+            .iter()
+            .filter(|r| r.path == "native" && r.threads == t)
+            .max_by(|a, b| a.gflops.total_cmp(&b.gflops))
+        {
+            let cores = t as f64;
+            let vs_rate = best.gflops * 1e9 / (machine.rate * cores) * 100.0;
+            let vs_peak = best.gflops * 1e9 / (machine.peak * cores) * 100.0;
+            out.push_str(&format!(
+                "native b={} threads={}: {:.2} GF/s = {:.1}% of {} empirical peak, \
+                 {:.1}% of theoretical\n",
+                best.b, t, best.gflops, vs_rate, machine.name, vs_peak
+            ));
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -94,5 +182,21 @@ mod tests {
     fn native_peak_positive() {
         let r = native_peak(64, 3);
         assert!(r.gflops > 0.01, "{}", r.gflops);
+        assert_eq!(r.threads, 1);
+    }
+
+    #[test]
+    fn seed_peak_positive() {
+        let r = seed_peak(64, 3);
+        assert!(r.gflops > 0.01, "{}", r.gflops);
+        assert_eq!(r.path, "seed");
+    }
+
+    #[test]
+    fn efficiency_report_mentions_machine() {
+        let rows = vec![native_peak_mt(64, 2, 1)];
+        let rep = efficiency_report(&rows, &MachineConfig::local());
+        assert!(rep.contains("local"), "{rep}");
+        assert!(rep.contains("threads=1"), "{rep}");
     }
 }

@@ -70,10 +70,11 @@ const HELP: &str = "\
 repro — FooPar reproduction (rust + JAX/Pallas AOT via PJRT)
 
   selftest                          end-to-end real-mode sanity
-  peak     [--iters N]              single-core empirical peak (GFlop/s)
+  peak     [--iters N] [--machine M] single-rank empirical peak: seed vs packed
+                                    kernel at 1/2/4 threads, efficiency vs peak
   mmm      --p P [--n N] [--algo dns|generic|baseline] [--mode real|modeled] [--machine M]
-           [--transport local|tcp-loopback] [--backend B]
-  apsp     --p P [--n N] [--algo fw|squaring] [--mode real|modeled]
+           [--transport local|tcp-loopback] [--backend B] [--threads T]
+  apsp     --p P [--n N] [--algo fw|squaring] [--mode real|modeled] [--threads T]
   table1   [--machine M]            Table 1: measured op runtimes vs formulas
   fig5     [--machine carver|horseshoe6]   Fig. 5 efficiency curves
   isoeff   [--algo generic|dns|fw] [--target E]   isoefficiency verification
@@ -158,8 +159,10 @@ fn selftest() -> Result<()> {
 
 fn cmd_peak(args: &Args) -> Result<()> {
     let iters = args.get_usize("iters", 10)?;
+    let machine = MachineConfig::resolve(args.get_str("machine", "local"))?;
     let rows = peak::sweep(iters);
     println!("{}", peak::render(&rows));
+    print!("{}", peak::efficiency_report(&rows, &machine));
     if let Some(best) = rows
         .iter()
         .filter(|r| r.path == "pjrt")
@@ -211,11 +214,13 @@ fn cmd_mmm(args: &Args) -> Result<()> {
              tcp transport see `cargo run --release --example matmul_dns_tcp`"
         );
     }
+    let threads = args.get_usize("threads", machine.threads_per_rank)?;
     let rt = Runtime::builder()
         .world(p)
         .backend(args.get_str("backend", "openmpi-fixed"))
         .transport(transport)
         .machine_config(&machine)
+        .threads_per_rank(threads)
         .build()?;
 
     let (t_parallel, wall, label) = match algo {
@@ -282,10 +287,12 @@ fn cmd_apsp(args: &Args) -> Result<()> {
         floyd_warshall::FwSource::Real { n, density: 0.3, seed: 42 }
     };
     let algo = args.get_str("algo", "fw");
+    let threads = args.get_usize("threads", machine.threads_per_rank)?;
     let rt = Runtime::builder()
         .world(p)
         .backend(args.get_str("backend", "openmpi-fixed"))
         .machine_config(&machine)
+        .threads_per_rank(threads)
         .build()?;
 
     let t_parallel = match algo {

@@ -67,6 +67,17 @@ impl Block {
         }
     }
 
+    /// Take ownership of the data if real (panics on proxies).  The
+    /// in-place accumulate paths use this so a uniquely-owned block is
+    /// mutated with **zero copies** — `as_mat().clone()` would leave a
+    /// second owner behind and force the copy-on-write.
+    pub fn into_mat(self) -> Mat {
+        match self {
+            Block::Real(m) => m,
+            Block::Proxy { .. } => panic!("attempted to read data of a proxy block"),
+        }
+    }
+
     /// Horizontal concatenation of column panels — reassembling a block
     /// computed panel-by-panel (the pipelined DNS variant).  Real panels
     /// concatenate data; proxy panels merge into a proxy of the combined

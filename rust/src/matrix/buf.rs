@@ -1,0 +1,142 @@
+//! Shared copy-on-write float buffers — the zero-copy substrate of the
+//! data plane.
+//!
+//! Every [`Mat`](super::dense::Mat) owns its elements through a [`Buf`]:
+//! an `Arc<Vec<f32>>` behind `Deref`/`DerefMut`.  Cloning a `Buf` (and
+//! therefore a `Mat`, a `Block::Real`, or any message payload built from
+//! them) is a reference-count bump, so shared-memory collectives move
+//! blocks **by reference**: a `bcast` fans the same allocation out to
+//! every rank, a `shift` hands ownership over, and the pipelined
+//! algorithms' per-step block clones cost nothing.  The first mutable
+//! access through `DerefMut` triggers `Arc::make_mut` — a deep copy *only
+//! if* the allocation is still shared (copy-on-write), so single-owner
+//! hot loops pay one atomic check, not a copy.
+//!
+//! The paper gets this for free from the JVM (JBLAS matrices travel as
+//! references between threads); reproducing it here is what keeps the
+//! measured data path at memory-bandwidth speed instead of `memcpy`
+//! speed.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::Arc;
+
+/// A shared, copy-on-write `Vec<f32>`.  See the module docs.
+#[derive(Clone, Debug)]
+pub struct Buf(Arc<Vec<f32>>);
+
+impl Buf {
+    /// Wrap a vector (no copy).
+    pub fn from_vec(v: Vec<f32>) -> Self {
+        Buf(Arc::new(v))
+    }
+
+    /// Do `a` and `b` share one allocation?  The zero-copy assertion used
+    /// by tests: after a shmem `bcast`, every rank's block satisfies
+    /// `Buf::shares_allocation(root, mine)`.
+    pub fn shares_allocation(a: &Buf, b: &Buf) -> bool {
+        Arc::ptr_eq(&a.0, &b.0)
+    }
+
+    /// How many owners this allocation currently has (diagnostics).
+    pub fn owners(&self) -> usize {
+        Arc::strong_count(&self.0)
+    }
+
+    /// Iterate the elements (no copy, no ownership change).
+    pub fn iter(&self) -> std::slice::Iter<'_, f32> {
+        self.0.iter()
+    }
+}
+
+impl From<Vec<f32>> for Buf {
+    fn from(v: Vec<f32>) -> Self {
+        Buf::from_vec(v)
+    }
+}
+
+impl FromIterator<f32> for Buf {
+    fn from_iter<I: IntoIterator<Item = f32>>(iter: I) -> Self {
+        Buf::from_vec(iter.into_iter().collect())
+    }
+}
+
+impl Deref for Buf {
+    type Target = Vec<f32>;
+    #[inline]
+    fn deref(&self) -> &Vec<f32> {
+        &self.0
+    }
+}
+
+impl DerefMut for Buf {
+    /// Copy-on-write: clones the allocation iff it is shared.
+    #[inline]
+    fn deref_mut(&mut self) -> &mut Vec<f32> {
+        Arc::make_mut(&mut self.0)
+    }
+}
+
+impl PartialEq for Buf {
+    fn eq(&self, other: &Self) -> bool {
+        // same allocation short-circuit, then contents
+        Arc::ptr_eq(&self.0, &other.0) || *self.0 == *other.0
+    }
+}
+
+impl<'a> IntoIterator for &'a Buf {
+    type Item = &'a f32;
+    type IntoIter = std::slice::Iter<'a, f32>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.0.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clone_shares_allocation() {
+        let a = Buf::from_vec(vec![1.0, 2.0, 3.0]);
+        let b = a.clone();
+        assert!(Buf::shares_allocation(&a, &b));
+        assert_eq!(a.owners(), 2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mutation_unshares_and_preserves_original() {
+        let a = Buf::from_vec(vec![1.0, 2.0]);
+        let mut b = a.clone();
+        b[0] = 9.0; // copy-on-write: b gets its own allocation here
+        assert!(!Buf::shares_allocation(&a, &b));
+        assert_eq!(a[0], 1.0);
+        assert_eq!(b[0], 9.0);
+    }
+
+    #[test]
+    fn unique_mutation_keeps_allocation() {
+        let mut a = Buf::from_vec(vec![0.0; 4]);
+        let before = a.as_ptr();
+        a[2] = 5.0; // sole owner: in-place, no copy
+        assert_eq!(a.as_ptr(), before);
+        assert_eq!(a[2], 5.0);
+    }
+
+    #[test]
+    fn equality_is_by_contents_across_allocations() {
+        let a = Buf::from_vec(vec![1.0, 2.0]);
+        let b = Buf::from_vec(vec![1.0, 2.0]);
+        assert!(!Buf::shares_allocation(&a, &b));
+        assert_eq!(a, b);
+        assert_ne!(a, Buf::from_vec(vec![1.0, 3.0]));
+    }
+
+    #[test]
+    fn collect_and_iterate() {
+        let b: Buf = (0..3).map(|i| i as f32).collect();
+        let sum: f32 = (&b).into_iter().sum();
+        assert_eq!(sum, 3.0);
+        assert_eq!(b.len(), 3);
+    }
+}

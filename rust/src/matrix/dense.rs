@@ -2,7 +2,12 @@
 //! JBLAS/MKL.  Blocks of the distributed matrices are `Mat`s; the heavy
 //! products go through [`crate::matrix::gemm`] (native) or the PJRT
 //! engine ([`crate::runtime`]).
+//!
+//! Elements live in a shared copy-on-write [`Buf`], so cloning a `Mat`
+//! (and moving it through shmem collectives) is a reference-count bump —
+//! see [`crate::matrix::buf`] for the zero-copy story.
 
+use super::buf::Buf;
 use crate::data::value::Data;
 use crate::testing::Rng;
 
@@ -11,21 +16,31 @@ use crate::testing::Rng;
 pub struct Mat {
     pub rows: usize,
     pub cols: usize,
-    pub data: Vec<f32>,
+    /// Row-major elements in a shared copy-on-write buffer.  Read access
+    /// derefs straight to the `Vec`; the first `&mut` access after a
+    /// clone pays the deep copy (`Arc::make_mut`).
+    pub data: Buf,
 }
 
 impl Mat {
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Mat { rows, cols, data: vec![0.0; rows * cols] }
+        Mat { rows, cols, data: vec![0.0; rows * cols].into() }
     }
 
     pub fn filled(rows: usize, cols: usize, v: f32) -> Self {
-        Mat { rows, cols, data: vec![v; rows * cols] }
+        Mat { rows, cols, data: vec![v; rows * cols].into() }
     }
 
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), rows * cols);
-        Mat { rows, cols, data }
+        Mat { rows, cols, data: data.into() }
+    }
+
+    /// Do `self` and `other` share one element allocation?  True after a
+    /// clone (or a shmem collective hop) until either side mutates — the
+    /// zero-copy assertion used by the data-plane tests.
+    pub fn shares_buffer(&self, other: &Mat) -> bool {
+        Buf::shares_allocation(&self.data, &other.data)
     }
 
     /// Identity matrix.
@@ -77,7 +92,7 @@ impl Mat {
         for r in 0..self.rows {
             data.extend_from_slice(&self.data[r * self.cols + lo..r * self.cols + hi]);
         }
-        Mat { rows: self.rows, cols: w, data }
+        Mat { rows: self.rows, cols: w, data: data.into() }
     }
 
     /// Horizontal concatenation of equal-height matrices (reassembling
@@ -93,7 +108,7 @@ impl Mat {
                 data.extend_from_slice(m.row(r));
             }
         }
-        Mat { rows, cols, data }
+        Mat { rows, cols, data: data.into() }
     }
 
     pub fn transpose(&self) -> Mat {
@@ -227,6 +242,17 @@ mod tests {
     #[test]
     fn byte_size_is_4_per_element() {
         assert_eq!(Mat::zeros(10, 3).byte_size(), 120);
+    }
+
+    #[test]
+    fn clone_is_zero_copy_until_mutation() {
+        let a = Mat::random(16, 16, 3);
+        let mut b = a.clone();
+        assert!(a.shares_buffer(&b));
+        b.set(0, 0, 42.0); // copy-on-write kicks in here
+        assert!(!a.shares_buffer(&b));
+        assert_ne!(a.at(0, 0), 42.0);
+        assert_eq!(b.at(0, 0), 42.0);
     }
 
     #[test]

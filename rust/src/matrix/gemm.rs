@@ -1,49 +1,307 @@
 //! Native block linear algebra — the "BLAS" substitute.
 //!
-//! The paper runs MKL/JBLAS on each core; here the native fallback is a
-//! cache-blocked ikj GEMM.  It is used (a) when no PJRT artifact matches
-//! the block size, (b) as the baseline the PJRT path is compared against,
-//! and (c) for the (min,+) semiring where BLAS does not apply.
+//! The paper runs MKL/JBLAS on each core; this module is the in-process
+//! analogue: a BLIS-style **packed register-tiled GEMM** for the dense
+//! `(+,×)` semiring and the tropical `(min,+)` semiring, optionally
+//! split across a per-rank worker pool (see [`crate::matrix::par`]).
+//!
+//! Kernel structure (the classical GotoBLAS/BLIS decomposition):
+//!
+//! * **Microkernel** — an [`MR`]×[`NR`] register tile of C accumulators
+//!   held in fixed-size arrays; the k-loop streams one packed A column
+//!   and one packed B row per step and performs MR·NR multiply-adds with
+//!   **no C loads or stores** (the seed ikj kernel re-streamed the C row
+//!   every k step — that traffic is where its 4× went).  Fixed-size
+//!   arrays autovectorize; no intrinsics, no `unsafe`.
+//! * **Cache blocking** — [`KC`]-deep panels keep the packed A strip in
+//!   L1/L2 across the whole row of microtiles; [`MC`]-row bands bound
+//!   the packed-A working set and are the unit of multi-threading.
+//! * **Packing** — A bands and the whole of B are copied once into
+//!   contiguous, zero-padded panels from a process-wide **scratch pool**
+//!   (buffers are reused across calls, so steady-state products allocate
+//!   nothing).
+//!
+//! **Determinism.** Every `c[i][j]` accumulates over `k` in ascending
+//! order within each KC block, KC blocks ascending, one register
+//! accumulator per element.  That order is independent of the number of
+//! threads (threads own disjoint row bands), of the column split (a
+//! [`matmul`] equals the hstack of its `Compute::matmul_panel` pieces
+//! bit-for-bit), and of the transport that delivered the operands — the
+//! guarantees the data-plane integration tests pin down.
+//!
+//! **Semantics.** The dense kernel has no zero-skip: `0·NaN` and `0·∞`
+//! propagate as IEEE prescribes (the seed kernel's `aik == 0.0` fast
+//! path silently dropped them).  The tropical kernel keeps the analogous
+//! skip — for `(min,+)`, [`INF`] *is* the semiring identity, so skipping
+//! an all-INF pivot column is algebra, not a shortcut.
 
 use super::dense::Mat;
+use super::par;
 
-/// Tile edge for the register/cache blocking of the native GEMM.
-const TILE: usize = 64;
+/// Microkernel tile rows (register blocking).
+pub const MR: usize = 8;
+/// Microkernel tile columns (register blocking; one/two SIMD vectors).
+pub const NR: usize = 8;
+/// K-dimension cache-block depth: a packed A strip is `MR·KC` floats
+/// (8 KiB) — resident in L1 across a row of microtiles.
+pub const KC: usize = 256;
+/// Row-band height: the threading and packed-A granularity
+/// (`MC·KC` floats = 64 KiB per band panel).
+pub const MC: usize = 64;
 
-/// `C = A · B` (native, cache-blocked ikj).
-pub fn matmul(a: &Mat, b: &Mat) -> Mat {
-    let mut c = Mat::zeros(a.rows, b.cols);
-    matmul_acc_into(&mut c, a, b);
-    c
+/// Process-wide pool of packing scratch buffers (see module docs).
+mod scratch {
+    use std::sync::{Mutex, OnceLock};
+
+    /// Retention cap: the pool amortizes steady-state packing, it does
+    /// not pin peak memory.
+    const POOL_MAX: usize = 32;
+
+    fn pool() -> &'static Mutex<Vec<Vec<f32>>> {
+        static POOL: OnceLock<Mutex<Vec<Vec<f32>>>> = OnceLock::new();
+        POOL.get_or_init(|| Mutex::new(Vec::new()))
+    }
+
+    /// Check out a buffer of exactly `len` elements (contents
+    /// unspecified — packing writes every slot, so no clear/zero-fill:
+    /// `resize` truncates for free or zero-fills only the grown tail).
+    pub fn take(len: usize) -> Vec<f32> {
+        let mut v = pool().lock().unwrap().pop().unwrap_or_default();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Return a buffer to the pool.
+    pub fn give(v: Vec<f32>) {
+        let mut p = pool().lock().unwrap();
+        if p.len() < POOL_MAX {
+            p.push(v);
+        }
+    }
 }
 
-/// `C += A · B` — the DNS partial-sum hot spot, accumulating in place.
-pub fn matmul_acc_into(c: &mut Mat, a: &Mat, b: &Mat) {
-    assert_eq!(a.cols, b.rows, "inner dims: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
-    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    // Tiled over (i, k) so each inner loop is a saxpy over a contiguous
-    // row of B — vectorizer-friendly, no transposes needed.
-    for it in (0..m).step_by(TILE) {
-        let ie = (it + TILE).min(m);
-        for kt in (0..k).step_by(TILE) {
-            let ke = (kt + TILE).min(k);
-            for i in it..ie {
-                let arow = &a.data[i * k..(i + 1) * k];
-                let crow = &mut c.data[i * n..(i + 1) * n];
-                for kk in kt..ke {
-                    let aik = arow[kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = &b.data[kk * n..(kk + 1) * n];
-                    for (cv, bv) in crow.iter_mut().zip(brow) {
-                        *cv += aik * bv;
+// ------------------------------------------------------------- packing
+
+/// Pack rows `[row0, row0+mc)` × cols `[k0, k0+kc)` of `a` into
+/// MR-strip-major layout: `out[strip][k][i]`, edge strips padded with
+/// `pad` (0 for dense — padded rows are never stored; [`INF`] for
+/// tropical so the all-INF column skip still fires on edge strips).
+#[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+fn pack_a(a: &Mat, row0: usize, mc: usize, k0: usize, kc: usize, pad: f32, out: &mut [f32]) {
+    let ad: &[f32] = &a.data;
+    let lda = a.cols;
+    let mut idx = 0;
+    for i0 in (0..mc).step_by(MR) {
+        for k in 0..kc {
+            let col = k0 + k;
+            for i in 0..MR {
+                out[idx] = if i0 + i < mc {
+                    ad[(row0 + i0 + i) * lda + col]
+                } else {
+                    pad
+                };
+                idx += 1;
+            }
+        }
+    }
+}
+
+/// Pack all of `b` into NR-strip-major KC-blocked layout:
+/// `out[kc_block][strip][k][j]`, edge strips zero-padded (padded columns
+/// are never stored).  The block starting at depth `k0` begins at offset
+/// `ceil(n/NR)·NR·k0` — packing the whole of B once lets every row band
+/// (and every thread) reuse it.
+#[allow(clippy::needless_range_loop)]
+fn pack_b(b: &Mat, out: &mut [f32]) {
+    let bd: &[f32] = &b.data;
+    let (k, n) = (b.rows, b.cols);
+    let mut idx = 0;
+    for k0 in (0..k).step_by(KC) {
+        let kc = KC.min(k - k0);
+        for j0 in (0..n).step_by(NR) {
+            for kk in 0..kc {
+                let row = (k0 + kk) * n;
+                for j in 0..NR {
+                    out[idx] = if j0 + j < n { bd[row + j0 + j] } else { 0.0 };
+                    idx += 1;
+                }
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------- microkernels
+
+/// Dense `(+,×)` microkernel: `acc[i][j] += Σ_k pa[k][i] · pb[k][j]`,
+/// k ascending, one accumulator per element (see module docs on
+/// determinism).  No zero-skip: NaN/Inf propagate.
+#[inline(always)]
+#[allow(clippy::needless_range_loop)]
+fn micro_dense(kc: usize, pa: &[f32], pb: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for k in 0..kc {
+        let a: &[f32; MR] = pa[k * MR..k * MR + MR].try_into().unwrap();
+        let b: &[f32; NR] = pb[k * NR..k * NR + NR].try_into().unwrap();
+        for i in 0..MR {
+            let aik = a[i];
+            for j in 0..NR {
+                acc[i][j] += aik * b[j];
+            }
+        }
+    }
+}
+
+/// Tropical `(min,+)` microkernel:
+/// `acc[i][j] = min(acc[i][j], pa[k][i] + pb[k][j])`.  A k-step whose
+/// whole A column is at/above [`INF`] contributes only the semiring
+/// identity and is skipped — the one fast path the satellite audit kept.
+#[inline(always)]
+#[allow(clippy::needless_range_loop)]
+fn micro_tropical(kc: usize, pa: &[f32], pb: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for k in 0..kc {
+        let a: &[f32; MR] = pa[k * MR..k * MR + MR].try_into().unwrap();
+        if a.iter().all(|&v| v >= INF) {
+            continue; // the (min,+) identity annihilates this step
+        }
+        let b: &[f32; NR] = pb[k * NR..k * NR + NR].try_into().unwrap();
+        for i in 0..MR {
+            let aik = a[i];
+            for j in 0..NR {
+                let cand = aik + b[j];
+                if cand < acc[i][j] {
+                    acc[i][j] = cand;
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- band kernels
+
+/// Which semiring a band computes in (selects microkernel, A padding,
+/// accumulator identity, and the C merge).
+#[derive(Clone, Copy)]
+enum Semiring {
+    Dense,
+    Tropical,
+}
+
+/// Compute one MC row band `c[row0.., :] ⊕= A[row0.., :] ⊗ B` against the
+/// pre-packed whole-B panel `pb`.  `c_band` is the band's slice of C
+/// (local row 0 = global `row0`); `pa` is this thread's packing scratch.
+#[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+fn band_kernel(
+    semiring: Semiring,
+    c_band: &mut [f32],
+    a: &Mat,
+    pb: &[f32],
+    row0: usize,
+    mc: usize,
+    n: usize,
+    pa: &mut [f32],
+) {
+    let k = a.cols;
+    let nstrips = n.div_ceil(NR);
+    let (pad, identity) = match semiring {
+        Semiring::Dense => (0.0f32, 0.0f32),
+        Semiring::Tropical => (INF, f32::INFINITY),
+    };
+    for k0 in (0..k).step_by(KC) {
+        let kc = KC.min(k - k0);
+        let pa_len = mc.div_ceil(MR) * MR * kc;
+        pack_a(a, row0, mc, k0, kc, pad, &mut pa[..pa_len]);
+        let pb_block = &pb[nstrips * NR * k0..nstrips * NR * (k0 + kc)];
+        for (jsi, j0) in (0..n).step_by(NR).enumerate() {
+            let nr_eff = NR.min(n - j0);
+            let pbs = &pb_block[jsi * kc * NR..(jsi + 1) * kc * NR];
+            for (isi, i0) in (0..mc).step_by(MR).enumerate() {
+                let mr_eff = MR.min(mc - i0);
+                let pas = &pa[isi * kc * MR..(isi + 1) * kc * MR];
+                let mut acc = [[identity; NR]; MR];
+                match semiring {
+                    Semiring::Dense => micro_dense(kc, pas, pbs, &mut acc),
+                    Semiring::Tropical => micro_tropical(kc, pas, pbs, &mut acc),
+                }
+                for i in 0..mr_eff {
+                    let base = (i0 + i) * n + j0;
+                    let crow = &mut c_band[base..base + nr_eff];
+                    match semiring {
+                        Semiring::Dense => {
+                            for (cv, av) in crow.iter_mut().zip(&acc[i][..nr_eff]) {
+                                *cv += *av;
+                            }
+                        }
+                        Semiring::Tropical => {
+                            for (cv, av) in crow.iter_mut().zip(&acc[i][..nr_eff]) {
+                                if *av < *cv {
+                                    *cv = *av;
+                                }
+                            }
+                        }
                     }
                 }
             }
         }
     }
+}
+
+/// Shared driver: pack B once, then compute MC row bands — in parallel
+/// over the per-rank worker pool when `threads > 1`.  Bands write
+/// disjoint slices of C, so the result is bit-identical for every thread
+/// count.
+fn banded_product(semiring: Semiring, c: &mut Mat, a: &Mat, b: &Mat, threads: usize) {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    let mut pb = scratch::take(n.div_ceil(NR) * NR * k);
+    pack_b(b, &mut pb);
+    let nbands = m.div_ceil(MC);
+    {
+        let cd: &mut [f32] = c.data.as_mut_slice();
+        // Hand each band its own &mut slice through a Mutex: the lock is
+        // uncontended (one owner per band) — it only launders the
+        // exclusive borrows across the `Fn` boundary safely.
+        let bands: Vec<std::sync::Mutex<&mut [f32]>> =
+            cd.chunks_mut(MC * n).map(std::sync::Mutex::new).collect();
+        let pb_ref: &[f32] = &pb;
+        par::run_chunks(threads, nbands, &|band_idx| {
+            let row0 = band_idx * MC;
+            let mc = MC.min(m - row0);
+            let mut guard = bands[band_idx].lock().unwrap();
+            let c_band: &mut [f32] = &mut guard;
+            let mut pa = scratch::take(mc.div_ceil(MR) * MR * KC.min(k));
+            band_kernel(semiring, c_band, a, pb_ref, row0, mc, n, &mut pa);
+            scratch::give(pa);
+        });
+    }
+    scratch::give(pb);
+}
+
+// ---------------------------------------------------------- public API
+
+/// `C = A · B` (packed kernel, single-threaded).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    matmul_mt(a, b, 1)
+}
+
+/// `C = A · B` with up to `threads` cores from the per-rank pool.
+pub fn matmul_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_acc_into_mt(&mut c, a, b, threads);
+    c
+}
+
+/// `C += A · B` — the DNS partial-sum hot spot, accumulating in place.
+pub fn matmul_acc_into(c: &mut Mat, a: &Mat, b: &Mat) {
+    matmul_acc_into_mt(c, a, b, 1);
+}
+
+/// `C += A · B` with up to `threads` cores.  Bit-identical for every
+/// thread count (see module docs).
+pub fn matmul_acc_into_mt(c: &mut Mat, a: &Mat, b: &Mat, threads: usize) {
+    assert_eq!(a.cols, b.rows, "inner dims: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    banded_product(Semiring::Dense, c, a, b, threads);
 }
 
 /// `A + B` elementwise (the reduceD combine).
@@ -57,28 +315,19 @@ pub fn add(a: &Mat, b: &Mat) -> Mat {
 /// python/compile/kernels/ref.py::INF.
 pub const INF: f32 = 1e30;
 
-/// Tropical product `out[i,j] = min(INF, min_k a[i,k] + b[k,j])`.
+/// Tropical product `out[i,j] = min(INF, min_k a[i,k] + b[k,j])`
+/// (packed kernel, single-threaded).
 pub fn minplus_matmul(a: &Mat, b: &Mat) -> Mat {
+    minplus_matmul_mt(a, b, 1)
+}
+
+/// Tropical product with up to `threads` cores.  `min` is exact in
+/// floating point, so the result is bit-identical for every thread count
+/// and blocking by construction.
+pub fn minplus_matmul_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
     assert_eq!(a.cols, b.rows);
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut out = Mat::filled(m, n, INF);
-    for i in 0..m {
-        let arow = &a.data[i * k..(i + 1) * k];
-        let orow = &mut out.data[i * n..(i + 1) * n];
-        for kk in 0..k {
-            let aik = arow[kk];
-            if aik >= INF {
-                continue;
-            }
-            let brow = &b.data[kk * n..(kk + 1) * n];
-            for (ov, bv) in orow.iter_mut().zip(brow) {
-                let cand = aik + bv;
-                if cand < *ov {
-                    *ov = cand;
-                }
-            }
-        }
-    }
+    let mut out = Mat::filled(a.rows, b.cols, INF);
+    banded_product(Semiring::Tropical, &mut out, a, b, threads);
     out
 }
 
@@ -107,6 +356,46 @@ pub fn fw_update_into(d: &mut Mat, ik: &[f32], kj: &[f32]) {
 /// modeled-compute mode and the efficiency reports.
 pub fn gemm_flops(m: usize, k: usize, n: usize) -> f64 {
     2.0 * m as f64 * k as f64 * n as f64
+}
+
+// ------------------------------------------------------- seed baseline
+
+/// Tile edge of the frozen seed kernel's (i, k) blocking.
+const SEED_TILE: usize = 64;
+
+/// The PR-0 seed GEMM, **frozen verbatim** as the baseline of the perf
+/// trajectory: `benches/gemm_kernel.rs` measures the packed kernel's
+/// speedup against this exact loop, so the committed BENCH_gemm.json
+/// numbers stay comparable forever.  Scalar cache-blocked ikj, including
+/// the then-current `aik == 0.0` fast path with its semantic flaw
+/// (`0·NaN` fails to propagate) that the packed kernel removed.  Not
+/// called by any compute path — benches and regression tests only.
+pub fn matmul_seed_ikj(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    let cd = c.data.as_mut_slice();
+    for it in (0..m).step_by(SEED_TILE) {
+        let ie = (it + SEED_TILE).min(m);
+        for kt in (0..k).step_by(SEED_TILE) {
+            let ke = (kt + SEED_TILE).min(k);
+            for i in it..ie {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let crow = &mut cd[i * n..(i + 1) * n];
+                for kk in kt..ke {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+    c
 }
 
 #[cfg(test)]
@@ -144,8 +433,87 @@ mod tests {
     }
 
     #[test]
+    fn matmul_matches_naive_at_tile_boundaries() {
+        // every microkernel/cache-block edge: MR/NR ± 1 and KC ± 1
+        let dims_mn = [MR - 1, MR, MR + 1, NR - 1, NR, NR + 1, 2 * MR + 3];
+        let dims_k = [1, MR - 1, NR + 1, KC - 1, KC, KC + 1];
+        let mut seed = 1u64;
+        for &m in &dims_mn {
+            for &n in &dims_mn {
+                for &k in &dims_k {
+                    seed += 1;
+                    let a = Mat::random(m, k, seed);
+                    let b = Mat::random(k, n, seed + 1000);
+                    let got = matmul(&a, &b);
+                    let want = matmul_naive(&a, &b);
+                    assert_allclose(&got.data, &want.data, 1e-3, 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_crosses_band_boundaries() {
+        // MC ± 1 rows: exercises the multi-band path single-threaded
+        for m in [MC - 1, MC, MC + 1, 2 * MC + 5] {
+            let a = Mat::random(m, 33, m as u64);
+            let b = Mat::random(33, 17, m as u64 + 7);
+            assert_allclose(&matmul(&a, &b).data, &matmul_naive(&a, &b).data, 1e-4, 1e-5);
+        }
+    }
+
+    #[test]
+    fn multithreaded_matmul_is_bit_identical() {
+        // determinism contract: any thread count, same bytes
+        for (m, k, n) in [(130usize, 70usize, 65usize), (64, 256, 64), (3, 5, 2)] {
+            let a = Mat::random(m, k, 9);
+            let b = Mat::random(k, n, 10);
+            let base = matmul_mt(&a, &b, 1);
+            for threads in [2usize, 4] {
+                let got = matmul_mt(&a, &b, threads);
+                assert_eq!(base.data, got.data, "threads={threads} ({m}x{k}x{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn multithreaded_minplus_is_bit_identical() {
+        let a = Mat::random(130, 70, 21);
+        let b = Mat::random(70, 90, 22);
+        let base = minplus_matmul_mt(&a, &b, 1);
+        for threads in [2usize, 4] {
+            assert_eq!(base.data, minplus_matmul_mt(&a, &b, threads).data);
+        }
+    }
+
+    #[test]
+    fn dense_kernel_propagates_nan_and_inf() {
+        // 0·NaN must be NaN, 0·∞ must be NaN — the seed kernel's
+        // zero-skip dropped both (regression test for the fixed flaw)
+        let a = Mat::zeros(9, 9);
+        let mut b = Mat::filled(9, 9, 1.0);
+        b.set(0, 0, f32::NAN);
+        b.set(0, 1, f32::INFINITY);
+        let c = matmul(&a, &b);
+        assert!(c.at(0, 0).is_nan(), "0·NaN lost");
+        assert!(c.at(0, 1).is_nan(), "0·∞ lost");
+        // the frozen seed kernel exhibits the old behaviour
+        let seed = matmul_seed_ikj(&a, &b);
+        assert_eq!(seed.at(0, 0), 0.0);
+    }
+
+    #[test]
+    fn seed_kernel_matches_packed_on_regular_data() {
+        let a = Mat::random(65, 65, 3);
+        let b = Mat::random(65, 65, 4);
+        let packed = matmul(&a, &b);
+        let seed = matmul_seed_ikj(&a, &b);
+        assert_allclose(&packed.data, &seed.data, 1e-4, 1e-5);
+    }
+
+    #[test]
     fn matmul_identity() {
-        let a = Mat::random(65, 65, 3); // crosses the TILE boundary
+        let a = Mat::random(65, 65, 3); // crosses the MC band boundary
         let got = matmul(&a, &Mat::eye(65));
         assert_allclose(&got.data, &a.data, 1e-6, 1e-7);
     }
@@ -193,6 +561,37 @@ mod tests {
         assert_eq!(out.at(0, 0), 4.0); // min(1+3, 5+1) = 4
         assert_eq!(out.at(0, 1), 6.0); // min(1+9, 5+1) = 6
         assert_eq!(out.at(1, 0), 2.0); // min(2+3, 1+1) = 2
+    }
+
+    #[test]
+    fn minplus_matches_naive_at_tile_boundaries() {
+        fn minplus_naive(a: &Mat, b: &Mat) -> Mat {
+            let mut out = Mat::filled(a.rows, b.cols, INF);
+            for i in 0..a.rows {
+                for j in 0..b.cols {
+                    for k in 0..a.cols {
+                        let cand = a.at(i, k) + b.at(k, j);
+                        if cand < out.at(i, j) {
+                            out.set(i, j, cand);
+                        }
+                    }
+                }
+            }
+            out
+        }
+        let mut seed = 77u64;
+        for &(m, k, n) in &[(MR + 1, KC + 1, NR - 1), (MR - 1, 3, NR + 1), (17, 9, 13)] {
+            seed += 1;
+            let mut a = Mat::random(m, k, seed);
+            let b = Mat::random(k, n, seed + 1);
+            // sprinkle INF entries so the identity skip gets exercised
+            for i in 0..m {
+                a.set(i, i % k, INF);
+            }
+            let got = minplus_matmul(&a, &b);
+            let want = minplus_naive(&a, &b);
+            assert_eq!(got.data, want.data, "{m}x{k}x{n}");
+        }
     }
 
     #[test]

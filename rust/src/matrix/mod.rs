@@ -1,3 +1,5 @@
+pub mod block;
+pub mod buf;
 pub mod dense;
 pub mod gemm;
-pub mod block;
+pub mod par;

@@ -1,0 +1,90 @@
+//! Intra-rank data parallelism: fan independent chunks of one rank's
+//! block kernel out over the persistent process-wide worker pool.
+//!
+//! The paper pairs FooPar's collectives with a real BLAS per core; our
+//! analogue gives `Compute::Native` a `threads_per_rank` knob (see
+//! [`Runtime::builder`](crate::spmd::Runtime::builder)) and splits the
+//! MC row-panels of the packed GEMM across that many cores.  Workers are
+//! the same reusable pool threads the SPMD launcher runs ranks on
+//! ([`crate::spmd::pool`]) — checked out for the duration of one
+//! parallel region, returned to the free list afterwards — so repeated
+//! block products pay zero thread spawn/join cost.
+//!
+//! Chunks must write **disjoint** output (the GEMM hands each chunk its
+//! own row band), which is what makes the dynamic chunk→worker
+//! assignment below bit-deterministic: any schedule produces the same
+//! bytes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::spmd::pool;
+
+/// Run `f(chunk)` for every `chunk in 0..nchunks` with up to `threads`
+/// pool workers claiming chunks dynamically.  Returns when every chunk
+/// completed.  `threads <= 1` (or a single chunk) runs inline on the
+/// caller with no pool traffic.
+///
+/// `threads` is the number of *compute* threads: all chunks run on pool
+/// workers while the calling rank thread blocks on the completion
+/// barrier.  The parked caller costs a condvar wait, not a core — it is
+/// not runnable, so `world × threads_per_rank` active workers is the
+/// whole CPU footprint.
+pub fn run_chunks(threads: usize, nchunks: usize, f: &(dyn Fn(usize) + Sync)) {
+    if threads <= 1 || nchunks <= 1 {
+        for chunk in 0..nchunks {
+            f(chunk);
+        }
+        return;
+    }
+    let workers = threads.min(nchunks);
+    let next = AtomicUsize::new(0);
+    pool::scoped_run(workers, &|_worker| loop {
+        let chunk = next.fetch_add(1, Ordering::Relaxed);
+        if chunk >= nchunks {
+            break;
+        }
+        f(chunk);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn every_chunk_runs_exactly_once() {
+        for threads in [1usize, 2, 4] {
+            let hits = AtomicU64::new(0);
+            run_chunks(threads, 10, &|c| {
+                hits.fetch_add(1 << c, Ordering::SeqCst);
+            });
+            assert_eq!(hits.load(Ordering::SeqCst), (1 << 10) - 1, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn more_chunks_than_threads() {
+        let sum = AtomicU64::new(0);
+        run_chunks(2, 37, &|c| {
+            sum.fetch_add(c as u64, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), (0..37).sum::<u64>());
+    }
+
+    #[test]
+    fn zero_chunks_is_a_noop() {
+        run_chunks(4, 0, &|_| panic!("no chunks to run"));
+    }
+
+    #[test]
+    fn disjoint_writes_through_mutexes() {
+        let out: Vec<std::sync::Mutex<u64>> = (0..16).map(|_| std::sync::Mutex::new(0)).collect();
+        run_chunks(4, 16, &|c| {
+            *out[c].lock().unwrap() = c as u64 * 3;
+        });
+        for (i, slot) in out.iter().enumerate() {
+            assert_eq!(*slot.lock().unwrap(), i as u64 * 3);
+        }
+    }
+}

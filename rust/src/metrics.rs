@@ -98,6 +98,24 @@ pub struct MetricsSnapshot {
     pub overlap_hidden: f64,
 }
 
+impl MetricsSnapshot {
+    /// Achieved compute rate of this rank in GFlop/s: flops over the
+    /// rank's in-kernel time.  In real modes the kernels are wall-timed,
+    /// so this is the §6 "measured performance" a rank delivered —
+    /// compare against the machine's `rate` (empirical peak) and `peak`
+    /// (theoretical) exactly like the paper's efficiency columns.  With
+    /// `threads_per_rank > 1` the flops of a multi-threaded kernel land
+    /// on one rank clock, so the figure is the whole rank's rate, not
+    /// per core.
+    pub fn gflops(&self) -> f64 {
+        if self.compute_time > 0.0 {
+            self.flops / self.compute_time / 1e9
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Aggregate over all ranks of a run.
 #[derive(Clone, Debug, Default)]
 pub struct Report {
@@ -105,6 +123,9 @@ pub struct Report {
     pub total: MetricsSnapshot,
     pub max_comm_time: f64,
     pub max_compute_time: f64,
+    /// Highest achieved per-rank compute rate (GFlop/s) — the §6
+    /// efficiency numerator for the best rank.
+    pub max_gflops: f64,
 }
 
 impl Report {
@@ -112,6 +133,7 @@ impl Report {
         let mut total = MetricsSnapshot::default();
         let mut max_comm = 0.0f64;
         let mut max_comp = 0.0f64;
+        let mut max_gflops = 0.0f64;
         for m in per_rank {
             total.msgs_sent += m.msgs_sent;
             total.bytes_sent += m.bytes_sent;
@@ -124,25 +146,29 @@ impl Report {
             total.overlap_hidden += m.overlap_hidden;
             max_comm = max_comm.max(m.comm_time);
             max_comp = max_comp.max(m.compute_time);
+            max_gflops = max_gflops.max(m.gflops());
         }
         Report {
             ranks: per_rank.len(),
             total,
             max_comm_time: max_comm,
             max_compute_time: max_comp,
+            max_gflops,
         }
     }
 
     /// One-line human-readable summary.
     pub fn summary(&self) -> String {
         format!(
-            "p={} msgs={} bytes={} flops={:.3e} comm(max)={:.3}ms compute(max)={:.3}ms",
+            "p={} msgs={} bytes={} flops={:.3e} comm(max)={:.3}ms compute(max)={:.3}ms \
+             rate(max)={:.2}GF/s",
             self.ranks,
             self.total.msgs_sent,
             self.total.bytes_sent,
             self.total.flops,
             self.max_comm_time * 1e3,
             self.max_compute_time * 1e3,
+            self.max_gflops,
         )
     }
 }
@@ -207,6 +233,16 @@ mod tests {
         assert_eq!(r.ranks, 2);
         assert_eq!(r.total.msgs_sent, 7);
         assert_eq!(r.max_comm_time, 2.0);
+    }
+
+    #[test]
+    fn gflops_is_flops_over_compute_time() {
+        let m = MetricsSnapshot { flops: 2e9, compute_time: 0.5, ..Default::default() };
+        assert!((m.gflops() - 4.0).abs() < 1e-12);
+        // no compute: defined as 0, not NaN
+        assert_eq!(MetricsSnapshot::default().gflops(), 0.0);
+        let r = Report::aggregate(&[m, MetricsSnapshot::default()]);
+        assert!((r.max_gflops - 4.0).abs() < 1e-12);
     }
 
     #[test]

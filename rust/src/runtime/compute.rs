@@ -3,9 +3,11 @@
 //!
 //! * [`Compute::Pjrt`] — execute the AOT Pallas/JAX artifact through the
 //!   PJRT device server (the paper's "MKL via JNI" analogue; real data).
-//! * [`Compute::Native`] — in-process rust gemm (the paper's "standard
-//!   BLAS" analogue; real data, and the fallback for block sizes without
-//!   artifacts).
+//! * [`Compute::Native`] — in-process packed register-tiled gemm (the
+//!   paper's "standard BLAS" analogue; real data, and the fallback for
+//!   block sizes without artifacts).  Honors the runtime's
+//!   `threads_per_rank` knob by splitting MC row bands across the
+//!   per-rank worker pool — bit-identical results for any thread count.
 //! * [`Compute::Modeled`] — no data is touched; the rank's virtual clock
 //!   advances by `flops / rate` where `rate` is the calibrated per-core
 //!   GFlop/s of the machine config (how we run n=40000, p=512 on a
@@ -138,7 +140,7 @@ impl Compute {
                 Block::Proxy { rows: a.rows(), cols: b.cols(), seed: 0 }
             }
             Compute::Native => ctx.timed_compute(flops, || {
-                Block::Real(gemm::matmul(a.as_mat(), b.as_mat()))
+                Block::Real(gemm::matmul_mt(a.as_mat(), b.as_mat(), ctx.threads_per_rank()))
             }),
             Compute::Pjrt(h) => {
                 let n = a.rows();
@@ -149,7 +151,7 @@ impl Compute {
                     Block::Real(out)
                 } else {
                     ctx.timed_compute(flops, || {
-                        Block::Real(gemm::matmul(a.as_mat(), b.as_mat()))
+                        Block::Real(gemm::matmul_mt(a.as_mat(), b.as_mat(), ctx.threads_per_rank()))
                     })
                 }
             }
@@ -180,7 +182,7 @@ impl Compute {
             // native path like any other unsupported shape.
             _ => ctx.timed_compute(flops, || {
                 let panel = b.as_mat().col_slice(lo, hi);
-                Block::Real(gemm::matmul(a.as_mat(), &panel))
+                Block::Real(gemm::matmul_mt(a.as_mat(), &panel, ctx.threads_per_rank()))
             }),
         }
     }
@@ -196,8 +198,10 @@ impl Compute {
                 Block::Proxy { rows: a.rows(), cols: b.cols(), seed: 0 }
             }
             Compute::Native => ctx.timed_compute(flops, || {
-                let mut cm = c.as_mat().clone();
-                gemm::matmul_acc_into(&mut cm, a.as_mat(), b.as_mat());
+                // into_mat: a uniquely-owned accumulator mutates in
+                // place (no copy); a shared one copy-on-writes once
+                let mut cm = c.into_mat();
+                gemm::matmul_acc_into_mt(&mut cm, a.as_mat(), b.as_mat(), ctx.threads_per_rank());
                 Block::Real(cm)
             }),
             Compute::Pjrt(h) => {
@@ -210,8 +214,13 @@ impl Compute {
                     Block::Real(out)
                 } else {
                     ctx.timed_compute(flops, || {
-                        let mut cm = c.as_mat().clone();
-                        gemm::matmul_acc_into(&mut cm, a.as_mat(), b.as_mat());
+                        let mut cm = c.into_mat();
+                        gemm::matmul_acc_into_mt(
+                            &mut cm,
+                            a.as_mat(),
+                            b.as_mat(),
+                            ctx.threads_per_rank(),
+                        );
                         Block::Real(cm)
                     })
                 }
@@ -253,7 +262,7 @@ impl Compute {
                 d
             }
             Compute::Native => ctx.timed_compute(flops, || {
-                let mut dm = d.as_mat().clone();
+                let mut dm = d.into_mat();
                 gemm::fw_update_into(&mut dm, ik.as_slice(), kj.as_slice());
                 Block::Real(dm)
             }),
@@ -268,7 +277,7 @@ impl Compute {
                     Block::Real(out)
                 } else {
                     ctx.timed_compute(flops, || {
-                        let mut dm = d.as_mat().clone();
+                        let mut dm = d.into_mat();
                         gemm::fw_update_into(&mut dm, ik.as_slice(), kj.as_slice());
                         Block::Real(dm)
                     })
@@ -287,7 +296,7 @@ impl Compute {
                 Block::Proxy { rows: a.rows(), cols: b.cols(), seed: 0 }
             }
             Compute::Native => ctx.timed_compute(flops, || {
-                Block::Real(gemm::minplus_matmul(a.as_mat(), b.as_mat()))
+                Block::Real(gemm::minplus_matmul_mt(a.as_mat(), b.as_mat(), ctx.threads_per_rank()))
             }),
             Compute::Pjrt(h) => {
                 let n = a.rows();
@@ -299,7 +308,11 @@ impl Compute {
                     Block::Real(out)
                 } else {
                     ctx.timed_compute(flops, || {
-                        Block::Real(gemm::minplus_matmul(a.as_mat(), b.as_mat()))
+                        Block::Real(gemm::minplus_matmul_mt(
+                            a.as_mat(),
+                            b.as_mat(),
+                            ctx.threads_per_rank(),
+                        ))
                     })
                 }
             }

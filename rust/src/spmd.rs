@@ -67,6 +67,11 @@ pub struct Ctx {
     /// Non-zero while the clock is forked onto a non-blocking operation's
     /// comm timeline (see [`Ctx::with_clock`]) — guards against nesting.
     overlap_depth: Cell<u32>,
+    /// Cores this rank's block kernels may use (the paper's
+    /// BLAS-threads-per-process knob); `Compute::Native` splits MC row
+    /// bands across this many pool workers.  Results are bit-identical
+    /// for every value — see [`crate::matrix::gemm`].
+    threads_per_rank: usize,
 }
 
 impl Ctx {
@@ -75,6 +80,7 @@ impl Ctx {
         transport: Arc<dyn Transport>,
         backend: Arc<dyn Backend>,
         machine: CostParams,
+        threads_per_rank: usize,
     ) -> Self {
         let cost = backend.cost(machine);
         let collectives = backend.collectives();
@@ -89,7 +95,15 @@ impl Ctx {
             metrics: RankMetrics::new(),
             tag_alloc: RefCell::new(HashMap::new()),
             overlap_depth: Cell::new(0),
+            threads_per_rank: threads_per_rank.max(1),
         }
+    }
+
+    /// Cores this rank's block kernels may use (≥ 1); set through
+    /// [`RuntimeBuilder::threads_per_rank`] or the machine config.
+    #[inline]
+    pub fn threads_per_rank(&self) -> usize {
+        self.threads_per_rank
     }
 
     /// The active communication backend.
@@ -394,6 +408,7 @@ pub struct Runtime {
     backend: Arc<dyn Backend>,
     machine: CostParams,
     transport: TransportChoice,
+    threads_per_rank: usize,
 }
 
 /// Reserved tag for the launcher's end-of-run clock gather in
@@ -413,6 +428,7 @@ impl Runtime {
             backend: BackendChoice::Object(Arc::new(BackendProfile::openmpi_fixed())),
             machine: MachineChoice::Cost(CostParams::default()),
             transport: None,
+            threads_per_rank: None,
         }
     }
 
@@ -429,6 +445,11 @@ impl Runtime {
     /// The machine's base cost parameters (before backend shaping).
     pub fn machine_cost(&self) -> CostParams {
         self.machine
+    }
+
+    /// Cores each rank's block kernels may use (≥ 1).
+    pub fn threads_per_rank(&self) -> usize {
+        self.threads_per_rank
     }
 
     /// Name of the configured transport.
@@ -485,7 +506,13 @@ impl Runtime {
             (0..world).map(|_| Mutex::new(None)).collect();
 
         pool::scoped_run(world, &|rank| {
-            let ctx = Ctx::new(rank, transport.clone(), self.backend.clone(), self.machine);
+            let ctx = Ctx::new(
+                rank,
+                transport.clone(),
+                self.backend.clone(),
+                self.machine,
+                self.threads_per_rank,
+            );
             let r = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&ctx))) {
                 Ok(r) => r,
                 Err(e) => {
@@ -546,7 +573,13 @@ impl Runtime {
         // hanging until the deadlock oracle fires.
         let watchdog_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let watchdog = proc.spawn_watchdog(watchdog_stop.clone());
-        let ctx = Ctx::new(me, transport.clone(), self.backend.clone(), self.machine);
+        let ctx = Ctx::new(
+            me,
+            transport.clone(),
+            self.backend.clone(),
+            self.machine,
+            self.threads_per_rank,
+        );
         let r = f(&ctx);
 
         // End-of-run clock gather so rank 0 reports the true T_P =
@@ -649,6 +682,9 @@ pub struct RuntimeBuilder {
     /// Transport name, resolved at [`RuntimeBuilder::build`]
     /// (`None` = default in-process).
     transport: Option<String>,
+    /// Explicit per-rank kernel thread count; `None` defers to the
+    /// machine config (which defaults to 1).
+    threads_per_rank: Option<usize>,
 }
 
 impl RuntimeBuilder {
@@ -686,9 +722,23 @@ impl RuntimeBuilder {
         self
     }
 
-    /// Use an explicit machine config's interconnect costs.
-    pub fn machine_config(self, machine: &MachineConfig) -> Self {
+    /// Use an explicit machine config's interconnect costs (and its
+    /// `threads_per_rank`, unless one was set explicitly).
+    pub fn machine_config(mut self, machine: &MachineConfig) -> Self {
+        if self.threads_per_rank.is_none() {
+            self.threads_per_rank = Some(machine.threads_per_rank.max(1));
+        }
         self.cost(machine.cost())
+    }
+
+    /// Cores each rank's block kernels may use (clamped to ≥ 1).  The
+    /// paper's configurations run one BLAS thread per core and one rank
+    /// per core; raising this instead runs fewer, fatter ranks — results
+    /// are **bit-identical** either way (deterministic accumulation
+    /// order; see [`crate::matrix::gemm`]), only the schedule changes.
+    pub fn threads_per_rank(mut self, threads: usize) -> Self {
+        self.threads_per_rank = Some(threads.max(1));
+        self
     }
 
     /// Use raw cost parameters (tests: `CostParams::free()`).
@@ -732,10 +782,14 @@ impl RuntimeBuilder {
                 )
             })?,
         };
-        let machine = match self.machine {
-            MachineChoice::Cost(c) => c,
-            MachineChoice::Named(spec) => MachineConfig::resolve(&spec)?.cost(),
+        let (machine, machine_threads) = match self.machine {
+            MachineChoice::Cost(c) => (c, 1),
+            MachineChoice::Named(spec) => {
+                let m = MachineConfig::resolve(&spec)?;
+                (m.cost(), m.threads_per_rank.max(1))
+            }
         };
+        let threads_per_rank = self.threads_per_rank.unwrap_or(machine_threads);
         let transport = match self.transport.as_deref() {
             None | Some("local") | Some("shmem") | Some("inprocess") => {
                 TransportChoice::InProcess
@@ -748,7 +802,7 @@ impl RuntimeBuilder {
                 ))
             }
         };
-        Ok(Runtime { world: self.world, backend, machine, transport })
+        Ok(Runtime { world: self.world, backend, machine, transport, threads_per_rank })
     }
 
     /// Build and immediately run `f` (the common single-shot path).
@@ -1074,6 +1128,28 @@ mod tests {
     fn builder_rejects_unknown_backend_and_zero_world() {
         assert!(Runtime::builder().backend("no-such").build().is_err());
         assert!(Runtime::builder().world(0).build().is_err());
+    }
+
+    #[test]
+    fn builder_threads_per_rank_knob() {
+        assert_eq!(Runtime::builder().build().unwrap().threads_per_rank(), 1);
+        assert_eq!(
+            Runtime::builder().threads_per_rank(4).build().unwrap().threads_per_rank(),
+            4
+        );
+        // zero clamps to one
+        assert_eq!(
+            Runtime::builder().threads_per_rank(0).build().unwrap().threads_per_rank(),
+            1
+        );
+        // visible on every rank context
+        let res = Runtime::builder()
+            .world(2)
+            .threads_per_rank(3)
+            .build()
+            .unwrap()
+            .run(|ctx| ctx.threads_per_rank());
+        assert_eq!(res.results, vec![3, 3]);
     }
 
     #[test]
