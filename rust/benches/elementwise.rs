@@ -1,0 +1,180 @@
+//! Bench: threaded elementwise kernels (add / fw_update / min).
+//!
+//! Run with:  cargo bench --bench elementwise
+//!
+//! For each block edge b ∈ {512, 1024, 2048} this driver wall-times the
+//! three bandwidth-bound kernels at 1, 2 and 4 threads and emits
+//! `BENCH_elementwise.json` — the perf-trajectory artifact the CI bench
+//! gate (`scripts/bench_gate`) diffs against the committed baseline at
+//! the repo root.
+//!
+//! Reading the numbers: these kernels do ≈ one flop per 4-byte element,
+//! so GFlop/s here is a memory-throughput figure, not an ALU one.
+//! b = 512 sits *below* the ~1024² threading threshold
+//! ([`gemm::EW_PAR_THRESHOLD`]) — its thread rows should coincide, which
+//! is the threshold working as intended, not a scaling failure.  At
+//! b = 2048 the threaded rows must clear the single-thread rate (the
+//! gate's committed baseline pins ≥ 1.5× at 4 threads).
+
+use std::io::Write;
+use std::time::Instant;
+
+use foopar::matrix::dense::Mat;
+use foopar::matrix::gemm;
+use foopar::metrics::render_table;
+
+struct Row {
+    op: &'static str,
+    b: usize,
+    threads: usize,
+    iters: usize,
+    secs_per_iter: f64,
+    gflops: f64,
+    speedup_vs_1t: f64,
+}
+
+/// Wall-time `f` for `iters` repetitions after one warmup, returning
+/// seconds per iteration.
+fn time_iters<F: FnMut()>(mut f: F, iters: usize) -> f64 {
+    f(); // warmup (primes worker checkout / pools / page faults)
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Iteration count: elementwise kernels are fast — target a few hundred
+/// ms of work per configuration.
+fn iters_for(b: usize) -> usize {
+    match b {
+        0..=512 => 200,
+        513..=1024 => 60,
+        _ => 20,
+    }
+}
+
+fn main() {
+    let mut rows: Vec<Row> = Vec::new();
+
+    for &b in &[512usize, 1024, 2048] {
+        let x = Mat::random(b, b, 1);
+        let y = Mat::random(b, b, 2);
+        let ik: Vec<f32> = (0..b).map(|i| ((i * 7) % 23) as f32 * 0.5).collect();
+        let kj: Vec<f32> = (0..b).map(|i| ((i * 5) % 19) as f32 * 0.25).collect();
+        let iters = iters_for(b);
+        let elems = (b * b) as f64;
+
+        for (op, flops_per_elem) in [("add", 1.0), ("fw_update", 2.0), ("min", 1.0)] {
+            let mut secs_1t = 0.0;
+            for &threads in &[1usize, 2, 4] {
+                let secs = match op {
+                    "add" => time_iters(
+                        || {
+                            std::hint::black_box(gemm::add_mt(&x, &y, threads));
+                        },
+                        iters,
+                    ),
+                    "min" => time_iters(
+                        || {
+                            std::hint::black_box(gemm::min_mat_mt(&x, &y, threads));
+                        },
+                        iters,
+                    ),
+                    "fw_update" => {
+                        // in-place on a uniquely-owned block: first pass
+                        // reaches the min fixpoint, later passes measure
+                        // the steady-state read+compare stream
+                        let mut d = x.clone();
+                        let _ = d.data.as_mut_slice(); // unshare before timing
+                        time_iters(
+                            || {
+                                gemm::fw_update_into_mt(&mut d, &ik, &kj, threads);
+                                std::hint::black_box(&d);
+                            },
+                            iters,
+                        )
+                    }
+                    _ => unreachable!(),
+                };
+                if threads == 1 {
+                    secs_1t = secs;
+                }
+                rows.push(Row {
+                    op,
+                    b,
+                    threads,
+                    iters,
+                    secs_per_iter: secs,
+                    gflops: elems * flops_per_elem / secs / 1e9,
+                    speedup_vs_1t: secs_1t / secs,
+                });
+            }
+        }
+    }
+
+    println!("== threaded elementwise kernels (wall clock) ==\n");
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.op.to_string(),
+                r.b.to_string(),
+                r.threads.to_string(),
+                r.iters.to_string(),
+                format!("{:.3e}", r.secs_per_iter),
+                format!("{:.2}", r.gflops),
+                format!("{:.2}x", r.speedup_vs_1t),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(&["op", "b", "threads", "iters", "s/iter", "GFlop/s", "vs 1t"], &table)
+    );
+
+    // Hand-rolled JSON (no serde in the image's crate cache).
+    let entries: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "  {{\"op\": \"{}\", \"b\": {}, \"threads\": {}, \"iters\": {}, \
+                 \"secs_per_iter\": {:.6e}, \"gflops\": {:.4}, \"speedup_vs_1t\": {:.4}}}",
+                r.op, r.b, r.threads, r.iters, r.secs_per_iter, r.gflops, r.speedup_vs_1t
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n\"bench\": \"elementwise\",\n\"unit\": \"wall seconds\",\n\
+         \"note\": \"bandwidth-bound kernels; threaded past EW_PAR_THRESHOLD (1024^2 elements), \
+         so 512^2 thread rows coincide by design\",\n\
+         \"results\": [\n{}\n]\n}}\n",
+        entries.join(",\n")
+    );
+    // Write to the repo root (where the committed baseline lives and
+    // where scripts/bench_gate looks) regardless of invocation cwd —
+    // `cargo bench` runs bench binaries with cwd = the package root
+    // (rust/), not the workspace root.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_elementwise.json");
+    let mut f = std::fs::File::create(path).expect("create BENCH_elementwise.json");
+    f.write_all(json.as_bytes()).expect("write BENCH_elementwise.json");
+    println!("wrote {path}");
+
+    // Regression tripwire: past the threshold, more threads must never
+    // make a kernel *slower* than single-threaded (CI hardware is noisy,
+    // so the hard in-bench gate is 0.9×; the ≥ 1.5× scaling target is
+    // enforced against the committed baseline by scripts/bench_gate).
+    let regressions: Vec<&Row> = rows
+        .iter()
+        .filter(|r| r.b * r.b >= gemm::EW_PAR_THRESHOLD && r.threads > 1 && r.speedup_vs_1t < 0.9)
+        .collect();
+    if !regressions.is_empty() {
+        for r in &regressions {
+            eprintln!(
+                "ERROR: {} at b={} threads={} slower than single-threaded ({:.2}x)",
+                r.op, r.b, r.threads, r.speedup_vs_1t
+            );
+        }
+        std::process::exit(1);
+    }
+}

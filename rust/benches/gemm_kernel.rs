@@ -139,9 +139,14 @@ fn main() {
          \"results\": [\n{}\n]\n}}\n",
         entries.join(",\n")
     );
-    let mut f = std::fs::File::create("BENCH_gemm.json").expect("create BENCH_gemm.json");
+    // Write to the repo root (where the committed baseline lives and
+    // where scripts/bench_gate looks) regardless of invocation cwd —
+    // `cargo bench` runs bench binaries with cwd = the package root
+    // (rust/), not the workspace root.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_gemm.json");
+    let mut f = std::fs::File::create(path).expect("create BENCH_gemm.json");
     f.write_all(json.as_bytes()).expect("write BENCH_gemm.json");
-    println!("wrote BENCH_gemm.json");
+    println!("wrote {path}");
 
     // Regression tripwire: the packed kernel must not fall behind the
     // seed anywhere (the ≥4× target is asserted on quiet hardware; CI

@@ -72,7 +72,7 @@ pub fn apsp_squaring_par(ctx: &Ctx, comp: &Compute, q: usize, src: &FwSource) ->
             let mut acc = mine;
             for k in 0..q {
                 let prod = comp.minplus(ctx, &rb[k], &cb[k]);
-                acc = min_blocks(ctx, comp, acc, prod);
+                acc = comp.min_blocks(ctx, acc, prod);
             }
             acc
         });
@@ -85,24 +85,6 @@ pub fn apsp_squaring_par(ctx: &Ctx, comp: &Compute, q: usize, src: &FwSource) ->
         .zip(data.into_local())
         .map(|((i, j), blk)| (i, j, blk));
     SqOutput { d_block, t_local: ctx.now() }
-}
-
-/// Elementwise min of two blocks (the ⊕ of the tropical semiring at the
-/// block level), mode-aware.
-fn min_blocks(ctx: &Ctx, comp: &Compute, a: Block, b: Block) -> Block {
-    match (&a, &b) {
-        (Block::Real(x), Block::Real(y)) => {
-            let flops = (x.rows * x.cols) as f64;
-            ctx.timed_compute(flops, || {
-                let data = x.data.iter().zip(&y.data).map(|(p, q)| p.min(*q)).collect();
-                Block::Real(Mat { rows: x.rows, cols: x.cols, data })
-            })
-        }
-        _ => {
-            comp.charge_elems(ctx, a.rows() * a.cols());
-            a
-        }
-    }
 }
 
 /// Reassemble the result (verification).

@@ -16,6 +16,14 @@
 //! pivot-column segment `kj` travels across each process *row* (`ySeq`),
 //! and every block updates in parallel.  `T_P = Θ(n(B + (t_s+t_w B)
 //! log q + B²/…))`, isoefficiency Θ((√p log p)³).
+//!
+//! Data plane: the pivot segments are [`Seg`]s on the shared
+//! copy-on-write buffer ([`crate::matrix::buf::Buf`]), so the n per-pivot
+//! broadcasts move **by reference** on shared memory — the extraction
+//! copies Θ(B) once, the fan-out to √p grid members copies nothing
+//! (asserted by `tests/integration_dataplane.rs`) — and the block update
+//! itself threads across `threads_per_rank` cores past the bandwidth
+//! threshold (see [`crate::matrix::gemm::EW_PAR_THRESHOLD`]).
 
 use crate::data::grid::GridN;
 use crate::graph::Graph;

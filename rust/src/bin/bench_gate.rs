@@ -1,0 +1,245 @@
+//! `bench_gate` — the CI bench-regression gate.
+//!
+//! Compares a freshly produced `BENCH_*.json` against the committed
+//! baseline and exits non-zero if any configuration regressed by more
+//! than the tolerance (default 10% GFlop/s), or vanished from the fresh
+//! results entirely.  Driven by `scripts/bench_gate`, which stashes the
+//! committed baselines before the benches overwrite them in place.
+//!
+//! ```text
+//! bench_gate --baseline <committed.json> --fresh <fresh.json> [--tolerance 0.10]
+//! ```
+//!
+//! The parser is deliberately minimal: it understands exactly the flat
+//! `"results": [ {..}, {..} ]` layout our bench drivers emit (the
+//! image's crate cache has no serde).  Entries are keyed by their
+//! identity fields (`kernel`/`op`, `b`, `threads`) and compared on
+//! `gflops`.  Higher is better; improvements always pass — blessing a
+//! faster baseline is a deliberate act (see README § bench gate), not
+//! something CI does implicitly.
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use foopar::cli::Args;
+
+/// Default allowed fractional GFlop/s drop before the gate trips.
+const DEFAULT_TOLERANCE: f64 = 0.10;
+
+/// One bench configuration: identity key + its measured rate.
+#[derive(Clone, Debug, PartialEq)]
+struct Entry {
+    key: String,
+    gflops: f64,
+}
+
+/// Extract the entries of a bench JSON's `"results"` array.  Tolerant of
+/// whitespace/ordering, strict about the fields: every entry must carry
+/// a `gflops` number, and identity is the concatenation of the known
+/// identity fields in file order.
+fn parse_entries(json: &str) -> Result<Vec<Entry>, String> {
+    let at = json
+        .find("\"results\"")
+        .ok_or_else(|| "no \"results\" key".to_string())?;
+    let rest = &json[at..];
+    let lb = rest.find('[').ok_or_else(|| "no results array".to_string())?;
+    let rb = rest
+        .rfind(']')
+        .filter(|&i| i > lb)
+        .ok_or_else(|| "unterminated results array".to_string())?;
+    let body = &rest[lb + 1..rb];
+
+    let mut entries = Vec::new();
+    for chunk in body.split('}') {
+        let Some(ob) = chunk.find('{') else { continue };
+        let fields = &chunk[ob + 1..];
+        let mut id: Vec<String> = Vec::new();
+        let mut gflops: Option<f64> = None;
+        for kv in fields.split(',') {
+            let Some((k, v)) = kv.split_once(':') else { continue };
+            let k = k.trim().trim_matches('"');
+            let v = v.trim().trim_matches('"');
+            match k {
+                "gflops" => {
+                    gflops =
+                        Some(v.parse::<f64>().map_err(|_| format!("bad gflops value '{v}'"))?);
+                }
+                "kernel" | "op" | "b" | "threads" => id.push(format!("{k}={v}")),
+                _ => {}
+            }
+        }
+        if id.is_empty() && gflops.is_none() {
+            continue; // stray separator noise, not an entry
+        }
+        let g = gflops.ok_or_else(|| format!("entry without gflops: {{{fields}}}"))?;
+        if id.is_empty() {
+            return Err(format!("entry without identity fields: {{{fields}}}"));
+        }
+        entries.push(Entry { key: id.join(" "), gflops: g });
+    }
+    if entries.is_empty() {
+        return Err("results array holds no entries".to_string());
+    }
+    Ok(entries)
+}
+
+/// Diff fresh against baseline: every baseline configuration must still
+/// exist and hold ≥ `(1 - tolerance) ×` its baseline GFlop/s.  Returns
+/// the human-readable failures (empty = gate passes).
+fn compare(baseline: &[Entry], fresh: &[Entry], tolerance: f64) -> Vec<String> {
+    let fresh_by_key: HashMap<&str, f64> =
+        fresh.iter().map(|e| (e.key.as_str(), e.gflops)).collect();
+    let mut failures = Vec::new();
+    for b in baseline {
+        match fresh_by_key.get(b.key.as_str()) {
+            None => failures.push(format!("missing from fresh results: {}", b.key)),
+            Some(&g) if g < b.gflops * (1.0 - tolerance) => failures.push(format!(
+                "regression: {} — {:.2} GFlop/s vs baseline {:.2} ({:+.1}%, tolerance -{:.0}%)",
+                b.key,
+                g,
+                b.gflops,
+                (g / b.gflops - 1.0) * 100.0,
+                tolerance * 100.0
+            )),
+            _ => {}
+        }
+    }
+    failures
+}
+
+/// The gate proper, separated from `main` so the unit tests below can
+/// drive it on doctored JSON without touching the filesystem.
+fn gate(baseline_json: &str, fresh_json: &str, tolerance: f64) -> Result<(), Vec<String>> {
+    let baseline = parse_entries(baseline_json).map_err(|e| vec![format!("baseline: {e}")])?;
+    let fresh = parse_entries(fresh_json).map_err(|e| vec![format!("fresh: {e}")])?;
+    let failures = compare(&baseline, &fresh, tolerance);
+    if failures.is_empty() {
+        Ok(())
+    } else {
+        Err(failures)
+    }
+}
+
+fn main() -> ExitCode {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("bench_gate: {e:#}");
+            return ExitCode::from(2);
+        }
+    };
+    let run = || -> Result<(String, String, f64), String> {
+        let baseline_path = args
+            .get("baseline")
+            .ok_or("missing required --baseline <committed.json>")?;
+        let fresh_path = args.get("fresh").ok_or("missing required --fresh <fresh.json>")?;
+        let tolerance = args
+            .get_f64("tolerance", DEFAULT_TOLERANCE)
+            .map_err(|e| e.to_string())?;
+        let baseline = std::fs::read_to_string(baseline_path)
+            .map_err(|e| format!("read {baseline_path}: {e}"))?;
+        let fresh = std::fs::read_to_string(fresh_path)
+            .map_err(|e| format!("read {fresh_path}: {e}"))?;
+        Ok((baseline, fresh, tolerance))
+    };
+    let (baseline, fresh, tolerance) = match run() {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("bench_gate: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    match gate(&baseline, &fresh, tolerance) {
+        Ok(()) => {
+            println!(
+                "bench gate PASS: no configuration regressed beyond {:.0}%",
+                tolerance * 100.0
+            );
+            ExitCode::SUCCESS
+        }
+        Err(failures) => {
+            for f in &failures {
+                eprintln!("bench gate FAIL: {f}");
+            }
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(gflops_b512_t4: f64) -> String {
+        format!(
+            "{{\n\"bench\": \"gemm_kernel\",\n\"results\": [\n  \
+             {{\"kernel\": \"seed\", \"b\": 512, \"threads\": 1, \"iters\": 6, \
+             \"secs_per_iter\": 1.0e-01, \"gflops\": 2.63, \"speedup_vs_seed\": 1.0}},\n  \
+             {{\"kernel\": \"packed\", \"b\": 512, \"threads\": 4, \"iters\": 6, \
+             \"secs_per_iter\": 7.0e-03, \"gflops\": {gflops_b512_t4}, \
+             \"speedup_vs_seed\": 14.49}}\n]\n}}\n"
+        )
+    }
+
+    #[test]
+    fn parses_identity_and_gflops() {
+        let entries = parse_entries(&sample(38.12)).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].key, "kernel=seed b=512 threads=1");
+        assert_eq!(entries[1].key, "kernel=packed b=512 threads=4");
+        assert!((entries[1].gflops - 38.12).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parses_op_keyed_entries_too() {
+        let json = "{\"results\": [ {\"op\": \"add\", \"b\": 2048, \"threads\": 4, \
+                    \"gflops\": 2.5} ]}";
+        let entries = parse_entries(json).unwrap();
+        assert_eq!(entries[0].key, "op=add b=2048 threads=4");
+    }
+
+    #[test]
+    fn identical_results_pass() {
+        assert!(gate(&sample(38.12), &sample(38.12), 0.10).is_ok());
+    }
+
+    #[test]
+    fn improvement_and_small_noise_pass() {
+        // faster than baseline: fine
+        assert!(gate(&sample(38.12), &sample(44.0), 0.10).is_ok());
+        // 5% down: inside the 10% tolerance
+        assert!(gate(&sample(38.12), &sample(36.2), 0.10).is_ok());
+    }
+
+    #[test]
+    fn doctored_regressing_json_fails_the_gate() {
+        // the negative test of the acceptance criteria: feed the gate a
+        // fresh file whose b=512 t=4 rate dropped ~20% — it must FAIL
+        let failures = gate(&sample(38.12), &sample(30.5), 0.10).unwrap_err();
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("regression"), "{failures:?}");
+        assert!(failures[0].contains("kernel=packed b=512 threads=4"), "{failures:?}");
+    }
+
+    #[test]
+    fn missing_configuration_fails_the_gate() {
+        let fresh = "{\"results\": [ {\"kernel\": \"seed\", \"b\": 512, \"threads\": 1, \
+                     \"gflops\": 2.63} ]}";
+        let failures = gate(&sample(38.12), fresh, 0.10).unwrap_err();
+        assert!(failures.iter().any(|f| f.contains("missing")), "{failures:?}");
+    }
+
+    #[test]
+    fn malformed_json_is_an_error_not_a_pass() {
+        assert!(gate("{}", &sample(38.12), 0.10).is_err());
+        assert!(gate(&sample(38.12), "{\"results\": []}", 0.10).is_err());
+        assert!(parse_entries("{\"results\": [ {\"kernel\": \"x\", \"b\": 1} ]}").is_err());
+    }
+
+    #[test]
+    fn tolerance_is_respected() {
+        // 20% down passes a 25% tolerance, fails a 10% one
+        assert!(gate(&sample(40.0), &sample(32.0), 0.25).is_ok());
+        assert!(gate(&sample(40.0), &sample(32.0), 0.10).is_err());
+    }
+}

@@ -356,9 +356,13 @@ impl WireData for Block {
 impl WireData for Seg {
     fn encode(&self, out: &mut Vec<u8>) {
         match self {
+            // Real segments live in a shared CoW `Buf` (in-process they
+            // move by reference); on the wire they are a plain length-
+            // prefixed f32 run, same as a `Vec<f32>`.
             Seg::Real(v) => {
                 out.push(0);
-                v.encode(out);
+                (v.len() as u64).encode(out);
+                f32::encode_slice(v.as_slice(), out);
             }
             Seg::Proxy { len } => {
                 out.push(1);
@@ -368,7 +372,7 @@ impl WireData for Seg {
     }
     fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
         match r.u8()? {
-            0 => Ok(Seg::Real(Vec::<f32>::decode(r)?)),
+            0 => Ok(Seg::real(Vec::<f32>::decode(r)?)),
             1 => Ok(Seg::Proxy { len: usize::decode(r)? }),
             _ => Err(WireError::Malformed("Seg variant byte")),
         }
@@ -434,7 +438,7 @@ mod tests {
         roundtrip(Mat::random(5, 3, 42));
         roundtrip(Block::Real(Mat::random(4, 4, 7)));
         roundtrip(Block::Proxy { rows: 64, cols: 32, seed: 0xAB });
-        roundtrip(Seg::Real(vec![1.0, -2.0, 3.5]));
+        roundtrip(Seg::real(vec![1.0, -2.0, 3.5]));
         roundtrip(Seg::Proxy { len: 100 });
     }
 

@@ -125,6 +125,83 @@ pub fn sweep(iters: usize) -> Vec<PeakRow> {
     rows
 }
 
+/// Measure one threaded elementwise kernel (`"add"`, `"fw_update"` or
+/// `"min"`) at block edge `b` with `threads` cores — through a real
+/// single-rank run, so the reported GFlop/s is the rank's own
+/// [`MetricsSnapshot::ew_gflops`](crate::metrics::MetricsSnapshot) —
+/// exactly the elementwise figure real-mode runs surface.  These
+/// kernels are bandwidth-bound (≈ one flop per 4-byte element), so the
+/// numbers track memory throughput and only scale with threads past
+/// [`gemm::EW_PAR_THRESHOLD`] elements (b ≥ 1024).
+pub fn elementwise_peak_mt(op: &'static str, b: usize, iters: usize, threads: usize) -> PeakRow {
+    use crate::runtime::compute::Seg;
+
+    let x = Mat::random(b, b, 1);
+    let y = Mat::random(b, b, 2);
+    let ik: Vec<f32> = (0..b).map(|i| ((i * 7) % 23) as f32 * 0.5).collect();
+    let kj: Vec<f32> = (0..b).map(|i| ((i * 5) % 19) as f32 * 0.25).collect();
+    // warmup outside the measured context (primes the worker checkout)
+    std::hint::black_box(gemm::add_mt(&x, &y, threads));
+    let res = Runtime::builder()
+        .world(1)
+        .cost(CostParams::free())
+        .threads_per_rank(threads)
+        .build()
+        .expect("peak runtime")
+        .run(|ctx| {
+            for _ in 0..iters {
+                match op {
+                    "add" => {
+                        std::hint::black_box(Compute::Native.add(
+                            ctx,
+                            Block::real(x.clone()),
+                            Block::real(y.clone()),
+                        ));
+                    }
+                    "min" => {
+                        std::hint::black_box(Compute::Native.min_blocks(
+                            ctx,
+                            Block::real(x.clone()),
+                            Block::real(y.clone()),
+                        ));
+                    }
+                    "fw_update" => {
+                        // unshare outside the timed kernel: fw_update
+                        // mutates in place, and measuring the CoW copy
+                        // would understate the kernel's own rate
+                        let mut d = x.clone();
+                        let _ = d.data.as_mut_slice();
+                        let ikseg = Seg::real(ik.clone());
+                        let kjseg = Seg::real(kj.clone());
+                        std::hint::black_box(Compute::Native.fw_update(
+                            ctx,
+                            Block::real(d),
+                            &ikseg,
+                            &kjseg,
+                        ));
+                    }
+                    other => panic!("unknown elementwise op '{other}'"),
+                }
+            }
+        });
+    let m = res.metrics[0];
+    PeakRow { path: op, b, threads, iters, secs: m.ew_time, gflops: m.ew_gflops() }
+}
+
+/// Elementwise calibration sweep: add / fw_update / min at 1/2/4
+/// threads, below and above the threading threshold.
+pub fn elementwise_sweep(iters: usize) -> Vec<PeakRow> {
+    let mut rows = Vec::new();
+    for &b in &[512usize, 1024, 2048] {
+        for op in ["add", "fw_update", "min"] {
+            for &threads in &[1usize, 2, 4] {
+                rows.push(elementwise_peak_mt(op, b, iters, threads));
+            }
+        }
+    }
+    rows
+}
+
 pub fn render(rows: &[PeakRow]) -> String {
     let table: Vec<Vec<String>> = rows
         .iter()
@@ -190,6 +267,16 @@ mod tests {
         let r = seed_peak(64, 3);
         assert!(r.gflops > 0.01, "{}", r.gflops);
         assert_eq!(r.path, "seed");
+    }
+
+    #[test]
+    fn elementwise_peak_positive_for_all_ops() {
+        for op in ["add", "fw_update", "min"] {
+            let r = elementwise_peak_mt(op, 64, 2, 1);
+            assert!(r.gflops > 0.0, "{op}: {}", r.gflops);
+            assert_eq!(r.path, op);
+            assert_eq!(r.threads, 1);
+        }
     }
 
     #[test]

@@ -163,6 +163,11 @@ fn cmd_peak(args: &Args) -> Result<()> {
     let rows = peak::sweep(iters);
     println!("{}", peak::render(&rows));
     print!("{}", peak::efficiency_report(&rows, &machine));
+    println!(
+        "\n== elementwise kernels (bandwidth-bound; threaded past 1024² elements) ==\n"
+    );
+    let ew = peak::elementwise_sweep(iters.min(6));
+    println!("{}", peak::render(&ew));
     if let Some(best) = rows
         .iter()
         .filter(|r| r.path == "pjrt")

@@ -15,7 +15,11 @@
 //!   arrays autovectorize; no intrinsics, no `unsafe`.
 //! * **Cache blocking** — [`KC`]-deep panels keep the packed A strip in
 //!   L1/L2 across the whole row of microtiles; [`MC`]-row bands bound
-//!   the packed-A working set and are the unit of multi-threading.
+//!   the packed-A working set.  Multi-threaded products are cut into
+//!   ([`MC`] band × [`NC`] column-panel) tiles and scheduled through the
+//!   work-stealing scheduler in [`crate::matrix::par`], so small band
+//!   counts still occupy every core and a slow tile is isolated from
+//!   the rest of its band.
 //! * **Packing** — A bands and the whole of B are copied once into
 //!   contiguous, zero-padded panels from a process-wide **scratch pool**
 //!   (buffers are reused across calls, so steady-state products allocate
@@ -45,9 +49,18 @@ pub const NR: usize = 8;
 /// K-dimension cache-block depth: a packed A strip is `MR·KC` floats
 /// (8 KiB) — resident in L1 across a row of microtiles.
 pub const KC: usize = 256;
-/// Row-band height: the threading and packed-A granularity
-/// (`MC·KC` floats = 64 KiB per band panel).
+/// Row-band height: the packed-A granularity and the row edge of a
+/// scheduler tile (`MC·KC` floats = 64 KiB per band panel).
 pub const MC: usize = 64;
+/// Column-panel width of one scheduler tile (multiple of [`NR`]).  A
+/// multi-threaded product is tiled (MC band × NC panel) so small band
+/// counts still produce enough tiles to feed every core — the PR-4
+/// whole-band counter left cores idle below `threads` bands.  Each tile
+/// re-packs its band's A strip per KC block, which costs `njp/(2n)` of
+/// the multiply work (< 1% at n ≥ 128) and buys full occupancy;
+/// single-threaded runs keep one panel spanning all of n and skip the
+/// re-pack entirely.
+pub const NC: usize = 128;
 
 /// Process-wide pool of packing scratch buffers (see module docs).
 mod scratch {
@@ -185,20 +198,26 @@ enum Semiring {
     Tropical,
 }
 
-/// Compute one MC row band `c[row0.., :] ⊕= A[row0.., :] ⊗ B` against the
-/// pre-packed whole-B panel `pb`.  `c_band` is the band's slice of C
-/// (local row 0 = global `row0`); `pa` is this thread's packing scratch.
+/// Compute one scheduler tile `c[row0.., jlo..jhi) ⊕= A[row0.., :] ⊗
+/// B[:, jlo..jhi)` against the pre-packed whole-B panel `pb`.  Output
+/// goes through `out` windows (global row-major offsets); `pa` is this
+/// tile's packing scratch.  `jlo` must be NR-aligned (tiles are cut at
+/// NC boundaries, a multiple of NR) so the tile's column strips line up
+/// with the packed-B strips.
 #[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
 fn band_kernel(
     semiring: Semiring,
-    c_band: &mut [f32],
+    out: &par::DisjointOut<'_>,
     a: &Mat,
     pb: &[f32],
     row0: usize,
     mc: usize,
+    jlo: usize,
+    jhi: usize,
     n: usize,
     pa: &mut [f32],
 ) {
+    debug_assert_eq!(jlo % NR, 0, "tile column panels must be NR-aligned");
     let k = a.cols;
     let nstrips = n.div_ceil(NR);
     let (pad, identity) = match semiring {
@@ -210,8 +229,9 @@ fn band_kernel(
         let pa_len = mc.div_ceil(MR) * MR * kc;
         pack_a(a, row0, mc, k0, kc, pad, &mut pa[..pa_len]);
         let pb_block = &pb[nstrips * NR * k0..nstrips * NR * (k0 + kc)];
-        for (jsi, j0) in (0..n).step_by(NR).enumerate() {
-            let nr_eff = NR.min(n - j0);
+        for j0 in (jlo..jhi).step_by(NR) {
+            let jsi = j0 / NR; // global strip index into the packed B
+            let nr_eff = NR.min(jhi - j0);
             let pbs = &pb_block[jsi * kc * NR..(jsi + 1) * kc * NR];
             for (isi, i0) in (0..mc).step_by(MR).enumerate() {
                 let mr_eff = MR.min(mc - i0);
@@ -222,8 +242,10 @@ fn band_kernel(
                     Semiring::Tropical => micro_tropical(kc, pas, pbs, &mut acc),
                 }
                 for i in 0..mr_eff {
-                    let base = (i0 + i) * n + j0;
-                    let crow = &mut c_band[base..base + nr_eff];
+                    let base = (row0 + i0 + i) * n + j0;
+                    // SAFETY: rows of this tile's (band × panel)
+                    // rectangle — disjoint across tiles by construction.
+                    let crow = unsafe { out.window(base, nr_eff) };
                     match semiring {
                         Semiring::Dense => {
                             for (cv, av) in crow.iter_mut().zip(&acc[i][..nr_eff]) {
@@ -244,10 +266,12 @@ fn band_kernel(
     }
 }
 
-/// Shared driver: pack B once, then compute MC row bands — in parallel
-/// over the per-rank worker pool when `threads > 1`.  Bands write
-/// disjoint slices of C, so the result is bit-identical for every thread
-/// count.
+/// Shared driver: pack B once, then compute (MC row band × NC column
+/// panel) tiles — through the work-stealing scheduler over the per-rank
+/// worker pool when `threads > 1`.  Tiles write disjoint rectangles of
+/// C and every `c[i][j]` accumulates over `k` in the same order under
+/// any tiling, so the result is bit-identical for every thread count
+/// (and identical to the single-panel single-thread run).
 fn banded_product(semiring: Semiring, c: &mut Mat, a: &Mat, b: &Mat, threads: usize) {
     let (m, k, n) = (a.rows, a.cols, b.cols);
     if m == 0 || k == 0 || n == 0 {
@@ -256,21 +280,20 @@ fn banded_product(semiring: Semiring, c: &mut Mat, a: &Mat, b: &Mat, threads: us
     let mut pb = scratch::take(n.div_ceil(NR) * NR * k);
     pack_b(b, &mut pb);
     let nbands = m.div_ceil(MC);
+    // Column split only when there are cores to feed (see [`NC`]).
+    let njp = if threads <= 1 { 1 } else { n.div_ceil(NC) };
+    let ntiles = nbands * njp;
     {
         let cd: &mut [f32] = c.data.as_mut_slice();
-        // Hand each band its own &mut slice through a Mutex: the lock is
-        // uncontended (one owner per band) — it only launders the
-        // exclusive borrows across the `Fn` boundary safely.
-        let bands: Vec<std::sync::Mutex<&mut [f32]>> =
-            cd.chunks_mut(MC * n).map(std::sync::Mutex::new).collect();
+        let out = par::DisjointOut::new(cd);
         let pb_ref: &[f32] = &pb;
-        par::run_chunks(threads, nbands, &|band_idx| {
-            let row0 = band_idx * MC;
+        par::run_chunks(threads, ntiles, &|tile| {
+            let (band, jp) = (tile / njp, tile % njp);
+            let row0 = band * MC;
             let mc = MC.min(m - row0);
-            let mut guard = bands[band_idx].lock().unwrap();
-            let c_band: &mut [f32] = &mut guard;
+            let (jlo, jhi) = if njp == 1 { (0, n) } else { (jp * NC, n.min((jp + 1) * NC)) };
             let mut pa = scratch::take(mc.div_ceil(MR) * MR * KC.min(k));
-            band_kernel(semiring, c_band, a, pb_ref, row0, mc, n, &mut pa);
+            band_kernel(semiring, &out, a, pb_ref, row0, mc, jlo, jhi, n, &mut pa);
             scratch::give(pa);
         });
     }
@@ -304,11 +327,92 @@ pub fn matmul_acc_into_mt(c: &mut Mat, a: &Mat, b: &Mat, threads: usize) {
     banded_product(Semiring::Dense, c, a, b, threads);
 }
 
-/// `A + B` elementwise (the reduceD combine).
-pub fn add(a: &Mat, b: &Mat) -> Mat {
+// ------------------------------------------------- elementwise kernels
+
+/// Elementwise kernels run single-threaded below this element count
+/// (~1024²).  They are **bandwidth-bound** — one or two flops per 4-byte
+/// element — so extra cores only pay once the operands outgrow the
+/// shared cache and the loop is genuinely streaming from DRAM; under
+/// the threshold the pool handoff (~µs) costs more than the whole
+/// memcpy-speed loop, and a single core already saturates the cache
+/// bandwidth.  GEMM has no such threshold: at O(n³/n²) flops per byte
+/// it is compute-bound at every size worth blocking.
+pub const EW_PAR_THRESHOLD: usize = 1 << 20;
+
+/// Elements handed to one scheduler chunk of an elementwise kernel:
+/// 1 MiB of f32 — big enough to amortize a claim, small enough that
+/// `threads` cores stay balanced on 2048² blocks.
+const EW_CHUNK: usize = 1 << 18;
+
+/// Effective thread count for an elementwise kernel over `len` elements
+/// (see [`EW_PAR_THRESHOLD`]).
+#[inline]
+fn ew_threads(len: usize, threads: usize) -> usize {
+    if len < EW_PAR_THRESHOLD {
+        1
+    } else {
+        threads
+    }
+}
+
+/// Shared elementwise driver: `out[i] = op(a[i], b[i])`, chunked over
+/// the work-stealing scheduler past the bandwidth threshold.  Element
+/// order within a chunk is ascending and chunks are disjoint, so the
+/// result is bit-identical for every thread count.
+#[allow(clippy::uninit_vec)] // chunks below write every slot before set_len
+fn ew_binary_mt(a: &Mat, b: &Mat, threads: usize, op: impl Fn(f32, f32) -> f32 + Sync) -> Mat {
     assert_eq!((a.rows, a.cols), (b.rows, b.cols));
-    let data = a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect();
-    Mat { rows: a.rows, cols: a.cols, data }
+    let len = a.data.len();
+    if ew_threads(len, threads) <= 1 {
+        let data = a.data.iter().zip(&b.data).map(|(x, y)| op(*x, *y)).collect();
+        return Mat { rows: a.rows, cols: a.cols, data };
+    }
+    // Parallel path writes every slot exactly once, so the output is
+    // allocated uninitialized — a zero-fill would add a full extra
+    // write pass to a kernel whose cost *is* its memory traffic.  The
+    // chunks write through raw pointers (`write_window`), never forming
+    // a slice over the uninitialized storage.
+    let mut out: Vec<f32> = Vec::with_capacity(len);
+    let nchunks = len.div_ceil(EW_CHUNK);
+    {
+        // SAFETY: capacity `len` was just reserved; chunks below cover
+        // [0, len) exactly once.
+        let dst = unsafe { par::DisjointOut::from_raw(out.as_mut_ptr(), len) };
+        let (ad, bd): (&[f32], &[f32]) = (&a.data, &b.data);
+        par::run_chunks(threads, nchunks, &|ci| {
+            let lo = ci * EW_CHUNK;
+            let hi = len.min(lo + EW_CHUNK);
+            // SAFETY: disjoint contiguous windows, raw writes only.
+            unsafe { dst.write_window(lo, hi - lo, |i| op(ad[lo + i], bd[lo + i])) };
+        });
+    }
+    // SAFETY: all `len` elements were initialized by the chunks above.
+    unsafe { out.set_len(len) };
+    Mat { rows: a.rows, cols: a.cols, data: out.into() }
+}
+
+/// `A + B` elementwise (the reduceD combine), single-threaded.
+pub fn add(a: &Mat, b: &Mat) -> Mat {
+    add_mt(a, b, 1)
+}
+
+/// `A + B` elementwise with up to `threads` cores past the bandwidth
+/// threshold.  Bit-identical for every thread count.
+pub fn add_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    ew_binary_mt(a, b, threads, |x, y| x + y)
+}
+
+/// Elementwise `min(A, B)` — the tropical semiring's ⊕ at block level
+/// (the APSP-by-squaring combine), single-threaded.
+pub fn min_mat(a: &Mat, b: &Mat) -> Mat {
+    min_mat_mt(a, b, 1)
+}
+
+/// Elementwise min with up to `threads` cores past the bandwidth
+/// threshold.  `min` is exact in floating point, so the result is
+/// bit-identical for every thread count by construction.
+pub fn min_mat_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    ew_binary_mt(a, b, threads, f32::min)
 }
 
 /// "No edge" sentinel of the (min,+) semiring — kept in sync with
@@ -333,16 +437,46 @@ pub fn minplus_matmul_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
 
 /// Floyd-Warshall pivot update on a block (Alg. 3 lines 9-14):
 /// `d[i,j] = min(d[i,j], kj[i] + ik[j])`, where `ik` is the pivot-row
-/// segment and `kj` the pivot-column segment.
+/// segment and `kj` the pivot-column segment.  Single-threaded.
 pub fn fw_update_into(d: &mut Mat, ik: &[f32], kj: &[f32]) {
+    fw_update_into_mt(d, ik, kj, 1);
+}
+
+/// Floyd-Warshall pivot update with up to `threads` cores past the
+/// bandwidth threshold (row ranges are disjoint and each element's
+/// update is a single min — bit-identical for every thread count).
+pub fn fw_update_into_mt(d: &mut Mat, ik: &[f32], kj: &[f32], threads: usize) {
     assert_eq!(ik.len(), d.cols);
     assert_eq!(kj.len(), d.rows);
-    for i in 0..d.rows {
-        let base = kj[i];
+    let (rows, cols) = (d.rows, d.cols);
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    let dd: &mut [f32] = d.data.as_mut_slice();
+    if ew_threads(rows * cols, threads) <= 1 {
+        fw_update_rows(dd, cols, ik, kj);
+        return;
+    }
+    // ~EW_CHUNK elements per chunk, cut on row boundaries
+    let rows_per = EW_CHUNK.div_ceil(cols).max(1).min(rows);
+    let nchunks = rows.div_ceil(rows_per);
+    let out = par::DisjointOut::new(dd);
+    par::run_chunks(threads, nchunks, &|ci| {
+        let r0 = ci * rows_per;
+        let r1 = rows.min(r0 + rows_per);
+        // SAFETY: disjoint row ranges.
+        let span = unsafe { out.window(r0 * cols, (r1 - r0) * cols) };
+        fw_update_rows(span, cols, ik, &kj[r0..r1]);
+    });
+}
+
+/// The FW update over one contiguous run of rows: `dd` covers the rows
+/// `kj` describes, `ik` spans all columns.
+fn fw_update_rows(dd: &mut [f32], cols: usize, ik: &[f32], kj: &[f32]) {
+    for (row, &base) in dd.chunks_mut(cols).zip(kj) {
         if base >= INF {
             continue;
         }
-        let row = &mut d.data[i * d.cols..(i + 1) * d.cols];
         for (dv, &ikv) in row.iter_mut().zip(ik) {
             let cand = base + ikv;
             if cand < *dv {
@@ -464,8 +598,16 @@ mod tests {
 
     #[test]
     fn multithreaded_matmul_is_bit_identical() {
-        // determinism contract: any thread count, same bytes
-        for (m, k, n) in [(130usize, 70usize, 65usize), (64, 256, 64), (3, 5, 2)] {
+        // determinism contract: any thread count, same bytes — including
+        // shapes where the 2D tiling splits columns (n > NC) and where
+        // it does not (n < NC)
+        for (m, k, n) in [
+            (130usize, 70usize, 65usize),
+            (64, 256, 64),
+            (3, 5, 2),
+            (64, 100, 2 * NC + 44),
+            (2 * MC + 5, 33, NC + 1),
+        ] {
             let a = Mat::random(m, k, 9);
             let b = Mat::random(k, n, 10);
             let base = matmul_mt(&a, &b, 1);
@@ -473,6 +615,19 @@ mod tests {
                 let got = matmul_mt(&a, &b, threads);
                 assert_eq!(base.data, got.data, "threads={threads} ({m}x{k}x{n})");
             }
+        }
+    }
+
+    #[test]
+    fn multithreaded_matmul_crosses_panel_boundaries_correctly() {
+        // NC ± 1 columns at threads = 2: exercises the tile column split
+        // against the naive reference, not just against itself
+        for n in [NC - 1, NC, NC + 1, 2 * NC + 3] {
+            let a = Mat::random(70, 41, n as u64);
+            let b = Mat::random(41, n, n as u64 + 1);
+            let got = matmul_mt(&a, &b, 2);
+            let want = matmul_naive(&a, &b);
+            assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
         }
     }
 
@@ -534,6 +689,49 @@ mod tests {
         let a = Mat::filled(3, 3, 1.0);
         let b = Mat::filled(3, 3, 2.5);
         assert_eq!(add(&a, &b), Mat::filled(3, 3, 3.5));
+    }
+
+    #[test]
+    fn threaded_elementwise_bit_identical_past_threshold() {
+        // 1024² = EW_PAR_THRESHOLD exactly: the parallel path engages
+        let a = Mat::random(1024, 1024, 31);
+        let b = Mat::random(1024, 1024, 32);
+        let add1 = add_mt(&a, &b, 1);
+        let min1 = min_mat_mt(&a, &b, 1);
+        for threads in [2usize, 4] {
+            assert_eq!(add1.data, add_mt(&a, &b, threads).data, "add threads={threads}");
+            assert_eq!(min1.data, min_mat_mt(&a, &b, threads).data, "min threads={threads}");
+        }
+        // under the threshold the knob is ignored but results still match
+        let sa = Mat::random(37, 19, 1);
+        let sb = Mat::random(37, 19, 2);
+        assert_eq!(add_mt(&sa, &sb, 4).data, add(&sa, &sb).data);
+        assert_eq!(min_mat_mt(&sa, &sb, 4).data, min_mat(&sa, &sb).data);
+    }
+
+    #[test]
+    fn threaded_fw_update_bit_identical_past_threshold() {
+        let b = 1024usize;
+        let ik: Vec<f32> = (0..b).map(|i| ((i * 7) % 23) as f32 * 0.5).collect();
+        let mut kj: Vec<f32> = (0..b).map(|i| ((i * 5) % 19) as f32 * 0.25).collect();
+        kj[3] = INF; // exercise the INF row skip on both paths
+        let base = {
+            let mut d = Mat::random(b, b, 77);
+            fw_update_into_mt(&mut d, &ik, &kj, 1);
+            d
+        };
+        for threads in [2usize, 4] {
+            let mut d = Mat::random(b, b, 77);
+            fw_update_into_mt(&mut d, &ik, &kj, threads);
+            assert_eq!(base.data, d.data, "fw_update threads={threads}");
+        }
+    }
+
+    #[test]
+    fn min_mat_small_example() {
+        let a = Mat::from_vec(2, 2, vec![1., 5., 2., 1.]);
+        let b = Mat::from_vec(2, 2, vec![3., 0., 1., 4.]);
+        assert_eq!(min_mat(&a, &b), Mat::from_vec(2, 2, vec![1., 0., 1., 1.]));
     }
 
     #[test]

@@ -1,56 +1,192 @@
-//! Intra-rank data parallelism: fan independent chunks of one rank's
-//! block kernel out over the persistent process-wide worker pool.
+//! Intra-rank data parallelism: a rayon-free work-stealing scheduler
+//! that fans independent chunks of one rank's block kernel out over the
+//! persistent process-wide worker pool.
 //!
 //! The paper pairs FooPar's collectives with a real BLAS per core; our
 //! analogue gives `Compute::Native` a `threads_per_rank` knob (see
 //! [`Runtime::builder`](crate::spmd::Runtime::builder)) and splits the
-//! MC row-panels of the packed GEMM across that many cores.  Workers are
-//! the same reusable pool threads the SPMD launcher runs ranks on
-//! ([`crate::spmd::pool`]) — checked out for the duration of one
-//! parallel region, returned to the free list afterwards — so repeated
-//! block products pay zero thread spawn/join cost.
+//! (MC row-band × NC column-panel) tiles of the packed GEMM — and the
+//! chunks of the threaded elementwise kernels — across that many cores.
+//! Workers are the same reusable pool threads the SPMD launcher runs
+//! ranks on ([`crate::spmd::pool`]) — checked out for the duration of
+//! one parallel region, returned to the free list afterwards — so
+//! repeated block products pay zero thread spawn/join cost.
 //!
-//! Chunks must write **disjoint** output (the GEMM hands each chunk its
-//! own row band), which is what makes the dynamic chunk→worker
-//! assignment below bit-deterministic: any schedule produces the same
-//! bytes.
+//! **Scheduling.**  The task index space is split into one contiguous
+//! *deque* per worker (locality: adjacent GEMM tiles share packed
+//! panels in cache).  A worker drains its own deque from the front with
+//! a single `fetch_add`, then falls back to *stealing*: it scans the
+//! other workers' deques — starting at its right neighbour so thieves
+//! spread out — and claims from whichever still has work, with the same
+//! atomic claim.  A full empty scan means every task is claimed and the
+//! worker retires.  Each index is handed out exactly once (the
+//! `fetch_add` is the claim), and the per-deque cursor overshoots its
+//! end by at most one probe per worker, so the scheme is lock-free and
+//! allocation-free after the initial deque vector.
+//!
+//! This replaces the PR-4 single global counter: handing out whole MC
+//! bands from one counter left cores idle whenever `nbands` was small
+//! or one band ran long (tail imbalance).  With 2D tiles + stealing,
+//! a worker stuck on a heavy tile loses only that tile — the rest of
+//! its deque is drained by the others.
+//!
+//! **Determinism.**  Chunks must write **disjoint** output (the GEMM
+//! hands each tile its own row-band × column-panel rectangle of C;
+//! the elementwise kernels hand out disjoint element ranges), and every
+//! output element is accumulated in a fixed order *within* its chunk.
+//! That is what makes the dynamic chunk→worker assignment
+//! bit-deterministic: any schedule produces the same bytes.
 
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::spmd::pool;
 
-/// Run `f(chunk)` for every `chunk in 0..nchunks` with up to `threads`
-/// pool workers claiming chunks dynamically.  Returns when every chunk
-/// completed.  `threads <= 1` (or a single chunk) runs inline on the
-/// caller with no pool traffic.
+/// One worker's run of the task index space: claims come off the front
+/// (`next.fetch_add(1)`), by the owner or by a thief — the fetch_add
+/// *is* the claim, so each index runs exactly once.
+struct Deque {
+    next: AtomicUsize,
+    end: usize,
+}
+
+/// Run `f(task)` for every `task in 0..ntasks` with up to `threads`
+/// pool workers claiming tasks via the work-stealing scheduler (module
+/// docs).  Returns when every task completed.
 ///
-/// `threads` is the number of *compute* threads: all chunks run on pool
+/// Fast path: `threads <= 1` — or a region of one or zero tasks —
+/// runs inline on the caller with **no pool traffic** (a 0-task region
+/// must not check out workers just to discover there is nothing to do;
+/// see the regression test below).
+///
+/// `threads` is the number of *compute* threads: all tasks run on pool
 /// workers while the calling rank thread blocks on the completion
 /// barrier.  The parked caller costs a condvar wait, not a core — it is
 /// not runnable, so `world × threads_per_rank` active workers is the
 /// whole CPU footprint.
-pub fn run_chunks(threads: usize, nchunks: usize, f: &(dyn Fn(usize) + Sync)) {
-    if threads <= 1 || nchunks <= 1 {
-        for chunk in 0..nchunks {
-            f(chunk);
+pub fn run_chunks(threads: usize, ntasks: usize, f: &(dyn Fn(usize) + Sync)) {
+    if threads <= 1 || ntasks <= 1 {
+        // inline fast path: covers ntasks == 0 (no pool checkout)
+        for task in 0..ntasks {
+            f(task);
         }
         return;
     }
-    let workers = threads.min(nchunks);
-    let next = AtomicUsize::new(0);
-    pool::scoped_run(workers, &|_worker| loop {
-        let chunk = next.fetch_add(1, Ordering::Relaxed);
-        if chunk >= nchunks {
+    let workers = threads.min(ntasks);
+    // One contiguous deque per worker, sizes differing by at most one.
+    let deques: Vec<Deque> = (0..workers)
+        .map(|w| Deque {
+            next: AtomicUsize::new(w * ntasks / workers),
+            end: (w + 1) * ntasks / workers,
+        })
+        .collect();
+    pool::scoped_run(workers, &|w| {
+        'claim: loop {
+            // own deque first, then steal from the right neighbour onwards
+            for v in 0..workers {
+                let d = &deques[(w + v) % workers];
+                let task = d.next.fetch_add(1, Ordering::Relaxed);
+                if task < d.end {
+                    f(task);
+                    continue 'claim;
+                }
+            }
+            // a full scan found nothing left to claim anywhere
             break;
         }
-        f(chunk);
     });
+}
+
+/// A shared mutable output region for disjoint parallel writes.
+///
+/// The scheduler's chunks write **disjoint** windows of one output
+/// buffer (GEMM tiles own row-band × column-panel rectangles of C;
+/// elementwise chunks own contiguous element ranges).  Rust cannot
+/// express "these `&mut` windows are pairwise disjoint" across a shared
+/// `Fn` closure, so this wrapper launders the exclusivity through a raw
+/// pointer under an explicit contract — the same role the per-band
+/// `Mutex<&mut [f32]>` vector played in PR-4, without a lock per access
+/// and without requiring windows to be whole `chunks_mut` pieces.
+pub(crate) struct DisjointOut<'a> {
+    ptr: *mut f32,
+    len: usize,
+    _life: PhantomData<&'a mut f32>,
+}
+
+// SAFETY: handing the pointer to pool workers is sound because `window`
+// callers guarantee disjointness (see its contract) and `run_chunks`
+// does not return until every worker finished.
+unsafe impl Sync for DisjointOut<'_> {}
+
+impl<'a> DisjointOut<'a> {
+    /// Wrap an exclusively-borrowed buffer for the duration of one
+    /// parallel region.
+    pub(crate) fn new(data: &'a mut [f32]) -> Self {
+        DisjointOut { ptr: data.as_mut_ptr(), len: data.len(), _life: PhantomData }
+    }
+
+    /// Wrap `len` elements of raw (possibly uninitialized) storage.
+    ///
+    /// # Safety
+    /// `ptr` must be valid for writes of `len` `f32`s for the lifetime
+    /// `'a`.  Reading through a window is only sound for elements that
+    /// were already written.
+    pub(crate) unsafe fn from_raw(ptr: *mut f32, len: usize) -> Self {
+        DisjointOut { ptr, len, _life: PhantomData }
+    }
+
+    /// The window `[offset, offset + len)` as a mutable slice.
+    ///
+    /// # Safety
+    /// Concurrent callers must hand out pairwise **disjoint** windows:
+    /// no two windows alive at the same time may overlap.  The window's
+    /// memory must be **initialized** (a slice over uninitialized
+    /// storage is undefined behavior — use [`DisjointOut::write_window`]
+    /// for [`DisjointOut::from_raw`] regions).  Bounds are
+    /// debug-asserted.
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn window(&self, offset: usize, len: usize) -> &'a mut [f32] {
+        debug_assert!(
+            offset.checked_add(len).is_some_and(|hi| hi <= self.len),
+            "window [{offset}, {offset}+{len}) out of bounds (len {})",
+            self.len
+        );
+        std::slice::from_raw_parts_mut(self.ptr.add(offset), len)
+    }
+
+    /// Fill the window `[offset, offset + len)` with `gen(i)` (the
+    /// window-local index), through raw pointer writes — sound over
+    /// **uninitialized** storage, unlike [`DisjointOut::window`], so
+    /// this is the writer for [`DisjointOut::from_raw`] output buffers.
+    ///
+    /// # Safety
+    /// Concurrent callers must hand out pairwise disjoint windows, as
+    /// for [`DisjointOut::window`].  Bounds are debug-asserted.
+    pub(crate) unsafe fn write_window(
+        &self,
+        offset: usize,
+        len: usize,
+        mut gen: impl FnMut(usize) -> f32,
+    ) {
+        debug_assert!(
+            offset.checked_add(len).is_some_and(|hi| hi <= self.len),
+            "window [{offset}, {offset}+{len}) out of bounds (len {})",
+            self.len
+        );
+        let base = self.ptr.add(offset);
+        for i in 0..len {
+            base.add(i).write(gen(i));
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
+    use std::sync::Mutex;
+    use std::thread::ThreadId;
+    use std::time::Duration;
 
     #[test]
     fn every_chunk_runs_exactly_once() {
@@ -73,8 +209,30 @@ mod tests {
     }
 
     #[test]
-    fn zero_chunks_is_a_noop() {
+    fn more_threads_than_chunks_claims_each_once() {
+        // workers = threads.min(ntasks): 8 threads, 3 chunks
+        let hits = AtomicU64::new(0);
+        run_chunks(8, 3, &|c| {
+            hits.fetch_add(1 << c, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 0b111);
+    }
+
+    #[test]
+    fn zero_chunks_is_a_noop_even_multithreaded() {
+        // regression: a 0-chunk region with threads > 1 must take the
+        // inline fast path, not check pool workers out and back in
         run_chunks(4, 0, &|_| panic!("no chunks to run"));
+    }
+
+    #[test]
+    fn single_chunk_runs_inline_on_the_caller() {
+        let caller = std::thread::current().id();
+        let ran_on: Mutex<Option<ThreadId>> = Mutex::new(None);
+        run_chunks(4, 1, &|_| {
+            *ran_on.lock().unwrap() = Some(std::thread::current().id());
+        });
+        assert_eq!(*ran_on.lock().unwrap(), Some(caller), "1 chunk must not hit the pool");
     }
 
     #[test]
@@ -85,6 +243,72 @@ mod tests {
         });
         for (i, slot) in out.iter().enumerate() {
             assert_eq!(*slot.lock().unwrap(), i as u64 * 3);
+        }
+    }
+
+    #[test]
+    fn adversarial_skew_steals_the_stuck_workers_deque() {
+        // One huge task at index 0 (worker 0's deque) + many tiny ones.
+        // While worker 0 is stuck on it, the rest of its deque must be
+        // drained by thieves — the tail-imbalance fix this scheduler
+        // exists for.
+        const NTASKS: usize = 16;
+        const WORKERS: usize = 4; // worker 0 owns [0, 4)
+        let ran_on: Vec<Mutex<Option<ThreadId>>> =
+            (0..NTASKS).map(|_| Mutex::new(None)).collect();
+        run_chunks(WORKERS, NTASKS, &|c| {
+            if c == 0 {
+                std::thread::sleep(Duration::from_millis(120));
+            }
+            *ran_on[c].lock().unwrap() = Some(std::thread::current().id());
+        });
+        let big = ran_on[0].lock().unwrap().expect("task 0 ran");
+        for (c, slot) in ran_on.iter().enumerate() {
+            let tid = slot.lock().unwrap().expect("every task ran");
+            if (1..4).contains(&c) {
+                assert_ne!(
+                    tid, big,
+                    "task {c} in the stuck worker's deque was not stolen"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn write_window_fills_uninitialized_storage() {
+        let len = 1000usize;
+        let mut out: Vec<f32> = Vec::with_capacity(len);
+        {
+            // SAFETY: capacity reserved above; chunks cover [0, len)
+            let dst = unsafe { DisjointOut::from_raw(out.as_mut_ptr(), len) };
+            run_chunks(4, 10, &|c| {
+                let lo = c * 100;
+                // SAFETY: disjoint 100-element windows
+                unsafe { dst.write_window(lo, 100, |i| (lo + i) as f32) };
+            });
+        }
+        // SAFETY: all elements written above
+        unsafe { out.set_len(len) };
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn disjoint_out_windows_are_independent() {
+        let mut buf = vec![0.0f32; 64];
+        {
+            let out = DisjointOut::new(&mut buf);
+            run_chunks(4, 8, &|c| {
+                // SAFETY: disjoint 8-element windows
+                let w = unsafe { out.window(c * 8, 8) };
+                for (i, v) in w.iter_mut().enumerate() {
+                    *v = (c * 8 + i) as f32;
+                }
+            });
+        }
+        for (i, v) in buf.iter().enumerate() {
+            assert_eq!(*v, i as f32);
         }
     }
 }

@@ -24,6 +24,15 @@ pub struct RankMetrics {
     pub compute_time: Cell<f64>,
     /// Collective operations entered.
     pub collectives: Cell<u64>,
+    /// Sub-counter of `flops`: floating-point operations performed by
+    /// the bandwidth-bound *elementwise* kernels (add, fw_update, min)
+    /// — real modes only; modeled mode charges everything as plain
+    /// compute.  Lets reports quote an elementwise GFlop/s next to the
+    /// GEMM rate (two very different "peaks": flops/s vs bytes/s).
+    pub ew_flops: Cell<f64>,
+    /// Sub-counter of `compute_time`: virtual seconds inside the
+    /// elementwise kernels.
+    pub ew_time: Cell<f64>,
     /// Virtual seconds of communication hidden by non-blocking group
     /// operations — comm time that did not extend the rank's clock
     /// because the main timeline had already advanced past it (compute,
@@ -63,6 +72,15 @@ impl RankMetrics {
         self.collectives.set(self.collectives.get() + 1);
     }
 
+    /// Attribute already-charged compute to the elementwise sub-counters
+    /// (callers charge [`RankMetrics::on_compute`] too — see
+    /// [`Ctx::timed_elementwise`](crate::spmd::Ctx::timed_elementwise)).
+    #[inline]
+    pub fn on_elementwise(&self, flops: f64, secs: f64) {
+        self.ew_flops.set(self.ew_flops.get() + flops);
+        self.ew_time.set(self.ew_time.get() + secs);
+    }
+
     #[inline]
     pub fn on_overlap(&self, hidden_secs: f64) {
         self.overlap_hidden.set(self.overlap_hidden.get() + hidden_secs);
@@ -79,6 +97,8 @@ impl RankMetrics {
             comm_time: self.comm_time.get(),
             compute_time: self.compute_time.get(),
             collectives: self.collectives.get(),
+            ew_flops: self.ew_flops.get(),
+            ew_time: self.ew_time.get(),
             overlap_hidden: self.overlap_hidden.get(),
         }
     }
@@ -95,6 +115,8 @@ pub struct MetricsSnapshot {
     pub comm_time: f64,
     pub compute_time: f64,
     pub collectives: u64,
+    pub ew_flops: f64,
+    pub ew_time: f64,
     pub overlap_hidden: f64,
 }
 
@@ -114,6 +136,18 @@ impl MetricsSnapshot {
             0.0
         }
     }
+
+    /// Achieved rate of the elementwise kernels alone (GFlop/s).  These
+    /// kernels are bandwidth-bound (≈ one flop per 4-byte element), so
+    /// this figure tracks memory throughput, not the ALU peak — compare
+    /// it against other elementwise rows, never against the GEMM rate.
+    pub fn ew_gflops(&self) -> f64 {
+        if self.ew_time > 0.0 {
+            self.ew_flops / self.ew_time / 1e9
+        } else {
+            0.0
+        }
+    }
 }
 
 /// Aggregate over all ranks of a run.
@@ -126,6 +160,9 @@ pub struct Report {
     /// Highest achieved per-rank compute rate (GFlop/s) — the §6
     /// efficiency numerator for the best rank.
     pub max_gflops: f64,
+    /// Highest achieved per-rank *elementwise* rate (GFlop/s) — the
+    /// bandwidth-bound kernels' figure, reported next to `max_gflops`.
+    pub max_ew_gflops: f64,
 }
 
 impl Report {
@@ -134,6 +171,7 @@ impl Report {
         let mut max_comm = 0.0f64;
         let mut max_comp = 0.0f64;
         let mut max_gflops = 0.0f64;
+        let mut max_ew_gflops = 0.0f64;
         for m in per_rank {
             total.msgs_sent += m.msgs_sent;
             total.bytes_sent += m.bytes_sent;
@@ -143,10 +181,13 @@ impl Report {
             total.comm_time += m.comm_time;
             total.compute_time += m.compute_time;
             total.collectives += m.collectives;
+            total.ew_flops += m.ew_flops;
+            total.ew_time += m.ew_time;
             total.overlap_hidden += m.overlap_hidden;
             max_comm = max_comm.max(m.comm_time);
             max_comp = max_comp.max(m.compute_time);
             max_gflops = max_gflops.max(m.gflops());
+            max_ew_gflops = max_ew_gflops.max(m.ew_gflops());
         }
         Report {
             ranks: per_rank.len(),
@@ -154,6 +195,7 @@ impl Report {
             max_comm_time: max_comm,
             max_compute_time: max_comp,
             max_gflops,
+            max_ew_gflops,
         }
     }
 
@@ -161,7 +203,7 @@ impl Report {
     pub fn summary(&self) -> String {
         format!(
             "p={} msgs={} bytes={} flops={:.3e} comm(max)={:.3}ms compute(max)={:.3}ms \
-             rate(max)={:.2}GF/s",
+             rate(max)={:.2}GF/s ew(max)={:.2}GF/s",
             self.ranks,
             self.total.msgs_sent,
             self.total.bytes_sent,
@@ -169,6 +211,7 @@ impl Report {
             self.max_comm_time * 1e3,
             self.max_compute_time * 1e3,
             self.max_gflops,
+            self.max_ew_gflops,
         )
     }
 }
@@ -243,6 +286,23 @@ mod tests {
         assert_eq!(MetricsSnapshot::default().gflops(), 0.0);
         let r = Report::aggregate(&[m, MetricsSnapshot::default()]);
         assert!((r.max_gflops - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn elementwise_subcounters_aggregate() {
+        let m = RankMetrics::new();
+        m.on_compute(1e6, 1e-3); // the caller charges total compute...
+        m.on_elementwise(1e6, 1e-3); // ...and attributes it elementwise
+        let s = m.snapshot();
+        assert_eq!(s.ew_flops, 1e6);
+        // 1e6 flops / 1e-3 s = 1 GFlop/s
+        assert!((s.ew_gflops() - 1.0).abs() < 1e-12);
+        // no elementwise work: defined as 0, not NaN
+        assert_eq!(MetricsSnapshot::default().ew_gflops(), 0.0);
+        let r = Report::aggregate(&[s, MetricsSnapshot::default()]);
+        assert!((r.max_ew_gflops - s.ew_gflops()).abs() < 1e-12);
+        assert_eq!(r.total.ew_flops, 1e6);
+        assert!(r.summary().contains("ew(max)"));
     }
 
     #[test]

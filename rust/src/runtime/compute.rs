@@ -6,8 +6,11 @@
 //! * [`Compute::Native`] — in-process packed register-tiled gemm (the
 //!   paper's "standard BLAS" analogue; real data, and the fallback for
 //!   block sizes without artifacts).  Honors the runtime's
-//!   `threads_per_rank` knob by splitting MC row bands across the
-//!   per-rank worker pool — bit-identical results for any thread count.
+//!   `threads_per_rank` knob by scheduling (MC band × NC column-panel)
+//!   tiles — and the chunks of the threaded elementwise kernels — over
+//!   the per-rank worker pool through the work-stealing scheduler
+//!   ([`crate::matrix::par`]) — bit-identical results for any thread
+//!   count.
 //! * [`Compute::Modeled`] — no data is touched; the rank's virtual clock
 //!   advances by `flops / rate` where `rate` is the calibrated per-core
 //!   GFlop/s of the machine config (how we run n=40000, p=512 on a
@@ -22,19 +25,32 @@ use super::artifacts::Op;
 use super::engine::EngineHandle;
 use crate::data::value::Data;
 use crate::matrix::block::Block;
+use crate::matrix::buf::Buf;
 use crate::matrix::dense::Mat;
 use crate::matrix::gemm;
 use crate::spmd::Ctx;
 
 /// A row/column segment travelling through FW broadcasts: real values or
 /// a size-only proxy (modeled mode).
+///
+/// Real segments hold their elements in a shared copy-on-write [`Buf`]
+/// — the same substrate as [`Mat`] — so cloning a `Seg` (and therefore
+/// fanning a pivot row/column out through a shmem broadcast) is a
+/// reference-count bump, not a `memcpy`: every rank of a process column
+/// holds the *same* allocation until someone mutates
+/// ([`Seg::data_mut`] splits it, keeping ranks isolated).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Seg {
-    Real(Vec<f32>),
+    Real(Buf),
     Proxy { len: usize },
 }
 
 impl Seg {
+    /// Wrap a vector of real values (no copy).
+    pub fn real(v: Vec<f32>) -> Self {
+        Seg::Real(v.into())
+    }
+
     pub fn len(&self) -> usize {
         match self {
             Seg::Real(v) => v.len(),
@@ -50,6 +66,26 @@ impl Seg {
         match self {
             Seg::Real(v) => v,
             Seg::Proxy { .. } => panic!("attempted to read data of a proxy segment"),
+        }
+    }
+
+    /// Do two real segments share one allocation?  The zero-copy
+    /// assertion used by tests: after a shmem bcast of a pivot row,
+    /// every rank's segment satisfies this against the root's.
+    pub fn shares_allocation(a: &Seg, b: &Seg) -> bool {
+        match (a, b) {
+            (Seg::Real(x), Seg::Real(y)) => Buf::shares_allocation(x, y),
+            _ => false,
+        }
+    }
+
+    /// Mutable view of a real segment's elements.  Copy-on-write: if the
+    /// allocation is shared (post-broadcast), this rank gets its own
+    /// copy first — mutation never leaks into peers.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        match self {
+            Seg::Real(v) => v.as_mut_slice(),
+            Seg::Proxy { .. } => panic!("attempted to mutate a proxy segment"),
         }
     }
 }
@@ -116,7 +152,7 @@ impl Compute {
     pub fn block_row(&self, ctx: &Ctx, blk: &Block, r: usize) -> Seg {
         self.charge_elems(ctx, blk.cols());
         match blk {
-            Block::Real(m) => Seg::Real(m.row(r).to_vec()),
+            Block::Real(m) => Seg::real(m.row(r).to_vec()),
             Block::Proxy { cols, .. } => Seg::Proxy { len: *cols },
         }
     }
@@ -125,7 +161,7 @@ impl Compute {
     pub fn block_col(&self, ctx: &Ctx, blk: &Block, c: usize) -> Seg {
         self.charge_elems(ctx, blk.rows());
         match blk {
-            Block::Real(m) => Seg::Real(m.col(c)),
+            Block::Real(m) => Seg::real(m.col(c)),
             Block::Proxy { rows, .. } => Seg::Proxy { len: *rows },
         }
     }
@@ -229,6 +265,9 @@ impl Compute {
     }
 
     /// `X + Y` — the `reduceD (_ + _)` combine operator on blocks.
+    /// Native path threads past the bandwidth threshold (see
+    /// [`gemm::EW_PAR_THRESHOLD`]) and lands on the elementwise metric
+    /// counters, so `repro peak` reports it next to the GEMM rate.
     pub fn add(&self, ctx: &Ctx, x: Block, y: Block) -> Block {
         let flops = (x.rows() * x.cols()) as f64;
         match self {
@@ -236,9 +275,9 @@ impl Compute {
                 self.charge_modeled(ctx, flops);
                 x
             }
-            Compute::Native => {
-                ctx.timed_compute(flops, || Block::Real(gemm::add(x.as_mat(), y.as_mat())))
-            }
+            Compute::Native => ctx.timed_elementwise(flops, || {
+                Block::Real(gemm::add_mt(x.as_mat(), y.as_mat(), ctx.threads_per_rank()))
+            }),
             Compute::Pjrt(h) => {
                 let n = x.rows();
                 if h.supports(Op::Add, n) && x.cols() == n {
@@ -247,9 +286,30 @@ impl Compute {
                     ctx.advance_compute(secs, flops);
                     Block::Real(out)
                 } else {
-                    ctx.timed_compute(flops, || Block::Real(gemm::add(x.as_mat(), y.as_mat())))
+                    ctx.timed_elementwise(flops, || {
+                        Block::Real(gemm::add_mt(x.as_mat(), y.as_mat(), ctx.threads_per_rank()))
+                    })
                 }
             }
+        }
+    }
+
+    /// Elementwise `min(X, Y)` — the tropical ⊕ at block level (the
+    /// APSP-by-squaring combine), mode-aware and threaded past the
+    /// bandwidth threshold like [`Compute::add`].
+    pub fn min_blocks(&self, ctx: &Ctx, a: Block, b: Block) -> Block {
+        let flops = (a.rows() * a.cols()) as f64;
+        if self.is_modeled() {
+            self.charge_modeled(ctx, flops);
+            return a;
+        }
+        match (&a, &b) {
+            (Block::Real(x), Block::Real(y)) => ctx.timed_elementwise(flops, || {
+                Block::Real(gemm::min_mat_mt(x, y, ctx.threads_per_rank()))
+            }),
+            // proxies in a real mode only occur for degenerate
+            // non-member blocks; pass the left operand through
+            _ => a,
         }
     }
 
@@ -261,9 +321,14 @@ impl Compute {
                 self.charge_modeled(ctx, flops);
                 d
             }
-            Compute::Native => ctx.timed_compute(flops, || {
+            Compute::Native => ctx.timed_elementwise(flops, || {
                 let mut dm = d.into_mat();
-                gemm::fw_update_into(&mut dm, ik.as_slice(), kj.as_slice());
+                gemm::fw_update_into_mt(
+                    &mut dm,
+                    ik.as_slice(),
+                    kj.as_slice(),
+                    ctx.threads_per_rank(),
+                );
                 Block::Real(dm)
             }),
             Compute::Pjrt(h) => {
@@ -276,9 +341,14 @@ impl Compute {
                     ctx.advance_compute(secs, flops);
                     Block::Real(out)
                 } else {
-                    ctx.timed_compute(flops, || {
+                    ctx.timed_elementwise(flops, || {
                         let mut dm = d.into_mat();
-                        gemm::fw_update_into(&mut dm, ik.as_slice(), kj.as_slice());
+                        gemm::fw_update_into_mt(
+                            &mut dm,
+                            ik.as_slice(),
+                            kj.as_slice(),
+                            ctx.threads_per_rank(),
+                        );
                         Block::Real(dm)
                     })
                 }
@@ -411,8 +481,8 @@ mod tests {
     fn native_fw_update_matches_gemm() {
         let got = with_ctx(|ctx| {
             let d = Block::real(Mat::random(8, 8, 3));
-            let ik = Seg::Real((0..8).map(|i| i as f32).collect());
-            let kj = Seg::Real((0..8).map(|i| (8 - i) as f32).collect());
+            let ik = Seg::real((0..8).map(|i| i as f32).collect());
+            let kj = Seg::real((0..8).map(|i| (8 - i) as f32).collect());
             Compute::Native.fw_update(ctx, d, &ik, &kj)
         });
         let mut want = Mat::random(8, 8, 3);
@@ -424,7 +494,60 @@ mod tests {
 
     #[test]
     fn seg_byte_size() {
-        assert_eq!(Seg::Real(vec![0.0; 10]).byte_size(), 40);
+        assert_eq!(Seg::real(vec![0.0; 10]).byte_size(), 40);
         assert_eq!(Seg::Proxy { len: 10 }.byte_size(), 40);
+    }
+
+    #[test]
+    fn seg_clone_shares_allocation_and_cow_isolates() {
+        let a = Seg::real(vec![1.0, 2.0, 3.0]);
+        let mut b = a.clone();
+        assert!(Seg::shares_allocation(&a, &b), "clone must be an Arc bump");
+        b.data_mut()[0] = 9.0; // copy-on-write splits the allocation here
+        assert!(!Seg::shares_allocation(&a, &b));
+        assert_eq!(a.as_slice()[0], 1.0);
+        assert_eq!(b.as_slice()[0], 9.0);
+        // proxies never share
+        assert!(!Seg::shares_allocation(&a, &Seg::Proxy { len: 3 }));
+    }
+
+    #[test]
+    fn min_blocks_matches_elementwise_min() {
+        let got = with_ctx(|ctx| {
+            let a = Block::real(Mat::random(16, 16, 1));
+            let b = Block::real(Mat::random(16, 16, 2));
+            Compute::Native.min_blocks(ctx, a, b)
+        });
+        let (a, b) = (Mat::random(16, 16, 1), Mat::random(16, 16, 2));
+        for (i, v) in got.as_mat().data.iter().enumerate() {
+            assert_eq!(*v, a.data[i].min(b.data[i]));
+        }
+    }
+
+    #[test]
+    fn min_blocks_modeled_keeps_proxy_and_charges() {
+        let t = run(1, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            let a = Block::proxy(32, 1);
+            let b = Block::proxy(32, 2);
+            let z = Compute::Modeled { rate: 1e6 }.min_blocks(ctx, a, b);
+            assert!(z.is_proxy());
+            ctx.now()
+        })
+        .results[0];
+        assert!((t - (32.0 * 32.0) / 1e6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn elementwise_metrics_tick_on_native_add() {
+        let res = run(1, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            let x = Block::real(Mat::random(32, 32, 1));
+            let y = Block::real(Mat::random(32, 32, 2));
+            let _ = Compute::Native.add(ctx, x, y);
+        });
+        let m = res.metrics[0];
+        assert_eq!(m.ew_flops, 32.0 * 32.0);
+        assert!(m.ew_time >= 0.0);
+        // elementwise is a sub-counter of total compute, not a sibling
+        assert_eq!(m.flops, m.ew_flops);
     }
 }

@@ -68,9 +68,10 @@ pub struct Ctx {
     /// comm timeline (see [`Ctx::with_clock`]) — guards against nesting.
     overlap_depth: Cell<u32>,
     /// Cores this rank's block kernels may use (the paper's
-    /// BLAS-threads-per-process knob); `Compute::Native` splits MC row
-    /// bands across this many pool workers.  Results are bit-identical
-    /// for every value — see [`crate::matrix::gemm`].
+    /// BLAS-threads-per-process knob); `Compute::Native` schedules
+    /// (MC × NC) GEMM tiles and elementwise chunks across this many
+    /// pool workers via the work-stealing scheduler.  Results are
+    /// bit-identical for every value — see [`crate::matrix::gemm`].
     threads_per_rank: usize,
 }
 
@@ -142,6 +143,21 @@ impl Ctx {
         let t0 = Instant::now();
         let r = f();
         self.advance_compute(t0.elapsed().as_secs_f64(), flops);
+        r
+    }
+
+    /// Like [`Ctx::timed_compute`], but additionally attributes the work
+    /// to the **elementwise** metric sub-counters (`ew_flops`/`ew_time`)
+    /// — the bandwidth-bound kernels (add, fw_update, min) report their
+    /// own GFlop/s next to the GEMM rate in `repro peak` and the run
+    /// summaries.  Totals are unchanged: elementwise is a refinement of
+    /// compute, not a sibling timeline.
+    pub fn timed_elementwise<R>(&self, flops: f64, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        let secs = t0.elapsed().as_secs_f64();
+        self.advance_compute(secs, flops);
+        self.metrics.on_elementwise(flops, secs);
         r
     }
 

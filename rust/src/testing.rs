@@ -11,11 +11,24 @@ use crate::comm::backend::BackendProfile;
 use crate::comm::cost::CostParams;
 use crate::spmd::{Ctx, RunResult, Runtime};
 
+/// Per-rank kernel thread count used by the test suite: the
+/// `FOOPAR_TEST_THREADS` env var, clamped to ≥ 1 (default 1).  CI runs
+/// the whole suite in a {1, 4} matrix so the data plane's bit-identity
+/// guarantees are exercised by *every* test touching `Compute::Native`
+/// on every push — not only by the dedicated dataplane tests.
+pub fn test_threads() -> usize {
+    std::env::var("FOOPAR_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(1)
+        .max(1)
+}
+
 /// Launch an SPMD world for a test: positional convenience over
 /// [`Runtime::builder`] with an explicit profile and raw cost
-/// parameters.  This is the test-suite entry point (the deprecated
-/// positional `spmd::run` shim was removed once callers migrated to the
-/// builder).
+/// parameters, honoring [`test_threads`].  This is the test-suite entry
+/// point (the deprecated positional `spmd::run` shim was removed once
+/// callers migrated to the builder).
 pub fn spmd_run<R, F>(
     world: usize,
     backend: BackendProfile,
@@ -30,6 +43,7 @@ where
         .world(world)
         .backend_profile(backend)
         .cost(machine)
+        .threads_per_rank(test_threads())
         .build()
         .expect("invalid SPMD configuration (world size must be positive)")
         .run(f)
@@ -118,6 +132,13 @@ pub fn assert_allclose(got: &[f32], want: &[f32], rtol: f32, atol: f32) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn test_threads_defaults_to_one_and_clamps() {
+        // NOTE: reads the ambient env — when CI sets FOOPAR_TEST_THREADS
+        // the parsed value must be ≥ 1 either way
+        assert!(test_threads() >= 1);
+    }
 
     #[test]
     fn rng_deterministic() {

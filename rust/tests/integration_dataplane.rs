@@ -1,20 +1,26 @@
-//! Data-plane integration tests — the PR-4 acceptance gates:
+//! Data-plane integration tests — the PR-4/PR-5 acceptance gates:
 //!
-//! * shared-memory collectives move blocks **by reference** (a bcast of
-//!   a 1024² block is copy-free, asserted via `Arc::ptr_eq` through
-//!   [`Mat::shares_buffer`]);
-//! * copy-on-write isolates ranks that mutate a shared block;
-//! * the packed multi-threaded GEMM is **bit-deterministic**: Cannon and
-//!   DNS products are byte-identical for `threads_per_rank ∈ {1, 2, 4}`
-//!   and across shmem vs tcp-loopback transports.
+//! * shared-memory collectives move blocks **and pivot segments** by
+//!   reference (a bcast of a 1024² block or a pivot-row `Seg` is
+//!   copy-free, asserted via `Arc::ptr_eq` through
+//!   [`Mat::shares_buffer`] / [`Seg::shares_allocation`]);
+//! * copy-on-write isolates ranks that mutate a shared block or segment;
+//! * the packed multi-threaded GEMM is **bit-deterministic**:
+//!   Floyd–Warshall and APSP-by-squaring results are byte-identical for
+//!   `threads_per_rank ∈ {1, 2, 4}` and across shmem vs tcp-loopback
+//!   transports (those runs use small blocks, so their elementwise
+//!   steps stay under the threading threshold — the threaded
+//!   elementwise path itself is pinned at ≥ 1024² through the
+//!   `Compute` layer below, and at kernel level in `matrix/gemm.rs`).
 
-use foopar::algos::{cannon, mmm_dns, seq};
+use foopar::algos::floyd_warshall::{self, FwSource};
+use foopar::algos::{apsp_squaring, cannon, mmm_dns, seq};
 use foopar::comm::backend::BackendProfile;
 use foopar::comm::cost::CostParams;
 use foopar::comm::group::Group;
 use foopar::matrix::block::BlockSource;
 use foopar::matrix::dense::Mat;
-use foopar::runtime::compute::Compute;
+use foopar::runtime::compute::{Compute, Seg};
 use foopar::testing::assert_allclose;
 use foopar::Runtime;
 
@@ -84,6 +90,59 @@ fn mutation_after_bcast_stays_rank_local() {
                 got.set(0, 0, 99.0);
             }
             got.at(0, 0)
+        });
+    assert_eq!(res.results, vec![1.0, 99.0, 1.0]);
+}
+
+// --------------------------------------------------- Seg zero-copy shmem
+
+#[test]
+fn shmem_bcast_of_pivot_row_seg_is_copy_free() {
+    // the FW pivot fan-out: rank 0 extracts a pivot row, broadcasts it;
+    // every rank must end up holding the *same* allocation
+    let res = Runtime::builder()
+        .world(4)
+        .backend("shmem")
+        .cost(CostParams::free())
+        .build()
+        .unwrap()
+        .run(|ctx| {
+            let g = Group::world(ctx);
+            let mine = if ctx.rank == 0 {
+                Some(Seg::real((0..4096).map(|i| i as f32).collect()))
+            } else {
+                None
+            };
+            g.bcast(0, mine)
+        });
+    let root = &res.results[0];
+    assert_eq!(root.len(), 4096);
+    for (rank, got) in res.results.iter().enumerate().skip(1) {
+        assert!(
+            Seg::shares_allocation(root, got),
+            "rank {rank}: shmem bcast deep-copied a pivot-row Seg"
+        );
+    }
+}
+
+#[test]
+fn seg_mutation_after_share_stays_rank_local() {
+    // copy-on-write: a rank scribbling on a broadcast segment must not
+    // leak into its peers (Seg::data_mut splits the allocation first)
+    let res = Runtime::builder()
+        .world(3)
+        .backend("shmem")
+        .cost(CostParams::free())
+        .build()
+        .unwrap()
+        .run(|ctx| {
+            let g = Group::world(ctx);
+            let mine = if ctx.rank == 0 { Some(Seg::real(vec![1.0; 64])) } else { None };
+            let mut got: Seg = g.bcast(0, mine);
+            if ctx.rank == 1 {
+                got.data_mut()[0] = 99.0;
+            }
+            got.as_slice()[0]
         });
     assert_eq!(res.results, vec![1.0, 99.0, 1.0]);
 }
@@ -164,4 +223,129 @@ fn dns_bit_identical_across_threads_and_transports() {
         dns_product("tcp-loopback", 4).data,
         "dns diverged across transports"
     );
+}
+
+// ------------------- threaded elementwise through the Compute layer
+
+#[test]
+fn threaded_elementwise_bit_identical_through_compute() {
+    // 1024² ≥ EW_PAR_THRESHOLD: add / min_blocks / fw_update genuinely
+    // split across the scheduler here — the byte-identity assertion is
+    // NOT vacuous at this size (unlike the small-block FW/APSP runs)
+    use foopar::matrix::block::Block;
+
+    let run_at = |threads: usize| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let res = Runtime::builder()
+            .world(1)
+            .cost(CostParams::free())
+            .threads_per_rank(threads)
+            .build()
+            .unwrap()
+            .run(|ctx| {
+                let x = Mat::random(1024, 1024, 51);
+                let y = Mat::random(1024, 1024, 52);
+                let ik: Vec<f32> = (0..1024).map(|i| ((i * 3) % 41) as f32).collect();
+                let kj: Vec<f32> = (0..1024).map(|i| ((i * 11) % 29) as f32).collect();
+                let sum =
+                    Compute::Native.add(ctx, Block::real(x.clone()), Block::real(y.clone()));
+                let min = Compute::Native.min_blocks(
+                    ctx,
+                    Block::real(x.clone()),
+                    Block::real(y.clone()),
+                );
+                let fw = Compute::Native.fw_update(
+                    ctx,
+                    Block::real(x),
+                    &Seg::real(ik),
+                    &Seg::real(kj),
+                );
+                (
+                    sum.as_mat().data.to_vec(),
+                    min.as_mat().data.to_vec(),
+                    fw.as_mat().data.to_vec(),
+                )
+            });
+        res.results.into_iter().next().unwrap()
+    };
+    let base = run_at(1);
+    for threads in [2usize, 4] {
+        let got = run_at(threads);
+        assert_eq!(base.0, got.0, "add diverged at threads={threads}");
+        assert_eq!(base.1, got.1, "min diverged at threads={threads}");
+        assert_eq!(base.2, got.2, "fw_update diverged at threads={threads}");
+    }
+}
+
+// ----------------------- FW / APSP byte-identity: threads × transports
+
+fn fw_distances(transport: &str, threads: usize) -> Mat {
+    let n = 48;
+    let q = 2;
+    let src = FwSource::Real { n, density: 0.35, seed: 41 };
+    let res = Runtime::builder()
+        .world(q * q)
+        .backend_profile(BackendProfile::openmpi_fixed())
+        .cost(CostParams::free())
+        .transport(transport)
+        .threads_per_rank(threads)
+        .build()
+        .unwrap()
+        .run(|ctx| floyd_warshall::floyd_warshall_par(ctx, &Compute::Native, q, &src));
+    floyd_warshall::collect_d(&res.results, q, n / q)
+}
+
+#[test]
+fn floyd_warshall_bit_identical_across_threads_and_transports() {
+    let base = fw_distances("local", 1);
+    for threads in [2usize, 4] {
+        assert_eq!(
+            base.data,
+            fw_distances("local", threads).data,
+            "FW diverged at threads={threads} (shmem)"
+        );
+    }
+    for threads in [1usize, 2, 4] {
+        assert_eq!(
+            base.data,
+            fw_distances("tcp-loopback", threads).data,
+            "FW diverged at threads={threads} (tcp-loopback)"
+        );
+    }
+}
+
+fn apsp_distances(transport: &str, threads: usize) -> Mat {
+    // b = 72 > MC: the tropical product spans two row bands, so the
+    // thread counts below genuinely schedule tiles, not just one chunk
+    let n = 144;
+    let q = 2;
+    let src = FwSource::Real { n, density: 0.35, seed: 42 };
+    let res = Runtime::builder()
+        .world(q * q)
+        .backend_profile(BackendProfile::openmpi_fixed())
+        .cost(CostParams::free())
+        .transport(transport)
+        .threads_per_rank(threads)
+        .build()
+        .unwrap()
+        .run(|ctx| apsp_squaring::apsp_squaring_par(ctx, &Compute::Native, q, &src));
+    apsp_squaring::collect_d(&res.results, q, n / q)
+}
+
+#[test]
+fn apsp_squaring_bit_identical_across_threads_and_transports() {
+    let base = apsp_distances("local", 1);
+    for threads in [2usize, 4] {
+        assert_eq!(
+            base.data,
+            apsp_distances("local", threads).data,
+            "APSP diverged at threads={threads} (shmem)"
+        );
+    }
+    for threads in [1usize, 4] {
+        assert_eq!(
+            base.data,
+            apsp_distances("tcp-loopback", threads).data,
+            "APSP diverged at threads={threads} (tcp-loopback)"
+        );
+    }
 }
