@@ -1,0 +1,99 @@
+//! Serving-mode acceptance demo: a resident pool multiplexing nine
+//! concurrent mixed jobs (Cannon matmul + Floyd-Warshall, several grid
+//! shapes), each verified **bit-identical** to a dedicated single-job
+//! oracle run.
+//!
+//! ```text
+//! cargo run --example serving
+//! ```
+//!
+//! The world comes up once (`Runtime::serve`); the driver floods the
+//! job queue up front, so jobs run concurrently on disjoint rank
+//! subsets — a 2×2 grid next to single-rank GEMMs — each inside its own
+//! derived tag namespace.  CI runs this to hold the acceptance bar:
+//! multiplexing must not perturb a single bit of any result.
+
+use foopar::algos::cannon::{collect_c, mmm_cannon};
+use foopar::algos::floyd_warshall::{collect_d, floyd_warshall_par, FwSource};
+use foopar::matrix::block::BlockSource;
+use foopar::matrix::dense::Mat;
+use foopar::runtime::compute::Compute;
+use foopar::serve::{JobSpec, ServeOptions};
+use foopar::Runtime;
+
+/// Re-run one job in a fresh, dedicated q×q world — the oracle the
+/// served result must match exactly.
+fn oracle(spec: &JobSpec) -> foopar::Result<Mat> {
+    Ok(match *spec {
+        JobSpec::Matmul { q, b, seed_a, seed_b } => {
+            let res = Runtime::builder().world(q * q).build()?.run(move |ctx| {
+                let a = BlockSource::real(b, seed_a);
+                let bb = BlockSource::real(b, seed_b);
+                mmm_cannon(ctx, &Compute::Native, q, &a, &bb)
+            });
+            collect_c(&res.results, q, b)
+        }
+        JobSpec::FloydWarshall { q, n, density, seed } => {
+            let res = Runtime::builder().world(q * q).build()?.run(move |ctx| {
+                let src = FwSource::Real { n, density, seed };
+                floyd_warshall_par(ctx, &Compute::Native, q, &src)
+            });
+            collect_d(&res.results, q, n / q)
+        }
+        ref other => anyhow::bail!("no oracle for {}", other.kind()),
+    })
+}
+
+fn main() -> foopar::Result<()> {
+    // dispatcher + pool of 5: one 2×2 job and single-rank jobs coexist
+    let rt = Runtime::builder().world(6).build()?;
+
+    let specs = vec![
+        JobSpec::Matmul { q: 2, b: 8, seed_a: 11, seed_b: 12 },
+        JobSpec::FloydWarshall { q: 2, n: 8, density: 0.45, seed: 7 },
+        JobSpec::Matmul { q: 1, b: 12, seed_a: 21, seed_b: 22 },
+        JobSpec::Matmul { q: 1, b: 12, seed_a: 31, seed_b: 32 },
+        JobSpec::FloydWarshall { q: 1, n: 6, density: 0.5, seed: 9 },
+        JobSpec::Matmul { q: 2, b: 6, seed_a: 41, seed_b: 42 },
+        JobSpec::Matmul { q: 1, b: 12, seed_a: 51, seed_b: 52 },
+        JobSpec::FloydWarshall { q: 2, n: 12, density: 0.3, seed: 13 },
+        JobSpec::Matmul { q: 1, b: 12, seed_a: 61, seed_b: 62 },
+    ];
+
+    let (results, report) = rt.serve(ServeOptions::default(), |h| {
+        // flood the queue up front so the jobs are genuinely concurrent
+        let ids: Vec<u64> = specs.iter().map(|s| h.submit(s.clone())).collect();
+        ids.into_iter().map(|id| h.wait(id)).collect::<Vec<_>>()
+    })?;
+
+    for (k, (spec, res)) in specs.iter().zip(results).enumerate() {
+        let got = match res {
+            Ok(out) => out.into_mat(),
+            Err(e) => anyhow::bail!("job {k} ({}) failed: {e}", spec.kind()),
+        };
+        let want = oracle(spec)?;
+        anyhow::ensure!(
+            got == want,
+            "job {k} ({}) diverges from its single-job oracle (max |Δ| = {:.3e})",
+            spec.kind(),
+            got.max_abs_diff(&want)
+        );
+        println!(
+            "job {k}: {:>6} {}x{}  bit-identical to oracle",
+            spec.kind(),
+            got.rows,
+            got.cols
+        );
+    }
+
+    anyhow::ensure!(report.done == specs.len() as u64, "all jobs must complete");
+    println!(
+        "serving example: {} jobs over a pool of 5 in {} assignments; \
+         latency p50 {:.2} ms, p99 {:.2} ms",
+        report.done,
+        report.assignments,
+        report.latency.p50() * 1e3,
+        report.latency.p99() * 1e3
+    );
+    Ok(())
+}

@@ -35,8 +35,35 @@ pub fn mmm_cannon(
     a: &BlockSource,
     b: &BlockSource,
 ) -> CannonOutput {
+    cannon_on_grid(ctx, comp, q, a, b, &GridN::square(ctx, q))
+}
+
+/// [`mmm_cannon`] over an explicit rank subset: grid process (i, j)
+/// (row-major) runs on world rank `ranks[i*q + j]`.  The serving
+/// runtime's entry point — each job's members receive the same `ranks`
+/// slice in their assignment, so the subset grid is SPMD-consistent
+/// without any world-wide agreement.  Results are identical to the
+/// world-anchored variant (placement never enters the arithmetic).
+pub fn mmm_cannon_on(
+    ctx: &Ctx,
+    comp: &Compute,
+    q: usize,
+    a: &BlockSource,
+    b: &BlockSource,
+    ranks: &[usize],
+) -> CannonOutput {
+    cannon_on_grid(ctx, comp, q, a, b, &GridN::square_on(ctx, q, ranks))
+}
+
+fn cannon_on_grid(
+    ctx: &Ctx,
+    comp: &Compute,
+    q: usize,
+    a: &BlockSource,
+    b: &BlockSource,
+    grid: &GridN,
+) -> CannonOutput {
     assert_eq!(a.b, b.b);
-    let grid = GridN::square(ctx, q);
 
     // Initial skew, expressed as the *source* indices each rank loads:
     // rank (i, j) starts with A(i, (j+i) mod q) and B((i+j) mod q, j) —
@@ -196,6 +223,28 @@ mod tests {
         let cc = collect_c(&cannon.results, q, bsz);
         let cd = crate::algos::mmm_dns::collect_c(&dns.results, q, bsz);
         assert_allclose(&cc.data, &cd.data, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn cannon_on_subset_bit_identical_to_anchored() {
+        // Same multiply on a 2x2 grid anchored at world 0 vs placed on
+        // ranks {2, 5, 3, 4} of a world of 6: placement must not enter
+        // the arithmetic.
+        let (q, bsz) = (2usize, 8usize);
+        let a = BlockSource::real(bsz, 61);
+        let b = BlockSource::real(bsz, 62);
+        let anchored = run(4, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            mmm_cannon(ctx, &Compute::Native, q, &a, &b)
+        });
+        let subset = run(6, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            mmm_cannon_on(ctx, &Compute::Native, q, &a, &b, &[2, 5, 3, 4])
+        });
+        let ca = collect_c(&anchored.results, q, bsz);
+        let cs = collect_c(&subset.results, q, bsz);
+        assert_eq!(ca.data, cs.data);
+        // unmapped ranks stayed silent
+        assert_eq!(subset.metrics[0].msgs_sent, 0);
+        assert_eq!(subset.metrics[1].msgs_sent, 0);
     }
 
     #[test]

@@ -75,11 +75,28 @@ pub struct FwOutput {
 
 /// Run Algorithm 3 on a q×q grid (world must be ≥ q²); `n` divisible by q.
 pub fn floyd_warshall_par(ctx: &Ctx, comp: &Compute, q: usize, src: &FwSource) -> FwOutput {
+    fw_on_grid(ctx, comp, q, src, &GridN::square(ctx, q))
+}
+
+/// [`floyd_warshall_par`] over an explicit rank subset: grid process
+/// (i, j) runs on world rank `ranks[i*q + j]` (see
+/// [`crate::algos::cannon::mmm_cannon_on`] — the serving runtime's
+/// placement hook).  The distance arithmetic is placement-independent.
+pub fn floyd_warshall_par_on(
+    ctx: &Ctx,
+    comp: &Compute,
+    q: usize,
+    src: &FwSource,
+    ranks: &[usize],
+) -> FwOutput {
+    fw_on_grid(ctx, comp, q, src, &GridN::square_on(ctx, q, ranks))
+}
+
+fn fw_on_grid(ctx: &Ctx, comp: &Compute, q: usize, src: &FwSource, grid: &GridN) -> FwOutput {
     let n = src.n();
     assert_eq!(n % q, 0, "n must be divisible by q");
     let b = n / q;
 
-    let grid = GridN::square(ctx, q);
     // var grid = GridN(R, R) mapD { (i, j) => BLOCKS(i)(j) }
     let mut data = grid.map_d(|c| src.block(c[0], c[1], b));
 
@@ -175,6 +192,21 @@ mod tests {
     #[test]
     fn fw_par_single_process_degenerates_to_seq() {
         check_against_seq(8, 1, 0.5, 5);
+    }
+
+    #[test]
+    fn fw_on_subset_matches_anchored() {
+        let (n, q, density, seed) = (8usize, 2usize, 0.4f64, 7u64);
+        let src = FwSource::Real { n, density, seed };
+        let anchored = run(4, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            floyd_warshall_par(ctx, &Compute::Native, q, &src)
+        });
+        let subset = run(6, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            floyd_warshall_par_on(ctx, &Compute::Native, q, &src, &[5, 1, 4, 0])
+        });
+        let da = collect_d(&anchored.results, q, n / q);
+        let ds = collect_d(&subset.results, q, n / q);
+        assert_eq!(da.data, ds.data);
     }
 
     #[test]

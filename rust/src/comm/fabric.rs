@@ -77,6 +77,21 @@ impl Fabric {
             b.fail(reason);
         }
     }
+
+    /// Poison only `ranks`' mailboxes — the serving runtime's scoped
+    /// failure (one job's members fail promptly, disjoint jobs keep
+    /// running).  See [`Mailbox::fail`].
+    pub fn fail_ranks(&self, ranks: &[usize], reason: &str) {
+        for &r in ranks {
+            self.boxes[r].fail(reason);
+        }
+    }
+
+    /// Un-poison rank `me`'s mailbox, dropping stale envelopes — see
+    /// [`Mailbox::clear_fail`].
+    pub fn clear_fail(&self, me: usize) {
+        self.boxes[me].clear_fail();
+    }
 }
 
 impl Transport for Fabric {
@@ -110,6 +125,14 @@ impl Transport for Fabric {
 
     fn fail(&self, reason: &str) {
         Fabric::fail(self, reason);
+    }
+
+    fn fail_ranks(&self, ranks: &[usize], reason: &str) {
+        Fabric::fail_ranks(self, ranks, reason);
+    }
+
+    fn clear_fail(&self, me: usize) {
+        Fabric::clear_fail(self, me);
     }
 }
 
@@ -260,6 +283,31 @@ mod tests {
         assert!(msg.contains("rank 1 died mid-run: boom"), "{msg}");
         assert!(msg.contains("src=1"), "{msg}");
         assert!(msg.contains("0x5c"), "{msg}");
+    }
+
+    #[test]
+    fn fail_ranks_poisons_only_targets_and_clear_recovers() {
+        let f = Fabric::new(3);
+        f.post(1, env(0, 1, 11)); // stale envelope on the doomed rank
+        f.fail_ranks(&[1], "job 7 member died");
+        // rank 1 poisoned...
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = f.take(1, 0, 1);
+        }));
+        let msg = r
+            .unwrap_err()
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string panic>".into());
+        assert!(msg.contains("job 7 member died"), "{msg}");
+        // ...rank 2 untouched
+        f.post(2, env(0, 3, 33));
+        assert_eq!(f.take(2, 0, 3).payload.downcast::<i64>(), 33);
+        // recovery: clear drops the stale envelope and re-admits traffic
+        f.clear_fail(1);
+        assert_eq!(f.pending(1), 0, "stale envelopes must be dropped");
+        f.post(1, env(0, 9, 99));
+        assert_eq!(f.take(1, 0, 9).payload.downcast::<i64>(), 99);
     }
 
     #[test]

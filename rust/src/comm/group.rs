@@ -46,12 +46,29 @@ impl<'a> Group<'a> {
     /// A group over `ranks` (order defines group-rank numbering).
     /// Every world rank may construct the group (SPMD), member or not.
     pub fn new(ctx: &'a Ctx, ranks: Vec<usize>) -> Self {
+        let id = ctx.alloc_group_id(&ranks);
+        Self::with_id(ctx, ranks, id)
+    }
+
+    /// A group over `ranks` with an **explicit** tag-namespace base.
+    ///
+    /// [`Group::new`] derives its namespace from a per-rank instance
+    /// counter, which stays consistent only while every member creates
+    /// its groups in the same SPMD order.  Long-lived worlds that
+    /// multiplex independent work onto rank subsets (the serving
+    /// runtime) break that assumption: members of one job must agree on
+    /// a namespace without knowing what other jobs their peers ran
+    /// before.  An explicit id — typically derived from a job id by the
+    /// coordinator and shipped in the assignment message — restores the
+    /// guarantee by construction.  Ids should come from a strong mixer
+    /// (see [`Group::partition`]) so independent namespaces stay
+    /// collision-free.
+    pub fn with_id(ctx: &'a Ctx, ranks: Vec<usize>, id: u64) -> Self {
         debug_assert!(!ranks.is_empty(), "empty group");
         debug_assert!(
             ranks.iter().all(|&r| r < ctx.world),
             "group rank outside world"
         );
-        let id = ctx.alloc_group_id(&ranks);
         let my_index = ranks.iter().position(|&r| r == ctx.rank);
         Group { ctx, ranks, my_index, id, op_seq: std::cell::Cell::new(0) }
     }
@@ -106,6 +123,84 @@ impl<'a> Group<'a> {
     /// operation is checked against at `wait()`.
     pub(crate) fn id(&self) -> u64 {
         self.id
+    }
+
+    /// splitmix64 finalizer: the id mixer behind [`Group::partition`] /
+    /// [`Group::subgroup`].  Bijective with full avalanche, so derived
+    /// namespaces are as collision-spaced as fresh ones.
+    pub(crate) fn derive_id(parent: u64, salt: u64) -> u64 {
+        let mut x = parent ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x ^= x >> 27;
+        x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^= x >> 31;
+        x
+    }
+
+    /// Split this group into disjoint sub-groups of the given `sizes`
+    /// (consecutive members in group order; sizes must sum to
+    /// [`Group::size`]).  Every caller — member or not — obtains the
+    /// full vector of parts, so SPMD code can pick "my" part with
+    /// [`Group::is_member`].
+    ///
+    /// Each part receives its **own tag namespace**, derived
+    /// deterministically from the parent namespace and the part index —
+    /// consistent across members with zero messages, and disjoint
+    /// between parts, between successive `partition` calls, and from
+    /// the parent's own operations.  Two parts can therefore run
+    /// collectives *concurrently* (on their disjoint rank subsets)
+    /// without ever cross-matching messages — the per-job-communicator
+    /// primitive of the serving runtime.
+    pub fn partition(&self, sizes: &[usize]) -> Vec<Group<'a>> {
+        assert!(!sizes.is_empty(), "partition needs at least one part");
+        assert!(
+            sizes.iter().all(|&s| s > 0),
+            "partition parts must be non-empty"
+        );
+        assert_eq!(
+            sizes.iter().sum::<usize>(),
+            self.ranks.len(),
+            "partition sizes must sum to the group size"
+        );
+        // One tag from the parent's sequence keys this partition call:
+        // members stay aligned (same SPMD call order), successive calls
+        // differ.
+        let base = self.next_tag();
+        let mut parts = Vec::with_capacity(sizes.len());
+        let mut off = 0usize;
+        for (k, &s) in sizes.iter().enumerate() {
+            let ranks = self.ranks[off..off + s].to_vec();
+            let id = Self::derive_id(base, k as u64 + 1);
+            parts.push(Group::with_id(self.ctx, ranks, id));
+            off += s;
+        }
+        parts
+    }
+
+    /// Sub-group of the members at `indices` (group ranks, in the order
+    /// given — which defines the child's group-rank numbering).  The
+    /// child's tag namespace is derived from the parent's like
+    /// [`Group::partition`]; overlapping sub-groups are fine as long as
+    /// their *operations* don't interleave on the same member ranks.
+    pub fn subgroup(&self, indices: &[usize]) -> Group<'a> {
+        assert!(!indices.is_empty(), "empty subgroup");
+        let ranks: Vec<usize> = indices
+            .iter()
+            .map(|&i| {
+                assert!(i < self.ranks.len(), "subgroup index {i} out of range");
+                self.ranks[i]
+            })
+            .collect();
+        // Fold the index list into the salt so distinct selections from
+        // the same partition call point get distinct namespaces.
+        let mut salt: u64 = 0xcbf2_9ce4_8422_2325;
+        for &i in indices {
+            salt ^= i as u64;
+            salt = salt.wrapping_mul(0x1000_0000_01b3);
+        }
+        let id = Self::derive_id(self.next_tag(), salt);
+        Group::with_id(self.ctx, ranks, id)
     }
 
     // ------------------------------------------------ point-to-point (T)
@@ -445,6 +540,99 @@ mod tests {
             assert_ne!(t1a, t1b);
             assert_ne!(t1a, t2a);
         });
+    }
+
+    #[test]
+    fn partition_shapes_ids_and_membership() {
+        run(6, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            let g = Group::world(ctx);
+            let parts = g.partition(&[2, 3, 1]);
+            assert_eq!(parts.len(), 3);
+            assert_eq!(parts[0].ranks(), &[0, 1]);
+            assert_eq!(parts[1].ranks(), &[2, 3, 4]);
+            assert_eq!(parts[2].ranks(), &[5]);
+            // exactly one part claims me, at the right index
+            let mine: Vec<usize> = (0..3).filter(|&k| parts[k].is_member()).collect();
+            assert_eq!(mine.len(), 1);
+            assert_eq!(parts[mine[0]].index(), ctx.rank - parts[mine[0]].ranks()[0]);
+            // namespaces pairwise distinct, and distinct across calls
+            let again = g.partition(&[2, 3, 1]);
+            let mut ids: Vec<u64> = parts.iter().chain(again.iter()).map(|p| p.id()).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), 6, "derived namespaces collided");
+            // consistent across members (SPMD): allreduce the id vector
+            let my_ids: Vec<u64> = parts.iter().map(|p| p.id()).collect();
+            let folded = g.allreduce(my_ids.clone(), |a, b| {
+                assert_eq!(a, b, "partition ids diverged across ranks");
+                a
+            });
+            assert_eq!(folded, my_ids);
+        });
+    }
+
+    #[test]
+    fn subgroup_selects_and_renumbers() {
+        run(4, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            let g = Group::world(ctx);
+            let sub = g.subgroup(&[3, 1]);
+            assert_eq!(sub.ranks(), &[3, 1]);
+            match ctx.rank {
+                3 => assert_eq!(sub.index(), 0),
+                1 => assert_eq!(sub.index(), 1),
+                _ => assert!(!sub.is_member()),
+            }
+            assert_ne!(sub.id(), g.id());
+        });
+    }
+
+    /// Satellite: two partitions running collectives **concurrently**
+    /// (disjoint rank subsets of one world, wall-clock-interleaved by
+    /// the thread scheduler) never cross-match messages.  The two parts
+    /// run *different* programs with *different* payload types at the
+    /// same op-sequence positions — a single cross-matched envelope
+    /// would surface as a downcast type panic or a corrupted value.
+    #[test]
+    fn concurrent_partitions_never_cross_match() {
+        let res = run(
+            4,
+            BackendProfile::openmpi_fixed(),
+            CostParams::free(),
+            |ctx| {
+                let g = Group::world(ctx);
+                let parts = g.partition(&[2, 2]);
+                let mine = usize::from(ctx.rank >= 2);
+                let p = &parts[mine];
+                assert!(p.is_member());
+                let mut acc = 0u64;
+                if mine == 0 {
+                    // part 0: u64 allreduces + shifts
+                    for round in 0..50u64 {
+                        let s = p.allreduce(ctx.rank as u64 + round, |a, b| a + b);
+                        assert_eq!(s, 1 + 2 * round); // ranks {0,1}
+                        let got: u64 = p.shift(1, round * 1000 + ctx.rank as u64);
+                        assert_eq!(got % 1000, 1 - p.index() as u64);
+                        acc += s + got;
+                    }
+                } else {
+                    // part 1: Vec<f32> bcasts + gathers (different type,
+                    // different schedule length)
+                    for round in 0..75usize {
+                        let v = p.bcast(
+                            round % 2,
+                            Some(vec![round as f32; 3]).filter(|_| p.index() == round % 2),
+                        );
+                        assert_eq!(v, vec![round as f32; 3]);
+                        if let Some(all) = p.gather(0, round as u32) {
+                            assert_eq!(all, vec![round as u32; 2]);
+                        }
+                        acc += round as u64;
+                    }
+                }
+                acc
+            },
+        );
+        assert_eq!(res.results.len(), 4);
     }
 
     #[test]

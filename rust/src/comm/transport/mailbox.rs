@@ -159,6 +159,22 @@ impl Mailbox {
         self.cv.notify_all();
     }
 
+    /// Clear a poison mark, making the mailbox receivable again.
+    ///
+    /// The batch runtime never needs this — a poisoned run is over.  The
+    /// serving runtime does: rank death is scoped to the *owning job*
+    /// (the coordinator poisons exactly that job's members), and a
+    /// poisoned worker that has unwound its job clears its own mailbox
+    /// before accepting the next assignment.  Any envelopes still queued
+    /// from the failed job are dropped here — their tags live in the
+    /// dead job's namespace and could never match again.
+    pub fn clear_fail(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.poisoned.take().is_some() {
+            inner.queue.clear();
+        }
+    }
+
     /// Mark the owning rank exited.  Idempotent; returns `true` only on
     /// the open→closed transition (so callers keeping shutdown counters
     /// stay correct under double-close).

@@ -110,4 +110,28 @@ pub trait Transport: Send + Sync {
     /// a non-blocking handle's `wait()` — surface the root cause instead
     /// of burning the [`RECV_TIMEOUT`] deadlock oracle.
     fn fail(&self, reason: &str);
+
+    /// Poison only the mailboxes of `ranks` — the scoped form of
+    /// [`Transport::fail`] the serving runtime uses to fail one job's
+    /// members while jobs on disjoint rank subsets keep running.
+    ///
+    /// The default falls back to the whole-process [`Transport::fail`]
+    /// (correct but unscoped): transports that cannot address individual
+    /// remote mailboxes — a multi-process wire transport holds only its
+    /// local ranks' — degrade to the batch behavior, where any rank
+    /// death ends the run.  In-process transports override this with a
+    /// true per-rank poison.
+    fn fail_ranks(&self, ranks: &[usize], reason: &str) {
+        let _ = ranks;
+        self.fail(reason);
+    }
+
+    /// Un-poison rank `me`'s mailbox (dropping any stale envelopes), so
+    /// a serving worker that unwound a failed job can accept its next
+    /// assignment.  Default: no-op — transports without scoped failure
+    /// never re-admit a poisoned rank, matching their [`Transport::fail`]
+    /// semantics.
+    fn clear_fail(&self, me: usize) {
+        let _ = me;
+    }
 }

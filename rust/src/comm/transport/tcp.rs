@@ -390,6 +390,26 @@ impl Transport for TcpTransport {
             mb.fail(reason);
         }
     }
+
+    fn fail_ranks(&self, ranks: &[usize], reason: &str) {
+        // Scoped poison for the ranks this process holds.  In loopback
+        // mode (every rank local) that is fully scoped, like Fabric's;
+        // in multi-process mode a failed job's *remote* members are not
+        // reachable from here and surface through the deadlock oracle
+        // instead — serving over multi-process tcp therefore treats any
+        // rank death as a batch-style fatal (see serve docs).
+        for &r in ranks {
+            if let Some(mb) = &self.boxes[r] {
+                mb.fail(reason);
+            }
+        }
+    }
+
+    fn clear_fail(&self, me: usize) {
+        if let Some(mb) = &self.boxes[me] {
+            mb.clear_fail();
+        }
+    }
 }
 
 #[cfg(test)]

@@ -19,6 +19,11 @@ use crate::spmd::Ctx;
 pub struct GridN<'a> {
     ctx: &'a Ctx,
     dims: Vec<usize>,
+    /// Grid-rank → world-rank map; `None` = identity (the batch default
+    /// of grid process i on world rank i).  A map lets the same grid run
+    /// on an arbitrary rank subset — the serving runtime places each
+    /// job's grid on the subset its scheduler carved out of the pool.
+    ranks: Option<Vec<usize>>,
 }
 
 impl<'a> GridN<'a> {
@@ -33,7 +38,33 @@ impl<'a> GridN<'a> {
             dims,
             ctx.world
         );
-        GridN { ctx, dims }
+        GridN { ctx, dims, ranks: None }
+    }
+
+    /// Grid whose process `i` (row-major) lives on world rank
+    /// `ranks[i]`.  `ranks` must hold at least `dims.iter().product()`
+    /// distinct world ranks; extras are ignored.  Every rank — mapped or
+    /// not — may construct the grid (SPMD over the subset).
+    pub fn new_on(ctx: &'a Ctx, dims: Vec<usize>, ranks: &[usize]) -> Self {
+        let need: usize = dims.iter().product();
+        assert!(need >= 1, "grid must be non-empty");
+        assert!(
+            need <= ranks.len(),
+            "grid {:?} needs {need} ranks, subset has {}",
+            dims,
+            ranks.len()
+        );
+        let map: Vec<usize> = ranks[..need].to_vec();
+        debug_assert!(map.iter().all(|&r| r < ctx.world), "rank outside world");
+        debug_assert!(
+            {
+                let mut s = map.clone();
+                s.sort_unstable();
+                s.windows(2).all(|w| w[0] != w[1])
+            },
+            "grid ranks must be distinct"
+        );
+        GridN { ctx, dims, ranks: Some(map) }
     }
 
     /// Cubic 3-d grid q×q×q (Alg. 2).
@@ -44,6 +75,11 @@ impl<'a> GridN<'a> {
     /// Square 2-d grid q×q (Alg. 3).
     pub fn square(ctx: &'a Ctx, q: usize) -> Self {
         Self::new(ctx, vec![q, q])
+    }
+
+    /// Square 2-d grid q×q over an explicit rank subset.
+    pub fn square_on(ctx: &'a Ctx, q: usize, ranks: &[usize]) -> Self {
+        Self::new_on(ctx, vec![q, q], ranks)
     }
 
     pub fn dims(&self) -> &[usize] {
@@ -59,7 +95,8 @@ impl<'a> GridN<'a> {
         self.dims.iter().product()
     }
 
-    /// Row-major rank of `coord`.
+    /// Row-major **world** rank of `coord` (mapped through the rank
+    /// subset when one is set).
     pub fn rank_of(&self, coord: &[usize]) -> usize {
         assert_eq!(coord.len(), self.dims.len());
         let mut r = 0usize;
@@ -67,15 +104,23 @@ impl<'a> GridN<'a> {
             debug_assert!(c < d, "coordinate {c} out of bound {d}");
             r = r * d + c;
         }
-        r
+        match &self.ranks {
+            Some(map) => map[r],
+            None => r,
+        }
+    }
+
+    /// Grid rank (row-major position) of world `rank`, if mapped.
+    fn grid_rank_of(&self, rank: usize) -> Option<usize> {
+        match &self.ranks {
+            Some(map) => map.iter().position(|&r| r == rank),
+            None => (rank < self.size()).then_some(rank),
+        }
     }
 
     /// Coordinate of world `rank`, if it is a grid process.
     pub fn coord_of(&self, rank: usize) -> Option<Vec<usize>> {
-        if rank >= self.size() {
-            return None;
-        }
-        let mut rem = rank;
+        let mut rem = self.grid_rank_of(rank)?;
         let mut coord = vec![0; self.dims.len()];
         for i in (0..self.dims.len()).rev() {
             coord[i] = rem % self.dims[i];
@@ -91,14 +136,19 @@ impl<'a> GridN<'a> {
 
     /// Am I a grid process?
     pub fn is_member(&self) -> bool {
-        self.ctx.rank < self.size()
+        self.grid_rank_of(self.ctx.rank).is_some()
     }
 
     /// Distribute a value per grid process: `gen` runs only on the owner
     /// with its own coordinate (lazy SPMD, like `DistSeq::from_fn`).
     pub fn map_d<T: Data>(&self, gen: impl FnOnce(&[usize]) -> T) -> GridData<'a, T> {
         let local = self.my_coord().map(|c| gen(&c));
-        GridData { ctx: self.ctx, dims: self.dims.clone(), local }
+        GridData {
+            ctx: self.ctx,
+            dims: self.dims.clone(),
+            ranks: self.ranks.clone(),
+            local,
+        }
     }
 
     /// World ranks of the grid line through `coord` varying dimension
@@ -119,12 +169,17 @@ impl<'a> GridN<'a> {
 pub struct GridData<'a, T: Data> {
     ctx: &'a Ctx,
     dims: Vec<usize>,
+    ranks: Option<Vec<usize>>,
     local: Option<T>,
 }
 
 impl<'a, T: Data> GridData<'a, T> {
     fn grid(&self) -> GridN<'a> {
-        GridN { ctx: self.ctx, dims: self.dims.clone() }
+        GridN {
+            ctx: self.ctx,
+            dims: self.dims.clone(),
+            ranks: self.ranks.clone(),
+        }
     }
 
     pub fn dims(&self) -> &[usize] {
@@ -146,7 +201,12 @@ impl<'a, T: Data> GridData<'a, T> {
 
     /// Transform the local value — non-communicating (Table 1's mapD).
     pub fn map_d<U: Data>(self, f: impl FnOnce(T) -> U) -> GridData<'a, U> {
-        GridData { ctx: self.ctx, dims: self.dims, local: self.local.map(f) }
+        GridData {
+            ctx: self.ctx,
+            dims: self.dims,
+            ranks: self.ranks,
+            local: self.local.map(f),
+        }
     }
 
     /// Like `map_d` with the coordinate visible to the lambda.
@@ -155,6 +215,7 @@ impl<'a, T: Data> GridData<'a, T> {
         GridData {
             ctx: self.ctx,
             dims: self.dims,
+            ranks: self.ranks,
             local: self.local.map(|v| f(&coord.expect("member without coord"), v)),
         }
     }
@@ -167,12 +228,13 @@ impl<'a, T: Data> GridData<'a, T> {
         f: impl FnOnce(T, U) -> V,
     ) -> GridData<'a, V> {
         assert_eq!(self.dims, other.dims, "zipWithD requires equal grid shapes");
+        debug_assert_eq!(self.ranks, other.ranks, "zipWithD requires equal rank maps");
         let local = match (self.local, other.local) {
             (Some(a), Some(b)) => Some(f(a, b)),
             (None, None) => None,
             _ => unreachable!("grid membership mismatch"),
         };
-        GridData { ctx: self.ctx, dims: self.dims, local }
+        GridData { ctx: self.ctx, dims: self.dims, ranks: self.ranks, local }
     }
 
     /// The distributed sequence over the grid line through my coordinate
@@ -380,6 +442,55 @@ mod tests {
         });
         assert_eq!(res.results[4], None);
         assert_eq!(res.metrics[4].msgs_sent, 0);
+    }
+
+    #[test]
+    fn subset_grid_runs_on_mapped_ranks() {
+        // 2x2 grid placed on world ranks {4, 2, 5, 1} of a world of 6:
+        // same collectives, only the placement differs.
+        let res = run(6, fixed(), free(), |ctx| {
+            let map = [4usize, 2, 5, 1];
+            let g = GridN::square_on(ctx, 2, &map);
+            assert_eq!(g.is_member(), map.contains(&ctx.rank));
+            assert_eq!(g.rank_of(&[0, 1]), 2);
+            assert_eq!(g.line_ranks(&[1, 0], 1), vec![5, 1]);
+            let data = g.map_d(|c| (10 * c[0] + c[1]) as u64);
+            data.y_seq().all_gather_d()
+        });
+        // grid row 0 = world {4, 2}, row 1 = world {5, 1}
+        assert_eq!(res.results[4], Some(vec![0, 1]));
+        assert_eq!(res.results[2], Some(vec![0, 1]));
+        assert_eq!(res.results[5], Some(vec![10, 11]));
+        assert_eq!(res.results[1], Some(vec![10, 11]));
+        assert_eq!(res.results[0], None);
+        assert_eq!(res.results[3], None);
+        assert_eq!(res.metrics[0].msgs_sent, 0, "non-members stay silent");
+    }
+
+    #[test]
+    fn disjoint_subset_grids_run_concurrently() {
+        // Two 2x2 grids on disjoint subsets of one world-8, each inside
+        // its own tag scope (the serving configuration): reductions on
+        // one must not observe the other's traffic.
+        let res = run(8, fixed(), free(), |ctx| {
+            let (scope, map): (u64, [usize; 4]) = if ctx.rank < 4 {
+                (0xA11CE, [0, 1, 2, 3])
+            } else {
+                (0xB0B, [4, 5, 6, 7])
+            };
+            ctx.with_tag_scope(scope, || {
+                let g = GridN::square_on(ctx, 2, &map);
+                let data = g.map_d(|c| (100 * scope + 10 * c[0] as u64 + c[1] as u64) as i64);
+                data.into_seq_along(1).reduce_d(|a, b| a + b)
+            })
+        });
+        // row roots: grid coords (i, 0) → world map[2i]
+        let base_a = (0xA11CEu64 * 100) as i64;
+        let base_b = (0xB0Bu64 * 100) as i64;
+        assert_eq!(res.results[0], Some(2 * base_a + 1));
+        assert_eq!(res.results[2], Some(2 * base_a + 20 + 1));
+        assert_eq!(res.results[4], Some(2 * base_b + 1));
+        assert_eq!(res.results[6], Some(2 * base_b + 20 + 1));
     }
 
     #[test]

@@ -38,6 +38,7 @@ pub mod graph;
 pub mod matrix;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod spmd;
 pub mod testing;
 
@@ -48,6 +49,7 @@ pub use comm::backend::{Backend, BackendProfile};
 pub use comm::collectives::Collectives;
 pub use comm::transport::Transport;
 pub use comm::wire::WireData;
+pub use serve::{JobOutput, JobSpec, JobStatus, ServeClient, ServeHandle, ServeOptions};
 pub use spmd::{Runtime, RuntimeBuilder};
 
 /// Crate-wide result type.

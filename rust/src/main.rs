@@ -25,6 +25,7 @@ use foopar::graph::{floyd_warshall_seq, Graph};
 use foopar::matrix::block::BlockSource;
 use foopar::runtime::compute::Compute;
 use foopar::runtime::engine::EngineServer;
+use foopar::serve::{JobOutput, JobSpec, ServeClient, ServeOptions};
 use foopar::Runtime;
 
 fn main() {
@@ -62,6 +63,8 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("fig5") => cmd_fig5(args),
         Some("isoeff") => cmd_isoeff(args),
         Some("overhead") => cmd_overhead(args),
+        Some("serve") => cmd_serve(args),
+        Some("submit") => cmd_submit(args),
         _ => args.unknown(),
     }
 }
@@ -79,6 +82,11 @@ repro — FooPar reproduction (rust + JAX/Pallas AOT via PJRT)
   fig5     [--machine carver|horseshoe6]   Fig. 5 efficiency curves
   isoeff   [--algo generic|dns|fw] [--target E]   isoefficiency verification
   overhead [--machine M]            framework vs hand-coded DNS
+  serve    [--world N] [--listen H:P] [--transport local|tcp-loopback] [--threads T]
+           [--no-batch] [--max-batch K]   resident serving pool + TCP submit endpoint
+  submit   [--addr H:P] [--job matmul|fw] [--q Q] [--b B] [--n N] [--density D]
+           [--seed-a S] [--seed-b S] [--seed S] [--count K] [--verify] [--shutdown]
+                                    submit jobs to (and optionally stop) a resident pool
   backends                          list registered communication backends";
 
 /// Parse a `--mode` flag into a Compute (PJRT-real prefers artifacts).
@@ -371,5 +379,135 @@ fn cmd_overhead(args: &Args) -> Result<()> {
     let machine = MachineConfig::resolve(args.get_str("machine", "carver"))?;
     let rows = overhead::sweep(&machine);
     println!("{}", overhead::render(&rows));
+    Ok(())
+}
+
+/// `repro serve` — bring up a resident pool and serve TCP submitters
+/// until one of them requests shutdown.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let world = args.get_usize("world", 5)?;
+    let transport = args.get_str("transport", "local");
+    let threads = args.get_usize("threads", 1)?;
+    let mut opts = ServeOptions {
+        listen: Some(args.get_str("listen", "127.0.0.1:7199").to_string()),
+        ..ServeOptions::default()
+    };
+    if args.has("no-batch") {
+        opts.batching = false;
+    }
+    opts.max_batch = args.get_usize("max-batch", opts.max_batch)?;
+
+    let rt = Runtime::builder()
+        .world(world)
+        .transport(transport)
+        .threads_per_rank(threads)
+        .build()?;
+    println!(
+        "serving: world {world} (pool of {}), transport {transport}, batching {}",
+        world - 1,
+        if opts.batching { "on" } else { "off" }
+    );
+    let ((), report) = rt.serve(opts, |h| {
+        if let Some(addr) = h.listen_addr() {
+            println!("serving: listening on {addr}");
+        }
+        h.wait_shutdown();
+    })?;
+    println!(
+        "serving: drained — {} submitted, {} done, {} failed, {} rejected, {} assignments",
+        report.submitted, report.done, report.failed, report.rejected, report.assignments
+    );
+    println!(
+        "serving: latency p50 {:.2} ms, p99 {:.2} ms, mean {:.2} ms",
+        report.latency.p50() * 1e3,
+        report.latency.p99() * 1e3,
+        report.latency.mean() * 1e3
+    );
+    Ok(())
+}
+
+/// `repro submit` — submit jobs to a resident pool over TCP, await
+/// their results (optionally verifying each against a fresh in-process
+/// single-job oracle run), and/or request shutdown.
+fn cmd_submit(args: &Args) -> Result<()> {
+    let addr = args.get_str("addr", "127.0.0.1:7199");
+    let mut client = ServeClient::connect(addr)?;
+    if let Some(kind) = args.get("job") {
+        let count = args.get_usize("count", 1)? as u64;
+        let verify = args.has("verify");
+        let q = args.get_usize("q", 2)?;
+        let mut ids = Vec::new();
+        for k in 0..count {
+            let spec = match kind {
+                "matmul" => JobSpec::Matmul {
+                    q,
+                    b: args.get_usize("b", 16)?,
+                    seed_a: args.get_usize("seed-a", 1)? as u64 + 2 * k,
+                    seed_b: args.get_usize("seed-b", 2)? as u64 + 2 * k,
+                },
+                "fw" => JobSpec::FloydWarshall {
+                    q,
+                    n: args.get_usize("n", 16)?,
+                    density: args.get_f64("density", 0.4)?,
+                    seed: args.get_usize("seed", 7)? as u64 + k,
+                },
+                other => bail!("--job must be matmul|fw, got '{other}'"),
+            };
+            let id = client.submit(spec.clone())?;
+            ids.push((id, spec));
+        }
+        for (id, spec) in ids {
+            match client.wait(id)? {
+                Ok(out) => {
+                    if verify {
+                        verify_against_oracle(&spec, &out)?;
+                        println!("job {id} ({}): OK, bit-identical to single-job oracle", spec.kind());
+                    } else {
+                        println!("job {id} ({}): OK", spec.kind());
+                    }
+                }
+                Err(e) => bail!("job {id} ({}) failed: {e}", spec.kind()),
+            }
+        }
+    }
+    if args.has("shutdown") {
+        client.shutdown()?;
+        println!("shutdown requested");
+    }
+    Ok(())
+}
+
+/// Re-run the job standalone (its own dedicated q×q world) and demand
+/// bit-identical output — the serving path must not perturb results.
+fn verify_against_oracle(spec: &JobSpec, got: &JobOutput) -> Result<()> {
+    let JobOutput::Mat(got) = got else {
+        bail!("unexpected batch output for a single job");
+    };
+    let want = match spec {
+        JobSpec::Matmul { q, b, seed_a, seed_b } => {
+            let (q, b, sa, sb) = (*q, *b, *seed_a, *seed_b);
+            let res = Runtime::builder().world(q * q).build()?.run(move |ctx| {
+                let a = BlockSource::real(b, sa);
+                let bb = BlockSource::real(b, sb);
+                cannon::mmm_cannon(ctx, &Compute::Native, q, &a, &bb)
+            });
+            cannon::collect_c(&res.results, q, b)
+        }
+        JobSpec::FloydWarshall { q, n, density, seed } => {
+            let (q, n, density, seed) = (*q, *n, *density, *seed);
+            let res = Runtime::builder().world(q * q).build()?.run(move |ctx| {
+                let src = floyd_warshall::FwSource::Real { n, density, seed };
+                floyd_warshall::floyd_warshall_par(ctx, &Compute::Native, q, &src)
+            });
+            floyd_warshall::collect_d(&res.results, q, n / q)
+        }
+        other => bail!("--verify supports matmul and fw, not {}", other.kind()),
+    };
+    if *got != want {
+        bail!(
+            "served result diverges from the single-job oracle (max |Δ| = {:.3e})",
+            got.max_abs_diff(&want)
+        );
+    }
     Ok(())
 }

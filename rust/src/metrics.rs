@@ -148,6 +148,138 @@ impl MetricsSnapshot {
             0.0
         }
     }
+
+    /// The delta `self − baseline`: activity **since** `baseline` was
+    /// snapshot from the same rank's counters.
+    ///
+    /// A long-lived serving rank's `RankMetrics` accumulate across every
+    /// job it ever ran, so quoting `snapshot().gflops()` for one job
+    /// silently blends in its predecessors' flops and comm time.  The
+    /// scoped form brackets a job — snapshot at assignment, `scoped` at
+    /// completion — so per-job rates and byte counts never bleed between
+    /// jobs multiplexed on the same rank.  (`Report::aggregate` over the
+    /// members' scoped snapshots then gives the per-job report.)
+    pub fn scoped(&self, baseline: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            msgs_sent: self.msgs_sent - baseline.msgs_sent,
+            bytes_sent: self.bytes_sent - baseline.bytes_sent,
+            msgs_recv: self.msgs_recv - baseline.msgs_recv,
+            bytes_recv: self.bytes_recv - baseline.bytes_recv,
+            flops: self.flops - baseline.flops,
+            comm_time: self.comm_time - baseline.comm_time,
+            compute_time: self.compute_time - baseline.compute_time,
+            collectives: self.collectives - baseline.collectives,
+            ew_flops: self.ew_flops - baseline.ew_flops,
+            ew_time: self.ew_time - baseline.ew_time,
+            overlap_hidden: self.overlap_hidden - baseline.overlap_hidden,
+        }
+    }
+}
+
+/// Fixed-bucket latency histogram with quantile estimates — the serving
+/// plane's p50/p99 instrument.
+///
+/// Buckets are log-spaced from 1 µs to ~100 s (5 per decade), so the
+/// quantile error is bounded by the bucket ratio (~58%) worst-case and
+/// the memory cost is a flat 41 counters — no per-sample storage, O(1)
+/// record, mergeable across ranks by addition.  Quantiles interpolate
+/// linearly inside the winning bucket.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum_secs: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    const BUCKETS: usize = 41; // 8 decades × 5 + 1 overflow
+    const MIN_SECS: f64 = 1e-6;
+    const PER_DECADE: f64 = 5.0;
+
+    pub fn new() -> Self {
+        Histogram { counts: vec![0; Self::BUCKETS], total: 0, sum_secs: 0.0 }
+    }
+
+    fn bucket_of(secs: f64) -> usize {
+        if secs <= Self::MIN_SECS {
+            return 0;
+        }
+        let b = ((secs / Self::MIN_SECS).log10() * Self::PER_DECADE).floor() as usize + 1;
+        b.min(Self::BUCKETS - 1)
+    }
+
+    /// Lower edge of bucket `b` in seconds.
+    fn edge(b: usize) -> f64 {
+        if b == 0 {
+            0.0
+        } else {
+            Self::MIN_SECS * 10f64.powf((b - 1) as f64 / Self::PER_DECADE)
+        }
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        self.counts[Self::bucket_of(secs)] += 1;
+        self.total += 1;
+        self.sum_secs += secs;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total > 0 {
+            self.sum_secs / self.total as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Quantile estimate in seconds, `q` in [0, 1].  Linear interpolation
+    /// within the winning bucket; 0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= target {
+                let lo = Self::edge(b);
+                let hi = if b + 1 < Self::BUCKETS { Self::edge(b + 1) } else { lo * 10.0 };
+                let frac = (target - seen) as f64 / c as f64;
+                return lo + (hi - lo) * frac;
+            }
+            seen += c;
+        }
+        Self::edge(Self::BUCKETS - 1)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Merge another histogram into this one (cross-rank aggregation).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_secs += other.sum_secs;
+    }
 }
 
 /// Aggregate over all ranks of a run.
@@ -303,6 +435,78 @@ mod tests {
         assert!((r.max_ew_gflops - s.ew_gflops()).abs() < 1e-12);
         assert_eq!(r.total.ew_flops, 1e6);
         assert!(r.summary().contains("ew(max)"));
+    }
+
+    #[test]
+    fn scoped_snapshot_isolates_per_job_counters() {
+        // Regression for the serving runtime: a rank runs job A, then
+        // job B.  B's report must reflect only B's activity — before
+        // `scoped()`, quoting the raw snapshot blended A's flops into
+        // B's rate.
+        let m = RankMetrics::new();
+        // job A: heavy
+        m.on_compute(8e9, 1.0);
+        m.on_send(1000, 1e-3);
+        let after_a = m.snapshot();
+        // job B: light
+        m.on_compute(1e9, 1.0);
+        m.on_recv(64, 1e-4);
+        let b = m.snapshot().scoped(&after_a);
+        assert_eq!(b.flops, 1e9);
+        assert_eq!(b.msgs_sent, 0, "job A's send leaked into job B");
+        assert_eq!(b.msgs_recv, 1);
+        assert_eq!(b.bytes_recv, 64);
+        assert!((b.gflops() - 1.0).abs() < 1e-9, "rate blended: {}", b.gflops());
+        // the raw cumulative snapshot would have blended to 4.5 GF/s
+        assert!((m.snapshot().gflops() - 4.5).abs() < 1e-9);
+        // scoping against a fresh baseline is the identity
+        let all = m.snapshot().scoped(&MetricsSnapshot::default());
+        assert_eq!(all, m.snapshot());
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_samples() {
+        let mut h = Histogram::new();
+        for _ in 0..99 {
+            h.record(1e-3); // 99 samples at 1 ms
+        }
+        h.record(1.0); // one outlier at 1 s
+        assert_eq!(h.count(), 100);
+        let p50 = h.p50();
+        assert!(
+            (0.5e-3..4e-3).contains(&p50),
+            "p50 {p50} should bracket 1ms"
+        );
+        let p99 = h.p99();
+        assert!(p99 < 0.5, "p99 {p99} should not be pulled to the outlier");
+        assert!(h.quantile(1.0) >= 0.5, "max quantile must see the outlier");
+        assert!((h.mean() - (99.0 * 1e-3 + 1.0) / 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_empty_and_merge() {
+        let h = Histogram::new();
+        assert_eq!(h.p50(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        let mut a = Histogram::new();
+        a.record(1e-3);
+        let mut b = Histogram::new();
+        b.record(1e-3);
+        b.record(2.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert!(a.quantile(1.0) > 1.0);
+    }
+
+    #[test]
+    fn histogram_monotone_quantiles() {
+        let mut h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(i as f64 * 1e-5); // 10 µs .. 10 ms
+        }
+        let (q10, q50, q90) = (h.quantile(0.1), h.quantile(0.5), h.quantile(0.9));
+        assert!(q10 <= q50 && q50 <= q90, "{q10} {q50} {q90}");
+        assert!(q50 > 1e-4 && q50 < 2e-2);
     }
 
     #[test]

@@ -1,0 +1,325 @@
+//! The external submitter API: a framed TCP protocol in front of
+//! [`ServeHandle`](super::ServeHandle).
+//!
+//! The resident pool lives in one process (in-process transport); other
+//! processes reach it through a tiny request/response protocol carried
+//! as length-prefixed frames (`u32` LE length + body) encoded with the
+//! **same wire codec the rank transport uses**
+//! ([`crate::comm::wire`]) — one serialization story end to end.
+//! `repro serve --listen` starts the listener, `repro submit` is a
+//! stock client, and [`ServeClient`] is the programmatic one.
+//!
+//! Each connection is served by its own thread and handles requests
+//! strictly in order — a `Wait` blocks that connection (not the pool)
+//! until the job is terminal.  Concurrency comes from opening multiple
+//! connections, exactly like submitting from multiple threads.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Context;
+
+use super::server::{ServeHandle, ServeShared};
+use super::{JobOutput, JobSpec, JobStatus};
+use crate::comm::wire::{WireData, WireError, WireReader};
+use crate::data::value::Data;
+
+/// Client → server requests.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Submit(JobSpec),
+    Status(u64),
+    /// Block (this connection) until the job is terminal.
+    Wait(u64),
+    Shutdown,
+}
+
+/// Server → client responses, one per request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Submitted(u64),
+    Status(Option<JobStatus>),
+    /// Terminal outcome of a `Wait`: the output on success, the
+    /// failure/rejection reason otherwise.
+    Outcome { output: Option<JobOutput>, err: Option<String> },
+    ShuttingDown,
+}
+
+impl Data for Request {
+    fn byte_size(&self) -> usize {
+        1 + match self {
+            Request::Submit(spec) => spec.byte_size(),
+            Request::Status(_) | Request::Wait(_) => 8,
+            Request::Shutdown => 0,
+        }
+    }
+}
+
+impl WireData for Request {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Request::Submit(spec) => {
+                out.push(0);
+                spec.encode(out);
+            }
+            Request::Status(id) => {
+                out.push(1);
+                id.encode(out);
+            }
+            Request::Wait(id) => {
+                out.push(2);
+                id.encode(out);
+            }
+            Request::Shutdown => out.push(3),
+        }
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(match r.u8()? {
+            0 => Request::Submit(JobSpec::decode(r)?),
+            1 => Request::Status(r.u64()?),
+            2 => Request::Wait(r.u64()?),
+            3 => Request::Shutdown,
+            _ => return Err(WireError::Malformed("unknown Request tag")),
+        })
+    }
+}
+
+impl Data for Response {
+    fn byte_size(&self) -> usize {
+        1 + match self {
+            Response::Submitted(_) => 8,
+            Response::Status(s) => 1 + s.as_ref().map_or(0, |s| s.byte_size()),
+            Response::Outcome { output, err } => {
+                output.as_ref().map_or(1, |o| 1 + o.byte_size())
+                    + err.as_ref().map_or(1, |e| 9 + e.len())
+            }
+            Response::ShuttingDown => 0,
+        }
+    }
+}
+
+impl WireData for Response {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Response::Submitted(id) => {
+                out.push(0);
+                id.encode(out);
+            }
+            Response::Status(s) => {
+                out.push(1);
+                s.encode(out);
+            }
+            Response::Outcome { output, err } => {
+                out.push(2);
+                output.encode(out);
+                err.encode(out);
+            }
+            Response::ShuttingDown => out.push(3),
+        }
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(match r.u8()? {
+            0 => Response::Submitted(r.u64()?),
+            1 => Response::Status(Option::decode(r)?),
+            2 => Response::Outcome { output: Option::decode(r)?, err: Option::decode(r)? },
+            3 => Response::ShuttingDown,
+            _ => return Err(WireError::Malformed("unknown Response tag")),
+        })
+    }
+}
+
+/// Frames over 256 MiB are protocol corruption, not real traffic.
+const FRAME_MAX: usize = 256 << 20;
+
+fn write_frame<T: WireData>(stream: &mut TcpStream, v: &T) -> std::io::Result<()> {
+    let mut body = Vec::with_capacity(v.byte_size() + 4);
+    body.extend_from_slice(&[0u8; 4]);
+    v.encode(&mut body);
+    let len = u32::try_from(body.len() - 4).expect("frame over 4 GiB");
+    body[0..4].copy_from_slice(&len.to_le_bytes());
+    stream.write_all(&body)?;
+    stream.flush()
+}
+
+/// Read one frame; `Ok(None)` on a clean between-frames EOF.
+fn read_frame<T: WireData>(stream: &mut TcpStream) -> std::io::Result<Option<T>> {
+    let mut len4 = [0u8; 4];
+    match stream.read(&mut len4[..1]) {
+        Ok(0) => return Ok(None),
+        Ok(_) => {}
+        Err(e) => return Err(e),
+    }
+    stream.read_exact(&mut len4[1..])?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > FRAME_MAX {
+        return Err(std::io::Error::new(
+            ErrorKind::InvalidData,
+            format!("serve frame of {len} bytes exceeds the {FRAME_MAX} B cap"),
+        ));
+    }
+    let mut buf = vec![0u8; len];
+    stream.read_exact(&mut buf)?;
+    let mut r = WireReader::new(&buf);
+    let v = T::decode(&mut r)
+        .map_err(|e| std::io::Error::new(ErrorKind::InvalidData, format!("{e:?}")))?;
+    if r.remaining() != 0 {
+        return Err(std::io::Error::new(
+            ErrorKind::InvalidData,
+            "trailing bytes in serve frame",
+        ));
+    }
+    Ok(Some(v))
+}
+
+/// Bind the client endpoint, record the bound address in the shared
+/// state, and accept connections until shutdown.  Each connection gets
+/// its own handler thread over a cloned [`ServeHandle`].
+pub(crate) fn spawn_listener(
+    addr: &str,
+    handle: ServeHandle,
+    shared: Arc<ServeShared>,
+) -> crate::Result<JoinHandle<()>> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("bind serve listener on {addr}"))?;
+    listener
+        .set_nonblocking(true)
+        .context("serve listener nonblocking mode")?;
+    let bound = listener.local_addr().context("serve listener local addr")?;
+    shared.set_listen_addr(bound);
+    Ok(std::thread::spawn(move || {
+        loop {
+            if handle.is_shutdown() {
+                return;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    // handlers block in wait(); the accept loop stays
+                    // nonblocking so shutdown is always observed
+                    let _ = stream.set_nonblocking(false);
+                    let h = handle.clone();
+                    std::thread::spawn(move || {
+                        let _ = serve_conn(stream, h);
+                    });
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(_) => return,
+            }
+        }
+    }))
+}
+
+fn serve_conn(mut stream: TcpStream, handle: ServeHandle) -> std::io::Result<()> {
+    while let Some(req) = read_frame::<Request>(&mut stream)? {
+        let resp = match req {
+            Request::Submit(spec) => Response::Submitted(handle.submit(spec)),
+            Request::Status(id) => Response::Status(handle.status(id)),
+            Request::Wait(id) => match handle.wait(id) {
+                Ok(output) => Response::Outcome { output: Some(output), err: None },
+                Err(e) => Response::Outcome { output: None, err: Some(e) },
+            },
+            Request::Shutdown => {
+                handle.shutdown();
+                Response::ShuttingDown
+            }
+        };
+        write_frame(&mut stream, &resp)?;
+    }
+    Ok(())
+}
+
+/// Programmatic submitter for an external process (also what
+/// `repro submit` uses).  One synchronous request/response channel;
+/// open several clients for concurrent waits.
+pub struct ServeClient {
+    stream: TcpStream,
+}
+
+impl ServeClient {
+    pub fn connect(addr: impl ToSocketAddrs + std::fmt::Debug) -> crate::Result<Self> {
+        let stream = TcpStream::connect(&addr)
+            .with_context(|| format!("connect to serving runtime at {addr:?}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(ServeClient { stream })
+    }
+
+    fn call(&mut self, req: &Request) -> crate::Result<Response> {
+        write_frame(&mut self.stream, req).context("send request to serving runtime")?;
+        read_frame::<Response>(&mut self.stream)
+            .context("read response from serving runtime")?
+            .context("serving runtime closed the connection")
+    }
+
+    /// Submit a job, returning its id.
+    pub fn submit(&mut self, spec: JobSpec) -> crate::Result<u64> {
+        match self.call(&Request::Submit(spec))? {
+            Response::Submitted(id) => Ok(id),
+            other => anyhow::bail!("protocol error: unexpected response {other:?}"),
+        }
+    }
+
+    /// Current status of a job.
+    pub fn status(&mut self, id: u64) -> crate::Result<Option<JobStatus>> {
+        match self.call(&Request::Status(id))? {
+            Response::Status(s) => Ok(s),
+            other => anyhow::bail!("protocol error: unexpected response {other:?}"),
+        }
+    }
+
+    /// Block until the job is terminal; inner `Err` carries the
+    /// failure/rejection reason.
+    pub fn wait(&mut self, id: u64) -> crate::Result<Result<JobOutput, String>> {
+        match self.call(&Request::Wait(id))? {
+            Response::Outcome { output: Some(out), err: None } => Ok(Ok(out)),
+            Response::Outcome { err: Some(e), .. } => Ok(Err(e)),
+            other => anyhow::bail!("protocol error: unexpected response {other:?}"),
+        }
+    }
+
+    /// Ask the pool to drain and exit.
+    pub fn shutdown(&mut self) -> crate::Result<()> {
+        match self.call(&Request::Shutdown)? {
+            Response::ShuttingDown => Ok(()),
+            other => anyhow::bail!("protocol error: unexpected response {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: WireData + PartialEq + std::fmt::Debug>(v: &T) {
+        let mut buf = Vec::new();
+        v.encode(&mut buf);
+        let mut r = WireReader::new(&buf);
+        assert_eq!(&T::decode(&mut r).expect("decode"), v);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn request_wire_roundtrip() {
+        roundtrip(&Request::Submit(JobSpec::Matmul { q: 2, b: 8, seed_a: 1, seed_b: 2 }));
+        roundtrip(&Request::Status(9));
+        roundtrip(&Request::Wait(11));
+        roundtrip(&Request::Shutdown);
+    }
+
+    #[test]
+    fn response_wire_roundtrip() {
+        use crate::matrix::dense::Mat;
+        roundtrip(&Response::Submitted(4));
+        roundtrip(&Response::Status(Some(JobStatus::Running)));
+        roundtrip(&Response::Status(None));
+        roundtrip(&Response::Outcome {
+            output: Some(JobOutput::Mat(Mat::from_vec(1, 2, vec![1.0, 2.0]))),
+            err: None,
+        });
+        roundtrip(&Response::Outcome { output: None, err: Some("died".into()) });
+        roundtrip(&Response::ShuttingDown);
+    }
+}

@@ -1,0 +1,515 @@
+//! The persistent serving runtime: concurrent jobs multiplexed over a
+//! resident rank pool.
+//!
+//! Every other entry point in this crate is a *batch* SPMD run — spawn a
+//! world, run one algorithm, tear everything down.  This subsystem keeps
+//! the world resident: [`Runtime::serve`](crate::spmd::Runtime) parks
+//! rank 0 as a **dispatcher** and every other rank as a **worker**, and
+//! a job queue on the dispatcher multiplexes many concurrent matmul /
+//! Floyd-Warshall requests over the pool (the object-as-server model of
+//! Givelberg's *Object-Oriented Parallel Programming*, with the group
+//! machinery of Hargreaves et al. providing the isolation):
+//!
+//! ```text
+//!   client procs ──TCP──▸ listener ─┐
+//!                                   ▼
+//!   driver thread ──ServeHandle──▸ ServeShared (queue + job table)
+//!                                   │
+//!            rank 0 ── dispatcher ──┤ admission · batching · lifecycle
+//!                                   │       Assign / MemberDone
+//!            ranks 1..w ── workers ◀┴──▸ per-job Group partition
+//! ```
+//!
+//! The isolation story, layer by layer:
+//! * each admitted job gets a **per-job communicator**: its members run
+//!   inside [`Ctx::with_tag_scope`](crate::spmd::Ctx::with_tag_scope),
+//!   so every `Group` they build lives in a namespace derived from the
+//!   job id — concurrent jobs on disjoint rank subsets never
+//!   cross-match messages (see [`Group::partition`]);
+//! * grids place themselves on the job's rank subset via
+//!   [`GridN::new_on`](crate::data::grid::GridN::new_on) and the
+//!   `*_on` algorithm variants;
+//! * per-job metrics are **scoped** deltas
+//!   ([`MetricsSnapshot::scoped`]) of each member's counters, so rates
+//!   never bleed between jobs multiplexed on one rank;
+//! * a member death is scoped to its job: the dying member reports, the
+//!   dispatcher poisons only the job's unreported members
+//!   ([`Transport::fail_ranks`](crate::comm::transport::Transport)),
+//!   they unwind and report, the job is marked failed with the root
+//!   cause, and the ranks rejoin the pool
+//!   ([`Transport::clear_fail`](crate::comm::transport::Transport)).
+//!
+//! The scheduler handles **admission control** (a job whose grid cannot
+//! ever fit the pool is rejected at submit; one that fits but not *now*
+//! queues) and **request batching** (queued same-shape single-rank
+//! GEMMs coalesce into one [`JobSpec::MatmulBatch`] assignment — one
+//! admission/assignment/report round-trip for the whole flood).
+//!
+//! [`Group::partition`]: crate::comm::group::Group::partition
+//! [`MetricsSnapshot::scoped`]: crate::metrics::MetricsSnapshot::scoped
+
+use crate::comm::wire::{WireData, WireError, WireReader};
+use crate::data::value::Data;
+use crate::matrix::dense::Mat;
+use crate::metrics::MetricsSnapshot;
+
+pub mod client;
+pub mod scheduler;
+pub mod server;
+
+pub use client::ServeClient;
+pub use server::{ServeHandle, ServeOptions, ServeReport};
+
+/// What a submitter asks the pool to run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobSpec {
+    /// Cannon's algorithm on a q×q subgrid: `C = A·B` with n = q·b,
+    /// blocks generated from the seeds (deterministic, so any oracle
+    /// re-run is bit-identical).
+    Matmul { q: usize, b: usize, seed_a: u64, seed_b: u64 },
+    /// A coalesced flood of same-shape multiplies: one assignment runs
+    /// every `(seed_a, seed_b)` pair back-to-back on one subgrid.
+    /// Usually produced by the batcher, but submittable directly.
+    MatmulBatch { q: usize, b: usize, pairs: Vec<(u64, u64)> },
+    /// Parallel Floyd-Warshall (Alg. 3) on a q×q subgrid over the
+    /// deterministic random graph `(n, density, seed)`.
+    FloydWarshall { q: usize, n: usize, density: f64, seed: u64 },
+    /// Failure injection for tests: member 0 of the job panics, the
+    /// remaining `width − 1` members block on a message it will never
+    /// send — exercising the dispatcher's scoped poison path end to end.
+    Fault { width: usize, msg: String },
+}
+
+impl JobSpec {
+    /// Ranks a job's grid occupies (0 = malformed, rejected at submit).
+    pub fn ranks_needed(&self) -> usize {
+        match self {
+            JobSpec::Matmul { q, .. } | JobSpec::MatmulBatch { q, .. } => q * q,
+            JobSpec::FloydWarshall { q, .. } => q * q,
+            JobSpec::Fault { width, .. } => *width,
+        }
+    }
+
+    /// Short kind label for logs and reports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JobSpec::Matmul { .. } => "matmul",
+            JobSpec::MatmulBatch { .. } => "matmul-batch",
+            JobSpec::FloydWarshall { .. } => "fw",
+            JobSpec::Fault { .. } => "fault",
+        }
+    }
+
+    /// Submit-time validation: `Some(reason)` when malformed.
+    pub fn invalid_reason(&self) -> Option<String> {
+        match self {
+            JobSpec::Matmul { q, b, .. } if *q == 0 || *b == 0 => {
+                Some("matmul needs q > 0 and b > 0".into())
+            }
+            JobSpec::MatmulBatch { q, b, pairs } if *q == 0 || *b == 0 || pairs.is_empty() => {
+                Some("matmul batch needs q > 0, b > 0, and at least one pair".into())
+            }
+            JobSpec::FloydWarshall { q, n, density, .. }
+                if *q == 0 || *n == 0 || *n % *q != 0 || !(0.0..=1.0).contains(density) =>
+            {
+                Some("fw needs q > 0, n divisible by q, density in [0, 1]".into())
+            }
+            JobSpec::Fault { width, .. } if *width == 0 => Some("fault needs width > 0".into()),
+            _ => None,
+        }
+    }
+}
+
+impl Data for JobSpec {
+    fn byte_size(&self) -> usize {
+        1 + match self {
+            JobSpec::Matmul { .. } => 32,
+            JobSpec::MatmulBatch { pairs, .. } => 16 + 8 + 16 * pairs.len(),
+            JobSpec::FloydWarshall { .. } => 32,
+            JobSpec::Fault { msg, .. } => 8 + 8 + msg.len(),
+        }
+    }
+}
+
+impl WireData for JobSpec {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            JobSpec::Matmul { q, b, seed_a, seed_b } => {
+                out.push(0);
+                q.encode(out);
+                b.encode(out);
+                seed_a.encode(out);
+                seed_b.encode(out);
+            }
+            JobSpec::MatmulBatch { q, b, pairs } => {
+                out.push(1);
+                q.encode(out);
+                b.encode(out);
+                pairs.encode(out);
+            }
+            JobSpec::FloydWarshall { q, n, density, seed } => {
+                out.push(2);
+                q.encode(out);
+                n.encode(out);
+                density.encode(out);
+                seed.encode(out);
+            }
+            JobSpec::Fault { width, msg } => {
+                out.push(3);
+                width.encode(out);
+                msg.encode(out);
+            }
+        }
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(match r.u8()? {
+            0 => JobSpec::Matmul {
+                q: r.len()?,
+                b: r.len()?,
+                seed_a: r.u64()?,
+                seed_b: r.u64()?,
+            },
+            1 => JobSpec::MatmulBatch {
+                q: r.len()?,
+                b: r.len()?,
+                pairs: Vec::decode(r)?,
+            },
+            2 => JobSpec::FloydWarshall {
+                q: r.len()?,
+                n: r.len()?,
+                density: f64::decode(r)?,
+                seed: r.u64()?,
+            },
+            3 => JobSpec::Fault { width: r.len()?, msg: String::decode(r)? },
+            _ => return Err(WireError::Malformed("unknown JobSpec tag")),
+        })
+    }
+}
+
+/// What a completed job hands back to its submitter.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobOutput {
+    /// The assembled result matrix (matmul C, Floyd-Warshall D).
+    Mat(Mat),
+    /// One matrix per pair of a [`JobSpec::MatmulBatch`].
+    Mats(Vec<Mat>),
+}
+
+impl JobOutput {
+    /// The single matrix of a non-batch job (panics on a batch output).
+    pub fn into_mat(self) -> Mat {
+        match self {
+            JobOutput::Mat(m) => m,
+            JobOutput::Mats(_) => panic!("batch output where a single matrix was expected"),
+        }
+    }
+}
+
+impl Data for JobOutput {
+    fn byte_size(&self) -> usize {
+        1 + match self {
+            JobOutput::Mat(m) => m.byte_size(),
+            JobOutput::Mats(v) => v.byte_size(),
+        }
+    }
+}
+
+impl WireData for JobOutput {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            JobOutput::Mat(m) => {
+                out.push(0);
+                m.encode(out);
+            }
+            JobOutput::Mats(v) => {
+                out.push(1);
+                v.encode(out);
+            }
+        }
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(match r.u8()? {
+            0 => JobOutput::Mat(Mat::decode(r)?),
+            1 => JobOutput::Mats(Vec::decode(r)?),
+            _ => return Err(WireError::Malformed("unknown JobOutput tag")),
+        })
+    }
+}
+
+/// Lifecycle of a submitted job: submit → (rejected | queued) → running
+/// → (done | failed).
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobStatus {
+    /// Admitted, waiting for a subgrid to free up.
+    Queued,
+    /// Assigned to a rank subset and executing.
+    Running,
+    /// Completed; the output is (or was) available via `wait`.
+    Done,
+    /// A member died; the root cause is surfaced to the submitter.
+    Failed(String),
+    /// Refused at submit (malformed, or can never fit the pool).
+    Rejected(String),
+}
+
+impl JobStatus {
+    /// Terminal states release no further transitions.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobStatus::Done | JobStatus::Failed(_) | JobStatus::Rejected(_))
+    }
+}
+
+impl Data for JobStatus {
+    fn byte_size(&self) -> usize {
+        1 + match self {
+            JobStatus::Failed(m) | JobStatus::Rejected(m) => 8 + m.len(),
+            _ => 0,
+        }
+    }
+}
+
+impl WireData for JobStatus {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            JobStatus::Queued => out.push(0),
+            JobStatus::Running => out.push(1),
+            JobStatus::Done => out.push(2),
+            JobStatus::Failed(m) => {
+                out.push(3);
+                m.encode(out);
+            }
+            JobStatus::Rejected(m) => {
+                out.push(4);
+                m.encode(out);
+            }
+        }
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(match r.u8()? {
+            0 => JobStatus::Queued,
+            1 => JobStatus::Running,
+            2 => JobStatus::Done,
+            3 => JobStatus::Failed(String::decode(r)?),
+            4 => JobStatus::Rejected(String::decode(r)?),
+            _ => return Err(WireError::Malformed("unknown JobStatus tag")),
+        })
+    }
+}
+
+// ------------------------------------------------- control-plane wire
+
+/// Dispatcher → worker control tag (assignments and shutdown).
+/// `u64::MAX` itself is the runtime's clock-gather tag; the serving
+/// control plane sits just below it.  Job traffic can never collide:
+/// its tags come from splitmix64-derived group namespaces.
+pub(crate) const CONTROL_TAG: u64 = u64::MAX - 1;
+
+/// Worker → dispatcher completion-report tag.
+pub(crate) const DONE_TAG: u64 = u64::MAX - 2;
+
+/// Dispatcher → worker control messages.
+#[derive(Clone, Debug)]
+pub(crate) enum Control {
+    /// Run `spec` for the job ids `jobs` (one id, or a batched flood)
+    /// on the subset `ranks` (grid placement order), inside tag scope
+    /// `scope`.  `assign` keys the matching [`MemberDone`]s.
+    Assign {
+        assign: u64,
+        jobs: Vec<u64>,
+        spec: JobSpec,
+        ranks: Vec<usize>,
+        scope: u64,
+    },
+    /// Drain and exit the worker loop.
+    Shutdown,
+}
+
+impl Data for Control {
+    fn byte_size(&self) -> usize {
+        1 + match self {
+            Control::Assign { jobs, spec, ranks, .. } => {
+                16 + jobs.byte_size() + spec.byte_size() + ranks.byte_size()
+            }
+            Control::Shutdown => 0,
+        }
+    }
+}
+
+impl WireData for Control {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Control::Assign { assign, jobs, spec, ranks, scope } => {
+                out.push(0);
+                assign.encode(out);
+                jobs.encode(out);
+                spec.encode(out);
+                ranks.encode(out);
+                scope.encode(out);
+            }
+            Control::Shutdown => out.push(1),
+        }
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(match r.u8()? {
+            0 => Control::Assign {
+                assign: r.u64()?,
+                jobs: Vec::decode(r)?,
+                spec: JobSpec::decode(r)?,
+                ranks: Vec::decode(r)?,
+                scope: r.u64()?,
+            },
+            1 => Control::Shutdown,
+            _ => return Err(WireError::Malformed("unknown Control tag")),
+        })
+    }
+}
+
+/// One member's end-of-assignment report.
+#[derive(Clone, Debug)]
+pub(crate) struct MemberDone {
+    pub assign: u64,
+    pub ok: bool,
+    /// Root cause when `!ok` (panic message, incl. scoped-poison text).
+    pub err: Option<String>,
+    /// The job output — present only on the job root (`ranks[0]`) of a
+    /// successful assignment.
+    pub output: Option<JobOutput>,
+    /// This member's **scoped** counters for the assignment.
+    pub metrics: MetricsSnapshot,
+}
+
+impl Data for MemberDone {
+    fn byte_size(&self) -> usize {
+        8 + 1
+            + self.err.as_ref().map_or(1, |e| 9 + e.len())
+            + self.output.as_ref().map_or(1, |o| 1 + o.byte_size())
+            + 88
+    }
+}
+
+impl WireData for MemberDone {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.assign.encode(out);
+        self.ok.encode(out);
+        self.err.encode(out);
+        self.output.encode(out);
+        let m = &self.metrics;
+        m.msgs_sent.encode(out);
+        m.bytes_sent.encode(out);
+        m.msgs_recv.encode(out);
+        m.bytes_recv.encode(out);
+        m.flops.encode(out);
+        m.comm_time.encode(out);
+        m.compute_time.encode(out);
+        m.collectives.encode(out);
+        m.ew_flops.encode(out);
+        m.ew_time.encode(out);
+        m.overlap_hidden.encode(out);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(MemberDone {
+            assign: r.u64()?,
+            ok: bool::decode(r)?,
+            err: Option::decode(r)?,
+            output: Option::decode(r)?,
+            metrics: MetricsSnapshot {
+                msgs_sent: r.u64()?,
+                bytes_sent: r.u64()?,
+                msgs_recv: r.u64()?,
+                bytes_recv: r.u64()?,
+                flops: f64::decode(r)?,
+                comm_time: f64::decode(r)?,
+                compute_time: f64::decode(r)?,
+                collectives: r.u64()?,
+                ew_flops: f64::decode(r)?,
+                ew_time: f64::decode(r)?,
+                overlap_hidden: f64::decode(r)?,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: WireData + PartialEq + std::fmt::Debug>(v: &T) {
+        let mut buf = Vec::new();
+        v.encode(&mut buf);
+        let mut r = WireReader::new(&buf);
+        let back = T::decode(&mut r).expect("decode");
+        assert_eq!(&back, v);
+        assert_eq!(r.remaining(), 0, "trailing bytes");
+    }
+
+    #[test]
+    fn job_spec_wire_roundtrip() {
+        roundtrip(&JobSpec::Matmul { q: 2, b: 16, seed_a: 7, seed_b: 8 });
+        roundtrip(&JobSpec::MatmulBatch { q: 1, b: 32, pairs: vec![(1, 2), (3, 4)] });
+        roundtrip(&JobSpec::FloydWarshall { q: 2, n: 8, density: 0.4, seed: 5 });
+        roundtrip(&JobSpec::Fault { width: 2, msg: "boom".into() });
+    }
+
+    #[test]
+    fn job_status_wire_roundtrip() {
+        roundtrip(&JobStatus::Queued);
+        roundtrip(&JobStatus::Running);
+        roundtrip(&JobStatus::Done);
+        roundtrip(&JobStatus::Failed("rank 3 died".into()));
+        roundtrip(&JobStatus::Rejected("too wide".into()));
+    }
+
+    #[test]
+    fn job_output_wire_roundtrip() {
+        let m = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        roundtrip(&JobOutput::Mat(m.clone()));
+        roundtrip(&JobOutput::Mats(vec![m.clone(), m]));
+    }
+
+    #[test]
+    fn ranks_needed_and_validation() {
+        assert_eq!(
+            JobSpec::Matmul { q: 3, b: 4, seed_a: 0, seed_b: 0 }.ranks_needed(),
+            9
+        );
+        assert_eq!(JobSpec::Fault { width: 2, msg: String::new() }.ranks_needed(), 2);
+        assert!(JobSpec::Matmul { q: 0, b: 4, seed_a: 0, seed_b: 0 }
+            .invalid_reason()
+            .is_some());
+        assert!(JobSpec::FloydWarshall { q: 3, n: 8, density: 0.5, seed: 1 }
+            .invalid_reason()
+            .is_some());
+        assert!(JobSpec::MatmulBatch { q: 1, b: 8, pairs: vec![] }
+            .invalid_reason()
+            .is_some());
+        assert!(JobSpec::FloydWarshall { q: 2, n: 8, density: 0.5, seed: 1 }
+            .invalid_reason()
+            .is_none());
+    }
+
+    #[test]
+    fn member_done_wire_roundtrip() {
+        let d = MemberDone {
+            assign: 42,
+            ok: false,
+            err: Some("injected".into()),
+            output: Some(JobOutput::Mat(Mat::from_vec(1, 2, vec![5.0, 6.0]))),
+            metrics: MetricsSnapshot {
+                msgs_sent: 3,
+                bytes_sent: 100,
+                flops: 1e6,
+                ..Default::default()
+            },
+        };
+        let mut buf = Vec::new();
+        d.encode(&mut buf);
+        let mut r = WireReader::new(&buf);
+        let back = MemberDone::decode(&mut r).unwrap();
+        assert_eq!(back.assign, 42);
+        assert!(!back.ok);
+        assert_eq!(back.err.as_deref(), Some("injected"));
+        assert_eq!(back.metrics.msgs_sent, 3);
+        assert_eq!(back.metrics.flops, 1e6);
+        assert!(matches!(back.output, Some(JobOutput::Mat(_))));
+    }
+}

@@ -1,0 +1,244 @@
+//! Admission control and request batching — the pure planning half of
+//! the dispatcher, kept free of transports and locks so it unit-tests
+//! in isolation.
+//!
+//! Policies:
+//! * **first fit over FIFO order** — the oldest queued job whose grid
+//!   fits the currently free ranks wins; a wide job at the head does
+//!   not block narrower jobs behind it (and conversely keeps its queue
+//!   position, so it runs as soon as enough ranks drain);
+//! * **batching** — when the winner is a single-rank GEMM
+//!   (`Matmul { q: 1, .. }`), every other queued single-rank GEMM with
+//!   the same block edge coalesces into one
+//!   [`JobSpec::MatmulBatch`](super::JobSpec::MatmulBatch) assignment,
+//!   up to `max_batch` jobs.  A flood of small multiplies then costs
+//!   one admission / assignment / report round-trip instead of one
+//!   per job — the serving-throughput bench measures exactly this.
+
+use std::collections::VecDeque;
+
+use super::JobSpec;
+
+/// One planned assignment: run `spec` for these job ids on `need` ranks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Admission {
+    /// Job ids covered, in queue order (len > 1 only for a batch; the
+    /// k-th output matrix belongs to the k-th id).
+    pub jobs: Vec<u64>,
+    /// What the members actually run (a coalesced batch spec when
+    /// batching kicked in, otherwise the job's own spec).
+    pub spec: JobSpec,
+    /// Ranks the assignment occupies.
+    pub need: usize,
+}
+
+/// The resident rank pool: rank 0 is the dispatcher and is never
+/// handed out; ranks `1..world` serve jobs.
+pub struct Pool {
+    free: Vec<bool>,
+}
+
+impl Pool {
+    pub fn new(world: usize) -> Self {
+        assert!(world >= 2, "serving needs a dispatcher plus at least one pool rank");
+        let mut free = vec![true; world];
+        free[0] = false;
+        Pool { free }
+    }
+
+    /// Pool capacity (world minus the dispatcher).
+    pub fn capacity(&self) -> usize {
+        self.free.len() - 1
+    }
+
+    /// Currently free ranks.
+    pub fn available(&self) -> usize {
+        self.free.iter().filter(|&&f| f).count()
+    }
+
+    /// Claim the `n` lowest-numbered free ranks, or `None` if fewer
+    /// than `n` are free.
+    pub fn take(&mut self, n: usize) -> Option<Vec<usize>> {
+        if n == 0 || self.available() < n {
+            return None;
+        }
+        let mut out = Vec::with_capacity(n);
+        for (r, f) in self.free.iter_mut().enumerate() {
+            if *f {
+                *f = false;
+                out.push(r);
+                if out.len() == n {
+                    break;
+                }
+            }
+        }
+        Some(out)
+    }
+
+    /// Return an assignment's ranks to the pool.
+    pub fn release(&mut self, ranks: &[usize]) {
+        for &r in ranks {
+            debug_assert!(r != 0 && !self.free[r], "releasing rank {r} that was not taken");
+            self.free[r] = true;
+        }
+    }
+}
+
+/// Plan the next assignment from the queue, or `None` when nothing
+/// fits `avail` free ranks.  On `Some`, the planned ids have been
+/// removed from `queue`; the caller owns marking them running and
+/// claiming ranks from the pool.
+///
+/// `queue` pairs each queued id with its spec, FIFO order.
+pub fn plan_next(
+    queue: &mut VecDeque<(u64, JobSpec)>,
+    avail: usize,
+    batching: bool,
+    max_batch: usize,
+) -> Option<Admission> {
+    let pos = queue
+        .iter()
+        .position(|(_, spec)| spec.ranks_needed() <= avail)?;
+    let (id, spec) = queue.remove(pos).expect("position came from this queue");
+
+    // Coalesce a single-rank GEMM with every same-shape sibling still
+    // queued (they all need exactly the one rank the winner claimed).
+    if batching && max_batch > 1 {
+        if let JobSpec::Matmul { q: 1, b, seed_a, seed_b } = spec {
+            let mut jobs = vec![id];
+            let mut pairs = vec![(seed_a, seed_b)];
+            while jobs.len() < max_batch {
+                let sib = queue.iter().position(
+                    |(_, s)| matches!(s, JobSpec::Matmul { q: 1, b: sb, .. } if *sb == b),
+                );
+                let Some(sib) = sib else { break };
+                let (sid, sspec) = queue.remove(sib).expect("position came from this queue");
+                let JobSpec::Matmul { seed_a, seed_b, .. } = sspec else { unreachable!() };
+                jobs.push(sid);
+                pairs.push((seed_a, seed_b));
+            }
+            if jobs.len() > 1 {
+                return Some(Admission {
+                    jobs,
+                    spec: JobSpec::MatmulBatch { q: 1, b, pairs },
+                    need: 1,
+                });
+            }
+            return Some(Admission {
+                jobs,
+                spec: JobSpec::Matmul { q: 1, b, seed_a, seed_b },
+                need: 1,
+            });
+        }
+    }
+
+    let need = spec.ranks_needed();
+    Some(Admission { jobs: vec![id], spec, need })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mm(q: usize, b: usize, s: u64) -> JobSpec {
+        JobSpec::Matmul { q, b, seed_a: s, seed_b: s + 1 }
+    }
+
+    #[test]
+    fn pool_take_release_roundtrip() {
+        let mut p = Pool::new(6);
+        assert_eq!(p.capacity(), 5);
+        assert_eq!(p.available(), 5);
+        let a = p.take(4).unwrap();
+        assert_eq!(a, vec![1, 2, 3, 4]);
+        assert_eq!(p.available(), 1);
+        assert!(p.take(2).is_none(), "only one rank left");
+        let b = p.take(1).unwrap();
+        assert_eq!(b, vec![5]);
+        p.release(&a);
+        assert_eq!(p.available(), 4);
+        let c = p.take(2).unwrap();
+        assert_eq!(c, vec![1, 2], "lowest free ranks first");
+    }
+
+    #[test]
+    fn first_fit_skips_blocked_head() {
+        // a 2x2 job heads the queue but only 2 ranks are free: the
+        // narrow jobs behind it run, the wide one keeps its position
+        let mut q: VecDeque<(u64, JobSpec)> =
+            [(1, mm(2, 8, 0)), (2, mm(1, 8, 10)), (3, mm(2, 8, 20))]
+                .into_iter()
+                .collect();
+        let adm = plan_next(&mut q, 2, false, 8).expect("job 2 fits");
+        assert_eq!(adm.jobs, vec![2]);
+        assert_eq!(adm.need, 1);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q[0].0, 1, "wide job keeps queue priority");
+        // once 4 ranks free up, the wide head runs first
+        let adm = plan_next(&mut q, 4, false, 8).expect("job 1 fits now");
+        assert_eq!(adm.jobs, vec![1]);
+        assert_eq!(adm.need, 4);
+    }
+
+    #[test]
+    fn nothing_fits_returns_none_and_keeps_queue() {
+        let mut q: VecDeque<(u64, JobSpec)> = [(1, mm(2, 8, 0))].into_iter().collect();
+        assert!(plan_next(&mut q, 3, true, 8).is_none());
+        assert_eq!(q.len(), 1, "unplanned jobs stay queued");
+    }
+
+    #[test]
+    fn batching_coalesces_same_shape_gemms() {
+        let mut q: VecDeque<(u64, JobSpec)> = [
+            (1, mm(1, 16, 0)),
+            (2, mm(2, 16, 10)), // different shape: left alone
+            (3, mm(1, 16, 20)),
+            (4, mm(1, 8, 30)), // different block edge: left alone
+            (5, mm(1, 16, 40)),
+        ]
+        .into_iter()
+        .collect();
+        let adm = plan_next(&mut q, 1, true, 8).expect("singles fit one rank");
+        assert_eq!(adm.jobs, vec![1, 3, 5], "same-shape singles coalesce in FIFO order");
+        assert_eq!(adm.need, 1);
+        match &adm.spec {
+            JobSpec::MatmulBatch { q: 1, b: 16, pairs } => {
+                assert_eq!(pairs, &vec![(0, 1), (20, 21), (40, 41)]);
+            }
+            other => panic!("expected a coalesced batch, got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+        assert_eq!(q[0].0, 2);
+        assert_eq!(q[1].0, 4);
+    }
+
+    #[test]
+    fn batching_respects_max_batch() {
+        let mut q: VecDeque<(u64, JobSpec)> =
+            (0..5).map(|i| (i, mm(1, 16, 10 * i))).collect();
+        let adm = plan_next(&mut q, 3, true, 2).unwrap();
+        assert_eq!(adm.jobs.len(), 2, "capped at max_batch");
+        assert_eq!(q.len(), 3, "overflow stays queued");
+    }
+
+    #[test]
+    fn batching_disabled_takes_one_at_a_time() {
+        let mut q: VecDeque<(u64, JobSpec)> =
+            [(1, mm(1, 16, 0)), (2, mm(1, 16, 10))].into_iter().collect();
+        let adm = plan_next(&mut q, 4, false, 8).unwrap();
+        assert_eq!(adm.jobs, vec![1]);
+        assert!(matches!(adm.spec, JobSpec::Matmul { .. }));
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn lone_single_gemm_stays_unbatched_spec() {
+        let mut q: VecDeque<(u64, JobSpec)> = [(7, mm(1, 16, 0))].into_iter().collect();
+        let adm = plan_next(&mut q, 1, true, 8).unwrap();
+        assert_eq!(adm.jobs, vec![7]);
+        assert!(
+            matches!(adm.spec, JobSpec::Matmul { .. }),
+            "no siblings → no batch wrapper"
+        );
+    }
+}

@@ -1,0 +1,854 @@
+//! The resident serving runtime: dispatcher, workers, and the
+//! [`Runtime::serve`] entry point.
+//!
+//! `Runtime::serve(opts, driver)` brings the world up **once** and
+//! keeps it up: rank 0 becomes the *dispatcher*, ranks `1..world` park
+//! in a *worker* loop, and a driver closure (plus, optionally, external
+//! TCP clients — see [`super::client`]) submits jobs through a
+//! [`ServeHandle`].  The dispatcher multiplexes jobs over the pool:
+//!
+//! * **admission** — first queued job whose grid fits the free ranks
+//!   runs; jobs that can never fit are rejected at submit
+//!   ([`scheduler`](super::scheduler));
+//! * **assignment** — members get a [`Control::Assign`] carrying the
+//!   spec, the rank subset, and a fresh **tag scope** derived from the
+//!   job id, so every group the job builds lives in its own namespace
+//!   and concurrent jobs never cross-match (satellite of
+//!   [`Group::partition`](crate::comm::group::Group::partition));
+//! * **completion** — each member reports a [`MemberDone`] with its
+//!   *scoped* metrics delta; the job root's report carries the output;
+//! * **scoped failure** — when a member reports a panic, the
+//!   dispatcher poisons only that job's still-unreported members
+//!   ([`Transport::fail_ranks`]); they unwind promptly, the job is
+//!   marked failed with the root cause, and the ranks rejoin the pool
+//!   after a [`Transport::clear_fail`] on their next assignment.
+//!   In-flight jobs on disjoint rank subsets never notice.
+//!
+//! Control traffic rides reserved high tags ([`CONTROL_TAG`],
+//! [`DONE_TAG`]) just below the runtime's clock-gather tag; job traffic
+//! cannot collide with either.  Workers *poll* for control messages
+//! (probe + short sleep) instead of blocking in `take`, so an idle pool
+//! never trips the transport's deadlock oracle.
+//!
+//! Job latency (submit → terminal) is wall-clock time on the serving
+//! plane — the §2 virtual-time cost model still governs each job's
+//! *internal* communication, but queueing and multiplexing are real.
+//!
+//! [`Transport::fail_ranks`]: crate::comm::transport::Transport::fail_ranks
+//! [`Transport::clear_fail`]: crate::comm::transport::Transport::clear_fail
+
+use std::collections::{HashMap, VecDeque};
+use std::net::SocketAddr;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::scheduler::{plan_next, Pool};
+use super::{client, Control, JobOutput, JobSpec, JobStatus, MemberDone, CONTROL_TAG, DONE_TAG};
+use crate::algos::cannon::mmm_cannon_on;
+use crate::algos::floyd_warshall::{floyd_warshall_par_on, FwSource};
+use crate::comm::group::Group;
+use crate::matrix::block::{Block, BlockSource};
+use crate::matrix::dense::Mat;
+use crate::metrics::{Histogram, MetricsSnapshot, Report};
+use crate::runtime::compute::Compute;
+use crate::spmd::{Ctx, Runtime};
+
+/// Serving-plane configuration.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Coalesce queued same-shape single-rank GEMMs into one
+    /// assignment (see [`super::scheduler::plan_next`]).
+    pub batching: bool,
+    /// Max jobs per coalesced assignment.
+    pub max_batch: usize,
+    /// When set, serve a TCP client endpoint on this address
+    /// (e.g. `"127.0.0.1:0"` for an ephemeral port); external
+    /// processes then submit via [`super::ServeClient`].
+    pub listen: Option<String>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { batching: true, max_batch: 8, listen: None }
+    }
+}
+
+impl ServeOptions {
+    /// Batching disabled — the serving-throughput bench's control arm.
+    pub fn unbatched() -> Self {
+        ServeOptions { batching: false, ..ServeOptions::default() }
+    }
+}
+
+/// End-of-serve accounting, returned by [`Runtime::serve`].
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    pub submitted: u64,
+    pub done: u64,
+    pub failed: u64,
+    pub rejected: u64,
+    /// Assignments the dispatcher issued; `assignments < done` proves
+    /// the batcher coalesced (each assignment covers ≥ 1 job).
+    pub assignments: u64,
+    /// Per-job submit → terminal latency (wall clock).
+    pub latency: Histogram,
+}
+
+/// One job's bookkeeping in the table.
+struct JobEntry {
+    spec: JobSpec,
+    status: JobStatus,
+    output: Option<JobOutput>,
+    /// Scoped per-member metrics deltas (a batched job shares its
+    /// assignment's measurement).
+    member_metrics: Vec<MetricsSnapshot>,
+    submitted: Instant,
+}
+
+struct SharedInner {
+    next_id: u64,
+    queue: VecDeque<u64>,
+    jobs: HashMap<u64, JobEntry>,
+    shutdown: bool,
+    /// Set when the SPMD runtime itself died — every wait unblocks
+    /// with this as the error.
+    dead: Option<String>,
+    listen_enabled: bool,
+    listen_addr: Option<SocketAddr>,
+    report: ServeReport,
+}
+
+/// State shared between the driver thread, the dispatcher rank, and
+/// TCP client connections.
+pub(crate) struct ServeShared {
+    inner: Mutex<SharedInner>,
+    cv: Condvar,
+}
+
+impl ServeShared {
+    fn new(listen_enabled: bool) -> Self {
+        ServeShared {
+            inner: Mutex::new(SharedInner {
+                next_id: 1,
+                queue: VecDeque::new(),
+                jobs: HashMap::new(),
+                shutdown: false,
+                dead: None,
+                listen_enabled,
+                listen_addr: None,
+                report: ServeReport::default(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub(crate) fn set_dead(&self, msg: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.dead.is_none() {
+            inner.dead = Some(msg.to_string());
+        }
+        self.cv.notify_all();
+    }
+
+    pub(crate) fn set_listen_addr(&self, addr: SocketAddr) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.listen_addr = Some(addr);
+        self.cv.notify_all();
+    }
+
+    fn final_report(&self) -> ServeReport {
+        self.inner.lock().unwrap().report.clone()
+    }
+}
+
+/// Submitter's view of the resident pool: submit, poll, wait, shut
+/// down.  Cheap to clone; every clone addresses the same job table.
+#[derive(Clone)]
+pub struct ServeHandle {
+    shared: Arc<ServeShared>,
+    capacity: usize,
+}
+
+const WAIT_POLL: Duration = Duration::from_millis(25);
+
+impl ServeHandle {
+    /// Pool capacity in ranks (world minus the dispatcher).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Submit a job; returns its id immediately.  Malformed jobs and
+    /// jobs whose grid can never fit the pool are rejected here (the
+    /// id still resolves, with [`JobStatus::Rejected`]).
+    pub fn submit(&self, spec: JobSpec) -> u64 {
+        let mut inner = self.shared.inner.lock().unwrap();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.report.submitted += 1;
+        let reject = spec.invalid_reason().or_else(|| {
+            let need = spec.ranks_needed();
+            if need > self.capacity {
+                Some(format!(
+                    "job needs {need} ranks but the pool has {}",
+                    self.capacity
+                ))
+            } else if inner.shutdown {
+                Some("serving runtime is shutting down".into())
+            } else {
+                inner.dead.as_ref().map(|d| format!("serving runtime died: {d}"))
+            }
+        });
+        let status = match reject {
+            Some(reason) => {
+                inner.report.rejected += 1;
+                JobStatus::Rejected(reason)
+            }
+            None => {
+                inner.queue.push_back(id);
+                JobStatus::Queued
+            }
+        };
+        inner.jobs.insert(
+            id,
+            JobEntry {
+                spec,
+                status,
+                output: None,
+                member_metrics: Vec::new(),
+                submitted: Instant::now(),
+            },
+        );
+        self.shared.cv.notify_all();
+        id
+    }
+
+    /// Current lifecycle state, or `None` for an unknown id.
+    pub fn status(&self, id: u64) -> Option<JobStatus> {
+        self.shared.inner.lock().unwrap().jobs.get(&id).map(|e| e.status.clone())
+    }
+
+    /// Block until the job is terminal; `Ok(output)` on success, the
+    /// failure/rejection reason otherwise.  The output is handed over
+    /// exactly once — a second wait on a done job errors.
+    pub fn wait(&self, id: u64) -> Result<JobOutput, String> {
+        let mut inner = self.shared.inner.lock().unwrap();
+        loop {
+            if let Some(dead) = &inner.dead {
+                return Err(format!("serving runtime died: {dead}"));
+            }
+            let Some(entry) = inner.jobs.get(&id) else {
+                return Err(format!("unknown job id {id}"));
+            };
+            match &entry.status {
+                JobStatus::Done => {
+                    let entry = inner.jobs.get_mut(&id).unwrap();
+                    return entry
+                        .output
+                        .take()
+                        .ok_or_else(|| format!("job {id} output already consumed"));
+                }
+                JobStatus::Failed(m) | JobStatus::Rejected(m) => return Err(m.clone()),
+                JobStatus::Queued | JobStatus::Running => {
+                    inner = self.shared.cv.wait_timeout(inner, WAIT_POLL).unwrap().0;
+                }
+            }
+        }
+    }
+
+    /// Aggregate of the job's **scoped** per-member metrics deltas —
+    /// per-job gflops/latency that don't bleed between jobs
+    /// multiplexed on the same ranks (complete once terminal).
+    pub fn job_report(&self, id: u64) -> Option<Report> {
+        let inner = self.shared.inner.lock().unwrap();
+        inner.jobs.get(&id).map(|e| Report::aggregate(&e.member_metrics))
+    }
+
+    /// Serving-plane counters so far (final version returned by
+    /// [`Runtime::serve`]).
+    pub fn report(&self) -> ServeReport {
+        self.shared.inner.lock().unwrap().report.clone()
+    }
+
+    /// Request shutdown: new submits are refused, queued and running
+    /// jobs drain, then the pool exits.
+    pub fn shutdown(&self) {
+        let mut inner = self.shared.inner.lock().unwrap();
+        inner.shutdown = true;
+        self.shared.cv.notify_all();
+    }
+
+    /// Block until someone (a TCP client, another handle clone)
+    /// requested shutdown — the driver body of `repro serve`.
+    pub fn wait_shutdown(&self) {
+        let mut inner = self.shared.inner.lock().unwrap();
+        while !inner.shutdown && inner.dead.is_none() {
+            inner = self.shared.cv.wait_timeout(inner, WAIT_POLL).unwrap().0;
+        }
+    }
+
+    /// The bound TCP client endpoint.  Blocks until the listener is up;
+    /// `None` when no listener was configured (or the runtime died
+    /// first).
+    pub fn listen_addr(&self) -> Option<SocketAddr> {
+        let mut inner = self.shared.inner.lock().unwrap();
+        loop {
+            if !inner.listen_enabled || inner.dead.is_some() {
+                return None;
+            }
+            if let Some(addr) = inner.listen_addr {
+                return Some(addr);
+            }
+            inner = self.shared.cv.wait_timeout(inner, WAIT_POLL).unwrap().0;
+        }
+    }
+
+    pub(crate) fn is_shutdown(&self) -> bool {
+        let inner = self.shared.inner.lock().unwrap();
+        inner.shutdown || inner.dead.is_some()
+    }
+}
+
+impl Runtime {
+    /// Bring the world up **resident**: rank 0 dispatches, ranks
+    /// `1..world` serve, and `driver` runs on a separate thread with a
+    /// [`ServeHandle`] to submit concurrent jobs.  Returns the driver's
+    /// result plus the serving-plane accounting once the pool has
+    /// drained and shut down (the driver returning implies shutdown).
+    ///
+    /// Requires an in-process transport (`"local"` or
+    /// `"tcp-loopback"`) and `world ≥ 2`; external processes submit
+    /// over the TCP client API (`ServeOptions::listen`) instead of
+    /// joining the world.
+    pub fn serve<R, F>(&self, opts: ServeOptions, driver: F) -> crate::Result<(R, ServeReport)>
+    where
+        R: Send,
+        F: FnOnce(&ServeHandle) -> R + Send,
+    {
+        if self.world() < 2 {
+            anyhow::bail!("serving needs world >= 2 (a dispatcher plus at least one pool rank)");
+        }
+        if self.is_multiprocess() {
+            anyhow::bail!(
+                "serving needs an in-process transport (\"local\" or \"tcp-loopback\"); \
+                 external submitters connect over the TCP client API instead"
+            );
+        }
+        let shared = Arc::new(ServeShared::new(opts.listen.is_some()));
+        let handle = ServeHandle { shared: Arc::clone(&shared), capacity: self.world() - 1 };
+
+        let listener = match &opts.listen {
+            Some(addr) => Some(client::spawn_listener(addr, handle.clone(), Arc::clone(&shared))?),
+            None => None,
+        };
+
+        let (run_res, driver_res) = std::thread::scope(|s| {
+            let h2 = handle.clone();
+            let dh = s.spawn(move || {
+                let r = catch_unwind(AssertUnwindSafe(|| driver(&h2)));
+                // driver done (or dead): drain and release the pool
+                h2.shutdown();
+                r
+            });
+            let sh: &ServeShared = &shared;
+            let o = &opts;
+            let rr = catch_unwind(AssertUnwindSafe(|| {
+                self.run(|ctx| {
+                    if ctx.rank == 0 {
+                        dispatcher(ctx, sh, o);
+                    } else {
+                        worker(ctx);
+                    }
+                })
+            }));
+            if let Err(e) = &rr {
+                // unblock every wait with the root cause before the
+                // scope tries to join the driver
+                sh.set_dead(&panic_text(e.as_ref()));
+            }
+            let dr = dh.join().expect("serving driver thread");
+            (rr, dr)
+        });
+        if let Some(l) = listener {
+            let _ = l.join();
+        }
+        let report = shared.final_report();
+        if let Err(e) = run_res {
+            resume_unwind(e);
+        }
+        match driver_res {
+            Ok(r) => Ok((r, report)),
+            Err(e) => resume_unwind(e),
+        }
+    }
+}
+
+/// Tag-scope seed for an assignment: unique per (job, assignment) and
+/// never 0 (0 means "no scope").
+fn job_scope(job: u64, assign: u64) -> u64 {
+    let s = Group::derive_id(job.wrapping_add(0x5E4E_1D), assign);
+    if s == 0 {
+        1
+    } else {
+        s
+    }
+}
+
+fn panic_text(e: &(dyn std::any::Any + Send)) -> String {
+    e.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".into())
+}
+
+/// One in-flight assignment, tracked dispatcher-side.
+struct AssignState {
+    jobs: Vec<u64>,
+    ranks: Vec<usize>,
+    unreported: Vec<usize>,
+    poisoned: bool,
+    err: Option<String>,
+    output: Option<JobOutput>,
+    member_metrics: Vec<MetricsSnapshot>,
+}
+
+const IDLE_POLL: Duration = Duration::from_micros(300);
+
+fn dispatcher(ctx: &Ctx, shared: &ServeShared, opts: &ServeOptions) {
+    let mut pool = Pool::new(ctx.world);
+    let mut running: HashMap<u64, AssignState> = HashMap::new();
+    let mut next_assign: u64 = 1;
+    loop {
+        let mut progress = false;
+
+        // 1. drain completion reports
+        for src in 1..ctx.world {
+            while ctx.transport().probe(0, src, DONE_TAG) {
+                let done: MemberDone = ctx.recv(src, DONE_TAG);
+                progress = true;
+                let finished = {
+                    let st = running
+                        .get_mut(&done.assign)
+                        .expect("completion report for unknown assignment");
+                    st.unreported.retain(|&r| r != src);
+                    st.member_metrics.push(done.metrics);
+                    if let Some(out) = done.output {
+                        st.output = Some(out);
+                    }
+                    if !done.ok {
+                        if st.err.is_none() {
+                            st.err =
+                                Some(done.err.unwrap_or_else(|| "job member failed".into()));
+                        }
+                        if !st.poisoned && !st.unreported.is_empty() {
+                            // scoped abort: only this job's members that
+                            // haven't reported yet — a member whose ok
+                            // report is merely in flight gets poisoned
+                            // too, which is benign (clear_fail precedes
+                            // its next assignment)
+                            st.poisoned = true;
+                            let reason = format!(
+                                "serving: job {} aborted: {}",
+                                st.jobs[0],
+                                st.err.as_deref().unwrap_or("member failed")
+                            );
+                            ctx.transport().fail_ranks(&st.unreported, &reason);
+                        }
+                    }
+                    st.unreported.is_empty()
+                };
+                if finished {
+                    let st = running.remove(&done.assign).unwrap();
+                    pool.release(&st.ranks);
+                    finish_assignment(shared, st);
+                }
+            }
+        }
+
+        // 2. admit queued jobs onto free ranks
+        loop {
+            let planned = {
+                let mut inner = shared.inner.lock().unwrap();
+                let mut snapshot: VecDeque<(u64, JobSpec)> = inner
+                    .queue
+                    .iter()
+                    .map(|&id| (id, inner.jobs[&id].spec.clone()))
+                    .collect();
+                match plan_next(&mut snapshot, pool.available(), opts.batching, opts.max_batch)
+                {
+                    None => None,
+                    Some(adm) => {
+                        inner.queue.retain(|id| !adm.jobs.contains(id));
+                        for id in &adm.jobs {
+                            inner.jobs.get_mut(id).unwrap().status = JobStatus::Running;
+                        }
+                        inner.report.assignments += 1;
+                        Some(adm)
+                    }
+                }
+            };
+            let Some(adm) = planned else { break };
+            shared.cv.notify_all();
+            let ranks = pool.take(adm.need).expect("planner checked the fit");
+            let assign = next_assign;
+            next_assign += 1;
+            let scope = job_scope(adm.jobs[0], assign);
+            for &r in &ranks {
+                ctx.send(
+                    r,
+                    CONTROL_TAG,
+                    Control::Assign {
+                        assign,
+                        jobs: adm.jobs.clone(),
+                        spec: adm.spec.clone(),
+                        ranks: ranks.clone(),
+                        scope,
+                    },
+                );
+            }
+            running.insert(
+                assign,
+                AssignState {
+                    jobs: adm.jobs,
+                    ranks: ranks.clone(),
+                    unreported: ranks,
+                    poisoned: false,
+                    err: None,
+                    output: None,
+                    member_metrics: Vec::new(),
+                },
+            );
+            progress = true;
+        }
+
+        // 3. drain-and-exit once shutdown is requested and the pool is idle
+        if running.is_empty() {
+            let idle_and_done = {
+                let inner = shared.inner.lock().unwrap();
+                inner.shutdown && inner.queue.is_empty()
+            };
+            if idle_and_done {
+                for r in 1..ctx.world {
+                    ctx.send(r, CONTROL_TAG, Control::Shutdown);
+                }
+                return;
+            }
+        }
+
+        if !progress {
+            std::thread::sleep(IDLE_POLL);
+        }
+    }
+}
+
+/// Fold a fully-reported assignment into the job table: split outputs
+/// across the covered jobs, mark them terminal, record latencies.
+fn finish_assignment(shared: &ServeShared, st: AssignState) {
+    let mut inner = shared.inner.lock().unwrap();
+    let n = st.jobs.len();
+    let mut outputs: Vec<Option<JobOutput>> = vec![None; n];
+    let mut err = st.err;
+    if err.is_none() {
+        match st.output {
+            Some(JobOutput::Mats(mats)) if n > 1 => {
+                if mats.len() == n {
+                    for (slot, m) in outputs.iter_mut().zip(mats) {
+                        *slot = Some(JobOutput::Mat(m));
+                    }
+                } else {
+                    err = Some(format!(
+                        "batch produced {} outputs for {} jobs",
+                        mats.len(),
+                        n
+                    ));
+                }
+            }
+            Some(single) if n == 1 => outputs[0] = Some(single),
+            _ => err = Some("job completed without an output".into()),
+        }
+    }
+    for (k, id) in st.jobs.iter().enumerate() {
+        let entry = inner.jobs.get_mut(id).expect("finished job is in the table");
+        entry.member_metrics = st.member_metrics.clone();
+        match &err {
+            Some(e) => entry.status = JobStatus::Failed(e.clone()),
+            None => {
+                entry.output = outputs[k].take();
+                entry.status = JobStatus::Done;
+            }
+        }
+        let lat = entry.submitted.elapsed().as_secs_f64();
+        match &err {
+            Some(_) => inner.report.failed += 1,
+            None => inner.report.done += 1,
+        }
+        inner.report.latency.record(lat);
+    }
+    shared.cv.notify_all();
+}
+
+fn worker(ctx: &Ctx) {
+    loop {
+        // poll, don't block: an idle pool must not trip the transport's
+        // deadlock oracle
+        while !ctx.transport().probe(ctx.rank, 0, CONTROL_TAG) {
+            std::thread::sleep(IDLE_POLL);
+        }
+        match ctx.recv::<Control>(0, CONTROL_TAG) {
+            Control::Shutdown => return,
+            Control::Assign { assign, spec, ranks, scope, .. } => {
+                // recover from a previous job's scoped poison (stale
+                // envelopes from its namespace are dropped with it);
+                // safe because the dispatcher never queues a second
+                // control message before our MemberDone
+                ctx.transport().clear_fail(ctx.rank);
+                let baseline = ctx.metrics.snapshot();
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    ctx.with_tag_scope(scope, || run_job(ctx, &spec, &ranks))
+                }));
+                let metrics = ctx.metrics.snapshot().scoped(&baseline);
+                let done = match result {
+                    Ok(output) => {
+                        MemberDone { assign, ok: true, err: None, output, metrics }
+                    }
+                    Err(e) => MemberDone {
+                        assign,
+                        ok: false,
+                        err: Some(panic_text(e.as_ref())),
+                        output: None,
+                        metrics,
+                    },
+                };
+                ctx.send(0, DONE_TAG, done);
+            }
+        }
+    }
+}
+
+/// Execute one assignment on this member.  Returns the job output on
+/// the job root (`ranks[0]`), `None` elsewhere.
+fn run_job(ctx: &Ctx, spec: &JobSpec, ranks: &[usize]) -> Option<JobOutput> {
+    let root = ctx.rank == ranks[0];
+    match spec {
+        JobSpec::Matmul { q, b, seed_a, seed_b } => {
+            let a = BlockSource::real(*b, *seed_a);
+            let bb = BlockSource::real(*b, *seed_b);
+            let out = mmm_cannon_on(ctx, &Compute::Native, *q, &a, &bb, ranks);
+            gather_result(ctx, ranks, *q, *b, out.c_block).map(JobOutput::Mat)
+        }
+        JobSpec::MatmulBatch { q, b, pairs } => {
+            let mut mats = Vec::with_capacity(pairs.len());
+            for &(sa, sb) in pairs {
+                let a = BlockSource::real(*b, sa);
+                let bb = BlockSource::real(*b, sb);
+                let out = mmm_cannon_on(ctx, &Compute::Native, *q, &a, &bb, ranks);
+                if let Some(m) = gather_result(ctx, ranks, *q, *b, out.c_block) {
+                    mats.push(m);
+                }
+            }
+            if root {
+                Some(JobOutput::Mats(mats))
+            } else {
+                None
+            }
+        }
+        JobSpec::FloydWarshall { q, n, density, seed } => {
+            let src = FwSource::Real { n: *n, density: *density, seed: *seed };
+            let out = floyd_warshall_par_on(ctx, &Compute::Native, *q, &src, ranks);
+            gather_result(ctx, ranks, *q, *n / *q, out.d_block).map(JobOutput::Mat)
+        }
+        JobSpec::Fault { msg, .. } => {
+            let g = Group::new(ctx, ranks.to_vec());
+            let tag = g.next_tag();
+            if g.index() == 0 {
+                panic!("injected fault: {msg}");
+            }
+            // block on a message the dead root will never send; the
+            // dispatcher's scoped poison fails us promptly instead of
+            // burning the 60 s deadlock oracle
+            let _: u64 = ctx.recv(ranks[0], tag);
+            None
+        }
+    }
+}
+
+/// Gather every member's result block to the job root and assemble the
+/// full matrix there.
+fn gather_result(
+    ctx: &Ctx,
+    ranks: &[usize],
+    q: usize,
+    b: usize,
+    my_block: Option<(usize, usize, Block)>,
+) -> Option<Mat> {
+    let g = Group::new(ctx, ranks.to_vec());
+    let (i, j, blk) = my_block.expect("job member without a result block");
+    g.gather(0, (i as u64, j as u64, blk.materialize())).map(|entries| {
+        let mut out = Mat::zeros(q * b, q * b);
+        for (bi, bj, m) in entries {
+            out.set_block(bi as usize, bj as usize, &m);
+        }
+        out
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::cannon::{collect_c, mmm_cannon};
+    use crate::algos::floyd_warshall::{collect_d, floyd_warshall_par};
+    use crate::comm::backend::BackendProfile;
+    use crate::comm::cost::CostParams;
+    use crate::testing::{spmd_run, test_threads};
+
+    fn serving_rt(world: usize) -> Runtime {
+        Runtime::builder()
+            .world(world)
+            .backend_profile(BackendProfile::openmpi_fixed())
+            .cost(CostParams::free())
+            .threads_per_rank(test_threads())
+            .build()
+            .expect("serving runtime config")
+    }
+
+    fn oracle_matmul(q: usize, b: usize, seed_a: u64, seed_b: u64) -> Mat {
+        let res = spmd_run(q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            let a = BlockSource::real(b, seed_a);
+            let bb = BlockSource::real(b, seed_b);
+            mmm_cannon(ctx, &Compute::Native, q, &a, &bb)
+        });
+        collect_c(&res.results, q, b)
+    }
+
+    fn oracle_fw(q: usize, n: usize, density: f64, seed: u64) -> Mat {
+        let res = spmd_run(q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            let src = FwSource::Real { n, density, seed };
+            floyd_warshall_par(ctx, &Compute::Native, q, &src)
+        });
+        collect_d(&res.results, q, n / q)
+    }
+
+    #[test]
+    fn serve_matmul_and_fw_match_single_job_oracles() {
+        let rt = serving_rt(5);
+        let ((c1, d2, c3), report) = rt
+            .serve(ServeOptions::default(), |h| {
+                let j1 = h.submit(JobSpec::Matmul { q: 2, b: 8, seed_a: 11, seed_b: 12 });
+                let j2 =
+                    h.submit(JobSpec::FloydWarshall { q: 2, n: 8, density: 0.45, seed: 7 });
+                let j3 = h.submit(JobSpec::Matmul { q: 1, b: 6, seed_a: 3, seed_b: 4 });
+                let c1 = h.wait(j1).expect("matmul").into_mat();
+                let d2 = h.wait(j2).expect("fw").into_mat();
+                let c3 = h.wait(j3).expect("small matmul").into_mat();
+                (c1, d2, c3)
+            })
+            .expect("serve");
+        // bit-identical to dedicated single-job runs (same seeds, same
+        // deterministic kernels, same grid shape)
+        assert_eq!(c1.data, oracle_matmul(2, 8, 11, 12).data);
+        assert_eq!(d2.data, oracle_fw(2, 8, 0.45, 7).data);
+        assert_eq!(c3.data, oracle_matmul(1, 6, 3, 4).data);
+        assert_eq!(report.submitted, 3);
+        assert_eq!(report.done, 3);
+        assert_eq!(report.failed, 0);
+        assert_eq!(report.latency.count(), 3);
+    }
+
+    #[test]
+    fn admission_rejects_oversized_and_malformed_jobs() {
+        let rt = serving_rt(2); // pool of one rank
+        let ((wide, bad, ok), report) = rt
+            .serve(ServeOptions::default(), |h| {
+                let wide = h.submit(JobSpec::Matmul { q: 2, b: 4, seed_a: 0, seed_b: 1 });
+                let bad = h.submit(JobSpec::Matmul { q: 0, b: 4, seed_a: 0, seed_b: 1 });
+                let ok = h.submit(JobSpec::Matmul { q: 1, b: 4, seed_a: 5, seed_b: 6 });
+                assert!(matches!(h.status(wide), Some(JobStatus::Rejected(_))));
+                (h.wait(wide), h.wait(bad), h.wait(ok).map(JobOutput::into_mat))
+            })
+            .expect("serve");
+        let wide_err = wide.expect_err("4-rank job cannot fit a 1-rank pool");
+        assert!(wide_err.contains("pool has 1"), "{wide_err}");
+        let bad_err = bad.expect_err("q=0 is malformed");
+        assert!(bad_err.contains("q > 0"), "{bad_err}");
+        assert_eq!(ok.expect("fitting job runs").data, oracle_matmul(1, 4, 5, 6).data);
+        assert_eq!(report.rejected, 2);
+        assert_eq!(report.done, 1);
+    }
+
+    #[test]
+    fn batching_coalesces_queued_small_gemms() {
+        let rt = serving_rt(2); // single pool rank forces queueing behind the blocker
+        let (outs, report) = rt
+            .serve(ServeOptions::default(), |h| {
+                // the blocker occupies the only rank for ~milliseconds,
+                // so the five small same-shape jobs all queue — the
+                // planner must coalesce them into one assignment
+                let blocker =
+                    h.submit(JobSpec::Matmul { q: 1, b: 128, seed_a: 1, seed_b: 2 });
+                let ids: Vec<u64> = (0..5)
+                    .map(|k| {
+                        h.submit(JobSpec::Matmul {
+                            q: 1,
+                            b: 8,
+                            seed_a: 100 + k,
+                            seed_b: 200 + k,
+                        })
+                    })
+                    .collect();
+                let _ = h.wait(blocker).expect("blocker");
+                ids.iter().map(|&id| h.wait(id).expect("batched job").into_mat()).collect::<Vec<_>>()
+            })
+            .expect("serve");
+        for (k, m) in outs.iter().enumerate() {
+            let k = k as u64;
+            assert_eq!(
+                m.data,
+                oracle_matmul(1, 8, 100 + k, 200 + k).data,
+                "batched job {k} must stay bit-identical to its solo oracle"
+            );
+        }
+        assert_eq!(report.done, 6);
+        assert!(
+            report.assignments < 6,
+            "6 jobs in {} assignments — batching never coalesced",
+            report.assignments
+        );
+    }
+
+    #[test]
+    fn member_death_fails_only_the_owning_job() {
+        let rt = serving_rt(4); // pool of 3: fault takes 2 ranks, a live job the third
+        let ((bad, good, after), report) = rt
+            .serve(ServeOptions::default(), |h| {
+                let bad =
+                    h.submit(JobSpec::Fault { width: 2, msg: "injected-crash".into() });
+                let good = h.submit(JobSpec::Matmul { q: 1, b: 8, seed_a: 1, seed_b: 2 });
+                let bad_res = h.wait(bad);
+                let good_res = h.wait(good).map(JobOutput::into_mat);
+                // the fault's ranks must rejoin the pool and serve again
+                let after = h.submit(JobSpec::Matmul { q: 1, b: 8, seed_a: 3, seed_b: 4 });
+                let after_res = h.wait(after).map(JobOutput::into_mat);
+                (bad_res, good_res, after_res)
+            })
+            .expect("serve");
+        let err = bad.expect_err("fault job must fail");
+        assert!(err.contains("injected-crash"), "root cause not surfaced: {err}");
+        assert_eq!(
+            good.expect("disjoint in-flight job must complete").data,
+            oracle_matmul(1, 8, 1, 2).data
+        );
+        assert_eq!(
+            after.expect("pool must recover after a failed job").data,
+            oracle_matmul(1, 8, 3, 4).data
+        );
+        assert_eq!(report.failed, 1);
+        assert_eq!(report.done, 2);
+    }
+
+    #[test]
+    fn serve_refuses_multiprocess_and_tiny_worlds() {
+        let rt = serving_rt(1);
+        let err = rt.serve(ServeOptions::default(), |_| ()).unwrap_err();
+        assert!(err.to_string().contains("world >= 2"), "{err}");
+    }
+}

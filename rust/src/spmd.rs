@@ -64,6 +64,15 @@ pub struct Ctx {
     /// used to give every group instance a distinct tag namespace that is
     /// consistent across members without any coordination messages.
     tag_alloc: RefCell<HashMap<u64, u64>>,
+    /// Active tag scope (0 = none).  Inside [`Ctx::with_tag_scope`],
+    /// group-id allocation switches to `scoped_tag_alloc` and folds the
+    /// scope seed into every id, so namespaces depend only on the scope
+    /// seed plus the *scope-local* creation order — not on whatever
+    /// groups this rank created before (which diverges across members of
+    /// a serving job whose peers ran different jobs first).
+    tag_scope: Cell<u64>,
+    /// Scope-local instance counters; cleared at every scope entry.
+    scoped_tag_alloc: RefCell<HashMap<u64, u64>>,
     /// Non-zero while the clock is forked onto a non-blocking operation's
     /// comm timeline (see [`Ctx::with_clock`]) — guards against nesting.
     overlap_depth: Cell<u32>,
@@ -95,6 +104,8 @@ impl Ctx {
             collectives,
             metrics: RankMetrics::new(),
             tag_alloc: RefCell::new(HashMap::new()),
+            tag_scope: Cell::new(0),
+            scoped_tag_alloc: RefCell::new(HashMap::new()),
             overlap_depth: Cell::new(0),
             threads_per_rank: threads_per_rank.max(1),
         }
@@ -373,14 +384,55 @@ impl Ctx {
             sig ^= r as u64;
             sig = sig.wrapping_mul(0x1000_0000_01b3);
         }
-        let mut alloc = self.tag_alloc.borrow_mut();
+        let scope = self.tag_scope.get();
+        let mut alloc = if scope != 0 {
+            self.scoped_tag_alloc.borrow_mut()
+        } else {
+            self.tag_alloc.borrow_mut()
+        };
         let inst = alloc.entry(sig).or_insert(0);
         let id = sig
             .rotate_left(17)
             .wrapping_add(*inst)
             .wrapping_mul(0x9E37_79B9_7F4A_7C15);
         *inst += 1;
-        id
+        if scope != 0 {
+            crate::comm::group::Group::derive_id(id, scope)
+        } else {
+            id
+        }
+    }
+
+    /// Run `f` with group-id allocation keyed to `seed` instead of this
+    /// rank's lifetime counters.
+    ///
+    /// A long-lived rank's `tag_alloc` counters reflect *every* group it
+    /// ever created, so two ranks that ran different histories (serving:
+    /// different prior jobs, or a job that failed partway) would hand
+    /// out different ids for the "same" SPMD group — and collectives
+    /// would deadlock or cross-match.  Inside a scope the counters start
+    /// from zero and every id folds in `seed`, so members of one job
+    /// agree by construction (same seed, same job-local creation order)
+    /// and distinct jobs get collision-spaced namespaces (splitmix64
+    /// avalanche).  Scopes must not nest, and `seed` must be non-zero
+    /// (0 means "unscoped").  Unwind-safe: a panic inside `f` restores
+    /// the unscoped state.
+    pub fn with_tag_scope<R>(&self, seed: u64, f: impl FnOnce() -> R) -> R {
+        assert_ne!(seed, 0, "tag scope seed 0 is reserved for 'unscoped'");
+        assert_eq!(self.tag_scope.get(), 0, "tag scopes must not nest");
+        self.scoped_tag_alloc.borrow_mut().clear();
+        self.tag_scope.set(seed);
+        struct Reset<'a>(&'a Ctx);
+        impl Drop for Reset<'_> {
+            fn drop(&mut self) {
+                self.0.tag_scope.set(0);
+                self.0.scoped_tag_alloc.borrow_mut().clear();
+            }
+        }
+        let guard = Reset(self);
+        let out = f();
+        drop(guard);
+        out
     }
 
     /// The transport carrying this rank's messages (shared memory or
@@ -451,6 +503,15 @@ impl Runtime {
     /// Number of ranks this runtime launches.
     pub fn world(&self) -> usize {
         self.world
+    }
+
+    /// True when this runtime spawns one OS process per rank (the
+    /// `"tcp"` transport).  The serving runtime refuses multi-process
+    /// worlds: its job queue and driver live in one address space, and
+    /// external submitters reach a resident pool over the TCP client
+    /// API ([`crate::serve::ServeClient`]) instead.
+    pub fn is_multiprocess(&self) -> bool {
+        self.transport == TransportChoice::Tcp
     }
 
     /// The configured backend.
@@ -1099,6 +1160,48 @@ mod tests {
         }
         assert_ne!(a0, b0);
         assert_ne!(a0, c0);
+    }
+
+    #[test]
+    fn tag_scope_ids_independent_of_history() {
+        let (b, m) = free();
+        let res = spmd_run(2, b, m, |ctx| {
+            // Divergent histories: rank 0 creates extra groups first.
+            for _ in 0..ctx.rank * 3 + 1 {
+                ctx.alloc_group_id(&[0, 1]);
+            }
+            // Inside a scope, ids depend only on the seed + scope-local
+            // order — identical across ranks despite the divergence.
+            let scoped = ctx.with_tag_scope(0xDEAD_BEEF, || {
+                (ctx.alloc_group_id(&[0, 1]), ctx.alloc_group_id(&[0, 1]))
+            });
+            // A different seed yields a different namespace.
+            let other = ctx.with_tag_scope(0xFEED_F00D, || ctx.alloc_group_id(&[0, 1]));
+            (scoped, other)
+        });
+        let ((a0, b0), o0) = res.results[0];
+        let ((a1, b1), o1) = res.results[1];
+        assert_eq!((a0, b0), (a1, b1), "scoped ids diverged across ranks");
+        assert_eq!(o0, o1);
+        assert_ne!(a0, b0, "scope-local instances must differ");
+        assert_ne!(a0, o0, "different seeds must give different namespaces");
+    }
+
+    #[test]
+    fn tag_scope_restores_after_panic() {
+        let (b, m) = free();
+        let res = spmd_run(1, b, m, |ctx| {
+            let before = ctx.alloc_group_id(&[0]);
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                ctx.with_tag_scope(7, || -> u64 { panic!("job died") })
+            }));
+            assert!(r.is_err());
+            // Unscoped allocation resumes exactly where it left off.
+            let after = ctx.alloc_group_id(&[0]);
+            (before, after)
+        });
+        let (before, after) = res.results[0];
+        assert_ne!(before, after);
     }
 
     #[test]

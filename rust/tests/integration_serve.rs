@@ -1,0 +1,171 @@
+//! Integration tests for the serving runtime: per-job metrics scoping,
+//! scoped failure (a dying member fails only its own job), and the
+//! external TCP client path — the serving-mode counterparts of the
+//! `tcp_failfast` batch-mode story.
+
+use foopar::algos::cannon::{collect_c, mmm_cannon};
+use foopar::matrix::block::BlockSource;
+use foopar::matrix::dense::Mat;
+use foopar::runtime::compute::Compute;
+use foopar::serve::{JobOutput, JobSpec, JobStatus, ServeClient, ServeOptions};
+use foopar::Runtime;
+
+fn serving_rt(world: usize) -> Runtime {
+    Runtime::builder()
+        .world(world)
+        .threads_per_rank(foopar::testing::test_threads())
+        .build()
+        .expect("serving runtime")
+}
+
+fn oracle_matmul(q: usize, b: usize, seed_a: u64, seed_b: u64) -> Mat {
+    let res = Runtime::builder()
+        .world(q * q)
+        .threads_per_rank(foopar::testing::test_threads())
+        .build()
+        .expect("oracle runtime")
+        .run(move |ctx| {
+            let a = BlockSource::real(b, seed_a);
+            let bb = BlockSource::real(b, seed_b);
+            mmm_cannon(ctx, &Compute::Native, q, &a, &bb)
+        });
+    collect_c(&res.results, q, b)
+}
+
+/// Satellite: `MetricsSnapshot::scoped` keeps per-job gflops/latency
+/// from bleeding between jobs multiplexed on the same ranks.  The same
+/// small job must report the exact same flops whether it ran alone or
+/// right after a job 64× its size on the same rank.
+#[test]
+fn per_job_metrics_do_not_bleed_between_jobs() {
+    // solo run: the small job alone on the pool
+    let rt = serving_rt(2);
+    let (solo_flops, _) = rt
+        .serve(ServeOptions::unbatched(), |h| {
+            let id = h.submit(JobSpec::Matmul { q: 1, b: 8, seed_a: 1, seed_b: 2 });
+            h.wait(id).expect("solo job");
+            h.job_report(id).expect("job report").total.flops
+        })
+        .expect("serve");
+    assert!(solo_flops > 0.0, "Compute::Native must charge real flops");
+
+    // mixed run: a big job first, then the same small job, both forced
+    // onto the single pool rank (batching off keeps them separate jobs)
+    let rt = serving_rt(2);
+    let ((big_flops, small_flops), _) = rt
+        .serve(ServeOptions::unbatched(), |h| {
+            let big = h.submit(JobSpec::Matmul { q: 1, b: 32, seed_a: 3, seed_b: 4 });
+            let small = h.submit(JobSpec::Matmul { q: 1, b: 8, seed_a: 1, seed_b: 2 });
+            h.wait(big).expect("big job");
+            h.wait(small).expect("small job");
+            (
+                h.job_report(big).expect("big report").total.flops,
+                h.job_report(small).expect("small report").total.flops,
+            )
+        })
+        .expect("serve");
+    assert!(
+        big_flops > small_flops,
+        "a 32³ multiply must charge more flops than an 8³ one ({big_flops} vs {small_flops})"
+    );
+    assert_eq!(
+        small_flops, solo_flops,
+        "scoped per-job flops must be identical solo vs multiplexed — counters bled"
+    );
+}
+
+/// Satellite: a job whose member dies is marked failed with the root
+/// cause surfaced to the submitter, while in-flight jobs on disjoint
+/// rank subsets complete untouched and the dead job's ranks rejoin the
+/// pool.
+#[test]
+fn rank_death_fails_only_its_job_while_disjoint_jobs_finish() {
+    let rt = serving_rt(8); // pool of 7: fault(2) + 2×2 matmul(4) + single(1) in flight together
+    let ((fault_res, wide_res, single_res, after_res), report) = rt
+        .serve(ServeOptions::default(), |h| {
+            let fault = h.submit(JobSpec::Fault { width: 2, msg: "deliberate-member-death".into() });
+            let wide = h.submit(JobSpec::Matmul { q: 2, b: 8, seed_a: 11, seed_b: 12 });
+            let single = h.submit(JobSpec::Matmul { q: 1, b: 8, seed_a: 21, seed_b: 22 });
+            let fault_res = h.wait(fault);
+            let wide_res = h.wait(wide).map(JobOutput::into_mat);
+            let single_res = h.wait(single).map(JobOutput::into_mat);
+            assert!(matches!(h.status(fault), Some(JobStatus::Failed(_))));
+            // the fault's two ranks must serve again after recovery
+            let after = h.submit(JobSpec::Matmul { q: 2, b: 8, seed_a: 31, seed_b: 32 });
+            let after_res = h.wait(after).map(JobOutput::into_mat);
+            (fault_res, wide_res, single_res, after_res)
+        })
+        .expect("serve");
+    let err = fault_res.expect_err("the fault job must fail");
+    assert!(
+        err.contains("deliberate-member-death"),
+        "submitter must see the root cause, got: {err}"
+    );
+    assert_eq!(
+        wide_res.expect("disjoint 2x2 job must complete").data,
+        oracle_matmul(2, 8, 11, 12).data
+    );
+    assert_eq!(
+        single_res.expect("disjoint single-rank job must complete").data,
+        oracle_matmul(1, 8, 21, 22).data
+    );
+    assert_eq!(
+        after_res.expect("pool must serve again after the failure").data,
+        oracle_matmul(2, 8, 31, 32).data
+    );
+    assert_eq!(report.failed, 1);
+    assert_eq!(report.done, 3);
+}
+
+/// The external submitter path: a TCP client submits mixed jobs,
+/// polls status, awaits bit-identical results, and shuts the pool
+/// down — all over the wire protocol `repro submit` speaks.
+#[test]
+fn tcp_client_round_trip_and_shutdown() {
+    let rt = serving_rt(5);
+    let opts = ServeOptions {
+        listen: Some("127.0.0.1:0".into()),
+        ..ServeOptions::default()
+    };
+    let ((got, status_unknown), report) = rt
+        .serve(opts, |h| {
+            let addr = h.listen_addr().expect("listener must come up");
+            let mut client = ServeClient::connect(addr).expect("connect");
+            let a = client
+                .submit(JobSpec::Matmul { q: 2, b: 8, seed_a: 41, seed_b: 42 })
+                .expect("submit");
+            let b = client
+                .submit(JobSpec::Matmul { q: 0, b: 8, seed_a: 0, seed_b: 0 })
+                .expect("submit malformed");
+            let got = client.wait(a).expect("wire wait").expect("job result").into_mat();
+            let bad = client.wait(b).expect("wire wait");
+            assert!(bad.is_err(), "malformed job must surface its rejection");
+            let status_unknown = client.status(9999).expect("status call");
+            client.shutdown().expect("shutdown request");
+            // the driver-side view observes the client's shutdown
+            h.wait_shutdown();
+            (got, status_unknown)
+        })
+        .expect("serve");
+    assert_eq!(got.data, oracle_matmul(2, 8, 41, 42).data);
+    assert_eq!(status_unknown, None);
+    assert_eq!(report.done, 1);
+    assert_eq!(report.rejected, 1);
+}
+
+/// A job's output is handed over exactly once; terminal status stays
+/// queryable afterwards.
+#[test]
+fn wait_consumes_output_once() {
+    let rt = serving_rt(2);
+    let ((first, second, status), _) = rt
+        .serve(ServeOptions::default(), |h| {
+            let id = h.submit(JobSpec::Matmul { q: 1, b: 8, seed_a: 5, seed_b: 6 });
+            (h.wait(id), h.wait(id), h.status(id))
+        })
+        .expect("serve");
+    assert!(first.is_ok());
+    let err = second.expect_err("second wait must not fabricate an output");
+    assert!(err.contains("already consumed"), "{err}");
+    assert_eq!(status, Some(JobStatus::Done));
+}
