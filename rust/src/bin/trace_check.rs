@@ -1,0 +1,92 @@
+//! `trace_check` — the CI trace-smoke validator.
+//!
+//! Structurally validates one or more Chrome-trace JSON files produced
+//! by `repro ... --trace out.json` (or `FOOPAR_TRACE=out.json`) and
+//! prints what it found.  Exits non-zero if any file fails, so the CI
+//! trace-smoke job trips on malformed exports the same way the bench
+//! gate trips on regressions.  Driven by `scripts/trace_check`.
+//!
+//! ```text
+//! trace_check <trace.json>... [--strict] [--min-ranks N]
+//! ```
+//!
+//! `--strict` additionally requires every flow send to pair with a
+//! receive — correct for whole-world traces, too strict for partial
+//! ones.  `--min-ranks` asserts the export covers at least N Perfetto
+//! processes (CI passes the run's world size).
+
+use std::process::ExitCode;
+
+use foopar::cli::Args;
+use foopar::trace::validate_chrome;
+
+/// Validate one file; returns the human-readable summary line.
+fn check(path: &str, strict: bool, min_ranks: usize) -> Result<String, String> {
+    let json = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let s = validate_chrome(&json, strict).map_err(|e| format!("{path}: {e}"))?;
+    if s.x_events == 0 {
+        return Err(format!("{path}: no complete (ph:X) span events"));
+    }
+    if s.ranks < min_ranks {
+        return Err(format!(
+            "{path}: trace covers {} rank(s), expected at least {min_ranks}",
+            s.ranks
+        ));
+    }
+    Ok(format!(
+        "{path}: OK — {} events ({} spans), {} ranks, {} threads, {} flow pairs{}",
+        s.events,
+        s.x_events,
+        s.ranks,
+        s.threads,
+        s.flow_pairs,
+        if s.unmatched_send > 0 {
+            format!(", {} unmatched sends", s.unmatched_send)
+        } else {
+            String::new()
+        }
+    ))
+}
+
+fn main() -> ExitCode {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("trace_check: {e:#}");
+            return ExitCode::from(2);
+        }
+    };
+    let strict = args.has("strict");
+    let min_ranks = match args.get_usize("min-ranks", 1) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("trace_check: {e:#}");
+            return ExitCode::from(2);
+        }
+    };
+    // the flag grammar files the first bare argument under `subcommand`
+    let mut paths = args.positional.clone();
+    if let Some(first) = args.subcommand.clone() {
+        paths.insert(0, first);
+    }
+    if paths.is_empty() {
+        eprintln!("usage: trace_check <trace.json>... [--strict] [--min-ranks N]");
+        return ExitCode::from(2);
+    }
+
+    let mut failed = false;
+    for path in &paths {
+        match check(path, strict, min_ranks) {
+            Ok(line) => println!("{line}"),
+            Err(e) => {
+                eprintln!("trace_check FAIL: {e}");
+                failed = true;
+            }
+        }
+    }
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

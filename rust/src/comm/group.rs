@@ -24,6 +24,7 @@ use crate::comm::message::Msg;
 use crate::comm::nb::{BarrierOp, GatherOp, Op, ReduceOp, VecOp};
 use crate::comm::wire::WireData;
 use crate::spmd::Ctx;
+use crate::trace;
 
 /// An ordered subset of world ranks with a private tag namespace.
 pub struct Group<'a> {
@@ -260,15 +261,37 @@ impl<'a> Group<'a> {
     // `DistVar` (and user code) call; the algorithm behind each op is the
     // active backend's choice.
 
+    /// Open a Collective-category trace span annotated with the virtual
+    /// clock at entry; each collective stamps `v_end` on completion so
+    /// the critical-path report can print measured-vs-modeled deltas.
+    fn coll_span(&self, name: &'static str) -> trace::SpanGuard {
+        let mut sp = trace::span(name, trace::Category::Collective);
+        if sp.is_active() {
+            sp.arg("v_start", self.ctx.now());
+        }
+        sp
+    }
+
+    /// Stamp the collective's exit virtual clock (no-op when inactive).
+    fn coll_end(&self, sp: &mut trace::SpanGuard) {
+        if sp.is_active() {
+            sp.arg("v_end", self.ctx.now());
+        }
+    }
+
     /// One-to-all broadcast from group rank `root`.  `value` must be
     /// `Some` at the root (others may pass `None`).  Returns the value
     /// everywhere.  Θ(log p (t_s + t_w m)) on tree backends.
     pub fn bcast<T: WireData + Clone>(&self, root: usize, value: Option<T>) -> T {
         self.ctx.metrics.on_collective();
-        self.ctx
+        let mut sp = self.coll_span("bcast");
+        let out = self
+            .ctx
             .collectives()
             .bcast(self, root, value.map(Msg::cloneable))
-            .downcast::<T>()
+            .downcast::<T>();
+        self.coll_end(&mut sp);
+        out
     }
 
     /// All-to-one reduction with associative `op`, delivered at group
@@ -277,93 +300,127 @@ impl<'a> Group<'a> {
     /// (paper Table 1).
     pub fn reduce<T: WireData>(&self, root: usize, value: T, op: impl Fn(T, T) -> T) -> Option<T> {
         self.ctx.metrics.on_collective();
+        let mut sp = self.coll_span("reduce");
         let erased = |a: Msg, b: Msg| Msg::new(op(a.downcast::<T>(), b.downcast::<T>()));
-        self.ctx
+        let out = self
+            .ctx
             .collectives()
             .reduce(self, root, Msg::new(value), &erased)
-            .map(|m| m.downcast::<T>())
+            .map(|m| m.downcast::<T>());
+        self.coll_end(&mut sp);
+        out
     }
 
     /// Reduce to group rank 0 then broadcast: everyone gets the folded
     /// value.
     pub fn allreduce<T: WireData + Clone>(&self, value: T, op: impl Fn(T, T) -> T) -> T {
         self.ctx.metrics.on_collective();
+        let mut sp = self.coll_span("allreduce");
         let erased = |a: Msg, b: Msg| Msg::cloneable(op(a.downcast::<T>(), b.downcast::<T>()));
-        self.ctx
+        let out = self
+            .ctx
             .collectives()
             .allreduce(self, Msg::cloneable(value), &erased)
-            .downcast::<T>()
+            .downcast::<T>();
+        self.coll_end(&mut sp);
+        out
     }
 
     /// All-to-all broadcast: every member contributes one value; everyone
     /// obtains the full group-ordered vector.
     pub fn allgather<T: WireData + Clone>(&self, value: T) -> Vec<T> {
         self.ctx.metrics.on_collective();
-        self.ctx
+        let mut sp = self.coll_span("allgather");
+        let out = self
+            .ctx
             .collectives()
             .allgather(self, Msg::cloneable(value))
             .into_iter()
             .map(|m| m.downcast::<T>())
-            .collect()
+            .collect();
+        self.coll_end(&mut sp);
+        out
     }
 
     /// Personalized all-to-all: `items[j]` is delivered to group rank
     /// `j`; returns the vector whose i-th entry came from group rank `i`.
     pub fn alltoall<T: WireData>(&self, items: Vec<T>) -> Vec<T> {
         self.ctx.metrics.on_collective();
+        let mut sp = self.coll_span("alltoall");
         let items = items.into_iter().map(Msg::new).collect();
-        self.ctx
+        let out = self
+            .ctx
             .collectives()
             .alltoall(self, items)
             .into_iter()
             .map(|m| m.downcast::<T>())
-            .collect()
+            .collect();
+        self.coll_end(&mut sp);
+        out
     }
 
     /// Cyclic shift by `delta`: my value goes to group rank
     /// `(me+delta) mod p`; I receive from `(me−delta) mod p`.
     pub fn shift<T: WireData>(&self, delta: isize, value: T) -> T {
         self.ctx.metrics.on_collective();
-        self.ctx
+        let mut sp = self.coll_span("shift");
+        let out = self
+            .ctx
             .collectives()
             .shift(self, delta, Msg::new(value))
-            .downcast::<T>()
+            .downcast::<T>();
+        self.coll_end(&mut sp);
+        out
     }
 
     /// Synchronize all members.
     pub fn barrier(&self) {
         self.ctx.metrics.on_collective();
+        let mut sp = self.coll_span("barrier");
         self.ctx.collectives().barrier(self);
+        self.coll_end(&mut sp);
     }
 
     /// All-to-one gather: root obtains the group-ordered vector.
     pub fn gather<T: WireData>(&self, root: usize, value: T) -> Option<Vec<T>> {
         self.ctx.metrics.on_collective();
-        self.ctx
+        let mut sp = self.coll_span("gather");
+        let out = self
+            .ctx
             .collectives()
             .gather(self, root, Msg::new(value))
-            .map(|v| v.into_iter().map(|m| m.downcast::<T>()).collect())
+            .map(|v| v.into_iter().map(|m| m.downcast::<T>()).collect());
+        self.coll_end(&mut sp);
+        out
     }
 
     /// One-to-all scatter: root distributes `values[i]` to member i.
     pub fn scatter<T: WireData>(&self, root: usize, values: Option<Vec<T>>) -> T {
         self.ctx.metrics.on_collective();
+        let mut sp = self.coll_span("scatter");
         let values = values.map(|v| v.into_iter().map(Msg::new).collect());
-        self.ctx
+        let out = self
+            .ctx
             .collectives()
             .scatter(self, root, values)
-            .downcast::<T>()
+            .downcast::<T>();
+        self.coll_end(&mut sp);
+        out
     }
 
     /// Inclusive prefix scan: member i obtains `v_0 ⊕ v_1 ⊕ … ⊕ v_i` in
     /// group order.  `op` must be associative.
     pub fn scan<T: WireData + Clone>(&self, value: T, op: impl Fn(T, T) -> T) -> T {
         self.ctx.metrics.on_collective();
+        let mut sp = self.coll_span("scan");
         let erased = |a: Msg, b: Msg| Msg::cloneable(op(a.downcast::<T>(), b.downcast::<T>()));
-        self.ctx
+        let out = self
+            .ctx
             .collectives()
             .scan(self, Msg::cloneable(value), &erased)
-            .downcast::<T>()
+            .downcast::<T>();
+        self.coll_end(&mut sp);
+        out
     }
 
     // ---------------------------------------- non-blocking collectives
@@ -379,10 +436,12 @@ impl<'a> Group<'a> {
     /// Non-blocking [`Group::bcast`].
     pub fn bcast_start<T: WireData + Clone>(&self, root: usize, value: Option<T>) -> Op<'_, T> {
         self.ctx.metrics.on_collective();
+        let mut sp = self.coll_span("bcast_start");
         let raw = self
             .ctx
             .collectives()
             .bcast_start(self, root, value.map(Msg::cloneable));
+        self.coll_end(&mut sp);
         Op::new(self, raw)
     }
 
@@ -394,12 +453,14 @@ impl<'a> Group<'a> {
         op: impl Fn(T, T) -> T + 'g,
     ) -> ReduceOp<'g, T> {
         self.ctx.metrics.on_collective();
+        let mut sp = self.coll_span("reduce_start");
         let erased: OwnedReduceFn<'g> =
             Box::new(move |a: Msg, b: Msg| Msg::new(op(a.downcast::<T>(), b.downcast::<T>())));
         let raw = self
             .ctx
             .collectives()
             .reduce_start(self, root, Msg::new(value), erased);
+        self.coll_end(&mut sp);
         ReduceOp::new(self, raw)
     }
 
@@ -410,6 +471,7 @@ impl<'a> Group<'a> {
         op: impl Fn(T, T) -> T + 'g,
     ) -> Op<'g, T> {
         self.ctx.metrics.on_collective();
+        let mut sp = self.coll_span("allreduce_start");
         let erased: OwnedReduceFn<'g> = Box::new(move |a: Msg, b: Msg| {
             Msg::cloneable(op(a.downcast::<T>(), b.downcast::<T>()))
         });
@@ -417,21 +479,26 @@ impl<'a> Group<'a> {
             .ctx
             .collectives()
             .allreduce_start(self, Msg::cloneable(value), erased);
+        self.coll_end(&mut sp);
         Op::new(self, raw)
     }
 
     /// Non-blocking [`Group::allgather`].
     pub fn allgather_start<T: WireData + Clone>(&self, value: T) -> VecOp<'_, T> {
         self.ctx.metrics.on_collective();
+        let mut sp = self.coll_span("allgather_start");
         let raw = self.ctx.collectives().allgather_start(self, Msg::cloneable(value));
+        self.coll_end(&mut sp);
         VecOp::new(self, raw)
     }
 
     /// Non-blocking [`Group::alltoall`].
     pub fn alltoall_start<T: WireData>(&self, items: Vec<T>) -> VecOp<'_, T> {
         self.ctx.metrics.on_collective();
+        let mut sp = self.coll_span("alltoall_start");
         let items = items.into_iter().map(Msg::new).collect();
         let raw = self.ctx.collectives().alltoall_start(self, items);
+        self.coll_end(&mut sp);
         VecOp::new(self, raw)
     }
 
@@ -439,29 +506,37 @@ impl<'a> Group<'a> {
     /// pipelined Cannon/DNS variants.
     pub fn shift_start<T: WireData>(&self, delta: isize, value: T) -> Op<'_, T> {
         self.ctx.metrics.on_collective();
+        let mut sp = self.coll_span("shift_start");
         let raw = self.ctx.collectives().shift_start(self, delta, Msg::new(value));
+        self.coll_end(&mut sp);
         Op::new(self, raw)
     }
 
     /// Non-blocking [`Group::barrier`].
     pub fn barrier_start(&self) -> BarrierOp<'_> {
         self.ctx.metrics.on_collective();
+        let mut sp = self.coll_span("barrier_start");
         let raw = self.ctx.collectives().barrier_start(self);
+        self.coll_end(&mut sp);
         BarrierOp::new(self, raw)
     }
 
     /// Non-blocking [`Group::gather`].
     pub fn gather_start<T: WireData>(&self, root: usize, value: T) -> GatherOp<'_, T> {
         self.ctx.metrics.on_collective();
+        let mut sp = self.coll_span("gather_start");
         let raw = self.ctx.collectives().gather_start(self, root, Msg::new(value));
+        self.coll_end(&mut sp);
         GatherOp::new(self, raw)
     }
 
     /// Non-blocking [`Group::scatter`].
     pub fn scatter_start<T: WireData>(&self, root: usize, values: Option<Vec<T>>) -> Op<'_, T> {
         self.ctx.metrics.on_collective();
+        let mut sp = self.coll_span("scatter_start");
         let values = values.map(|v| v.into_iter().map(Msg::new).collect());
         let raw = self.ctx.collectives().scatter_start(self, root, values);
+        self.coll_end(&mut sp);
         Op::new(self, raw)
     }
 
@@ -472,6 +547,7 @@ impl<'a> Group<'a> {
         op: impl Fn(T, T) -> T + 'g,
     ) -> Op<'g, T> {
         self.ctx.metrics.on_collective();
+        let mut sp = self.coll_span("scan_start");
         let erased: OwnedReduceFn<'g> = Box::new(move |a: Msg, b: Msg| {
             Msg::cloneable(op(a.downcast::<T>(), b.downcast::<T>()))
         });
@@ -479,6 +555,7 @@ impl<'a> Group<'a> {
             .ctx
             .collectives()
             .scan_start(self, Msg::cloneable(value), erased);
+        self.coll_end(&mut sp);
         Op::new(self, raw)
     }
 }

@@ -241,11 +241,20 @@ impl<'f> GroupOp<'f> {
             "pending operation waited on a different group than it started on"
         );
         let ctx = g.ctx();
+        // The composition path (`finish_inline`) is deliberately not
+        // spanned: an enclosing handle's wait already covers it.
+        let mut sp = crate::trace::span("wait", crate::trace::Category::Collective);
+        if sp.is_active() {
+            sp.arg("v_start", ctx.now());
+        }
         let (out, comm_end) = match self.phase {
             Phase::Ready(out) => (out, self.comm_clock),
             Phase::Deferred(f) => ctx.with_clock(self.comm_clock, || f(g)),
         };
         ctx.finish_overlap(self.t0, comm_end);
+        if sp.is_active() {
+            sp.arg("v_end", ctx.now());
+        }
         out
     }
 }

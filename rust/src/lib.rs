@@ -41,6 +41,7 @@ pub mod runtime;
 pub mod serve;
 pub mod spmd;
 pub mod testing;
+pub mod trace;
 
 pub mod algos;
 pub mod experiments;

@@ -23,6 +23,7 @@ use foopar::config::MachineConfig;
 use foopar::experiments::{fig5, isoeff, overhead, peak, table1};
 use foopar::graph::{floyd_warshall_seq, Graph};
 use foopar::matrix::block::BlockSource;
+use foopar::metrics::JsonWriter;
 use foopar::runtime::compute::Compute;
 use foopar::runtime::engine::EngineServer;
 use foopar::serve::{JobOutput, JobSpec, ServeClient, ServeOptions};
@@ -65,6 +66,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("overhead") => cmd_overhead(args),
         Some("serve") => cmd_serve(args),
         Some("submit") => cmd_submit(args),
+        Some("stats") => cmd_stats(args),
         _ => args.unknown(),
     }
 }
@@ -76,18 +78,25 @@ repro — FooPar reproduction (rust + JAX/Pallas AOT via PJRT)
   peak     [--iters N] [--machine M] single-rank empirical peak: seed vs packed
                                     kernel at 1/2/4 threads, efficiency vs peak
   mmm      --p P [--n N] [--algo dns|generic|baseline] [--mode real|modeled] [--machine M]
-           [--transport local|tcp-loopback] [--backend B] [--threads T]
+           [--transport local|tcp-loopback] [--backend B] [--threads T] [--trace OUT.json]
   apsp     --p P [--n N] [--algo fw|squaring] [--mode real|modeled] [--threads T]
+           [--trace OUT.json]
   table1   [--machine M]            Table 1: measured op runtimes vs formulas
   fig5     [--machine carver|horseshoe6]   Fig. 5 efficiency curves
   isoeff   [--algo generic|dns|fw] [--target E]   isoefficiency verification
   overhead [--machine M]            framework vs hand-coded DNS
   serve    [--world N] [--listen H:P] [--transport local|tcp-loopback] [--threads T]
-           [--no-batch] [--max-batch K]   resident serving pool + TCP submit endpoint
+           [--no-batch] [--max-batch K] [--trace OUT.json]
+                                    resident serving pool + TCP submit endpoint
   submit   [--addr H:P] [--job matmul|fw] [--q Q] [--b B] [--n N] [--density D]
-           [--seed-a S] [--seed-b S] [--seed S] [--count K] [--verify] [--shutdown]
-                                    submit jobs to (and optionally stop) a resident pool
-  backends                          list registered communication backends";
+           [--seed-a S] [--seed-b S] [--seed S] [--count K] [--verify] [--json]
+           [--shutdown]             submit jobs to (and optionally stop) a resident pool
+  stats    [--addr H:P] [--json]    live pool statistics: occupancy, queue depth,
+                                    latency/queue-wait quantiles, per-job gflops
+  backends                          list registered communication backends
+
+Tracing: any command also honours FOOPAR_TRACE=out.json; --trace writes a
+Chrome-trace/Perfetto JSON plus a critical-path report at teardown.";
 
 /// Parse a `--mode` flag into a Compute (PJRT-real prefers artifacts).
 fn compute_for(mode: &str, machine: &MachineConfig) -> Result<Compute> {
@@ -228,13 +237,16 @@ fn cmd_mmm(args: &Args) -> Result<()> {
         );
     }
     let threads = args.get_usize("threads", machine.threads_per_rank)?;
-    let rt = Runtime::builder()
+    let mut builder = Runtime::builder()
         .world(p)
         .backend(args.get_str("backend", "openmpi-fixed"))
         .transport(transport)
         .machine_config(&machine)
-        .threads_per_rank(threads)
-        .build()?;
+        .threads_per_rank(threads);
+    if let Some(path) = args.get("trace") {
+        builder = builder.trace(path);
+    }
+    let rt = builder.build()?;
 
     let (t_parallel, wall, label) = match algo {
         "dns" => {
@@ -301,12 +313,15 @@ fn cmd_apsp(args: &Args) -> Result<()> {
     };
     let algo = args.get_str("algo", "fw");
     let threads = args.get_usize("threads", machine.threads_per_rank)?;
-    let rt = Runtime::builder()
+    let mut builder = Runtime::builder()
         .world(p)
         .backend(args.get_str("backend", "openmpi-fixed"))
         .machine_config(&machine)
-        .threads_per_rank(threads)
-        .build()?;
+        .threads_per_rank(threads);
+    if let Some(path) = args.get("trace") {
+        builder = builder.trace(path);
+    }
+    let rt = builder.build()?;
 
     let t_parallel = match algo {
         "fw" => {
@@ -397,11 +412,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     opts.max_batch = args.get_usize("max-batch", opts.max_batch)?;
 
-    let rt = Runtime::builder()
+    let mut builder = Runtime::builder()
         .world(world)
         .transport(transport)
-        .threads_per_rank(threads)
-        .build()?;
+        .threads_per_rank(threads);
+    if let Some(path) = args.get("trace") {
+        builder = builder.trace(path);
+    }
+    let rt = builder.build()?;
     println!(
         "serving: world {world} (pool of {}), transport {transport}, batching {}",
         world - 1,
@@ -423,6 +441,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.latency.p99() * 1e3,
         report.latency.mean() * 1e3
     );
+    println!(
+        "serving: queue-wait p50 {:.2} ms, p99 {:.2} ms, mean {:.2} ms",
+        report.queue_wait.p50() * 1e3,
+        report.queue_wait.p99() * 1e3,
+        report.queue_wait.mean() * 1e3
+    );
+    Ok(())
+}
+
+/// `repro stats` — query a live pool for occupancy, queue depth,
+/// latency/queue-wait quantiles, and the per-job roster.
+fn cmd_stats(args: &Args) -> Result<()> {
+    let addr = args.get_str("addr", "127.0.0.1:7199");
+    let mut client = ServeClient::connect(addr)?;
+    let snap = client.stats()?;
+    if args.has("json") {
+        println!("{}", snap.to_json());
+    } else {
+        print!("{}", snap.render());
+    }
     Ok(())
 }
 
@@ -435,6 +473,7 @@ fn cmd_submit(args: &Args) -> Result<()> {
     if let Some(kind) = args.get("job") {
         let count = args.get_usize("count", 1)? as u64;
         let verify = args.has("verify");
+        let json = args.has("json");
         let q = args.get_usize("q", 2)?;
         let mut ids = Vec::new();
         for k in 0..count {
@@ -456,17 +495,55 @@ fn cmd_submit(args: &Args) -> Result<()> {
             let id = client.submit(spec.clone())?;
             ids.push((id, spec));
         }
+        let mut outcomes = Vec::new();
         for (id, spec) in ids {
-            match client.wait(id)? {
-                Ok(out) => {
-                    if verify {
-                        verify_against_oracle(&spec, &out)?;
-                        println!("job {id} ({}): OK, bit-identical to single-job oracle", spec.kind());
-                    } else {
-                        println!("job {id} ({}): OK", spec.kind());
-                    }
+            let res = client.wait(id)?;
+            if let Ok(out) = &res {
+                if verify {
+                    verify_against_oracle(&spec, out)?;
                 }
-                Err(e) => bail!("job {id} ({}) failed: {e}", spec.kind()),
+            }
+            if !json {
+                match &res {
+                    Ok(_) if verify => println!(
+                        "job {id} ({}): OK, bit-identical to single-job oracle",
+                        spec.kind()
+                    ),
+                    Ok(_) => println!("job {id} ({}): OK", spec.kind()),
+                    Err(e) => bail!("job {id} ({}) failed: {e}", spec.kind()),
+                }
+            }
+            outcomes.push((id, spec, res.err()));
+        }
+        if json {
+            // enrich each outcome with the server's roster row — the
+            // scoped per-job gflops/queue-wait only the dispatcher knows
+            let snap = client.stats()?;
+            let mut w = JsonWriter::new();
+            w.begin_arr();
+            for (id, spec, err) in &outcomes {
+                w.begin_obj();
+                w.key("id").uint(*id);
+                w.key("kind").str_val(spec.kind());
+                w.key("ok").boolean(err.is_none());
+                if let Some(e) = err {
+                    w.key("error").str_val(e);
+                }
+                if let Some(row) = snap.jobs.iter().find(|j| j.id == *id) {
+                    w.key("status").str_val(&row.status);
+                    w.key("gflops").num(row.gflops);
+                    w.key("queue_wait_secs").num(if row.queue_wait_secs < 0.0 {
+                        f64::NAN // → null
+                    } else {
+                        row.queue_wait_secs
+                    });
+                }
+                w.end_obj();
+            }
+            w.end_arr();
+            println!("{}", w.finish());
+            if let Some((id, spec, Some(e))) = outcomes.iter().find(|(_, _, err)| err.is_some()) {
+                bail!("job {id} ({}) failed: {e}", spec.kind());
             }
         }
     }

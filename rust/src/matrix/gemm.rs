@@ -41,6 +41,7 @@
 
 use super::dense::Mat;
 use super::par;
+use crate::trace;
 
 /// Microkernel tile rows (register blocking).
 pub const MR: usize = 8;
@@ -324,6 +325,12 @@ pub fn matmul_acc_into(c: &mut Mat, a: &Mat, b: &Mat) {
 pub fn matmul_acc_into_mt(c: &mut Mat, a: &Mat, b: &Mat, threads: usize) {
     assert_eq!(a.cols, b.rows, "inner dims: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    let mut sp = trace::span("gemm", trace::Category::Kernel);
+    if sp.is_active() {
+        sp.arg("m", a.rows as f64);
+        sp.arg("k", a.cols as f64);
+        sp.arg("n", b.cols as f64);
+    }
     banded_product(Semiring::Dense, c, a, b, threads);
 }
 
@@ -362,6 +369,10 @@ fn ew_threads(len: usize, threads: usize) -> usize {
 #[allow(clippy::uninit_vec)] // chunks below write every slot before set_len
 fn ew_binary_mt(a: &Mat, b: &Mat, threads: usize, op: impl Fn(f32, f32) -> f32 + Sync) -> Mat {
     assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    let mut sp = trace::span("elementwise", trace::Category::Kernel);
+    if sp.is_active() {
+        sp.arg("elems", (a.rows * a.cols) as f64);
+    }
     let len = a.data.len();
     if ew_threads(len, threads) <= 1 {
         let data = a.data.iter().zip(&b.data).map(|(x, y)| op(*x, *y)).collect();
@@ -430,6 +441,12 @@ pub fn minplus_matmul(a: &Mat, b: &Mat) -> Mat {
 /// and blocking by construction.
 pub fn minplus_matmul_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
     assert_eq!(a.cols, b.rows);
+    let mut sp = trace::span("gemm_tropical", trace::Category::Kernel);
+    if sp.is_active() {
+        sp.arg("m", a.rows as f64);
+        sp.arg("k", a.cols as f64);
+        sp.arg("n", b.cols as f64);
+    }
     let mut out = Mat::filled(a.rows, b.cols, INF);
     banded_product(Semiring::Tropical, &mut out, a, b, threads);
     out
@@ -448,6 +465,11 @@ pub fn fw_update_into(d: &mut Mat, ik: &[f32], kj: &[f32]) {
 pub fn fw_update_into_mt(d: &mut Mat, ik: &[f32], kj: &[f32], threads: usize) {
     assert_eq!(ik.len(), d.cols);
     assert_eq!(kj.len(), d.rows);
+    let mut sp = trace::span("fw_update", trace::Category::Kernel);
+    if sp.is_active() {
+        sp.arg("rows", d.rows as f64);
+        sp.arg("cols", d.cols as f64);
+    }
     let (rows, cols) = (d.rows, d.cols);
     if rows == 0 || cols == 0 {
         return;

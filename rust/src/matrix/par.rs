@@ -41,6 +41,7 @@ use std::marker::PhantomData;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::spmd::pool;
+use crate::trace;
 
 /// One worker's run of the task index space: claims come off the front
 /// (`next.fetch_add(1)`), by the owner or by a thief — the fetch_add
@@ -68,7 +69,10 @@ pub fn run_chunks(threads: usize, ntasks: usize, f: &(dyn Fn(usize) + Sync)) {
     if threads <= 1 || ntasks <= 1 {
         // inline fast path: covers ntasks == 0 (no pool checkout)
         for task in 0..ntasks {
+            let mut sp = trace::span("tile", trace::Category::Kernel);
+            sp.arg("task", task as f64);
             f(task);
+            drop(sp);
         }
         return;
     }
@@ -80,14 +84,21 @@ pub fn run_chunks(threads: usize, ntasks: usize, f: &(dyn Fn(usize) + Sync)) {
             end: (w + 1) * ntasks / workers,
         })
         .collect();
+    // Pool threads carry no tracing identity of their own — capture the
+    // launching rank's here and activate it per worker below.
+    let attr = trace::parallel_attr();
     pool::scoped_run(workers, &|w| {
+        let _ws = attr.map(|a| trace::worker_scope(a, w));
         'claim: loop {
             // own deque first, then steal from the right neighbour onwards
             for v in 0..workers {
                 let d = &deques[(w + v) % workers];
                 let task = d.next.fetch_add(1, Ordering::Relaxed);
                 if task < d.end {
+                    let mut sp = trace::span("tile", trace::Category::Kernel);
+                    sp.arg("task", task as f64);
                     f(task);
+                    drop(sp);
                     continue 'claim;
                 }
             }

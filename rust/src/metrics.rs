@@ -189,6 +189,11 @@ pub struct Histogram {
     counts: Vec<u64>,
     total: u64,
     sum_secs: f64,
+    /// Smallest / largest recorded sample — quantiles clamp to this
+    /// range, so a single-sample histogram reports the sample itself
+    /// (not its bucket's upper edge) at every quantile.
+    min_secs: f64,
+    max_secs: f64,
 }
 
 impl Default for Histogram {
@@ -203,7 +208,13 @@ impl Histogram {
     const PER_DECADE: f64 = 5.0;
 
     pub fn new() -> Self {
-        Histogram { counts: vec![0; Self::BUCKETS], total: 0, sum_secs: 0.0 }
+        Histogram {
+            counts: vec![0; Self::BUCKETS],
+            total: 0,
+            sum_secs: 0.0,
+            min_secs: f64::INFINITY,
+            max_secs: 0.0,
+        }
     }
 
     fn bucket_of(secs: f64) -> usize {
@@ -227,6 +238,8 @@ impl Histogram {
         self.counts[Self::bucket_of(secs)] += 1;
         self.total += 1;
         self.sum_secs += secs;
+        self.min_secs = self.min_secs.min(secs);
+        self.max_secs = self.max_secs.max(secs);
     }
 
     pub fn count(&self) -> u64 {
@@ -242,7 +255,11 @@ impl Histogram {
     }
 
     /// Quantile estimate in seconds, `q` in [0, 1].  Linear interpolation
-    /// within the winning bucket; 0 for an empty histogram.
+    /// within the winning bucket, clamped to the recorded sample range
+    /// (so a single-sample histogram reports the sample at every
+    /// quantile).  **An empty histogram returns 0.0** — callers that need
+    /// to distinguish "no samples" from "all samples ≤ 1 µs" must check
+    /// [`Histogram::count`] first.
     pub fn quantile(&self, q: f64) -> f64 {
         if self.total == 0 {
             return 0.0;
@@ -257,11 +274,11 @@ impl Histogram {
                 let lo = Self::edge(b);
                 let hi = if b + 1 < Self::BUCKETS { Self::edge(b + 1) } else { lo * 10.0 };
                 let frac = (target - seen) as f64 / c as f64;
-                return lo + (hi - lo) * frac;
+                return (lo + (hi - lo) * frac).clamp(self.min_secs, self.max_secs);
             }
             seen += c;
         }
-        Self::edge(Self::BUCKETS - 1)
+        Self::edge(Self::BUCKETS - 1).clamp(self.min_secs, self.max_secs)
     }
 
     pub fn p50(&self) -> f64 {
@@ -273,12 +290,17 @@ impl Histogram {
     }
 
     /// Merge another histogram into this one (cross-rank aggregation).
+    /// The sample range merges too, so quantile clamping stays exact:
+    /// merging then querying agrees with recording every sample into one
+    /// histogram.
     pub fn merge(&mut self, other: &Histogram) {
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
             *a += b;
         }
         self.total += other.total;
         self.sum_secs += other.sum_secs;
+        self.min_secs = self.min_secs.min(other.min_secs);
+        self.max_secs = self.max_secs.max(other.max_secs);
     }
 }
 
@@ -379,6 +401,142 @@ pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
         out.push('\n');
     }
     out
+}
+
+/// Minimal push-based JSON writer — [`render_table`]'s sibling for
+/// machine-readable output (trace export, `repro submit --json`,
+/// `repro stats --json`) without a serialization dependency.
+///
+/// Structure is caller-managed: `begin_obj`/`end_obj`,
+/// `begin_arr`/`end_arr`, `key` inside objects, then one value call
+/// (`str_val`/`num`/`uint`/`int`/`boolean`/`begin_*`).  Commas and
+/// string escaping are handled here; mismatched begin/end pairs are the
+/// caller's bug and surface as invalid JSON downstream.
+#[derive(Default)]
+pub struct JsonWriter {
+    buf: String,
+    /// Nesting stack: (is_array, item_count, key_pending).
+    stack: Vec<(bool, usize, bool)>,
+}
+
+impl JsonWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Comma bookkeeping before a key (objects) or a value (arrays /
+    /// top level).
+    fn sep(&mut self, is_key: bool) {
+        if let Some((is_arr, count, key_pending)) = self.stack.last_mut() {
+            if *is_arr || is_key {
+                if *count > 0 {
+                    self.buf.push(',');
+                }
+                *count += 1;
+            } else {
+                // value inside an object: the key already wrote `:`
+                debug_assert!(*key_pending, "object value without a key");
+                *key_pending = false;
+            }
+        }
+    }
+
+    pub fn begin_obj(&mut self) -> &mut Self {
+        self.sep(false);
+        self.buf.push('{');
+        self.stack.push((false, 0, false));
+        self
+    }
+
+    pub fn end_obj(&mut self) -> &mut Self {
+        self.stack.pop();
+        self.buf.push('}');
+        self
+    }
+
+    pub fn begin_arr(&mut self) -> &mut Self {
+        self.sep(false);
+        self.buf.push('[');
+        self.stack.push((true, 0, false));
+        self
+    }
+
+    pub fn end_arr(&mut self) -> &mut Self {
+        self.stack.pop();
+        self.buf.push(']');
+        self
+    }
+
+    pub fn key(&mut self, k: &str) -> &mut Self {
+        self.sep(true);
+        Self::escape_into(&mut self.buf, k);
+        self.buf.push(':');
+        if let Some((_, _, key_pending)) = self.stack.last_mut() {
+            *key_pending = true;
+        }
+        self
+    }
+
+    pub fn str_val(&mut self, s: &str) -> &mut Self {
+        self.sep(false);
+        Self::escape_into(&mut self.buf, s);
+        self
+    }
+
+    /// Finite floats only; NaN/∞ (not representable in JSON) emit
+    /// `null`.  Integral values print without a fraction.
+    pub fn num(&mut self, v: f64) -> &mut Self {
+        self.sep(false);
+        if !v.is_finite() {
+            self.buf.push_str("null");
+        } else if v == v.trunc() && v.abs() < 9e15 {
+            self.buf.push_str(&format!("{}", v as i64));
+        } else {
+            self.buf.push_str(&format!("{v}"));
+        }
+        self
+    }
+
+    pub fn uint(&mut self, v: u64) -> &mut Self {
+        self.sep(false);
+        self.buf.push_str(&format!("{v}"));
+        self
+    }
+
+    pub fn int(&mut self, v: i64) -> &mut Self {
+        self.sep(false);
+        self.buf.push_str(&format!("{v}"));
+        self
+    }
+
+    pub fn boolean(&mut self, v: bool) -> &mut Self {
+        self.sep(false);
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    pub fn finish(self) -> String {
+        debug_assert!(self.stack.is_empty(), "unclosed JSON container");
+        self.buf
+    }
+
+    fn escape_into(buf: &mut String, s: &str) {
+        buf.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => buf.push_str("\\\""),
+                '\\' => buf.push_str("\\\\"),
+                '\n' => buf.push_str("\\n"),
+                '\r' => buf.push_str("\\r"),
+                '\t' => buf.push_str("\\t"),
+                c if (c as u32) < 0x20 => {
+                    buf.push_str(&format!("\\u{:04x}", c as u32));
+                }
+                c => buf.push(c),
+            }
+        }
+        buf.push('"');
+    }
 }
 
 #[cfg(test)]
@@ -507,6 +665,89 @@ mod tests {
         let (q10, q50, q90) = (h.quantile(0.1), h.quantile(0.5), h.quantile(0.9));
         assert!(q10 <= q50 && q50 <= q90, "{q10} {q50} {q90}");
         assert!(q50 > 1e-4 && q50 < 2e-2);
+    }
+
+    #[test]
+    fn histogram_empty_quantile_is_zero() {
+        // Documented contract: no samples → every quantile is 0.0.
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.0), 0.0);
+        assert_eq!(h.p50(), 0.0);
+        assert_eq!(h.p99(), 0.0);
+        assert_eq!(h.quantile(1.0), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn histogram_single_sample_quantiles_are_the_sample() {
+        // Regression: interpolation used to return the winning bucket's
+        // *upper edge* for a lone sample (frac = 1/1), inflating p50/p99
+        // of a one-job histogram by up to the bucket ratio (~58%).
+        for &s in &[1e-6, 5.3e-3, 0.77, 12.0] {
+            let mut h = Histogram::new();
+            h.record(s);
+            assert_eq!(h.p50(), s, "p50 of single sample {s}");
+            assert_eq!(h.p99(), s, "p99 of single sample {s}");
+            assert_eq!(h.quantile(0.0), s);
+            assert_eq!(h.quantile(1.0), s);
+        }
+    }
+
+    #[test]
+    fn histogram_merge_then_quantile_matches_direct_recording() {
+        // Merging two histograms then querying must agree exactly with
+        // recording every sample into one histogram (counts AND the
+        // min/max clamp range both merge).
+        let samples_a = [1e-4, 2e-4, 5e-4, 1e-3];
+        let samples_b = [8e-3, 2e-2, 0.4];
+        let mut a = Histogram::new();
+        for &s in &samples_a {
+            a.record(s);
+        }
+        let mut b = Histogram::new();
+        for &s in &samples_b {
+            b.record(s);
+        }
+        let mut direct = Histogram::new();
+        for &s in samples_a.iter().chain(&samples_b) {
+            direct.record(s);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), direct.count());
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.quantile(q), direct.quantile(q), "q={q}");
+        }
+        // merging an empty histogram is the identity
+        let before = (a.p50(), a.p99(), a.quantile(1.0));
+        a.merge(&Histogram::new());
+        assert_eq!((a.p50(), a.p99(), a.quantile(1.0)), before);
+    }
+
+    #[test]
+    fn json_writer_builds_nested_structures() {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("name").str_val("he said \"hi\"\n");
+        w.key("n").uint(42);
+        w.key("rate").num(1.5);
+        w.key("whole").num(3.0);
+        w.key("bad").num(f64::NAN);
+        w.key("neg").int(-7);
+        w.key("ok").boolean(true);
+        w.key("items").begin_arr();
+        w.num(1.0);
+        w.begin_obj();
+        w.key("x").uint(0);
+        w.end_obj();
+        w.str_val("z");
+        w.end_arr();
+        w.end_obj();
+        let s = w.finish();
+        assert_eq!(
+            s,
+            "{\"name\":\"he said \\\"hi\\\"\\n\",\"n\":42,\"rate\":1.5,\"whole\":3,\
+             \"bad\":null,\"neg\":-7,\"ok\":true,\"items\":[1,{\"x\":0},\"z\"]}"
+        );
     }
 
     #[test]

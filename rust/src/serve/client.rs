@@ -23,6 +23,7 @@ use std::time::Duration;
 use anyhow::Context;
 
 use super::server::{ServeHandle, ServeShared};
+use super::stats::StatsSnapshot;
 use super::{JobOutput, JobSpec, JobStatus};
 use crate::comm::wire::{WireData, WireError, WireReader};
 use crate::data::value::Data;
@@ -35,6 +36,9 @@ pub enum Request {
     /// Block (this connection) until the job is terminal.
     Wait(u64),
     Shutdown,
+    /// Live pool statistics: occupancy, queue depth, latency and
+    /// queue-wait quantiles, per-job roster (`repro stats`).
+    Stats,
 }
 
 /// Server → client responses, one per request.
@@ -46,6 +50,7 @@ pub enum Response {
     /// failure/rejection reason otherwise.
     Outcome { output: Option<JobOutput>, err: Option<String> },
     ShuttingDown,
+    Stats(StatsSnapshot),
 }
 
 impl Data for Request {
@@ -53,7 +58,7 @@ impl Data for Request {
         1 + match self {
             Request::Submit(spec) => spec.byte_size(),
             Request::Status(_) | Request::Wait(_) => 8,
-            Request::Shutdown => 0,
+            Request::Shutdown | Request::Stats => 0,
         }
     }
 }
@@ -74,6 +79,7 @@ impl WireData for Request {
                 id.encode(out);
             }
             Request::Shutdown => out.push(3),
+            Request::Stats => out.push(4),
         }
     }
     fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
@@ -82,6 +88,7 @@ impl WireData for Request {
             1 => Request::Status(r.u64()?),
             2 => Request::Wait(r.u64()?),
             3 => Request::Shutdown,
+            4 => Request::Stats,
             _ => return Err(WireError::Malformed("unknown Request tag")),
         })
     }
@@ -97,6 +104,7 @@ impl Data for Response {
                     + err.as_ref().map_or(1, |e| 9 + e.len())
             }
             Response::ShuttingDown => 0,
+            Response::Stats(s) => s.byte_size(),
         }
     }
 }
@@ -118,6 +126,10 @@ impl WireData for Response {
                 err.encode(out);
             }
             Response::ShuttingDown => out.push(3),
+            Response::Stats(s) => {
+                out.push(4);
+                s.encode(out);
+            }
         }
     }
     fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
@@ -126,6 +138,7 @@ impl WireData for Response {
             1 => Response::Status(Option::decode(r)?),
             2 => Response::Outcome { output: Option::decode(r)?, err: Option::decode(r)? },
             3 => Response::ShuttingDown,
+            4 => Response::Stats(StatsSnapshot::decode(r)?),
             _ => return Err(WireError::Malformed("unknown Response tag")),
         })
     }
@@ -226,6 +239,7 @@ fn serve_conn(mut stream: TcpStream, handle: ServeHandle) -> std::io::Result<()>
                 handle.shutdown();
                 Response::ShuttingDown
             }
+            Request::Stats => Response::Stats(handle.stats()),
         };
         write_frame(&mut stream, &resp)?;
     }
@@ -287,6 +301,14 @@ impl ServeClient {
             other => anyhow::bail!("protocol error: unexpected response {other:?}"),
         }
     }
+
+    /// Live pool statistics (what `repro stats` prints).
+    pub fn stats(&mut self) -> crate::Result<StatsSnapshot> {
+        match self.call(&Request::Stats)? {
+            Response::Stats(s) => Ok(s),
+            other => anyhow::bail!("protocol error: unexpected response {other:?}"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -307,6 +329,7 @@ mod tests {
         roundtrip(&Request::Status(9));
         roundtrip(&Request::Wait(11));
         roundtrip(&Request::Shutdown);
+        roundtrip(&Request::Stats);
     }
 
     #[test]
@@ -321,5 +344,19 @@ mod tests {
         });
         roundtrip(&Response::Outcome { output: None, err: Some("died".into()) });
         roundtrip(&Response::ShuttingDown);
+        roundtrip(&Response::Stats(StatsSnapshot {
+            capacity: 4,
+            busy: 2,
+            queue_depth: 1,
+            submitted: 3,
+            jobs: vec![super::super::stats::JobStat {
+                id: 1,
+                kind: "matmul".into(),
+                status: "running".into(),
+                gflops: 0.0,
+                queue_wait_secs: 0.002,
+            }],
+            ..Default::default()
+        }));
     }
 }

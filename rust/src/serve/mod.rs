@@ -56,9 +56,11 @@ use crate::metrics::MetricsSnapshot;
 pub mod client;
 pub mod scheduler;
 pub mod server;
+pub mod stats;
 
 pub use client::ServeClient;
 pub use server::{ServeHandle, ServeOptions, ServeReport};
+pub use stats::{JobStat, QuantileSummary, StatsSnapshot};
 
 /// What a submitter asks the pool to run.
 #[derive(Clone, Debug, PartialEq)]
@@ -256,6 +258,18 @@ impl JobStatus {
     /// Terminal states release no further transitions.
     pub fn is_terminal(&self) -> bool {
         matches!(self, JobStatus::Done | JobStatus::Failed(_) | JobStatus::Rejected(_))
+    }
+
+    /// Short label for stats rosters and JSON (drops failure reasons —
+    /// `status`/`wait` carry the full variant).
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Done => "done",
+            JobStatus::Failed(_) => "failed",
+            JobStatus::Rejected(_) => "rejected",
+        }
     }
 }
 

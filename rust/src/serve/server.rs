@@ -44,15 +44,17 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::scheduler::{plan_next, Pool};
+use super::stats::{JobStat, QuantileSummary, StatsSnapshot};
 use super::{client, Control, JobOutput, JobSpec, JobStatus, MemberDone, CONTROL_TAG, DONE_TAG};
 use crate::algos::cannon::mmm_cannon_on;
 use crate::algos::floyd_warshall::{floyd_warshall_par_on, FwSource};
 use crate::comm::group::Group;
 use crate::matrix::block::{Block, BlockSource};
 use crate::matrix::dense::Mat;
-use crate::metrics::{Histogram, MetricsSnapshot, Report};
+use crate::metrics::{Histogram, JsonWriter, MetricsSnapshot, Report};
 use crate::runtime::compute::Compute;
 use crate::spmd::{Ctx, Runtime};
+use crate::trace;
 
 /// Serving-plane configuration.
 #[derive(Clone, Debug)]
@@ -93,6 +95,10 @@ pub struct ServeReport {
     pub assignments: u64,
     /// Per-job submit → terminal latency (wall clock).
     pub latency: Histogram,
+    /// Per-job submit → assign queue wait (wall clock) — the
+    /// dispatcher-side admission stall that `latency` folds in but
+    /// doesn't isolate.  Rejected jobs never enter it.
+    pub queue_wait: Histogram,
 }
 
 /// One job's bookkeeping in the table.
@@ -104,6 +110,8 @@ struct JobEntry {
     /// assignment's measurement).
     member_metrics: Vec<MetricsSnapshot>,
     submitted: Instant,
+    /// Submit → assign wait, set at the Queued → Running transition.
+    queue_wait_secs: Option<f64>,
 }
 
 struct SharedInner {
@@ -117,6 +125,10 @@ struct SharedInner {
     listen_enabled: bool,
     listen_addr: Option<SocketAddr>,
     report: ServeReport,
+    /// Ranks currently occupied by assignments — published by the
+    /// dispatcher (which owns the [`Pool`]) so `stats()` can report
+    /// occupancy without touching dispatcher-local state.
+    busy: usize,
 }
 
 /// State shared between the driver thread, the dispatcher rank, and
@@ -138,6 +150,7 @@ impl ServeShared {
                 listen_enabled,
                 listen_addr: None,
                 report: ServeReport::default(),
+                busy: 0,
             }),
             cv: Condvar::new(),
         }
@@ -217,6 +230,7 @@ impl ServeHandle {
                 output: None,
                 member_metrics: Vec::new(),
                 submitted: Instant::now(),
+                queue_wait_secs: None,
             },
         );
         self.shared.cv.notify_all();
@@ -268,6 +282,79 @@ impl ServeHandle {
     /// [`Runtime::serve`]).
     pub fn report(&self) -> ServeReport {
         self.shared.inner.lock().unwrap().report.clone()
+    }
+
+    /// Point-in-time snapshot of the pool: occupancy, queue depth, the
+    /// serving counters, latency/queue-wait quantiles, and a per-job
+    /// roster — the payload behind [`Request::Stats`] and `repro stats`.
+    ///
+    /// [`Request::Stats`]: super::client::Request::Stats
+    pub fn stats(&self) -> StatsSnapshot {
+        let inner = self.shared.inner.lock().unwrap();
+        let mut jobs: Vec<JobStat> = inner
+            .jobs
+            .iter()
+            .map(|(&id, e)| JobStat {
+                id,
+                kind: e.spec.kind().to_string(),
+                status: e.status.label().to_string(),
+                gflops: Report::aggregate(&e.member_metrics).max_gflops,
+                queue_wait_secs: e.queue_wait_secs.unwrap_or(-1.0),
+            })
+            .collect();
+        jobs.sort_by_key(|j| j.id);
+        StatsSnapshot {
+            capacity: self.capacity as u64,
+            busy: inner.busy as u64,
+            queue_depth: inner.queue.len() as u64,
+            submitted: inner.report.submitted,
+            done: inner.report.done,
+            failed: inner.report.failed,
+            rejected: inner.report.rejected,
+            assignments: inner.report.assignments,
+            latency: QuantileSummary::of(&inner.report.latency),
+            queue_wait: QuantileSummary::of(&inner.report.queue_wait),
+            jobs,
+        }
+    }
+
+    /// JSON rendering of [`job_report`](Self::job_report) plus the
+    /// job's lifecycle fields — what `repro submit --json` prints.
+    /// `None` for an unknown id.
+    pub fn job_report_json(&self, id: u64) -> Option<String> {
+        let inner = self.shared.inner.lock().unwrap();
+        let e = inner.jobs.get(&id)?;
+        let r = Report::aggregate(&e.member_metrics);
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("id").uint(id);
+        w.key("kind").str_val(e.spec.kind());
+        w.key("status").str_val(e.status.label());
+        match &e.status {
+            JobStatus::Failed(m) | JobStatus::Rejected(m) => {
+                w.key("error").str_val(m);
+            }
+            _ => {}
+        }
+        match e.queue_wait_secs {
+            Some(s) => {
+                w.key("queue_wait_secs").num(s);
+            }
+            None => {
+                w.key("queue_wait_secs").num(f64::NAN); // → null
+            }
+        }
+        w.key("ranks").uint(r.ranks as u64);
+        w.key("msgs_sent").uint(r.total.msgs_sent);
+        w.key("bytes_sent").uint(r.total.bytes_sent);
+        w.key("collectives").uint(r.total.collectives);
+        w.key("flops").num(r.total.flops);
+        w.key("comm_time_max").num(r.max_comm_time);
+        w.key("compute_time_max").num(r.max_compute_time);
+        w.key("gflops_max").num(r.max_gflops);
+        w.key("ew_gflops_max").num(r.max_ew_gflops);
+        w.end_obj();
+        Some(w.finish())
     }
 
     /// Request shutdown: new submits are refused, queued and running
@@ -480,9 +567,16 @@ fn dispatcher(ctx: &Ctx, shared: &ServeShared, opts: &ServeOptions) {
                     Some(adm) => {
                         inner.queue.retain(|id| !adm.jobs.contains(id));
                         for id in &adm.jobs {
-                            inner.jobs.get_mut(id).unwrap().status = JobStatus::Running;
+                            let entry = inner.jobs.get_mut(id).unwrap();
+                            entry.status = JobStatus::Running;
+                            let wait = entry.submitted.elapsed().as_secs_f64();
+                            entry.queue_wait_secs = Some(wait);
+                            inner.report.queue_wait.record(wait);
                         }
                         inner.report.assignments += 1;
+                        // the planner guarantees the take below succeeds,
+                        // so occupancy can be published while still locked
+                        inner.busy += adm.need;
                         Some(adm)
                     }
                 }
@@ -493,6 +587,12 @@ fn dispatcher(ctx: &Ctx, shared: &ServeShared, opts: &ServeOptions) {
             let assign = next_assign;
             next_assign += 1;
             let scope = job_scope(adm.jobs[0], assign);
+            let mut sp = trace::span("assign", trace::Category::Serve);
+            if sp.is_active() {
+                sp.arg("assign", assign as f64);
+                sp.arg("jobs", adm.jobs.len() as f64);
+                sp.arg("ranks", ranks.len() as f64);
+            }
             for &r in &ranks {
                 ctx.send(
                     r,
@@ -506,6 +606,7 @@ fn dispatcher(ctx: &Ctx, shared: &ServeShared, opts: &ServeOptions) {
                     },
                 );
             }
+            drop(sp);
             running.insert(
                 assign,
                 AssignState {
@@ -545,6 +646,7 @@ fn dispatcher(ctx: &Ctx, shared: &ServeShared, opts: &ServeOptions) {
 /// across the covered jobs, mark them terminal, record latencies.
 fn finish_assignment(shared: &ServeShared, st: AssignState) {
     let mut inner = shared.inner.lock().unwrap();
+    inner.busy = inner.busy.saturating_sub(st.ranks.len());
     let n = st.jobs.len();
     let mut outputs: Vec<Option<JobOutput>> = vec![None; n];
     let mut err = st.err;
@@ -603,9 +705,15 @@ fn worker(ctx: &Ctx) {
                 // control message before our MemberDone
                 ctx.transport().clear_fail(ctx.rank);
                 let baseline = ctx.metrics.snapshot();
+                let mut sp = trace::span("job", trace::Category::Serve);
+                if sp.is_active() {
+                    sp.arg("assign", assign as f64);
+                    sp.arg("width", ranks.len() as f64);
+                }
                 let result = catch_unwind(AssertUnwindSafe(|| {
                     ctx.with_tag_scope(scope, || run_job(ctx, &spec, &ranks))
                 }));
+                drop(sp);
                 let metrics = ctx.metrics.snapshot().scoped(&baseline);
                 let done = match result {
                     Ok(output) => {
@@ -843,6 +951,37 @@ mod tests {
         );
         assert_eq!(report.failed, 1);
         assert_eq!(report.done, 2);
+    }
+
+    #[test]
+    fn stats_and_queue_wait_track_the_pool() {
+        let rt = serving_rt(3);
+        let (json, report) = rt
+            .serve(ServeOptions::default(), |h| {
+                let j = h.submit(JobSpec::Matmul { q: 1, b: 8, seed_a: 9, seed_b: 10 });
+                let _ = h.wait(j).expect("matmul");
+                let snap = h.stats();
+                assert_eq!(snap.capacity, 2);
+                assert_eq!(snap.busy, 0, "drained pool must be idle");
+                assert_eq!(snap.queue_depth, 0);
+                assert_eq!(snap.done, 1);
+                assert_eq!(snap.latency.count, 1);
+                assert_eq!(snap.queue_wait.count, 1);
+                let row = snap.jobs.iter().find(|r| r.id == j).expect("job in roster");
+                assert_eq!(row.status, "done");
+                assert!(row.queue_wait_secs >= 0.0, "assigned job has a recorded wait");
+                let jr = h.job_report(j).expect("job report");
+                assert_eq!(
+                    row.gflops, jr.max_gflops,
+                    "stats roster gflops must match job_report"
+                );
+                h.job_report_json(j).expect("json report")
+            })
+            .expect("serve");
+        assert!(json.contains("\"status\":\"done\""), "{json}");
+        assert!(json.contains("\"queue_wait_secs\":"), "{json}");
+        assert!(json.contains("\"gflops_max\":"), "{json}");
+        assert_eq!(report.queue_wait.count(), 1, "final report keeps the histogram");
     }
 
     #[test]

@@ -1,0 +1,362 @@
+//! Live serving-plane statistics: the payload behind `Request::Stats`
+//! and the `repro stats` CLI — the first window into a resident pool
+//! mid-flight.
+//!
+//! A [`StatsSnapshot`] is assembled under the job-table lock by
+//! [`ServeHandle::stats`](super::ServeHandle::stats): pool occupancy
+//! (published by the dispatcher on every take/release), queue depth,
+//! the serving-plane counters, quantile summaries of the latency and
+//! dispatcher-side **queue-wait** (submit → assign) histograms, and a
+//! per-job roster with each job's *scoped* GFlop/s — the same figure
+//! [`ServeHandle::job_report`](super::ServeHandle::job_report) quotes,
+//! so an external `repro stats` can be asserted against the in-process
+//! report.  The snapshot crosses the client TCP protocol with the same
+//! wire codec every other frame uses.
+
+use crate::comm::wire::{WireData, WireError, WireReader};
+use crate::data::value::Data;
+use crate::metrics::{render_table, Histogram, JsonWriter};
+
+/// Count/mean/p50/p99 digest of a [`Histogram`] — what quantile state
+/// crosses the wire (the full bucket vector stays server-side).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QuantileSummary {
+    pub count: u64,
+    pub mean_secs: f64,
+    pub p50_secs: f64,
+    pub p99_secs: f64,
+}
+
+impl QuantileSummary {
+    pub fn of(h: &Histogram) -> Self {
+        QuantileSummary {
+            count: h.count(),
+            mean_secs: h.mean(),
+            p50_secs: h.p50(),
+            p99_secs: h.p99(),
+        }
+    }
+
+    fn render(&self) -> String {
+        format!(
+            "n={} mean={:.3}ms p50={:.3}ms p99={:.3}ms",
+            self.count,
+            self.mean_secs * 1e3,
+            self.p50_secs * 1e3,
+            self.p99_secs * 1e3,
+        )
+    }
+
+    fn write_json(&self, w: &mut JsonWriter) {
+        w.begin_obj();
+        w.key("count").uint(self.count);
+        w.key("mean_secs").num(self.mean_secs);
+        w.key("p50_secs").num(self.p50_secs);
+        w.key("p99_secs").num(self.p99_secs);
+        w.end_obj();
+    }
+}
+
+impl Data for QuantileSummary {
+    fn byte_size(&self) -> usize {
+        32
+    }
+}
+
+impl WireData for QuantileSummary {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.count.encode(out);
+        self.mean_secs.encode(out);
+        self.p50_secs.encode(out);
+        self.p99_secs.encode(out);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(QuantileSummary {
+            count: r.u64()?,
+            mean_secs: f64::decode(r)?,
+            p50_secs: f64::decode(r)?,
+            p99_secs: f64::decode(r)?,
+        })
+    }
+}
+
+/// One job's row in the live roster.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct JobStat {
+    pub id: u64,
+    /// [`JobSpec::kind`](super::JobSpec::kind) label.
+    pub kind: String,
+    /// [`JobStatus::label`](super::JobStatus::label).
+    pub status: String,
+    /// Best member rate over the job's **scoped** metrics deltas —
+    /// identical to `job_report(id).max_gflops`.
+    pub gflops: f64,
+    /// Dispatcher-side submit → assign wait; negative while the job is
+    /// still queued (or was rejected — it never gets assigned).
+    pub queue_wait_secs: f64,
+}
+
+impl Data for JobStat {
+    fn byte_size(&self) -> usize {
+        8 + (8 + self.kind.len()) + (8 + self.status.len()) + 16
+    }
+}
+
+impl WireData for JobStat {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.id.encode(out);
+        self.kind.encode(out);
+        self.status.encode(out);
+        self.gflops.encode(out);
+        self.queue_wait_secs.encode(out);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(JobStat {
+            id: r.u64()?,
+            kind: String::decode(r)?,
+            status: String::decode(r)?,
+            gflops: f64::decode(r)?,
+            queue_wait_secs: f64::decode(r)?,
+        })
+    }
+}
+
+/// A point-in-time view of the resident pool.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StatsSnapshot {
+    /// Pool capacity in ranks (world minus the dispatcher).
+    pub capacity: u64,
+    /// Ranks currently occupied by assignments.
+    pub busy: u64,
+    /// Jobs admitted but not yet assigned.
+    pub queue_depth: u64,
+    pub submitted: u64,
+    pub done: u64,
+    pub failed: u64,
+    pub rejected: u64,
+    pub assignments: u64,
+    /// Submit → terminal wall latency over finished jobs.
+    pub latency: QuantileSummary,
+    /// Submit → assign wall wait over assigned jobs (admission stalls
+    /// that plain latency hides).
+    pub queue_wait: QuantileSummary,
+    /// Every job the table knows, ascending id.
+    pub jobs: Vec<JobStat>,
+}
+
+impl StatsSnapshot {
+    /// Pool occupancy in [0, 1] (0 for an empty pool).
+    pub fn occupancy(&self) -> f64 {
+        if self.capacity > 0 {
+            self.busy as f64 / self.capacity as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Human-readable multi-line rendering (the `repro stats` default).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "pool: {}/{} ranks busy ({:.0}%), queue depth {}\n",
+            self.busy,
+            self.capacity,
+            self.occupancy() * 100.0,
+            self.queue_depth,
+        ));
+        out.push_str(&format!(
+            "jobs: submitted={} done={} failed={} rejected={} assignments={}\n",
+            self.submitted, self.done, self.failed, self.rejected, self.assignments,
+        ));
+        out.push_str(&format!("latency:    {}\n", self.latency.render()));
+        out.push_str(&format!("queue-wait: {}\n", self.queue_wait.render()));
+        if !self.jobs.is_empty() {
+            let rows: Vec<Vec<String>> = self
+                .jobs
+                .iter()
+                .map(|j| {
+                    vec![
+                        j.id.to_string(),
+                        j.kind.clone(),
+                        j.status.clone(),
+                        format!("{:.2}", j.gflops),
+                        if j.queue_wait_secs < 0.0 {
+                            "-".into()
+                        } else {
+                            format!("{:.3}", j.queue_wait_secs * 1e3)
+                        },
+                    ]
+                })
+                .collect();
+            out.push_str(&render_table(
+                &["job", "kind", "status", "gflops", "wait_ms"],
+                &rows,
+            ));
+        }
+        out
+    }
+
+    /// Machine-readable rendering (the `repro stats --json` form).
+    pub fn to_json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("capacity").uint(self.capacity);
+        w.key("busy").uint(self.busy);
+        w.key("occupancy").num(self.occupancy());
+        w.key("queue_depth").uint(self.queue_depth);
+        w.key("submitted").uint(self.submitted);
+        w.key("done").uint(self.done);
+        w.key("failed").uint(self.failed);
+        w.key("rejected").uint(self.rejected);
+        w.key("assignments").uint(self.assignments);
+        w.key("latency");
+        self.latency.write_json(&mut w);
+        w.key("queue_wait");
+        self.queue_wait.write_json(&mut w);
+        w.key("jobs").begin_arr();
+        for j in &self.jobs {
+            w.begin_obj();
+            w.key("id").uint(j.id);
+            w.key("kind").str_val(&j.kind);
+            w.key("status").str_val(&j.status);
+            w.key("gflops").num(j.gflops);
+            if j.queue_wait_secs < 0.0 {
+                w.key("queue_wait_secs").num(f64::NAN); // → null
+            } else {
+                w.key("queue_wait_secs").num(j.queue_wait_secs);
+            }
+            w.end_obj();
+        }
+        w.end_arr();
+        w.end_obj();
+        w.finish()
+    }
+}
+
+impl Data for StatsSnapshot {
+    fn byte_size(&self) -> usize {
+        8 * 8
+            + self.latency.byte_size()
+            + self.queue_wait.byte_size()
+            + 8
+            + self.jobs.iter().map(Data::byte_size).sum::<usize>()
+    }
+}
+
+impl WireData for StatsSnapshot {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.capacity.encode(out);
+        self.busy.encode(out);
+        self.queue_depth.encode(out);
+        self.submitted.encode(out);
+        self.done.encode(out);
+        self.failed.encode(out);
+        self.rejected.encode(out);
+        self.assignments.encode(out);
+        self.latency.encode(out);
+        self.queue_wait.encode(out);
+        self.jobs.encode(out);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(StatsSnapshot {
+            capacity: r.u64()?,
+            busy: r.u64()?,
+            queue_depth: r.u64()?,
+            submitted: r.u64()?,
+            done: r.u64()?,
+            failed: r.u64()?,
+            rejected: r.u64()?,
+            assignments: r.u64()?,
+            latency: QuantileSummary::decode(r)?,
+            queue_wait: QuantileSummary::decode(r)?,
+            jobs: Vec::decode(r)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> StatsSnapshot {
+        let mut lat = Histogram::new();
+        lat.record(0.010);
+        lat.record(0.020);
+        let mut qw = Histogram::new();
+        qw.record(0.001);
+        StatsSnapshot {
+            capacity: 4,
+            busy: 3,
+            queue_depth: 2,
+            submitted: 9,
+            done: 6,
+            failed: 1,
+            rejected: 0,
+            assignments: 5,
+            latency: QuantileSummary::of(&lat),
+            queue_wait: QuantileSummary::of(&qw),
+            jobs: vec![
+                JobStat {
+                    id: 1,
+                    kind: "matmul".into(),
+                    status: "done".into(),
+                    gflops: 2.5,
+                    queue_wait_secs: 0.001,
+                },
+                JobStat {
+                    id: 2,
+                    kind: "fw".into(),
+                    status: "queued".into(),
+                    gflops: 0.0,
+                    queue_wait_secs: -1.0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn stats_wire_roundtrip() {
+        let s = sample();
+        let mut buf = Vec::new();
+        s.encode(&mut buf);
+        let mut r = WireReader::new(&buf);
+        let back = StatsSnapshot::decode(&mut r).expect("decode");
+        assert_eq!(back, s);
+        assert_eq!(r.remaining(), 0, "trailing bytes");
+    }
+
+    #[test]
+    fn quantile_summary_digests_histogram() {
+        let mut h = Histogram::new();
+        h.record(0.005);
+        let q = QuantileSummary::of(&h);
+        assert_eq!(q.count, 1);
+        assert_eq!(q.p50_secs, 0.005, "single sample is its own quantile");
+        assert_eq!(q.p99_secs, 0.005);
+        assert!((q.mean_secs - 0.005).abs() < 1e-12);
+    }
+
+    #[test]
+    fn occupancy_is_busy_over_capacity() {
+        let s = sample();
+        assert!((s.occupancy() - 0.75).abs() < 1e-12);
+        let empty = StatsSnapshot::default();
+        assert_eq!(empty.occupancy(), 0.0, "0-capacity pool must not NaN");
+    }
+
+    #[test]
+    fn render_and_json_carry_the_counters() {
+        let s = sample();
+        let text = s.render();
+        assert!(text.contains("3/4 ranks busy"), "{text}");
+        assert!(text.contains("queue depth 2"), "{text}");
+        assert!(text.contains("matmul"), "{text}");
+        let json = s.to_json();
+        assert!(json.contains("\"busy\":3"), "{json}");
+        assert!(json.contains("\"queue_depth\":2"), "{json}");
+        assert!(json.contains("\"occupancy\":0.75"), "{json}");
+        // an unassigned job's queue wait serializes as null, not -1
+        assert!(json.contains("\"queue_wait_secs\":null"), "{json}");
+        assert!(!json.contains("-1"), "{json}");
+    }
+}

@@ -46,6 +46,7 @@ use crate::comm::transport::{launch, Envelope, Transport};
 use crate::comm::wire::WireData;
 use crate::config::MachineConfig;
 use crate::metrics::{MetricsSnapshot, RankMetrics};
+use crate::trace;
 
 /// Per-rank execution context: identity, clock, transport access,
 /// metrics, and the active backend's collective strategy.
@@ -195,7 +196,17 @@ impl Ctx {
             tag, CLOCK_GATHER_TAG,
             "tag u64::MAX is reserved for the runtime's end-of-run clock gather"
         );
+        debug_assert_ne!(
+            tag, TRACE_GATHER_TAG,
+            "tag u64::MAX-3 is reserved for the runtime's end-of-run trace gather"
+        );
         let bytes = msg.bytes();
+        let mut sp = trace::span("send", trace::Category::Comm);
+        if sp.is_active() {
+            sp.arg("peer", dst as f64);
+            sp.arg("bytes", bytes as f64);
+            sp.flow_out(trace::flow_point(self.rank, dst, tag));
+        }
         let ready = self.clock.get();
         let secs = self.cost.msg(bytes);
         self.clock.set(ready + secs);
@@ -222,7 +233,13 @@ impl Ctx {
 
     /// Erased variant of [`Ctx::recv`].
     pub fn recv_msg(&self, src: usize, tag: u64) -> Msg {
+        let mut sp = trace::span("recv", trace::Category::Comm);
         let env = self.transport.take(self.rank, src, tag);
+        if sp.is_active() {
+            sp.arg("peer", src as f64);
+            sp.arg("bytes", env.bytes as f64);
+            sp.flow_in(trace::flow_point(src, self.rank, tag));
+        }
         let before = self.clock.get();
         let after = before.max(env.ready) + self.cost.msg(env.bytes);
         self.clock.set(after);
@@ -261,13 +278,28 @@ impl Ctx {
             tag, CLOCK_GATHER_TAG,
             "tag u64::MAX is reserved for the runtime's end-of-run clock gather"
         );
+        debug_assert_ne!(
+            tag, TRACE_GATHER_TAG,
+            "tag u64::MAX-3 is reserved for the runtime's end-of-run trace gather"
+        );
         let bytes_out = msg.bytes();
+        let mut sp = trace::span("sendrecv", trace::Category::Comm);
+        if sp.is_active() {
+            sp.arg("dst", dst as f64);
+            sp.arg("src", src as f64);
+            sp.arg("bytes_out", bytes_out as f64);
+            sp.flow_out(trace::flow_point(self.rank, dst, tag));
+        }
         let ready = self.clock.get();
         self.transport.post(
             dst,
             Envelope { src: self.rank, tag, bytes: bytes_out, ready, payload: msg },
         );
         let env = self.transport.take(self.rank, src, tag);
+        if sp.is_active() {
+            sp.arg("bytes_in", env.bytes as f64);
+            sp.flow_in(trace::flow_point(src, self.rank, tag));
+        }
         let start = ready.max(env.ready);
         let cost = self.cost.msg(bytes_out).max(self.cost.msg(env.bytes));
         let after = start + cost;
@@ -352,7 +384,17 @@ impl Ctx {
             tag, CLOCK_GATHER_TAG,
             "tag u64::MAX is reserved for the runtime's end-of-run clock gather"
         );
+        debug_assert_ne!(
+            tag, TRACE_GATHER_TAG,
+            "tag u64::MAX-3 is reserved for the runtime's end-of-run trace gather"
+        );
         let bytes = msg.bytes();
+        let mut sp = trace::span("post", trace::Category::Comm);
+        if sp.is_active() {
+            sp.arg("peer", dst as f64);
+            sp.arg("bytes", bytes as f64);
+            sp.flow_out(trace::flow_point(self.rank, dst, tag));
+        }
         self.metrics.on_send(bytes, 0.0);
         self.transport.post(
             dst,
@@ -365,7 +407,13 @@ impl Ctx {
     /// starting at `max(own_clock, sender_ready)` — identical to the
     /// blocking [`Ctx::send_recv_msg`] when no compute was interleaved.
     pub(crate) fn recv_duplex(&self, src: usize, tag: u64, sent_bytes: usize) -> Msg {
+        let mut sp = trace::span("recv", trace::Category::Comm);
         let env = self.transport.take(self.rank, src, tag);
+        if sp.is_active() {
+            sp.arg("peer", src as f64);
+            sp.arg("bytes", env.bytes as f64);
+            sp.flow_in(trace::flow_point(src, self.rank, tag));
+        }
         let before = self.clock.get();
         let start = before.max(env.ready);
         let cost = self.cost.msg(sent_bytes).max(self.cost.msg(env.bytes));
@@ -463,6 +511,9 @@ pub struct RunResult<R> {
     pub wall: Duration,
     /// Per-rank metric snapshots.
     pub metrics: Vec<MetricsSnapshot>,
+    /// Gathered spans when the runtime was built with tracing on
+    /// (`None` otherwise; multi-process: populated on rank 0 only).
+    pub trace: Option<trace::TraceData>,
 }
 
 // ------------------------------------------------------------- Runtime
@@ -477,6 +528,22 @@ pub struct Runtime {
     machine: CostParams,
     transport: TransportChoice,
     threads_per_rank: usize,
+    trace: TraceMode,
+}
+
+/// How span tracing is configured for a runtime (see [`crate::trace`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum TraceMode {
+    /// No tracing (the default).  Every instrumented call site costs a
+    /// single relaxed atomic load.
+    #[default]
+    Off,
+    /// Collect spans and attach the raw [`trace::TraceData`] to the
+    /// [`RunResult`] (tests and tooling).
+    Collect,
+    /// Collect, write Chrome-trace JSON to the path at teardown, and
+    /// print the critical-path report.
+    File(std::path::PathBuf),
 }
 
 /// Reserved tag for the launcher's end-of-run clock gather in
@@ -485,6 +552,14 @@ pub struct Runtime {
 /// collision odds are ~2⁻⁶⁴ per operation — but reserved means checked,
 /// not hoped).
 const CLOCK_GATHER_TAG: u64 = u64::MAX;
+
+/// Reserved tag for the end-of-run trace gather in multi-process mode —
+/// next to the clock-gather tag, past the serving plane's control tags
+/// (`u64::MAX - 1`, `u64::MAX - 2`).  Carries each worker rank's
+/// [`trace::TraceData`] to rank 0 with zero modeled bytes, after the
+/// rank's own spans were flushed, so gathering never perturbs either the
+/// virtual clocks or the trace itself.
+const TRACE_GATHER_TAG: u64 = u64::MAX - 3;
 
 impl Runtime {
     /// Start configuring a runtime.  Defaults: `world(1)`, backend
@@ -497,7 +572,13 @@ impl Runtime {
             machine: MachineChoice::Cost(CostParams::default()),
             transport: None,
             threads_per_rank: None,
+            trace: TraceMode::Off,
         }
+    }
+
+    /// How tracing is configured for this runtime.
+    pub fn trace_mode(&self) -> &TraceMode {
+        &self.trace
     }
 
     /// Number of ranks this runtime launches.
@@ -560,14 +641,30 @@ impl Runtime {
     {
         let world = self.world;
         assert!(world > 0);
-        match self.transport {
+        let res = match self.transport {
             TransportChoice::InProcess => self.run_threads(Fabric::new(world), f),
             TransportChoice::TcpLoopback => self.run_threads(
                 TcpTransport::loopback(world).expect("bind tcp-loopback listeners"),
                 f,
             ),
             TransportChoice::Tcp => self.run_processes(f),
+        };
+        // File mode: emit the artifacts at teardown (multi-process: the
+        // trace is only on rank 0, so workers skip this naturally).
+        if let TraceMode::File(path) = &self.trace {
+            if let Some(td) = &res.trace {
+                match std::fs::write(path, td.chrome_json()) {
+                    Ok(()) => eprintln!(
+                        "trace: wrote {} spans to {} (load at https://ui.perfetto.dev)",
+                        td.spans.len(),
+                        path.display()
+                    ),
+                    Err(e) => eprintln!("trace: failed to write {}: {e}", path.display()),
+                }
+                print!("{}", td.critical_path_report(&res.clocks));
+            }
         }
+        res
     }
 
     /// Thread-per-rank launch over any transport whose ranks are all
@@ -579,10 +676,17 @@ impl Runtime {
     {
         let world = self.world;
         let wall0 = Instant::now();
+        // One trace session per process; serialized against concurrent
+        // traced runs (tests) by the session lock inside begin_session.
+        let session = (self.trace != TraceMode::Off).then(trace::begin_session);
         let slots: Vec<Mutex<Option<(R, f64, MetricsSnapshot)>>> =
             (0..world).map(|_| Mutex::new(None)).collect();
 
         pool::scoped_run(world, &|rank| {
+            // Activate span recording for this rank body (declared before
+            // the rank span so it drops after it, flushing everything).
+            let _trace_scope = session.as_ref().map(|_| trace::rank_scope(rank));
+            let mut rank_span = trace::span("rank", trace::Category::Rank);
             let ctx = Ctx::new(
                 rank,
                 transport.clone(),
@@ -607,10 +711,16 @@ impl Runtime {
                     std::panic::resume_unwind(e);
                 }
             };
+            rank_span.arg("v_end", ctx.now());
+            drop(rank_span);
             transport.close(rank);
             *slots[rank].lock().unwrap() = Some((r, ctx.now(), ctx.metrics.snapshot()));
         });
 
+        // All rank scopes have flushed (scoped_run is a barrier): take
+        // the session's spans.  In-process ranks share the collector, so
+        // the gather costs zero transport messages.
+        let trace_data = session.map(trace::Session::finish);
         let wall = wall0.elapsed();
         let mut results = Vec::with_capacity(world);
         let mut clocks = Vec::with_capacity(world);
@@ -625,7 +735,7 @@ impl Runtime {
             metrics.push(m);
         }
         let t_parallel = clocks.iter().cloned().fold(0.0, f64::max);
-        RunResult { results, t_parallel, clocks, wall, metrics }
+        RunResult { results, t_parallel, clocks, wall, metrics, trace: trace_data }
     }
 
     /// Process-per-rank launch: this process runs one rank (0 in the
@@ -657,7 +767,18 @@ impl Runtime {
             self.machine,
             self.threads_per_rank,
         );
-        let r = f(&ctx);
+        // Each process runs its own trace session for its one rank; the
+        // spans are gathered to rank 0 below.  The re-exec'd workers
+        // resolve the same TraceMode as the parent (same builder code
+        // path, inherited FOOPAR_TRACE), so gather participation agrees.
+        let session = (self.trace != TraceMode::Off).then(trace::begin_session);
+        let r = {
+            let _trace_scope = session.as_ref().map(|_| trace::rank_scope(me));
+            let mut rank_span = trace::span("rank", trace::Category::Rank);
+            let r = f(&ctx);
+            rank_span.arg("v_end", ctx.now());
+            r
+        };
 
         // End-of-run clock gather so rank 0 reports the true T_P =
         // max_r clock_r.  Zero modeled bytes: launcher bookkeeping must
@@ -715,6 +836,33 @@ impl Runtime {
             );
             (vec![ctx.now()], ctx.now())
         };
+        // Trace gather on the reserved tag next to the clock gather.
+        // The clock gather above already proved every worker alive, so a
+        // plain blocking take (with its deadlock oracle) suffices here.
+        // Zero modeled bytes, and each rank's spans were flushed before
+        // its post — gathering perturbs neither clocks nor trace.
+        let trace_data = session.map(trace::Session::finish).and_then(|local| {
+            if me == 0 {
+                let mut all = local;
+                for src in 1..world {
+                    let env = transport.take(0, src, TRACE_GATHER_TAG);
+                    all.merge(env.payload.downcast::<trace::TraceData>());
+                }
+                Some(all)
+            } else {
+                transport.post(
+                    0,
+                    Envelope {
+                        src: me,
+                        tag: TRACE_GATHER_TAG,
+                        bytes: 0,
+                        ready: ctx.now(),
+                        payload: Msg::new(local),
+                    },
+                );
+                None
+            }
+        });
         transport.close(me);
         watchdog_stop.store(true, std::sync::atomic::Ordering::Release);
         if let Some(h) = watchdog {
@@ -723,7 +871,7 @@ impl Runtime {
         let metrics = vec![ctx.metrics.snapshot()];
         let wall = wall0.elapsed();
         proc.finish().expect("tcp worker process failed");
-        RunResult { results: vec![r], t_parallel, clocks, wall, metrics }
+        RunResult { results: vec![r], t_parallel, clocks, wall, metrics, trace: trace_data }
     }
 }
 
@@ -762,6 +910,9 @@ pub struct RuntimeBuilder {
     /// Explicit per-rank kernel thread count; `None` defers to the
     /// machine config (which defaults to 1).
     threads_per_rank: Option<usize>,
+    /// Span tracing; `Off` defers to the `FOOPAR_TRACE` env variable at
+    /// build time.
+    trace: TraceMode,
 }
 
 impl RuntimeBuilder {
@@ -824,6 +975,24 @@ impl RuntimeBuilder {
         self
     }
 
+    /// Trace every run of this runtime and write Chrome-trace JSON to
+    /// `path` at teardown (plus print the critical-path report).  Load
+    /// the file at <https://ui.perfetto.dev>.  Equivalent to setting
+    /// `FOOPAR_TRACE=<path>` in the environment, or `--trace <path>` on
+    /// the `repro` CLI.  See [`crate::trace`] for what gets recorded.
+    pub fn trace(mut self, path: impl Into<std::path::PathBuf>) -> Self {
+        self.trace = TraceMode::File(path.into());
+        self
+    }
+
+    /// Trace every run of this runtime and attach the raw
+    /// [`trace::TraceData`] to the [`RunResult`] instead of writing a
+    /// file — the programmatic form (tests, tooling).
+    pub fn trace_collect(mut self) -> Self {
+        self.trace = TraceMode::Collect;
+        self
+    }
+
     /// Select the delivery substrate:
     ///
     /// * `"local"` (alias `"shmem"`) — threads over in-process
@@ -879,7 +1048,16 @@ impl RuntimeBuilder {
                 ))
             }
         };
-        Ok(Runtime { world: self.world, backend, machine, transport, threads_per_rank })
+        let trace = match self.trace {
+            // An explicit builder choice wins; `Off` defers to the env so
+            // `FOOPAR_TRACE=out.json` works on any unmodified binary.
+            TraceMode::Off => match std::env::var("FOOPAR_TRACE") {
+                Ok(p) if !p.is_empty() => TraceMode::File(p.into()),
+                _ => TraceMode::Off,
+            },
+            t => t,
+        };
+        Ok(Runtime { world: self.world, backend, machine, transport, threads_per_rank, trace })
     }
 
     /// Build and immediately run `f` (the common single-shot path).

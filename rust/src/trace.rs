@@ -1,0 +1,1424 @@
+//! Distributed span tracing: the timeline-level ground truth behind the
+//! aggregate counters in [`crate::metrics`].
+//!
+//! # What this is
+//!
+//! A low-overhead per-rank span tracer.  Every instrumented layer — the
+//! collectives in [`crate::comm::group`], the split-phase `wait()` halves
+//! in [`crate::comm::nb`], transport post/take in [`crate::spmd::Ctx`],
+//! kernel tiles in [`crate::matrix::par`], and the serving dispatcher in
+//! [`crate::serve`] — brackets its work in a [`span`].  Spans carry
+//! `{name, category, rank, tid, t_start, t_end, args}` plus optional
+//! *flow ids* linking each send to the matching recv.  At teardown the
+//! runtime gathers every rank's spans to rank 0 (shared memory
+//! in-process; the wire codec on a reserved tag next to the clock-gather
+//! tag for multi-process runs) and can emit:
+//!
+//! * **Chrome-trace / Perfetto JSON** ([`TraceData::chrome_json`]): one
+//!   "process" per rank, one "thread" per worker, `ph:"X"` complete
+//!   events, and `ph:"s"`/`ph:"f"` flow arrows from each send span to
+//!   the recv span that consumed the message.  Load the file at
+//!   <https://ui.perfetto.dev> (or `chrome://tracing`).
+//! * **A critical-path report** ([`TraceData::critical_path_report`]):
+//!   walks each thread's span nesting to attribute *exclusive* wall time
+//!   to compute vs collective vs transport vs idle per rank, and prints
+//!   measured-vs-virtual-clock deltas per collective so the LogGP-style
+//!   cost model can be validated against reality.
+//!
+//! # Enabling it
+//!
+//! Tracing is off by default and compiles to a single relaxed atomic
+//! load on every instrumented path ([`enabled`]) — the bench gate proves
+//! the disabled path does not move the GFlop/s needle.  Turn it on with
+//! any of:
+//!
+//! * [`Runtime::builder().trace("out.json")`](crate::spmd::RuntimeBuilder::trace)
+//!   — write Chrome JSON + print the critical-path report at teardown;
+//! * [`Runtime::builder().trace_collect()`](crate::spmd::RuntimeBuilder::trace_collect)
+//!   — attach the raw [`TraceData`] to the
+//!   [`RunResult`](crate::spmd::RunResult) instead (tests, tooling);
+//! * `FOOPAR_TRACE=out.json` in the environment;
+//! * `repro mmm --trace out.json` from the CLI.
+//!
+//! # Mechanics (and why it stays cheap)
+//!
+//! Spans are buffered in a plain thread-local `Vec` — append is two
+//! pointer writes, no locks, no syscalls; a per-thread cap plus a global
+//! drop counter bounds memory on runaway traces.  Buffers flush into a
+//! process-global collector exactly once per scope (rank body end /
+//! parallel region end), so the hot path never contends.  One *session*
+//! (a static mutex) is active per process at a time; concurrent
+//! untraced runtimes in the same process record nothing because spans
+//! require both the global enable flag *and* a thread-local activation
+//! mark set only by the traced runtime's rank scopes.
+//!
+//! Thread ids are virtual: `tid = rank·256 + k` with `k = 0` for the
+//! rank's main thread and `k = 1 + slot` for intra-rank worker slots —
+//! globally unique across ranks (pool threads are reused across ranks,
+//! so real OS thread ids would collide) and stable across sequential
+//! parallel regions.  Timestamps are `f64` UNIX seconds derived from a
+//! per-process monotonic anchor, so same-host multi-process traces line
+//! up to clock-sync precision.
+
+use std::borrow::Cow;
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+use crate::comm::wire::{WireData, WireError, WireReader};
+use crate::data::value::Data;
+use crate::metrics::JsonWriter;
+
+/// Virtual-tid block per rank: tid `rank·256` is the rank's main
+/// thread, `rank·256 + 1 + slot` its intra-rank worker slots.
+pub const TIDS_PER_RANK: u32 = 256;
+
+/// Per-thread span buffer cap between flushes; beyond it spans are
+/// counted in [`TraceData::dropped`] instead of recorded.
+const BUF_CAP: usize = 1 << 18;
+
+// ------------------------------------------------------------------ spans
+
+/// What layer a span belongs to — the unit of attribution in the
+/// critical-path report.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Category {
+    /// The whole rank body (root span; its exclusive time is idle /
+    /// uninstrumented).
+    Rank,
+    /// A collective operation (bcast, reduce, …) or its start/wait half.
+    Collective,
+    /// A point-to-point transport operation (post/take).
+    Comm,
+    /// A compute kernel tile (GEMM / elementwise chunk).
+    Kernel,
+    /// Serving-plane work (admission, job lifecycle).
+    Serve,
+}
+
+impl Category {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Category::Rank => "rank",
+            Category::Collective => "collective",
+            Category::Comm => "comm",
+            Category::Kernel => "kernel",
+            Category::Serve => "serve",
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            Category::Rank => 0,
+            Category::Collective => 1,
+            Category::Comm => 2,
+            Category::Kernel => 3,
+            Category::Serve => 4,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<Self, WireError> {
+        Ok(match c {
+            0 => Category::Rank,
+            1 => Category::Collective,
+            2 => Category::Comm,
+            3 => Category::Kernel,
+            4 => Category::Serve,
+            _ => return Err(WireError::Malformed("unknown span category")),
+        })
+    }
+}
+
+/// One timed interval on one (rank, virtual thread).
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub name: Cow<'static, str>,
+    pub cat: Category,
+    pub rank: u32,
+    /// Virtual thread id, globally unique: `rank·256 + k`.
+    pub tid: u32,
+    /// UNIX seconds (anchor-derived; see module docs).
+    pub t_start: f64,
+    pub t_end: f64,
+    /// Numeric annotations (bytes, peer, virtual-clock start/end, …).
+    pub args: Vec<(Cow<'static, str>, f64)>,
+    /// Nonzero: this span *posted* a message; id shared with the recv.
+    pub flow_out: u64,
+    /// Nonzero: this span *took* a message; id shared with the send.
+    pub flow_in: u64,
+}
+
+impl Span {
+    /// Look up a numeric annotation by key.
+    pub fn arg(&self, key: &str) -> Option<f64> {
+        self.args.iter().find(|(k, _)| k == key).map(|&(_, v)| v)
+    }
+}
+
+impl Data for Span {
+    fn byte_size(&self) -> usize {
+        57 + self.name.len() + self.args.iter().map(|(k, _)| 16 + k.len()).sum::<usize>()
+    }
+}
+
+impl WireData for Span {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (self.name.len() as u64).encode(out);
+        out.extend_from_slice(self.name.as_bytes());
+        out.push(self.cat.code());
+        self.rank.encode(out);
+        self.tid.encode(out);
+        self.t_start.encode(out);
+        self.t_end.encode(out);
+        self.flow_out.encode(out);
+        self.flow_in.encode(out);
+        (self.args.len() as u64).encode(out);
+        for (k, v) in &self.args {
+            (k.len() as u64).encode(out);
+            out.extend_from_slice(k.as_bytes());
+            v.encode(out);
+        }
+    }
+
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        let n = r.len()?;
+        let name = String::from_utf8(r.take(n)?.to_vec())
+            .map_err(|_| WireError::Malformed("span name not UTF-8"))?;
+        let cat = Category::from_code(r.u8()?)?;
+        let rank = u32::decode(r)?;
+        let tid = u32::decode(r)?;
+        let t_start = f64::decode(r)?;
+        let t_end = f64::decode(r)?;
+        let flow_out = u64::decode(r)?;
+        let flow_in = u64::decode(r)?;
+        let nargs = r.len()?;
+        let mut args = Vec::with_capacity(nargs.min(64));
+        for _ in 0..nargs {
+            let kn = r.len()?;
+            let k = String::from_utf8(r.take(kn)?.to_vec())
+                .map_err(|_| WireError::Malformed("span arg key not UTF-8"))?;
+            args.push((Cow::Owned(k), f64::decode(r)?));
+        }
+        Ok(Span {
+            name: Cow::Owned(name),
+            cat,
+            rank,
+            tid,
+            t_start,
+            t_end,
+            args,
+            flow_out,
+            flow_in,
+        })
+    }
+}
+
+// ------------------------------------------------------- process globals
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static COLLECTOR: Mutex<Vec<Span>> = Mutex::new(Vec::new());
+/// Serializes trace sessions within one process — `cargo test` runs
+/// many runtimes concurrently in one process, and only one may own the
+/// global enable flag at a time.
+static SESSION: Mutex<()> = Mutex::new(());
+static ANCHOR: OnceLock<(Instant, f64)> = OnceLock::new();
+
+/// Is a trace session live in this process?  One relaxed load — the
+/// entire disabled-path cost of every instrumented call site.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Current trace timestamp: UNIX seconds via a monotonic per-process
+/// anchor (monotone within a process; comparable across same-host
+/// processes to clock-sync precision).
+pub fn now() -> f64 {
+    let &(anchor, base) = ANCHOR.get_or_init(|| {
+        let unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0);
+        (Instant::now(), unix)
+    });
+    base + anchor.elapsed().as_secs_f64()
+}
+
+struct TlState {
+    active: bool,
+    rank: u32,
+    tid: u32,
+    buf: Vec<Span>,
+    /// Per-(src,dst,tag) message sequence numbers for flow-id pairing.
+    flow_seq: HashMap<(u32, u32, u64), u64>,
+}
+
+thread_local! {
+    static TL: RefCell<TlState> = RefCell::new(TlState {
+        active: false,
+        rank: 0,
+        tid: 0,
+        buf: Vec::new(),
+        flow_seq: HashMap::new(),
+    });
+}
+
+fn flush_tl() {
+    TL.with(|tl| {
+        let mut tl = tl.borrow_mut();
+        if tl.buf.is_empty() {
+            return;
+        }
+        let mut c = COLLECTOR.lock().unwrap_or_else(|e| e.into_inner());
+        c.append(&mut tl.buf);
+    });
+}
+
+// ------------------------------------------------------------- recording
+
+struct LiveSpan {
+    name: &'static str,
+    cat: Category,
+    rank: u32,
+    tid: u32,
+    t_start: f64,
+    args: Vec<(&'static str, f64)>,
+    flow_out: u64,
+    flow_in: u64,
+}
+
+/// An open span; records itself into the thread-local buffer on drop.
+/// Inert (all methods no-ops) when tracing is disabled or the current
+/// thread is not part of a traced runtime.
+pub struct SpanGuard {
+    live: Option<LiveSpan>,
+}
+
+/// Open a span.  The cheap path: one atomic load when tracing is off.
+#[inline]
+pub fn span(name: &'static str, cat: Category) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { live: None };
+    }
+    let live = TL.with(|tl| {
+        let tl = tl.borrow();
+        if !tl.active {
+            return None;
+        }
+        Some(LiveSpan {
+            name,
+            cat,
+            rank: tl.rank,
+            tid: tl.tid,
+            t_start: now(),
+            args: Vec::new(),
+            flow_out: 0,
+            flow_in: 0,
+        })
+    });
+    SpanGuard { live }
+}
+
+impl SpanGuard {
+    /// Is this span actually recording?  Lets call sites skip arg
+    /// computation entirely on the disabled path.
+    #[inline]
+    pub fn is_active(&self) -> bool {
+        self.live.is_some()
+    }
+
+    /// Attach a numeric annotation.
+    #[inline]
+    pub fn arg(&mut self, key: &'static str, val: f64) {
+        if let Some(live) = &mut self.live {
+            live.args.push((key, val));
+        }
+    }
+
+    /// Mark this span as the sending side of flow `id` (from
+    /// [`flow_point`]).  Zero ids are ignored.
+    #[inline]
+    pub fn flow_out(&mut self, id: u64) {
+        if let Some(live) = &mut self.live {
+            live.flow_out = id;
+        }
+    }
+
+    /// Mark this span as the receiving side of flow `id`.
+    #[inline]
+    pub fn flow_in(&mut self, id: u64) {
+        if let Some(live) = &mut self.live {
+            live.flow_in = id;
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(live) = self.live.take() {
+            let t_end = now();
+            TL.with(|tl| {
+                let mut tl = tl.borrow_mut();
+                if tl.buf.len() >= BUF_CAP {
+                    DROPPED.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                tl.buf.push(Span {
+                    name: Cow::Borrowed(live.name),
+                    cat: live.cat,
+                    rank: live.rank,
+                    tid: live.tid,
+                    t_start: live.t_start,
+                    t_end,
+                    args: live.args.into_iter().map(|(k, v)| (Cow::Borrowed(k), v)).collect(),
+                    flow_out: live.flow_out,
+                    flow_in: live.flow_in,
+                });
+            });
+        }
+    }
+}
+
+fn mix3(a: u64, b: u64, c: u64) -> u64 {
+    let mut x = a
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(b.rotate_left(17))
+        .wrapping_add(c.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x | 1 // zero means "no flow"
+}
+
+/// Next flow id for the `(src, dst, tag)` channel, as seen from the
+/// calling thread.  Both endpoints derive the same id independently:
+/// the sender calls this when posting, the receiver when taking, and
+/// mailbox FIFO ordering per `(src, tag)` guarantees the k-th post
+/// pairs with the k-th take.  Returns 0 (ignored) when not tracing.
+pub fn flow_point(src: usize, dst: usize, tag: u64) -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    TL.with(|tl| {
+        let mut tl = tl.borrow_mut();
+        if !tl.active {
+            return 0;
+        }
+        let seq = tl.flow_seq.entry((src as u32, dst as u32, tag)).or_insert(0);
+        *seq += 1;
+        mix3(((src as u64) << 32) | dst as u64, tag, *seq)
+    })
+}
+
+// ---------------------------------------------------------------- scopes
+
+/// A live trace session: owns the process-global enable flag.  Created
+/// by the runtime when tracing is requested; [`Session::finish`] yields
+/// the collected [`TraceData`].
+pub struct Session {
+    _lock: MutexGuard<'static, ()>,
+}
+
+/// Start a trace session.  Blocks until any concurrent session in this
+/// process finishes (sessions are serialized; see module docs).
+pub fn begin_session() -> Session {
+    let lock = SESSION.lock().unwrap_or_else(|e| e.into_inner());
+    COLLECTOR.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    DROPPED.store(0, Ordering::SeqCst);
+    ENABLED.store(true, Ordering::SeqCst);
+    Session { _lock: lock }
+}
+
+impl Session {
+    /// End the session and take every span flushed so far.  Call after
+    /// all rank scopes have dropped (the SPMD join guarantees this).
+    pub fn finish(self) -> TraceData {
+        ENABLED.store(false, Ordering::SeqCst);
+        let spans = std::mem::take(&mut *COLLECTOR.lock().unwrap_or_else(|e| e.into_inner()));
+        TraceData { spans, dropped: DROPPED.swap(0, Ordering::SeqCst) }
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        ENABLED.store(false, Ordering::SeqCst);
+    }
+}
+
+/// Marks the current thread as rank `rank`'s main thread for the span
+/// APIs.  Flushes and deactivates on drop.
+pub struct RankScope {
+    _not_send: std::marker::PhantomData<*const ()>,
+}
+
+pub fn rank_scope(rank: usize) -> RankScope {
+    TL.with(|tl| {
+        let mut tl = tl.borrow_mut();
+        tl.active = true;
+        tl.rank = rank as u32;
+        tl.tid = rank as u32 * TIDS_PER_RANK;
+        tl.buf.clear();
+        tl.flow_seq.clear();
+    });
+    RankScope { _not_send: std::marker::PhantomData }
+}
+
+impl Drop for RankScope {
+    fn drop(&mut self) {
+        flush_tl();
+        TL.with(|tl| tl.borrow_mut().active = false);
+    }
+}
+
+/// Tracing identity of the thread that *launches* a parallel region —
+/// captured before handing work to pool threads, which carry no
+/// activation of their own.
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelAttr {
+    rank: u32,
+}
+
+/// Capture the launching thread's tracing identity, or `None` when the
+/// region should run untraced.
+pub fn parallel_attr() -> Option<ParallelAttr> {
+    if !enabled() {
+        return None;
+    }
+    TL.with(|tl| {
+        let tl = tl.borrow();
+        tl.active.then_some(ParallelAttr { rank: tl.rank })
+    })
+}
+
+/// Activates span recording on a pool worker thread for the duration of
+/// one parallel region, as worker slot `slot` of the captured rank.
+/// Saves and restores the thread's previous identity (pool threads are
+/// shared), flushing recorded spans on drop.
+pub struct WorkerScope {
+    prev: (bool, u32, u32),
+}
+
+pub fn worker_scope(attr: ParallelAttr, slot: usize) -> WorkerScope {
+    debug_assert!(
+        (slot as u32) < TIDS_PER_RANK - 1,
+        "worker slot {slot} overflows the per-rank virtual-tid block"
+    );
+    TL.with(|tl| {
+        let mut tl = tl.borrow_mut();
+        let prev = (tl.active, tl.rank, tl.tid);
+        tl.active = true;
+        tl.rank = attr.rank;
+        tl.tid = attr.rank * TIDS_PER_RANK + 1 + slot as u32;
+        WorkerScope { prev }
+    })
+}
+
+impl Drop for WorkerScope {
+    fn drop(&mut self) {
+        flush_tl();
+        TL.with(|tl| {
+            let mut tl = tl.borrow_mut();
+            (tl.active, tl.rank, tl.tid) = self.prev;
+        });
+    }
+}
+
+// ------------------------------------------------------------ trace data
+
+/// Every span of one run, gathered to rank 0.  `WireData`, so worker
+/// processes ship theirs over the reserved trace-gather tag.
+#[derive(Clone, Debug, Default)]
+pub struct TraceData {
+    pub spans: Vec<Span>,
+    /// Spans lost to the per-thread buffer cap (0 in healthy traces).
+    pub dropped: u64,
+}
+
+impl Data for TraceData {
+    fn byte_size(&self) -> usize {
+        16 + self.spans.iter().map(|s| s.byte_size()).sum::<usize>()
+    }
+}
+
+impl WireData for TraceData {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.spans.encode(out);
+        self.dropped.encode(out);
+    }
+    fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
+        Ok(TraceData { spans: Vec::decode(r)?, dropped: u64::decode(r)? })
+    }
+}
+
+impl TraceData {
+    /// Fold another rank's gathered spans into this one.
+    pub fn merge(&mut self, mut other: TraceData) {
+        self.spans.append(&mut other.spans);
+        self.dropped += other.dropped;
+    }
+
+    /// Export as Chrome-trace JSON (the `{"traceEvents": [...]}` object
+    /// format): one process per rank, one thread per worker, `ph:"X"`
+    /// complete events in microseconds relative to the earliest span,
+    /// and `ph:"s"`/`ph:"f"` flow arrows for send→recv pairs.  Loadable
+    /// in Perfetto / `chrome://tracing`.
+    pub fn chrome_json(&self) -> String {
+        let t0 = self
+            .spans
+            .iter()
+            .map(|s| s.t_start)
+            .fold(f64::INFINITY, f64::min);
+        let t0 = if t0.is_finite() { t0 } else { 0.0 }; // empty trace
+        let us = |t: f64| (t - t0) * 1e6;
+
+        let mut ranks: BTreeMap<u32, ()> = BTreeMap::new();
+        let mut threads: BTreeMap<(u32, u32), ()> = BTreeMap::new();
+        for s in &self.spans {
+            ranks.insert(s.rank, ());
+            threads.insert((s.rank, s.tid), ());
+        }
+
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("displayTimeUnit").str_val("ms");
+        w.key("traceEvents").begin_arr();
+
+        for &rank in ranks.keys() {
+            w.begin_obj();
+            w.key("name").str_val("process_name");
+            w.key("ph").str_val("M");
+            w.key("pid").uint(rank as u64);
+            w.key("tid").uint(0);
+            w.key("args").begin_obj();
+            w.key("name").str_val(&format!("rank {rank}"));
+            w.end_obj();
+            w.end_obj();
+            w.begin_obj();
+            w.key("name").str_val("process_sort_index");
+            w.key("ph").str_val("M");
+            w.key("pid").uint(rank as u64);
+            w.key("tid").uint(0);
+            w.key("args").begin_obj();
+            w.key("sort_index").uint(rank as u64);
+            w.end_obj();
+            w.end_obj();
+        }
+        for &(rank, tid) in threads.keys() {
+            let k = tid - rank * TIDS_PER_RANK;
+            let tname = if k == 0 {
+                "main".to_string()
+            } else {
+                format!("worker {}", k - 1)
+            };
+            w.begin_obj();
+            w.key("name").str_val("thread_name");
+            w.key("ph").str_val("M");
+            w.key("pid").uint(rank as u64);
+            w.key("tid").uint(tid as u64);
+            w.key("args").begin_obj();
+            w.key("name").str_val(&tname);
+            w.end_obj();
+            w.end_obj();
+            w.begin_obj();
+            w.key("name").str_val("thread_sort_index");
+            w.key("ph").str_val("M");
+            w.key("pid").uint(rank as u64);
+            w.key("tid").uint(tid as u64);
+            w.key("args").begin_obj();
+            w.key("sort_index").uint(k as u64);
+            w.end_obj();
+            w.end_obj();
+        }
+
+        for s in &self.spans {
+            w.begin_obj();
+            w.key("name").str_val(&s.name);
+            w.key("cat").str_val(s.cat.as_str());
+            w.key("ph").str_val("X");
+            w.key("pid").uint(s.rank as u64);
+            w.key("tid").uint(s.tid as u64);
+            w.key("ts").num(us(s.t_start));
+            w.key("dur").num((us(s.t_end) - us(s.t_start)).max(0.0));
+            if !s.args.is_empty() {
+                w.key("args").begin_obj();
+                for (k, v) in &s.args {
+                    w.key(k).num(*v);
+                }
+                w.end_obj();
+            }
+            w.end_obj();
+            // Flow arrows.  The "s" point sits at the send span's start
+            // (the post happens after it) and the "f" point at the recv
+            // span's end (the take happened before it), so arrows always
+            // run forward in time and bind to their slices.
+            if s.flow_out != 0 {
+                w.begin_obj();
+                w.key("name").str_val("msg");
+                w.key("cat").str_val("flow");
+                w.key("ph").str_val("s");
+                w.key("id").uint(s.flow_out);
+                w.key("pid").uint(s.rank as u64);
+                w.key("tid").uint(s.tid as u64);
+                w.key("ts").num(us(s.t_start));
+                w.end_obj();
+            }
+            if s.flow_in != 0 {
+                w.begin_obj();
+                w.key("name").str_val("msg");
+                w.key("cat").str_val("flow");
+                w.key("ph").str_val("f");
+                w.key("bp").str_val("e");
+                w.key("id").uint(s.flow_in);
+                w.key("pid").uint(s.rank as u64);
+                w.key("tid").uint(s.tid as u64);
+                w.key("ts").num(us(s.t_end));
+                w.end_obj();
+            }
+        }
+
+        w.end_arr();
+        w.key("otherData").begin_obj();
+        w.key("dropped_spans").uint(self.dropped);
+        w.end_obj();
+        w.end_obj();
+        w.finish()
+    }
+
+    /// Attribute measured wall time per rank to compute / collective /
+    /// transport / idle by walking each thread's span nesting, and
+    /// compare measured collective times against the virtual-clock cost
+    /// model.  `clocks` are the per-rank virtual clocks from the run
+    /// (pass `&[]` when unavailable).
+    pub fn critical_path_report(&self, clocks: &[f64]) -> String {
+        if self.spans.is_empty() {
+            return "trace: no spans recorded\n".to_string();
+        }
+
+        #[derive(Default, Clone, Copy)]
+        struct Acc {
+            compute: f64,
+            collective: f64,
+            comm: f64,
+            serve: f64,
+            idle: f64,
+            t_min: f64,
+            t_max: f64,
+            init: bool,
+        }
+        fn account(acc: &mut Acc, cat: Category, excl: f64) {
+            match cat {
+                Category::Kernel => acc.compute += excl,
+                Category::Collective => acc.collective += excl,
+                Category::Comm => acc.comm += excl,
+                Category::Serve => acc.serve += excl,
+                Category::Rank => acc.idle += excl,
+            }
+        }
+
+        let mut groups: BTreeMap<(u32, u32), Vec<&Span>> = BTreeMap::new();
+        for s in &self.spans {
+            groups.entry((s.rank, s.tid)).or_default().push(s);
+        }
+
+        let mut per_rank: BTreeMap<u32, Acc> = BTreeMap::new();
+        for ((rank, _tid), mut spans) in groups {
+            spans.sort_by(|a, b| {
+                a.t_start
+                    .total_cmp(&b.t_start)
+                    .then(b.t_end.total_cmp(&a.t_end))
+            });
+            let mut local = Acc::default();
+            // Stack walk over (assumed properly nested) spans: each
+            // span's *exclusive* time is its duration minus its direct
+            // children's, so nothing is double-counted.
+            let mut stack: Vec<(f64, f64, f64, Category)> = Vec::new();
+            for s in &spans {
+                if !local.init {
+                    local.t_min = s.t_start;
+                    local.t_max = s.t_end;
+                    local.init = true;
+                }
+                local.t_min = local.t_min.min(s.t_start);
+                local.t_max = local.t_max.max(s.t_end);
+                while stack
+                    .last()
+                    .is_some_and(|&(_, te, _, _)| te <= s.t_start + 1e-12)
+                {
+                    let (ts, te, child, cat) = stack.pop().unwrap();
+                    account(&mut local, cat, (te - ts - child).max(0.0));
+                }
+                if let Some(parent) = stack.last_mut() {
+                    parent.2 += s.t_end - s.t_start;
+                }
+                stack.push((s.t_start, s.t_end, 0.0, s.cat));
+            }
+            while let Some((ts, te, child, cat)) = stack.pop() {
+                account(&mut local, cat, (te - ts - child).max(0.0));
+            }
+            let acc = per_rank.entry(rank).or_default();
+            acc.compute += local.compute;
+            acc.collective += local.collective;
+            acc.comm += local.comm;
+            acc.serve += local.serve;
+            acc.idle += local.idle;
+            if !acc.init {
+                acc.t_min = local.t_min;
+                acc.t_max = local.t_max;
+                acc.init = true;
+            } else {
+                acc.t_min = acc.t_min.min(local.t_min);
+                acc.t_max = acc.t_max.max(local.t_max);
+            }
+        }
+
+        let ms = |s: f64| format!("{:.3}", s * 1e3);
+        let mut rows = Vec::new();
+        let mut crit: Option<(u32, f64)> = None;
+        for (&rank, acc) in &per_rank {
+            let wall = (acc.t_max - acc.t_min).max(0.0);
+            if crit.map(|(_, w)| wall > w).unwrap_or(true) {
+                crit = Some((rank, wall));
+            }
+            let vclock = clocks.get(rank as usize).copied().unwrap_or(f64::NAN);
+            rows.push(vec![
+                rank.to_string(),
+                ms(wall),
+                ms(acc.compute),
+                ms(acc.collective),
+                ms(acc.comm),
+                ms(acc.serve),
+                ms(acc.idle),
+                if vclock.is_finite() { format!("{vclock:.6}") } else { "-".into() },
+            ]);
+        }
+
+        let mut out = String::new();
+        out.push_str("critical-path report (measured wall time, exclusive per category)\n");
+        out.push_str(&crate::metrics::render_table(
+            &[
+                "rank",
+                "wall(ms)",
+                "compute(ms)",
+                "collective(ms)",
+                "comm(ms)",
+                "serve(ms)",
+                "idle(ms)",
+                "virt clock(s)",
+            ],
+            &rows,
+        ));
+        if let Some((rank, wall)) = crit {
+            out.push_str(&format!(
+                "critical rank: {rank} ({} ms measured — the T_P contributor)\n",
+                ms(wall)
+            ));
+        }
+
+        // Per-collective measured vs virtual-clock deltas.
+        let mut per_coll: BTreeMap<&str, (u64, f64, f64)> = BTreeMap::new();
+        for s in &self.spans {
+            if s.cat != Category::Collective {
+                continue;
+            }
+            let e = per_coll.entry(s.name.as_ref()).or_default();
+            e.0 += 1;
+            e.1 += (s.t_end - s.t_start).max(0.0);
+            if let (Some(v0), Some(v1)) = (s.arg("v_start"), s.arg("v_end")) {
+                e.2 += (v1 - v0).max(0.0);
+            }
+        }
+        if !per_coll.is_empty() {
+            let rows: Vec<Vec<String>> = per_coll
+                .iter()
+                .map(|(name, &(n, meas, virt))| {
+                    vec![
+                        name.to_string(),
+                        n.to_string(),
+                        ms(meas),
+                        format!("{:.6}", virt),
+                        if virt > 0.0 {
+                            format!("{:.2}", meas / virt)
+                        } else {
+                            "-".into()
+                        },
+                    ]
+                })
+                .collect();
+            out.push_str("\ncollectives: measured vs virtual clock\n");
+            out.push_str(&crate::metrics::render_table(
+                &["op", "count", "measured(ms)", "virtual(s)", "meas/virt"],
+                &rows,
+            ));
+        }
+        if self.dropped > 0 {
+            out.push_str(&format!(
+                "\nwarning: {} spans dropped (per-thread buffer cap)\n",
+                self.dropped
+            ));
+        }
+        out
+    }
+}
+
+// ----------------------------------------------------------- validation
+
+/// What [`validate_chrome`] measured while checking a trace.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceSummary {
+    /// All events in `traceEvents`.
+    pub events: usize,
+    /// `ph:"X"` complete events.
+    pub x_events: usize,
+    /// Distinct pids (ranks).
+    pub ranks: usize,
+    /// Distinct (pid, tid) pairs among X events.
+    pub threads: usize,
+    /// Flow ids with both an `s` and an `f` event.
+    pub flow_pairs: usize,
+    /// `s` events with no matching `f` (receiver outside the trace).
+    pub unmatched_send: usize,
+}
+
+/// Validate Chrome-trace JSON structurally: parses, every `ph:"X"` event
+/// is well-formed with `dur >= 0` (i.e. `t_end >= t_start`), no tid is
+/// shared by two pids (cross-rank collision), every flow `f` pairs with
+/// exactly one `s` (and, when `strict_flows`, vice versa).  Used by the
+/// round-trip tests and the `trace_check` CI binary.
+pub fn validate_chrome(json: &str, strict_flows: bool) -> Result<TraceSummary, String> {
+    let root = mini_json::parse(json)?;
+    let events = root
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .ok_or("missing traceEvents array")?;
+
+    let mut summary = TraceSummary { events: events.len(), ..Default::default() };
+    let mut tid_owner: HashMap<u64, u64> = HashMap::new();
+    let mut pids: HashMap<u64, ()> = HashMap::new();
+    let mut threads: HashMap<(u64, u64), ()> = HashMap::new();
+    let mut sends: HashMap<u64, usize> = HashMap::new();
+    let mut recvs: HashMap<u64, usize> = HashMap::new();
+
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("event {i}: missing ph"))?;
+        let field = |k: &str| -> Result<f64, String> {
+            ev.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("event {i} (ph {ph}): missing numeric {k}"))
+        };
+        match ph {
+            "X" => {
+                ev.get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| format!("event {i}: X without name"))?;
+                let pid = field("pid")? as u64;
+                let tid = field("tid")? as u64;
+                let ts = field("ts")?;
+                let dur = field("dur")?;
+                if !ts.is_finite() || !dur.is_finite() || dur < 0.0 {
+                    return Err(format!(
+                        "event {i}: bad ts/dur ({ts}/{dur}) — t_end < t_start?"
+                    ));
+                }
+                match tid_owner.entry(tid) {
+                    std::collections::hash_map::Entry::Occupied(e) if *e.get() != pid => {
+                        return Err(format!(
+                            "tid {tid} appears under both pid {} and pid {pid} — \
+                             cross-rank tid collision",
+                            e.get()
+                        ));
+                    }
+                    std::collections::hash_map::Entry::Occupied(_) => {}
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        e.insert(pid);
+                    }
+                }
+                pids.insert(pid, ());
+                threads.insert((pid, tid), ());
+                summary.x_events += 1;
+            }
+            "s" => {
+                *sends.entry(field("id")? as u64).or_insert(0) += 1;
+            }
+            "f" => {
+                *recvs.entry(field("id")? as u64).or_insert(0) += 1;
+            }
+            "M" => {}
+            other => return Err(format!("event {i}: unexpected ph {other:?}")),
+        }
+    }
+
+    for (&id, &n) in &sends {
+        if n > 1 {
+            return Err(format!("flow id {id}: {n} send events (ids must be unique)"));
+        }
+    }
+    for (&id, &n) in &recvs {
+        if n > 1 {
+            return Err(format!("flow id {id}: {n} recv events (ids must be unique)"));
+        }
+        if !sends.contains_key(&id) {
+            return Err(format!("flow id {id}: recv (ph f) without a matching send"));
+        }
+    }
+    for &id in sends.keys() {
+        if recvs.contains_key(&id) {
+            summary.flow_pairs += 1;
+        } else {
+            summary.unmatched_send += 1;
+        }
+    }
+    if strict_flows && summary.unmatched_send > 0 {
+        return Err(format!(
+            "{} send flow events without a matching recv",
+            summary.unmatched_send
+        ));
+    }
+
+    summary.ranks = pids.len();
+    summary.threads = threads.len();
+    Ok(summary)
+}
+
+/// A deliberately small JSON reader — just enough to validate our own
+/// Chrome-trace output without a parsing dependency.
+mod mini_json {
+    pub enum Value {
+        Null,
+        Bool(bool),
+        Num(f64),
+        Str(String),
+        Arr(Vec<Value>),
+        Obj(Vec<(String, Value)>),
+    }
+
+    impl Value {
+        pub fn get(&self, key: &str) -> Option<&Value> {
+            match self {
+                Value::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+                _ => None,
+            }
+        }
+        pub fn as_f64(&self) -> Option<f64> {
+            match self {
+                Value::Num(n) => Some(*n),
+                _ => None,
+            }
+        }
+        pub fn as_str(&self) -> Option<&str> {
+            match self {
+                Value::Str(s) => Some(s),
+                _ => None,
+            }
+        }
+        pub fn as_arr(&self) -> Option<&[Value]> {
+            match self {
+                Value::Arr(v) => Some(v),
+                _ => None,
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Value, String> {
+        let mut p = P { b: s.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing bytes at offset {}", p.i));
+        }
+        Ok(v)
+    }
+
+    struct P<'a> {
+        b: &'a [u8],
+        i: usize,
+    }
+
+    impl P<'_> {
+        fn ws(&mut self) {
+            while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r')
+            {
+                self.i += 1;
+            }
+        }
+
+        fn peek(&self) -> Option<u8> {
+            self.b.get(self.i).copied()
+        }
+
+        fn expect(&mut self, c: u8) -> Result<(), String> {
+            if self.peek() == Some(c) {
+                self.i += 1;
+                Ok(())
+            } else {
+                Err(format!("expected {:?} at offset {}", c as char, self.i))
+            }
+        }
+
+        fn value(&mut self) -> Result<Value, String> {
+            match self.peek().ok_or("unexpected end of input")? {
+                b'{' => self.obj(),
+                b'[' => self.arr(),
+                b'"' => Ok(Value::Str(self.string()?)),
+                b't' => self.lit("true", Value::Bool(true)),
+                b'f' => self.lit("false", Value::Bool(false)),
+                b'n' => self.lit("null", Value::Null),
+                _ => self.num(),
+            }
+        }
+
+        fn lit(&mut self, word: &str, v: Value) -> Result<Value, String> {
+            if self.b[self.i..].starts_with(word.as_bytes()) {
+                self.i += word.len();
+                Ok(v)
+            } else {
+                Err(format!("bad literal at offset {}", self.i))
+            }
+        }
+
+        fn num(&mut self) -> Result<Value, String> {
+            let start = self.i;
+            while self
+                .peek()
+                .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E'))
+            {
+                self.i += 1;
+            }
+            std::str::from_utf8(&self.b[start..self.i])
+                .ok()
+                .and_then(|s| s.parse::<f64>().ok())
+                .map(Value::Num)
+                .ok_or_else(|| format!("bad number at offset {start}"))
+        }
+
+        fn string(&mut self) -> Result<String, String> {
+            self.expect(b'"')?;
+            let mut out = String::new();
+            loop {
+                match self.peek().ok_or("unterminated string")? {
+                    b'"' => {
+                        self.i += 1;
+                        return Ok(out);
+                    }
+                    b'\\' => {
+                        self.i += 1;
+                        match self.peek().ok_or("unterminated escape")? {
+                            b'"' => out.push('"'),
+                            b'\\' => out.push('\\'),
+                            b'/' => out.push('/'),
+                            b'n' => out.push('\n'),
+                            b't' => out.push('\t'),
+                            b'r' => out.push('\r'),
+                            b'b' => out.push('\u{8}'),
+                            b'f' => out.push('\u{c}'),
+                            b'u' => {
+                                if self.i + 4 >= self.b.len() {
+                                    return Err("truncated \\u escape".into());
+                                }
+                                let raw = &self.b[self.i + 1..self.i + 5];
+                                let hex = std::str::from_utf8(raw).map_err(|_| "bad \\u escape")?;
+                                let cp = u32::from_str_radix(hex, 16)
+                                    .map_err(|_| "bad \\u escape")?;
+                                out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                                self.i += 4;
+                            }
+                            c => return Err(format!("bad escape \\{}", c as char)),
+                        }
+                        self.i += 1;
+                    }
+                    _ => {
+                        // consume one UTF-8 scalar
+                        let rest = std::str::from_utf8(&self.b[self.i..])
+                            .map_err(|_| "invalid UTF-8 in string")?;
+                        let c = rest.chars().next().unwrap();
+                        out.push(c);
+                        self.i += c.len_utf8();
+                    }
+                }
+            }
+        }
+
+        fn obj(&mut self) -> Result<Value, String> {
+            self.expect(b'{')?;
+            let mut kv = Vec::new();
+            self.ws();
+            if self.peek() == Some(b'}') {
+                self.i += 1;
+                return Ok(Value::Obj(kv));
+            }
+            loop {
+                self.ws();
+                let k = self.string()?;
+                self.ws();
+                self.expect(b':')?;
+                self.ws();
+                let v = self.value()?;
+                kv.push((k, v));
+                self.ws();
+                match self.peek() {
+                    Some(b',') => self.i += 1,
+                    Some(b'}') => {
+                        self.i += 1;
+                        return Ok(Value::Obj(kv));
+                    }
+                    _ => return Err(format!("expected , or }} at offset {}", self.i)),
+                }
+            }
+        }
+
+        fn arr(&mut self) -> Result<Value, String> {
+            self.expect(b'[')?;
+            let mut items = Vec::new();
+            self.ws();
+            if self.peek() == Some(b']') {
+                self.i += 1;
+                return Ok(Value::Arr(items));
+            }
+            loop {
+                self.ws();
+                items.push(self.value()?);
+                self.ws();
+                match self.peek() {
+                    Some(b',') => self.i += 1,
+                    Some(b']') => {
+                        self.i += 1;
+                        return Ok(Value::Arr(items));
+                    }
+                    _ => return Err(format!("expected , or ] at offset {}", self.i)),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(name: &'static str, cat: Category, rank: u32, tid: u32, t0: f64, t1: f64) -> Span {
+        Span {
+            name: Cow::Borrowed(name),
+            cat,
+            rank,
+            tid,
+            t_start: t0,
+            t_end: t1,
+            args: Vec::new(),
+            flow_out: 0,
+            flow_in: 0,
+        }
+    }
+
+    #[test]
+    fn span_wire_roundtrip_preserves_everything() {
+        let mut s = mk("bcast", Category::Collective, 3, 3 * TIDS_PER_RANK, 1.5, 2.5);
+        s.args.push((Cow::Borrowed("bytes"), 4096.0));
+        s.args.push((Cow::Borrowed("v_start"), 0.25));
+        s.flow_out = 77;
+        s.flow_in = 99;
+        let mut buf = Vec::new();
+        s.encode(&mut buf);
+        assert_eq!(buf.len(), s.byte_size(), "byte_size must match encoding");
+        let mut r = WireReader::new(&buf);
+        let d = Span::decode(&mut r).unwrap();
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(d.name, "bcast");
+        assert_eq!(d.cat, Category::Collective);
+        assert_eq!((d.rank, d.tid), (3, 3 * TIDS_PER_RANK));
+        assert_eq!((d.t_start, d.t_end), (1.5, 2.5));
+        assert_eq!(d.args.len(), 2);
+        assert_eq!(d.arg("bytes"), Some(4096.0));
+        assert_eq!((d.flow_out, d.flow_in), (77, 99));
+    }
+
+    #[test]
+    fn trace_data_wire_roundtrip() {
+        let td = TraceData {
+            spans: vec![
+                mk("a", Category::Kernel, 0, 0, 0.0, 1.0),
+                mk("b", Category::Comm, 1, TIDS_PER_RANK, 0.5, 0.75),
+            ],
+            dropped: 3,
+        };
+        let mut buf = Vec::new();
+        td.encode(&mut buf);
+        let mut r = WireReader::new(&buf);
+        let d = TraceData::decode(&mut r).unwrap();
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(d.spans.len(), 2);
+        assert_eq!(d.dropped, 3);
+        assert_eq!(d.spans[1].name, "b");
+    }
+
+    #[test]
+    fn flow_ids_are_nonzero_and_sequence_dependent() {
+        let a = mix3(1 << 32 | 2, 42, 1);
+        let b = mix3(1 << 32 | 2, 42, 2);
+        let c = mix3(2 << 32 | 1, 42, 1);
+        assert_ne!(a, 0);
+        assert_ne!(a, b, "same channel, different seq");
+        assert_ne!(a, c, "direction must distinguish ids");
+        assert_eq!(a, mix3(1 << 32 | 2, 42, 1), "deterministic");
+    }
+
+    #[test]
+    fn session_records_spans_with_rank_tids() {
+        let session = begin_session();
+        {
+            let _rs = rank_scope(2);
+            let mut sp = span("work", Category::Kernel);
+            assert!(sp.is_active());
+            sp.arg("bytes", 64.0);
+            drop(sp);
+            let id = flow_point(2, 0, 7);
+            assert_ne!(id, 0);
+        }
+        let td = session.finish();
+        assert_eq!(td.spans.len(), 1);
+        assert_eq!(td.dropped, 0);
+        assert_eq!(td.spans[0].rank, 2);
+        assert_eq!(td.spans[0].tid, 2 * TIDS_PER_RANK);
+        assert!(td.spans[0].t_end >= td.spans[0].t_start);
+        assert_eq!(td.spans[0].arg("bytes"), Some(64.0));
+        // after finish, everything is inert again
+        assert!(!enabled());
+        assert!(!span("x", Category::Kernel).is_active());
+        assert_eq!(flow_point(0, 1, 0), 0);
+    }
+
+    #[test]
+    fn spans_outside_a_rank_scope_are_inert_even_mid_session() {
+        let session = begin_session();
+        // this thread never entered a rank scope: a concurrent untraced
+        // runtime in the same process must not pollute the session
+        assert!(!span("stray", Category::Comm).is_active());
+        assert_eq!(flow_point(0, 1, 5), 0);
+        let td = session.finish();
+        assert_eq!(td.spans.len(), 0);
+    }
+
+    #[test]
+    fn worker_scope_assigns_per_slot_tids_and_restores() {
+        let session = begin_session();
+        {
+            let _rs = rank_scope(1);
+            let attr = parallel_attr().expect("active rank thread has an attr");
+            {
+                let _ws = worker_scope(attr, 3);
+                let sp = span("tile", Category::Kernel);
+                assert!(sp.is_active());
+                drop(sp);
+            }
+            // restored to the rank's own identity
+            let sp = span("after", Category::Rank);
+            drop(sp);
+        }
+        let td = session.finish();
+        assert_eq!(td.spans.len(), 2);
+        let tile = td.spans.iter().find(|s| s.name == "tile").unwrap();
+        let after = td.spans.iter().find(|s| s.name == "after").unwrap();
+        assert_eq!(tile.tid, TIDS_PER_RANK + 1 + 3);
+        assert_eq!(tile.rank, 1);
+        assert_eq!(after.tid, TIDS_PER_RANK);
+    }
+
+    #[test]
+    fn chrome_json_validates_and_pairs_flows() {
+        let mut send = mk("send", Category::Comm, 0, 0, 1.0, 1.1);
+        send.flow_out = 1234;
+        let mut recv = mk("recv", Category::Comm, 1, TIDS_PER_RANK, 1.05, 1.2);
+        recv.flow_in = 1234;
+        let td = TraceData {
+            spans: vec![
+                mk("rank", Category::Rank, 0, 0, 0.0, 2.0),
+                mk("rank", Category::Rank, 1, TIDS_PER_RANK, 0.0, 2.0),
+                send,
+                recv,
+                mk("tile", Category::Kernel, 0, 1, 0.2, 0.9),
+            ],
+            dropped: 0,
+        };
+        let json = td.chrome_json();
+        let sum = validate_chrome(&json, true).expect("valid chrome trace");
+        assert_eq!(sum.x_events, 5);
+        assert_eq!(sum.ranks, 2);
+        assert_eq!(sum.threads, 3);
+        assert_eq!(sum.flow_pairs, 1);
+        assert_eq!(sum.unmatched_send, 0);
+    }
+
+    #[test]
+    fn validator_rejects_cross_rank_tid_collisions_and_bad_flows() {
+        // two pids sharing tid 0
+        let td = TraceData {
+            spans: vec![
+                mk("a", Category::Rank, 0, 0, 0.0, 1.0),
+                mk("b", Category::Rank, 1, 0, 0.0, 1.0),
+            ],
+            dropped: 0,
+        };
+        let err = validate_chrome(&td.chrome_json(), false).unwrap_err();
+        assert!(err.contains("collision"), "{err}");
+
+        // recv without a send
+        let mut orphan = mk("recv", Category::Comm, 0, 0, 0.0, 1.0);
+        orphan.flow_in = 9;
+        let td = TraceData { spans: vec![orphan], dropped: 0 };
+        let err = validate_chrome(&td.chrome_json(), false).unwrap_err();
+        assert!(err.contains("without a matching send"), "{err}");
+
+        // send without a recv: ok lax, error strict
+        let mut dangling = mk("send", Category::Comm, 0, 0, 0.0, 1.0);
+        dangling.flow_out = 9;
+        let td = TraceData { spans: vec![dangling], dropped: 0 };
+        assert_eq!(validate_chrome(&td.chrome_json(), false).unwrap().unmatched_send, 1);
+        assert!(validate_chrome(&td.chrome_json(), true).is_err());
+    }
+
+    #[test]
+    fn critical_path_attributes_exclusive_time() {
+        // rank span 0..10s, one collective 1..4 containing a comm 2..3,
+        // one kernel 5..9.  Exclusive: rank=idle 10-3-4=3, collective
+        // 3-1=2, comm 1, kernel 4.
+        let td = TraceData {
+            spans: vec![
+                mk("rank", Category::Rank, 0, 0, 0.0, 10.0),
+                mk("bcast", Category::Collective, 0, 0, 1.0, 4.0),
+                mk("recv", Category::Comm, 0, 0, 2.0, 3.0),
+                mk("tile", Category::Kernel, 0, 0, 5.0, 9.0),
+            ],
+            dropped: 0,
+        };
+        let report = td.critical_path_report(&[0.125]);
+        assert!(report.contains("4000.000"), "kernel exclusive:\n{report}");
+        assert!(report.contains("2000.000"), "collective exclusive:\n{report}");
+        assert!(report.contains("1000.000"), "comm exclusive:\n{report}");
+        assert!(report.contains("3000.000"), "idle:\n{report}");
+        assert!(report.contains("critical rank: 0"), "{report}");
+        assert!(report.contains("0.125000"), "virtual clock column:\n{report}");
+        assert!(report.contains("bcast"), "per-collective table:\n{report}");
+    }
+
+    #[test]
+    fn mini_json_parses_escapes_and_numbers() {
+        let v = mini_json::parse(
+            "{\"a\": [1, -2.5e3, true, null, \"x\\n\\u0041\"], \"b\": {}}",
+        )
+        .unwrap();
+        let arr = v.get("a").and_then(|a| a.as_arr()).unwrap();
+        assert_eq!(arr.len(), 5);
+        assert_eq!(arr[0].as_f64(), Some(1.0));
+        assert_eq!(arr[1].as_f64(), Some(-2500.0));
+        assert_eq!(arr[4].as_str(), Some("x\nA"));
+        assert!(mini_json::parse("{\"a\":}").is_err());
+        assert!(mini_json::parse("[1,]").is_err());
+    }
+}

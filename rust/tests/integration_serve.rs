@@ -153,6 +153,53 @@ fn tcp_client_round_trip_and_shutdown() {
     assert_eq!(report.rejected, 1);
 }
 
+/// `repro stats` against a live pool: the TCP `Request::Stats` path
+/// must report queue depth, occupancy, and per-job gflops/queue-wait
+/// that agree with the dispatcher-local `job_report`/`stats` view.
+#[test]
+fn tcp_stats_match_the_dispatcher_view() {
+    let rt = serving_rt(3); // pool of 2
+    let opts = ServeOptions {
+        listen: Some("127.0.0.1:0".into()),
+        ..ServeOptions::default()
+    };
+    let ((remote, local, report_gflops), report) = rt
+        .serve(opts, |h| {
+            let addr = h.listen_addr().expect("listener must come up");
+            let mut client = ServeClient::connect(addr).expect("connect");
+            let id = client
+                .submit(JobSpec::Matmul { q: 1, b: 8, seed_a: 7, seed_b: 8 })
+                .expect("submit");
+            client.wait(id).expect("wire wait").expect("job result");
+            let remote = client.stats().expect("stats over TCP");
+            let local = h.stats();
+            let report_gflops = h.job_report(id).expect("job report").max_gflops;
+            client.shutdown().expect("shutdown request");
+            h.wait_shutdown();
+            (remote, local, report_gflops)
+        })
+        .expect("serve");
+
+    // the wire snapshot is the dispatcher snapshot, verbatim
+    assert_eq!(remote, local, "TCP stats must mirror ServeHandle::stats");
+    assert_eq!(remote.capacity, 2);
+    assert_eq!(remote.busy, 0, "pool must be idle after the job drained");
+    assert_eq!(remote.occupancy(), 0.0);
+    assert_eq!(remote.queue_depth, 0);
+    assert_eq!(remote.done, 1);
+    assert_eq!(remote.latency.count, 1);
+    assert_eq!(remote.queue_wait.count, 1);
+
+    // the roster row agrees with the per-job report
+    let row = remote.jobs.iter().find(|j| j.status == "done").expect("done row");
+    assert_eq!(row.kind, "matmul");
+    assert!(row.queue_wait_secs >= 0.0, "assigned job must carry its wait");
+    assert_eq!(row.gflops, report_gflops, "roster gflops must match job_report");
+
+    assert_eq!(report.done, 1);
+    assert_eq!(report.queue_wait.count(), 1);
+}
+
 /// A job's output is handed over exactly once; terminal status stays
 /// queryable afterwards.
 #[test]

@@ -1,0 +1,110 @@
+//! Integration tests for the distributed tracing layer: a traced
+//! world-4 SPMD run must gather to a valid Chrome-trace JSON (per-rank
+//! processes, paired send→recv flow events, no cross-rank tid
+//! collisions — all enforced by `trace::validate_chrome` in strict
+//! mode), and tracing compiled in but *disabled* must add zero
+//! transport messages to the exact same workload.
+
+use foopar::algos::cannon::mmm_cannon;
+use foopar::matrix::block::BlockSource;
+use foopar::runtime::compute::Compute;
+use foopar::testing::test_threads;
+use foopar::trace;
+use foopar::Runtime;
+
+/// The shared workload: Cannon's algorithm at world 4 (q=2) touches
+/// every instrumented layer — collectives (shifts/gathers), transport
+/// point-to-point, and GEMM kernels.
+fn run_cannon(traced: bool) -> foopar::spmd::RunResult<()> {
+    let mut builder = Runtime::builder().world(4).threads_per_rank(test_threads());
+    if traced {
+        builder = builder.trace_collect();
+    }
+    let rt = builder.build().expect("runtime");
+    let a = BlockSource::real(8, 11);
+    let b = BlockSource::real(8, 12);
+    rt.run(|ctx| {
+        let out = mmm_cannon(ctx, &Compute::Native, 2, &a, &b);
+        assert!(out.c_block.is_some(), "every rank owns a C block");
+    })
+}
+
+#[test]
+fn traced_world4_run_gathers_a_valid_chrome_trace() {
+    let res = run_cannon(true);
+    let td = res.trace.expect("trace_collect must gather spans");
+    assert_eq!(td.dropped, 0, "the ring buffer must not drop spans at this scale");
+    assert!(!td.spans.is_empty());
+
+    // raw span sanity before export
+    for s in &td.spans {
+        assert!(
+            s.t_end >= s.t_start,
+            "span '{}' on rank {} ends before it starts",
+            s.name,
+            s.rank
+        );
+    }
+    let has_cat = |c: trace::Category| td.spans.iter().any(|s| s.cat == c);
+    assert!(has_cat(trace::Category::Rank), "every rank body is a root span");
+    assert!(has_cat(trace::Category::Collective), "cannon issues collectives");
+    assert!(has_cat(trace::Category::Comm), "cannon moves blocks point-to-point");
+
+    // collectives must carry the virtual-clock window for the
+    // measured-vs-modeled deltas in the critical-path report
+    let coll = td
+        .spans
+        .iter()
+        .find(|s| s.cat == trace::Category::Collective)
+        .expect("collective span");
+    assert!(
+        coll.args.iter().any(|(k, _)| k.as_ref() == "v_start"),
+        "collective spans must record their virtual-clock start"
+    );
+
+    // export and validate strictly: per-rank processes, t_end >= t_start
+    // on every X event, flow send/recv pairs, no cross-rank tid reuse
+    let json = td.chrome_json();
+    let summary = trace::validate_chrome(&json, true).expect("strict chrome validation");
+    assert_eq!(summary.ranks, 4, "one Perfetto process per rank");
+    assert_eq!(summary.unmatched_send, 0, "in-process gather sees both flow ends");
+    assert!(summary.flow_pairs > 0, "send→recv flow events must pair off");
+    assert!(summary.x_events > 0);
+
+    // the critical-path walk must attribute every rank's wall time:
+    // one table row per rank (first column) plus the T_P call-out
+    let report = td.critical_path_report(&res.clocks);
+    for rank in 0..4u32 {
+        let has_row = report
+            .lines()
+            .any(|l| l.split_whitespace().next() == Some(rank.to_string().as_str()));
+        assert!(has_row, "missing row for rank {rank}:\n{report}");
+    }
+    assert!(report.contains("critical rank:"), "missing T_P call-out:\n{report}");
+}
+
+#[test]
+fn disabled_tracing_adds_zero_transport_messages() {
+    let plain = run_cannon(false);
+    let traced = run_cannon(true);
+
+    assert!(plain.trace.is_none(), "no trace without opt-in");
+    assert!(traced.trace.is_some());
+
+    let msgs = |r: &foopar::spmd::RunResult<()>| -> (u64, u64) {
+        let sent = r.metrics.iter().map(|m| m.msgs_sent).sum();
+        let recv = r.metrics.iter().map(|m| m.msgs_recv).sum();
+        (sent, recv)
+    };
+    let (plain_sent, plain_recv) = msgs(&plain);
+    let (traced_sent, traced_recv) = msgs(&traced);
+    assert!(plain_sent > 0, "the workload must actually communicate");
+    // tracing rides the shared in-process collector (and, multi-process,
+    // a reserved tag outside the metrics path) — the instrumented run
+    // must move exactly the same transport messages as the plain one
+    assert_eq!(plain_sent, traced_sent, "tracing added/removed sends");
+    assert_eq!(plain_recv, traced_recv, "tracing added/removed receives");
+
+    // and the virtual-time results must be untouched by instrumentation
+    assert_eq!(plain.t_parallel, traced.t_parallel, "tracing perturbed the cost model");
+}
