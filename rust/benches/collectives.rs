@@ -1,0 +1,161 @@
+//! Bench: flat vs two-level collectives on a hierarchical world.
+//!
+//! Run with:  cargo bench --bench collectives
+//!
+//! World 8 at 4 ranks/node (2 nodes) with QDR-InfiniBand inter-node and
+//! shared-memory intra-node link parameters.  Each collective runs under
+//! the flat default backend and under the topology-aware `hier` backend;
+//! the measurement is the **modeled T_P** (virtual clock), which is
+//! deterministic — telephone semantics over fixed link parameters, zero
+//! wall-clock noise — so run-to-run variance is exactly zero on any
+//! machine.
+//!
+//! The subsystem's acceptance invariant is asserted here: the two-level
+//! allgather must beat the flat ring (the ring pays an inter-node hop on
+//! nearly every round; the two-level schedule crosses nodes exactly
+//! `nodes − 1` times).  Tree collectives from a node-leader root are
+//! reported but not asserted — a flat binomial over contiguous
+//! power-of-two nodes already is the two-level schedule, so those rows
+//! document a tie rather than a win.
+//!
+//! Emits `BENCH_collectives.json` for the CI bench gate.  Gate note: the
+//! `gflops` field carries **collective operations per modeled second**
+//! (the gate compares that field by name; higher is better).
+
+use std::io::Write;
+
+use foopar::comm::cost::CostParams;
+use foopar::comm::group::Group;
+use foopar::metrics::render_table;
+use foopar::Runtime;
+
+const WORLD: usize = 8;
+const RANKS_PER_NODE: usize = 4;
+const PAYLOAD: usize = 1024;
+const ITERS: usize = 32;
+
+struct Row {
+    op: String,
+    b: usize,
+    t_us: f64,
+    ops_per_sec: f64,
+}
+
+/// Modeled seconds per collective under `backend`, averaged over
+/// `ITERS` back-to-back operations (virtual clocks are deterministic —
+/// the averaging only amortizes per-run group setup).
+fn measure(op: &str, backend: &str) -> Row {
+    let op_name = op.to_string();
+    let rt = Runtime::builder()
+        .world(WORLD)
+        .transport("local")
+        .ranks_per_node(RANKS_PER_NODE)
+        .backend(backend)
+        .cost(CostParams::qdr_infiniband())
+        .build()
+        .expect("build hierarchical runtime");
+    let res = rt.run(move |ctx| {
+        let g = Group::world(ctx);
+        let me = g.index();
+        for _ in 0..ITERS {
+            match op_name.as_str() {
+                // root 1 sits mid-node: the flat binomial's rotated tree
+                // crosses the node boundary more than once
+                "bcast" => {
+                    let v = (me == 1).then(|| vec![7u8; PAYLOAD]);
+                    let got = g.bcast(1, v);
+                    assert_eq!(got.len(), PAYLOAD);
+                }
+                // root 0 is a node leader, the shape two-level reduce
+                // requires; flat is naturally hierarchical here (tie)
+                "reduce" => {
+                    let r = g.reduce(0, vec![1u8; PAYLOAD], |a, b| {
+                        a.iter().zip(&b).map(|(x, y)| x.wrapping_add(*y)).collect()
+                    });
+                    assert_eq!(r.is_some(), me == 0);
+                }
+                "allgather" => {
+                    let got = g.allgather(vec![me as u8; PAYLOAD]);
+                    assert_eq!(got.len(), WORLD);
+                }
+                "barrier" => g.barrier(),
+                other => unreachable!("unknown op {other}"),
+            }
+        }
+    });
+    let t = res.t_parallel / ITERS as f64;
+    Row {
+        op: format!("{op}_{}", if backend == "hier" { "two_level" } else { "flat" }),
+        b: PAYLOAD,
+        t_us: t * 1e6,
+        ops_per_sec: 1.0 / t,
+    }
+}
+
+fn main() {
+    let ops = ["bcast", "reduce", "allgather", "barrier"];
+    let mut rows: Vec<Row> = Vec::new();
+    for op in ops {
+        rows.push(measure(op, "openmpi-fixed"));
+        rows.push(measure(op, "hier"));
+    }
+
+    println!(
+        "== collectives: flat vs two-level (world {WORLD}, {RANKS_PER_NODE} ranks/node, \
+         modeled T_P) ==\n"
+    );
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.op.clone(),
+                r.b.to_string(),
+                format!("{:.3}", r.t_us),
+                format!("{:.0}", r.ops_per_sec),
+            ]
+        })
+        .collect();
+    println!("{}", render_table(&["op", "bytes", "T_P µs/op", "ops per modeled s"], &table));
+
+    // Hand-rolled JSON (no serde in the image's crate cache).  The gate
+    // keys entries on (op, b) and compares the `gflops` field — which
+    // here carries collective ops per modeled second.
+    let entries: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "  {{\"op\": \"{}\", \"b\": {}, \"t_p_us\": {:.4}, \"gflops\": {:.2}, \
+                 \"ops_per_modeled_sec\": {:.2}}}",
+                r.op, r.b, r.t_us, r.ops_per_sec, r.ops_per_sec
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n\"bench\": \"collectives\",\n\"unit\": \"collective operations per modeled second\",\n\
+         \"note\": \"flat vs two-level collectives at world 8, 4 ranks/node; the gflops field \
+         carries ops per modeled (virtual-clock) second so the stock bench gate can compare it — \
+         the clock is deterministic, the committed baseline is conservative pending a bless on \
+         CI output\",\n\
+         \"results\": [\n{}\n]\n}}\n",
+        entries.join(",\n")
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_collectives.json");
+    let mut f = std::fs::File::create(path).expect("create BENCH_collectives.json");
+    f.write_all(json.as_bytes()).expect("write BENCH_collectives.json");
+    println!("wrote {path}");
+
+    // Acceptance invariant: the two-level allgather beats the flat ring.
+    let t_of = |name: &str| rows.iter().find(|r| r.op == name).expect("row").t_us;
+    let (flat, two) = (t_of("allgather_flat"), t_of("allgather_two_level"));
+    if two >= flat {
+        eprintln!(
+            "ERROR: two-level allgather ({two:.3} µs) did not beat the flat ring \
+             ({flat:.3} µs) at world {WORLD}, {RANKS_PER_NODE} ranks/node"
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "\ntwo-level allgather: {two:.3} µs vs flat ring {flat:.3} µs ({:.2}x)",
+        flat / two
+    );
+}

@@ -36,6 +36,7 @@ use crate::comm::backend::{BcastAlgo, ReduceAlgo};
 use crate::comm::group::Group;
 use crate::comm::message::Msg;
 use crate::comm::nb::{GroupOp, OpOutput};
+use crate::comm::transport::hier::Topology;
 
 /// Erased associative combiner: `op(a, b)` receives `a` from the lower
 /// group rank, exactly like the generic `op(a: T, b: T) -> T`.
@@ -359,6 +360,241 @@ pub fn scan_hillis_steele(g: &Group, value: Msg, op: ReduceFn) -> Msg {
     acc
 }
 
+// =============================================== two-level (hierarchical)
+//
+// Topology-aware schedules for hybrid worlds: collapse each node onto its
+// leader over cheap intra-node links, run the expensive inter-node stage
+// over leaders only, then fan the result back out inside each node.  The
+// message rounds execute over ordinary sub-[`Group`]s (partition for the
+// node parts, subgroup for the leader set), so virtual-time costs emerge
+// from the two-level link pricing on [`crate::spmd::Ctx`] exactly like
+// the flat algorithms — and results stay bit-identical to the flat
+// schedules because segments are contiguous runs in group order (see
+// [`node_segments`]) and every fold preserves the flat operand order.
+
+/// The group's node-segment sizes under `topo`, in group order — the
+/// shape two-level schedules partition by.  `None` when a hierarchical
+/// schedule is not applicable: a flat topology, a trivial group, a group
+/// confined to a single node, or members whose nodes are interleaved
+/// (each node's members must form one contiguous run in group order, or
+/// a two-level reduce would permute the fold).
+pub fn node_segments(g: &Group, topo: &Topology) -> Option<Vec<usize>> {
+    if topo.is_flat() || g.size() < 2 {
+        return None;
+    }
+    let ranks = g.ranks();
+    let mut segs: Vec<usize> = Vec::new();
+    let mut seen: Vec<usize> = Vec::new();
+    let mut cur_node = topo.node_of(ranks[0]);
+    seen.push(cur_node);
+    let mut cur_len = 1usize;
+    for &r in &ranks[1..] {
+        let n = topo.node_of(r);
+        if n == cur_node {
+            cur_len += 1;
+        } else {
+            if seen.contains(&n) {
+                return None; // node revisited: members interleaved
+            }
+            segs.push(cur_len);
+            seen.push(n);
+            cur_node = n;
+            cur_len = 1;
+        }
+    }
+    segs.push(cur_len);
+    if segs.len() < 2 {
+        return None; // single node: nothing to do at the inter level
+    }
+    Some(segs)
+}
+
+/// Group indices of the segment leaders (first member of each segment).
+fn leader_indices(segs: &[usize]) -> Vec<usize> {
+    let mut leaders = Vec::with_capacity(segs.len());
+    let mut off = 0usize;
+    for &s in segs {
+        leaders.push(off);
+        off += s;
+    }
+    leaders
+}
+
+/// Deep-copy a bundle's elements (each element is a dup-able user value
+/// or an encoded wire payload; the bundle wrapper itself never is).
+fn dup_all(v: &[Msg]) -> Vec<Msg> {
+    v.iter().map(Msg::dup).collect()
+}
+
+/// Binomial broadcast of a `Vec<Msg>` bundle: like [`bcast_binomial`]
+/// but re-wrapping the bundle per forward (`Msg::new` payloads cannot be
+/// duplicated — their *elements* can).
+fn bcast_bundle_binomial(g: &Group, root: usize, value: Option<Vec<Msg>>, tag: u64) -> Vec<Msg> {
+    let p = g.size();
+    let me = g.index();
+    let rel = (me + p - root) % p;
+    let mut val: Option<Vec<Msg>> = if rel == 0 {
+        Some(value.expect("bundle bcast root must supply a value"))
+    } else {
+        None
+    };
+    let mut mask = 1usize;
+    while mask < p {
+        if rel & mask != 0 {
+            let src = (me + p - mask) % p;
+            val = Some(g.recv_msg_from(src, tag).downcast::<Vec<Msg>>());
+            break;
+        }
+        mask <<= 1;
+    }
+    mask >>= 1;
+    let v = val.expect("bundle bcast: no value after receive phase");
+    while mask > 0 {
+        if rel + mask < p {
+            g.send_msg_to((me + mask) % p, tag, Msg::new(dup_all(&v)));
+        }
+        mask >>= 1;
+    }
+    v
+}
+
+/// Two-level broadcast: a non-leader root hands its value to its node
+/// leader (one intra hop), leaders run a binomial tree across nodes
+/// (inter links), each leader fans out inside its node (intra links).
+/// Modeled by [`crate::comm::cost::HierCost::tree_two_level`].
+pub fn bcast_two_level(g: &Group, root: usize, value: Option<Msg>, segs: &[usize]) -> Msg {
+    let me = g.index();
+    // Tag discipline: every member allocates the same parent tags in the
+    // same order (xfer hop, partition, subgroup), used or not.
+    let xfer_tag = g.next_tag();
+    let parts = g.partition(segs);
+    let leaders = leader_indices(segs);
+    let lg = g.subgroup(&leaders);
+    let root_seg = leaders.partition_point(|&l| l <= root) - 1;
+    let root_leader = leaders[root_seg];
+
+    let mut v: Option<Msg> = None;
+    if me == root {
+        let val = value.expect("bcast root must supply a value");
+        if root != root_leader {
+            g.send_msg_to(root_leader, xfer_tag, val.dup());
+        }
+        v = Some(val);
+    } else if me == root_leader && root != root_leader {
+        v = Some(g.recv_msg_from(root, xfer_tag));
+    }
+
+    if lg.is_member() {
+        v = Some(bcast_binomial(&lg, root_seg, v.take()));
+    }
+
+    let part = parts
+        .iter()
+        .find(|p| p.is_member())
+        .expect("caller is a member of exactly one node part");
+    bcast_binomial(part, 0, v.take())
+}
+
+/// Two-level reduction: each node folds to its leader over intra links,
+/// then leaders fold across nodes over inter links.  `root` must be a
+/// node leader (callers fall back to a flat schedule otherwise): the
+/// flat binomial folds members in root-rotated group order, and with
+/// contiguous segments rotated *at a segment boundary* the two-level
+/// operand order — root's segment, next segment, …, wrapping — is the
+/// very same sequence, so associative ops agree with the flat result.
+pub fn reduce_two_level(
+    g: &Group,
+    root: usize,
+    value: Msg,
+    op: ReduceFn,
+    segs: &[usize],
+) -> Option<Msg> {
+    let parts = g.partition(segs);
+    let leaders = leader_indices(segs);
+    let root_seg = leaders
+        .iter()
+        .position(|&l| l == root)
+        .expect("two-level reduce requires the root to be a node leader");
+    let lg = g.subgroup(&leaders);
+    let part = parts
+        .iter()
+        .find(|p| p.is_member())
+        .expect("caller is a member of exactly one node part");
+    // Intra fold to the leader preserves segment order (root 0 ⇒
+    // relative rank == segment rank).
+    match reduce_binomial(part, 0, value, op) {
+        Some(acc) if lg.is_member() => reduce_binomial(&lg, root_seg, acc, op),
+        _ => None,
+    }
+}
+
+/// Two-level allgather: gather each node's values at its leader (intra),
+/// ring whole-node bundles across leaders (inter), broadcast the
+/// assembled group-ordered vector back down each node tree (intra).
+/// Modeled by [`crate::comm::cost::HierCost::allgather_two_level`].
+pub fn allgather_two_level(g: &Group, value: Msg, segs: &[usize]) -> Vec<Msg> {
+    let parts = g.partition(segs);
+    let leaders = leader_indices(segs);
+    let lg = g.subgroup(&leaders);
+    let part = parts
+        .iter()
+        .find(|p| p.is_member())
+        .expect("caller is a member of exactly one node part");
+
+    let node_vals = gather_linear(part, 0, value);
+
+    let mut full: Option<Vec<Msg>> = None;
+    if lg.is_member() {
+        let mine = node_vals.expect("leader gathered its node");
+        let n = lg.size();
+        let me_l = lg.index();
+        let mut bundles: Vec<Option<Vec<Msg>>> = (0..n).map(|_| None).collect();
+        bundles[me_l] = Some(dup_all(&mine));
+        if n > 1 {
+            let right = (me_l + 1) % n;
+            let left = (me_l + n - 1) % n;
+            let mut cur = mine;
+            for r in 0..n - 1 {
+                let tag = lg.next_tag();
+                cur = lg
+                    .send_recv_msg_with(right, left, tag, Msg::new(cur))
+                    .downcast::<Vec<Msg>>();
+                bundles[(me_l + n - 1 - r) % n] = Some(dup_all(&cur));
+            }
+        }
+        // Leaders are in segment (== group) order, so flattening the
+        // bundles reassembles the group-ordered vector.
+        let mut out: Vec<Msg> = Vec::with_capacity(g.size());
+        for b in bundles {
+            out.extend(b.expect("ring visited every leader"));
+        }
+        full = Some(out);
+    }
+
+    let down_tag = part.next_tag();
+    bcast_bundle_binomial(part, 0, full, down_tag)
+}
+
+/// Two-level barrier: gather unit tokens at each node leader (intra),
+/// dissemination barrier across leaders (inter), release broadcast down
+/// each node (intra).  Modeled by
+/// [`crate::comm::cost::HierCost::barrier_two_level`].
+pub fn barrier_two_level(g: &Group, segs: &[usize]) {
+    let parts = g.partition(segs);
+    let leaders = leader_indices(segs);
+    let lg = g.subgroup(&leaders);
+    let part = parts
+        .iter()
+        .find(|p| p.is_member())
+        .expect("caller is a member of exactly one node part");
+    let _ = gather_linear(part, 0, Msg::new(()));
+    if lg.is_member() {
+        barrier_dissemination(&lg);
+    }
+    let release = lg.is_member().then(|| Msg::cloneable(()));
+    let _ = bcast_binomial(part, 0, release);
+}
+
 // ======================================================== *_start forms
 //
 // Split-phase variants of the algorithms above, backing the
@@ -389,7 +625,7 @@ pub fn shift_cyclic_start<'f>(g: &Group, delta: isize, value: Msg) -> GroupOp<'f
     g.post_msg_to(dst, tag, value);
     let probe = Some((g.world_rank(src), tag));
     GroupOp::deferred(g, t0, t0, probe, move |g: &Group| {
-        OpOutput::One(g.recv_duplex_from(src, tag, sent_bytes))
+        OpOutput::One(g.recv_duplex_from(src, tag, sent_bytes, dst))
     })
 }
 
@@ -558,7 +794,7 @@ pub fn allgather_ring_start<'f>(g: &Group, value: Msg) -> GroupOp<'f> {
     GroupOp::deferred(g, t0, t0, probe, move |g: &Group| {
         let mut out: Vec<Option<Msg>> = (0..p).map(|_| None).collect();
         out[me] = Some(value);
-        let mut cur = g.recv_duplex_from(left, tags[0], sent_bytes);
+        let mut cur = g.recv_duplex_from(left, tags[0], sent_bytes, right);
         out[(me + p - 1) % p] = Some(cur.dup());
         for (r, tag) in tags.iter().enumerate().skip(1) {
             cur = g.send_recv_msg_with(right, left, *tag, cur);
@@ -588,7 +824,7 @@ pub fn allgather_recursive_doubling_start<'f>(g: &Group, value: Msg) -> GroupOp<
     GroupOp::deferred(g, t0, t0, probe, move |g: &Group| {
         let mut have: Vec<(usize, Msg)> = vec![(me, value)];
         let theirs = g
-            .recv_duplex_from(partner0, tags[0], sent_bytes)
+            .recv_duplex_from(partner0, tags[0], sent_bytes, partner0)
             .downcast::<Vec<(u64, Msg)>>();
         have.extend(theirs.into_iter().map(|(i, v)| (i as usize, v)));
         let mut mask = 2usize;
@@ -636,7 +872,7 @@ pub fn alltoall_pairwise_start<'f>(g: &Group, items: Vec<Msg>) -> GroupOp<'f> {
     g.post_msg_to(dst1, tags[0], first);
     let probe = Some((g.world_rank(src1), tags[0]));
     GroupOp::deferred(g, t0, t0, probe, move |g: &Group| {
-        out[src1] = Some(g.recv_duplex_from(src1, tags[0], sent_bytes));
+        out[src1] = Some(g.recv_duplex_from(src1, tags[0], sent_bytes, dst1));
         for r in 2..p {
             let dst = (me + r) % p;
             let src = (me + p - r) % p;
@@ -663,7 +899,7 @@ pub fn barrier_dissemination_start<'f>(g: &Group) -> GroupOp<'f> {
     g.post_msg_to((me + 1) % p, tags[0], token);
     let probe = Some((g.world_rank((me + p - 1) % p), tags[0]));
     GroupOp::deferred(g, t0, t0, probe, move |g: &Group| {
-        let _ = g.recv_duplex_from((me + p - 1) % p, tags[0], sent_bytes);
+        let _ = g.recv_duplex_from((me + p - 1) % p, tags[0], sent_bytes, (me + 1) % p);
         let mut round = 2usize;
         for tag in tags.iter().skip(1) {
             let _ = g.send_recv_msg_with(

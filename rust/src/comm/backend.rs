@@ -28,7 +28,7 @@
 
 use std::sync::Arc;
 
-use super::collectives::{Collectives, StandardCollectives};
+use super::collectives::{Collectives, HierCollectives, StandardCollectives};
 use super::cost::CostParams;
 
 /// Which reduction algorithm a backend's `reduceD` uses.
@@ -230,16 +230,38 @@ impl Backend for BackendProfile {
     }
 }
 
+/// The topology-aware built-in backend, registered as `"hier"`: flat
+/// binomial/ring algorithms upgraded to two-level (leader-staged)
+/// schedules on hierarchical worlds whenever the cost model prices them
+/// cheaper (see [`HierCollectives`]).  On a flat world it behaves
+/// exactly like the default `openmpi-fixed` strategy set, so it is safe
+/// to select unconditionally; it has no declarative
+/// [`BackendProfile`] — its algorithm choice is adaptive, the case the
+/// profile subset explicitly cannot express.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HierBackend;
+
+impl Backend for HierBackend {
+    fn name(&self) -> &str {
+        "hier"
+    }
+
+    fn collectives(&self) -> Arc<dyn Collectives> {
+        Arc::new(HierCollectives::default())
+    }
+}
+
 /// The global name-keyed backend registry.
 ///
-/// The five built-in profiles are pre-registered on first use;
+/// The built-in backends (five declarative profiles plus the adaptive
+/// [`HierBackend`]) are pre-registered on first use;
 /// [`register`] adds (or replaces, by name) a user backend for the rest
 /// of the process.  Lookup order is registration order, so sweeps like
 /// Fig. 5's stay deterministic.
 pub mod registry {
     use std::sync::{Mutex, OnceLock};
 
-    use super::{Arc, Backend, BackendProfile};
+    use super::{Arc, Backend, BackendProfile, HierBackend};
 
     fn store() -> &'static Mutex<Vec<Arc<dyn Backend>>> {
         static STORE: OnceLock<Mutex<Vec<Arc<dyn Backend>>>> = OnceLock::new();
@@ -250,6 +272,7 @@ pub mod registry {
                 Arc::new(BackendProfile::mpj_express()),
                 Arc::new(BackendProfile::fastmpj()),
                 Arc::new(BackendProfile::shmem()),
+                Arc::new(HierBackend),
             ];
             Mutex::new(builtins)
         })
@@ -323,6 +346,16 @@ mod tests {
             assert!(b.profile().is_some());
         }
         assert!(registry::by_name("no-such-backend").is_none());
+    }
+
+    #[test]
+    fn registry_preloads_hier_without_profile() {
+        let b = registry::by_name("hier").expect("hier backend registered");
+        assert_eq!(b.name(), "hier");
+        // adaptive strategy: no declarative profile, cost passthrough
+        assert!(b.profile().is_none());
+        let m = CostParams::new(1e-6, 1e-9);
+        assert_eq!(b.cost(m), m);
     }
 
     #[test]

@@ -332,6 +332,114 @@ impl Collectives for StandardCollectives {
     }
 }
 
+/// Topology-aware strategy set: a flat [`StandardCollectives`] whose
+/// bcast / reduce / allgather / barrier upgrade to the two-level
+/// schedules in [`crate::comm::algorithms`] when (a) the group's members
+/// form contiguous node segments under the runtime
+/// [`Topology`](crate::comm::transport::hier::Topology) and (b) the
+/// virtual-clock cost model ([`HierCost`](crate::comm::cost::HierCost))
+/// prices the two-level schedule below the flat one for this world
+/// shape.  Every decision input — member list, topology, link
+/// parameters — is identical on every rank, so members always agree
+/// with zero negotiation messages.  Results are bit-identical to the
+/// flat schedules (same values, same fold order); only the message
+/// pattern, and therefore the modeled T_P, changes.
+///
+/// Registered in the backend [`registry`](crate::comm::backend::registry)
+/// as `"hier"`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HierCollectives {
+    /// The flat strategy set used when a two-level schedule does not
+    /// apply and for the ops with no hierarchical form (alltoall,
+    /// shift, gather, scatter, scan).
+    pub flat: StandardCollectives,
+}
+
+impl HierCollectives {
+    /// The group's node-segment shape, when a two-level schedule is
+    /// structurally possible: `(segment sizes, nodes, largest node)`.
+    fn shape(g: &Group) -> Option<(Vec<usize>, usize, usize)> {
+        let segs = algo::node_segments(g, g.ctx().topology())?;
+        let nodes = segs.len();
+        let max_node = segs.iter().copied().max().unwrap_or(1);
+        Some((segs, nodes, max_node))
+    }
+}
+
+impl Collectives for HierCollectives {
+    fn bcast(&self, g: &Group, root: usize, value: Option<Msg>) -> Msg {
+        if let Some((segs, nodes, max_node)) = Self::shape(g) {
+            if g.ctx().link_cost().prefer_two_level_tree(g.size(), nodes, max_node) {
+                return algo::bcast_two_level(g, root, value, &segs);
+            }
+        }
+        self.flat.bcast(g, root, value)
+    }
+
+    fn reduce(&self, g: &Group, root: usize, value: Msg, op: ReduceFn<'_>) -> Option<Msg> {
+        if let Some((segs, nodes, max_node)) = Self::shape(g) {
+            // Two-level only when the root is a node leader: rotated at a
+            // segment boundary, the two-level fold visits members in the
+            // same order as the flat binomial (see `reduce_two_level`).
+            let mut off = 0usize;
+            let root_leads = segs.iter().any(|&s| {
+                let hit = off == root;
+                off += s;
+                hit
+            });
+            if root_leads && g.ctx().link_cost().prefer_two_level_tree(g.size(), nodes, max_node) {
+                return algo::reduce_two_level(g, root, value, op, &segs);
+            }
+        }
+        self.flat.reduce(g, root, value, op)
+    }
+
+    fn allgather(&self, g: &Group, value: Msg) -> Vec<Msg> {
+        if let Some((segs, nodes, max_node)) = Self::shape(g) {
+            if g.ctx().link_cost().prefer_two_level_allgather(g.size(), nodes, max_node) {
+                return algo::allgather_two_level(g, value, &segs);
+            }
+        }
+        self.flat.allgather(g, value)
+    }
+
+    fn alltoall(&self, g: &Group, items: Vec<Msg>) -> Vec<Msg> {
+        self.flat.alltoall(g, items)
+    }
+
+    fn shift(&self, g: &Group, delta: isize, value: Msg) -> Msg {
+        self.flat.shift(g, delta, value)
+    }
+
+    fn barrier(&self, g: &Group) {
+        if let Some((segs, nodes, max_node)) = Self::shape(g) {
+            if g.ctx().link_cost().prefer_two_level_barrier(g.size(), nodes, max_node) {
+                return algo::barrier_two_level(g, &segs);
+            }
+        }
+        self.flat.barrier(g)
+    }
+
+    fn gather(&self, g: &Group, root: usize, value: Msg) -> Option<Vec<Msg>> {
+        self.flat.gather(g, root, value)
+    }
+
+    fn scatter(&self, g: &Group, root: usize, values: Option<Vec<Msg>>) -> Msg {
+        self.flat.scatter(g, root, values)
+    }
+
+    fn scan(&self, g: &Group, value: Msg, op: ReduceFn<'_>) -> Msg {
+        self.flat.scan(g, value, op)
+    }
+
+    // `*_start` forms: the trait defaults defer the whole operation to
+    // `wait()` and re-resolve the installed backend there — i.e. this
+    // strategy — so non-blocking collectives stay hierarchical and
+    // bit-identical, at the cost of start-phase overlap (a follow-up).
+    // `allreduce` inherits reduce(0)+bcast(0); group rank 0 is always a
+    // segment leader, so both halves run two-level when favourable.
+}
+
 #[cfg(test)]
 mod tests {
     use crate::comm::backend::BackendProfile;

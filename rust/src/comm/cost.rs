@@ -60,6 +60,141 @@ impl Default for CostParams {
     }
 }
 
+/// Rounds of a binomial tree (or dissemination schedule) over `n` ranks.
+fn ceil_log2(n: usize) -> usize {
+    if n <= 1 {
+        0
+    } else {
+        (usize::BITS - (n - 1).leading_zeros()) as usize
+    }
+}
+
+/// Two-level link pricing for a hierarchical world: intra-node hops and
+/// inter-node hops carry distinct `(ts, tw)` parameters.
+///
+/// A flat world prices both levels identically (so every pre-hierarchy
+/// cost result is unchanged); a hybrid world prices same-node messages
+/// at shared-memory speed and cross-node messages at the machine's
+/// network parameters.  The closed-form `*_flat` / `*_two_level`
+/// estimates below model each collective schedule's critical path so the
+/// hierarchical strategy can choose flat vs two-level **per world
+/// shape** — deterministically, from topology alone, so every rank of a
+/// collective makes the same choice without communicating.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HierCost {
+    /// Link parameters for same-node messages.
+    pub intra: CostParams,
+    /// Link parameters for cross-node messages.
+    pub inter: CostParams,
+}
+
+impl HierCost {
+    /// Nominal payload size (bytes) used when choosing a strategy.  The
+    /// real payload is only known at the root of rooted collectives, so
+    /// the choice must not depend on it — all ranks price the same
+    /// representative message instead.
+    pub const MODEL_BYTES: usize = 1024;
+
+    pub const fn new(intra: CostParams, inter: CostParams) -> Self {
+        HierCost { intra, inter }
+    }
+
+    /// Single-level world: both legs cost the same — the degenerate form
+    /// every flat transport runs under (keeps pre-hierarchy clocks
+    /// bit-identical).
+    pub const fn flat(cost: CostParams) -> Self {
+        HierCost::new(cost, cost)
+    }
+
+    /// Hybrid world: shared-memory links inside a node, the machine's
+    /// network parameters between nodes.
+    pub const fn hierarchical(inter: CostParams) -> Self {
+        HierCost::new(CostParams::shared_memory(), inter)
+    }
+
+    /// Cost of one point-to-point message on the leg `same_node` selects.
+    #[inline]
+    pub fn msg(&self, same_node: bool, bytes: usize) -> f64 {
+        if same_node {
+            self.intra.msg(bytes)
+        } else {
+            self.inter.msg(bytes)
+        }
+    }
+
+    // ---- modeled T_P of collective schedules (strategy chooser) ----
+    //
+    // Flat algorithms ignore the topology, so the model prices their
+    // rounds pessimistically at inter-node cost: once a world spans
+    // nodes, most hops of a binomial/ring schedule cross a boundary.
+
+    /// Binomial bcast/reduce over `p` ranks, every round at network cost.
+    pub fn tree_flat(&self, p: usize, bytes: usize) -> f64 {
+        ceil_log2(p) as f64 * self.inter.msg(bytes)
+    }
+
+    /// Two-level bcast/reduce: binomial across `nodes` leaders at
+    /// network cost, binomial within the largest node at shared-memory
+    /// cost, plus one intra-node root↔leader hop.
+    pub fn tree_two_level(&self, nodes: usize, max_node: usize, bytes: usize) -> f64 {
+        ceil_log2(nodes) as f64 * self.inter.msg(bytes)
+            + (ceil_log2(max_node) + 1) as f64 * self.intra.msg(bytes)
+    }
+
+    /// Flat ring allgather over `p` ranks: `p − 1` rounds of one block.
+    pub fn allgather_flat(&self, p: usize, bytes: usize) -> f64 {
+        p.saturating_sub(1) as f64 * self.inter.msg(bytes)
+    }
+
+    /// Two-level allgather: gather the node (`max_node − 1` intra sends
+    /// of one block), ring over `nodes` leaders with whole-node bundles,
+    /// then bcast the full `p`-block result back down the node tree.
+    pub fn allgather_two_level(
+        &self,
+        p: usize,
+        nodes: usize,
+        max_node: usize,
+        bytes: usize,
+    ) -> f64 {
+        max_node.saturating_sub(1) as f64 * self.intra.msg(bytes)
+            + nodes.saturating_sub(1) as f64 * self.inter.msg(max_node * bytes)
+            + ceil_log2(max_node) as f64 * self.intra.msg(p * bytes)
+    }
+
+    /// Flat dissemination barrier over `p` ranks: `⌈log2 p⌉` unit rounds.
+    pub fn barrier_flat(&self, p: usize) -> f64 {
+        ceil_log2(p) as f64 * self.inter.msg(0)
+    }
+
+    /// Two-level barrier: gather unit tokens inside the node,
+    /// dissemination across leaders, bcast the release down.
+    pub fn barrier_two_level(&self, nodes: usize, max_node: usize) -> f64 {
+        max_node.saturating_sub(1) as f64 * self.intra.msg(0)
+            + ceil_log2(nodes) as f64 * self.inter.msg(0)
+            + ceil_log2(max_node) as f64 * self.intra.msg(0)
+    }
+
+    /// Should bcast/reduce over `p` ranks in `nodes` nodes (largest
+    /// `max_node`) run the two-level schedule?
+    pub fn prefer_two_level_tree(&self, p: usize, nodes: usize, max_node: usize) -> bool {
+        nodes > 1
+            && self.tree_two_level(nodes, max_node, Self::MODEL_BYTES)
+                < self.tree_flat(p, Self::MODEL_BYTES)
+    }
+
+    /// Should allgather run the two-level schedule?
+    pub fn prefer_two_level_allgather(&self, p: usize, nodes: usize, max_node: usize) -> bool {
+        nodes > 1
+            && self.allgather_two_level(p, nodes, max_node, Self::MODEL_BYTES)
+                < self.allgather_flat(p, Self::MODEL_BYTES)
+    }
+
+    /// Should barrier run the two-level schedule?
+    pub fn prefer_two_level_barrier(&self, p: usize, nodes: usize, max_node: usize) -> bool {
+        nodes > 1 && self.barrier_two_level(nodes, max_node) < self.barrier_flat(p)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,5 +215,51 @@ mod tests {
         let shm = CostParams::shared_memory();
         assert!(shm.ts < ib.ts);
         assert!(shm.tw <= ib.tw);
+    }
+
+    #[test]
+    fn ceil_log2_rounds() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(8), 3);
+        assert_eq!(ceil_log2(9), 4);
+    }
+
+    #[test]
+    fn hierarchical_links_prefer_two_level_at_scale() {
+        // 8 ranks on 2 nodes of 4 over a real network: replacing
+        // network rounds with shared-memory rounds wins everywhere.
+        let h = HierCost::hierarchical(CostParams::qdr_infiniband());
+        assert!(h.prefer_two_level_tree(8, 2, 4));
+        assert!(h.prefer_two_level_allgather(8, 2, 4));
+        assert!(h.prefer_two_level_barrier(8, 2, 4));
+        // Uneven 3+5 at world 8 still wins.
+        assert!(h.prefer_two_level_tree(8, 2, 5));
+        assert!(h.prefer_two_level_allgather(8, 2, 5));
+    }
+
+    #[test]
+    fn flat_links_or_flat_shape_never_prefer_two_level() {
+        // Both legs at the same cost: the extra leader hops only hurt.
+        let f = HierCost::flat(CostParams::qdr_infiniband());
+        assert!(!f.prefer_two_level_tree(8, 2, 4));
+        assert!(!f.prefer_two_level_allgather(8, 2, 4));
+        assert!(!f.prefer_two_level_barrier(8, 2, 4));
+        // One rank per node (nodes == p): no intra level to exploit.
+        let h = HierCost::hierarchical(CostParams::qdr_infiniband());
+        assert!(!h.prefer_two_level_tree(8, 8, 1));
+        // Single node: nothing to do at the inter level.
+        assert!(!h.prefer_two_level_tree(8, 1, 8));
+    }
+
+    #[test]
+    fn flat_hiercost_prices_both_legs_identically() {
+        let c = CostParams::new(1.0e-6, 1.0e-9);
+        let f = HierCost::flat(c);
+        assert_eq!(f.msg(true, 4096), c.msg(4096));
+        assert_eq!(f.msg(false, 4096), c.msg(4096));
+        let h = HierCost::hierarchical(c);
+        assert!(h.msg(true, 4096) < h.msg(false, 4096));
     }
 }

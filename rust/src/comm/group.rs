@@ -249,9 +249,12 @@ impl<'a> Group<'a> {
     /// Completing receive of a split duplex round started with
     /// [`Group::post_msg_to`]: pays `max(send, recv)` once, starting at
     /// `max(own_clock, sender_ready)` — exactly one
-    /// [`Group::send_recv_msg_with`] round, split in two.
-    pub fn recv_duplex_from(&self, src: usize, tag: u64, sent_bytes: usize) -> Msg {
-        self.ctx.recv_duplex(self.ranks[src], tag, sent_bytes)
+    /// [`Group::send_recv_msg_with`] round, split in two.  `sent_to` is
+    /// the group rank the post half targeted, so a hierarchical topology
+    /// prices the send leg on the link it actually crossed.
+    pub fn recv_duplex_from(&self, src: usize, tag: u64, sent_bytes: usize, sent_to: usize) -> Msg {
+        self.ctx
+            .recv_duplex(self.ranks[src], tag, sent_bytes, self.ranks[sent_to])
     }
 
     // ------------------------------------------------------- collectives

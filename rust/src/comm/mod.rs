@@ -4,8 +4,10 @@
 //!   of §2;
 //! * [`transport`] — the [`transport::Transport`] trait (rank-to-rank
 //!   envelope delivery) and its implementations: the in-process
-//!   [`fabric`] and the multi-process [`transport::tcp`] backend with
-//!   its re-exec [`transport::launch`]er;
+//!   [`fabric`], the multi-process [`transport::tcp`] backend with its
+//!   re-exec [`transport::launch`]er, and the hybrid
+//!   [`transport::hier`] composition (shmem within a node, TCP across
+//!   nodes, routed by a [`transport::hier::Topology`]);
 //! * [`fabric`] — in-process mailboxes with MPI-style `(src, tag)`
 //!   matching; every envelope advances virtual clocks;
 //! * [`wire`] — the [`wire::WireData`] encode/decode codec for payloads
@@ -17,8 +19,11 @@
 //!   linear / ring / recursive-doubling / pairwise …) as explicit
 //!   message rounds over a group, reusable as building blocks;
 //! * [`collectives`] — the pluggable [`collectives::Collectives`] trait
-//!   each backend implements, plus the enum-dispatched
-//!   [`collectives::StandardCollectives`] used by all built-ins;
+//!   each backend implements, the enum-dispatched
+//!   [`collectives::StandardCollectives`] used by the flat built-ins,
+//!   and the topology-aware [`collectives::HierCollectives`] (`"hier"`)
+//!   that upgrades to two-level schedules when the cost model favours
+//!   them;
 //! * [`backend`] — the [`backend::Backend`] trait (collective strategy +
 //!   cost shaping), the built-in [`backend::BackendProfile`]s modeling
 //!   the paper's FooPar-X modules, and the name-keyed

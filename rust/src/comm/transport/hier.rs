@@ -1,0 +1,390 @@
+//! [`HierTransport`]: hierarchical hybrid delivery — shared-memory
+//! mailboxes within a node, TCP across nodes — routed by a [`Topology`].
+//!
+//! Real clusters are two-level: ranks on one host talk through shared
+//! memory, ranks on different hosts cross the network.  The flat
+//! transports model one level or the other; this one composes both.  A
+//! [`Topology`] assigns every world rank to a *node* (consecutive ranks
+//! fill nodes of `ranks_per_node`, the last node taking the remainder);
+//! each node's first rank is its *leader*.  Envelopes between same-node
+//! ranks go through an intra-node [`Fabric`]; envelopes crossing a node
+//! boundary go through an inter-node [`TcpTransport`] over real loopback
+//! sockets — so the hybrid mode exercises the full wire path for exactly
+//! the traffic that would cross a network, without process
+//! orchestration.
+//!
+//! Virtual-time transparency: both legs deliver the envelope's `ready`
+//! stamp and modeled byte count unmodified, so the §2 cost model holds —
+//! with the twist that [`Ctx`](crate::spmd::Ctx) prices intra-node and
+//! inter-node hops with distinct [`HierCost`] link parameters, which is
+//! what lets the model compare flat and two-level collective schedules
+//! per world shape (see [`crate::comm::cost`]).
+//!
+//! Idle-leader polling: a node leader parked on inter-node traffic (an
+//! idle hierarchy — nothing wrong, just nothing to do yet) must not trip
+//! the mailbox deadlock oracle, whose 60 s bound is calibrated for
+//! same-node waits.  Inter-node receives therefore use the serve-style
+//! probe+sleep pattern: poll for the envelope, sleep briefly, and fall
+//! through to the blocking `take` — with its prompt poison/close
+//! diagnostics — only once the envelope (or a failure) has arrived.
+//!
+//! [`HierCost`]: crate::comm::cost::HierCost
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::tcp::TcpTransport;
+use super::{Envelope, Transport};
+use crate::comm::fabric::Fabric;
+
+/// Launch-time override for the node shape: ranks per node, read by
+/// `Runtime::build` when neither the builder nor the machine config set
+/// one.  The multi-process launcher forwards it to re-exec'd workers so
+/// every process of a run derives the same topology.
+pub const ENV_RANKS_PER_NODE: &str = "FOOPAR_RANKS_PER_NODE";
+
+/// How often an inter-node receive polls for its envelope.  Short enough
+/// that collective rounds stay sub-millisecond, long enough that an idle
+/// leader costs a few thousand mutex probes per second, not a core.
+const POLL_INTERVAL: Duration = Duration::from_micros(200);
+
+/// The node structure of a world: which node each rank lives on, where
+/// each node starts, and who leads it (its first rank).
+///
+/// Consecutive world ranks fill nodes in order — node `n` of a uniform
+/// topology covers ranks `[n·rpn, min((n+1)·rpn, world))` — so a node's
+/// members are always a contiguous rank range, which is what lets the
+/// two-level collectives split a group with
+/// [`Group::partition`](crate::comm::group::Group::partition) while
+/// preserving member order (and therefore fold order).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// Node id per world rank (monotone non-decreasing).
+    node_of: Vec<usize>,
+    /// First world rank of each node.
+    node_starts: Vec<usize>,
+    node_sizes: Vec<usize>,
+}
+
+impl Topology {
+    /// Build from explicit node sizes (all positive); world =
+    /// `sizes.iter().sum()`.  This is the general form — uneven shapes
+    /// like `[3, 5]` are first-class.
+    pub fn from_node_sizes(sizes: &[usize]) -> Self {
+        assert!(!sizes.is_empty(), "topology needs at least one node");
+        assert!(sizes.iter().all(|&s| s > 0), "topology nodes must be non-empty");
+        let mut node_of = Vec::with_capacity(sizes.iter().sum());
+        let mut node_starts = Vec::with_capacity(sizes.len());
+        let mut start = 0;
+        for (n, &s) in sizes.iter().enumerate() {
+            node_starts.push(start);
+            node_of.extend(std::iter::repeat(n).take(s));
+            start += s;
+        }
+        Topology { node_of, node_starts, node_sizes: sizes.to_vec() }
+    }
+
+    /// `world` ranks packed `ranks_per_node` to a node, the last node
+    /// taking the remainder (so `uniform(8, 3)` is the uneven `3+3+2`).
+    pub fn uniform(world: usize, ranks_per_node: usize) -> Self {
+        assert!(world > 0, "topology needs at least one rank");
+        let rpn = ranks_per_node.max(1);
+        let sizes: Vec<usize> = (0..world)
+            .step_by(rpn)
+            .map(|start| rpn.min(world - start))
+            .collect();
+        Self::from_node_sizes(&sizes)
+    }
+
+    /// Everything on one node — the degenerate topology every flat
+    /// transport runs under.
+    pub fn flat(world: usize) -> Self {
+        assert!(world > 0, "topology needs at least one rank");
+        Self::from_node_sizes(&[world])
+    }
+
+    /// Total number of ranks.
+    pub fn world(&self) -> usize {
+        self.node_of.len()
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.node_sizes.len()
+    }
+
+    /// True for single-node topologies: no inter-node level exists, so
+    /// hierarchical strategies and per-level pricing degenerate to flat.
+    pub fn is_flat(&self) -> bool {
+        self.num_nodes() == 1
+    }
+
+    /// Node id of `rank`.
+    pub fn node_of(&self, rank: usize) -> usize {
+        self.node_of[rank]
+    }
+
+    /// Rank's position within its node.
+    pub fn local_rank(&self, rank: usize) -> usize {
+        rank - self.node_starts[self.node_of[rank]]
+    }
+
+    /// World rank leading node `node` (its first rank).
+    pub fn leader_of(&self, node: usize) -> usize {
+        self.node_starts[node]
+    }
+
+    /// World rank leading `rank`'s node.
+    pub fn leader(&self, rank: usize) -> usize {
+        self.leader_of(self.node_of[rank])
+    }
+
+    pub fn is_leader(&self, rank: usize) -> bool {
+        self.leader(rank) == rank
+    }
+
+    pub fn node_size(&self, node: usize) -> usize {
+        self.node_sizes[node]
+    }
+
+    /// All node sizes, in node order.
+    pub fn node_sizes(&self) -> &[usize] {
+        &self.node_sizes
+    }
+
+    pub fn max_node_size(&self) -> usize {
+        self.node_sizes.iter().copied().max().unwrap_or(1)
+    }
+
+    /// World ranks of node `node`, in order.
+    pub fn node_ranks(&self, node: usize) -> std::ops::Range<usize> {
+        let start = self.node_starts[node];
+        start..start + self.node_sizes[node]
+    }
+
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of[a] == self.node_of[b]
+    }
+}
+
+/// The hybrid transport: per-node [`Fabric`] mailboxes under an
+/// inter-node [`TcpTransport`], routed per envelope by the [`Topology`]
+/// (see module docs).
+pub struct HierTransport {
+    topo: Topology,
+    /// Same-node envelopes: straight into the destination's mailbox.
+    intra: Arc<Fabric>,
+    /// Cross-node envelopes: encoded, through a real loopback socket,
+    /// decoded by the destination's reader thread.
+    inter: Arc<TcpTransport>,
+}
+
+impl HierTransport {
+    /// Bind the inter-node listeners and build the fabric for `topo`.
+    pub fn new(topo: Topology) -> std::io::Result<Arc<Self>> {
+        let world = topo.world();
+        Ok(Arc::new(HierTransport {
+            intra: Fabric::new(world),
+            inter: TcpTransport::loopback(world)?,
+            topo,
+        }))
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    fn leg(&self, a: usize, b: usize) -> &dyn Transport {
+        if self.topo.same_node(a, b) {
+            self.intra.as_ref()
+        } else {
+            self.inter.as_ref()
+        }
+    }
+}
+
+impl Transport for HierTransport {
+    fn world(&self) -> usize {
+        self.topo.world()
+    }
+
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+
+    fn post(&self, dst: usize, env: Envelope) {
+        self.leg(env.src, dst).post(dst, env);
+    }
+
+    fn take(&self, me: usize, src: usize, tag: u64) -> Envelope {
+        if self.topo.same_node(me, src) {
+            return self.intra.take(me, src, tag);
+        }
+        // Inter-node: probe+sleep instead of the blocking condvar wait,
+        // so an idle leader never burns the deadlock oracle's timeout
+        // (see module docs).  Falls through to the blocking take — and
+        // its prompt, fully-diagnosed panic — the moment the envelope
+        // arrives or the mailbox becomes unreceivable (poison/close).
+        loop {
+            if self.inter.probe(me, src, tag) || self.inter.unreceivable(me) {
+                return self.inter.take(me, src, tag);
+            }
+            std::thread::sleep(POLL_INTERVAL);
+        }
+    }
+
+    fn probe(&self, me: usize, src: usize, tag: u64) -> bool {
+        self.leg(me, src).probe(me, src, tag)
+    }
+
+    fn pending(&self, me: usize) -> usize {
+        self.intra.pending(me) + self.inter.pending(me)
+    }
+
+    fn close(&self, me: usize) {
+        self.intra.close(me);
+        self.inter.close(me);
+    }
+
+    fn fail(&self, reason: &str) {
+        self.intra.fail(reason);
+        self.inter.fail(reason);
+    }
+
+    fn fail_ranks(&self, ranks: &[usize], reason: &str) {
+        self.intra.fail_ranks(ranks, reason);
+        self.inter.fail_ranks(ranks, reason);
+    }
+
+    fn clear_fail(&self, me: usize) {
+        self.intra.clear_fail(me);
+        self.inter.clear_fail(me);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::{Duration, Instant};
+
+    use super::*;
+    use crate::comm::message::Msg;
+
+    fn env(src: usize, tag: u64, val: u64) -> Envelope {
+        Envelope { src, tag, bytes: 8, ready: 0.0, payload: Msg::new(val) }
+    }
+
+    #[test]
+    fn topology_uniform_uneven_and_flat() {
+        let t = Topology::uniform(8, 3); // 3 + 3 + 2
+        assert_eq!(t.world(), 8);
+        assert_eq!(t.num_nodes(), 3);
+        assert_eq!(t.node_sizes(), &[3, 3, 2]);
+        assert!(!t.is_flat());
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(2), 0);
+        assert_eq!(t.node_of(3), 1);
+        assert_eq!(t.node_of(7), 2);
+        assert_eq!(t.local_rank(4), 1);
+        assert_eq!(t.leader(4), 3);
+        assert_eq!(t.leader_of(2), 6);
+        assert!(t.is_leader(0) && t.is_leader(3) && t.is_leader(6));
+        assert!(!t.is_leader(1) && !t.is_leader(7));
+        assert!(t.same_node(0, 2) && !t.same_node(2, 3));
+        assert_eq!(t.node_ranks(1).collect::<Vec<_>>(), vec![3, 4, 5]);
+        assert_eq!(t.max_node_size(), 3);
+
+        let explicit = Topology::from_node_sizes(&[3, 5]);
+        assert_eq!(explicit.world(), 8);
+        assert_eq!(explicit.leader(5), 3);
+
+        let flat = Topology::flat(4);
+        assert!(flat.is_flat());
+        assert!(flat.same_node(0, 3));
+        // ranks_per_node >= world collapses to one node
+        assert!(Topology::uniform(4, 16).is_flat());
+    }
+
+    #[test]
+    fn routes_same_node_through_fabric_and_cross_node_through_tcp() {
+        let t = HierTransport::new(Topology::uniform(4, 2)).expect("bind hybrid");
+        // 0 → 1 shares node 0: delivered synchronously by the fabric.
+        t.post(1, env(0, 7, 11));
+        assert_eq!(t.intra.pending(1), 1, "same-node envelope must use the fabric");
+        assert_eq!(t.inter.pending(1), 0);
+        assert_eq!(t.take(1, 0, 7).payload.downcast::<u64>(), 11);
+        // 0 → 2 crosses nodes: arrives via a tcp reader thread.
+        t.post(2, env(0, 9, 22));
+        let got = t.take(2, 0, 9);
+        assert_eq!(got.payload.downcast::<u64>(), 22);
+        assert_eq!(t.intra.pending(2), 0, "cross-node envelope must use tcp");
+        for r in 0..4 {
+            t.close(r);
+        }
+    }
+
+    #[test]
+    fn ready_and_bytes_cross_both_legs_unmodified() {
+        let t = HierTransport::new(Topology::uniform(4, 2)).expect("bind hybrid");
+        t.post(1, Envelope { src: 0, tag: 1, bytes: 99, ready: 2.5, payload: Msg::new(1u64) });
+        t.post(2, Envelope { src: 0, tag: 2, bytes: 77, ready: 4.5, payload: Msg::new(2u64) });
+        let a = t.take(1, 0, 1);
+        assert_eq!((a.bytes, a.ready), (99, 2.5));
+        let b = t.take(2, 0, 2);
+        assert_eq!((b.bytes, b.ready), (77, 4.5));
+        for r in 0..4 {
+            t.close(r);
+        }
+    }
+
+    /// Satellite regression: an inter-node receive is a poll loop, so a
+    /// leader idling on traffic that arrives "late" (here: delayed past
+    /// several poll intervals; in a serving hierarchy: minutes) is just
+    /// patience — the wait completes when the envelope lands instead of
+    /// racing the mailbox deadlock oracle's fixed budget.
+    #[test]
+    fn idle_inter_node_wait_survives_delayed_delivery() {
+        let t = HierTransport::new(Topology::uniform(4, 2)).expect("bind hybrid");
+        let t2 = t.clone();
+        let waiter = std::thread::spawn(move || t2.take(2, 0, 0x1D7E).payload.downcast::<u64>());
+        std::thread::sleep(Duration::from_millis(150));
+        t.post(2, env(0, 0x1D7E, 99));
+        assert_eq!(waiter.join().unwrap(), 99);
+        for r in 0..4 {
+            t.close(r);
+        }
+    }
+
+    /// The poll loop must not out-wait a real failure: poison lands the
+    /// blocked inter-node take on the mailbox's diagnostic panic
+    /// promptly, not after a timeout (and never spins forever).
+    #[test]
+    fn poison_wakes_idle_inter_node_wait_promptly() {
+        let t = HierTransport::new(Topology::uniform(4, 2)).expect("bind hybrid");
+        let t2 = t.clone();
+        let t0 = Instant::now();
+        let waiter = std::thread::spawn(move || {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| t2.take(2, 0, 0xDEAD)))
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        t.fail("rank 0 died mid-run: boom");
+        let err = waiter.join().unwrap().unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(20), "poison was not prompt");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string panic>".into());
+        assert!(msg.contains("boom"), "{msg}");
+        assert!(msg.contains("src=0"), "{msg}");
+    }
+
+    #[test]
+    fn close_closes_both_legs() {
+        // Single-node topology so the post routes intra: the fabric's
+        // closed-mailbox panic is synchronous in the poster (the tcp
+        // leg detects closed mailboxes at its reader thread instead).
+        let t = HierTransport::new(Topology::uniform(2, 2)).expect("bind hybrid");
+        t.close(0);
+        t.close(1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| t.post(1, env(0, 1, 1))));
+        assert!(r.is_err(), "posting to a closed hybrid rank must panic");
+    }
+}

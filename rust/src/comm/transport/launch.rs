@@ -26,6 +26,11 @@
 //! in a worker's environment refers to the parent's *first* run, so a
 //! second `transport("tcp")` run panics with an explanation instead of
 //! hanging.
+//!
+//! Topology: node boundaries must agree across ranks, so the parent
+//! forwards [`ENV_RANKS_PER_NODE`](super::hier::ENV_RANKS_PER_NODE)
+//! explicitly (builder/config-derived values are re-derived by each
+//! worker re-running the same `main` — SPMD symmetry covers those).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -264,11 +269,17 @@ fn establish_parent(world: usize) -> crate::Result<ProcWorld> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut children = Workers(Vec::with_capacity(world - 1));
     for rank in 1..world {
-        let child = Command::new(&exe)
-            .args(&args)
+        let mut cmd = Command::new(&exe);
+        cmd.args(&args)
             .env(ENV_RANK, rank.to_string())
             .env(ENV_WORLD, world.to_string())
-            .env(ENV_RENDEZVOUS, rdv_addr.to_string())
+            .env(ENV_RENDEZVOUS, rdv_addr.to_string());
+        // Explicit (not just inherited): every rank must derive the same
+        // node topology or hierarchical routing would disagree.
+        if let Ok(rpn) = std::env::var(super::hier::ENV_RANKS_PER_NODE) {
+            cmd.env(super::hier::ENV_RANKS_PER_NODE, rpn);
+        }
+        let child = cmd
             .spawn()
             .with_context(|| format!("re-exec {} for rank {rank}", exe.display()))?;
         children.0.push(child);

@@ -175,6 +175,16 @@ impl Mailbox {
         }
     }
 
+    /// True when no future receive can succeed: the mailbox is poisoned
+    /// or its owning rank already closed.  Lets polling receivers — the
+    /// hybrid transport's inter-node probe+sleep loop — fall through to
+    /// a blocking `take`, which panics promptly with full diagnostics,
+    /// instead of polling forever past a failure.
+    pub fn unreceivable(&self) -> bool {
+        let inner = self.inner.lock().unwrap();
+        inner.poisoned.is_some() || inner.closed
+    }
+
     /// Mark the owning rank exited.  Idempotent; returns `true` only on
     /// the open→closed transition (so callers keeping shutdown counters
     /// stay correct under double-close).

@@ -14,7 +14,10 @@
 //!        │
 //!   Transport (this)   post / take / probe / close over Envelopes
 //!        ├── Fabric            in-process shared-memory mailboxes
-//!        └── TcpTransport      length-prefixed frames over TCP sockets
+//!        ├── TcpTransport      length-prefixed frames over TCP sockets
+//!        └── HierTransport     two-level hybrid: Fabric within a node,
+//!                              TcpTransport across nodes, routed by a
+//!                              Topology (hier.rs)
 //! ```
 //!
 //! A [`Transport`] moves [`Envelope`]s between ranks.  The in-process
@@ -31,10 +34,12 @@
 
 use crate::comm::message::Msg;
 
+pub mod hier;
 pub mod launch;
 pub mod mailbox;
 pub mod tcp;
 
+pub use hier::{HierTransport, Topology};
 pub use mailbox::{Mailbox, RECV_TIMEOUT};
 
 /// One message in flight between two ranks.

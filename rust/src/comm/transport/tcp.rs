@@ -304,6 +304,14 @@ impl TcpTransport {
             .unwrap_or_else(|| panic!("rank {me} is not local to this process"))
     }
 
+    /// True when receives for local rank `me` can no longer succeed
+    /// (mailbox poisoned or closed) — see [`Mailbox::unreceivable`].
+    /// Used by the hybrid transport's inter-node poll loop to stop
+    /// polling and surface the failure diagnostics promptly.
+    pub fn unreceivable(&self, me: usize) -> bool {
+        self.mailbox(me).unreceivable()
+    }
+
     /// Check a payload buffer out of the frame pool (empty, capacity
     /// retained from earlier frames).
     fn take_frame_buf(&self) -> Vec<u8> {

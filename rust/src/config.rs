@@ -40,6 +40,15 @@ pub struct MachineConfig {
     /// CLI `--threads`, or `Runtime::builder().threads_per_rank(..)`) to
     /// run fewer, fatter ranks — results are bit-identical either way.
     pub threads_per_rank: usize,
+    /// Ranks sharing one node under the hierarchical transport: `Some(n)`
+    /// groups ranks into nodes of `n` (the last node takes the
+    /// remainder), giving the hybrid transport its [`Topology`] and the
+    /// cost model its intra/inter link split.  `None` means a flat world.
+    /// Overridable per run (CLI `--ranks-per-node`,
+    /// `Runtime::builder().ranks_per_node(..)`, `FOOPAR_RANKS_PER_NODE`).
+    ///
+    /// [`Topology`]: crate::comm::transport::hier::Topology
+    pub ranks_per_node: Option<usize>,
     /// Backend names to sweep on this machine.
     pub backends: Vec<String>,
 }
@@ -60,6 +69,7 @@ impl MachineConfig {
             tw: 2.5e-10,
             max_cores: 512,
             threads_per_rank: 1,
+            ranks_per_node: None,
             backends: vec!["openmpi-fixed".into()],
         }
     }
@@ -75,6 +85,7 @@ impl MachineConfig {
             tw: 2.5e-10,
             max_cores: 512,
             threads_per_rank: 1,
+            ranks_per_node: None,
             backends: vec![
                 "openmpi-fixed".into(),
                 "openmpi-stock".into(),
@@ -94,6 +105,7 @@ impl MachineConfig {
             tw: 1.0e-10,
             max_cores: 64,
             threads_per_rank: 1,
+            ranks_per_node: None,
             backends: vec!["shmem".into()],
         }
     }
@@ -125,6 +137,11 @@ impl MachineConfig {
                 .transpose()?
                 .map(|v| (v as usize).max(1))
                 .unwrap_or(1),
+            ranks_per_node: kv
+                .get("ranks_per_node")
+                .map(|v| v.as_f64())
+                .transpose()?
+                .map(|v| (v as usize).max(1)),
             backends: match kv.get("backends") {
                 Some(v) => v.as_list()?.to_vec(),
                 None => vec!["openmpi-fixed".into()],
@@ -273,6 +290,17 @@ mod tests {
         assert_eq!(MachineConfig::from_kv(&kv).unwrap().threads_per_rank, 4);
         let kv = parse_kv(&format!("{base}threads_per_rank = 0\n")).unwrap();
         assert_eq!(MachineConfig::from_kv(&kv).unwrap().threads_per_rank, 1);
+    }
+
+    #[test]
+    fn ranks_per_node_parses_and_clamps() {
+        let base = "name = \"t\"\nrate = 1e9\nts = 1e-6\ntw = 1e-10\nmax_cores = 8\n";
+        let kv = parse_kv(base).unwrap();
+        assert_eq!(MachineConfig::from_kv(&kv).unwrap().ranks_per_node, None);
+        let kv = parse_kv(&format!("{base}ranks_per_node = 4\n")).unwrap();
+        assert_eq!(MachineConfig::from_kv(&kv).unwrap().ranks_per_node, Some(4));
+        let kv = parse_kv(&format!("{base}ranks_per_node = 0\n")).unwrap();
+        assert_eq!(MachineConfig::from_kv(&kv).unwrap().ranks_per_node, Some(1));
     }
 
     #[test]

@@ -78,15 +78,17 @@ repro — FooPar reproduction (rust + JAX/Pallas AOT via PJRT)
   peak     [--iters N] [--machine M] single-rank empirical peak: seed vs packed
                                     kernel at 1/2/4 threads, efficiency vs peak
   mmm      --p P [--n N] [--algo dns|generic|baseline] [--mode real|modeled] [--machine M]
-           [--transport local|tcp-loopback] [--backend B] [--threads T] [--trace OUT.json]
+           [--transport local|tcp-loopback|hybrid] [--ranks-per-node N] [--backend B]
+           [--threads T] [--trace OUT.json]
   apsp     --p P [--n N] [--algo fw|squaring] [--mode real|modeled] [--threads T]
+           [--transport local|tcp-loopback|hybrid] [--ranks-per-node N] [--backend B]
            [--trace OUT.json]
   table1   [--machine M]            Table 1: measured op runtimes vs formulas
   fig5     [--machine carver|horseshoe6]   Fig. 5 efficiency curves
   isoeff   [--algo generic|dns|fw] [--target E]   isoefficiency verification
   overhead [--machine M]            framework vs hand-coded DNS
-  serve    [--world N] [--listen H:P] [--transport local|tcp-loopback] [--threads T]
-           [--no-batch] [--max-batch K] [--trace OUT.json]
+  serve    [--world N] [--listen H:P] [--transport local|tcp-loopback|hybrid]
+           [--ranks-per-node N] [--threads T] [--no-batch] [--max-batch K] [--trace OUT.json]
                                     resident serving pool + TCP submit endpoint
   submit   [--addr H:P] [--job matmul|fw] [--q Q] [--b B] [--n N] [--density D]
            [--seed-a S] [--seed-b S] [--seed S] [--count K] [--verify] [--json]
@@ -96,7 +98,22 @@ repro — FooPar reproduction (rust + JAX/Pallas AOT via PJRT)
   backends                          list registered communication backends
 
 Tracing: any command also honours FOOPAR_TRACE=out.json; --trace writes a
-Chrome-trace/Perfetto JSON plus a critical-path report at teardown.";
+Chrome-trace/Perfetto JSON plus a critical-path report at teardown.
+
+Topology: --transport hybrid routes same-node envelopes over shared-memory
+mailboxes and cross-node envelopes over TCP loopback; nodes are groups of
+--ranks-per-node consecutive ranks (also settable via a machine-config
+`ranks_per_node` key or FOOPAR_RANKS_PER_NODE).  Pair with --backend hier
+for topology-aware two-level collectives on any transport.";
+
+/// The optional `--ranks-per-node` flag (absent ⇒ the builder falls back
+/// to the machine config and then `FOOPAR_RANKS_PER_NODE`).
+fn opt_ranks_per_node(args: &Args) -> Result<Option<usize>> {
+    match args.get("ranks-per-node") {
+        None => Ok(None),
+        Some(_) => Ok(Some(args.get_usize("ranks-per-node", 1)?.max(1))),
+    }
+}
 
 /// Parse a `--mode` flag into a Compute (PJRT-real prefers artifacts).
 fn compute_for(mode: &str, machine: &MachineConfig) -> Result<Compute> {
@@ -243,6 +260,9 @@ fn cmd_mmm(args: &Args) -> Result<()> {
         .transport(transport)
         .machine_config(&machine)
         .threads_per_rank(threads);
+    if let Some(rpn) = opt_ranks_per_node(args)? {
+        builder = builder.ranks_per_node(rpn);
+    }
     if let Some(path) = args.get("trace") {
         builder = builder.trace(path);
     }
@@ -312,12 +332,20 @@ fn cmd_apsp(args: &Args) -> Result<()> {
         floyd_warshall::FwSource::Real { n, density: 0.3, seed: 42 }
     };
     let algo = args.get_str("algo", "fw");
+    let transport = args.get_str("transport", "local");
+    if transport == "tcp" {
+        bail!("repro apsp supports --transport local|tcp-loopback|hybrid");
+    }
     let threads = args.get_usize("threads", machine.threads_per_rank)?;
     let mut builder = Runtime::builder()
         .world(p)
         .backend(args.get_str("backend", "openmpi-fixed"))
+        .transport(transport)
         .machine_config(&machine)
         .threads_per_rank(threads);
+    if let Some(rpn) = opt_ranks_per_node(args)? {
+        builder = builder.ranks_per_node(rpn);
+    }
     if let Some(path) = args.get("trace") {
         builder = builder.trace(path);
     }
@@ -416,6 +444,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .world(world)
         .transport(transport)
         .threads_per_rank(threads);
+    if let Some(rpn) = opt_ranks_per_node(args)? {
+        builder = builder.ranks_per_node(rpn);
+    }
     if let Some(path) = args.get("trace") {
         builder = builder.trace(path);
     }

@@ -13,8 +13,11 @@
 //!                               //  .backend_obj for explicit objects)
 //!     .transport("tcp")         // delivery substrate: "local" (threads
 //!                               //  over shared memory, the default),
-//!                               //  "tcp-loopback", or "tcp" (one OS
-//!                               //  process per rank, re-exec spawner)
+//!                               //  "tcp-loopback", "tcp" (one OS
+//!                               //  process per rank, re-exec spawner),
+//!                               //  or "hybrid" (two-level: shmem within
+//!                               //  a node, tcp across; needs
+//!                               //  .ranks_per_node(n))
 //!     .machine("carver")        // interconnect costs (or .cost(...))
 //!     .run(|ctx| ...)?;         // the SPMD closure, once per rank
 //! ```
@@ -38,9 +41,10 @@ use anyhow::anyhow;
 
 use crate::comm::backend::{registry, Backend, BackendProfile};
 use crate::comm::collectives::Collectives;
-use crate::comm::cost::CostParams;
+use crate::comm::cost::{CostParams, HierCost};
 use crate::comm::fabric::Fabric;
 use crate::comm::message::Msg;
+use crate::comm::transport::hier::{self, HierTransport, Topology};
 use crate::comm::transport::tcp::TcpTransport;
 use crate::comm::transport::{launch, Envelope, Transport};
 use crate::comm::wire::WireData;
@@ -57,7 +61,16 @@ pub struct Ctx {
     /// Virtual time in seconds (the paper's cost model §2).
     clock: Cell<f64>,
     /// Effective cost parameters (machine base × backend shaping).
+    /// In a hierarchical world this is the **inter-node** link; flat
+    /// worlds have only one link, so it is *the* cost either way and
+    /// every pre-hierarchy caller keeps its meaning.
     pub cost: CostParams,
+    /// Node topology of the world (single flat node unless the runtime
+    /// was built with `ranks_per_node`).
+    topo: Arc<Topology>,
+    /// Per-level link pricing: intra-node vs inter-node message costs.
+    /// Flat worlds price both levels at `cost`, so clocks are unchanged.
+    link: HierCost,
     backend: Arc<dyn Backend>,
     collectives: Arc<dyn Collectives>,
     pub metrics: RankMetrics,
@@ -92,15 +105,28 @@ impl Ctx {
         backend: Arc<dyn Backend>,
         machine: CostParams,
         threads_per_rank: usize,
+        topo: Arc<Topology>,
     ) -> Self {
         let cost = backend.cost(machine);
         let collectives = backend.collectives();
+        debug_assert_eq!(topo.world(), transport.world(), "topology/world mismatch");
+        // Flat world: one link level, both priced at `cost` — clocks are
+        // bit-identical to the pre-hierarchy model.  Hierarchical world:
+        // same-node hops run at shared-memory parameters under the
+        // machine's network parameters between nodes.
+        let link = if topo.is_flat() {
+            HierCost::flat(cost)
+        } else {
+            HierCost::hierarchical(cost)
+        };
         Ctx {
             rank,
             world: transport.world(),
             transport,
             clock: Cell::new(0.0),
             cost,
+            topo,
+            link,
             backend,
             collectives,
             metrics: RankMetrics::new(),
@@ -117,6 +143,30 @@ impl Ctx {
     #[inline]
     pub fn threads_per_rank(&self) -> usize {
         self.threads_per_rank
+    }
+
+    /// Cost of one point-to-point message to/from `peer`, priced on the
+    /// link the topology selects (intra-node vs inter-node).  On a flat
+    /// topology both links equal `self.cost`, so this is exactly the
+    /// pre-hierarchy `cost.msg(bytes)`.
+    #[inline]
+    fn msg_cost(&self, peer: usize, bytes: usize) -> f64 {
+        self.link.msg(self.topo.same_node(self.rank, peer), bytes)
+    }
+
+    /// Trace category for traffic with `peer`: flat worlds keep the
+    /// single `Comm` category; hierarchical worlds split legs into
+    /// `CommIntra`/`CommInter` so the critical-path report attributes
+    /// time per level.
+    #[inline]
+    fn comm_cat(&self, peer: usize) -> trace::Category {
+        if self.topo.is_flat() {
+            trace::Category::Comm
+        } else if self.topo.same_node(self.rank, peer) {
+            trace::Category::CommIntra
+        } else {
+            trace::Category::CommInter
+        }
     }
 
     /// The active communication backend.
@@ -201,14 +251,14 @@ impl Ctx {
             "tag u64::MAX-3 is reserved for the runtime's end-of-run trace gather"
         );
         let bytes = msg.bytes();
-        let mut sp = trace::span("send", trace::Category::Comm);
+        let mut sp = trace::span("send", self.comm_cat(dst));
         if sp.is_active() {
             sp.arg("peer", dst as f64);
             sp.arg("bytes", bytes as f64);
             sp.flow_out(trace::flow_point(self.rank, dst, tag));
         }
         let ready = self.clock.get();
-        let secs = self.cost.msg(bytes);
+        let secs = self.msg_cost(dst, bytes);
         self.clock.set(ready + secs);
         self.metrics.on_send(bytes, secs);
         self.transport.post(
@@ -233,7 +283,7 @@ impl Ctx {
 
     /// Erased variant of [`Ctx::recv`].
     pub fn recv_msg(&self, src: usize, tag: u64) -> Msg {
-        let mut sp = trace::span("recv", trace::Category::Comm);
+        let mut sp = trace::span("recv", self.comm_cat(src));
         let env = self.transport.take(self.rank, src, tag);
         if sp.is_active() {
             sp.arg("peer", src as f64);
@@ -241,7 +291,7 @@ impl Ctx {
             sp.flow_in(trace::flow_point(src, self.rank, tag));
         }
         let before = self.clock.get();
-        let after = before.max(env.ready) + self.cost.msg(env.bytes);
+        let after = before.max(env.ready) + self.msg_cost(src, env.bytes);
         self.clock.set(after);
         self.metrics.on_recv(env.bytes, after - before);
         env.payload
@@ -283,7 +333,16 @@ impl Ctx {
             "tag u64::MAX-3 is reserved for the runtime's end-of-run trace gather"
         );
         let bytes_out = msg.bytes();
-        let mut sp = trace::span("sendrecv", trace::Category::Comm);
+        // A duplex round touching two peers is "inter" if either leg
+        // crosses a node boundary (the slower link dominates the round).
+        let cat = if self.topo.is_flat() {
+            trace::Category::Comm
+        } else if self.topo.same_node(self.rank, dst) && self.topo.same_node(self.rank, src) {
+            trace::Category::CommIntra
+        } else {
+            trace::Category::CommInter
+        };
+        let mut sp = trace::span("sendrecv", cat);
         if sp.is_active() {
             sp.arg("dst", dst as f64);
             sp.arg("src", src as f64);
@@ -301,7 +360,7 @@ impl Ctx {
             sp.flow_in(trace::flow_point(src, self.rank, tag));
         }
         let start = ready.max(env.ready);
-        let cost = self.cost.msg(bytes_out).max(self.cost.msg(env.bytes));
+        let cost = self.msg_cost(dst, bytes_out).max(self.msg_cost(src, env.bytes));
         let after = start + cost;
         self.clock.set(after);
         self.metrics.on_send(bytes_out, 0.0);
@@ -389,7 +448,7 @@ impl Ctx {
             "tag u64::MAX-3 is reserved for the runtime's end-of-run trace gather"
         );
         let bytes = msg.bytes();
-        let mut sp = trace::span("post", trace::Category::Comm);
+        let mut sp = trace::span("post", self.comm_cat(dst));
         if sp.is_active() {
             sp.arg("peer", dst as f64);
             sp.arg("bytes", bytes as f64);
@@ -406,8 +465,16 @@ impl Ctx {
     /// [`Ctx::post_only`]: the round costs `max(send, recv)` once,
     /// starting at `max(own_clock, sender_ready)` — identical to the
     /// blocking [`Ctx::send_recv_msg`] when no compute was interleaved.
-    pub(crate) fn recv_duplex(&self, src: usize, tag: u64, sent_bytes: usize) -> Msg {
-        let mut sp = trace::span("recv", trace::Category::Comm);
+    /// `sent_to` is the rank the post half targeted, so the send leg is
+    /// priced on the link it actually crossed.
+    pub(crate) fn recv_duplex(
+        &self,
+        src: usize,
+        tag: u64,
+        sent_bytes: usize,
+        sent_to: usize,
+    ) -> Msg {
+        let mut sp = trace::span("recv", self.comm_cat(src));
         let env = self.transport.take(self.rank, src, tag);
         if sp.is_active() {
             sp.arg("peer", src as f64);
@@ -416,7 +483,7 @@ impl Ctx {
         }
         let before = self.clock.get();
         let start = before.max(env.ready);
-        let cost = self.cost.msg(sent_bytes).max(self.cost.msg(env.bytes));
+        let cost = self.msg_cost(sent_to, sent_bytes).max(self.msg_cost(src, env.bytes));
         let after = start + cost;
         self.clock.set(after);
         self.metrics.on_recv(env.bytes, after - before);
@@ -488,6 +555,22 @@ impl Ctx {
     pub fn transport(&self) -> &Arc<dyn Transport> {
         &self.transport
     }
+
+    /// The node topology this rank runs under.  Flat (one node spanning
+    /// the world) on every transport unless the runtime was built with
+    /// `ranks_per_node`; hierarchical collectives and per-level link
+    /// pricing key off it.
+    pub fn topology(&self) -> &Arc<Topology> {
+        &self.topo
+    }
+
+    /// Per-level link cost parameters.  On a flat topology both levels
+    /// equal [`Ctx::cost`]; on a hierarchical one, same-node messages
+    /// run at shared-memory parameters and cross-node messages at the
+    /// machine's network parameters.
+    pub fn link_cost(&self) -> HierCost {
+        self.link
+    }
 }
 
 /// Outcome of one SPMD run.
@@ -528,6 +611,12 @@ pub struct Runtime {
     machine: CostParams,
     transport: TransportChoice,
     threads_per_rank: usize,
+    /// Node shape: `Some(n)` packs ranks onto nodes of `n` (last node
+    /// takes the remainder), `None` is flat.  Honored on every
+    /// transport — the hierarchical collectives and per-level pricing
+    /// follow the topology, not the substrate — and required by
+    /// `"hybrid"`, whose routing needs node boundaries.
+    ranks_per_node: Option<usize>,
     trace: TraceMode,
 }
 
@@ -572,6 +661,7 @@ impl Runtime {
             machine: MachineChoice::Cost(CostParams::default()),
             transport: None,
             threads_per_rank: None,
+            ranks_per_node: None,
             trace: TraceMode::Off,
         }
     }
@@ -616,6 +706,17 @@ impl Runtime {
             TransportChoice::InProcess => "local",
             TransportChoice::TcpLoopback => "tcp-loopback",
             TransportChoice::Tcp => "tcp",
+            TransportChoice::Hybrid => "hybrid",
+        }
+    }
+
+    /// The node topology every rank of this runtime will see: flat
+    /// unless built with `ranks_per_node` (builder knob, machine-config
+    /// key, or `FOOPAR_RANKS_PER_NODE`).
+    pub fn topology(&self) -> Topology {
+        match self.ranks_per_node {
+            Some(n) => Topology::uniform(self.world, n),
+            None => Topology::flat(self.world),
         }
     }
 
@@ -648,6 +749,11 @@ impl Runtime {
                 f,
             ),
             TransportChoice::Tcp => self.run_processes(f),
+            TransportChoice::Hybrid => self.run_threads(
+                HierTransport::new(self.topology())
+                    .expect("bind hybrid inter-node listeners"),
+                f,
+            ),
         };
         // File mode: emit the artifacts at teardown (multi-process: the
         // trace is only on rank 0, so workers skip this naturally).
@@ -676,6 +782,7 @@ impl Runtime {
     {
         let world = self.world;
         let wall0 = Instant::now();
+        let topo = Arc::new(self.topology());
         // One trace session per process; serialized against concurrent
         // traced runs (tests) by the session lock inside begin_session.
         let session = (self.trace != TraceMode::Off).then(trace::begin_session);
@@ -693,6 +800,7 @@ impl Runtime {
                 self.backend.clone(),
                 self.machine,
                 self.threads_per_rank,
+                topo.clone(),
             );
             let r = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&ctx))) {
                 Ok(r) => r,
@@ -766,6 +874,7 @@ impl Runtime {
             self.backend.clone(),
             self.machine,
             self.threads_per_rank,
+            Arc::new(self.topology()),
         );
         // Each process runs its own trace session for its one rank; the
         // spans are gathered to rank 0 below.  The re-exec'd workers
@@ -897,6 +1006,11 @@ enum TransportChoice {
     TcpLoopback,
     /// One OS process per rank over TCP loopback ([`launch`]).
     Tcp,
+    /// Two-level hybrid: threads whose same-node envelopes cross
+    /// shared-memory mailboxes and cross-node envelopes cross real TCP
+    /// loopback sockets, routed by the runtime's [`Topology`]
+    /// ([`HierTransport`]).  Requires `ranks_per_node`.
+    Hybrid,
 }
 
 /// Builder for [`Runtime`] — the entry point of every SPMD program.
@@ -910,6 +1024,9 @@ pub struct RuntimeBuilder {
     /// Explicit per-rank kernel thread count; `None` defers to the
     /// machine config (which defaults to 1).
     threads_per_rank: Option<usize>,
+    /// Explicit node shape; `None` defers to the machine config, then
+    /// the `FOOPAR_RANKS_PER_NODE` env variable, then flat.
+    ranks_per_node: Option<usize>,
     /// Span tracing; `Off` defers to the `FOOPAR_TRACE` env variable at
     /// build time.
     trace: TraceMode,
@@ -951,10 +1068,13 @@ impl RuntimeBuilder {
     }
 
     /// Use an explicit machine config's interconnect costs (and its
-    /// `threads_per_rank`, unless one was set explicitly).
+    /// `threads_per_rank` / `ranks_per_node`, unless set explicitly).
     pub fn machine_config(mut self, machine: &MachineConfig) -> Self {
         if self.threads_per_rank.is_none() {
             self.threads_per_rank = Some(machine.threads_per_rank.max(1));
+        }
+        if self.ranks_per_node.is_none() {
+            self.ranks_per_node = machine.ranks_per_node;
         }
         self.cost(machine.cost())
     }
@@ -972,6 +1092,24 @@ impl RuntimeBuilder {
     /// Use raw cost parameters (tests: `CostParams::free()`).
     pub fn cost(mut self, cost: CostParams) -> Self {
         self.machine = MachineChoice::Cost(cost);
+        self
+    }
+
+    /// Node shape of the world: ranks are packed onto nodes of `n`
+    /// consecutive ranks (the last node takes the remainder, so uneven
+    /// shapes arise naturally — `world(8).ranks_per_node(3)` is 3+3+2).
+    /// Clamped to ≥ 1; `n = 1` puts every rank on its own node.
+    ///
+    /// Honored on **every** transport: the topology drives the
+    /// per-level cost model and the `"hier"` backend's two-level
+    /// collective strategies even when delivery is flat, and it is
+    /// required by `transport("hybrid")`, which routes same-node
+    /// envelopes over shared memory and cross-node envelopes over TCP.
+    /// Unset, the machine config's `ranks_per_node` key and then the
+    /// `FOOPAR_RANKS_PER_NODE` env variable are consulted; absent all
+    /// three, the world is flat.
+    pub fn ranks_per_node(mut self, n: usize) -> Self {
+        self.ranks_per_node = Some(n.max(1));
         self
     }
 
@@ -1002,7 +1140,12 @@ impl RuntimeBuilder {
     ///   without process orchestration; what the parity tests use);
     /// * `"tcp"` — one OS process per rank over TCP loopback, spawned by
     ///   the re-exec [`launch`]er (payload types must implement
-    ///   [`WireData`]; results come back local-only, see [`RunResult`]).
+    ///   [`WireData`]; results come back local-only, see [`RunResult`]);
+    /// * `"hybrid"` — threads routed two-level by the node topology:
+    ///   same-node envelopes over shared-memory mailboxes, cross-node
+    ///   envelopes over real TCP loopback sockets (requires
+    ///   [`RuntimeBuilder::ranks_per_node`] or an equivalent config/env
+    ///   setting; cross-node payloads must implement [`WireData`]).
     ///
     /// Orthogonal to [`RuntimeBuilder::backend`]: the backend decides
     /// *which algorithm* a collective runs, the transport decides *what
@@ -1028,26 +1171,43 @@ impl RuntimeBuilder {
                 )
             })?,
         };
-        let (machine, machine_threads) = match self.machine {
-            MachineChoice::Cost(c) => (c, 1),
+        let (machine, machine_threads, machine_rpn) = match self.machine {
+            MachineChoice::Cost(c) => (c, 1, None),
             MachineChoice::Named(spec) => {
                 let m = MachineConfig::resolve(&spec)?;
-                (m.cost(), m.threads_per_rank.max(1))
+                (m.cost(), m.threads_per_rank.max(1), m.ranks_per_node)
             }
         };
         let threads_per_rank = self.threads_per_rank.unwrap_or(machine_threads);
+        // Node shape precedence: builder knob > machine config > launch
+        // environment (`FOOPAR_RANKS_PER_NODE`, forwarded to re-exec'd
+        // workers so all processes derive the same topology) > flat.
+        let ranks_per_node = self.ranks_per_node.or(machine_rpn).or_else(|| {
+            std::env::var(hier::ENV_RANKS_PER_NODE)
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&n| n > 0)
+        });
         let transport = match self.transport.as_deref() {
             None | Some("local") | Some("shmem") | Some("inprocess") => {
                 TransportChoice::InProcess
             }
             Some("tcp-loopback") => TransportChoice::TcpLoopback,
             Some("tcp") => TransportChoice::Tcp,
+            Some("hybrid") => TransportChoice::Hybrid,
             Some(other) => {
                 return Err(anyhow!(
-                    "unknown transport '{other}' (available: local, tcp-loopback, tcp)"
+                    "unknown transport '{other}' (available: local, tcp-loopback, tcp, hybrid)"
                 ))
             }
         };
+        if transport == TransportChoice::Hybrid && ranks_per_node.is_none() {
+            return Err(anyhow!(
+                "transport 'hybrid' needs a node shape: set .ranks_per_node(n), the machine \
+                 config's ranks_per_node key, or {}",
+                hier::ENV_RANKS_PER_NODE
+            ));
+        }
         let trace = match self.trace {
             // An explicit builder choice wins; `Off` defers to the env so
             // `FOOPAR_TRACE=out.json` works on any unmodified binary.
@@ -1057,7 +1217,15 @@ impl RuntimeBuilder {
             },
             t => t,
         };
-        Ok(Runtime { world: self.world, backend, machine, transport, threads_per_rank, trace })
+        Ok(Runtime {
+            world: self.world,
+            backend,
+            machine,
+            transport,
+            threads_per_rank,
+            ranks_per_node,
+            trace,
+        })
     }
 
     /// Build and immediately run `f` (the common single-shot path).
@@ -1507,6 +1675,114 @@ mod tests {
         assert_eq!(Runtime::builder().build().unwrap().transport_name(), "local");
         let err = Runtime::builder().transport("carrier-pigeon").build().unwrap_err();
         assert!(format!("{err:#}").contains("carrier-pigeon"));
+        // hybrid resolves only with a node shape
+        let rt = Runtime::builder().transport("hybrid").ranks_per_node(2).build().unwrap();
+        assert_eq!(rt.transport_name(), "hybrid");
+        let err = Runtime::builder().transport("hybrid").build().unwrap_err();
+        assert!(format!("{err:#}").contains("ranks_per_node"), "{err:#}");
+    }
+
+    #[test]
+    fn builder_ranks_per_node_shapes_topology() {
+        // default: flat on every transport
+        let rt = Runtime::builder().world(4).build().unwrap();
+        assert!(rt.topology().is_flat());
+        // explicit shape, honored on the in-process transport too
+        let rt = Runtime::builder().world(8).ranks_per_node(3).build().unwrap();
+        let topo = rt.topology();
+        assert_eq!(topo.node_sizes(), &[3, 3, 2]);
+        let res = rt.run(|ctx| {
+            (ctx.topology().node_of(ctx.rank), ctx.topology().is_leader(ctx.rank))
+        });
+        assert_eq!(
+            res.results,
+            vec![
+                (0, true),
+                (0, false),
+                (0, false),
+                (1, true),
+                (1, false),
+                (1, false),
+                (2, true),
+                (2, false)
+            ]
+        );
+        // zero clamps to one (every rank its own node)
+        let rt = Runtime::builder().world(2).ranks_per_node(0).build().unwrap();
+        assert_eq!(rt.topology().num_nodes(), 2);
+    }
+
+    #[test]
+    fn hierarchical_links_price_intra_below_inter() {
+        let res = Runtime::builder()
+            .world(4)
+            .ranks_per_node(2)
+            .backend_profile(BackendProfile::openmpi_fixed())
+            .cost(CostParams::new(1.0, 0.001))
+            .build()
+            .unwrap()
+            .run(|ctx| {
+                let link = ctx.link_cost();
+                assert!(link.intra.msg(1000) < link.inter.msg(1000));
+                // same-node exchange 0↔1 is priced on the intra link;
+                // cross-node exchange 0↔2 on the inter (machine) link
+                match ctx.rank {
+                    0 => {
+                        ctx.send(1, 1, 0u8);
+                        let t_intra = ctx.now();
+                        ctx.send(2, 2, 0u8);
+                        (t_intra, ctx.now() - t_intra)
+                    }
+                    1 => {
+                        let _: u8 = ctx.recv(0, 1);
+                        (ctx.now(), 0.0)
+                    }
+                    2 => {
+                        let _: u8 = ctx.recv(0, 2);
+                        (ctx.now(), 0.0)
+                    }
+                    _ => (0.0, 0.0),
+                }
+            });
+        let (t_intra, t_inter_leg) = res.results[0];
+        assert!(t_intra < 0.1, "intra send priced on shared-memory link: {t_intra}");
+        assert!(t_inter_leg > 1.0, "inter send priced on machine link: {t_inter_leg}");
+    }
+
+    #[test]
+    fn hybrid_run_matches_in_process_results() {
+        let mk = |transport: &str| {
+            Runtime::builder()
+                .world(4)
+                .ranks_per_node(2)
+                .backend_profile(BackendProfile::openmpi_fixed())
+                .cost(CostParams::new(1.0, 0.001))
+                .transport(transport)
+                .build()
+                .unwrap()
+                .run(|ctx| {
+                    if ctx.rank == 0 {
+                        ctx.send(1, 8, vec![1.5f64, 2.5]); // intra leg
+                        ctx.send(3, 9, vec![4.5f64, 8.0]); // inter leg
+                        0.0
+                    } else if ctx.rank == 1 {
+                        let v: Vec<f64> = ctx.recv(0, 8);
+                        v.iter().sum()
+                    } else if ctx.rank == 3 {
+                        let v: Vec<f64> = ctx.recv(0, 9);
+                        v.iter().sum()
+                    } else {
+                        -1.0
+                    }
+                })
+        };
+        let shm = mk("local");
+        let hyb = mk("hybrid");
+        assert_eq!(shm.results, hyb.results);
+        // virtual time is transport-independent: both runs carry the
+        // same topology, so clocks agree even though delivery differs
+        assert_eq!(shm.clocks, hyb.clocks);
+        assert_eq!(shm.t_parallel, hyb.t_parallel);
     }
 
     #[test]

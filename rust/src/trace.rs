@@ -90,12 +90,19 @@ pub enum Category {
     Rank,
     /// A collective operation (bcast, reduce, …) or its start/wait half.
     Collective,
-    /// A point-to-point transport operation (post/take).
+    /// A point-to-point transport operation (post/take) on a flat
+    /// (single-level) world.
     Comm,
     /// A compute kernel tile (GEMM / elementwise chunk).
     Kernel,
     /// Serving-plane work (admission, job lifecycle).
     Serve,
+    /// A transport operation whose peer shares the caller's node
+    /// (hierarchical worlds only — the shmem leg of a hybrid transport).
+    CommIntra,
+    /// A transport operation crossing a node boundary (the network leg
+    /// of a hybrid transport).
+    CommInter,
 }
 
 impl Category {
@@ -106,6 +113,8 @@ impl Category {
             Category::Comm => "comm",
             Category::Kernel => "kernel",
             Category::Serve => "serve",
+            Category::CommIntra => "comm-intra",
+            Category::CommInter => "comm-inter",
         }
     }
 
@@ -116,6 +125,8 @@ impl Category {
             Category::Comm => 2,
             Category::Kernel => 3,
             Category::Serve => 4,
+            Category::CommIntra => 5,
+            Category::CommInter => 6,
         }
     }
 
@@ -126,6 +137,8 @@ impl Category {
             2 => Category::Comm,
             3 => Category::Kernel,
             4 => Category::Serve,
+            5 => Category::CommIntra,
+            6 => Category::CommInter,
             _ => return Err(WireError::Malformed("unknown span category")),
         })
     }
@@ -704,6 +717,8 @@ impl TraceData {
             compute: f64,
             collective: f64,
             comm: f64,
+            comm_intra: f64,
+            comm_inter: f64,
             serve: f64,
             idle: f64,
             t_min: f64,
@@ -715,6 +730,8 @@ impl TraceData {
                 Category::Kernel => acc.compute += excl,
                 Category::Collective => acc.collective += excl,
                 Category::Comm => acc.comm += excl,
+                Category::CommIntra => acc.comm_intra += excl,
+                Category::CommInter => acc.comm_inter += excl,
                 Category::Serve => acc.serve += excl,
                 Category::Rank => acc.idle += excl,
             }
@@ -764,6 +781,8 @@ impl TraceData {
             acc.compute += local.compute;
             acc.collective += local.collective;
             acc.comm += local.comm;
+            acc.comm_intra += local.comm_intra;
+            acc.comm_inter += local.comm_inter;
             acc.serve += local.serve;
             acc.idle += local.idle;
             if !acc.init {
@@ -791,6 +810,8 @@ impl TraceData {
                 ms(acc.compute),
                 ms(acc.collective),
                 ms(acc.comm),
+                ms(acc.comm_intra),
+                ms(acc.comm_inter),
                 ms(acc.serve),
                 ms(acc.idle),
                 if vclock.is_finite() { format!("{vclock:.6}") } else { "-".into() },
@@ -806,6 +827,8 @@ impl TraceData {
                 "compute(ms)",
                 "collective(ms)",
                 "comm(ms)",
+                "intra(ms)",
+                "inter(ms)",
                 "serve(ms)",
                 "idle(ms)",
                 "virt clock(s)",

@@ -108,3 +108,53 @@ fn disabled_tracing_adds_zero_transport_messages() {
     // and the virtual-time results must be untouched by instrumentation
     assert_eq!(plain.t_parallel, traced.t_parallel, "tracing perturbed the cost model");
 }
+
+#[test]
+fn hybrid_trace_distinguishes_intra_and_inter_legs() {
+    // World 4 on 2 nodes of 2 over the hybrid transport: same-node and
+    // cross-node hops must land in distinct span categories, and the
+    // critical-path report must break comm time out per level.
+    let rt = Runtime::builder()
+        .world(4)
+        .transport("hybrid")
+        .ranks_per_node(2)
+        .trace_collect()
+        .build()
+        .expect("runtime");
+    let res = rt.run(|ctx| {
+        // one guaranteed intra hop (0→1) and one inter hop (0→2)
+        match ctx.rank {
+            0 => {
+                ctx.send(1, 1, 7u64);
+                ctx.send(2, 2, 8u64);
+            }
+            1 => assert_eq!(ctx.recv::<u64>(0, 1), 7),
+            2 => assert_eq!(ctx.recv::<u64>(0, 2), 8),
+            _ => {}
+        }
+        let g = foopar::comm::group::Group::world(ctx);
+        let total = g.allreduce(ctx.rank as u64, |a, b| a + b);
+        assert_eq!(total, 6);
+    });
+    let td = res.trace.expect("trace_collect must gather spans");
+    let has_cat = |c: trace::Category| td.spans.iter().any(|s| s.cat == c);
+    assert!(has_cat(trace::Category::CommIntra), "same-node hops must trace as comm-intra");
+    assert!(has_cat(trace::Category::CommInter), "cross-node hops must trace as comm-inter");
+    assert!(
+        !has_cat(trace::Category::Comm),
+        "a hierarchical world has no level-less comm spans"
+    );
+
+    // category names survive the Chrome export round-trip
+    let json = td.chrome_json();
+    trace::validate_chrome(&json, true).expect("strict chrome validation");
+    assert!(json.contains("comm-intra") && json.contains("comm-inter"));
+
+    // the report breaks communication out per level
+    let report = td.critical_path_report(&res.clocks);
+    let header = report.lines().find(|l| l.contains("comm(ms)")).expect("report header");
+    assert!(
+        header.contains("intra(ms)") && header.contains("inter(ms)"),
+        "missing per-level columns:\n{report}"
+    );
+}
