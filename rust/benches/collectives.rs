@@ -136,7 +136,9 @@ fn main() {
          carries ops per modeled (virtual-clock) second so the stock bench gate can compare it — \
          the clock is deterministic, the committed baseline is conservative pending a bless on \
          CI output\",\n\
+         \"profile\": \"{}\",\n\
          \"results\": [\n{}\n]\n}}\n",
+        foopar::BlockParams::default().label(),
         entries.join(",\n")
     );
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_collectives.json");

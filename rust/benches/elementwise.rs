@@ -148,7 +148,9 @@ fn main() {
         "{{\n\"bench\": \"elementwise\",\n\"unit\": \"wall seconds\",\n\
          \"note\": \"bandwidth-bound kernels; threaded past EW_PAR_THRESHOLD (1024^2 elements), \
          so 512^2 thread rows coincide by design\",\n\
+         \"profile\": \"{}\",\n\
          \"results\": [\n{}\n]\n}}\n",
+        foopar::BlockParams::default().label(),
         entries.join(",\n")
     );
     // Write to the repo root (where the committed baseline lives and

@@ -136,7 +136,9 @@ fn main() {
     let json = format!(
         "{{\n\"bench\": \"gemm_kernel\",\n\"unit\": \"wall seconds\",\n\
          \"seed_kernel\": \"PR-0 scalar cache-blocked ikj (frozen)\",\n\
+         \"profile\": \"{}\",\n\
          \"results\": [\n{}\n]\n}}\n",
+        foopar::BlockParams::default().label(),
         entries.join(",\n")
     );
     // Write to the repo root (where the committed baseline lives and

@@ -136,7 +136,9 @@ fn main() {
          \"note\": \"serving-plane throughput; the gflops field carries jobs/sec so the \
          stock bench gate can compare it — scheduling is wall-clock noisy, so the gate \
          stanza uses a loose tolerance against a conservative baseline\",\n\
+         \"profile\": \"{}\",\n\
          \"results\": [\n{}\n]\n}}\n",
+        foopar::BlockParams::default().label(),
         entries.join(",\n")
     );
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json");

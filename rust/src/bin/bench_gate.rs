@@ -8,7 +8,13 @@
 //!
 //! ```text
 //! bench_gate --baseline <committed.json> --fresh <fresh.json> [--tolerance 0.10]
+//! bench_gate --check <any.json>
 //! ```
+//!
+//! `--check` runs the same parser over a single file and exits 0 iff it
+//! holds a well-formed `"results"` array — the CI `tune-smoke` job
+//! validates `repro tune` output with it, so a profile that the gate's
+//! own parser couldn't read never gets persisted as a CI artifact.
 //!
 //! The parser is deliberately minimal: it understands exactly the flat
 //! `"results": [ {..}, {..} ]` layout our bench drivers emit (the
@@ -128,6 +134,21 @@ fn main() -> ExitCode {
             return ExitCode::from(2);
         }
     };
+    if let Some(path) = args.get("check") {
+        return match std::fs::read_to_string(path)
+            .map_err(|e| format!("read {path}: {e}"))
+            .and_then(|text| parse_entries(&text))
+        {
+            Ok(entries) => {
+                println!("bench_gate check PASS: {path} holds {} entries", entries.len());
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("bench_gate check FAIL: {path}: {e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
     let run = || -> Result<(String, String, f64), String> {
         let baseline_path = args
             .get("baseline")
@@ -234,6 +255,37 @@ mod tests {
         assert!(gate("{}", &sample(38.12), 0.10).is_err());
         assert!(gate(&sample(38.12), "{\"results\": []}", 0.10).is_err());
         assert!(parse_entries("{\"results\": [ {\"kernel\": \"x\", \"b\": 1} ]}").is_err());
+    }
+
+    #[test]
+    fn tune_profile_shape_parses_for_check_mode() {
+        // what `bench_gate --check` sees from `repro tune`: scalar params
+        // before the results array, cells keyed kernel/b/threads/gflops
+        // (kernel values may contain spaces — the blocking label)
+        let json = "{\"tune_profile\":1,\"host\":\"h\",\"kc\":256,\"mc\":64,\"nc\":128,\
+                    \"micro\":\"8x8\",\"ew_par_threshold\":1048576,\"best_threads\":2,\
+                    \"best_gflops\":21.5,\"link_calibrated\":false,\"results\":[\
+                    {\"kernel\":\"default\",\"b\":128,\"threads\":1,\"gflops\":18.0},\
+                    {\"kernel\":\"kc128 mc64 nc128 8x8 t1\",\"b\":128,\"threads\":1,\
+                    \"gflops\":19.2},\
+                    {\"kernel\":\"tuned\",\"b\":128,\"threads\":2,\"gflops\":21.5}]}";
+        let entries = parse_entries(json).unwrap();
+        assert_eq!(entries.len(), 3);
+        assert_eq!(entries[1].key, "kernel=kc128 mc64 nc128 8x8 t1 b=128 threads=1");
+        assert!((entries[2].gflops - 21.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn baseline_without_profile_field_still_gates_against_fresh_with_it() {
+        // provenance field is new; committed baselines predate it and
+        // must keep gating fresh files that carry it
+        let fresh = sample(38.12).replacen(
+            "\"bench\": \"gemm_kernel\",",
+            "\"bench\": \"gemm_kernel\",\n\"profile\": \"kc256 mc64 nc128 8x8\",",
+            1,
+        );
+        assert!(gate(&sample(38.12), &fresh, 0.10).is_ok());
+        assert!(gate(&fresh, &sample(38.12), 0.10).is_ok());
     }
 
     #[test]

@@ -51,6 +51,13 @@ pub struct MachineConfig {
     pub ranks_per_node: Option<usize>,
     /// Backend names to sweep on this machine.
     pub backends: Vec<String>,
+    /// Path of a per-host tune profile (see [`crate::tune::TuneProfile`])
+    /// to load at `Runtime::build`: GEMM blocking params and calibrated
+    /// intra/inter link costs measured by `repro tune`.  `None` (every
+    /// built-in) keeps the default blocking and modeled link costs;
+    /// `Runtime::builder().tune_profile(..)` / CLI `--profile` win over
+    /// this key.
+    pub tune_profile: Option<String>,
 }
 
 impl MachineConfig {
@@ -71,6 +78,7 @@ impl MachineConfig {
             threads_per_rank: 1,
             ranks_per_node: None,
             backends: vec!["openmpi-fixed".into()],
+            tune_profile: None,
         }
     }
 
@@ -92,6 +100,7 @@ impl MachineConfig {
                 "mpj-express".into(),
                 "fastmpj".into(),
             ],
+            tune_profile: None,
         }
     }
 
@@ -107,6 +116,7 @@ impl MachineConfig {
             threads_per_rank: 1,
             ranks_per_node: None,
             backends: vec!["shmem".into()],
+            tune_profile: None,
         }
     }
 
@@ -146,6 +156,10 @@ impl MachineConfig {
                 Some(v) => v.as_list()?.to_vec(),
                 None => vec!["openmpi-fixed".into()],
             },
+            tune_profile: kv
+                .get("tune_profile")
+                .map(|v| v.as_str().map(str::to_string))
+                .transpose()?,
         })
     }
 
@@ -301,6 +315,18 @@ mod tests {
         assert_eq!(MachineConfig::from_kv(&kv).unwrap().ranks_per_node, Some(4));
         let kv = parse_kv(&format!("{base}ranks_per_node = 0\n")).unwrap();
         assert_eq!(MachineConfig::from_kv(&kv).unwrap().ranks_per_node, Some(1));
+    }
+
+    #[test]
+    fn tune_profile_key_parses() {
+        let base = "name = \"t\"\nrate = 1e9\nts = 1e-6\ntw = 1e-10\nmax_cores = 8\n";
+        let kv = parse_kv(base).unwrap();
+        assert_eq!(MachineConfig::from_kv(&kv).unwrap().tune_profile, None);
+        let kv = parse_kv(&format!("{base}tune_profile = \"/tmp/tune-host.json\"\n")).unwrap();
+        assert_eq!(
+            MachineConfig::from_kv(&kv).unwrap().tune_profile.as_deref(),
+            Some("/tmp/tune-host.json")
+        );
     }
 
     #[test]

@@ -10,9 +10,11 @@
 //! | [`isoeff`] | §4.2.1 / §4.3 / §5 — isoefficiency verification |
 //! | [`overhead`] | §6 — FooPar vs hand-coded DNS overhead |
 //! | [`peak`] | §6 — single-core "empirical peak" calibration |
+//! | [`tune`] | §6 — per-host kernel/link autotuning (`repro tune`) |
 
 pub mod fig5;
 pub mod isoeff;
 pub mod overhead;
 pub mod peak;
 pub mod table1;
+pub mod tune;

@@ -66,17 +66,30 @@ pub fn seed_peak(b: usize, iters: usize) -> PeakRow {
 /// rank's own [`MetricsSnapshot::gflops`](crate::metrics::MetricsSnapshot)
 /// (what every real-mode experiment reports), not a side channel.
 pub fn native_peak_mt(b: usize, iters: usize, threads: usize) -> PeakRow {
+    native_peak_mt_with(b, iters, threads, &gemm::BlockParams::default())
+}
+
+/// [`native_peak_mt`] under an explicit blocking profile — what
+/// `repro peak --profile` measures, so the reported rate is the one a
+/// tuned run actually achieves.
+pub fn native_peak_mt_with(
+    b: usize,
+    iters: usize,
+    threads: usize,
+    params: &gemm::BlockParams,
+) -> PeakRow {
     let x = Mat::random(b, b, 1);
     let y = Mat::random(b, b, 2);
     // warmup outside the measured context (also primes the scratch pool
     // and the per-rank workers)
-    std::hint::black_box(gemm::matmul_mt(&x, &y, threads));
+    std::hint::black_box(gemm::matmul_mt_with(&x, &y, threads, params));
     let xb = Block::real(x);
     let yb = Block::real(y);
     let res = Runtime::builder()
         .world(1)
         .cost(CostParams::free())
         .threads_per_rank(threads)
+        .block_params(*params)
         .build()
         .expect("peak runtime")
         .run(|ctx| {
@@ -112,11 +125,17 @@ pub fn pjrt_peak(b: usize, iters: usize) -> Result<PeakRow> {
 /// Calibration sweep: seed baseline, packed kernel at 1/2/4 threads,
 /// and PJRT rows when artifacts are available.
 pub fn sweep(iters: usize) -> Vec<PeakRow> {
+    sweep_with(iters, &gemm::BlockParams::default())
+}
+
+/// [`sweep`] with the native rows measured under an explicit blocking
+/// profile (seed and PJRT rows are profile-oblivious by construction).
+pub fn sweep_with(iters: usize, params: &gemm::BlockParams) -> Vec<PeakRow> {
     let mut rows = Vec::new();
     for &b in &[64usize, 128, 256, 512] {
         rows.push(seed_peak(b, iters));
         for &threads in &[1usize, 2, 4] {
-            rows.push(native_peak_mt(b, iters, threads));
+            rows.push(native_peak_mt_with(b, iters, threads, params));
         }
         if let Ok(r) = pjrt_peak(b, iters) {
             rows.push(r);

@@ -42,6 +42,7 @@ pub mod serve;
 pub mod spmd;
 pub mod testing;
 pub mod trace;
+pub mod tune;
 
 pub mod algos;
 pub mod experiments;
@@ -50,8 +51,10 @@ pub use comm::backend::{Backend, BackendProfile};
 pub use comm::collectives::Collectives;
 pub use comm::transport::Transport;
 pub use comm::wire::WireData;
+pub use matrix::params::{BlockParams, MicroKernel};
 pub use serve::{JobOutput, JobSpec, JobStatus, ServeClient, ServeHandle, ServeOptions};
 pub use spmd::{Runtime, RuntimeBuilder};
+pub use tune::TuneProfile;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -20,14 +20,14 @@ use foopar::analysis;
 use foopar::cli::Args;
 use foopar::comm::backend::registry;
 use foopar::config::MachineConfig;
-use foopar::experiments::{fig5, isoeff, overhead, peak, table1};
+use foopar::experiments::{fig5, isoeff, overhead, peak, table1, tune};
 use foopar::graph::{floyd_warshall_seq, Graph};
 use foopar::matrix::block::BlockSource;
 use foopar::metrics::JsonWriter;
 use foopar::runtime::compute::Compute;
 use foopar::runtime::engine::EngineServer;
 use foopar::serve::{JobOutput, JobSpec, ServeClient, ServeOptions};
-use foopar::Runtime;
+use foopar::{Runtime, TuneProfile};
 
 fn main() {
     let args = match Args::from_env() {
@@ -58,6 +58,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("peak") => cmd_peak(args),
+        Some("tune") => cmd_tune(args),
         Some("mmm") => cmd_mmm(args),
         Some("apsp") => cmd_apsp(args),
         Some("table1") => cmd_table1(args),
@@ -75,8 +76,15 @@ const HELP: &str = "\
 repro — FooPar reproduction (rust + JAX/Pallas AOT via PJRT)
 
   selftest                          end-to-end real-mode sanity
-  peak     [--iters N] [--machine M] single-rank empirical peak: seed vs packed
+  peak     [--iters N] [--machine M] [--profile PATH]
+                                    single-rank empirical peak: seed vs packed
                                     kernel at 1/2/4 threads, efficiency vs peak
+  tune     [--quick] [--iters N] [--out PATH] [--no-link]
+                                    per-host autotune: hill-climb the GEMM
+                                    blocking (kc/mc/nc/microkernel/threads) on
+                                    the native path and ping-pong the intra/
+                                    inter-node link costs; writes
+                                    ~/.foopar/tune-<host>.json (or --out)
   mmm      --p P [--n N] [--algo dns|generic|baseline] [--mode real|modeled] [--machine M]
            [--transport local|tcp-loopback|hybrid] [--ranks-per-node N] [--backend B]
            [--threads T] [--trace OUT.json]
@@ -104,7 +112,35 @@ Topology: --transport hybrid routes same-node envelopes over shared-memory
 mailboxes and cross-node envelopes over TCP loopback; nodes are groups of
 --ranks-per-node consecutive ranks (also settable via a machine-config
 `ranks_per_node` key or FOOPAR_RANKS_PER_NODE).  Pair with --backend hier
-for topology-aware two-level collectives on any transport.";
+for topology-aware two-level collectives on any transport.
+
+Tuning: peak/mmm/apsp/serve load a per-host tune profile written by
+`repro tune` — precedence: --profile PATH, then FOOPAR_TUNE_PROFILE, then
+~/.foopar/tune-<host>.json if present, then a machine config's
+`tune_profile` key, then built-in defaults.  The profile's block
+parameters drive every native kernel; its measured link costs price the
+hierarchical cost model on non-flat topologies.";
+
+/// CLI tune-profile resolution (highest priority first): `--profile
+/// PATH` (an unreadable path is an error, not a fallback), the
+/// `FOOPAR_TUNE_PROFILE` env variable, then the default per-host path
+/// when it exists.  `None` defers to the machine config / defaults.
+fn resolve_profile(args: &Args) -> Result<Option<TuneProfile>> {
+    if let Some(path) = args.get("profile") {
+        return Ok(Some(TuneProfile::load(std::path::Path::new(path))?));
+    }
+    if let Ok(path) = std::env::var("FOOPAR_TUNE_PROFILE") {
+        if !path.is_empty() {
+            return Ok(Some(TuneProfile::load(std::path::Path::new(&path))?));
+        }
+    }
+    if let Some(path) = TuneProfile::default_path() {
+        if path.exists() {
+            return Ok(Some(TuneProfile::load(&path)?));
+        }
+    }
+    Ok(None)
+}
 
 /// The optional `--ranks-per-node` flag (absent ⇒ the builder falls back
 /// to the machine config and then `FOOPAR_RANKS_PER_NODE`).
@@ -194,8 +230,23 @@ fn selftest() -> Result<()> {
 fn cmd_peak(args: &Args) -> Result<()> {
     let iters = args.get_usize("iters", 10)?;
     let machine = MachineConfig::resolve(args.get_str("machine", "local"))?;
-    let rows = peak::sweep(iters);
+    let profile = resolve_profile(args)?;
+    let block = profile.as_ref().map(|p| p.block).unwrap_or_default();
+    let rows = peak::sweep_with(iters, &block);
     println!("{}", peak::render(&rows));
+    match &profile {
+        Some(p) => println!(
+            "tune profile: {} — {} (swept best {:.2} GF/s at {} threads)",
+            p.source_label(),
+            p.block.label(),
+            p.gflops,
+            p.threads
+        ),
+        None => println!(
+            "tune profile: none — defaults {} (run `repro tune` to calibrate this host)",
+            block.label()
+        ),
+    }
     print!("{}", peak::efficiency_report(&rows, &machine));
     println!(
         "\n== elementwise kernels (bandwidth-bound; threaded past 1024² elements) ==\n"
@@ -212,6 +263,35 @@ fn cmd_peak(args: &Args) -> Result<()> {
             best.b, best.gflops
         );
     }
+    Ok(())
+}
+
+/// `repro tune` — run the autotuning sweep (and link calibration) and
+/// persist the winning profile for later runs to load.
+fn cmd_tune(args: &Args) -> Result<()> {
+    let quick = args.has("quick");
+    let mut cfg = if quick { tune::SweepConfig::quick() } else { tune::SweepConfig::full() };
+    if args.get("iters").is_some() {
+        cfg.iters = args.get_usize("iters", cfg.iters)?;
+    }
+    let calibrate = !args.has("no-link");
+    let link_reps = if quick { 20 } else { 200 };
+    println!(
+        "tuning: sweeping kc/mc/nc/microkernel/threads at b={} ({} iters per cell){}",
+        cfg.b,
+        cfg.iters,
+        if calibrate { ", then ping-pong link calibration" } else { "" }
+    );
+    let mut profile = tune::run(&cfg, calibrate, link_reps)?;
+    print!("{}", tune::render(&profile));
+    let out = match args.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => TuneProfile::default_path().ok_or_else(|| {
+            anyhow::anyhow!("no $HOME to derive the default profile path; pass --out PATH")
+        })?,
+    };
+    profile.save(&out)?;
+    println!("wrote {}", out.display());
     Ok(())
 }
 
@@ -260,6 +340,9 @@ fn cmd_mmm(args: &Args) -> Result<()> {
         .transport(transport)
         .machine_config(&machine)
         .threads_per_rank(threads);
+    if let Some(p) = resolve_profile(args)? {
+        builder = builder.tune_profile(&p);
+    }
     if let Some(rpn) = opt_ranks_per_node(args)? {
         builder = builder.ranks_per_node(rpn);
     }
@@ -343,6 +426,9 @@ fn cmd_apsp(args: &Args) -> Result<()> {
         .transport(transport)
         .machine_config(&machine)
         .threads_per_rank(threads);
+    if let Some(p) = resolve_profile(args)? {
+        builder = builder.tune_profile(&p);
+    }
     if let Some(rpn) = opt_ranks_per_node(args)? {
         builder = builder.ranks_per_node(rpn);
     }
@@ -444,6 +530,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .world(world)
         .transport(transport)
         .threads_per_rank(threads);
+    if let Some(p) = resolve_profile(args)? {
+        builder = builder.tune_profile(&p);
+    }
     if let Some(rpn) = opt_ranks_per_node(args)? {
         builder = builder.ranks_per_node(rpn);
     }

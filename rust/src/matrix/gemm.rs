@@ -7,31 +7,41 @@
 //!
 //! Kernel structure (the classical GotoBLAS/BLIS decomposition):
 //!
-//! * **Microkernel** — an [`MR`]×[`NR`] register tile of C accumulators
+//! * **Microkernel** — an MR×NR register tile of C accumulators
 //!   held in fixed-size arrays; the k-loop streams one packed A column
 //!   and one packed B row per step and performs MR·NR multiply-adds with
 //!   **no C loads or stores** (the seed ikj kernel re-streamed the C row
 //!   every k step — that traffic is where its 4× went).  Fixed-size
-//!   arrays autovectorize; no intrinsics, no `unsafe`.
-//! * **Cache blocking** — [`KC`]-deep panels keep the packed A strip in
-//!   L1/L2 across the whole row of microtiles; [`MC`]-row bands bound
-//!   the packed-A working set.  Multi-threaded products are cut into
-//!   ([`MC`] band × [`NC`] column-panel) tiles and scheduled through the
-//!   work-stealing scheduler in [`crate::matrix::par`], so small band
-//!   counts still occupy every core and a slow tile is isolated from
-//!   the rest of its band.
+//!   arrays autovectorize; no intrinsics, no `unsafe`.  The tile shape
+//!   is a compile-time constant per variant — [`MicroKernel`] selects
+//!   one of the monomorphized shapes (8×8, 8×4, 4×8) at the top of a
+//!   product, so the hot loop never pays a dynamic dispatch.
+//! * **Cache blocking** — now runtime [`BlockParams`] rather than
+//!   compile-time constants, so a per-host tune profile can drive them:
+//!   `kc`-deep panels keep the packed A strip in L1/L2 across the whole
+//!   row of microtiles; `mc`-row bands bound the packed-A working set.
+//!   Multi-threaded products are cut into (`mc` band × `nc` column-panel)
+//!   tiles and scheduled through the work-stealing scheduler in
+//!   [`crate::matrix::par`], so small band counts still occupy every core
+//!   and a slow tile is isolated from the rest of its band.  The legacy
+//!   constants [`KC`]/[`MC`]/[`NC`] are the defaults.
 //! * **Packing** — A bands and the whole of B are copied once into
 //!   contiguous, zero-padded panels from a process-wide **scratch pool**
 //!   (buffers are reused across calls, so steady-state products allocate
-//!   nothing).
+//!   nothing).  The pool sizes buffers from the *active* params — a
+//!   profile with larger panels than a previous call's simply grows the
+//!   pooled buffer on checkout.
 //!
 //! **Determinism.** Every `c[i][j]` accumulates over `k` in ascending
 //! order within each KC block, KC blocks ascending, one register
-//! accumulator per element.  That order is independent of the number of
-//! threads (threads own disjoint row bands), of the column split (a
-//! [`matmul`] equals the hstack of its `Compute::matmul_panel` pieces
-//! bit-for-bit), and of the transport that delivered the operands — the
-//! guarantees the data-plane integration tests pin down.
+//! accumulator per element.  For a fixed [`BlockParams`] that order is
+//! independent of the number of threads (threads own disjoint row
+//! bands), of the column split (a [`matmul`] equals the hstack of its
+//! `Compute::matmul_panel` pieces bit-for-bit), and of the transport
+//! that delivered the operands — the guarantees the data-plane
+//! integration tests pin down.  Changing `kc` regroups the dense sum
+//! and may change low-order bits; `mc`/`nc`/microkernel shape never do,
+//! and the tropical kernel is exact under any blocking.
 //!
 //! **Semantics.** The dense kernel has no zero-skip: `0·NaN` and `0·∞`
 //! propagate as IEEE prescribes (the seed kernel's `aik == 0.0` fast
@@ -41,27 +51,30 @@
 
 use super::dense::Mat;
 use super::par;
+use super::params;
 use crate::trace;
 
-/// Microkernel tile rows (register blocking).
+pub use super::params::{BlockParams, MicroKernel};
+
+/// Default microkernel tile rows (register blocking of [`MicroKernel::Mr8Nr8`]).
 pub const MR: usize = 8;
-/// Microkernel tile columns (register blocking; one/two SIMD vectors).
+/// Default microkernel tile columns (one/two SIMD vectors).
 pub const NR: usize = 8;
-/// K-dimension cache-block depth: a packed A strip is `MR·KC` floats
-/// (8 KiB) — resident in L1 across a row of microtiles.
-pub const KC: usize = 256;
-/// Row-band height: the packed-A granularity and the row edge of a
-/// scheduler tile (`MC·KC` floats = 64 KiB per band panel).
-pub const MC: usize = 64;
-/// Column-panel width of one scheduler tile (multiple of [`NR`]).  A
-/// multi-threaded product is tiled (MC band × NC panel) so small band
+/// Default k-dimension cache-block depth: a packed A strip is `MR·KC`
+/// floats (8 KiB) — resident in L1 across a row of microtiles.
+pub const KC: usize = params::DEFAULT_KC;
+/// Default row-band height: the packed-A granularity and the row edge of
+/// a scheduler tile (`MC·KC` floats = 64 KiB per band panel).
+pub const MC: usize = params::DEFAULT_MC;
+/// Default column-panel width of one scheduler tile (multiple of [`NR`]).
+/// A multi-threaded product is tiled (mc band × nc panel) so small band
 /// counts still produce enough tiles to feed every core — the PR-4
 /// whole-band counter left cores idle below `threads` bands.  Each tile
 /// re-packs its band's A strip per KC block, which costs `njp/(2n)` of
 /// the multiply work (< 1% at n ≥ 128) and buys full occupancy;
 /// single-threaded runs keep one panel spanning all of n and skip the
 /// re-pack entirely.
-pub const NC: usize = 128;
+pub const NC: usize = params::DEFAULT_NC;
 
 /// Process-wide pool of packing scratch buffers (see module docs).
 mod scratch {
@@ -79,7 +92,18 @@ mod scratch {
     /// Check out a buffer of exactly `len` elements (contents
     /// unspecified — packing writes every slot, so no clear/zero-fill:
     /// `resize` truncates for free or zero-fills only the grown tail).
-    pub fn take(len: usize) -> Vec<f32> {
+    ///
+    /// `unit` is the packed-strip width (MR for A panels, NR for B
+    /// panels): every legal request is a whole number of strips, and the
+    /// assert catches a caller whose panel arithmetic drifted from the
+    /// active [`super::BlockParams`].  Pooled buffers carry no size —
+    /// a profile asking for larger panels than any previous call simply
+    /// grows the buffer here.
+    pub fn take(len: usize, unit: usize) -> Vec<f32> {
+        assert!(
+            unit > 0 && len % unit == 0,
+            "pack scratch request of {len} floats is not a whole number of {unit}-wide strips"
+        );
         let mut v = pool().lock().unwrap().pop().unwrap_or_default();
         v.resize(len, 0.0);
         v
@@ -101,14 +125,22 @@ mod scratch {
 /// `pad` (0 for dense — padded rows are never stored; [`INF`] for
 /// tropical so the all-INF column skip still fires on edge strips).
 #[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
-fn pack_a(a: &Mat, row0: usize, mc: usize, k0: usize, kc: usize, pad: f32, out: &mut [f32]) {
+fn pack_a<const MR_: usize>(
+    a: &Mat,
+    row0: usize,
+    mc: usize,
+    k0: usize,
+    kc: usize,
+    pad: f32,
+    out: &mut [f32],
+) {
     let ad: &[f32] = &a.data;
     let lda = a.cols;
     let mut idx = 0;
-    for i0 in (0..mc).step_by(MR) {
+    for i0 in (0..mc).step_by(MR_) {
         for k in 0..kc {
             let col = k0 + k;
-            for i in 0..MR {
+            for i in 0..MR_ {
                 out[idx] = if i0 + i < mc {
                     ad[(row0 + i0 + i) * lda + col]
                 } else {
@@ -120,22 +152,22 @@ fn pack_a(a: &Mat, row0: usize, mc: usize, k0: usize, kc: usize, pad: f32, out: 
     }
 }
 
-/// Pack all of `b` into NR-strip-major KC-blocked layout:
+/// Pack all of `b` into NR-strip-major `kc`-blocked layout:
 /// `out[kc_block][strip][k][j]`, edge strips zero-padded (padded columns
 /// are never stored).  The block starting at depth `k0` begins at offset
 /// `ceil(n/NR)·NR·k0` — packing the whole of B once lets every row band
 /// (and every thread) reuse it.
 #[allow(clippy::needless_range_loop)]
-fn pack_b(b: &Mat, out: &mut [f32]) {
+fn pack_b<const NR_: usize>(b: &Mat, kc_blk: usize, out: &mut [f32]) {
     let bd: &[f32] = &b.data;
     let (k, n) = (b.rows, b.cols);
     let mut idx = 0;
-    for k0 in (0..k).step_by(KC) {
-        let kc = KC.min(k - k0);
-        for j0 in (0..n).step_by(NR) {
+    for k0 in (0..k).step_by(kc_blk) {
+        let kc = kc_blk.min(k - k0);
+        for j0 in (0..n).step_by(NR_) {
             for kk in 0..kc {
                 let row = (k0 + kk) * n;
-                for j in 0..NR {
+                for j in 0..NR_ {
                     out[idx] = if j0 + j < n { bd[row + j0 + j] } else { 0.0 };
                     idx += 1;
                 }
@@ -151,13 +183,18 @@ fn pack_b(b: &Mat, out: &mut [f32]) {
 /// determinism).  No zero-skip: NaN/Inf propagate.
 #[inline(always)]
 #[allow(clippy::needless_range_loop)]
-fn micro_dense(kc: usize, pa: &[f32], pb: &[f32], acc: &mut [[f32; NR]; MR]) {
+fn micro_dense<const MR_: usize, const NR_: usize>(
+    kc: usize,
+    pa: &[f32],
+    pb: &[f32],
+    acc: &mut [[f32; NR_]; MR_],
+) {
     for k in 0..kc {
-        let a: &[f32; MR] = pa[k * MR..k * MR + MR].try_into().unwrap();
-        let b: &[f32; NR] = pb[k * NR..k * NR + NR].try_into().unwrap();
-        for i in 0..MR {
+        let a: &[f32; MR_] = pa[k * MR_..k * MR_ + MR_].try_into().unwrap();
+        let b: &[f32; NR_] = pb[k * NR_..k * NR_ + NR_].try_into().unwrap();
+        for i in 0..MR_ {
             let aik = a[i];
-            for j in 0..NR {
+            for j in 0..NR_ {
                 acc[i][j] += aik * b[j];
             }
         }
@@ -170,16 +207,21 @@ fn micro_dense(kc: usize, pa: &[f32], pb: &[f32], acc: &mut [[f32; NR]; MR]) {
 /// identity and is skipped — the one fast path the satellite audit kept.
 #[inline(always)]
 #[allow(clippy::needless_range_loop)]
-fn micro_tropical(kc: usize, pa: &[f32], pb: &[f32], acc: &mut [[f32; NR]; MR]) {
+fn micro_tropical<const MR_: usize, const NR_: usize>(
+    kc: usize,
+    pa: &[f32],
+    pb: &[f32],
+    acc: &mut [[f32; NR_]; MR_],
+) {
     for k in 0..kc {
-        let a: &[f32; MR] = pa[k * MR..k * MR + MR].try_into().unwrap();
+        let a: &[f32; MR_] = pa[k * MR_..k * MR_ + MR_].try_into().unwrap();
         if a.iter().all(|&v| v >= INF) {
             continue; // the (min,+) identity annihilates this step
         }
-        let b: &[f32; NR] = pb[k * NR..k * NR + NR].try_into().unwrap();
-        for i in 0..MR {
+        let b: &[f32; NR_] = pb[k * NR_..k * NR_ + NR_].try_into().unwrap();
+        for i in 0..MR_ {
             let aik = a[i];
-            for j in 0..NR {
+            for j in 0..NR_ {
                 let cand = aik + b[j];
                 if cand < acc[i][j] {
                     acc[i][j] = cand;
@@ -203,10 +245,11 @@ enum Semiring {
 /// B[:, jlo..jhi)` against the pre-packed whole-B panel `pb`.  Output
 /// goes through `out` windows (global row-major offsets); `pa` is this
 /// tile's packing scratch.  `jlo` must be NR-aligned (tiles are cut at
-/// NC boundaries, a multiple of NR) so the tile's column strips line up
-/// with the packed-B strips.
+/// `nc` boundaries, a multiple of NR) so the tile's column strips line
+/// up with the packed-B strips.  `kc_blk` is the active KC depth — it
+/// must match the depth `pb` was packed with.
 #[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
-fn band_kernel(
+fn band_kernel<const MR_: usize, const NR_: usize>(
     semiring: Semiring,
     out: &par::DisjointOut<'_>,
     a: &Mat,
@@ -216,31 +259,32 @@ fn band_kernel(
     jlo: usize,
     jhi: usize,
     n: usize,
+    kc_blk: usize,
     pa: &mut [f32],
 ) {
-    debug_assert_eq!(jlo % NR, 0, "tile column panels must be NR-aligned");
+    debug_assert_eq!(jlo % NR_, 0, "tile column panels must be NR-aligned");
     let k = a.cols;
-    let nstrips = n.div_ceil(NR);
+    let nstrips = n.div_ceil(NR_);
     let (pad, identity) = match semiring {
         Semiring::Dense => (0.0f32, 0.0f32),
         Semiring::Tropical => (INF, f32::INFINITY),
     };
-    for k0 in (0..k).step_by(KC) {
-        let kc = KC.min(k - k0);
-        let pa_len = mc.div_ceil(MR) * MR * kc;
-        pack_a(a, row0, mc, k0, kc, pad, &mut pa[..pa_len]);
-        let pb_block = &pb[nstrips * NR * k0..nstrips * NR * (k0 + kc)];
-        for j0 in (jlo..jhi).step_by(NR) {
-            let jsi = j0 / NR; // global strip index into the packed B
-            let nr_eff = NR.min(jhi - j0);
-            let pbs = &pb_block[jsi * kc * NR..(jsi + 1) * kc * NR];
-            for (isi, i0) in (0..mc).step_by(MR).enumerate() {
-                let mr_eff = MR.min(mc - i0);
-                let pas = &pa[isi * kc * MR..(isi + 1) * kc * MR];
-                let mut acc = [[identity; NR]; MR];
+    for k0 in (0..k).step_by(kc_blk) {
+        let kc = kc_blk.min(k - k0);
+        let pa_len = mc.div_ceil(MR_) * MR_ * kc;
+        pack_a::<MR_>(a, row0, mc, k0, kc, pad, &mut pa[..pa_len]);
+        let pb_block = &pb[nstrips * NR_ * k0..nstrips * NR_ * (k0 + kc)];
+        for j0 in (jlo..jhi).step_by(NR_) {
+            let jsi = j0 / NR_; // global strip index into the packed B
+            let nr_eff = NR_.min(jhi - j0);
+            let pbs = &pb_block[jsi * kc * NR_..(jsi + 1) * kc * NR_];
+            for (isi, i0) in (0..mc).step_by(MR_).enumerate() {
+                let mr_eff = MR_.min(mc - i0);
+                let pas = &pa[isi * kc * MR_..(isi + 1) * kc * MR_];
+                let mut acc = [[identity; NR_]; MR_];
                 match semiring {
-                    Semiring::Dense => micro_dense(kc, pas, pbs, &mut acc),
-                    Semiring::Tropical => micro_tropical(kc, pas, pbs, &mut acc),
+                    Semiring::Dense => micro_dense::<MR_, NR_>(kc, pas, pbs, &mut acc),
+                    Semiring::Tropical => micro_tropical::<MR_, NR_>(kc, pas, pbs, &mut acc),
                 }
                 for i in 0..mr_eff {
                     let base = (row0 + i0 + i) * n + j0;
@@ -267,22 +311,25 @@ fn band_kernel(
     }
 }
 
-/// Shared driver: pack B once, then compute (MC row band × NC column
-/// panel) tiles — through the work-stealing scheduler over the per-rank
-/// worker pool when `threads > 1`.  Tiles write disjoint rectangles of
-/// C and every `c[i][j]` accumulates over `k` in the same order under
-/// any tiling, so the result is bit-identical for every thread count
-/// (and identical to the single-panel single-thread run).
-fn banded_product(semiring: Semiring, c: &mut Mat, a: &Mat, b: &Mat, threads: usize) {
+/// [`banded_product`] monomorphized for one microkernel shape.
+fn banded_product_g<const MR_: usize, const NR_: usize>(
+    semiring: Semiring,
+    c: &mut Mat,
+    a: &Mat,
+    b: &Mat,
+    threads: usize,
+    p: &BlockParams,
+) {
     let (m, k, n) = (a.rows, a.cols, b.cols);
     if m == 0 || k == 0 || n == 0 {
         return;
     }
-    let mut pb = scratch::take(n.div_ceil(NR) * NR * k);
-    pack_b(b, &mut pb);
-    let nbands = m.div_ceil(MC);
+    let (kc_blk, mc_band, nc_panel) = (p.kc, p.mc, p.nc);
+    let mut pb = scratch::take(n.div_ceil(NR_) * NR_ * k, NR_);
+    pack_b::<NR_>(b, kc_blk, &mut pb);
+    let nbands = m.div_ceil(mc_band);
     // Column split only when there are cores to feed (see [`NC`]).
-    let njp = if threads <= 1 { 1 } else { n.div_ceil(NC) };
+    let njp = if threads <= 1 { 1 } else { n.div_ceil(nc_panel) };
     let ntiles = nbands * njp;
     {
         let cd: &mut [f32] = c.data.as_mut_slice();
@@ -290,28 +337,62 @@ fn banded_product(semiring: Semiring, c: &mut Mat, a: &Mat, b: &Mat, threads: us
         let pb_ref: &[f32] = &pb;
         par::run_chunks(threads, ntiles, &|tile| {
             let (band, jp) = (tile / njp, tile % njp);
-            let row0 = band * MC;
-            let mc = MC.min(m - row0);
-            let (jlo, jhi) = if njp == 1 { (0, n) } else { (jp * NC, n.min((jp + 1) * NC)) };
-            let mut pa = scratch::take(mc.div_ceil(MR) * MR * KC.min(k));
-            band_kernel(semiring, &out, a, pb_ref, row0, mc, jlo, jhi, n, &mut pa);
+            let row0 = band * mc_band;
+            let mc = mc_band.min(m - row0);
+            let (jlo, jhi) = if njp == 1 {
+                (0, n)
+            } else {
+                (jp * nc_panel, n.min((jp + 1) * nc_panel))
+            };
+            let mut pa = scratch::take(mc.div_ceil(MR_) * MR_ * kc_blk.min(k), MR_);
+            band_kernel::<MR_, NR_>(
+                semiring, &out, a, pb_ref, row0, mc, jlo, jhi, n, kc_blk, &mut pa,
+            );
             scratch::give(pa);
         });
     }
     scratch::give(pb);
 }
 
+/// Shared driver: pack B once, then compute (mc row band × nc column
+/// panel) tiles — through the work-stealing scheduler over the per-rank
+/// worker pool when `threads > 1`.  Tiles write disjoint rectangles of
+/// C and every `c[i][j]` accumulates over `k` in the same order under
+/// any tiling, so the result is bit-identical for every thread count
+/// (and identical to the single-panel single-thread run).  Dispatches
+/// once to the monomorphized variant the profile selects.
+fn banded_product(
+    semiring: Semiring,
+    c: &mut Mat,
+    a: &Mat,
+    b: &Mat,
+    threads: usize,
+    p: &BlockParams,
+) {
+    debug_assert!(p.validate().is_ok(), "invalid BlockParams: {:?}", p.validate());
+    match p.micro {
+        MicroKernel::Mr8Nr8 => banded_product_g::<8, 8>(semiring, c, a, b, threads, p),
+        MicroKernel::Mr8Nr4 => banded_product_g::<8, 4>(semiring, c, a, b, threads, p),
+        MicroKernel::Mr4Nr8 => banded_product_g::<4, 8>(semiring, c, a, b, threads, p),
+    }
+}
+
 // ---------------------------------------------------------- public API
 
-/// `C = A · B` (packed kernel, single-threaded).
+/// `C = A · B` (packed kernel, single-threaded, default blocking).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     matmul_mt(a, b, 1)
 }
 
 /// `C = A · B` with up to `threads` cores from the per-rank pool.
 pub fn matmul_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    matmul_mt_with(a, b, threads, &BlockParams::default())
+}
+
+/// [`matmul_mt`] under an explicit blocking profile.
+pub fn matmul_mt_with(a: &Mat, b: &Mat, threads: usize, p: &BlockParams) -> Mat {
     let mut c = Mat::zeros(a.rows, b.cols);
-    matmul_acc_into_mt(&mut c, a, b, threads);
+    matmul_acc_into_mt_with(&mut c, a, b, threads, p);
     c
 }
 
@@ -323,6 +404,11 @@ pub fn matmul_acc_into(c: &mut Mat, a: &Mat, b: &Mat) {
 /// `C += A · B` with up to `threads` cores.  Bit-identical for every
 /// thread count (see module docs).
 pub fn matmul_acc_into_mt(c: &mut Mat, a: &Mat, b: &Mat, threads: usize) {
+    matmul_acc_into_mt_with(c, a, b, threads, &BlockParams::default());
+}
+
+/// [`matmul_acc_into_mt`] under an explicit blocking profile.
+pub fn matmul_acc_into_mt_with(c: &mut Mat, a: &Mat, b: &Mat, threads: usize, p: &BlockParams) {
     assert_eq!(a.cols, b.rows, "inner dims: {}x{} @ {}x{}", a.rows, a.cols, b.rows, b.cols);
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
     let mut sp = trace::span("gemm", trace::Category::Kernel);
@@ -330,21 +416,24 @@ pub fn matmul_acc_into_mt(c: &mut Mat, a: &Mat, b: &Mat, threads: usize) {
         sp.arg("m", a.rows as f64);
         sp.arg("k", a.cols as f64);
         sp.arg("n", b.cols as f64);
+        sp.arg("kc", p.kc as f64);
     }
-    banded_product(Semiring::Dense, c, a, b, threads);
+    banded_product(Semiring::Dense, c, a, b, threads, p);
 }
 
 // ------------------------------------------------- elementwise kernels
 
-/// Elementwise kernels run single-threaded below this element count
-/// (~1024²).  They are **bandwidth-bound** — one or two flops per 4-byte
-/// element — so extra cores only pay once the operands outgrow the
-/// shared cache and the loop is genuinely streaming from DRAM; under
-/// the threshold the pool handoff (~µs) costs more than the whole
-/// memcpy-speed loop, and a single core already saturates the cache
-/// bandwidth.  GEMM has no such threshold: at O(n³/n²) flops per byte
-/// it is compute-bound at every size worth blocking.
-pub const EW_PAR_THRESHOLD: usize = 1 << 20;
+/// Default minimum element count before an elementwise kernel goes
+/// parallel (~1024²); the runtime value lives in
+/// [`BlockParams::ew_par_threshold`].  Elementwise kernels are
+/// **bandwidth-bound** — one or two flops per 4-byte element — so extra
+/// cores only pay once the operands outgrow the shared cache and the
+/// loop is genuinely streaming from DRAM; under the threshold the pool
+/// handoff (~µs) costs more than the whole memcpy-speed loop, and a
+/// single core already saturates the cache bandwidth.  GEMM has no such
+/// threshold: at O(n³/n²) flops per byte it is compute-bound at every
+/// size worth blocking.
+pub const EW_PAR_THRESHOLD: usize = params::DEFAULT_EW_PAR_THRESHOLD;
 
 /// Elements handed to one scheduler chunk of an elementwise kernel:
 /// 1 MiB of f32 — big enough to amortize a claim, small enough that
@@ -352,10 +441,10 @@ pub const EW_PAR_THRESHOLD: usize = 1 << 20;
 const EW_CHUNK: usize = 1 << 18;
 
 /// Effective thread count for an elementwise kernel over `len` elements
-/// (see [`EW_PAR_THRESHOLD`]).
+/// against the active profile's threshold.
 #[inline]
-fn ew_threads(len: usize, threads: usize) -> usize {
-    if len < EW_PAR_THRESHOLD {
+fn ew_threads(len: usize, threads: usize, threshold: usize) -> usize {
+    if len < threshold {
         1
     } else {
         threads
@@ -367,14 +456,20 @@ fn ew_threads(len: usize, threads: usize) -> usize {
 /// order within a chunk is ascending and chunks are disjoint, so the
 /// result is bit-identical for every thread count.
 #[allow(clippy::uninit_vec)] // chunks below write every slot before set_len
-fn ew_binary_mt(a: &Mat, b: &Mat, threads: usize, op: impl Fn(f32, f32) -> f32 + Sync) -> Mat {
+fn ew_binary_mt(
+    a: &Mat,
+    b: &Mat,
+    threads: usize,
+    threshold: usize,
+    op: impl Fn(f32, f32) -> f32 + Sync,
+) -> Mat {
     assert_eq!((a.rows, a.cols), (b.rows, b.cols));
     let mut sp = trace::span("elementwise", trace::Category::Kernel);
     if sp.is_active() {
         sp.arg("elems", (a.rows * a.cols) as f64);
     }
     let len = a.data.len();
-    if ew_threads(len, threads) <= 1 {
+    if ew_threads(len, threads, threshold) <= 1 {
         let data = a.data.iter().zip(&b.data).map(|(x, y)| op(*x, *y)).collect();
         return Mat { rows: a.rows, cols: a.cols, data };
     }
@@ -410,7 +505,12 @@ pub fn add(a: &Mat, b: &Mat) -> Mat {
 /// `A + B` elementwise with up to `threads` cores past the bandwidth
 /// threshold.  Bit-identical for every thread count.
 pub fn add_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
-    ew_binary_mt(a, b, threads, |x, y| x + y)
+    add_mt_with(a, b, threads, &BlockParams::default())
+}
+
+/// [`add_mt`] under an explicit profile (only `ew_par_threshold` applies).
+pub fn add_mt_with(a: &Mat, b: &Mat, threads: usize, p: &BlockParams) -> Mat {
+    ew_binary_mt(a, b, threads, p.ew_par_threshold, |x, y| x + y)
 }
 
 /// Elementwise `min(A, B)` — the tropical semiring's ⊕ at block level
@@ -423,7 +523,12 @@ pub fn min_mat(a: &Mat, b: &Mat) -> Mat {
 /// threshold.  `min` is exact in floating point, so the result is
 /// bit-identical for every thread count by construction.
 pub fn min_mat_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
-    ew_binary_mt(a, b, threads, f32::min)
+    min_mat_mt_with(a, b, threads, &BlockParams::default())
+}
+
+/// [`min_mat_mt`] under an explicit profile (only `ew_par_threshold` applies).
+pub fn min_mat_mt_with(a: &Mat, b: &Mat, threads: usize, p: &BlockParams) -> Mat {
+    ew_binary_mt(a, b, threads, p.ew_par_threshold, f32::min)
 }
 
 /// "No edge" sentinel of the (min,+) semiring — kept in sync with
@@ -440,15 +545,21 @@ pub fn minplus_matmul(a: &Mat, b: &Mat) -> Mat {
 /// floating point, so the result is bit-identical for every thread count
 /// and blocking by construction.
 pub fn minplus_matmul_mt(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    minplus_matmul_mt_with(a, b, threads, &BlockParams::default())
+}
+
+/// [`minplus_matmul_mt`] under an explicit blocking profile.
+pub fn minplus_matmul_mt_with(a: &Mat, b: &Mat, threads: usize, p: &BlockParams) -> Mat {
     assert_eq!(a.cols, b.rows);
     let mut sp = trace::span("gemm_tropical", trace::Category::Kernel);
     if sp.is_active() {
         sp.arg("m", a.rows as f64);
         sp.arg("k", a.cols as f64);
         sp.arg("n", b.cols as f64);
+        sp.arg("kc", p.kc as f64);
     }
     let mut out = Mat::filled(a.rows, b.cols, INF);
-    banded_product(Semiring::Tropical, &mut out, a, b, threads);
+    banded_product(Semiring::Tropical, &mut out, a, b, threads, p);
     out
 }
 
@@ -463,6 +574,18 @@ pub fn fw_update_into(d: &mut Mat, ik: &[f32], kj: &[f32]) {
 /// bandwidth threshold (row ranges are disjoint and each element's
 /// update is a single min — bit-identical for every thread count).
 pub fn fw_update_into_mt(d: &mut Mat, ik: &[f32], kj: &[f32], threads: usize) {
+    fw_update_into_mt_with(d, ik, kj, threads, &BlockParams::default());
+}
+
+/// [`fw_update_into_mt`] under an explicit profile (only
+/// `ew_par_threshold` applies).
+pub fn fw_update_into_mt_with(
+    d: &mut Mat,
+    ik: &[f32],
+    kj: &[f32],
+    threads: usize,
+    p: &BlockParams,
+) {
     assert_eq!(ik.len(), d.cols);
     assert_eq!(kj.len(), d.rows);
     let mut sp = trace::span("fw_update", trace::Category::Kernel);
@@ -475,7 +598,7 @@ pub fn fw_update_into_mt(d: &mut Mat, ik: &[f32], kj: &[f32], threads: usize) {
         return;
     }
     let dd: &mut [f32] = d.data.as_mut_slice();
-    if ew_threads(rows * cols, threads) <= 1 {
+    if ew_threads(rows * cols, threads, p.ew_par_threshold) <= 1 {
         fw_update_rows(dd, cols, ik, kj);
         return;
     }
@@ -609,6 +732,36 @@ mod tests {
     }
 
     #[test]
+    fn all_microkernel_variants_match_naive() {
+        // each compiled MR×NR shape, at shapes crossing its own edges
+        for micro in MicroKernel::ALL {
+            let (mr, nr) = (micro.mr(), micro.nr());
+            let p = BlockParams {
+                micro,
+                mc: 4 * mr,
+                nc: 8 * nr,
+                ..BlockParams::default()
+            };
+            p.validate().unwrap();
+            let mut seed = 100u64;
+            for &(m, k, n) in &[
+                (mr - 1, 13, nr - 1),
+                (mr + 1, 37, nr + 1),
+                (4 * mr + 3, 9, 8 * nr + 5),
+            ] {
+                seed += 1;
+                let a = Mat::random(m, k, seed);
+                let b = Mat::random(k, n, seed + 1);
+                for threads in [1usize, 3] {
+                    let got = matmul_mt_with(&a, &b, threads, &p);
+                    let want = matmul_naive(&a, &b);
+                    assert_allclose(&got.data, &want.data, 1e-4, 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
     fn matmul_crosses_band_boundaries() {
         // MC ± 1 rows: exercises the multi-band path single-threaded
         for m in [MC - 1, MC, MC + 1, 2 * MC + 5] {
@@ -638,6 +791,92 @@ mod tests {
                 assert_eq!(base.data, got.data, "threads={threads} ({m}x{k}x{n})");
             }
         }
+    }
+
+    #[test]
+    fn nondefault_profile_is_bit_identical_across_threads() {
+        // the per-profile determinism contract: a fixed non-default
+        // profile gives the same bytes at every thread count, and
+        // mc/nc/micro re-tiling never changes bits vs default at same kc
+        let a = Mat::random(100, 300, 41);
+        let b = Mat::random(300, 150, 42);
+        let small_kc = BlockParams {
+            kc: 64,
+            mc: 32,
+            nc: 64,
+            micro: MicroKernel::Mr8Nr4,
+            ..BlockParams::default()
+        };
+        let base = matmul_mt_with(&a, &b, 1, &small_kc);
+        for threads in [2usize, 4] {
+            assert_eq!(base.data, matmul_mt_with(&a, &b, threads, &small_kc).data);
+        }
+        // same kc as default, different tiling: bits match the default
+        // profile exactly (accumulation order is kc-determined)
+        let retiled = BlockParams {
+            mc: 32,
+            nc: 64,
+            micro: MicroKernel::Mr4Nr8,
+            ..BlockParams::default()
+        };
+        let default = matmul_mt(&a, &b, 4);
+        assert_eq!(default.data, matmul_mt_with(&a, &b, 4, &retiled).data);
+        // while a different kc legitimately regroups the dense sum
+        let close = matmul_mt_with(&a, &b, 2, &small_kc);
+        assert_allclose(&default.data, &close.data, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn scratch_pool_resizes_for_larger_profiles() {
+        // regression: the pool must serve a profile with larger panels
+        // than any earlier call sized its buffers for.  Prime the pool
+        // with default-blocking runs, then run a big-panel profile and
+        // check against the naive reference — a stale-capacity bug
+        // would read/write out of the packed panels' bounds.
+        let a = Mat::random(150, 600, 51);
+        let b = Mat::random(600, 200, 52);
+        let _ = matmul_mt(&a, &b, 2); // pool now holds default-sized buffers
+        let big = BlockParams {
+            kc: 512,
+            mc: 128,
+            nc: 256,
+            ..BlockParams::default()
+        };
+        let got = matmul_mt_with(&a, &b, 2, &big);
+        assert_allclose(&got.data, &matmul_naive(&a, &b).data, 1e-3, 1e-5);
+        // and tropical under the same oversized panels stays exact
+        let t_default = minplus_matmul_mt(&a, &b, 1);
+        let t_big = minplus_matmul_mt_with(&a, &b, 2, &big);
+        assert_eq!(t_default.data, t_big.data);
+    }
+
+    #[test]
+    #[should_panic(expected = "whole number")]
+    fn scratch_rejects_misaligned_requests() {
+        // a request that is not a whole number of packed strips means
+        // the caller's panel arithmetic drifted from the active params
+        let _ = super::scratch::take(100, 8);
+    }
+
+    #[test]
+    fn ew_threshold_comes_from_profile() {
+        // a tiny threshold forces the parallel path on small operands;
+        // results stay bit-identical to the serial path
+        let p = BlockParams {
+            ew_par_threshold: 1,
+            ..BlockParams::default()
+        };
+        let a = Mat::random(100, 50, 61);
+        let b = Mat::random(100, 50, 62);
+        assert_eq!(add(&a, &b).data, add_mt_with(&a, &b, 4, &p).data);
+        assert_eq!(min_mat(&a, &b).data, min_mat_mt_with(&a, &b, 4, &p).data);
+        let ik: Vec<f32> = (0..50).map(|i| i as f32).collect();
+        let kj: Vec<f32> = (0..100).map(|i| (i % 7) as f32).collect();
+        let mut want = Mat::random(100, 50, 63);
+        let mut got = want.clone();
+        fw_update_into(&mut want, &ik, &kj);
+        fw_update_into_mt_with(&mut got, &ik, &kj, 4, &p);
+        assert_eq!(want.data, got.data);
     }
 
     #[test]
@@ -811,6 +1050,25 @@ mod tests {
             let got = minplus_matmul(&a, &b);
             let want = minplus_naive(&a, &b);
             assert_eq!(got.data, want.data, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn minplus_bit_identical_under_any_blocking() {
+        // min is exact: every profile gives the same bytes, even across
+        // kc (unlike dense, where kc regroups the sum)
+        let a = Mat::random(90, 260, 81);
+        let b = Mat::random(260, 70, 82);
+        let base = minplus_matmul_mt(&a, &b, 1);
+        for micro in MicroKernel::ALL {
+            let p = BlockParams {
+                kc: 96,
+                mc: 2 * micro.mr(),
+                nc: 4 * micro.nr(),
+                micro,
+                ..BlockParams::default()
+            };
+            assert_eq!(base.data, minplus_matmul_mt_with(&a, &b, 4, &p).data, "{}", micro.name());
         }
     }
 

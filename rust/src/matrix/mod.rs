@@ -3,3 +3,4 @@ pub mod buf;
 pub mod dense;
 pub mod gemm;
 pub mod par;
+pub mod params;

@@ -5,7 +5,9 @@
 //! The paper pairs FooPar's collectives with a real BLAS per core; our
 //! analogue gives `Compute::Native` a `threads_per_rank` knob (see
 //! [`Runtime::builder`](crate::spmd::Runtime::builder)) and splits the
-//! (MC row-band × NC column-panel) tiles of the packed GEMM — and the
+//! (mc row-band × nc column-panel) tiles of the packed GEMM — the band
+//! and panel edges come from the active
+//! [`BlockParams`](crate::matrix::params::BlockParams) profile — and the
 //! chunks of the threaded elementwise kernels — across that many cores.
 //! Workers are the same reusable pool threads the SPMD launcher runs
 //! ranks on ([`crate::spmd::pool`]) — checked out for the duration of

@@ -1,0 +1,202 @@
+//! Runtime blocking parameters for the packed GEMM kernel.
+//!
+//! The BLIS-style kernel in [`super::gemm`] historically hardcoded its cache
+//! blocking (`KC=256/MC=64/NC=128`) and the elementwise parallel threshold at
+//! compile time. [`BlockParams`] lifts those into a runtime value so a
+//! per-host tune profile (see [`crate::tune`]) can drive the kernel: `kc`,
+//! `mc`, `nc` and `ew_par_threshold` are plain fields, while the register
+//! microkernel shape stays monomorphized — [`MicroKernel`] selects one of a
+//! small set of compiled MR×NR variants, so the hot loop never pays a
+//! dynamic dispatch per tile.
+//!
+//! Determinism contract: for a **fixed** `BlockParams`, results are
+//! bit-identical across thread counts and transports (each output element
+//! accumulates k-ascending within each KC block, KC blocks ascending).
+//! Changing `kc` regroups the dense (+,×) sum and may legitimately change
+//! low-order bits; `mc`/`nc`/`micro` never do (they only re-tile the same
+//! accumulation order), and the tropical (min,+) semiring is exact under any
+//! blocking.
+
+/// Default KC (k-dimension cache block, sized for L1-resident packed strips).
+pub const DEFAULT_KC: usize = 256;
+/// Default MC (row band height, A-panel L2 residency).
+pub const DEFAULT_MC: usize = 64;
+/// Default NC (column panel width — the unit of cross-thread work stealing).
+pub const DEFAULT_NC: usize = 128;
+/// Default minimum element count before elementwise kernels go parallel.
+pub const DEFAULT_EW_PAR_THRESHOLD: usize = 1 << 20;
+
+/// Register microkernel shape: one of the monomorphized MR×NR variants
+/// compiled into the binary. The profile picks a variant; the kernel
+/// dispatches once per `banded_product` call, not per tile.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MicroKernel {
+    /// 8×8 — the historical default; widest accumulator tile.
+    #[default]
+    Mr8Nr8,
+    /// 8×4 — narrower N, for hosts where 8×8 spills registers.
+    Mr8Nr4,
+    /// 4×8 — shorter M, favours wide rows with few of them.
+    Mr4Nr8,
+}
+
+impl MicroKernel {
+    /// All compiled variants, in sweep order.
+    pub const ALL: [MicroKernel; 3] =
+        [MicroKernel::Mr8Nr8, MicroKernel::Mr8Nr4, MicroKernel::Mr4Nr8];
+
+    /// Rows of the register tile.
+    pub fn mr(self) -> usize {
+        match self {
+            MicroKernel::Mr8Nr8 | MicroKernel::Mr8Nr4 => 8,
+            MicroKernel::Mr4Nr8 => 4,
+        }
+    }
+
+    /// Columns of the register tile.
+    pub fn nr(self) -> usize {
+        match self {
+            MicroKernel::Mr8Nr8 | MicroKernel::Mr4Nr8 => 8,
+            MicroKernel::Mr8Nr4 => 4,
+        }
+    }
+
+    /// Stable textual name used in profiles and reports ("8x8", "8x4", "4x8").
+    pub fn name(self) -> &'static str {
+        match self {
+            MicroKernel::Mr8Nr8 => "8x8",
+            MicroKernel::Mr8Nr4 => "8x4",
+            MicroKernel::Mr4Nr8 => "4x8",
+        }
+    }
+
+    /// Inverse of [`MicroKernel::name`].
+    pub fn by_name(name: &str) -> Option<MicroKernel> {
+        MicroKernel::ALL.into_iter().find(|m| m.name() == name)
+    }
+}
+
+/// Runtime cache-blocking parameters for the packed GEMM kernel plus the
+/// elementwise parallel threshold. Threaded from `Runtime::builder()` /
+/// `MachineConfig` through `Ctx` into every `Compute::Native` kernel call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockParams {
+    /// k-dimension cache block depth.
+    pub kc: usize,
+    /// Row band height (must be a multiple of `micro.mr()`).
+    pub mc: usize,
+    /// Column panel width (must be a multiple of `micro.nr()`).
+    pub nc: usize,
+    /// Register microkernel variant.
+    pub micro: MicroKernel,
+    /// Minimum element count before elementwise kernels use threads.
+    pub ew_par_threshold: usize,
+}
+
+impl Default for BlockParams {
+    fn default() -> Self {
+        BlockParams {
+            kc: DEFAULT_KC,
+            mc: DEFAULT_MC,
+            nc: DEFAULT_NC,
+            micro: MicroKernel::default(),
+            ew_par_threshold: DEFAULT_EW_PAR_THRESHOLD,
+        }
+    }
+}
+
+impl BlockParams {
+    /// Check the structural invariants the kernel relies on: positive blocks,
+    /// `mc` a multiple of MR and `nc` a multiple of NR (pack strips and the
+    /// work-stealing tile grid both assume whole register tiles per band).
+    pub fn validate(&self) -> Result<(), String> {
+        let (mr, nr) = (self.micro.mr(), self.micro.nr());
+        if self.kc == 0 {
+            return Err("kc must be positive".into());
+        }
+        if self.mc == 0 || self.mc % mr != 0 {
+            return Err(format!(
+                "mc={} must be a positive multiple of MR={mr} ({})",
+                self.mc,
+                self.micro.name()
+            ));
+        }
+        if self.nc == 0 || self.nc % nr != 0 {
+            return Err(format!(
+                "nc={} must be a positive multiple of NR={nr} ({})",
+                self.nc,
+                self.micro.name()
+            ));
+        }
+        if self.ew_par_threshold == 0 {
+            return Err("ew_par_threshold must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// Compact human-readable label ("kc256 mc64 nc128 8x8"), used for bench
+    /// provenance and report headers.
+    pub fn label(&self) -> String {
+        format!(
+            "kc{} mc{} nc{} {}",
+            self.kc,
+            self.mc,
+            self.nc,
+            self.micro.name()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_historical_constants() {
+        let p = BlockParams::default();
+        assert_eq!((p.kc, p.mc, p.nc), (256, 64, 128));
+        assert_eq!((p.micro.mr(), p.micro.nr()), (8, 8));
+        assert_eq!(p.ew_par_threshold, 1 << 20);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn micro_names_round_trip() {
+        for m in MicroKernel::ALL {
+            assert_eq!(MicroKernel::by_name(m.name()), Some(m));
+        }
+        assert_eq!(MicroKernel::by_name("16x1"), None);
+    }
+
+    #[test]
+    fn validate_rejects_misaligned_bands() {
+        let bad_mc = BlockParams {
+            mc: 12,
+            ..BlockParams::default()
+        };
+        assert!(bad_mc.validate().is_err());
+        let bad_nc = BlockParams {
+            nc: 100,
+            micro: MicroKernel::Mr8Nr8,
+            ..BlockParams::default()
+        };
+        assert!(bad_nc.validate().is_err());
+        let ok_nc_for_4 = BlockParams {
+            nc: 100,
+            micro: MicroKernel::Mr8Nr4,
+            ..BlockParams::default()
+        };
+        assert!(ok_nc_for_4.validate().is_ok());
+        assert!(BlockParams {
+            kc: 0,
+            ..BlockParams::default()
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn label_is_compact() {
+        assert_eq!(BlockParams::default().label(), "kc256 mc64 nc128 8x8");
+    }
+}

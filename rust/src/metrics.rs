@@ -8,6 +8,47 @@
 
 use std::cell::Cell;
 
+use crate::matrix::params::BlockParams;
+
+/// Compact attribution of the GEMM blocking profile a rank ran under,
+/// carried in every [`MetricsSnapshot`] so a quoted GFlop/s figure is
+/// always attributable to the `BlockParams` that produced it (bench
+/// provenance; the tune sweep's whole point is that the same host gives
+/// different rates under different profiles).  A zero `kc` means "no
+/// profile recorded" — e.g. a snapshot that never passed through a
+/// [`crate::spmd::Ctx`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProfileTag {
+    pub kc: u32,
+    pub mc: u32,
+    pub nc: u32,
+    pub mr: u8,
+    pub nr: u8,
+}
+
+impl ProfileTag {
+    /// Tag the active blocking profile.
+    pub fn of(p: &BlockParams) -> ProfileTag {
+        ProfileTag {
+            kc: p.kc as u32,
+            mc: p.mc as u32,
+            nc: p.nc as u32,
+            mr: p.micro.mr() as u8,
+            nr: p.micro.nr() as u8,
+        }
+    }
+
+    /// Whether a profile was recorded at all.
+    pub fn is_set(&self) -> bool {
+        self.kc != 0
+    }
+
+    /// Human-readable form for report rows ("kc256 mc64 nc128 8x8").
+    pub fn label(&self) -> String {
+        format!("kc{} mc{} nc{} {}x{}", self.kc, self.mc, self.nc, self.mr, self.nr)
+    }
+}
+
 /// Counters owned by one rank.  `Cell`-based: ranks are single threads, the
 /// struct is never shared, but ops take `&Ctx`.
 #[derive(Debug, Default)]
@@ -40,11 +81,19 @@ pub struct RankMetrics {
     /// overlap rule).  Per region: `min(comm elapsed, main elapsed)` —
     /// i.e. the clock savings versus running the operation blocking.
     pub overlap_hidden: Cell<f64>,
+    /// The GEMM blocking profile this rank runs under (set once by the
+    /// launcher from the rank's `Ctx`; carried into every snapshot).
+    pub profile: Cell<ProfileTag>,
 }
 
 impl RankMetrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Record the active blocking profile (launcher only).
+    pub fn set_profile(&self, tag: ProfileTag) {
+        self.profile.set(tag);
     }
 
     #[inline]
@@ -100,6 +149,7 @@ impl RankMetrics {
             ew_flops: self.ew_flops.get(),
             ew_time: self.ew_time.get(),
             overlap_hidden: self.overlap_hidden.get(),
+            profile: self.profile.get(),
         }
     }
 }
@@ -118,6 +168,8 @@ pub struct MetricsSnapshot {
     pub ew_flops: f64,
     pub ew_time: f64,
     pub overlap_hidden: f64,
+    /// Blocking-profile attribution (not a counter; survives `scoped`).
+    pub profile: ProfileTag,
 }
 
 impl MetricsSnapshot {
@@ -172,6 +224,7 @@ impl MetricsSnapshot {
             ew_flops: self.ew_flops - baseline.ew_flops,
             ew_time: self.ew_time - baseline.ew_time,
             overlap_hidden: self.overlap_hidden - baseline.overlap_hidden,
+            profile: self.profile,
         }
     }
 }
@@ -342,6 +395,9 @@ impl Report {
             max_comp = max_comp.max(m.compute_time);
             max_gflops = max_gflops.max(m.gflops());
             max_ew_gflops = max_ew_gflops.max(m.ew_gflops());
+            if !total.profile.is_set() {
+                total.profile = m.profile;
+            }
         }
         Report {
             ranks: per_rank.len(),
@@ -620,6 +676,22 @@ mod tests {
         // scoping against a fresh baseline is the identity
         let all = m.snapshot().scoped(&MetricsSnapshot::default());
         assert_eq!(all, m.snapshot());
+    }
+
+    #[test]
+    fn profile_tag_threads_through_snapshots() {
+        use crate::matrix::params::{BlockParams, MicroKernel};
+        let m = RankMetrics::new();
+        assert!(!m.snapshot().profile.is_set());
+        let p = BlockParams { micro: MicroKernel::Mr8Nr4, ..BlockParams::default() };
+        m.set_profile(ProfileTag::of(&p));
+        let s = m.snapshot();
+        assert!(s.profile.is_set());
+        assert_eq!(s.profile.label(), "kc256 mc64 nc128 8x4");
+        // attribution survives job scoping and cross-rank aggregation
+        assert_eq!(s.scoped(&MetricsSnapshot::default()).profile, s.profile);
+        let r = Report::aggregate(&[MetricsSnapshot::default(), s]);
+        assert_eq!(r.total.profile, s.profile);
     }
 
     #[test]

@@ -176,7 +176,12 @@ impl Compute {
                 Block::Proxy { rows: a.rows(), cols: b.cols(), seed: 0 }
             }
             Compute::Native => ctx.timed_compute(flops, || {
-                Block::Real(gemm::matmul_mt(a.as_mat(), b.as_mat(), ctx.threads_per_rank()))
+                Block::Real(gemm::matmul_mt_with(
+                    a.as_mat(),
+                    b.as_mat(),
+                    ctx.threads_per_rank(),
+                    ctx.block_params(),
+                ))
             }),
             Compute::Pjrt(h) => {
                 let n = a.rows();
@@ -187,7 +192,12 @@ impl Compute {
                     Block::Real(out)
                 } else {
                     ctx.timed_compute(flops, || {
-                        Block::Real(gemm::matmul_mt(a.as_mat(), b.as_mat(), ctx.threads_per_rank()))
+                        Block::Real(gemm::matmul_mt_with(
+                            a.as_mat(),
+                            b.as_mat(),
+                            ctx.threads_per_rank(),
+                            ctx.block_params(),
+                        ))
                     })
                 }
             }
@@ -218,7 +228,12 @@ impl Compute {
             // native path like any other unsupported shape.
             _ => ctx.timed_compute(flops, || {
                 let panel = b.as_mat().col_slice(lo, hi);
-                Block::Real(gemm::matmul_mt(a.as_mat(), &panel, ctx.threads_per_rank()))
+                Block::Real(gemm::matmul_mt_with(
+                    a.as_mat(),
+                    &panel,
+                    ctx.threads_per_rank(),
+                    ctx.block_params(),
+                ))
             }),
         }
     }
@@ -237,7 +252,13 @@ impl Compute {
                 // into_mat: a uniquely-owned accumulator mutates in
                 // place (no copy); a shared one copy-on-writes once
                 let mut cm = c.into_mat();
-                gemm::matmul_acc_into_mt(&mut cm, a.as_mat(), b.as_mat(), ctx.threads_per_rank());
+                gemm::matmul_acc_into_mt_with(
+                    &mut cm,
+                    a.as_mat(),
+                    b.as_mat(),
+                    ctx.threads_per_rank(),
+                    ctx.block_params(),
+                );
                 Block::Real(cm)
             }),
             Compute::Pjrt(h) => {
@@ -251,11 +272,12 @@ impl Compute {
                 } else {
                     ctx.timed_compute(flops, || {
                         let mut cm = c.into_mat();
-                        gemm::matmul_acc_into_mt(
+                        gemm::matmul_acc_into_mt_with(
                             &mut cm,
                             a.as_mat(),
                             b.as_mat(),
                             ctx.threads_per_rank(),
+                            ctx.block_params(),
                         );
                         Block::Real(cm)
                     })
@@ -276,7 +298,12 @@ impl Compute {
                 x
             }
             Compute::Native => ctx.timed_elementwise(flops, || {
-                Block::Real(gemm::add_mt(x.as_mat(), y.as_mat(), ctx.threads_per_rank()))
+                Block::Real(gemm::add_mt_with(
+                    x.as_mat(),
+                    y.as_mat(),
+                    ctx.threads_per_rank(),
+                    ctx.block_params(),
+                ))
             }),
             Compute::Pjrt(h) => {
                 let n = x.rows();
@@ -287,7 +314,12 @@ impl Compute {
                     Block::Real(out)
                 } else {
                     ctx.timed_elementwise(flops, || {
-                        Block::Real(gemm::add_mt(x.as_mat(), y.as_mat(), ctx.threads_per_rank()))
+                        Block::Real(gemm::add_mt_with(
+                            x.as_mat(),
+                            y.as_mat(),
+                            ctx.threads_per_rank(),
+                            ctx.block_params(),
+                        ))
                     })
                 }
             }
@@ -305,7 +337,8 @@ impl Compute {
         }
         match (&a, &b) {
             (Block::Real(x), Block::Real(y)) => ctx.timed_elementwise(flops, || {
-                Block::Real(gemm::min_mat_mt(x, y, ctx.threads_per_rank()))
+                let m = gemm::min_mat_mt_with(x, y, ctx.threads_per_rank(), ctx.block_params());
+                Block::Real(m)
             }),
             // proxies in a real mode only occur for degenerate
             // non-member blocks; pass the left operand through
@@ -323,11 +356,12 @@ impl Compute {
             }
             Compute::Native => ctx.timed_elementwise(flops, || {
                 let mut dm = d.into_mat();
-                gemm::fw_update_into_mt(
+                gemm::fw_update_into_mt_with(
                     &mut dm,
                     ik.as_slice(),
                     kj.as_slice(),
                     ctx.threads_per_rank(),
+                    ctx.block_params(),
                 );
                 Block::Real(dm)
             }),
@@ -343,11 +377,12 @@ impl Compute {
                 } else {
                     ctx.timed_elementwise(flops, || {
                         let mut dm = d.into_mat();
-                        gemm::fw_update_into_mt(
+                        gemm::fw_update_into_mt_with(
                             &mut dm,
                             ik.as_slice(),
                             kj.as_slice(),
                             ctx.threads_per_rank(),
+                            ctx.block_params(),
                         );
                         Block::Real(dm)
                     })
@@ -366,7 +401,12 @@ impl Compute {
                 Block::Proxy { rows: a.rows(), cols: b.cols(), seed: 0 }
             }
             Compute::Native => ctx.timed_compute(flops, || {
-                Block::Real(gemm::minplus_matmul_mt(a.as_mat(), b.as_mat(), ctx.threads_per_rank()))
+                Block::Real(gemm::minplus_matmul_mt_with(
+                    a.as_mat(),
+                    b.as_mat(),
+                    ctx.threads_per_rank(),
+                    ctx.block_params(),
+                ))
             }),
             Compute::Pjrt(h) => {
                 let n = a.rows();
@@ -378,10 +418,11 @@ impl Compute {
                     Block::Real(out)
                 } else {
                     ctx.timed_compute(flops, || {
-                        Block::Real(gemm::minplus_matmul_mt(
+                        Block::Real(gemm::minplus_matmul_mt_with(
                             a.as_mat(),
                             b.as_mat(),
                             ctx.threads_per_rank(),
+                            ctx.block_params(),
                         ))
                     })
                 }

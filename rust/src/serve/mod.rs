@@ -398,6 +398,7 @@ impl Data for MemberDone {
             + self.err.as_ref().map_or(1, |e| 9 + e.len())
             + self.output.as_ref().map_or(1, |o| 1 + o.byte_size())
             + 88
+            + 40 // profile tag (kc/mc/nc/mr/nr as u64)
     }
 }
 
@@ -419,6 +420,11 @@ impl WireData for MemberDone {
         m.ew_flops.encode(out);
         m.ew_time.encode(out);
         m.overlap_hidden.encode(out);
+        (m.profile.kc as u64).encode(out);
+        (m.profile.mc as u64).encode(out);
+        (m.profile.nc as u64).encode(out);
+        (m.profile.mr as u64).encode(out);
+        (m.profile.nr as u64).encode(out);
     }
     fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
         Ok(MemberDone {
@@ -438,6 +444,13 @@ impl WireData for MemberDone {
                 ew_flops: f64::decode(r)?,
                 ew_time: f64::decode(r)?,
                 overlap_hidden: f64::decode(r)?,
+                profile: crate::metrics::ProfileTag {
+                    kc: r.u64()? as u32,
+                    mc: r.u64()? as u32,
+                    nc: r.u64()? as u32,
+                    mr: r.u64()? as u8,
+                    nr: r.u64()? as u8,
+                },
             },
         })
     }

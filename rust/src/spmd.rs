@@ -49,8 +49,10 @@ use crate::comm::transport::tcp::TcpTransport;
 use crate::comm::transport::{launch, Envelope, Transport};
 use crate::comm::wire::WireData;
 use crate::config::MachineConfig;
-use crate::metrics::{MetricsSnapshot, RankMetrics};
+use crate::matrix::params::BlockParams;
+use crate::metrics::{MetricsSnapshot, ProfileTag, RankMetrics};
 use crate::trace;
+use crate::tune::TuneProfile;
 
 /// Per-rank execution context: identity, clock, transport access,
 /// metrics, and the active backend's collective strategy.
@@ -96,9 +98,15 @@ pub struct Ctx {
     /// pool workers via the work-stealing scheduler.  Results are
     /// bit-identical for every value — see [`crate::matrix::gemm`].
     threads_per_rank: usize,
+    /// Active GEMM blocking profile (kc/mc/nc/microkernel/elementwise
+    /// threshold) — default constants unless the runtime loaded a
+    /// [`TuneProfile`] or the builder pinned one.  `Compute::Native`
+    /// threads this into every kernel call.
+    block: BlockParams,
 }
 
 impl Ctx {
+    #[allow(clippy::too_many_arguments)]
     fn new(
         rank: usize,
         transport: Arc<dyn Transport>,
@@ -106,6 +114,8 @@ impl Ctx {
         machine: CostParams,
         threads_per_rank: usize,
         topo: Arc<Topology>,
+        block: BlockParams,
+        link_override: Option<HierCost>,
     ) -> Self {
         let cost = backend.cost(machine);
         let collectives = backend.collectives();
@@ -113,12 +123,16 @@ impl Ctx {
         // Flat world: one link level, both priced at `cost` — clocks are
         // bit-identical to the pre-hierarchy model.  Hierarchical world:
         // same-node hops run at shared-memory parameters under the
-        // machine's network parameters between nodes.
-        let link = if topo.is_flat() {
-            HierCost::flat(cost)
-        } else {
-            HierCost::hierarchical(cost)
+        // machine's network parameters between nodes — unless a measured
+        // link calibration (from `repro tune`) overrides both levels with
+        // this host's actual ping-pong latency/bandwidth.
+        let link = match link_override {
+            Some(l) if !topo.is_flat() => l,
+            _ if topo.is_flat() => HierCost::flat(cost),
+            _ => HierCost::hierarchical(cost),
         };
+        let metrics = RankMetrics::new();
+        metrics.set_profile(ProfileTag::of(&block));
         Ctx {
             rank,
             world: transport.world(),
@@ -129,12 +143,13 @@ impl Ctx {
             link,
             backend,
             collectives,
-            metrics: RankMetrics::new(),
+            metrics,
             tag_alloc: RefCell::new(HashMap::new()),
             tag_scope: Cell::new(0),
             scoped_tag_alloc: RefCell::new(HashMap::new()),
             overlap_depth: Cell::new(0),
             threads_per_rank: threads_per_rank.max(1),
+            block,
         }
     }
 
@@ -143,6 +158,14 @@ impl Ctx {
     #[inline]
     pub fn threads_per_rank(&self) -> usize {
         self.threads_per_rank
+    }
+
+    /// The GEMM blocking profile active for this rank's kernels; set
+    /// through [`RuntimeBuilder::block_params`], a loaded
+    /// [`TuneProfile`], or the defaults.
+    #[inline]
+    pub fn block_params(&self) -> &BlockParams {
+        &self.block
     }
 
     /// Cost of one point-to-point message to/from `peer`, priced on the
@@ -618,6 +641,17 @@ pub struct Runtime {
     /// `"hybrid"`, whose routing needs node boundaries.
     ranks_per_node: Option<usize>,
     trace: TraceMode,
+    /// Active GEMM blocking profile every rank's kernels run with —
+    /// defaults unless a [`TuneProfile`] was loaded or the builder
+    /// pinned explicit [`BlockParams`].
+    block: BlockParams,
+    /// Measured per-level link pricing from a tune profile's ping-pong
+    /// calibration; applied on hierarchical topologies only (flat worlds
+    /// keep the single machine link so existing clocks are unchanged).
+    link_cal: Option<HierCost>,
+    /// Where the active profile came from, for reports ("path" or
+    /// "(inline)"); `None` when running on defaults.
+    profile_label: Option<String>,
 }
 
 /// How span tracing is configured for a runtime (see [`crate::trace`]).
@@ -663,7 +697,21 @@ impl Runtime {
             threads_per_rank: None,
             ranks_per_node: None,
             trace: TraceMode::Off,
+            tune: None,
+            block: None,
+            machine_tune_path: None,
         }
+    }
+
+    /// The GEMM blocking profile every rank of this runtime runs with.
+    pub fn block_params(&self) -> &BlockParams {
+        &self.block
+    }
+
+    /// Provenance of the active tune profile (file path or "(inline)"),
+    /// `None` when the runtime runs on the built-in defaults.
+    pub fn profile_label(&self) -> Option<&str> {
+        self.profile_label.as_deref()
     }
 
     /// How tracing is configured for this runtime.
@@ -801,7 +849,12 @@ impl Runtime {
                 self.machine,
                 self.threads_per_rank,
                 topo.clone(),
+                self.block,
+                self.link_cal,
             );
+            rank_span.arg("kc", ctx.block.kc as f64);
+            rank_span.arg("mc", ctx.block.mc as f64);
+            rank_span.arg("nc", ctx.block.nc as f64);
             let r = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&ctx))) {
                 Ok(r) => r,
                 Err(e) => {
@@ -875,6 +928,8 @@ impl Runtime {
             self.machine,
             self.threads_per_rank,
             Arc::new(self.topology()),
+            self.block,
+            self.link_cal,
         );
         // Each process runs its own trace session for its one rank; the
         // spans are gathered to rank 0 below.  The re-exec'd workers
@@ -884,6 +939,9 @@ impl Runtime {
         let r = {
             let _trace_scope = session.as_ref().map(|_| trace::rank_scope(me));
             let mut rank_span = trace::span("rank", trace::Category::Rank);
+            rank_span.arg("kc", ctx.block.kc as f64);
+            rank_span.arg("mc", ctx.block.mc as f64);
+            rank_span.arg("nc", ctx.block.nc as f64);
             let r = f(&ctx);
             rank_span.arg("v_end", ctx.now());
             r
@@ -1030,6 +1088,13 @@ pub struct RuntimeBuilder {
     /// Span tracing; `Off` defers to the `FOOPAR_TRACE` env variable at
     /// build time.
     trace: TraceMode,
+    /// Explicit tune profile object (wins over any file path).
+    tune: Option<TuneProfile>,
+    /// Explicit blocking override (tests; wins over any profile).
+    block: Option<BlockParams>,
+    /// Profile path from a machine config's `tune_profile` key, loaded
+    /// at [`RuntimeBuilder::build`] unless an explicit profile was set.
+    machine_tune_path: Option<String>,
 }
 
 impl RuntimeBuilder {
@@ -1068,7 +1133,8 @@ impl RuntimeBuilder {
     }
 
     /// Use an explicit machine config's interconnect costs (and its
-    /// `threads_per_rank` / `ranks_per_node`, unless set explicitly).
+    /// `threads_per_rank` / `ranks_per_node` / `tune_profile`, unless
+    /// set explicitly).
     pub fn machine_config(mut self, machine: &MachineConfig) -> Self {
         if self.threads_per_rank.is_none() {
             self.threads_per_rank = Some(machine.threads_per_rank.max(1));
@@ -1076,7 +1142,27 @@ impl RuntimeBuilder {
         if self.ranks_per_node.is_none() {
             self.ranks_per_node = machine.ranks_per_node;
         }
+        if self.machine_tune_path.is_none() {
+            self.machine_tune_path = machine.tune_profile.clone();
+        }
         self.cost(machine.cost())
+    }
+
+    /// Run every rank's kernels with this tune profile: its block
+    /// parameters drive the GEMM/elementwise kernels and, when the
+    /// profile carries a link calibration, its measured latency/bandwidth
+    /// price the hierarchical cost model (non-flat topologies).  Wins
+    /// over a machine config's `tune_profile` key.
+    pub fn tune_profile(mut self, profile: &TuneProfile) -> Self {
+        self.tune = Some(profile.clone());
+        self
+    }
+
+    /// Pin raw block parameters directly (tests and sweeps; wins over
+    /// any tune profile).  Validated at [`RuntimeBuilder::build`].
+    pub fn block_params(mut self, params: BlockParams) -> Self {
+        self.block = Some(params);
+        self
     }
 
     /// Cores each rank's block kernels may use (clamped to ≥ 1).  The
@@ -1217,6 +1303,27 @@ impl RuntimeBuilder {
             },
             t => t,
         };
+        // Blocking precedence: explicit block params > explicit tune
+        // profile > machine config's `tune_profile` path > defaults.
+        // A broken profile file is an error, not a silent fallback —
+        // the user asked for tuned kernels and should get them (or know
+        // why not).
+        let profile = match self.tune {
+            Some(p) => Some(p),
+            None => match &self.machine_tune_path {
+                Some(path) => Some(TuneProfile::load(std::path::Path::new(path))?),
+                None => None,
+            },
+        };
+        let block = self
+            .block
+            .or_else(|| profile.as_ref().map(|p| p.block))
+            .unwrap_or_default();
+        block
+            .validate()
+            .map_err(|e| anyhow!("invalid block parameters: {e}"))?;
+        let link_cal = profile.as_ref().and_then(|p| p.link).map(|c| c.hier());
+        let profile_label = profile.as_ref().map(TuneProfile::source_label);
         Ok(Runtime {
             world: self.world,
             backend,
@@ -1225,6 +1332,9 @@ impl RuntimeBuilder {
             threads_per_rank,
             ranks_per_node,
             trace,
+            block,
+            link_cal,
+            profile_label,
         })
     }
 

@@ -1,0 +1,375 @@
+//! Per-host empirical tune profiles.
+//!
+//! The paper's close-to-peak efficiency story (§6) depends on kernel and
+//! machine parameters matched to the host: MKL's blocking is tuned per
+//! CPU, and the `t_s`/`t_w` cost parameters are *measured*, not guessed.
+//! This module is the persistence layer of our analogue: `repro tune`
+//! (see [`crate::experiments::tune`]) sweeps the packed GEMM's blocking
+//! on the real native path and ping-pongs messages to measure intra- and
+//! inter-node link costs, then writes the result here as a small JSON
+//! profile — `~/.foopar/tune-<host>.json` by default.
+//!
+//! A profile is consumed by `Runtime::builder().tune_profile(..)` (or
+//! the `tune_profile` machine-config key, or the CLI `--profile` flag):
+//! the [`BlockParams`] drive every `Compute::Native` kernel call and the
+//! [`LinkCalibration`] replaces the *hardcoded* intra/inter link prices
+//! of [`HierCost`] on hierarchical worlds — so `prefer_two_level_*`
+//! decisions and the virtual clock are priced from this host's measured
+//! links rather than defaults.
+//!
+//! The JSON layout is deliberately bench-gate compatible: scalar params
+//! first, then a `"results"` array of swept (kernel, b, threads, gflops)
+//! cells in the same entry shape as `BENCH_*.json`, so
+//! `bench_gate --check` validates an emitted profile with the exact
+//! parser the CI bench gate trusts.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::comm::cost::{CostParams, HierCost};
+use crate::matrix::params::{BlockParams, MicroKernel};
+use crate::metrics::JsonWriter;
+
+/// Measured link costs from the ping-pong microbench: one `(ts, tw)`
+/// pair per hierarchy level.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkCalibration {
+    /// Same-node (shared-memory transport) link parameters.
+    pub intra: CostParams,
+    /// Cross-node (TCP transport) link parameters.
+    pub inter: CostParams,
+}
+
+impl LinkCalibration {
+    /// The two-level link pricing this calibration induces.
+    pub fn hier(&self) -> HierCost {
+        HierCost::new(self.intra, self.inter)
+    }
+}
+
+/// One swept (configuration, shape, threads) measurement, persisted in
+/// the profile's `"results"` array.  `kernel` is `"default"` for the
+/// built-in constants and `"tuned"` for the winning point, so the bench
+/// gate's identity key (kernel, b, threads) stays unique per entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneCell {
+    pub kernel: String,
+    pub b: usize,
+    pub threads: usize,
+    pub gflops: f64,
+}
+
+/// A persisted per-host autotune result: the winning GEMM blocking, the
+/// thread count and rate it won at, optional measured link costs, and
+/// the swept cells it was chosen from.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneProfile {
+    /// Hostname the sweep ran on (profiles are per-host by design).
+    pub host: String,
+    /// The winning blocking parameters.
+    pub block: BlockParams,
+    /// Thread count of the best swept cell (informational; runs still
+    /// choose their own `threads_per_rank`).
+    pub threads: usize,
+    /// GFlop/s of the best swept cell.
+    pub gflops: f64,
+    /// Measured intra/inter link costs, when a calibration run was done.
+    pub link: Option<LinkCalibration>,
+    /// Swept measurements backing this profile (bench-gate entry shape).
+    pub cells: Vec<TuneCell>,
+    /// Where this profile was loaded from (`None` for in-memory ones).
+    pub source: Option<PathBuf>,
+}
+
+impl TuneProfile {
+    /// Format version written as the `tune_profile` marker key.
+    const VERSION: u64 = 1;
+
+    /// Hostname for per-host profile naming: `/proc/sys/kernel/hostname`
+    /// (Linux), then `$HOSTNAME`, then `"localhost"`.
+    pub fn host_name() -> String {
+        std::fs::read_to_string("/proc/sys/kernel/hostname")
+            .ok()
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .or_else(|| std::env::var("HOSTNAME").ok().filter(|s| !s.is_empty()))
+            .unwrap_or_else(|| "localhost".into())
+    }
+
+    /// The default per-host profile path: `~/.foopar/tune-<host>.json`.
+    /// `None` when `$HOME` is unset.
+    pub fn default_path() -> Option<PathBuf> {
+        let home = std::env::var_os("HOME")?;
+        Some(
+            PathBuf::from(home)
+                .join(".foopar")
+                .join(format!("tune-{}.json", Self::host_name())),
+        )
+    }
+
+    /// Display label for report headers: the source path, or "(inline)".
+    pub fn source_label(&self) -> String {
+        match &self.source {
+            Some(p) => p.display().to_string(),
+            None => "(inline)".into(),
+        }
+    }
+
+    /// Serialize (see module docs for the layout contract: scalar keys
+    /// strictly before the `"results"` array, since the reader scans
+    /// flat keys only in that prefix).
+    pub fn to_json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("tune_profile").uint(Self::VERSION);
+        w.key("host").str_val(&self.host);
+        w.key("kc").uint(self.block.kc as u64);
+        w.key("mc").uint(self.block.mc as u64);
+        w.key("nc").uint(self.block.nc as u64);
+        w.key("micro").str_val(self.block.micro.name());
+        w.key("ew_par_threshold").uint(self.block.ew_par_threshold as u64);
+        w.key("best_threads").uint(self.threads as u64);
+        w.key("best_gflops").num(self.gflops);
+        w.key("link_calibrated").boolean(self.link.is_some());
+        if let Some(link) = &self.link {
+            w.key("link_intra_ts").num(link.intra.ts);
+            w.key("link_intra_tw").num(link.intra.tw);
+            w.key("link_inter_ts").num(link.inter.ts);
+            w.key("link_inter_tw").num(link.inter.tw);
+        }
+        w.key("results").begin_arr();
+        for c in &self.cells {
+            w.begin_obj();
+            w.key("kernel").str_val(&c.kernel);
+            w.key("b").uint(c.b as u64);
+            w.key("threads").uint(c.threads as u64);
+            w.key("gflops").num(c.gflops);
+            w.end_obj();
+        }
+        w.end_arr();
+        w.end_obj();
+        w.finish()
+    }
+
+    /// Parse a profile from its JSON text (the hand-rolled counterpart
+    /// of [`TuneProfile::to_json`] — the image has no serde).
+    pub fn from_json(text: &str) -> Result<TuneProfile> {
+        let head = match text.find("\"results\"") {
+            Some(at) => &text[..at],
+            None => text,
+        };
+        match scan_num(head, "tune_profile") {
+            Some(v) if v == Self::VERSION as f64 => {}
+            Some(v) => bail!("unsupported tune profile version {v}"),
+            None => bail!("not a tune profile (missing \"tune_profile\" version key)"),
+        }
+        let num = |k: &str| scan_num(head, k).ok_or_else(|| anyhow!("missing numeric key '{k}'"));
+        let micro_name =
+            scan_str(head, "micro").ok_or_else(|| anyhow!("missing string key 'micro'"))?;
+        let micro = MicroKernel::by_name(&micro_name)
+            .ok_or_else(|| anyhow!("unknown microkernel '{micro_name}' (have 8x8, 8x4, 4x8)"))?;
+        let block = BlockParams {
+            kc: num("kc")? as usize,
+            mc: num("mc")? as usize,
+            nc: num("nc")? as usize,
+            micro,
+            ew_par_threshold: num("ew_par_threshold")? as usize,
+        };
+        block.validate().map_err(|e| anyhow!("invalid tune profile params: {e}"))?;
+        let link = match (
+            scan_num(head, "link_intra_ts"),
+            scan_num(head, "link_intra_tw"),
+            scan_num(head, "link_inter_ts"),
+            scan_num(head, "link_inter_tw"),
+        ) {
+            (Some(its), Some(itw), Some(ets), Some(etw)) => Some(LinkCalibration {
+                intra: CostParams::new(its, itw),
+                inter: CostParams::new(ets, etw),
+            }),
+            _ => None,
+        };
+        let cells = match text.find("\"results\"") {
+            Some(at) => parse_cells(&text[at..])?,
+            None => Vec::new(),
+        };
+        Ok(TuneProfile {
+            host: scan_str(head, "host").unwrap_or_else(|| "unknown".into()),
+            block,
+            threads: num("best_threads")? as usize,
+            gflops: num("best_gflops")?,
+            link,
+            cells,
+            source: None,
+        })
+    }
+
+    /// Load from disk, remembering the source path for report headers.
+    pub fn load(path: &Path) -> Result<TuneProfile> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading tune profile {}", path.display()))?;
+        let mut p = Self::from_json(&text)
+            .with_context(|| format!("parsing tune profile {}", path.display()))?;
+        p.source = Some(path.to_path_buf());
+        Ok(p)
+    }
+
+    /// Write to disk (creating parent directories), and remember the
+    /// path as this profile's source.
+    pub fn save(&mut self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing tune profile {}", path.display()))?;
+        self.source = Some(path.to_path_buf());
+        Ok(())
+    }
+}
+
+/// Scan `"key": <number>` in `head` (flat scalar region of a profile).
+fn scan_num(head: &str, key: &str) -> Option<f64> {
+    let rest = after_key(head, key)?;
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || "+-.eE".contains(c)))
+        .unwrap_or(rest.len());
+    rest[..end].parse::<f64>().ok()
+}
+
+/// Scan `"key": "<string>"` in `head` (values contain no escapes).
+fn scan_str(head: &str, key: &str) -> Option<String> {
+    let rest = after_key(head, key)?;
+    let inner = rest.strip_prefix('"')?;
+    Some(inner[..inner.find('"')?].to_string())
+}
+
+/// Position just past `"key":` plus whitespace, or None if absent.
+fn after_key<'a>(head: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\"");
+    let at = head.find(&pat)?;
+    let rest = head[at + pat.len()..].trim_start();
+    Some(rest.strip_prefix(':')?.trim_start())
+}
+
+/// Parse the `"results"` array entries (same splitting discipline as the
+/// bench gate's parser: entries keyed by scanning each `{..}` segment).
+fn parse_cells(tail: &str) -> Result<Vec<TuneCell>> {
+    let open = tail.find('[').ok_or_else(|| anyhow!("results is not an array"))?;
+    let close = tail.rfind(']').ok_or_else(|| anyhow!("unterminated results array"))?;
+    let body = &tail[open + 1..close];
+    let mut cells = Vec::new();
+    for seg in body.split('}') {
+        let Some(at) = seg.find('{') else { continue };
+        let entry = &seg[at + 1..];
+        if entry.trim().is_empty() {
+            continue;
+        }
+        cells.push(TuneCell {
+            kernel: scan_str(entry, "kernel")
+                .ok_or_else(|| anyhow!("results entry missing 'kernel'"))?,
+            b: scan_num(entry, "b").ok_or_else(|| anyhow!("results entry missing 'b'"))? as usize,
+            threads: scan_num(entry, "threads")
+                .ok_or_else(|| anyhow!("results entry missing 'threads'"))?
+                as usize,
+            gflops: scan_num(entry, "gflops")
+                .ok_or_else(|| anyhow!("results entry missing 'gflops'"))?,
+        });
+    }
+    Ok(cells)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TuneProfile {
+        TuneProfile {
+            host: "testhost".into(),
+            block: BlockParams {
+                kc: 384,
+                mc: 96,
+                nc: 256,
+                micro: MicroKernel::Mr8Nr4,
+                ew_par_threshold: 1 << 19,
+            },
+            threads: 4,
+            gflops: 37.25,
+            link: Some(LinkCalibration {
+                intra: CostParams::new(2.1e-7, 9.0e-11),
+                inter: CostParams::new(1.4e-5, 3.1e-10),
+            }),
+            cells: vec![
+                TuneCell { kernel: "default".into(), b: 256, threads: 4, gflops: 33.5 },
+                TuneCell { kernel: "tuned".into(), b: 256, threads: 4, gflops: 37.25 },
+            ],
+            source: None,
+        }
+    }
+
+    #[test]
+    fn json_round_trip_preserves_params() {
+        let p = sample();
+        let back = TuneProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn round_trip_without_link_calibration() {
+        let mut p = sample();
+        p.link = None;
+        let json = p.to_json();
+        assert!(json.contains("\"link_calibrated\":false"));
+        assert!(!json.contains("link_intra_ts"));
+        let back = TuneProfile::from_json(&json).unwrap();
+        assert_eq!(back.link, None);
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn file_round_trip_records_source() {
+        let dir = std::env::temp_dir().join("foopar_tune_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tune-roundtrip.json");
+        let mut p = sample();
+        p.save(&path).unwrap();
+        assert_eq!(p.source.as_deref(), Some(path.as_path()));
+        let back = TuneProfile::load(&path).unwrap();
+        assert_eq!(back.block, p.block);
+        assert_eq!(back.link, p.link);
+        assert_eq!(back.cells, p.cells);
+        assert_eq!(back.source_label(), path.display().to_string());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_non_profiles_and_bad_params() {
+        assert!(TuneProfile::from_json("{}").is_err());
+        assert!(TuneProfile::from_json("{\"bench\":\"gemm\"}").is_err());
+        // mc not a multiple of MR
+        let bad = sample().to_json().replace("\"mc\":96", "\"mc\":97");
+        assert!(TuneProfile::from_json(&bad).is_err());
+        // unknown microkernel shape
+        let bad = sample().to_json().replace("\"micro\":\"8x4\"", "\"micro\":\"3x3\"");
+        assert!(TuneProfile::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn default_path_is_per_host() {
+        if std::env::var_os("HOME").is_some() {
+            let p = TuneProfile::default_path().unwrap();
+            let name = p.file_name().unwrap().to_string_lossy().into_owned();
+            assert!(name.starts_with("tune-") && name.ends_with(".json"), "{name}");
+            assert!(p.parent().unwrap().ends_with(".foopar"));
+        }
+    }
+
+    #[test]
+    fn calibration_prices_hierarchy() {
+        let cal = sample().link.unwrap();
+        let h = cal.hier();
+        assert_eq!(h.intra, cal.intra);
+        assert_eq!(h.inter, cal.inter);
+        assert!(h.msg(true, 1024) < h.msg(false, 1024));
+    }
+}

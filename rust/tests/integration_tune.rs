@@ -1,0 +1,187 @@
+//! Tune-profile integration: a persisted profile must reach every
+//! rank's kernels (block parameters), the metrics plane (profile tag),
+//! and the cost model (link calibration on hierarchical worlds) — and a
+//! non-default profile must keep the bit-determinism contract across
+//! every transport and thread count.
+
+use foopar::algos::{cannon, mmm_dns, seq};
+use foopar::comm::cost::CostParams;
+use foopar::matrix::block::BlockSource;
+use foopar::runtime::compute::Compute;
+use foopar::tune::{LinkCalibration, TuneCell, TuneProfile};
+use foopar::{BlockParams, MicroKernel, Runtime};
+
+fn nondefault_block() -> BlockParams {
+    // kc differs from the default, so the dense accumulation grouping —
+    // and therefore the exact bits — differ from a default-profile run;
+    // the tests below pin that grouping across transports and threads.
+    BlockParams { kc: 32, mc: 16, nc: 32, micro: MicroKernel::Mr4Nr8, ..BlockParams::default() }
+}
+
+fn sample_profile(block: BlockParams) -> TuneProfile {
+    TuneProfile {
+        host: "it".into(),
+        block,
+        threads: 2,
+        gflops: 1.0,
+        link: None,
+        cells: vec![TuneCell { kernel: "tuned".into(), b: 32, threads: 2, gflops: 1.0 }],
+        source: None,
+    }
+}
+
+#[test]
+fn saved_profile_round_trips_into_a_runtime() {
+    let dir = std::env::temp_dir().join("foopar_tune_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tune-rt.json");
+    let mut p = sample_profile(nondefault_block());
+    p.save(&path).unwrap();
+
+    let loaded = TuneProfile::load(&path).unwrap();
+    assert_eq!(loaded.block, p.block);
+    let rt = Runtime::builder().tune_profile(&loaded).build().unwrap();
+    assert_eq!(*rt.block_params(), p.block);
+    assert_eq!(rt.profile_label().unwrap(), path.display().to_string());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn builder_block_params_win_over_profile_and_are_validated() {
+    let pinned = BlockParams { kc: 64, ..BlockParams::default() };
+    let rt = Runtime::builder()
+        .tune_profile(&sample_profile(nondefault_block()))
+        .block_params(pinned)
+        .build()
+        .unwrap();
+    assert_eq!(*rt.block_params(), pinned);
+    // mc not a multiple of the microkernel's MR must be a build error
+    let bad = BlockParams { mc: 17, ..BlockParams::default() };
+    assert!(Runtime::builder().block_params(bad).build().is_err());
+}
+
+/// Cannon on a q=2 grid: identical bits over {local, tcp-loopback,
+/// hybrid} × threads {1, 4} under a pinned non-default profile, with
+/// the profile visible to every rank and in its metrics snapshot.
+#[test]
+fn cannon_bit_identical_across_transports_and_threads_under_nondefault_profile() {
+    let q = 2usize;
+    let b = 12usize; // crosses mc/nc tile edges at mc=16, nc=32
+    let block = nondefault_block();
+    let profile = sample_profile(block);
+    let a = BlockSource::real(b, 11);
+    let bb = BlockSource::real(b, 22);
+
+    let go = |transport: &str, threads: usize| {
+        let mut builder = Runtime::builder()
+            .world(q * q)
+            .cost(CostParams::qdr_infiniband())
+            .transport(transport)
+            .threads_per_rank(threads)
+            .tune_profile(&profile);
+        if transport == "hybrid" {
+            builder = builder.ranks_per_node(2);
+        }
+        let res = builder.build().unwrap().run(|ctx| {
+            assert_eq!(ctx.block_params().kc, 32, "profile did not reach the rank");
+            cannon::mmm_cannon(ctx, &Compute::Native, q, &a, &bb)
+        });
+        for m in &res.metrics {
+            assert_eq!(m.profile.label(), block.label(), "metrics lost the profile tag");
+        }
+        cannon::collect_c(&res.results, q, b)
+    };
+
+    let reference = go("local", 1);
+    let want = seq::matmul_seq(&a.assemble(q), &bb.assemble(q));
+    assert!(reference.max_abs_diff(&want) < 1e-4);
+    for transport in ["local", "tcp-loopback", "hybrid"] {
+        for threads in [1usize, 4] {
+            let got = go(transport, threads);
+            assert_eq!(
+                got.data, reference.data,
+                "{transport} threads={threads}: bits diverged under non-default profile"
+            );
+        }
+    }
+}
+
+/// DNS on a q=2 cube (world 8), same contract.
+#[test]
+fn dns_bit_identical_across_transports_and_threads_under_nondefault_profile() {
+    let q = 2usize;
+    let b = 10usize;
+    let profile = sample_profile(nondefault_block());
+    let a = BlockSource::real(b, 5);
+    let bb = BlockSource::real(b, 6);
+
+    let go = |transport: &str, threads: usize| {
+        let mut builder = Runtime::builder()
+            .world(q * q * q)
+            .cost(CostParams::qdr_infiniband())
+            .transport(transport)
+            .threads_per_rank(threads)
+            .tune_profile(&profile);
+        if transport == "hybrid" {
+            builder = builder.ranks_per_node(4);
+        }
+        let res = builder.build().unwrap().run(|ctx| {
+            assert_eq!(ctx.block_params().nc, 32);
+            mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &bb)
+        });
+        mmm_dns::collect_c(&res.results, q, b)
+    };
+
+    let reference = go("local", 1);
+    let want = seq::matmul_seq(&a.assemble(q), &bb.assemble(q));
+    assert!(reference.max_abs_diff(&want) < 1e-4);
+    for transport in ["local", "tcp-loopback", "hybrid"] {
+        for threads in [1usize, 4] {
+            let got = go(transport, threads);
+            assert_eq!(
+                got.data, reference.data,
+                "{transport} threads={threads}: bits diverged under non-default profile"
+            );
+        }
+    }
+}
+
+/// Link calibration prices the virtual clock on hierarchical worlds
+/// only: an absurd calibrated intra-node latency must show up in the
+/// clocks of a node-shaped run and be ignored by a flat one.
+#[test]
+fn link_calibration_prices_hierarchical_worlds_only() {
+    const TAG: u64 = 77;
+    let mut profile = sample_profile(BlockParams::default());
+    profile.link = Some(LinkCalibration {
+        intra: CostParams::new(1.0, 0.0), // 1 s per same-node message
+        inter: CostParams::new(2.0, 0.0),
+    });
+
+    let pingpong = |hier: bool| {
+        let mut builder = Runtime::builder()
+            .world(2)
+            .cost(CostParams::qdr_infiniband())
+            .tune_profile(&profile);
+        if hier {
+            builder = builder.ranks_per_node(2); // both ranks on one node
+        }
+        builder
+            .build()
+            .unwrap()
+            .run(|ctx| {
+                if ctx.rank == 0 {
+                    ctx.send(1, TAG, 1.5f64);
+                } else {
+                    let _: f64 = ctx.recv(0, TAG);
+                }
+                ctx.now()
+            })
+            .t_parallel
+    };
+
+    let hier_t = pingpong(true);
+    assert!(hier_t >= 1.0, "calibrated 1 s intra link not applied: T_P = {hier_t}");
+    let flat_t = pingpong(false);
+    assert!(flat_t < 0.5, "flat world must keep the machine link, got T_P = {flat_t}");
+}
