@@ -8,7 +8,7 @@
 //! and DNS (modeled, comm-visible network) and prints the virtual `T_P`
 //! drop plus the comm time the pipeline hid.
 
-use foopar::algos::{cannon, mmm_dns};
+use foopar::algos::{matmul, MatmulSpec, PlanMode, Schedule};
 use foopar::comm::cost::CostParams;
 use foopar::comm::group::Group;
 use foopar::matrix::block::BlockSource;
@@ -47,11 +47,11 @@ fn main() -> foopar::Result<()> {
     let b = BlockSource::proxy(b2, 2);
     let run_cannon = |pipelined: bool| {
         Runtime::builder().world(q2 * q2).cost(machine).run(|ctx| {
-            if pipelined {
-                cannon::mmm_cannon_pipelined(ctx, &comp, q2, &a, &b).t_local
-            } else {
-                cannon::mmm_cannon(ctx, &comp, q2, &a, &b).t_local
-            }
+            let schedule =
+                if pipelined { Schedule::CannonPipelined } else { Schedule::CannonBlocking };
+            let spec =
+                MatmulSpec::new(&comp, q2, &a, &b).mode(PlanMode::Forced(schedule));
+            matmul(ctx, spec).t_local
         })
     };
     let cb = run_cannon(false)?;
@@ -71,11 +71,11 @@ fn main() -> foopar::Result<()> {
     let b3s = BlockSource::proxy(b3, 4);
     let run_dns = |pipelined: bool| {
         Runtime::builder().world(q3 * q3 * q3).cost(machine).run(|ctx| {
-            if pipelined {
-                mmm_dns::mmm_dns_pipelined(ctx, &comp, q3, &a3, &b3s, chunks).t_local
-            } else {
-                mmm_dns::mmm_dns(ctx, &comp, q3, &a3, &b3s).t_local
-            }
+            let schedule = if pipelined { Schedule::DnsPipelined } else { Schedule::DnsBlocking };
+            let spec = MatmulSpec::new(&comp, q3, &a3, &b3s)
+                .chunks(chunks)
+                .mode(PlanMode::Forced(schedule));
+            matmul(ctx, spec).t_local
         })
     };
     let db = run_dns(false)?;

@@ -14,7 +14,7 @@
 
 use std::sync::Arc;
 
-use foopar::algos::{mmm_dns, seq};
+use foopar::algos::{collect_c, matmul, seq, MatmulSpec, PlanMode, Schedule};
 use foopar::comm::backend::{registry, AllGatherAlgo, BcastAlgo, ReduceAlgo};
 use foopar::comm::collectives::StandardCollectives;
 use foopar::comm::cost::CostParams;
@@ -64,9 +64,13 @@ fn main() {
         .world(q * q * q)
         .backend("rdma-sim")
         .machine("local")
-        .run(|ctx| mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &bm))
+        .run(|ctx| {
+            let spec = MatmulSpec::new(&Compute::Native, q, &a, &bm)
+                .mode(PlanMode::Forced(Schedule::DnsBlocking));
+            matmul(ctx, spec)
+        })
         .expect("custom backend runtime");
-    let c = mmm_dns::collect_c(&res.results, q, b);
+    let c = collect_c(&res.results, q, b);
     let want = seq::matmul_seq(&a.assemble(q), &bm.assemble(q));
     let diff = c.max_abs_diff(&want);
     println!("rdma-sim DNS (real, q={q}): max|Δ| vs sequential = {diff:.2e}");
@@ -83,7 +87,11 @@ fn main() {
             .world(p)
             .backend(backend)
             .machine("carver")
-            .run(|ctx| mmm_dns::mmm_dns(ctx, &comp, qq, &pa, &pb).t_local)
+            .run(|ctx| {
+                let spec = MatmulSpec::new(&comp, qq, &pa, &pb)
+                    .mode(PlanMode::Forced(Schedule::DnsBlocking));
+                matmul(ctx, spec).t_local
+            })
             .expect("modeled runtime")
             .t_parallel
     };

@@ -6,7 +6,7 @@
 
 use std::sync::Arc;
 
-use foopar::algos::{apsp_squaring, floyd_warshall, seq};
+use foopar::algos::{apsp, apsp_squaring, collect_d, floyd_warshall, seq, FwSpec};
 use foopar::analysis;
 use foopar::config::MachineConfig;
 use foopar::graph::{floyd_warshall_seq, Graph};
@@ -42,8 +42,8 @@ fn main() {
 
     // ---------- Algorithm 3 ----------
     println!("Floyd-Warshall (Alg. 3): n={n}, p={}, path: {path}", q * q);
-    let res = local.run(|ctx| floyd_warshall::floyd_warshall_par(ctx, &comp, q, &src));
-    let d = floyd_warshall::collect_d(&res.results, q, n / q);
+    let res = local.run(|ctx| apsp(ctx, FwSpec::new(&comp, q, &src)));
+    let d = collect_d(&res.results, q, n / q);
     let want = floyd_warshall_seq(&Graph::random(n, density, seed));
     println!("  verified vs sequential: max|Δ| = {:.2e}", d.max_abs_diff(&want));
     assert!(d.max_abs_diff(&want) < 1e-2);
@@ -69,7 +69,7 @@ fn main() {
         let r = Runtime::builder()
             .world(p)
             .machine_config(&machine)
-            .run(|ctx| floyd_warshall::floyd_warshall_par(ctx, &comp, qq, &msrc))
+            .run(|ctx| apsp(ctx, FwSpec::new(&comp, qq, &msrc)))
             .expect("floyd_warshall runtime");
         let ts = seq::fw_ts(8192, machine.rate);
         println!(

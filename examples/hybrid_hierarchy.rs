@@ -19,7 +19,7 @@
 //!
 //! Run with:  cargo run --release --example hybrid_hierarchy
 
-use foopar::algos::{mmm_dns, seq};
+use foopar::algos::{collect_c, matmul, seq, MatmulSpec, PlanMode, Schedule};
 use foopar::comm::cost::{CostParams, HierCost};
 use foopar::comm::group::Group;
 use foopar::matrix::block::BlockSource;
@@ -61,10 +61,12 @@ fn main() {
                     t.node_sizes()
                 );
             }
-            mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &bm)
+            let spec = MatmulSpec::new(&Compute::Native, q, &a, &bm)
+                .mode(PlanMode::Forced(Schedule::DnsBlocking));
+            matmul(ctx, spec)
         })
         .expect("hybrid runtime");
-    let c = mmm_dns::collect_c(&res.results, q, b);
+    let c = collect_c(&res.results, q, b);
     let want = seq::matmul_seq(&a.assemble(q), &bm.assemble(q));
     let diff = c.max_abs_diff(&want);
     println!("hybrid DNS (real, q={q}): max|Δ| vs sequential = {diff:.2e}");

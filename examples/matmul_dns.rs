@@ -14,7 +14,7 @@
 
 use std::sync::Arc;
 
-use foopar::algos::{mmm_dns, seq};
+use foopar::algos::{collect_c, matmul, seq, MatmulSpec, PlanMode, Schedule};
 use foopar::analysis;
 use foopar::comm::backend::registry;
 use foopar::config::MachineConfig;
@@ -48,9 +48,13 @@ fn main() {
         .world(q * q * q)
         .backend("shmem")
         .machine("local")
-        .run(|ctx| mmm_dns::mmm_dns(ctx, &comp, q, &a, &bm))
+        .run(|ctx| {
+            let spec = MatmulSpec::new(&comp, q, &a, &bm)
+                .mode(PlanMode::Forced(Schedule::DnsBlocking));
+            matmul(ctx, spec)
+        })
         .expect("matmul_dns runtime");
-    let c = mmm_dns::collect_c(&res.results, q, b);
+    let c = collect_c(&res.results, q, b);
     let want = seq::matmul_seq(&a.assemble(q), &bm.assemble(q));
     let diff = c.max_abs_diff(&want);
     println!("  verified vs sequential oracle: max|Δ| = {diff:.2e}");

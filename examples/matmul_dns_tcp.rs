@@ -1,5 +1,5 @@
 //! Algorithm 2 (DNS matrix multiplication) across **OS processes**: the
-//! same `mmm_dns` code that runs on in-process shared memory runs here
+//! same DNS plan that runs on in-process shared memory runs here
 //! over the TCP transport — 8 processes (q=2 grid) on loopback, spawned
 //! by the re-exec launcher, with zero changes to algorithm or collective
 //! code.  That is the paper's distributed-memory portability claim,
@@ -15,7 +15,7 @@
 //! product against (a) the sequential oracle and (b) the in-process
 //! shmem run — bit for bit.
 
-use foopar::algos::{mmm_dns, seq};
+use foopar::algos::{collect_c, matmul, seq, MatmulSpec, PlanMode, Schedule};
 use foopar::comm::group::Group;
 use foopar::comm::transport::launch;
 use foopar::matrix::block::{Block, BlockSource};
@@ -39,9 +39,13 @@ fn main() {
             .world(world)
             .backend("openmpi-fixed")
             .machine("local")
-            .run(|ctx| mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &bm))
+            .run(|ctx| {
+                let spec = MatmulSpec::new(&Compute::Native, q, &a, &bm)
+                    .mode(PlanMode::Forced(Schedule::DnsBlocking));
+                matmul(ctx, spec)
+            })
             .expect("shmem baseline");
-        Some(mmm_dns::collect_c(&res.results, q, b))
+        Some(collect_c(&res.results, q, b))
     } else {
         None
     };
@@ -56,7 +60,9 @@ fn main() {
         .machine("local")
         .transport("tcp")
         .run(|ctx| {
-            let out = mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &bm);
+            let spec = MatmulSpec::new(&Compute::Native, q, &a, &bm)
+                .mode(PlanMode::Forced(Schedule::DnsBlocking));
+            let out = matmul(ctx, spec);
             // each process holds only its own C block; gather them to
             // world rank 0 with an ordinary collective for verification
             let g = Group::world(ctx);

@@ -13,8 +13,8 @@
 //! derived tag namespace.  CI runs this to hold the acceptance bar:
 //! multiplexing must not perturb a single bit of any result.
 
-use foopar::algos::cannon::{collect_c, mmm_cannon};
-use foopar::algos::floyd_warshall::{collect_d, floyd_warshall_par, FwSource};
+use foopar::algos::floyd_warshall::FwSource;
+use foopar::algos::{apsp, collect_c, collect_d, matmul, FwSpec, MatmulSpec};
 use foopar::matrix::block::BlockSource;
 use foopar::matrix::dense::Mat;
 use foopar::runtime::compute::Compute;
@@ -29,14 +29,14 @@ fn oracle(spec: &JobSpec) -> foopar::Result<Mat> {
             let res = Runtime::builder().world(q * q).build()?.run(move |ctx| {
                 let a = BlockSource::real(b, seed_a);
                 let bb = BlockSource::real(b, seed_b);
-                mmm_cannon(ctx, &Compute::Native, q, &a, &bb)
+                matmul(ctx, MatmulSpec::new(&Compute::Native, q, &a, &bb))
             });
             collect_c(&res.results, q, b)
         }
         JobSpec::FloydWarshall { q, n, density, seed } => {
             let res = Runtime::builder().world(q * q).build()?.run(move |ctx| {
                 let src = FwSource::Real { n, density, seed };
-                floyd_warshall_par(ctx, &Compute::Native, q, &src)
+                apsp(ctx, FwSpec::new(&Compute::Native, q, &src))
             });
             collect_d(&res.results, q, n / q)
         }

@@ -7,7 +7,7 @@
 //!
 //! Run with:  cargo bench --bench apsp_scaling
 
-use foopar::algos::{apsp_squaring, floyd_warshall, seq};
+use foopar::algos::{apsp, apsp_squaring, floyd_warshall, seq, FwSpec};
 use foopar::analysis;
 use foopar::config::MachineConfig;
 use foopar::metrics::render_table;
@@ -32,7 +32,7 @@ fn main() {
             let r = Runtime::builder()
                 .world(p)
                 .machine_config(&machine)
-                .run(|ctx| floyd_warshall::floyd_warshall_par(ctx, &comp, q, &src))
+                .run(|ctx| apsp(ctx, FwSpec::new(&comp, q, &src)))
                 .expect("bench runtime");
             let ts = seq::fw_ts(n, machine.rate);
             rows.push(vec![
@@ -61,7 +61,7 @@ fn main() {
             .machine_config(&machine)
             .build()
             .expect("bench runtime");
-        let fw = rt.run(|ctx| floyd_warshall::floyd_warshall_par(ctx, &comp, q, &src));
+        let fw = rt.run(|ctx| apsp(ctx, FwSpec::new(&comp, q, &src)));
         let sq = rt.run(|ctx| apsp_squaring::apsp_squaring_par(ctx, &comp, q, &src));
         rows.push(vec![
             n.to_string(),
@@ -86,7 +86,7 @@ fn main() {
         .world(4)
         .backend("shmem")
         .machine("local")
-        .run(|ctx| floyd_warshall::floyd_warshall_par(ctx, &Compute::Native, q, &src))
+        .run(|ctx| apsp(ctx, FwSpec::new(&Compute::Native, q, &src)))
         .expect("bench runtime");
     println!(
         "\nreal-mode spot check: n={n}, p=4 — wall {:.3}s, virtual T_P {:.4}s",

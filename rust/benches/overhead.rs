@@ -7,7 +7,7 @@
 //!
 //! Run with:  cargo bench --bench overhead
 
-use foopar::algos::{cannon, mmm_dns, mmm_generic};
+use foopar::algos::{matmul, mmm_generic, MatmulSpec, PlanMode, Schedule};
 use foopar::analysis;
 use foopar::comm::cost::CostParams;
 use foopar::config::MachineConfig;
@@ -46,7 +46,11 @@ fn main() {
 
     let a3 = BlockSource::proxy(n / 4, 1);
     let b3 = BlockSource::proxy(n / 4, 2);
-    let dns = rt.run(|ctx| mmm_dns::mmm_dns(ctx, &comp, 4, &a3, &b3).t_local);
+    let dns = rt.run(|ctx| {
+        let spec =
+            MatmulSpec::new(&comp, 4, &a3, &b3).mode(PlanMode::Forced(Schedule::DnsBlocking));
+        matmul(ctx, spec).t_local
+    });
     table.push(("dns (q³=64)", dns.t_parallel));
 
     let gen = rt.run(|ctx| mmm_generic::mmm_generic(ctx, &comp, 4, &a3, &b3).t_local);
@@ -54,7 +58,11 @@ fn main() {
 
     let a2 = BlockSource::proxy(n / 8, 1);
     let b2 = BlockSource::proxy(n / 8, 2);
-    let can = rt.run(|ctx| cannon::mmm_cannon(ctx, &comp, 8, &a2, &b2).t_local);
+    let can = rt.run(|ctx| {
+        let spec =
+            MatmulSpec::new(&comp, 8, &a2, &b2).mode(PlanMode::Forced(Schedule::CannonBlocking));
+        matmul(ctx, spec).t_local
+    });
     table.push(("cannon (q²=64)", can.t_parallel));
 
     let rows: Vec<Vec<String>> = table

@@ -13,7 +13,7 @@
 
 use std::io::Write;
 
-use foopar::algos::{cannon, mmm_dns};
+use foopar::algos::{matmul, MatmulSpec, PlanMode, Schedule};
 use foopar::comm::backend::BackendProfile;
 use foopar::comm::cost::CostParams;
 use foopar::matrix::block::BlockSource;
@@ -51,10 +51,14 @@ fn bench_cannon(q: usize, b: usize, machine: (&'static str, CostParams), rate: f
     let bb = BlockSource::proxy(b, 2);
     let comp = Compute::Modeled { rate };
     let blocking = run_modeled(q * q, machine.1, |ctx| {
-        cannon::mmm_cannon(ctx, &comp, q, &a, &bb).t_local
+        let spec = MatmulSpec::new(&comp, q, &a, &bb)
+            .mode(PlanMode::Forced(Schedule::CannonBlocking));
+        matmul(ctx, spec).t_local
     });
     let pipelined = run_modeled(q * q, machine.1, |ctx| {
-        cannon::mmm_cannon_pipelined(ctx, &comp, q, &a, &bb).t_local
+        let spec = MatmulSpec::new(&comp, q, &a, &bb)
+            .mode(PlanMode::Forced(Schedule::CannonPipelined));
+        matmul(ctx, spec).t_local
     });
     let hidden_max = pipelined
         .metrics
@@ -84,10 +88,15 @@ fn bench_dns(
     let bb = BlockSource::proxy(b, 2);
     let comp = Compute::Modeled { rate };
     let blocking = run_modeled(q * q * q, machine.1, |ctx| {
-        mmm_dns::mmm_dns(ctx, &comp, q, &a, &bb).t_local
+        let spec =
+            MatmulSpec::new(&comp, q, &a, &bb).mode(PlanMode::Forced(Schedule::DnsBlocking));
+        matmul(ctx, spec).t_local
     });
     let pipelined = run_modeled(q * q * q, machine.1, |ctx| {
-        mmm_dns::mmm_dns_pipelined(ctx, &comp, q, &a, &bb, chunks).t_local
+        let spec = MatmulSpec::new(&comp, q, &a, &bb)
+            .chunks(chunks)
+            .mode(PlanMode::Forced(Schedule::DnsPipelined));
+        matmul(ctx, spec).t_local
     });
     let hidden_max = pipelined
         .metrics

@@ -117,7 +117,11 @@ fn main() {
         Runtime::builder()
             .world(512)
             .cost(CostParams::qdr_infiniband())
-            .run(|ctx| foopar::algos::mmm_dns::mmm_dns(ctx, &comp, 8, &a, &b))
+            .run(|ctx| {
+                let spec = foopar::algos::MatmulSpec::new(&comp, 8, &a, &b)
+                    .mode(foopar::algos::PlanMode::Forced(foopar::algos::Schedule::DnsBlocking));
+                foopar::algos::matmul(ctx, spec)
+            })
             .expect("bench runtime");
         println!(
             "modeled DNS p=512 end-to-end: {:.1} ms wall (one fig5 point)",

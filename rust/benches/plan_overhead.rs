@@ -1,0 +1,179 @@
+//! Bench: execution-plan layer overhead + planner-quality tripwire.
+//!
+//! Run with:  cargo bench --bench plan_overhead
+//!
+//! Part 1 (wall clock) runs the same q=2 Cannon product three ways —
+//! `PlanMode::Eager` (the pre-plan hand-written path), `Forced(cannon)`
+//! (record → optimize → interpret, no pricing) and `Auto` (plus
+//! dry-running every candidate on the cost model) — and emits
+//! `BENCH_plan.json` for the CI bench gate (`scripts/bench_gate`).  The
+//! `gflops` field is the effective end-to-end rate of the whole SPMD
+//! run, so a planner that suddenly got expensive shows up as a rate
+//! regression against the committed baseline.
+//!
+//! Part 2 (virtual clock, deterministic) is the acceptance tripwire:
+//! on a comm-visible modeled network, `Auto`'s executed T_P must be no
+//! worse than the hand-written pipelined variants it claims to subsume
+//! — for Cannon (q² world) and DNS (q³ world).  Violations exit 1.
+
+use std::io::Write;
+use std::time::Instant;
+
+use foopar::algos::{matmul, MatmulSpec, PlanMode, Schedule};
+use foopar::comm::cost::CostParams;
+use foopar::matrix::block::BlockSource;
+use foopar::metrics::render_table;
+use foopar::runtime::compute::Compute;
+use foopar::Runtime;
+
+struct Row {
+    op: &'static str,
+    b: usize,
+    iters: usize,
+    secs_per_iter: f64,
+    gflops: f64,
+    overhead_vs_eager_pct: f64,
+}
+
+fn time_iters<F: FnMut()>(mut f: F, iters: usize) -> f64 {
+    f(); // warmup
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    // ---- Part 1: wall-clock overhead of describe→optimize→interpret ----
+    let (q, b, iters) = (2usize, 128usize, 20usize);
+    let n = q * b;
+    let flops = 2.0 * (n as f64).powi(3);
+    let a = BlockSource::real(b, 0xA1);
+    let bm = BlockSource::real(b, 0xB2);
+
+    let time_mode = |mode: PlanMode| {
+        let rt = Runtime::builder().world(q * q).build().expect("runtime");
+        time_iters(
+            || {
+                let res = rt
+                    .run(|ctx| matmul(ctx, MatmulSpec::new(&Compute::Native, q, &a, &bm).mode(mode)));
+                std::hint::black_box(res.t_parallel);
+            },
+            iters,
+        )
+    };
+
+    let secs_eager = time_mode(PlanMode::Eager);
+    let secs_forced = time_mode(PlanMode::Forced(Schedule::CannonBlocking));
+    let secs_auto = time_mode(PlanMode::Auto);
+
+    let row = |op: &'static str, secs: f64| Row {
+        op,
+        b,
+        iters,
+        secs_per_iter: secs,
+        gflops: flops / secs / 1e9,
+        overhead_vs_eager_pct: (secs / secs_eager - 1.0) * 100.0,
+    };
+    let rows =
+        vec![row("eager", secs_eager), row("forced-cannon", secs_forced), row("auto", secs_auto)];
+
+    println!("== plan layer overhead (q=2 Cannon product, wall clock) ==\n");
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.op.to_string(),
+                r.b.to_string(),
+                r.iters.to_string(),
+                format!("{:.3e}", r.secs_per_iter),
+                format!("{:.2}", r.gflops),
+                format!("{:+.1}%", r.overhead_vs_eager_pct),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(&["op", "b", "iters", "s/iter", "GFlop/s", "vs eager"], &table)
+    );
+
+    // ---- Part 2: the planner must not lose to the hand-written ----
+    // pipelined variants on the deterministic virtual clock.
+    let machine = CostParams::new(5e-5, 1e-8);
+    let comp = Compute::Modeled { rate: 1e10 };
+    let t_p = |world: usize, qq: usize, chunks: usize, mode: PlanMode| {
+        let pa = BlockSource::proxy(256, 1);
+        let pb = BlockSource::proxy(256, 2);
+        let comp = comp.clone();
+        Runtime::builder()
+            .world(world)
+            .cost(machine)
+            .build()
+            .expect("runtime")
+            .run(move |ctx| {
+                let mut spec = MatmulSpec::new(&comp, qq, &pa, &pb).mode(mode);
+                if chunks > 0 {
+                    spec = spec.chunks(chunks);
+                }
+                matmul(ctx, spec).schedule
+            })
+            .t_parallel
+    };
+
+    let mut violations = Vec::new();
+    let cases: [(&str, usize, usize, usize, Schedule); 2] = [
+        ("cannon", 9, 3, 0, Schedule::CannonPipelined),
+        ("dns", 8, 2, 4, Schedule::DnsPipelined),
+    ];
+    println!("== planner vs hand-written pipelined (modeled T_P, deterministic) ==\n");
+    for (label, world, qq, chunks, handwritten) in cases {
+        let auto = t_p(world, qq, chunks, PlanMode::Auto);
+        let hand = t_p(world, qq, chunks, PlanMode::Forced(handwritten));
+        println!(
+            "{label}: auto T_P = {:.6}s, {} T_P = {:.6}s",
+            auto,
+            handwritten.name(),
+            hand
+        );
+        if auto > hand * (1.0 + 1e-9) {
+            violations.push(format!(
+                "{label}: auto T_P {auto:.6e} exceeds hand-written {} {hand:.6e}",
+                handwritten.name()
+            ));
+        }
+    }
+
+    // ---- artifact ----
+    let entries: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "  {{\"op\": \"{}\", \"b\": {}, \"iters\": {}, \"secs_per_iter\": {:.6e}, \
+                 \"gflops\": {:.4}, \"overhead_vs_eager_pct\": {:.2}}}",
+                r.op, r.b, r.iters, r.secs_per_iter, r.gflops, r.overhead_vs_eager_pct
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n\"bench\": \"plan_overhead\",\n\"unit\": \"wall seconds\",\n\
+         \"note\": \"same q=2 Cannon product via PlanMode::Eager / Forced / Auto; gflops is the \
+         end-to-end SPMD rate, so planner cost shows up as a rate drop. SPMD wall clock is \
+         thread-spawn noisy, so the gate stanza uses a loose tolerance against a conservative \
+         baseline; the auto-beats-handwritten tripwire is asserted in-bench on the \
+         deterministic virtual clock\",\n\
+         \"results\": [\n{}\n]\n}}\n",
+        entries.join(",\n")
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_plan.json");
+    let mut f = std::fs::File::create(path).expect("create BENCH_plan.json");
+    f.write_all(json.as_bytes()).expect("write BENCH_plan.json");
+    println!("\nwrote {path}");
+
+    if !violations.is_empty() {
+        for v in &violations {
+            eprintln!("ERROR: {v}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -153,7 +153,8 @@ mod tests {
             apsp_squaring_par(ctx, &Compute::Native, q, &src)
         });
         let fw = run(4, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
-            crate::algos::floyd_warshall::floyd_warshall_par(ctx, &Compute::Native, q, &src)
+            let grid = crate::data::grid::GridN::square(ctx, q);
+            crate::algos::floyd_warshall::fw_on_grid(ctx, &Compute::Native, q, &src, &grid)
         });
         let a = saturate(collect_d(&sq.results, q, n / q));
         let b = crate::algos::floyd_warshall::collect_d(&fw.results, q, n / q);

@@ -115,7 +115,7 @@ mod tests {
             dns_baseline(ctx, &Compute::Native, q, &a, &b)
         });
         let dns = run(8, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
-            crate::algos::mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &b)
+            crate::algos::mmm_dns::dns_eager(ctx, &Compute::Native, q, &a, &b)
         });
         let cb = collect_c(&base.results, q, bsz);
         let cd = crate::algos::mmm_dns::collect_c(&dns.results, q, bsz);
@@ -135,7 +135,7 @@ mod tests {
             dns_baseline(ctx, &comp, q, &a, &b)
         });
         let dns = run(64, BackendProfile::openmpi_fixed(), machine, |ctx| {
-            crate::algos::mmm_dns::mmm_dns(ctx, &comp, q, &a, &b)
+            crate::algos::mmm_dns::dns_eager(ctx, &comp, q, &a, &b)
         });
         let rel = (dns.t_parallel - base.t_parallel).abs() / base.t_parallel;
         assert!(rel < 0.05, "framework overhead {:.1}% too large", rel * 100.0);

@@ -49,7 +49,9 @@ impl FwSource {
     }
 
     /// The (i, j) block of the initial distance matrix, edge `b`.
-    fn block(&self, i: usize, j: usize, b: usize) -> Block {
+    /// Crate-visible so the plan interpreter's `Load` nodes share the
+    /// exact source mapping.
+    pub(crate) fn block(&self, i: usize, j: usize, b: usize) -> Block {
         match self {
             FwSource::Real { n, density, seed } => {
                 let g = Graph::random(*n, *density, *seed);
@@ -74,14 +76,22 @@ pub struct FwOutput {
 }
 
 /// Run Algorithm 3 on a q×q grid (world must be ≥ q²); `n` divisible by q.
+#[deprecated(
+    note = "use `algos::apsp(ctx, FwSpec::new(comp, q, src))` — \
+            the planner interprets the Floyd–Warshall plan"
+)]
 pub fn floyd_warshall_par(ctx: &Ctx, comp: &Compute, q: usize, src: &FwSource) -> FwOutput {
-    fw_on_grid(ctx, comp, q, src, &GridN::square(ctx, q))
+    let out = crate::plan::apsp(ctx, crate::plan::FwSpec::new(comp, q, src));
+    FwOutput { d_block: out.d_block, t_local: out.t_local }
 }
 
 /// [`floyd_warshall_par`] over an explicit rank subset: grid process
-/// (i, j) runs on world rank `ranks[i*q + j]` (see
-/// [`crate::algos::cannon::mmm_cannon_on`] — the serving runtime's
-/// placement hook).  The distance arithmetic is placement-independent.
+/// (i, j) runs on world rank `ranks[i*q + j]`.  The distance
+/// arithmetic is placement-independent.
+#[deprecated(
+    note = "use `algos::apsp(ctx, FwSpec::new(comp, q, src).on(ranks))` — \
+            subset placement is a spec option now"
+)]
 pub fn floyd_warshall_par_on(
     ctx: &Ctx,
     comp: &Compute,
@@ -89,10 +99,20 @@ pub fn floyd_warshall_par_on(
     src: &FwSource,
     ranks: &[usize],
 ) -> FwOutput {
-    fw_on_grid(ctx, comp, q, src, &GridN::square_on(ctx, q, ranks))
+    let out = crate::plan::apsp(ctx, crate::plan::FwSpec::new(comp, q, src).on(ranks));
+    FwOutput { d_block: out.d_block, t_local: out.t_local }
 }
 
-fn fw_on_grid(ctx: &Ctx, comp: &Compute, q: usize, src: &FwSource, grid: &GridN) -> FwOutput {
+/// The hand-written pivot loop — the eager path the planner's
+/// interpreted Floyd–Warshall plan must match bit-for-bit, and the
+/// serving runtime's placement hook.
+pub(crate) fn fw_on_grid(
+    ctx: &Ctx,
+    comp: &Compute,
+    q: usize,
+    src: &FwSource,
+    grid: &GridN,
+) -> FwOutput {
     let n = src.n();
     assert_eq!(n % q, 0, "n must be divisible by q");
     let b = n / q;
@@ -165,7 +185,7 @@ mod tests {
     fn check_against_seq(n: usize, q: usize, density: f64, seed: u64) {
         let src = FwSource::Real { n, density, seed };
         let res = run(q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
-            floyd_warshall_par(ctx, &Compute::Native, q, &src)
+            fw_on_grid(ctx, &Compute::Native, q, &src, &GridN::square(ctx, q))
         });
         let got = collect_d(&res.results, q, n / q);
         let g = Graph::random(n, density, seed);
@@ -199,14 +219,31 @@ mod tests {
         let (n, q, density, seed) = (8usize, 2usize, 0.4f64, 7u64);
         let src = FwSource::Real { n, density, seed };
         let anchored = run(4, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
-            floyd_warshall_par(ctx, &Compute::Native, q, &src)
+            fw_on_grid(ctx, &Compute::Native, q, &src, &GridN::square(ctx, q))
         });
         let subset = run(6, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
-            floyd_warshall_par_on(ctx, &Compute::Native, q, &src, &[5, 1, 4, 0])
+            fw_on_grid(ctx, &Compute::Native, q, &src, &GridN::square_on(ctx, q, &[5, 1, 4, 0]))
         });
         let da = collect_d(&anchored.results, q, n / q);
         let ds = collect_d(&subset.results, q, n / q);
         assert_eq!(da.data, ds.data);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shim_bit_identical_to_eager() {
+        let (n, q, density, seed) = (8usize, 2usize, 0.4f64, 9u64);
+        let src = FwSource::Real { n, density, seed };
+        let eager = run(q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            fw_on_grid(ctx, &Compute::Native, q, &src, &GridN::square(ctx, q))
+        });
+        let shim = run(q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            floyd_warshall_par(ctx, &Compute::Native, q, &src)
+        });
+        assert_eq!(
+            collect_d(&eager.results, q, n / q).data,
+            collect_d(&shim.results, q, n / q).data
+        );
     }
 
     #[test]
@@ -217,7 +254,7 @@ mod tests {
             16,
             BackendProfile::openmpi_fixed(),
             CostParams::new(1e-6, 1e-9),
-            |ctx| floyd_warshall_par(ctx, &Compute::Modeled { rate: 1e9 }, 4, &src),
+            |ctx| fw_on_grid(ctx, &Compute::Modeled { rate: 1e9 }, 4, &src, &GridN::square(ctx, 4)),
         );
         assert!(res.t_parallel > 0.0);
         for out in &res.results {

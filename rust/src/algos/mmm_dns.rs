@@ -35,7 +35,29 @@ pub struct DnsOutput {
 /// `a` / `b` supply the input blocks of edge `n/q`; `comp` decides real
 /// vs modeled execution.  Every rank participates SPMD-style; ranks
 /// outside the grid no-op and return `None`.
+#[deprecated(
+    note = "use `algos::matmul(ctx, MatmulSpec::new(comp, q, a, b))` — \
+            the planner prices DNS against the alternatives; force it \
+            with `.mode(PlanMode::Forced(Schedule::DnsBlocking))`"
+)]
 pub fn mmm_dns(
+    ctx: &Ctx,
+    comp: &Compute,
+    q: usize,
+    a: &BlockSource,
+    b: &BlockSource,
+) -> DnsOutput {
+    let out = crate::plan::matmul(
+        ctx,
+        crate::plan::MatmulSpec::new(comp, q, a, b)
+            .mode(crate::plan::PlanMode::Forced(crate::plan::Schedule::DnsBlocking)),
+    );
+    DnsOutput { c_block: out.c_block, t_local: out.t_local }
+}
+
+/// The hand-written blocking schedule — the eager path the planner's
+/// interpreted `DnsBlocking` plan must match bit-for-bit.
+pub(crate) fn dns_eager(
     ctx: &Ctx,
     comp: &Compute,
     q: usize,
@@ -80,7 +102,31 @@ pub fn mmm_dns(
 /// the same order whether B is whole or column-sliced, each column's
 /// z-fold order is unchanged, and the panel hstack reassembles the exact
 /// block (modeled runs reassemble the exact proxy metadata).
+#[deprecated(
+    note = "use `algos::matmul(ctx, MatmulSpec::new(comp, q, a, b).chunks(chunks))` — \
+            the planner's overlap pass derives this schedule automatically; \
+            force it with `.mode(PlanMode::Forced(Schedule::DnsPipelined))`"
+)]
 pub fn mmm_dns_pipelined(
+    ctx: &Ctx,
+    comp: &Compute,
+    q: usize,
+    a: &BlockSource,
+    b: &BlockSource,
+    chunks: usize,
+) -> DnsOutput {
+    let out = crate::plan::matmul(
+        ctx,
+        crate::plan::MatmulSpec::new(comp, q, a, b)
+            .chunks(chunks)
+            .mode(crate::plan::PlanMode::Forced(crate::plan::Schedule::DnsPipelined)),
+    );
+    DnsOutput { c_block: out.c_block, t_local: out.t_local }
+}
+
+/// The hand-written split-phase schedule, kept as the reference the
+/// planner's `overlap` rewrite is tested (and benched) against.
+pub(crate) fn dns_pipelined_eager(
     ctx: &Ctx,
     comp: &Compute,
     q: usize,
@@ -173,7 +219,7 @@ mod tests {
         let a = BlockSource::real(bsz, 100);
         let b = BlockSource::real(bsz, 200);
         let res = run(q * q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
-            mmm_dns(ctx, &Compute::Native, q, &a, &b)
+            dns_eager(ctx, &Compute::Native, q, &a, &b)
         });
         let c = collect_c(&res.results, q, bsz);
         let want = matmul_seq(&a.assemble(q), &b.assemble(q));
@@ -186,7 +232,7 @@ mod tests {
         let a = BlockSource::real(bsz, 7);
         let b = BlockSource::real(bsz, 8);
         let res = run(q * q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
-            mmm_dns(ctx, &Compute::Native, q, &a, &b)
+            dns_eager(ctx, &Compute::Native, q, &a, &b)
         });
         let c = collect_c(&res.results, q, bsz);
         let want = matmul_seq(&a.assemble(q), &b.assemble(q));
@@ -200,7 +246,7 @@ mod tests {
         let a = BlockSource::real(4, 1);
         let b = BlockSource::real(4, 2);
         let res = run(8, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
-            mmm_dns(ctx, &Compute::Native, q, &a, &b)
+            dns_eager(ctx, &Compute::Native, q, &a, &b)
         });
         for (rank, out) in res.results.iter().enumerate() {
             let (i, j, k) = (rank / 4, (rank / 2) % 2, rank % 2);
@@ -223,7 +269,7 @@ mod tests {
             8,
             BackendProfile::openmpi_fixed(),
             CostParams::new(1e-5, 1e-9),
-            |ctx| mmm_dns(ctx, &Compute::Modeled { rate }, q, &a, &b),
+            |ctx| dns_eager(ctx, &Compute::Modeled { rate }, q, &a, &b),
         );
         // every rank did one 64³ multiply; reduction adds comm + adds
         let mult = 2.0 * 64f64.powi(3) / rate;
@@ -243,11 +289,11 @@ mod tests {
             let b = BlockSource::real(bsz, 400 + chunks as u64);
             let blocking =
                 run(q * q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
-                    mmm_dns(ctx, &Compute::Native, q, &a, &b)
+                    dns_eager(ctx, &Compute::Native, q, &a, &b)
                 });
             let pipelined =
                 run(q * q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
-                    mmm_dns_pipelined(ctx, &Compute::Native, q, &a, &b, chunks)
+                    dns_pipelined_eager(ctx, &Compute::Native, q, &a, &b, chunks)
                 });
             let cb = collect_c(&blocking.results, q, bsz);
             let cp = collect_c(&pipelined.results, q, bsz);
@@ -264,10 +310,10 @@ mod tests {
         let a = BlockSource::proxy(256, 1);
         let b = BlockSource::proxy(256, 2);
         let blocking = run(q * q * q, BackendProfile::openmpi_fixed(), machine, |ctx| {
-            mmm_dns(ctx, &comp, q, &a, &b)
+            dns_eager(ctx, &comp, q, &a, &b)
         });
         let pipelined = run(q * q * q, BackendProfile::openmpi_fixed(), machine, |ctx| {
-            mmm_dns_pipelined(ctx, &comp, q, &a, &b, 4)
+            dns_pipelined_eager(ctx, &comp, q, &a, &b, 4)
         });
         // identical proxy metadata…
         for (bl, pi) in blocking.results.iter().zip(&pipelined.results) {
@@ -290,12 +336,38 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_bit_identical_to_eager() {
+        let (q, bsz) = (2usize, 8usize);
+        let a = BlockSource::real(bsz, 81);
+        let b = BlockSource::real(bsz, 82);
+        let eager = run(q * q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            dns_eager(ctx, &Compute::Native, q, &a, &b)
+        });
+        let shim = run(q * q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+            mmm_dns(ctx, &Compute::Native, q, &a, &b)
+        });
+        assert_eq!(
+            collect_c(&eager.results, q, bsz).data,
+            collect_c(&shim.results, q, bsz).data
+        );
+        let shim_pipe =
+            run(q * q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
+                mmm_dns_pipelined(ctx, &Compute::Native, q, &a, &b, 3)
+            });
+        assert_eq!(
+            collect_c(&eager.results, q, bsz).data,
+            collect_c(&shim_pipe.results, q, bsz).data
+        );
+    }
+
+    #[test]
     fn dns_extra_world_ranks_idle() {
         let q = 2;
         let a = BlockSource::real(4, 3);
         let b = BlockSource::real(4, 4);
         let res = run(10, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
-            mmm_dns(ctx, &Compute::Native, q, &a, &b)
+            dns_eager(ctx, &Compute::Native, q, &a, &b)
         });
         assert!(res.results[8].c_block.is_none());
         assert!(res.results[9].c_block.is_none());

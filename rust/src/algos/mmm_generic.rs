@@ -130,7 +130,7 @@ mod tests {
             mmm_generic(ctx, &Compute::Native, q, &a, &b)
         });
         let dns = run(8, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
-            crate::algos::mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &b)
+            crate::algos::mmm_dns::dns_eager(ctx, &Compute::Native, q, &a, &b)
         });
         let cg = collect_c(&gen.results, q, bsz);
         let cd = crate::algos::mmm_dns::collect_c(&dns.results, q, bsz);

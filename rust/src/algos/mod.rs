@@ -18,6 +18,12 @@
 //!   framework abstractions: the "C/MPI version" of §6 used to measure
 //!   FooPar's abstraction overhead.
 //! * [`seq`] — sequential references (`T_S`) and correctness oracles.
+//!
+//! The consolidated entry points are [`matmul`] and [`apsp`] (re-exported
+//! from [`crate::plan`]): describe the product once, let the planner fuse
+//! elementwise chains, derive the split-phase overlap schedule, dry-run
+//! every candidate on the cost model, and interpret the cheapest.  The
+//! per-algorithm names above remain as deprecated shims for one release.
 
 pub mod dns_baseline;
 pub mod floyd_warshall;
@@ -26,3 +32,8 @@ pub mod mmm_generic;
 pub mod apsp_squaring;
 pub mod cannon;
 pub mod seq;
+
+pub use crate::plan::{
+    apsp, collect_c, collect_d, explain_apsp, explain_matmul, matmul, Explain, FwPlanOutput,
+    FwSpec, MatmulSpec, PlanMode, PlanOutput, Schedule,
+};

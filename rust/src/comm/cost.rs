@@ -61,7 +61,9 @@ impl Default for CostParams {
 }
 
 /// Rounds of a binomial tree (or dissemination schedule) over `n` ranks.
-fn ceil_log2(n: usize) -> usize {
+/// Crate-visible so the plan layer's dry-run pricer charges reductions
+/// and broadcasts with the exact round count the collectives use.
+pub(crate) fn ceil_log2(n: usize) -> usize {
     if n <= 1 {
         0
     } else {

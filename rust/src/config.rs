@@ -58,6 +58,14 @@ pub struct MachineConfig {
     /// `Runtime::builder().tune_profile(..)` / CLI `--profile` win over
     /// this key.
     pub tune_profile: Option<String>,
+    /// How the algorithm entry points schedule themselves on this
+    /// machine (config key `plan_mode`): `"auto"` dry-runs every
+    /// candidate schedule on the cost model and interprets the cheapest,
+    /// `"eager"` bypasses the planner for the hand-written defaults, and
+    /// a schedule name (`"cannon-pipelined"`, `"dns"`, …) forces that
+    /// schedule.  `None` defers to the builder, then `auto`.
+    /// `Runtime::builder().plan_mode(..)` wins over this key.
+    pub plan_mode: Option<crate::plan::PlanMode>,
 }
 
 impl MachineConfig {
@@ -79,6 +87,7 @@ impl MachineConfig {
             ranks_per_node: None,
             backends: vec!["openmpi-fixed".into()],
             tune_profile: None,
+            plan_mode: None,
         }
     }
 
@@ -101,6 +110,7 @@ impl MachineConfig {
                 "fastmpj".into(),
             ],
             tune_profile: None,
+            plan_mode: None,
         }
     }
 
@@ -117,6 +127,7 @@ impl MachineConfig {
             ranks_per_node: None,
             backends: vec!["shmem".into()],
             tune_profile: None,
+            plan_mode: None,
         }
     }
 
@@ -159,6 +170,18 @@ impl MachineConfig {
             tune_profile: kv
                 .get("tune_profile")
                 .map(|v| v.as_str().map(str::to_string))
+                .transpose()?,
+            plan_mode: kv
+                .get("plan_mode")
+                .map(|v| {
+                    let s = v.as_str()?;
+                    crate::plan::PlanMode::parse(s).ok_or_else(|| {
+                        anyhow!(
+                            "bad plan_mode '{s}' (expected auto, eager, or a schedule name: \
+                             cannon, cannon-pipelined, dns, dns-pipelined, generic, fw)"
+                        )
+                    })
+                })
                 .transpose()?,
         })
     }
@@ -327,6 +350,23 @@ mod tests {
             MachineConfig::from_kv(&kv).unwrap().tune_profile.as_deref(),
             Some("/tmp/tune-host.json")
         );
+    }
+
+    #[test]
+    fn plan_mode_key_parses_and_validates() {
+        use crate::plan::{PlanMode, Schedule};
+        let base = "name = \"t\"\nrate = 1e9\nts = 1e-6\ntw = 1e-10\nmax_cores = 8\n";
+        let kv = parse_kv(base).unwrap();
+        assert_eq!(MachineConfig::from_kv(&kv).unwrap().plan_mode, None);
+        let kv = parse_kv(&format!("{base}plan_mode = \"auto\"\n")).unwrap();
+        assert_eq!(MachineConfig::from_kv(&kv).unwrap().plan_mode, Some(PlanMode::Auto));
+        let kv = parse_kv(&format!("{base}plan_mode = \"cannon-pipelined\"\n")).unwrap();
+        assert_eq!(
+            MachineConfig::from_kv(&kv).unwrap().plan_mode,
+            Some(PlanMode::Forced(Schedule::CannonPipelined))
+        );
+        let kv = parse_kv(&format!("{base}plan_mode = \"bogus\"\n")).unwrap();
+        assert!(MachineConfig::from_kv(&kv).is_err());
     }
 
     #[test]

@@ -14,12 +14,13 @@
 
 use std::sync::Arc;
 
-use crate::algos::{dns_baseline, mmm_dns};
+use crate::algos::dns_baseline;
 use crate::analysis;
 use crate::comm::backend::{registry, Backend, BackendProfile};
 use crate::config::MachineConfig;
 use crate::matrix::block::BlockSource;
 use crate::metrics::render_table;
+use crate::plan::{self, MatmulSpec, PlanMode, Schedule};
 use crate::runtime::compute::Compute;
 use crate::spmd::Runtime;
 
@@ -77,7 +78,9 @@ pub fn run_point(
             if baseline {
                 dns_baseline::dns_baseline(ctx, &comp, q, &a, &bm).t_local
             } else {
-                mmm_dns::mmm_dns(ctx, &comp, q, &a, &bm).t_local
+                let spec = MatmulSpec::new(&comp, q, &a, &bm)
+                    .mode(PlanMode::Forced(Schedule::DnsBlocking));
+                plan::matmul(ctx, spec).t_local
             }
         })
         .expect("fig5 runtime");

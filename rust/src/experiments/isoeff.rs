@@ -11,12 +11,13 @@
 //!    *fall*, faster for the generic algorithm than for DNS (the whole
 //!    point of §4.3's grid abstraction).
 
-use crate::algos::{floyd_warshall, mmm_dns, mmm_generic};
+use crate::algos::{floyd_warshall, mmm_generic};
 use crate::analysis::{self, ModelParams};
 use crate::comm::backend::BackendProfile;
 use crate::config::MachineConfig;
 use crate::matrix::block::BlockSource;
 use crate::metrics::render_table;
+use crate::plan::{self, FwSpec, MatmulSpec, PlanMode, Schedule};
 use crate::runtime::compute::Compute;
 use crate::spmd::Runtime;
 
@@ -99,12 +100,16 @@ impl Algo {
             Algo::Dns => {
                 let a = BlockSource::proxy(n / q, 1);
                 let b = BlockSource::proxy(n / q, 2);
-                rt.run(|ctx| mmm_dns::mmm_dns(ctx, &comp, q, &a, &b).t_local)
+                rt.run(|ctx| {
+                    let spec = MatmulSpec::new(&comp, q, &a, &b)
+                        .mode(PlanMode::Forced(Schedule::DnsBlocking));
+                    plan::matmul(ctx, spec).t_local
+                })
                     .t_parallel
             }
             Algo::Fw => {
                 let src = floyd_warshall::FwSource::Proxy { n };
-                rt.run(|ctx| floyd_warshall::floyd_warshall_par(ctx, &comp, q, &src).t_local)
+                rt.run(|ctx| plan::apsp(ctx, FwSpec::new(&comp, q, &src)).t_local)
                     .t_parallel
             }
         }

@@ -2,11 +2,12 @@
 //! baseline, same machine, same workload — "the computation and
 //! communication overhead of using FooPar is neglectable".
 
-use crate::algos::{dns_baseline, mmm_dns};
+use crate::algos::dns_baseline;
 use crate::comm::backend::BackendProfile;
 use crate::config::MachineConfig;
 use crate::matrix::block::BlockSource;
 use crate::metrics::render_table;
+use crate::plan::{self, MatmulSpec, PlanMode, Schedule};
 use crate::runtime::compute::Compute;
 use crate::spmd::Runtime;
 
@@ -36,7 +37,11 @@ pub fn measure(machine: &MachineConfig, n: usize, p: usize) -> OverheadRow {
         .build()
         .expect("overhead runtime");
 
-    let foo = rt.run(|ctx| mmm_dns::mmm_dns(ctx, &comp, q, &a, &b).t_local);
+    let foo = rt.run(|ctx| {
+        let spec =
+            MatmulSpec::new(&comp, q, &a, &b).mode(PlanMode::Forced(Schedule::DnsBlocking));
+        plan::matmul(ctx, spec).t_local
+    });
     let base = rt.run(|ctx| dns_baseline::dns_baseline(ctx, &comp, q, &a, &b).t_local);
 
     let foo_msgs: u64 = foo.metrics.iter().map(|m| m.msgs_sent).sum();

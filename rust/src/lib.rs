@@ -37,6 +37,7 @@ pub mod data;
 pub mod graph;
 pub mod matrix;
 pub mod metrics;
+pub mod plan;
 pub mod runtime;
 pub mod serve;
 pub mod spmd;

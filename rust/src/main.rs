@@ -5,8 +5,9 @@
 //! ```text
 //! repro selftest                        end-to-end real-mode sanity (PJRT + algos)
 //! repro peak   [--iters N]              single-core empirical peak (§6 calibration)
-//! repro mmm    --algo dns|generic|baseline --n N --p P [--mode real|modeled] [--machine M]
+//! repro mmm    --p P [--plan | --algo SCHEDULE] --n N [--mode real|modeled] [--machine M]
 //! repro apsp   --n N --p P [--algo fw|squaring] [--mode real|modeled]
+//! repro plan   --explain [--what matmul|apsp] [--p P] [--n N]   planner candidate table
 //! repro table1 [--machine M]            Table 1: op runtimes vs formulas
 //! repro fig5   --machine carver|horseshoe6   Fig. 5 efficiency curves
 //! repro isoeff [--algo generic|dns|fw]  isoefficiency verification
@@ -15,7 +16,10 @@
 
 use anyhow::{bail, Result};
 
-use foopar::algos::{apsp_squaring, cannon, dns_baseline, floyd_warshall, mmm_dns, mmm_generic, seq};
+use foopar::algos::{
+    apsp, apsp_squaring, collect_c, collect_d, dns_baseline, explain_apsp, explain_matmul,
+    floyd_warshall, matmul, mmm_generic, seq, FwSpec, MatmulSpec, PlanMode, Schedule,
+};
 use foopar::analysis;
 use foopar::cli::Args;
 use foopar::comm::backend::registry;
@@ -61,6 +65,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("tune") => cmd_tune(args),
         Some("mmm") => cmd_mmm(args),
         Some("apsp") => cmd_apsp(args),
+        Some("plan") => cmd_plan(args),
         Some("table1") => cmd_table1(args),
         Some("fig5") => cmd_fig5(args),
         Some("isoeff") => cmd_isoeff(args),
@@ -85,12 +90,21 @@ repro — FooPar reproduction (rust + JAX/Pallas AOT via PJRT)
                                     the native path and ping-pong the intra/
                                     inter-node link costs; writes
                                     ~/.foopar/tune-<host>.json (or --out)
-  mmm      --p P [--n N] [--algo dns|generic|baseline] [--mode real|modeled] [--machine M]
+  mmm      --p P [--n N] [--plan | --algo dns|dns-pipelined|cannon|cannon-pipelined|
+           generic|baseline] [--mode real|modeled] [--machine M]
            [--transport local|tcp-loopback|hybrid] [--ranks-per-node N] [--backend B]
            [--threads T] [--trace OUT.json]
+                                    --plan: cost-model-driven schedule choice
+                                    (--algo forces one schedule through the
+                                    same planner; baseline bypasses it)
   apsp     --p P [--n N] [--algo fw|squaring] [--mode real|modeled] [--threads T]
            [--transport local|tcp-loopback|hybrid] [--ranks-per-node N] [--backend B]
            [--trace OUT.json]
+  plan     --explain [--what matmul|apsp] [--p P] [--n N] [--machine M]
+           [--transport local|tcp-loopback|hybrid] [--ranks-per-node N] [--backend B]
+                                    dry-run every candidate schedule on the
+                                    cost model and print the table; nothing
+                                    executes, no data moves
   table1   [--machine M]            Table 1: measured op runtimes vs formulas
   fig5     [--machine carver|horseshoe6]   Fig. 5 efficiency curves
   isoeff   [--algo generic|dns|fw] [--target E]   isoefficiency verification
@@ -188,14 +202,15 @@ fn selftest() -> Result<()> {
         Err(e) => println!("  skipped (no artifacts): {e:#}"),
     }
 
-    println!("== selftest: DNS MMM (real, q=2) ==");
+    println!("== selftest: planned MMM (real, q=2) ==");
     let a = BlockSource::real(16, 11);
     let b = BlockSource::real(16, 22);
     let res = Runtime::builder()
         .world(8)
         .machine("local")
-        .run(|ctx| mmm_dns::mmm_dns(ctx, &Compute::Native, 2, &a, &b))?;
-    let c = mmm_dns::collect_c(&res.results, 2, 16);
+        .run(|ctx| matmul(ctx, MatmulSpec::new(&Compute::Native, 2, &a, &b)))?;
+    println!("  planner chose: {}", res.results[0].schedule.name());
+    let c = collect_c(&res.results, 2, 16);
     let want = seq::matmul_seq(&a.assemble(2), &b.assemble(2));
     let diff = c.max_abs_diff(&want);
     println!("  parallel vs sequential: max|Δ| = {diff:.2e}  OK");
@@ -206,8 +221,8 @@ fn selftest() -> Result<()> {
     let res = Runtime::builder()
         .world(4)
         .machine("local")
-        .run(|ctx| floyd_warshall::floyd_warshall_par(ctx, &Compute::Native, 2, &src))?;
-    let d = floyd_warshall::collect_d(&res.results, 2, 8);
+        .run(|ctx| apsp(ctx, FwSpec::new(&Compute::Native, 2, &src)))?;
+    let d = collect_d(&res.results, 2, 8);
     let g = Graph::random(16, 0.3, 3);
     let want = floyd_warshall_seq(&g);
     let diff = d.max_abs_diff(&want);
@@ -295,24 +310,43 @@ fn cmd_tune(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_mmm(args: &Args) -> Result<()> {
-    let machine = MachineConfig::resolve(args.get_str("machine", "local"))?;
-    let algo = args.get_str("algo", "dns");
-    let p = args.get_usize("p", 8)?;
-    // cannon runs on a q² grid; the others on q³
-    let q = if algo == "cannon" {
-        let q = (p as f64).sqrt().round() as usize;
-        if q * q != p {
+/// Matrix decomposition edge q for a `--p P` rank budget.  Cannon runs
+/// on q² ranks, DNS/generic on q³; with `--plan` the planner needs one
+/// q up front, so prefer the cube root (every candidate feasible) and
+/// fall back to the square root (Cannon-only candidates).
+fn mmm_grid_edge(p: usize, algo: &str, plan_auto: bool) -> Result<usize> {
+    let sq = (p as f64).sqrt().round() as usize;
+    let cb = (p as f64).cbrt().round() as usize;
+    let is_square = sq * sq == p;
+    let is_cube = cb * cb * cb == p;
+    if plan_auto {
+        if is_cube {
+            return Ok(cb);
+        }
+        if is_square {
+            return Ok(sq);
+        }
+        bail!("--plan needs --p to be a perfect cube or square, got {p}");
+    }
+    if algo.starts_with("cannon") {
+        if !is_square {
             bail!("--p must be a square for cannon (4, 16, 64, 256), got {p}");
         }
-        q
+        Ok(sq)
     } else {
-        let q = (p as f64).cbrt().round() as usize;
-        if q * q * q != p {
+        if !is_cube {
             bail!("--p must be a cube (8, 27, 64, 125, 216, 343, 512), got {p}");
         }
-        q
-    };
+        Ok(cb)
+    }
+}
+
+fn cmd_mmm(args: &Args) -> Result<()> {
+    let machine = MachineConfig::resolve(args.get_str("machine", "local"))?;
+    let plan_auto = args.has("plan");
+    let algo = args.get_str("algo", "dns");
+    let p = args.get_usize("p", 8)?;
+    let q = mmm_grid_edge(p, algo, plan_auto)?;
     let mode = args.get_str("mode", "modeled");
     let default_n = if mode == "modeled" { 40_320 } else { 16 * q };
     let n = args.get_usize("n", default_n)?;
@@ -351,39 +385,32 @@ fn cmd_mmm(args: &Args) -> Result<()> {
     }
     let rt = builder.build()?;
 
-    let (t_parallel, wall, label) = match algo {
-        "dns" => {
-            let r = rt.run(|ctx| mmm_dns::mmm_dns(ctx, &comp, q, &a, &b));
-            if !proxy {
-                let c = mmm_dns::collect_c(&r.results, q, n / q);
-                let want = seq::matmul_seq(&a.assemble(q), &b.assemble(q));
-                println!("verified: max|Δ| = {:.2e}", c.max_abs_diff(&want));
+    let (t_parallel, wall, label) = if !plan_auto && algo == "baseline" {
+        let r = rt.run(|ctx| dns_baseline::dns_baseline(ctx, &comp, q, &a, &b));
+        (r.t_parallel, r.wall, "c-baseline".to_string())
+    } else {
+        let mode = if plan_auto {
+            PlanMode::Auto
+        } else {
+            match Schedule::parse(algo) {
+                Some(s) if s != Schedule::FwBlocking => PlanMode::Forced(s),
+                _ => bail!(
+                    "--algo must be dns|dns-pipelined|cannon|cannon-pipelined|generic|baseline, \
+                     got '{algo}'"
+                ),
             }
-            (r.t_parallel, r.wall, "foopar-dns")
+        };
+        let r = rt.run(|ctx| matmul(ctx, MatmulSpec::new(&comp, q, &a, &b).mode(mode)));
+        let schedule = r.results[0].schedule;
+        if !proxy {
+            let c = collect_c(&r.results, q, n / q);
+            let want = seq::matmul_seq(&a.assemble(q), &b.assemble(q));
+            println!("verified: max|Δ| = {:.2e}", c.max_abs_diff(&want));
         }
-        "generic" => {
-            let r = rt.run(|ctx| mmm_generic::mmm_generic(ctx, &comp, q, &a, &b));
-            if !proxy {
-                let c = mmm_generic::collect_c(&r.results, q, n / q);
-                let want = seq::matmul_seq(&a.assemble(q), &b.assemble(q));
-                println!("verified: max|Δ| = {:.2e}", c.max_abs_diff(&want));
-            }
-            (r.t_parallel, r.wall, "foopar-generic")
+        if plan_auto {
+            println!("planner chose: {}", schedule.name());
         }
-        "baseline" => {
-            let r = rt.run(|ctx| dns_baseline::dns_baseline(ctx, &comp, q, &a, &b));
-            (r.t_parallel, r.wall, "c-baseline")
-        }
-        "cannon" => {
-            let r = rt.run(|ctx| cannon::mmm_cannon(ctx, &comp, q, &a, &b));
-            if !proxy {
-                let c = cannon::collect_c(&r.results, q, n / q);
-                let want = seq::matmul_seq(&a.assemble(q), &b.assemble(q));
-                println!("verified: max|Δ| = {:.2e}", c.max_abs_diff(&want));
-            }
-            (r.t_parallel, r.wall, "foopar-cannon")
-        }
-        other => bail!("--algo must be dns|generic|baseline|cannon, got '{other}'"),
+        (r.t_parallel, r.wall, format!("foopar-{}", schedule.name()))
     };
 
     let ts = analysis::ts_n3(n, &fig5::model(&machine));
@@ -439,9 +466,9 @@ fn cmd_apsp(args: &Args) -> Result<()> {
 
     let t_parallel = match algo {
         "fw" => {
-            let r = rt.run(|ctx| floyd_warshall::floyd_warshall_par(ctx, &comp, q, &src));
+            let r = rt.run(|ctx| apsp(ctx, FwSpec::new(&comp, q, &src)));
             if let floyd_warshall::FwSource::Real { n, density, seed } = src {
-                let d = floyd_warshall::collect_d(&r.results, q, n / q);
+                let d = collect_d(&r.results, q, n / q);
                 let want = floyd_warshall_seq(&Graph::random(n, density, seed));
                 println!("verified: max|Δ| = {:.2e}", d.max_abs_diff(&want));
             }
@@ -464,6 +491,65 @@ fn cmd_apsp(args: &Args) -> Result<()> {
         "apsp-{algo}: n={n} p={p} mode={mode}  T_P={t_parallel:.4}s  E={:.1}%",
         analysis::efficiency(ts, t_parallel, p) * 100.0
     );
+    Ok(())
+}
+
+/// `repro plan --explain`: print the planner's candidate table — every
+/// feasible schedule with its dry-run modeled `T_P`, the cheapest
+/// marked — without executing anything.
+fn cmd_plan(args: &Args) -> Result<()> {
+    if !args.has("explain") {
+        bail!("usage: repro plan --explain [--what matmul|apsp] [--p P] [--n N] [--machine M]");
+    }
+    let machine = MachineConfig::resolve(args.get_str("machine", "local"))?;
+    let what = args.get_str("what", "matmul");
+    let p = args.get_usize("p", 8)?;
+    let comp = compute_for(args.get_str("mode", "modeled"), &machine)?;
+    let transport = args.get_str("transport", "local");
+    if transport == "tcp" {
+        bail!("repro plan supports --transport local|tcp-loopback|hybrid");
+    }
+    let mut builder = Runtime::builder()
+        .world(p)
+        .backend(args.get_str("backend", "openmpi-fixed"))
+        .transport(transport)
+        .machine_config(&machine);
+    if let Some(rpn) = opt_ranks_per_node(args)? {
+        builder = builder.ranks_per_node(rpn);
+    }
+    let rt = builder.build()?;
+
+    let rendered = match what {
+        "matmul" => {
+            let q = mmm_grid_edge(p, "", true)?;
+            let n = args.get_usize("n", 40_320)?;
+            if n % q != 0 {
+                bail!("--n must be divisible by q={q}");
+            }
+            let a = BlockSource { b: n / q, seed: 1, proxy: true };
+            let b = BlockSource { b: n / q, seed: 2, proxy: true };
+            let rate = machine.rate;
+            let r = rt.run(|ctx| {
+                explain_matmul(ctx, MatmulSpec::new(&comp, q, &a, &b).rate_hint(rate)).render()
+            });
+            r.results.into_iter().next().expect("world is non-empty")
+        }
+        "apsp" => {
+            let q = (p as f64).sqrt().round() as usize;
+            if q * q != p {
+                bail!("--p must be a square for apsp (4, 16, 64, 256), got {p}");
+            }
+            let n = args.get_usize("n", 8192)?;
+            if n % q != 0 {
+                bail!("--n must be divisible by q={q}");
+            }
+            let src = floyd_warshall::FwSource::Proxy { n };
+            let r = rt.run(|ctx| explain_apsp(ctx, FwSpec::new(&comp, q, &src)).render());
+            r.results.into_iter().next().expect("world is non-empty")
+        }
+        other => bail!("--what must be matmul|apsp, got '{other}'"),
+    };
+    print!("{rendered}");
     Ok(())
 }
 
@@ -651,6 +737,7 @@ fn cmd_submit(args: &Args) -> Result<()> {
                 }
                 if let Some(row) = snap.jobs.iter().find(|j| j.id == *id) {
                     w.key("status").str_val(&row.status);
+                    w.key("schedule").str_val(&row.schedule);
                     w.key("gflops").num(row.gflops);
                     w.key("queue_wait_secs").num(if row.queue_wait_secs < 0.0 {
                         f64::NAN // → null
@@ -686,17 +773,17 @@ fn verify_against_oracle(spec: &JobSpec, got: &JobOutput) -> Result<()> {
             let res = Runtime::builder().world(q * q).build()?.run(move |ctx| {
                 let a = BlockSource::real(b, sa);
                 let bb = BlockSource::real(b, sb);
-                cannon::mmm_cannon(ctx, &Compute::Native, q, &a, &bb)
+                matmul(ctx, MatmulSpec::new(&Compute::Native, q, &a, &bb))
             });
-            cannon::collect_c(&res.results, q, b)
+            collect_c(&res.results, q, b)
         }
         JobSpec::FloydWarshall { q, n, density, seed } => {
             let (q, n, density, seed) = (*q, *n, *density, *seed);
             let res = Runtime::builder().world(q * q).build()?.run(move |ctx| {
                 let src = floyd_warshall::FwSource::Real { n, density, seed };
-                floyd_warshall::floyd_warshall_par(ctx, &Compute::Native, q, &src)
+                apsp(ctx, FwSpec::new(&Compute::Native, q, &src))
             });
-            floyd_warshall::collect_d(&res.results, q, n / q)
+            collect_d(&res.results, q, n / q)
         }
         other => bail!("--verify supports matmul and fw, not {}", other.kind()),
     };

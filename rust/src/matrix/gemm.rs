@@ -497,6 +497,80 @@ fn ew_binary_mt(
     Mat { rows: a.rows, cols: a.cols, data: out.into() }
 }
 
+/// Elementwise ⊕ selector for the fusible block combines: dense `+`
+/// (the reduceD accumulate) and the tropical `min` (the APSP combine).
+/// The plan layer's fuse pass folds chains of these into one
+/// [`ew_chain_mt_with`] pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EwKind {
+    Add,
+    Min,
+}
+
+impl EwKind {
+    #[inline(always)]
+    pub fn apply(self, x: f32, y: f32) -> f32 {
+        match self {
+            EwKind::Add => x + y,
+            EwKind::Min => x.min(y),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EwKind::Add => "add",
+            EwKind::Min => "min",
+        }
+    }
+}
+
+/// Fused elementwise chain: `out[i] = fold(base[i], ops, |v, (⊕, m)| v ⊕ m[i])`
+/// in **one** pass over memory.  The per-element fold order is exactly
+/// the order of `ops`, so the result is bit-identical to applying the
+/// ops as separate [`ew_binary_mt`] passes — fusion only removes the
+/// intermediate materializations, not reassociates.  Chunking follows
+/// the same bandwidth threshold and disjoint-window discipline, so it
+/// is also bit-identical for every thread count.
+#[allow(clippy::uninit_vec)] // chunks below write every slot before set_len
+pub fn ew_chain_mt_with(base: &Mat, ops: &[(EwKind, &Mat)], threads: usize, p: &BlockParams) -> Mat {
+    for (_, m) in ops {
+        assert_eq!((m.rows, m.cols), (base.rows, base.cols), "fused chain shape mismatch");
+    }
+    let mut sp = trace::span("elementwise", trace::Category::Kernel);
+    if sp.is_active() {
+        sp.arg("elems", (base.rows * base.cols) as f64);
+        sp.arg("fused", ops.len() as f64);
+    }
+    let len = base.data.len();
+    let fold = |i: usize| {
+        let mut v = base.data[i];
+        for (op, m) in ops {
+            v = op.apply(v, m.data[i]);
+        }
+        v
+    };
+    if ew_threads(len, threads, p.ew_par_threshold) <= 1 {
+        let data = (0..len).map(fold).collect();
+        return Mat { rows: base.rows, cols: base.cols, data };
+    }
+    let mut out: Vec<f32> = Vec::with_capacity(len);
+    let nchunks = len.div_ceil(EW_CHUNK);
+    {
+        // SAFETY: capacity `len` was just reserved; chunks below cover
+        // [0, len) exactly once.
+        let dst = unsafe { par::DisjointOut::from_raw(out.as_mut_ptr(), len) };
+        par::run_chunks(threads, nchunks, &|ci| {
+            let lo = ci * EW_CHUNK;
+            let hi = len.min(lo + EW_CHUNK);
+            // SAFETY: disjoint contiguous windows, raw writes only.
+            unsafe { dst.write_window(lo, hi - lo, |i| fold(lo + i)) };
+        });
+    }
+    // SAFETY: all `len` elements were initialized by the chunks above.
+    unsafe { out.set_len(len) };
+    Mat { rows: base.rows, cols: base.cols, data: out.into() }
+}
+
 /// `A + B` elementwise (the reduceD combine), single-threaded.
 pub fn add(a: &Mat, b: &Mat) -> Mat {
     add_mt(a, b, 1)

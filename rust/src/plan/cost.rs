@@ -1,0 +1,281 @@
+//! Dry-run pricing: replay a plan's order on the virtual-clock cost
+//! model with **zero data movement**, yielding the modeled `T_P` of
+//! each candidate schedule.
+//!
+//! The walk uses the same execution order and the same FIFO wait rule
+//! as the interpreter ([`crate::plan::exec`]) and the same cost
+//! formulas the runtime charges — [`CostParams::msg`] per hop via the
+//! topology-aware [`HierCost`] legs, [`ceil_log2`] rounds for the tree
+//! collectives, and the [`Compute::Modeled`] kernel formulas
+//! (GEMM flops at [`gemm_efficiency`], one element-touch per
+//! elementwise flop).  Split comm nodes run on a forked timeline and
+//! merge at their wait with `clock = max(main, fork)` — the overlap
+//! rule of [`crate::comm::nb`].  The result is a deterministic
+//! function of (graph, topology, link parameters, block edge, rate):
+//! every rank computes the same prices without communicating, so the
+//! planner's argmin choice is SPMD-consistent by construction.
+//!
+//! Prices are *estimates* for schedule ranking — they intentionally
+//! price every rank at the worst link of each transfer (the critical
+//! path) rather than simulating per-rank clocks.
+
+use crate::comm::cost::{ceil_log2, HierCost};
+use crate::comm::transport::Topology;
+use crate::runtime::compute::gemm_efficiency;
+
+use super::ir::{NodeId, Op, PlanGraph};
+
+/// Everything the pricer may look at — all SPMD-consistent inputs.
+pub(crate) struct PriceCtx<'t> {
+    pub topo: &'t Topology,
+    pub link: HierCost,
+    /// Modeled per-core flop rate of the compute backend.
+    pub rate: f64,
+    /// Block edge (the algorithms move square b×b blocks; panel nodes
+    /// price their column share).
+    pub block: usize,
+    /// Grid shape (must match the plan's `dims`).
+    pub dims: Vec<usize>,
+    /// World rank of each grid process, row-major.
+    pub ranks: Vec<usize>,
+}
+
+impl PriceCtx<'_> {
+    fn rank_of(&self, coord: &[usize]) -> usize {
+        let mut r = 0usize;
+        for (c, d) in coord.iter().zip(&self.dims) {
+            r = r * d + c;
+        }
+        self.ranks[r]
+    }
+
+    /// Iterate every grid coordinate (row-major).
+    fn coords(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![vec![]];
+        for &d in &self.dims {
+            out = out
+                .into_iter()
+                .flat_map(|c| {
+                    (0..d).map(move |v| {
+                        let mut c2 = c.clone();
+                        c2.push(v);
+                        c2
+                    })
+                })
+                .collect();
+        }
+        out
+    }
+
+    fn msg(&self, r1: usize, r2: usize, bytes: usize) -> f64 {
+        self.link.msg(self.topo.same_node(r1, r2), bytes)
+    }
+
+    /// Worst-case single-hop cost of a cyclic shift along `dim`: the
+    /// slowest (owner → target) link over the whole grid.
+    fn shift_cost(&self, dim: usize, delta: isize, bytes: usize) -> f64 {
+        let len = self.dims[dim] as isize;
+        if len <= 1 {
+            return 0.0;
+        }
+        let mut worst: f64 = 0.0;
+        for c in self.coords() {
+            let mut t = c.clone();
+            t[dim] = ((c[dim] as isize + delta).rem_euclid(len)) as usize;
+            worst = worst.max(self.msg(self.rank_of(&c), self.rank_of(&t), bytes));
+        }
+        worst
+    }
+
+    /// Binomial-tree reduce along `dim`: `⌈log₂ len⌉` rounds, each a
+    /// worst-line message plus one elementwise combine of the payload.
+    fn reduce_cost(&self, dim: usize, bytes: usize, elems: usize) -> f64 {
+        let len = self.dims[dim];
+        let rounds = ceil_log2(len) as f64;
+        rounds * (self.worst_line_link(dim, bytes) + elems as f64 / self.rate)
+    }
+
+    /// Binomial-tree broadcast along `dim` of a `bytes` payload.
+    fn bcast_cost(&self, dim: usize, bytes: usize) -> f64 {
+        ceil_log2(self.dims[dim]) as f64 * self.worst_line_link(dim, bytes)
+    }
+
+    /// Slowest pairwise link within any grid line along `dim`.
+    fn worst_line_link(&self, dim: usize, bytes: usize) -> f64 {
+        let len = self.dims[dim];
+        if len <= 1 {
+            return 0.0;
+        }
+        let mut worst: f64 = 0.0;
+        for c in self.coords() {
+            if c[dim] != 0 {
+                continue; // one representative per line
+            }
+            let line: Vec<usize> = (0..len)
+                .map(|v| {
+                    let mut t = c.clone();
+                    t[dim] = v;
+                    self.rank_of(&t)
+                })
+                .collect();
+            for i in 0..len {
+                for j in (i + 1)..len {
+                    worst = worst.max(self.msg(line[i], line[j], bytes));
+                }
+            }
+        }
+        worst
+    }
+}
+
+const F32_BYTES: usize = 4;
+
+/// Modeled wall-clock of one plan replay (the candidate's `T_P`).
+pub(crate) fn price(g: &PlanGraph, pc: &PriceCtx) -> f64 {
+    let b = pc.block;
+    let block_bytes = b * b * F32_BYTES;
+    let block_elems = b * b;
+    let eff = gemm_efficiency(b);
+
+    let mut now = 0.0f64;
+    // Split comm nodes in flight: (id, stage, ready_time).
+    let mut pending: Vec<(NodeId, usize, f64)> = Vec::new();
+
+    for &id in &g.order {
+        let node = &g.nodes[id];
+        let inputs = node.op.inputs();
+
+        // Same FIFO wait rule as the interpreter.
+        let mut last = None;
+        for (i, e) in pending.iter().enumerate() {
+            if inputs.contains(&e.0) || (node.op.is_comm() && e.1 < node.stage) {
+                last = Some(i);
+            }
+        }
+        if let Some(i) = last {
+            for (_, _, ready) in pending.drain(..=i) {
+                now = now.max(ready);
+            }
+        }
+
+        // Cost of this node on the main (compute) or forked (split
+        // comm) timeline.
+        let cost = match &node.op {
+            Op::Load(_) | Op::Hstack { .. } => 0.0,
+            Op::Matmul { .. } => 2.0 * (b as f64).powi(3) / (pc.rate * eff),
+            Op::MatmulPanel { part, parts, .. } => {
+                let (lo, hi) = (part * b / parts, (part + 1) * b / parts);
+                2.0 * (b * b * (hi - lo)) as f64 / (pc.rate * eff)
+            }
+            Op::Ew { .. } => block_elems as f64 / pc.rate,
+            Op::FusedEw { ops, .. } => (block_elems * ops.len()) as f64 / pc.rate,
+            Op::FwUpdate { .. } => 2.0 * block_elems as f64 / pc.rate,
+            Op::Shift { dim, delta, .. } => pc.shift_cost(*dim, *delta, block_bytes),
+            Op::Reduce { dim, .. } => {
+                // A reduce of a panel moves the panel's bytes; infer the
+                // payload from the producing node.
+                let (bytes, elems) = match inputs
+                    .first()
+                    .map(|&i| &g.nodes[i].op)
+                {
+                    Some(Op::MatmulPanel { part, parts, .. }) => {
+                        let (lo, hi) = (part * b / parts, (part + 1) * b / parts);
+                        (b * (hi - lo) * F32_BYTES, b * (hi - lo))
+                    }
+                    _ => (block_bytes, block_elems),
+                };
+                pc.reduce_cost(*dim, bytes, elems)
+            }
+            Op::PivotRow { .. } | Op::PivotCol { .. } => {
+                // Extract the b-element segment, then broadcast it along
+                // the line (dim 0 for rows, 1 for cols).
+                let dim = matches!(node.op, Op::PivotCol { .. }) as usize;
+                b as f64 / pc.rate + pc.bcast_cost(dim, b * F32_BYTES)
+            }
+        };
+
+        if node.split && node.op.is_comm() {
+            pending.push((id, node.stage, now + cost));
+        } else {
+            now += cost;
+        }
+    }
+
+    for (_, _, ready) in pending {
+        now = now.max(ready);
+    }
+    now
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::cost::CostParams;
+    use crate::plan::ir::{build_cannon, build_dns};
+    use crate::plan::passes::overlap;
+
+    fn pc(topo: &Topology, link: HierCost, dims: Vec<usize>) -> PriceCtx<'_> {
+        let n: usize = dims.iter().product();
+        PriceCtx {
+            topo,
+            link,
+            rate: 1e10,
+            block: 256,
+            dims,
+            ranks: (0..n).collect(),
+        }
+    }
+
+    #[test]
+    fn pipelined_cannon_priced_below_blocking_on_slow_net() {
+        let topo = Topology::flat(16);
+        let link = HierCost::flat(CostParams::new(5e-5, 1e-8));
+        let blocking = build_cannon(4);
+        let mut pipelined = build_cannon(4);
+        assert!(overlap(&mut pipelined) > 0);
+        let ctx = pc(&topo, link, vec![4, 4]);
+        let tb = price(&blocking, &ctx);
+        let tp = price(&pipelined, &ctx);
+        assert!(tp < tb, "pipelined {tp} !< blocking {tb}");
+    }
+
+    #[test]
+    fn free_network_ties_break_to_blocking() {
+        // With zero-cost comm the overlapped schedule saves nothing; the
+        // prices tie, so an argmin with strictly-lower wins keeps the
+        // simpler blocking schedule.
+        let topo = Topology::flat(16);
+        let link = HierCost::flat(CostParams::free());
+        let blocking = build_cannon(4);
+        let mut pipelined = build_cannon(4);
+        overlap(&mut pipelined);
+        let ctx = pc(&topo, link, vec![4, 4]);
+        assert_eq!(price(&blocking, &ctx), price(&pipelined, &ctx));
+    }
+
+    #[test]
+    fn chunked_dns_price_hides_most_reduce_time() {
+        let topo = Topology::flat(8);
+        let link = HierCost::flat(CostParams::new(5e-5, 1e-8));
+        let blocking = build_dns(2, 1);
+        let mut chunked = build_dns(2, 4);
+        assert!(overlap(&mut chunked) > 0);
+        let ctx = pc(&topo, link, vec![2, 2, 2]);
+        let tb = price(&blocking, &ctx);
+        let tc = price(&chunked, &ctx);
+        assert!(tc < tb, "chunked {tc} !< blocking {tb}");
+    }
+
+    #[test]
+    fn hierarchical_links_price_cross_node_shifts_higher() {
+        // 2x2 grid on one node vs split across two nodes: the same plan
+        // must price higher when shifts cross the node boundary.
+        let one_node = Topology::flat(4);
+        let two_nodes = Topology::uniform(4, 2);
+        let link = HierCost::hierarchical(CostParams::qdr_infiniband());
+        let g = build_cannon(2);
+        let t_one = price(&g, &pc(&one_node, link, vec![2, 2]));
+        let t_two = price(&g, &pc(&two_nodes, link, vec![2, 2]));
+        assert!(t_two > t_one, "cross-node {t_two} !> same-node {t_one}");
+    }
+}

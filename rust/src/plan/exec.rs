@@ -1,0 +1,456 @@
+//! The plan interpreter: replays a [`PlanGraph`]'s order against a live
+//! grid, issuing exactly the `DistSeq` operations the eager algorithms
+//! perform.
+//!
+//! **Split-phase replay.**  Comm nodes the overlap pass marked `split`
+//! are issued with the `*_start` forms and pushed on a FIFO of pending
+//! handles.  Before executing any node the interpreter drains the
+//! pending prefix up to the last entry that is either (a) an input of
+//! the node, or (b) — when the node is itself a comm op — an entry from
+//! an earlier stage (the single-outstanding-window discipline of the
+//! hand-written pipelined variants: a new transfer never overtakes the
+//! previous stage's).  Draining is strictly FIFO, so waits happen in
+//! start order — the SPMD handle discipline [`crate::data::dseq`]
+//! requires.  On the overlap-aware clock this replay is step-for-step
+//! identical to the eager pipelined schedules (a comm the pass left
+//! blocking costs exactly what a degenerate start-then-wait pair
+//! costs), and values are bit-identical because every kernel sees the
+//! same operands in the same fold order.
+
+use crate::algos::floyd_warshall::FwSource;
+use crate::data::grid::GridN;
+use crate::matrix::block::{Block, BlockSource};
+use crate::runtime::compute::{Compute, Seg};
+use crate::spmd::Ctx;
+
+use super::ir::{NodeId, Op, PlanGraph, SourceMap};
+
+/// Where `Load` nodes find their blocks — the spec inputs of the two
+/// plan families.
+pub(crate) enum Sources<'s> {
+    /// Matrix product inputs: `q × q` blocks of A and B.
+    Mm { a: &'s BlockSource, b: &'s BlockSource, q: usize },
+    /// Floyd–Warshall distance matrix, block edge `b`.
+    Fw { src: &'s FwSource, b: usize },
+}
+
+impl Sources<'_> {
+    fn load(&self, map: SourceMap, c: &[usize]) -> Block {
+        match (self, map) {
+            (Sources::Mm { a, q, .. }, SourceMap::CannonA) => a.block(c[0], (c[1] + c[0]) % q),
+            (Sources::Mm { b, q, .. }, SourceMap::CannonB) => b.block((c[0] + c[1]) % q, c[1]),
+            (Sources::Mm { a, .. }, SourceMap::DnsA) => a.block(c[0], c[2]),
+            (Sources::Mm { b, .. }, SourceMap::DnsB) => b.block(c[2], c[1]),
+            (Sources::Mm { a, .. }, SourceMap::DirectA) => a.block(c[0], c[1]),
+            (Sources::Mm { b, .. }, SourceMap::DirectB) => b.block(c[0], c[1]),
+            (Sources::Fw { src, b }, SourceMap::Fw) => src.block(c[0], c[1], *b),
+            (_, map) => panic!("source map {map:?} does not match the plan's sources"),
+        }
+    }
+}
+
+/// A node's value on this rank: `None` on non-members (the SPMD no-op
+/// convention), a block or a pivot segment on members.
+#[derive(Clone)]
+enum Val {
+    Blk(Option<Block>),
+    Seg(Option<Seg>),
+}
+
+impl Val {
+    fn blk(self) -> Option<Block> {
+        match self {
+            Val::Blk(b) => b,
+            Val::Seg(_) => panic!("expected a block value, found a segment"),
+        }
+    }
+
+    fn seg(self) -> Option<Seg> {
+        match self {
+            Val::Seg(s) => s,
+            Val::Blk(_) => panic!("expected a segment value, found a block"),
+        }
+    }
+}
+
+/// Per-node value store with remaining-use counts: a shared value is
+/// cloned (an Arc bump — uncharged, exactly the eager pipelined code's
+/// explicit `.clone()` before a shift) until its last consumer takes it.
+struct Env {
+    vals: Vec<Option<Val>>,
+    uses: Vec<usize>,
+}
+
+impl Env {
+    fn put(&mut self, id: NodeId, v: Val) {
+        self.vals[id] = Some(v);
+    }
+
+    fn take(&mut self, id: NodeId) -> Val {
+        let n = self.uses[id];
+        assert!(n > 0, "plan node {id} consumed more times than recorded");
+        self.uses[id] = n - 1;
+        if n == 1 {
+            self.vals[id].take().expect("plan value consumed before it was produced")
+        } else {
+            self.vals[id].clone().expect("plan value consumed before it was produced")
+        }
+    }
+
+    fn take_blk(&mut self, id: NodeId) -> Option<Block> {
+        self.take(id).blk()
+    }
+}
+
+/// An in-flight split-phase comm node.
+enum PendingOp<'a, 'f> {
+    Shift(crate::data::dseq::PendingSeq<'a, Block>),
+    Reduce(crate::data::dseq::PendingReduce<'a, 'f, Block>),
+    Apply(crate::data::dseq::PendingApply<'a, Seg>),
+}
+
+struct PendingEntry<'a, 'f> {
+    id: NodeId,
+    stage: usize,
+    op: PendingOp<'a, 'f>,
+}
+
+fn drain_through(pending: &mut Vec<PendingEntry>, upto: usize, env: &mut Env) {
+    for e in pending.drain(..=upto) {
+        let val = match e.op {
+            PendingOp::Shift(h) => Val::Blk(h.wait().into_local()),
+            PendingOp::Reduce(h) => Val::Blk(h.wait()),
+            PendingOp::Apply(h) => Val::Seg(h.wait()),
+        };
+        env.put(e.id, val);
+    }
+}
+
+/// Rebuild a [`GridN::map_d`]-shaped distribution from this rank's
+/// (optional) value — the bridge from the env back into the `DistSeq`
+/// group operations.  Members always hold `Some`; the closure never runs
+/// on non-members, whose chains stay inert.
+fn regrid<'a>(
+    grid: &GridN<'a>,
+    v: Option<Block>,
+) -> crate::data::grid::GridData<'a, Block> {
+    grid.map_d(move |_| v.expect("grid member lost its block"))
+}
+
+/// Execute the plan on `grid`; returns this rank's output value (`None`
+/// on ranks the output placement skips) at whatever virtual time the
+/// replay reaches.
+pub(crate) fn interpret<'a>(
+    ctx: &'a Ctx,
+    comp: &'a Compute,
+    g: &PlanGraph,
+    grid: &GridN<'a>,
+    srcs: &Sources<'_>,
+) -> Option<Block> {
+    assert_eq!(g.dims, grid.dims(), "plan recorded for a different grid shape");
+    let mut env = Env { vals: vec![None; g.nodes.len()], uses: g.use_counts() };
+    let mut pending: Vec<PendingEntry<'a, '_>> = Vec::new();
+
+    for &id in &g.order {
+        let node = &g.nodes[id];
+        let inputs = node.op.inputs();
+
+        // Unified FIFO wait rule (see module docs).
+        let mut last = None;
+        for (i, e) in pending.iter().enumerate() {
+            if inputs.contains(&e.id) || (node.op.is_comm() && e.stage < node.stage) {
+                last = Some(i);
+            }
+        }
+        if let Some(i) = last {
+            drain_through(&mut pending, i, &mut env);
+        }
+
+        match &node.op {
+            Op::Load(map) => {
+                let v = grid.map_d(|c| srcs.load(*map, c)).into_local();
+                env.put(id, Val::Blk(v));
+            }
+            Op::Matmul { a, b } => {
+                let (av, bv) = (env.take_blk(*a), env.take_blk(*b));
+                let out = match (av, bv) {
+                    (Some(x), Some(y)) => Some(comp.matmul(ctx, &x, &y)),
+                    _ => None,
+                };
+                env.put(id, Val::Blk(out));
+            }
+            Op::MatmulPanel { a, b, part, parts } => {
+                let (av, bv) = (env.take_blk(*a), env.take_blk(*b));
+                let out = match (av, bv) {
+                    (Some(x), Some(y)) => {
+                        let bcols = y.cols();
+                        let (lo, hi) = (part * bcols / parts, (part + 1) * bcols / parts);
+                        Some(comp.matmul_panel(ctx, &x, &y, lo, hi))
+                    }
+                    _ => None,
+                };
+                env.put(id, Val::Blk(out));
+            }
+            Op::Ew { op, x, y } => {
+                let (xv, yv) = (env.take_blk(*x), env.take_blk(*y));
+                let out = match (xv, yv) {
+                    (Some(x), Some(y)) => Some(comp.ew(ctx, x, y, *op)),
+                    _ => None,
+                };
+                env.put(id, Val::Blk(out));
+            }
+            Op::FusedEw { x, ops } => {
+                let base = env.take_blk(*x);
+                let args: Vec<(super::ir::EwKind, Option<Block>)> =
+                    ops.iter().map(|(op, n)| (*op, env.take_blk(*n))).collect();
+                let out = base.map(|b| {
+                    let owned: Vec<_> = args
+                        .into_iter()
+                        .map(|(op, v)| (op, v.expect("fused operand missing on member")))
+                        .collect();
+                    comp.ew_chain(ctx, b, &owned)
+                });
+                env.put(id, Val::Blk(out));
+            }
+            Op::Shift { x, dim, delta } => {
+                let seq = regrid(grid, env.take_blk(*x)).into_seq_along(*dim);
+                if node.split {
+                    let h = seq.shift_d_start(*delta);
+                    pending.push(PendingEntry {
+                        id,
+                        stage: node.stage,
+                        op: PendingOp::Shift(h),
+                    });
+                } else {
+                    env.put(id, Val::Blk(seq.shift_d(*delta).into_local()));
+                }
+            }
+            Op::Reduce { x, dim, op } => {
+                let op = *op;
+                let seq = regrid(grid, env.take_blk(*x)).into_seq_along(*dim);
+                if node.split {
+                    let h = seq.reduce_d_start(move |x, y| comp.ew(ctx, x, y, op));
+                    pending.push(PendingEntry {
+                        id,
+                        stage: node.stage,
+                        op: PendingOp::Reduce(h),
+                    });
+                } else {
+                    env.put(id, Val::Blk(seq.reduce_d(|x, y| comp.ew(ctx, x, y, op))));
+                }
+            }
+            Op::PivotRow { x, kb, kloc } => {
+                let kloc = *kloc;
+                let seq = regrid(grid, env.take_blk(*x))
+                    .into_seq_along(0)
+                    .map_d(|blk| comp.block_row(ctx, &blk, kloc));
+                if node.split {
+                    let h = seq.apply_start(*kb);
+                    pending.push(PendingEntry {
+                        id,
+                        stage: node.stage,
+                        op: PendingOp::Apply(h),
+                    });
+                } else {
+                    env.put(id, Val::Seg(seq.apply(*kb)));
+                }
+            }
+            Op::PivotCol { x, kb, kloc } => {
+                let kloc = *kloc;
+                let seq = regrid(grid, env.take_blk(*x))
+                    .into_seq_along(1)
+                    .map_d(|blk| comp.block_col(ctx, &blk, kloc));
+                if node.split {
+                    let h = seq.apply_start(*kb);
+                    pending.push(PendingEntry {
+                        id,
+                        stage: node.stage,
+                        op: PendingOp::Apply(h),
+                    });
+                } else {
+                    env.put(id, Val::Seg(seq.apply(*kb)));
+                }
+            }
+            Op::FwUpdate { d, ik, kj } => {
+                let dv = env.take_blk(*d);
+                let ikv = env.take(*ik).seg();
+                let kjv = env.take(*kj).seg();
+                let out = dv.map(|blk| match (&ikv, &kjv) {
+                    (Some(ik), Some(kj)) => comp.fw_update(ctx, blk, ik, kj),
+                    _ => blk,
+                });
+                env.put(id, Val::Blk(out));
+            }
+            Op::Hstack { parts } => {
+                let vals: Vec<Option<Block>> =
+                    parts.iter().map(|&p| env.take_blk(p)).collect();
+                let out = if vals.iter().all(Option::is_some) {
+                    Some(Block::hstack(vals.into_iter().map(Option::unwrap).collect()))
+                } else {
+                    None
+                };
+                env.put(id, Val::Blk(out));
+            }
+        }
+    }
+
+    // Every member waits every handle — drain whatever the wait rule
+    // left outstanding (in the common schedules this is empty: the last
+    // stage's comms are blocking or drained by their consumers).
+    if !pending.is_empty() {
+        let upto = pending.len() - 1;
+        drain_through(&mut pending, upto, &mut env);
+    }
+
+    env.take_blk(g.output)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::cannon;
+    use crate::algos::mmm_dns;
+    use crate::comm::backend::BackendProfile;
+    use crate::comm::cost::CostParams;
+    use crate::plan::ir::{build_cannon, build_dns, build_fw, EwKind, PlanBuilder};
+    use crate::plan::passes::{fuse, overlap};
+    use crate::testing::spmd_run as run;
+
+    fn fixed() -> BackendProfile {
+        BackendProfile::openmpi_fixed()
+    }
+
+    #[test]
+    fn interpreted_cannon_bit_identical_to_eager() {
+        for q in [1usize, 2, 3] {
+            let bsz = 6;
+            let a = BlockSource::real(bsz, 70 + q as u64);
+            let b = BlockSource::real(bsz, 80 + q as u64);
+            let eager = run(q * q, fixed(), CostParams::free(), |ctx| {
+                cannon::cannon_on_grid(ctx, &Compute::Native, q, &a, &b, &GridN::square(ctx, q))
+            });
+            let plan = run(q * q, fixed(), CostParams::free(), |ctx| {
+                let g = build_cannon(q);
+                let grid = GridN::square(ctx, q);
+                let srcs = Sources::Mm { a: &a, b: &b, q };
+                interpret(ctx, &Compute::Native, &g, &grid, &srcs)
+            });
+            for (e, p) in eager.results.iter().zip(&plan.results) {
+                match (&e.c_block, p) {
+                    (Some((_, _, x)), Some(y)) => assert_eq!(x, y, "q={q}"),
+                    (None, None) => {}
+                    _ => panic!("placement diverged at q={q}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interpreted_pipelined_cannon_matches_eager_clocks_exactly() {
+        // Slow network + modeled compute: if the replay's start/wait
+        // order deviated from the eager pipelined schedule anywhere, the
+        // overlap-aware clocks would differ.
+        let q = 3;
+        let machine = CostParams::new(5e-5, 1e-8);
+        let comp = Compute::Modeled { rate: 1e10 };
+        let a = BlockSource::proxy(128, 1);
+        let b = BlockSource::proxy(128, 2);
+        let eager = run(q * q, fixed(), machine, |ctx| {
+            cannon::cannon_pipelined_eager(ctx, &comp, q, &a, &b).t_local
+        });
+        let plan = run(q * q, fixed(), machine, |ctx| {
+            let mut g = build_cannon(q);
+            assert!(overlap(&mut g) > 0);
+            let grid = GridN::square(ctx, q);
+            let srcs = Sources::Mm { a: &a, b: &b, q };
+            let _ = interpret(ctx, &comp, &g, &grid, &srcs);
+            ctx.now()
+        });
+        for (rank, (e, p)) in eager.results.iter().zip(&plan.results).enumerate() {
+            assert!((e - p).abs() < 1e-12, "rank {rank}: eager {e} vs plan {p}");
+        }
+    }
+
+    #[test]
+    fn interpreted_pipelined_dns_matches_eager_clocks_exactly() {
+        let (q, chunks) = (2, 3);
+        let machine = CostParams::new(5e-5, 1e-8);
+        let comp = Compute::Modeled { rate: 1e10 };
+        let a = BlockSource::proxy(64, 1);
+        let b = BlockSource::proxy(64, 2);
+        let eager = run(q * q * q, fixed(), machine, |ctx| {
+            mmm_dns::dns_pipelined_eager(ctx, &comp, q, &a, &b, chunks).t_local
+        });
+        let plan = run(q * q * q, fixed(), machine, |ctx| {
+            let mut g = build_dns(q, chunks.min(64).max(1));
+            assert!(overlap(&mut g) > 0);
+            let grid = GridN::cube(ctx, q);
+            let srcs = Sources::Mm { a: &a, b: &b, q };
+            let _ = interpret(ctx, &comp, &g, &grid, &srcs);
+            ctx.now()
+        });
+        for (rank, (e, p)) in eager.results.iter().zip(&plan.results).enumerate() {
+            assert!((e - p).abs() < 1e-12, "rank {rank}: eager {e} vs plan {p}");
+        }
+    }
+
+    #[test]
+    fn fused_ew_chain_bit_identical_across_par_threshold() {
+        // The fused `ew_chain` kernel switches to the parallel row-split
+        // path at EW_PAR_THRESHOLD elements; both sides of the boundary
+        // must reproduce the unfused per-op results bit for bit.
+        let edge = (crate::matrix::gemm::EW_PAR_THRESHOLD as f64).sqrt() as usize;
+        for bsz in [edge - 1, edge] {
+            let a = BlockSource::real(bsz, 91);
+            let b = BlockSource::real(bsz, 92);
+            let build = || {
+                let mut p = PlanBuilder::new(vec![1, 1]);
+                let la = p.load(SourceMap::DirectA);
+                let lb = p.load(SourceMap::DirectB);
+                let lc = p.load(SourceMap::DirectA);
+                let s = p.ew(EwKind::Add, la, lb);
+                let m = p.ew(EwKind::Min, s, lc);
+                p.finish(m)
+            };
+            let unfused = run(1, fixed(), CostParams::free(), |ctx| {
+                let g = build();
+                let grid = GridN::square(ctx, 1);
+                let srcs = Sources::Mm { a: &a, b: &b, q: 1 };
+                interpret(ctx, &Compute::Native, &g, &grid, &srcs)
+            });
+            let fused = run(1, fixed(), CostParams::free(), |ctx| {
+                let mut g = build();
+                assert_eq!(fuse(&mut g), 1);
+                let grid = GridN::square(ctx, 1);
+                let srcs = Sources::Mm { a: &a, b: &b, q: 1 };
+                interpret(ctx, &Compute::Native, &g, &grid, &srcs)
+            });
+            assert_eq!(unfused.results, fused.results, "bsz={bsz}");
+        }
+    }
+
+    #[test]
+    fn interpreted_fw_bit_identical_to_eager() {
+        use crate::algos::floyd_warshall::fw_on_grid;
+        let (n, q) = (8usize, 2usize);
+        let src = FwSource::Real { n, density: 0.4, seed: 9 };
+        let eager = run(q * q, fixed(), CostParams::free(), |ctx| {
+            fw_on_grid(ctx, &Compute::Native, q, &src, &GridN::square(ctx, q))
+        });
+        let plan = run(q * q, fixed(), CostParams::free(), |ctx| {
+            let g = build_fw(n, q);
+            let grid = GridN::square(ctx, q);
+            let srcs = Sources::Fw { src: &src, b: n / q };
+            interpret(ctx, &Compute::Native, &g, &grid, &srcs)
+        });
+        for (e, p) in eager.results.iter().zip(&plan.results) {
+            match (&e.d_block, p) {
+                (Some((_, _, x)), Some(y)) => {
+                    assert_eq!(x.materialize().data, y.materialize().data)
+                }
+                (None, None) => {}
+                _ => panic!("placement diverged"),
+            }
+        }
+    }
+}

@@ -1,0 +1,386 @@
+//! Plan IR: the deferred-execution DAG recorded over the distributed
+//! collections.
+//!
+//! A [`PlanGraph`] is a flat arena of [`Node`]s plus an execution
+//! `order`.  Nodes describe the same operations the eager algorithms
+//! perform — block loads, (panel) GEMMs, elementwise combines, grid-line
+//! shifts / reductions / pivot broadcasts, the FW update — but nothing
+//! executes at build time; the interpreter ([`crate::plan::exec`])
+//! replays the order against a live [`crate::data::grid::GridN`], and
+//! the pricer ([`crate::plan::cost`]) replays it against the
+//! virtual-clock cost model with zero data movement.
+//!
+//! **Ownership convention.**  Exactly like the `DistSeq` group
+//! operations (the PR-3 convention documented in
+//! [`crate::data::dseq`]), every [`PlanBuilder`] combinator **consumes**
+//! its operand handles: a [`PlanRef`] is used once, chains read
+//! left-to-right, and sharing a value between two consumers must be
+//! explicit via [`PlanBuilder::dup`] — the plan-level analogue of the
+//! `.clone()` an eager pipelined schedule performs before shifting a
+//! block it still needs.  This keeps the recorded DAG's fan-out visible
+//! in the source the same way the eager code's clones are.
+
+pub use crate::matrix::gemm::EwKind;
+
+/// Index of a node in its [`PlanGraph`] arena.
+pub type NodeId = usize;
+
+/// How a `Load` node maps a grid coordinate to a source block — the
+/// initial data placements of the algorithms the planner schedules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SourceMap {
+    /// Cannon's skewed A placement: block `(i, (j + i) mod q)` at
+    /// coordinate `(i, j)`.
+    CannonA,
+    /// Cannon's skewed B placement: block `((i + j) mod q, j)`.
+    CannonB,
+    /// DNS A placement on the cube: block `(i, k)` at `(i, j, k)`.
+    DnsA,
+    /// DNS B placement on the cube: block `(k, j)` at `(i, j, k)`.
+    DnsB,
+    /// Unskewed block `(i, j)` of A — building block for plain
+    /// elementwise plans (fusion tests and custom DAGs).
+    DirectA,
+    /// Unskewed block `(i, j)` of B.
+    DirectB,
+    /// The FW distance block `(i, j)`.
+    Fw,
+}
+
+/// One deferred operation.  Comm nodes (`Shift`, `Reduce`, `PivotRow`,
+/// `PivotCol`) may be marked split-phase by the overlap pass; compute
+/// nodes execute inline.
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// Materialize this rank's source block (lazy SPMD: only the owner
+    /// generates, exactly like `GridN::map_d`).
+    Load(SourceMap),
+    /// Block product `a · b`.
+    Matmul { a: NodeId, b: NodeId },
+    /// Column panel `part` of `parts` of the product `a · b` (the
+    /// pipelined-DNS chunking unit).
+    MatmulPanel { a: NodeId, b: NodeId, part: usize, parts: usize },
+    /// Elementwise combine `x ⊕ y`.
+    Ew { op: EwKind, x: NodeId, y: NodeId },
+    /// Fused chain `((x ⊕₁ m₁) ⊕₂ m₂) …` — produced by the fuse pass,
+    /// never recorded directly.
+    FusedEw { x: NodeId, ops: Vec<(EwKind, NodeId)> },
+    /// Cyclic shift of `x` along grid dimension `dim` by `delta`.
+    Shift { x: NodeId, dim: usize, delta: isize },
+    /// Reduce `x` along `dim` with `⊕` onto the line root.
+    Reduce { x: NodeId, dim: usize, op: EwKind },
+    /// Broadcast row `kloc` of line element `kb` along dimension 0
+    /// (Alg. 3's pivot-row `xSeq.apply`); yields a `Seg`.
+    PivotRow { x: NodeId, kb: usize, kloc: usize },
+    /// Broadcast column `kloc` of line element `kb` along dimension 1
+    /// (Alg. 3's pivot-column `ySeq.apply`); yields a `Seg`.
+    PivotCol { x: NodeId, kb: usize, kloc: usize },
+    /// FW pivot update of block `d` with pivot segments `ik`/`kj`.
+    FwUpdate { d: NodeId, ik: NodeId, kj: NodeId },
+    /// Reassemble column panels into one block (pipelined DNS epilogue).
+    Hstack { parts: Vec<NodeId> },
+}
+
+impl Op {
+    /// The node ids this op consumes, in consumption order.
+    pub fn inputs(&self) -> Vec<NodeId> {
+        match self {
+            Op::Load(_) => vec![],
+            Op::Matmul { a, b } | Op::MatmulPanel { a, b, .. } => vec![*a, *b],
+            Op::Ew { x, y, .. } => vec![*x, *y],
+            Op::FusedEw { x, ops } => {
+                let mut v = vec![*x];
+                v.extend(ops.iter().map(|(_, n)| *n));
+                v
+            }
+            Op::Shift { x, .. } | Op::Reduce { x, .. } => vec![*x],
+            Op::PivotRow { x, .. } | Op::PivotCol { x, .. } => vec![*x],
+            Op::FwUpdate { d, ik, kj } => vec![*d, *ik, *kj],
+            Op::Hstack { parts } => parts.clone(),
+        }
+    }
+
+    /// Does this op communicate (and may therefore be split-phase)?
+    pub fn is_comm(&self) -> bool {
+        matches!(
+            self,
+            Op::Shift { .. } | Op::Reduce { .. } | Op::PivotRow { .. } | Op::PivotCol { .. }
+        )
+    }
+
+    /// Does this op burn kernel time?
+    pub fn is_compute(&self) -> bool {
+        matches!(
+            self,
+            Op::Matmul { .. }
+                | Op::MatmulPanel { .. }
+                | Op::Ew { .. }
+                | Op::FusedEw { .. }
+                | Op::FwUpdate { .. }
+        )
+    }
+}
+
+/// One node: the op, the pipeline stage it was recorded in (the loop
+/// iteration of the algorithm builder — overlap never crosses into an
+/// earlier stage's comm), and whether the overlap pass split it into a
+/// `*_start`/`wait()` pair.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub op: Op,
+    pub stage: usize,
+    pub split: bool,
+}
+
+/// The recorded DAG plus its execution order.  `order` starts as record
+/// order; the overlap pass hoists split comm nodes within their stage.
+#[derive(Clone, Debug)]
+pub struct PlanGraph {
+    pub nodes: Vec<Node>,
+    pub order: Vec<NodeId>,
+    pub output: NodeId,
+    /// Grid shape the plan executes on.
+    pub dims: Vec<usize>,
+}
+
+impl PlanGraph {
+    /// Remaining-consumer count per node (output counts as one) — the
+    /// interpreter clones a shared value until its last consumer, which
+    /// takes it (mirroring the eager code's explicit clones).
+    pub fn use_counts(&self) -> Vec<usize> {
+        let mut uses = vec![0usize; self.nodes.len()];
+        for n in &self.nodes {
+            for i in n.op.inputs() {
+                uses[i] += 1;
+            }
+        }
+        uses[self.output] += 1;
+        uses
+    }
+}
+
+/// Records a [`PlanGraph`].  See the module docs for the consume-`self`
+/// handle convention.
+pub struct PlanBuilder {
+    nodes: Vec<Node>,
+    stage: usize,
+    dims: Vec<usize>,
+}
+
+/// A handle to a recorded node.  Deliberately neither `Copy` nor
+/// `Clone`: each handle is consumed by exactly one combinator, and
+/// fan-out is explicit through [`PlanBuilder::dup`].
+#[must_use = "a plan handle describes deferred work; consume it with a combinator or finish()"]
+pub struct PlanRef {
+    id: NodeId,
+}
+
+impl PlanBuilder {
+    pub fn new(dims: Vec<usize>) -> Self {
+        PlanBuilder { nodes: Vec::new(), stage: 0, dims }
+    }
+
+    fn push(&mut self, op: Op) -> PlanRef {
+        let id = self.nodes.len();
+        self.nodes.push(Node { op, stage: self.stage, split: false });
+        PlanRef { id }
+    }
+
+    /// Advance the stage counter — called once per algorithm loop
+    /// iteration so the overlap pass knows which comm belongs to which
+    /// pipeline step.
+    pub fn next_stage(&mut self) {
+        self.stage += 1;
+    }
+
+    /// Explicit fan-out: two handles to the same node (the plan-level
+    /// `.clone()`).  The interpreter materializes the extra use as a
+    /// cheap Arc bump, exactly like the eager pipelined code's clone
+    /// before a shift.
+    pub fn dup(&mut self, r: PlanRef) -> (PlanRef, PlanRef) {
+        (PlanRef { id: r.id }, PlanRef { id: r.id })
+    }
+
+    pub fn load(&mut self, src: SourceMap) -> PlanRef {
+        self.push(Op::Load(src))
+    }
+
+    pub fn matmul(&mut self, a: PlanRef, b: PlanRef) -> PlanRef {
+        self.push(Op::Matmul { a: a.id, b: b.id })
+    }
+
+    pub fn matmul_panel(&mut self, a: PlanRef, b: PlanRef, part: usize, parts: usize) -> PlanRef {
+        assert!(part < parts, "panel {part} of {parts}");
+        self.push(Op::MatmulPanel { a: a.id, b: b.id, part, parts })
+    }
+
+    pub fn ew(&mut self, op: EwKind, x: PlanRef, y: PlanRef) -> PlanRef {
+        self.push(Op::Ew { op, x: x.id, y: y.id })
+    }
+
+    pub fn shift(&mut self, x: PlanRef, dim: usize, delta: isize) -> PlanRef {
+        assert!(dim < self.dims.len());
+        self.push(Op::Shift { x: x.id, dim, delta })
+    }
+
+    pub fn reduce(&mut self, x: PlanRef, dim: usize, op: EwKind) -> PlanRef {
+        assert!(dim < self.dims.len());
+        self.push(Op::Reduce { x: x.id, dim, op })
+    }
+
+    pub fn pivot_row(&mut self, x: PlanRef, kb: usize, kloc: usize) -> PlanRef {
+        self.push(Op::PivotRow { x: x.id, kb, kloc })
+    }
+
+    pub fn pivot_col(&mut self, x: PlanRef, kb: usize, kloc: usize) -> PlanRef {
+        self.push(Op::PivotCol { x: x.id, kb, kloc })
+    }
+
+    pub fn fw_update(&mut self, d: PlanRef, ik: PlanRef, kj: PlanRef) -> PlanRef {
+        self.push(Op::FwUpdate { d: d.id, ik: ik.id, kj: kj.id })
+    }
+
+    pub fn hstack(&mut self, parts: Vec<PlanRef>) -> PlanRef {
+        let ids = parts.into_iter().map(|p| p.id).collect();
+        self.push(Op::Hstack { parts: ids })
+    }
+
+    /// Seal the graph; `order` is record order until a pass rewrites it.
+    pub fn finish(self, output: PlanRef) -> PlanGraph {
+        let order = (0..self.nodes.len()).collect();
+        PlanGraph { nodes: self.nodes, order, output: output.id, dims: self.dims }
+    }
+}
+
+// ------------------------------------------------- algorithm builders
+
+/// Cannon's algorithm on a q×q grid: skewed loads, then q steps of
+/// multiply-accumulate with cyclic shifts of A (along dim 1) and B
+/// (along dim 0) between steps — the exact op sequence of the eager
+/// `cannon_on_grid`.
+pub(crate) fn build_cannon(q: usize) -> PlanGraph {
+    let mut p = PlanBuilder::new(vec![q, q]);
+    let mut a = p.load(SourceMap::CannonA);
+    let mut b = p.load(SourceMap::CannonB);
+    let mut acc: Option<PlanRef> = None;
+    for step in 0..q {
+        let (prod, next) = if step + 1 == q {
+            // Last step: no further shift, the operands die here.
+            (p.matmul(a, b), None)
+        } else {
+            let (a_mm, a_sh) = p.dup(a);
+            let (b_mm, b_sh) = p.dup(b);
+            (p.matmul(a_mm, b_mm), Some((a_sh, b_sh)))
+        };
+        acc = Some(match acc {
+            None => prod,
+            Some(c) => p.ew(EwKind::Add, c, prod),
+        });
+        if let Some((a_sh, b_sh)) = next {
+            a = p.shift(a_sh, 1, -1);
+            b = p.shift(b_sh, 0, -1);
+            p.next_stage();
+        }
+    }
+    p.finish(acc.expect("q >= 1"))
+}
+
+/// DNS on a q×q×q cube: one local (panel) product per rank, reduced
+/// along z.  `panels == 1` is the blocking Alg. 2 shape; `panels > 1`
+/// records the panel-chunked shape whose per-panel reductions the
+/// overlap pass pipelines (the eager `mmm_dns_pipelined` structure).
+pub(crate) fn build_dns(q: usize, panels: usize) -> PlanGraph {
+    assert!(panels >= 1);
+    let mut p = PlanBuilder::new(vec![q, q, q]);
+    let mut a = p.load(SourceMap::DnsA);
+    let mut b = p.load(SourceMap::DnsB);
+    if panels == 1 {
+        let prod = p.matmul(a, b);
+        let c = p.reduce(prod, 2, EwKind::Add);
+        return p.finish(c);
+    }
+    let mut parts = Vec::with_capacity(panels);
+    for part in 0..panels {
+        let (a_use, a_keep) = p.dup(a);
+        let (b_use, b_keep) = p.dup(b);
+        a = a_keep;
+        b = b_keep;
+        let prod = p.matmul_panel(a_use, b_use, part, panels);
+        parts.push(p.reduce(prod, 2, EwKind::Add));
+        p.next_stage();
+    }
+    // The final dup pair of a/b is unused by construction; the handles
+    // die here without a consumer, matching the eager code where the
+    // last panel simply reads the blocks one more time.
+    drop((a, b));
+    let h = p.hstack(parts);
+    p.finish(h)
+}
+
+/// Blocked Floyd–Warshall on a q×q grid over an n-vertex graph: n pivot
+/// stages of row/column broadcast + update (Alg. 3).
+pub(crate) fn build_fw(n: usize, q: usize) -> PlanGraph {
+    assert_eq!(n % q, 0, "n must divide into q×q blocks");
+    let b = n / q;
+    let mut p = PlanBuilder::new(vec![q, q]);
+    let mut d = p.load(SourceMap::Fw);
+    for k in 0..n {
+        let (kb, kloc) = (k / b, k % b);
+        let (d_row, rest) = p.dup(d);
+        let (d_col, d_upd) = p.dup(rest);
+        let ik = p.pivot_row(d_row, kb, kloc);
+        let kj = p.pivot_col(d_col, kb, kloc);
+        d = p.fw_update(d_upd, ik, kj);
+        p.next_stage();
+    }
+    p.finish(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cannon_graph_shape() {
+        let g = build_cannon(3);
+        // 2 loads + 3 matmuls + 2 adds + 2*2 shifts
+        assert_eq!(g.nodes.len(), 11);
+        assert_eq!(g.order.len(), g.nodes.len());
+        assert_eq!(g.nodes.iter().filter(|n| n.op.is_comm()).count(), 4);
+        assert_eq!(g.nodes[g.output].stage, 2);
+        // every input id precedes its consumer in record order
+        for (id, n) in g.nodes.iter().enumerate() {
+            for i in n.op.inputs() {
+                assert!(i < id);
+            }
+        }
+    }
+
+    #[test]
+    fn dns_graph_shapes() {
+        let blocking = build_dns(2, 1);
+        assert_eq!(blocking.nodes.len(), 4); // 2 loads, matmul, reduce
+        let chunked = build_dns(2, 3);
+        // 2 loads + 3*(panel + reduce) + hstack
+        assert_eq!(chunked.nodes.len(), 9);
+        assert!(matches!(chunked.nodes[chunked.output].op, Op::Hstack { .. }));
+    }
+
+    #[test]
+    fn fw_graph_shape() {
+        let g = build_fw(4, 2);
+        // load + 4 stages of (row, col, update)
+        assert_eq!(g.nodes.len(), 13);
+        assert_eq!(g.nodes[g.output].stage, 3);
+    }
+
+    #[test]
+    fn use_counts_see_dup_fanout() {
+        let g = build_cannon(2);
+        let uses = g.use_counts();
+        // the two loads feed both the first matmul and the first shifts
+        assert_eq!(uses[0], 2);
+        assert_eq!(uses[1], 2);
+        assert_eq!(uses[g.output], 1);
+    }
+}

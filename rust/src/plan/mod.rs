@@ -1,0 +1,699 @@
+//! Lazy execution plans: describe → optimize → dry-run → interpret.
+//!
+//! The eager algorithm modules each hard-code one schedule (blocking
+//! Cannon, pipelined DNS, …).  This layer records the algorithm as a
+//! [`ir::PlanGraph`] instead, runs two rewrite passes —
+//! [`passes::fuse`] collapses adjacent elementwise chains into one
+//! fused kernel pass, [`passes::overlap`] splits comm nodes into
+//! `*_start`/`wait()` pairs wherever independent compute can hide the
+//! transfer — then **dry-runs** every candidate schedule on the
+//! virtual-clock cost model ([`cost::price`], zero data movement) and
+//! interprets the cheapest ([`exec`]).  Interpreted plans are
+//! bit-identical to the eager paths: same kernels, same operand and
+//! fold order, same `DistSeq` group operations — only the schedule is
+//! chosen by model instead of by hand.
+//!
+//! The schedule choice is SPMD-consistent: it is a pure function of
+//! the plan, the topology, the link parameters, and the spec — all of
+//! which every rank holds identically — so all ranks pick the same
+//! schedule with zero communication.
+//!
+//! **Ownership convention.**  Spec builders ([`MatmulSpec`],
+//! [`FwSpec`]) and plan combinators ([`ir::PlanBuilder`]) consume
+//! `self`, the same convention as the `DistSeq` group operations
+//! (see [`crate::data::dseq`]): chains read left-to-right and fan-out
+//! is explicit ([`ir::PlanBuilder::dup`]).
+
+pub mod cost;
+pub mod exec;
+pub mod ir;
+pub mod passes;
+
+use crate::algos::floyd_warshall::FwSource;
+use crate::algos::mmm_generic;
+use crate::comm::cost::ceil_log2;
+use crate::data::grid::GridN;
+use crate::matrix::block::{Block, BlockSource};
+use crate::runtime::compute::{gemm_efficiency, Compute};
+use crate::spmd::Ctx;
+use crate::trace::{span, Category};
+
+use cost::{price, PriceCtx};
+use exec::{interpret, Sources};
+use ir::{build_cannon, build_dns, build_fw};
+
+/// Default modeled flop rate when the compute backend has none (real
+/// kernels): ~10 GFlop/s per core, the right order for ranking comm
+/// against compute on current hardware.
+const DEFAULT_RATE: f64 = 1e10;
+
+/// A concrete schedule the planner can price and interpret.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// Cannon on q² ranks, blocking shifts.
+    CannonBlocking,
+    /// Cannon on q² ranks, shifts overlapped under the GEMMs.
+    CannonPipelined,
+    /// DNS on q³ ranks, one blocking z-reduction.
+    DnsBlocking,
+    /// DNS on q³ ranks, panel-chunked reductions overlapped.
+    DnsPipelined,
+    /// Algorithm 1: q² sequential group reductions on q³ ranks (kept
+    /// eager — its schedule has nothing to overlap or fuse).
+    Generic,
+    /// Blocked Floyd–Warshall, blocking pivot broadcasts.
+    FwBlocking,
+}
+
+impl Schedule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Schedule::CannonBlocking => "cannon",
+            Schedule::CannonPipelined => "cannon-pipelined",
+            Schedule::DnsBlocking => "dns",
+            Schedule::DnsPipelined => "dns-pipelined",
+            Schedule::Generic => "generic",
+            Schedule::FwBlocking => "fw",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Schedule> {
+        Some(match s {
+            "cannon" | "cannon-blocking" => Schedule::CannonBlocking,
+            "cannon-pipelined" => Schedule::CannonPipelined,
+            "dns" | "dns-blocking" => Schedule::DnsBlocking,
+            "dns-pipelined" => Schedule::DnsPipelined,
+            "generic" => Schedule::Generic,
+            "fw" => Schedule::FwBlocking,
+            _ => return None,
+        })
+    }
+
+    /// Stable numeric code (trace span args, wire stats).
+    pub fn code(self) -> u8 {
+        match self {
+            Schedule::CannonBlocking => 0,
+            Schedule::CannonPipelined => 1,
+            Schedule::DnsBlocking => 2,
+            Schedule::DnsPipelined => 3,
+            Schedule::Generic => 4,
+            Schedule::FwBlocking => 5,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Schedule> {
+        Some(match c {
+            0 => Schedule::CannonBlocking,
+            1 => Schedule::CannonPipelined,
+            2 => Schedule::DnsBlocking,
+            3 => Schedule::DnsPipelined,
+            4 => Schedule::Generic,
+            5 => Schedule::FwBlocking,
+            _ => return None,
+        })
+    }
+
+    /// Ranks this schedule needs for grid parameter `q`.
+    fn ranks_needed(self, q: usize) -> usize {
+        match self {
+            Schedule::CannonBlocking | Schedule::CannonPipelined | Schedule::FwBlocking => q * q,
+            Schedule::DnsBlocking | Schedule::DnsPipelined | Schedule::Generic => q * q * q,
+        }
+    }
+}
+
+/// How an algorithm entry point schedules itself.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlanMode {
+    /// Dry-run every candidate, interpret the cheapest (the default).
+    #[default]
+    Auto,
+    /// Bypass the planner entirely: run the hand-written eager default
+    /// (the pre-plan behavior).
+    Eager,
+    /// Interpret exactly this schedule, no pricing.
+    Forced(Schedule),
+}
+
+impl PlanMode {
+    pub fn parse(s: &str) -> Option<PlanMode> {
+        Some(match s {
+            "auto" => PlanMode::Auto,
+            "eager" => PlanMode::Eager,
+            other => PlanMode::Forced(Schedule::parse(other)?),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanMode::Auto => "auto",
+            PlanMode::Eager => "eager",
+            PlanMode::Forced(s) => s.name(),
+        }
+    }
+}
+
+// ------------------------------------------------------------- matmul
+
+/// Spec for the consolidated matrix-product entry point
+/// ([`matmul`]).  Builder methods consume `self`.
+pub struct MatmulSpec<'s> {
+    comp: &'s Compute,
+    q: usize,
+    a: &'s BlockSource,
+    b: &'s BlockSource,
+    ranks: Option<&'s [usize]>,
+    mode: Option<PlanMode>,
+    chunks: usize,
+    rate_hint: Option<f64>,
+}
+
+impl<'s> MatmulSpec<'s> {
+    pub fn new(comp: &'s Compute, q: usize, a: &'s BlockSource, b: &'s BlockSource) -> Self {
+        MatmulSpec { comp, q, a, b, ranks: None, mode: None, chunks: 4, rate_hint: None }
+    }
+
+    /// Place the grid on an explicit rank subset (the serving runtime's
+    /// placement hook; see [`GridN::new_on`]).
+    pub fn on(mut self, ranks: &'s [usize]) -> Self {
+        self.ranks = Some(ranks);
+        self
+    }
+
+    /// Override the runtime's [`PlanMode`] for this call.
+    pub fn mode(mut self, mode: PlanMode) -> Self {
+        self.mode = Some(mode);
+        self
+    }
+
+    /// Panel count for the pipelined-DNS candidate (clamped to the
+    /// block edge; default 4).
+    pub fn chunks(mut self, chunks: usize) -> Self {
+        assert!(chunks >= 1, "need at least one panel");
+        self.chunks = chunks;
+        self
+    }
+
+    /// Modeled flop rate for pricing when the compute backend is real
+    /// (native/PJRT kernels carry no rate of their own).
+    pub fn rate_hint(mut self, rate: f64) -> Self {
+        self.rate_hint = Some(rate);
+        self
+    }
+
+    fn rate(&self) -> f64 {
+        self.rate_hint.unwrap_or(match self.comp {
+            Compute::Modeled { rate } => *rate,
+            _ => DEFAULT_RATE,
+        })
+    }
+
+    fn panels(&self) -> usize {
+        self.chunks.min(self.b.b).max(1)
+    }
+}
+
+/// Outcome of a planned matrix product on one rank.
+pub struct PlanOutput {
+    /// `Some((i, j, block))` on the ranks the chosen schedule's output
+    /// placement selects.
+    pub c_block: Option<(usize, usize, Block)>,
+    pub t_local: f64,
+    /// The schedule that actually ran.
+    pub schedule: Schedule,
+}
+
+/// The consolidated matrix-product entry point: records the plan,
+/// optimizes it, dry-runs the candidates, and interprets the cheapest
+/// (or whatever [`PlanMode`] dictates).
+pub fn matmul(ctx: &Ctx, spec: MatmulSpec<'_>) -> PlanOutput {
+    assert_eq!(spec.a.b, spec.b.b, "block sizes of A and B must match");
+    let mode = spec.mode.unwrap_or_else(|| ctx.plan_mode());
+    let avail = spec.ranks.map_or(ctx.world, <[usize]>::len);
+
+    let schedule = match mode {
+        PlanMode::Forced(s) => {
+            assert!(
+                s != Schedule::FwBlocking,
+                "fw is an APSP schedule; use plan::apsp"
+            );
+            assert!(
+                s.ranks_needed(spec.q) <= avail,
+                "schedule {} needs {} ranks, only {avail} available",
+                s.name(),
+                s.ranks_needed(spec.q)
+            );
+            assert!(
+                !(s == Schedule::Generic && spec.ranks.is_some()),
+                "the generic schedule has no subset placement"
+            );
+            s
+        }
+        PlanMode::Eager => eager_default(spec.q, avail, spec.ranks.is_some()),
+        PlanMode::Auto => {
+            let mut sp = span("plan", Category::Plan);
+            let (chosen, candidates) = choose_matmul(ctx, &spec, avail);
+            sp.arg("schedule", chosen.code() as f64);
+            sp.arg("q", spec.q as f64);
+            sp.arg("candidates", candidates.len() as f64);
+            chosen
+        }
+    };
+
+    let c_block = if mode == PlanMode::Eager {
+        run_eager(ctx, &spec, schedule)
+    } else {
+        run_schedule(ctx, &spec, schedule)
+    };
+    PlanOutput { c_block, t_local: ctx.now(), schedule }
+}
+
+/// Price every feasible candidate (no execution, no messages).
+pub fn explain_matmul(ctx: &Ctx, spec: MatmulSpec<'_>) -> Explain {
+    let avail = spec.ranks.map_or(ctx.world, <[usize]>::len);
+    let (chosen, candidates) = choose_matmul(ctx, &spec, avail);
+    Explain {
+        what: "matmul",
+        q: spec.q,
+        block: spec.a.b,
+        world: avail,
+        candidates,
+        chosen,
+    }
+}
+
+/// The pre-plan behavior: the CLI's old default was DNS when the cube
+/// fits, else Cannon; placed (subset) runs always used Cannon.
+fn eager_default(q: usize, avail: usize, placed: bool) -> Schedule {
+    if !placed && q * q * q <= avail {
+        Schedule::DnsBlocking
+    } else {
+        assert!(q * q <= avail, "need q² ranks for an eager matmul");
+        Schedule::CannonBlocking
+    }
+}
+
+fn feasible_matmul(q: usize, avail: usize, placed: bool) -> Vec<Schedule> {
+    let mut v = Vec::new();
+    if q * q <= avail {
+        v.push(Schedule::CannonBlocking);
+        v.push(Schedule::CannonPipelined);
+    }
+    if q * q * q <= avail {
+        v.push(Schedule::DnsBlocking);
+        v.push(Schedule::DnsPipelined);
+        if !placed {
+            v.push(Schedule::Generic);
+        }
+    }
+    assert!(!v.is_empty(), "no schedule fits: q={q}, {avail} ranks available");
+    v
+}
+
+fn choose_matmul(ctx: &Ctx, spec: &MatmulSpec<'_>, avail: usize) -> (Schedule, Vec<(Schedule, f64)>) {
+    let candidates: Vec<(Schedule, f64)> =
+        feasible_matmul(spec.q, avail, spec.ranks.is_some())
+            .into_iter()
+            .map(|s| (s, price_matmul(ctx, spec, s)))
+            .collect();
+    // Argmin with a strictly-lower-wins tie-break: on a free network the
+    // pipelined rewrite saves nothing, and the earlier (simpler,
+    // blocking) schedule keeps the tie.
+    let mut chosen = candidates[0];
+    for &c in &candidates[1..] {
+        if c.1 < chosen.1 {
+            chosen = c;
+        }
+    }
+    (chosen.0, candidates)
+}
+
+fn grid_ranks(spec: &MatmulSpec<'_>, need: usize) -> Vec<usize> {
+    match spec.ranks {
+        Some(r) => r[..need].to_vec(),
+        None => (0..need).collect(),
+    }
+}
+
+fn price_matmul(ctx: &Ctx, spec: &MatmulSpec<'_>, s: Schedule) -> f64 {
+    let b = spec.a.b;
+    let rate = spec.rate();
+    if s == Schedule::Generic {
+        return price_generic(ctx, spec.q, b, rate);
+    }
+    let (g, dims) = match s {
+        Schedule::CannonBlocking => (build_cannon(spec.q), vec![spec.q, spec.q]),
+        Schedule::CannonPipelined => {
+            let mut g = build_cannon(spec.q);
+            passes::fuse(&mut g);
+            passes::overlap(&mut g);
+            (g, vec![spec.q, spec.q])
+        }
+        Schedule::DnsBlocking => (build_dns(spec.q, 1), vec![spec.q, spec.q, spec.q]),
+        Schedule::DnsPipelined => {
+            let mut g = build_dns(spec.q, spec.panels());
+            passes::fuse(&mut g);
+            passes::overlap(&mut g);
+            (g, vec![spec.q, spec.q, spec.q])
+        }
+        Schedule::Generic | Schedule::FwBlocking => unreachable!(),
+    };
+    let need: usize = dims.iter().product();
+    let pc = PriceCtx {
+        topo: ctx.topology().as_ref(),
+        link: ctx.link_cost(),
+        rate,
+        block: b,
+        ranks: grid_ranks(spec, need),
+        dims,
+    };
+    price(&g, &pc)
+}
+
+/// Closed-form price of Algorithm 1 (it is never interpreted): q²
+/// sequential ∀-iterations of nop overhead, one group GEMM, and one
+/// q-rank tree reduction — §4.2.1's bottleneck terms.
+fn price_generic(ctx: &Ctx, q: usize, b: usize, rate: f64) -> f64 {
+    let eff = gemm_efficiency(b);
+    let t_mm = 2.0 * (b as f64).powi(3) / (rate * eff);
+    let bytes = b * b * 4;
+    let topo = ctx.topology();
+    let link = ctx.link_cost();
+    let mut worst: f64 = 0.0;
+    for g in 0..q * q {
+        let lo = g * q;
+        for i in lo..lo + q {
+            for j in (i + 1)..lo + q {
+                worst = worst.max(link.msg(topo.same_node(i, j), bytes));
+            }
+        }
+    }
+    let t_red = ceil_log2(q) as f64 * (worst + (b * b) as f64 / rate);
+    (q * q - 1) as f64 * mmm_generic::NOP_COST + t_mm + t_red
+}
+
+/// Interpret `schedule`'s plan (Generic runs its eager form — there is
+/// nothing to rewrite in its one-GEMM-one-reduce groups).
+fn run_schedule(
+    ctx: &Ctx,
+    spec: &MatmulSpec<'_>,
+    schedule: Schedule,
+) -> Option<(usize, usize, Block)> {
+    let q = spec.q;
+    let srcs = Sources::Mm { a: spec.a, b: spec.b, q };
+    match schedule {
+        Schedule::CannonBlocking | Schedule::CannonPipelined => {
+            let grid = match spec.ranks {
+                Some(r) => GridN::square_on(ctx, q, r),
+                None => GridN::square(ctx, q),
+            };
+            let mut g = build_cannon(q);
+            passes::fuse(&mut g);
+            if schedule == Schedule::CannonPipelined {
+                passes::overlap(&mut g);
+            }
+            let out = interpret(ctx, spec.comp, &g, &grid, &srcs);
+            grid.my_coord().zip(out).map(|(c, blk)| (c[0], c[1], blk))
+        }
+        Schedule::DnsBlocking | Schedule::DnsPipelined => {
+            let grid = match spec.ranks {
+                Some(r) => GridN::new_on(ctx, vec![q, q, q], r),
+                None => GridN::cube(ctx, q),
+            };
+            let mut g = match schedule {
+                Schedule::DnsBlocking => build_dns(q, 1),
+                _ => build_dns(q, spec.panels()),
+            };
+            passes::fuse(&mut g);
+            if schedule == Schedule::DnsPipelined {
+                passes::overlap(&mut g);
+            }
+            let out = interpret(ctx, spec.comp, &g, &grid, &srcs);
+            match (grid.my_coord(), out) {
+                (Some(cd), Some(blk)) => Some((cd[0], cd[1], blk)),
+                _ => None,
+            }
+        }
+        Schedule::Generic => {
+            mmm_generic::mmm_generic(ctx, spec.comp, q, spec.a, spec.b).c_block
+        }
+        Schedule::FwBlocking => unreachable!("fw is not a matmul schedule"),
+    }
+}
+
+/// Run the retained hand-written eager implementation of `schedule`.
+fn run_eager(
+    ctx: &Ctx,
+    spec: &MatmulSpec<'_>,
+    schedule: Schedule,
+) -> Option<(usize, usize, Block)> {
+    match schedule {
+        Schedule::CannonBlocking => {
+            let grid = match spec.ranks {
+                Some(r) => GridN::square_on(ctx, spec.q, r),
+                None => GridN::square(ctx, spec.q),
+            };
+            crate::algos::cannon::cannon_on_grid(ctx, spec.comp, spec.q, spec.a, spec.b, &grid)
+                .c_block
+        }
+        Schedule::DnsBlocking => {
+            crate::algos::mmm_dns::dns_eager(ctx, spec.comp, spec.q, spec.a, spec.b).c_block
+        }
+        Schedule::Generic => {
+            mmm_generic::mmm_generic(ctx, spec.comp, spec.q, spec.a, spec.b).c_block
+        }
+        other => unreachable!("eager mode never selects {}", other.name()),
+    }
+}
+
+// --------------------------------------------------------------- apsp
+
+/// Spec for the consolidated all-pairs-shortest-paths entry point
+/// ([`apsp`]).  Builder methods consume `self`.
+pub struct FwSpec<'s> {
+    comp: &'s Compute,
+    q: usize,
+    src: &'s FwSource,
+    ranks: Option<&'s [usize]>,
+    mode: Option<PlanMode>,
+}
+
+impl<'s> FwSpec<'s> {
+    pub fn new(comp: &'s Compute, q: usize, src: &'s FwSource) -> Self {
+        FwSpec { comp, q, src, ranks: None, mode: None }
+    }
+
+    /// Place the grid on an explicit rank subset.
+    pub fn on(mut self, ranks: &'s [usize]) -> Self {
+        self.ranks = Some(ranks);
+        self
+    }
+
+    /// Override the runtime's [`PlanMode`] for this call.
+    pub fn mode(mut self, mode: PlanMode) -> Self {
+        self.mode = Some(mode);
+        self
+    }
+}
+
+/// Outcome of a planned APSP run on one rank.
+pub struct FwPlanOutput {
+    /// `Some((i, j, final block))` on grid members.
+    pub d_block: Option<(usize, usize, Block)>,
+    pub t_local: f64,
+    pub schedule: Schedule,
+}
+
+/// The consolidated APSP entry point.  One schedule exists (the
+/// overlap pass proves the per-pivot broadcasts have no independent
+/// compute to hide behind — see
+/// `passes::tests::fw_pivot_broadcasts_do_not_split`), so Auto and
+/// Forced(fw) interpret the same plan; Eager runs the hand-written
+/// loop.
+pub fn apsp(ctx: &Ctx, spec: FwSpec<'_>) -> FwPlanOutput {
+    let mode = spec.mode.unwrap_or_else(|| ctx.plan_mode());
+    if let PlanMode::Forced(s) = mode {
+        assert!(s == Schedule::FwBlocking, "{} is not an APSP schedule", s.name());
+    }
+    let q = spec.q;
+    let grid = match spec.ranks {
+        Some(r) => GridN::square_on(ctx, q, r),
+        None => GridN::square(ctx, q),
+    };
+    let d_block = if mode == PlanMode::Eager {
+        crate::algos::floyd_warshall::fw_on_grid(ctx, spec.comp, q, spec.src, &grid).d_block
+    } else {
+        let n = spec.src.n();
+        assert_eq!(n % q, 0, "n must be divisible by q");
+        if mode == PlanMode::Auto {
+            let mut sp = span("plan", Category::Plan);
+            sp.arg("schedule", Schedule::FwBlocking.code() as f64);
+            sp.arg("q", q as f64);
+            sp.arg("candidates", 1.0);
+        }
+        let mut g = build_fw(n, q);
+        passes::fuse(&mut g);
+        passes::overlap(&mut g);
+        let srcs = Sources::Fw { src: spec.src, b: n / q };
+        let out = interpret(ctx, spec.comp, &g, &grid, &srcs);
+        grid.my_coord().zip(out).map(|(c, blk)| (c[0], c[1], blk))
+    };
+    FwPlanOutput { d_block, t_local: ctx.now(), schedule: Schedule::FwBlocking }
+}
+
+/// Price the APSP plan (single candidate today — kept symmetric with
+/// [`explain_matmul`] so `repro plan --explain` covers both).
+pub fn explain_apsp(ctx: &Ctx, spec: FwSpec<'_>) -> Explain {
+    let q = spec.q;
+    let n = spec.src.n();
+    assert_eq!(n % q, 0, "n must be divisible by q");
+    let b = n / q;
+    let need = q * q;
+    let avail = spec.ranks.map_or(ctx.world, <[usize]>::len);
+    let ranks = match spec.ranks {
+        Some(r) => r[..need].to_vec(),
+        None => (0..need).collect(),
+    };
+    let rate = match spec.comp {
+        Compute::Modeled { rate } => *rate,
+        _ => DEFAULT_RATE,
+    };
+    let g = build_fw(n, q);
+    let pc = PriceCtx {
+        topo: ctx.topology().as_ref(),
+        link: ctx.link_cost(),
+        rate,
+        block: b,
+        dims: vec![q, q],
+        ranks,
+    };
+    let t = price(&g, &pc);
+    Explain {
+        what: "apsp",
+        q,
+        block: b,
+        world: avail,
+        candidates: vec![(Schedule::FwBlocking, t)],
+        chosen: Schedule::FwBlocking,
+    }
+}
+
+/// Reassemble a planned product's distributed result (verification,
+/// examples, CLI).  Mirrors the per-algorithm `collect_c` helpers.
+pub fn collect_c(results: &[PlanOutput], q: usize, b: usize) -> crate::matrix::dense::Mat {
+    let mut c = crate::matrix::dense::Mat::zeros(q * b, q * b);
+    let mut seen = 0;
+    for out in results {
+        if let Some((i, j, blk)) = &out.c_block {
+            c.set_block(*i, *j, &blk.materialize());
+            seen += 1;
+        }
+    }
+    assert_eq!(seen, q * q, "expected one output block per grid slot");
+    c
+}
+
+/// Reassemble a planned APSP's distributed distance matrix.
+pub fn collect_d(results: &[FwPlanOutput], q: usize, b: usize) -> crate::matrix::dense::Mat {
+    let mut d = crate::matrix::dense::Mat::zeros(q * b, q * b);
+    let mut seen = 0;
+    for out in results {
+        if let Some((i, j, blk)) = &out.d_block {
+            d.set_block(*i, *j, &blk.materialize());
+            seen += 1;
+        }
+    }
+    assert_eq!(seen, q * q, "expected one output block per grid slot");
+    d
+}
+
+// ------------------------------------------------------------ explain
+
+/// The planner's reasoning, for `repro plan --explain` and tests.
+pub struct Explain {
+    pub what: &'static str,
+    pub q: usize,
+    pub block: usize,
+    pub world: usize,
+    /// Every feasible schedule with its dry-run modeled `T_P`.
+    pub candidates: Vec<(Schedule, f64)>,
+    pub chosen: Schedule,
+}
+
+impl Explain {
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "execution plan: {} q={} block={} ranks={}\n  {:<18} modeled T_P\n",
+            self.what, self.q, self.block, self.world, "schedule"
+        );
+        for &(s, t) in &self.candidates {
+            let mark = if s == self.chosen { '>' } else { ' ' };
+            let tag = if s == self.chosen { "  (chosen)" } else { "" };
+            out.push_str(&format!("{mark} {:<18} {t:.6e} s{tag}\n", s.name()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_names_round_trip() {
+        for s in [
+            Schedule::CannonBlocking,
+            Schedule::CannonPipelined,
+            Schedule::DnsBlocking,
+            Schedule::DnsPipelined,
+            Schedule::Generic,
+            Schedule::FwBlocking,
+        ] {
+            assert_eq!(Schedule::parse(s.name()), Some(s));
+            assert_eq!(Schedule::from_code(s.code()), Some(s));
+        }
+        assert_eq!(Schedule::parse("nope"), None);
+        assert_eq!(Schedule::from_code(99), None);
+    }
+
+    #[test]
+    fn plan_mode_parses() {
+        assert_eq!(PlanMode::parse("auto"), Some(PlanMode::Auto));
+        assert_eq!(PlanMode::parse("eager"), Some(PlanMode::Eager));
+        assert_eq!(
+            PlanMode::parse("cannon-pipelined"),
+            Some(PlanMode::Forced(Schedule::CannonPipelined))
+        );
+        assert_eq!(PlanMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn feasibility_gates_by_available_ranks() {
+        let c4 = feasible_matmul(2, 4, false);
+        assert_eq!(c4, vec![Schedule::CannonBlocking, Schedule::CannonPipelined]);
+        let c8 = feasible_matmul(2, 8, false);
+        assert!(c8.contains(&Schedule::DnsPipelined));
+        assert!(c8.contains(&Schedule::Generic));
+        // placed runs exclude the generic schedule (no subset form)
+        assert!(!feasible_matmul(2, 8, true).contains(&Schedule::Generic));
+    }
+
+    #[test]
+    fn explain_render_marks_the_choice() {
+        let e = Explain {
+            what: "matmul",
+            q: 4,
+            block: 256,
+            world: 16,
+            candidates: vec![
+                (Schedule::CannonBlocking, 2.0e-2),
+                (Schedule::CannonPipelined, 1.5e-2),
+            ],
+            chosen: Schedule::CannonPipelined,
+        };
+        let r = e.render();
+        assert!(r.contains("> cannon-pipelined"));
+        assert!(r.contains("(chosen)"));
+        assert!(r.contains("  cannon "));
+    }
+}

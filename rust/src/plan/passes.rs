@@ -1,0 +1,270 @@
+//! Plan optimization passes: elementwise fusion and automatic
+//! split-phase overlap.
+//!
+//! Both passes are pure graph rewrites — they run identically on every
+//! rank from the graph alone (the SPMD-consistency rule: no rank may
+//! make a schedule decision another rank can't reproduce without
+//! communication).
+
+use super::ir::{Node, Op, PlanGraph};
+
+/// Fuse adjacent elementwise chains: an `Ew` node whose left input is
+/// another `Ew`/`FusedEw` with no other consumer, recorded in the same
+/// stage, folds into one [`Op::FusedEw`] — executed as a single
+/// [`crate::matrix::gemm::ew_chain_mt_with`] pass.  Per-element fold
+/// order is preserved, so fusion is bit-exact; only the intermediate
+/// materializations disappear.  Returns the number of nodes fused away.
+pub(crate) fn fuse(g: &mut PlanGraph) -> usize {
+    let mut fused = 0;
+    loop {
+        let uses = g.use_counts();
+        // Find a fusable pair: consumer `id` whose chain head `x` is a
+        // dead-end elementwise node in the same stage.
+        let mut target = None;
+        for &id in &g.order {
+            let (x, op, y) = match g.nodes[id].op {
+                Op::Ew { op, x, y } => (x, op, y),
+                _ => continue,
+            };
+            let same_stage = g.nodes[x].stage == g.nodes[id].stage;
+            let single_use = uses[x] == 1 && x != g.output;
+            let chainable = matches!(g.nodes[x].op, Op::Ew { .. } | Op::FusedEw { .. });
+            if same_stage && single_use && chainable {
+                target = Some((id, x, op, y));
+                break;
+            }
+        }
+        let Some((id, x, op, y)) = target else { return fused };
+        let new_op = match g.nodes[x].op.clone() {
+            Op::Ew { op: op0, x: x0, y: y0 } => {
+                Op::FusedEw { x: x0, ops: vec![(op0, y0), (op, y)] }
+            }
+            Op::FusedEw { x: x0, mut ops } => {
+                ops.push((op, y));
+                Op::FusedEw { x: x0, ops }
+            }
+            _ => unreachable!(),
+        };
+        g.nodes[id].op = new_op;
+        g.order.retain(|&n| n != x);
+        fused += 1;
+    }
+}
+
+/// Reachability: is `to` reachable from `from` along op inputs-to-output
+/// edges?  (Graphs here are tens of nodes; a per-query DFS is fine.)
+fn reaches(g: &PlanGraph, from: usize, to: usize) -> bool {
+    if from == to {
+        return true;
+    }
+    // consumers of `from`
+    let mut stack = vec![from];
+    let mut seen = vec![false; g.nodes.len()];
+    seen[from] = true;
+    while let Some(n) = stack.pop() {
+        for (id, node) in g.nodes.iter().enumerate() {
+            if !seen[id] && node.op.inputs().contains(&n) {
+                if id == to {
+                    return true;
+                }
+                seen[id] = true;
+                stack.push(id);
+            }
+        }
+    }
+    false
+}
+
+/// Automatic overlap: mark a comm node split-phase when at least one
+/// compute node independent of it (neither ancestor nor descendant) sits
+/// between its position and its first consumer's stage — i.e. there is
+/// real work to hide the transfer behind.  Split nodes are then hoisted
+/// to the front of their stage (stopping at their producers and behind
+/// earlier split comms), which is exactly the hand-written pipelined
+/// shape: *start the shifts, compute, wait*.  Returns the number of
+/// nodes split.
+pub(crate) fn overlap(g: &mut PlanGraph) -> usize {
+    let mut split = 0;
+    let n = g.nodes.len();
+    for id in 0..n {
+        if !g.nodes[id].op.is_comm() {
+            continue;
+        }
+        // Candidate overlap window: compute nodes in a stage >= the comm
+        // node's stage but strictly before its first consumer.
+        let first_consumer_stage = g
+            .nodes
+            .iter()
+            .filter(|node| node.op.inputs().contains(&id))
+            .map(|node| node.stage)
+            .min();
+        let comm_stage = g.nodes[id].stage;
+        let hideable = (0..n).any(|z| {
+            if !g.nodes[z].op.is_compute() {
+                return false;
+            }
+            let zs = g.nodes[z].stage;
+            let in_window = zs >= comm_stage
+                && match first_consumer_stage {
+                    Some(fc) => zs < fc || (zs == fc && fc > comm_stage),
+                    None => true,
+                };
+            in_window && !reaches(g, id, z) && !reaches(g, z, id)
+        });
+        if hideable {
+            g.nodes[id].split = true;
+            split += 1;
+        }
+    }
+    if split > 0 {
+        hoist_split(g);
+    }
+    split
+}
+
+/// Move each split comm node as early as possible within its stage:
+/// bubble it up past nodes that are not its ancestors, stopping behind
+/// any earlier split comm (so start order matches record order — the
+/// same FIFO the eager pipelined variants use).
+fn hoist_split(g: &mut PlanGraph) {
+    let order = std::mem::take(&mut g.order);
+    let mut out: Vec<usize> = Vec::with_capacity(order.len());
+    for id in order {
+        out.push(id);
+        let node: &Node = &g.nodes[id];
+        if !(node.split && node.op.is_comm()) {
+            continue;
+        }
+        let mut pos = out.len() - 1;
+        while pos > 0 {
+            let prev = out[pos - 1];
+            let same_stage = g.nodes[prev].stage == node.stage;
+            let prev_is_split_comm = g.nodes[prev].split && g.nodes[prev].op.is_comm();
+            if !same_stage || prev_is_split_comm || reaches(g, prev, id) {
+                break;
+            }
+            out.swap(pos - 1, pos);
+            pos -= 1;
+        }
+    }
+    g.order = out;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::ir::{build_cannon, build_dns, build_fw, EwKind, PlanBuilder, SourceMap};
+
+    #[test]
+    fn fuse_collapses_elementwise_chain() {
+        // (a + b) min c + d recorded in one stage fuses to one node.
+        let mut p = PlanBuilder::new(vec![1, 1]);
+        let a = p.load(SourceMap::DirectA);
+        let b = p.load(SourceMap::DirectB);
+        let c = p.load(SourceMap::DirectA);
+        let d = p.load(SourceMap::DirectB);
+        let s = p.ew(EwKind::Add, a, b);
+        let m = p.ew(EwKind::Min, s, c);
+        let out = p.ew(EwKind::Add, m, d);
+        let mut g = p.finish(out);
+        assert_eq!(fuse(&mut g), 2);
+        assert_eq!(g.order.len(), 5); // 4 loads + 1 fused node
+        match &g.nodes[g.output].op {
+            Op::FusedEw { ops, .. } => {
+                let kinds: Vec<EwKind> = ops.iter().map(|(k, _)| *k).collect();
+                assert_eq!(kinds, vec![EwKind::Add, EwKind::Min, EwKind::Add]);
+            }
+            other => panic!("expected FusedEw, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fuse_respects_fanout_and_stages() {
+        // A chain whose head has a second consumer must not fuse.
+        let mut p = PlanBuilder::new(vec![1, 1]);
+        let a = p.load(SourceMap::DirectA);
+        let b = p.load(SourceMap::DirectB);
+        let s = p.ew(EwKind::Add, a, b);
+        let (s1, s2) = p.dup(s);
+        let c = p.load(SourceMap::DirectA);
+        let t = p.ew(EwKind::Min, s1, c);
+        let out = p.ew(EwKind::Add, t, s2);
+        let mut g = p.finish(out);
+        // `s` has two consumers → only t-into-out may fuse... but t's
+        // chain head is s (2 uses), so t stays; out's head t has 1 use →
+        // out fuses with t, whose input s remains materialized.
+        assert_eq!(fuse(&mut g), 1);
+        // Cross-stage chains never fuse.
+        let mut p = PlanBuilder::new(vec![1, 1]);
+        let a = p.load(SourceMap::DirectA);
+        let b = p.load(SourceMap::DirectB);
+        let s = p.ew(EwKind::Add, a, b);
+        p.next_stage();
+        let c = p.load(SourceMap::DirectA);
+        let out = p.ew(EwKind::Min, s, c);
+        let mut g = p.finish(out);
+        assert_eq!(fuse(&mut g), 0);
+    }
+
+    #[test]
+    fn cannon_accumulate_does_not_fuse() {
+        // Cannon's adds chain across stages (each add consumes the
+        // previous stage's accumulator) — fusing them would break the
+        // shift pipeline, and the stage guard prevents it.
+        let mut g = build_cannon(4);
+        assert_eq!(fuse(&mut g), 0);
+    }
+
+    #[test]
+    fn overlap_splits_cannon_shifts_and_hoists_them() {
+        let mut g = build_cannon(3);
+        let split = overlap(&mut g);
+        assert_eq!(split, 4); // 2 shifts per non-final stage
+        // In the rewritten order, each stage's shifts precede its matmul,
+        // preserving shift-A-before-shift-B record order.
+        let pos = |id: usize| g.order.iter().position(|&n| n == id).unwrap();
+        for (id, node) in g.nodes.iter().enumerate() {
+            if let Op::Shift { .. } = node.op {
+                assert!(node.split);
+                // find this stage's matmul
+                let mm = g
+                    .nodes
+                    .iter()
+                    .enumerate()
+                    .find(|(_, n)| matches!(n.op, Op::Matmul { .. }) && n.stage == node.stage)
+                    .map(|(i, _)| i)
+                    .unwrap();
+                assert!(pos(id) < pos(mm), "shift {id} must start before matmul {mm}");
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_pipelines_chunked_dns_reductions() {
+        let mut g = build_dns(2, 3);
+        let split = overlap(&mut g);
+        // Each panel reduce except the last hides behind the next
+        // panel's GEMM; the last has nothing left to overlap, and a
+        // blocking reduce costs exactly what the eager pipelined
+        // variant's degenerate start-then-wait pair costs.
+        assert_eq!(split, 2);
+    }
+
+    #[test]
+    fn blocking_dns_has_nothing_to_overlap() {
+        // One GEMM, one reduce, both in stage 0, GEMM is the reduce's
+        // ancestor: no independent compute exists to hide behind.
+        let mut g = build_dns(2, 1);
+        assert_eq!(overlap(&mut g), 0);
+    }
+
+    #[test]
+    fn fw_pivot_broadcasts_do_not_split() {
+        // Alg. 3's per-pivot broadcasts feed the same stage's update,
+        // and the prior update is their ancestor — there is no
+        // independent compute window, so the pass must leave them
+        // blocking (the eager FW shape).
+        let mut g = build_fw(4, 2);
+        assert_eq!(overlap(&mut g), 0);
+    }
+}

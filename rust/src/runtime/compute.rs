@@ -346,6 +346,51 @@ impl Compute {
         }
     }
 
+    /// Elementwise combine `x ⊕ y` on blocks with `⊕` chosen at runtime
+    /// — the single-op entry the plan interpreter uses for an unfused
+    /// [`gemm::EwKind`] node.  Dispatches to [`Compute::add`] /
+    /// [`Compute::min_blocks`], so clocks and results are exactly those
+    /// of the eager combine.
+    pub fn ew(&self, ctx: &Ctx, x: Block, y: Block, op: gemm::EwKind) -> Block {
+        match op {
+            gemm::EwKind::Add => self.add(ctx, x, y),
+            gemm::EwKind::Min => self.min_blocks(ctx, x, y),
+        }
+    }
+
+    /// Fused elementwise chain `((base ⊕₁ m₁) ⊕₂ m₂) …` in one kernel
+    /// pass ([`gemm::ew_chain_mt_with`]) — the plan layer's fuse target.
+    /// Per-element fold order equals the op order, so the result is
+    /// bit-identical to the unfused chain of [`Compute::ew`] calls; the
+    /// modeled charge (one element-touch per op, like [`Compute::add`])
+    /// is also identical, fused or not — fusion saves real memory
+    /// traffic, never model time.
+    pub fn ew_chain(&self, ctx: &Ctx, base: Block, args: &[(gemm::EwKind, Block)]) -> Block {
+        if args.is_empty() {
+            return base;
+        }
+        let flops = (base.rows() * base.cols() * args.len()) as f64;
+        if self.is_modeled() {
+            self.charge_modeled(ctx, flops);
+            return base;
+        }
+        // Proxies in a real mode only occur for degenerate non-member
+        // blocks (same rule as min_blocks): pass the base through.
+        if base.is_proxy() || args.iter().any(|(_, b)| b.is_proxy()) {
+            return base;
+        }
+        ctx.timed_elementwise(flops, || {
+            let refs: Vec<(gemm::EwKind, &Mat)> =
+                args.iter().map(|(op, b)| (*op, b.as_mat())).collect();
+            Block::Real(gemm::ew_chain_mt_with(
+                base.as_mat(),
+                &refs,
+                ctx.threads_per_rank(),
+                ctx.block_params(),
+            ))
+        })
+    }
+
     /// Floyd-Warshall pivot update (Alg. 3 lines 9-14) on a block.
     pub fn fw_update(&self, ctx: &Ctx, d: Block, ik: &Seg, kj: &Seg) -> Block {
         let flops = 2.0 * (d.rows() * d.cols()) as f64;

@@ -355,6 +355,7 @@ mod tests {
                 status: "running".into(),
                 gflops: 0.0,
                 queue_wait_secs: 0.002,
+                schedule: "-".into(),
             }],
             ..Default::default()
         }));

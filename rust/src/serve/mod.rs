@@ -390,6 +390,10 @@ pub(crate) struct MemberDone {
     pub output: Option<JobOutput>,
     /// This member's **scoped** counters for the assignment.
     pub metrics: MetricsSnapshot,
+    /// The planner's chosen schedule for the job
+    /// ([`Schedule::code`](crate::plan::Schedule::code)); `None` for
+    /// assignments that don't go through the planner (faults).
+    pub schedule: Option<u8>,
 }
 
 impl Data for MemberDone {
@@ -399,6 +403,7 @@ impl Data for MemberDone {
             + self.output.as_ref().map_or(1, |o| 1 + o.byte_size())
             + 88
             + 40 // profile tag (kc/mc/nc/mr/nr as u64)
+            + 9 // schedule (Option<u64>)
     }
 }
 
@@ -425,6 +430,7 @@ impl WireData for MemberDone {
         (m.profile.nc as u64).encode(out);
         (m.profile.mr as u64).encode(out);
         (m.profile.nr as u64).encode(out);
+        self.schedule.map(u64::from).encode(out);
     }
     fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
         Ok(MemberDone {
@@ -452,6 +458,7 @@ impl WireData for MemberDone {
                     nr: r.u64()? as u8,
                 },
             },
+            schedule: Option::<u64>::decode(r)?.map(|c| c as u8),
         })
     }
 }
@@ -527,6 +534,7 @@ mod tests {
                 flops: 1e6,
                 ..Default::default()
             },
+            schedule: Some(crate::plan::Schedule::CannonBlocking.code()),
         };
         let mut buf = Vec::new();
         d.encode(&mut buf);
@@ -538,5 +546,6 @@ mod tests {
         assert_eq!(back.metrics.msgs_sent, 3);
         assert_eq!(back.metrics.flops, 1e6);
         assert!(matches!(back.output, Some(JobOutput::Mat(_))));
+        assert_eq!(back.schedule, Some(crate::plan::Schedule::CannonBlocking.code()));
     }
 }

@@ -46,12 +46,12 @@ use std::time::{Duration, Instant};
 use super::scheduler::{plan_next, Pool};
 use super::stats::{JobStat, QuantileSummary, StatsSnapshot};
 use super::{client, Control, JobOutput, JobSpec, JobStatus, MemberDone, CONTROL_TAG, DONE_TAG};
-use crate::algos::cannon::mmm_cannon_on;
-use crate::algos::floyd_warshall::{floyd_warshall_par_on, FwSource};
+use crate::algos::floyd_warshall::FwSource;
 use crate::comm::group::Group;
 use crate::matrix::block::{Block, BlockSource};
 use crate::matrix::dense::Mat;
 use crate::metrics::{Histogram, JsonWriter, MetricsSnapshot, Report};
+use crate::plan::{self, FwSpec, MatmulSpec, Schedule};
 use crate::runtime::compute::Compute;
 use crate::spmd::{Ctx, Runtime};
 use crate::trace;
@@ -112,6 +112,9 @@ struct JobEntry {
     submitted: Instant,
     /// Submit → assign wait, set at the Queued → Running transition.
     queue_wait_secs: Option<f64>,
+    /// The planner's chosen schedule code, reported with the members'
+    /// completion (`None` until the job finishes, or for faults).
+    schedule: Option<u8>,
 }
 
 struct SharedInner {
@@ -229,6 +232,7 @@ impl ServeHandle {
                 status,
                 output: None,
                 member_metrics: Vec::new(),
+                schedule: None,
                 submitted: Instant::now(),
                 queue_wait_secs: None,
             },
@@ -300,6 +304,7 @@ impl ServeHandle {
                 status: e.status.label().to_string(),
                 gflops: Report::aggregate(&e.member_metrics).max_gflops,
                 queue_wait_secs: e.queue_wait_secs.unwrap_or(-1.0),
+                schedule: schedule_label(e.schedule),
             })
             .collect();
         jobs.sort_by_key(|j| j.id);
@@ -343,6 +348,9 @@ impl ServeHandle {
             None => {
                 w.key("queue_wait_secs").num(f64::NAN); // → null
             }
+        }
+        if let Some(s) = e.schedule.and_then(Schedule::from_code) {
+            w.key("schedule").str_val(s.name());
         }
         w.key("ranks").uint(r.ranks as u64);
         w.key("msgs_sent").uint(r.total.msgs_sent);
@@ -497,6 +505,7 @@ struct AssignState {
     err: Option<String>,
     output: Option<JobOutput>,
     member_metrics: Vec<MetricsSnapshot>,
+    schedule: Option<u8>,
 }
 
 const IDLE_POLL: Duration = Duration::from_micros(300);
@@ -519,6 +528,7 @@ fn dispatcher(ctx: &Ctx, shared: &ServeShared, opts: &ServeOptions) {
                         .expect("completion report for unknown assignment");
                     st.unreported.retain(|&r| r != src);
                     st.member_metrics.push(done.metrics);
+                    st.schedule = st.schedule.or(done.schedule);
                     if let Some(out) = done.output {
                         st.output = Some(out);
                     }
@@ -617,6 +627,7 @@ fn dispatcher(ctx: &Ctx, shared: &ServeShared, opts: &ServeOptions) {
                     err: None,
                     output: None,
                     member_metrics: Vec::new(),
+                    schedule: None,
                 },
             );
             progress = true;
@@ -672,6 +683,7 @@ fn finish_assignment(shared: &ServeShared, st: AssignState) {
     for (k, id) in st.jobs.iter().enumerate() {
         let entry = inner.jobs.get_mut(id).expect("finished job is in the table");
         entry.member_metrics = st.member_metrics.clone();
+        entry.schedule = st.schedule;
         match &err {
             Some(e) => entry.status = JobStatus::Failed(e.clone()),
             None => {
@@ -716,15 +728,21 @@ fn worker(ctx: &Ctx) {
                 drop(sp);
                 let metrics = ctx.metrics.snapshot().scoped(&baseline);
                 let done = match result {
-                    Ok(output) => {
-                        MemberDone { assign, ok: true, err: None, output, metrics }
-                    }
+                    Ok((output, schedule)) => MemberDone {
+                        assign,
+                        ok: true,
+                        err: None,
+                        output,
+                        metrics,
+                        schedule: schedule.map(Schedule::code),
+                    },
                     Err(e) => MemberDone {
                         assign,
                         ok: false,
                         err: Some(panic_text(e.as_ref())),
                         output: None,
                         metrics,
+                        schedule: None,
                     },
                 };
                 ctx.send(0, DONE_TAG, done);
@@ -734,36 +752,42 @@ fn worker(ctx: &Ctx) {
 }
 
 /// Execute one assignment on this member.  Returns the job output on
-/// the job root (`ranks[0]`), `None` elsewhere.
-fn run_job(ctx: &Ctx, spec: &JobSpec, ranks: &[usize]) -> Option<JobOutput> {
+/// the job root (`ranks[0]`, `None` elsewhere) plus the planner's
+/// chosen schedule code (`None` for fault injections).
+fn run_job(ctx: &Ctx, spec: &JobSpec, ranks: &[usize]) -> (Option<JobOutput>, Option<Schedule>) {
     let root = ctx.rank == ranks[0];
     match spec {
         JobSpec::Matmul { q, b, seed_a, seed_b } => {
             let a = BlockSource::real(*b, *seed_a);
             let bb = BlockSource::real(*b, *seed_b);
-            let out = mmm_cannon_on(ctx, &Compute::Native, *q, &a, &bb, ranks);
-            gather_result(ctx, ranks, *q, *b, out.c_block).map(JobOutput::Mat)
+            let out = plan::matmul(ctx, MatmulSpec::new(&Compute::Native, *q, &a, &bb).on(ranks));
+            (
+                gather_result(ctx, ranks, *q, *b, out.c_block).map(JobOutput::Mat),
+                Some(out.schedule),
+            )
         }
         JobSpec::MatmulBatch { q, b, pairs } => {
             let mut mats = Vec::with_capacity(pairs.len());
+            let mut schedule = None;
             for &(sa, sb) in pairs {
                 let a = BlockSource::real(*b, sa);
                 let bb = BlockSource::real(*b, sb);
-                let out = mmm_cannon_on(ctx, &Compute::Native, *q, &a, &bb, ranks);
+                let out =
+                    plan::matmul(ctx, MatmulSpec::new(&Compute::Native, *q, &a, &bb).on(ranks));
+                schedule = Some(out.schedule);
                 if let Some(m) = gather_result(ctx, ranks, *q, *b, out.c_block) {
                     mats.push(m);
                 }
             }
-            if root {
-                Some(JobOutput::Mats(mats))
-            } else {
-                None
-            }
+            (if root { Some(JobOutput::Mats(mats)) } else { None }, schedule)
         }
         JobSpec::FloydWarshall { q, n, density, seed } => {
             let src = FwSource::Real { n: *n, density: *density, seed: *seed };
-            let out = floyd_warshall_par_on(ctx, &Compute::Native, *q, &src, ranks);
-            gather_result(ctx, ranks, *q, *n / *q, out.d_block).map(JobOutput::Mat)
+            let out = plan::apsp(ctx, FwSpec::new(&Compute::Native, *q, &src).on(ranks));
+            (
+                gather_result(ctx, ranks, *q, *n / *q, out.d_block).map(JobOutput::Mat),
+                Some(out.schedule),
+            )
         }
         JobSpec::Fault { msg, .. } => {
             let g = Group::new(ctx, ranks.to_vec());
@@ -775,9 +799,15 @@ fn run_job(ctx: &Ctx, spec: &JobSpec, ranks: &[usize]) -> Option<JobOutput> {
             // dispatcher's scoped poison fails us promptly instead of
             // burning the 60 s deadlock oracle
             let _: u64 = ctx.recv(ranks[0], tag);
-            None
+            (None, None)
         }
     }
+}
+
+/// Human label for a recorded schedule code (`"-"` until known).
+fn schedule_label(code: Option<u8>) -> String {
+    code.and_then(Schedule::from_code)
+        .map_or_else(|| "-".to_string(), |s| s.name().to_string())
 }
 
 /// Gather every member's result block to the job root and assemble the
@@ -803,10 +833,9 @@ fn gather_result(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algos::cannon::{collect_c, mmm_cannon};
-    use crate::algos::floyd_warshall::{collect_d, floyd_warshall_par};
     use crate::comm::backend::BackendProfile;
     use crate::comm::cost::CostParams;
+    use crate::plan::{collect_c, collect_d};
     use crate::testing::{spmd_run, test_threads};
 
     fn serving_rt(world: usize) -> Runtime {
@@ -823,7 +852,7 @@ mod tests {
         let res = spmd_run(q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
             let a = BlockSource::real(b, seed_a);
             let bb = BlockSource::real(b, seed_b);
-            mmm_cannon(ctx, &Compute::Native, q, &a, &bb)
+            plan::matmul(ctx, MatmulSpec::new(&Compute::Native, q, &a, &bb))
         });
         collect_c(&res.results, q, b)
     }
@@ -831,7 +860,7 @@ mod tests {
     fn oracle_fw(q: usize, n: usize, density: f64, seed: u64) -> Mat {
         let res = spmd_run(q * q, BackendProfile::openmpi_fixed(), CostParams::free(), |ctx| {
             let src = FwSource::Real { n, density, seed };
-            floyd_warshall_par(ctx, &Compute::Native, q, &src)
+            plan::apsp(ctx, FwSpec::new(&Compute::Native, q, &src))
         });
         collect_d(&res.results, q, n / q)
     }

@@ -94,11 +94,14 @@ pub struct JobStat {
     /// Dispatcher-side submit → assign wait; negative while the job is
     /// still queued (or was rejected — it never gets assigned).
     pub queue_wait_secs: f64,
+    /// The planner's chosen schedule name ("-" until the job finishes,
+    /// or when the job kind bypasses the planner).
+    pub schedule: String,
 }
 
 impl Data for JobStat {
     fn byte_size(&self) -> usize {
-        8 + (8 + self.kind.len()) + (8 + self.status.len()) + 16
+        8 + (8 + self.kind.len()) + (8 + self.status.len()) + 16 + (8 + self.schedule.len())
     }
 }
 
@@ -109,6 +112,7 @@ impl WireData for JobStat {
         self.status.encode(out);
         self.gflops.encode(out);
         self.queue_wait_secs.encode(out);
+        self.schedule.encode(out);
     }
     fn decode(r: &mut WireReader<'_>) -> Result<Self, WireError> {
         Ok(JobStat {
@@ -117,6 +121,7 @@ impl WireData for JobStat {
             status: String::decode(r)?,
             gflops: f64::decode(r)?,
             queue_wait_secs: f64::decode(r)?,
+            schedule: String::decode(r)?,
         })
     }
 }
@@ -179,6 +184,7 @@ impl StatsSnapshot {
                         j.id.to_string(),
                         j.kind.clone(),
                         j.status.clone(),
+                        j.schedule.clone(),
                         format!("{:.2}", j.gflops),
                         if j.queue_wait_secs < 0.0 {
                             "-".into()
@@ -189,7 +195,7 @@ impl StatsSnapshot {
                 })
                 .collect();
             out.push_str(&render_table(
-                &["job", "kind", "status", "gflops", "wait_ms"],
+                &["job", "kind", "status", "schedule", "gflops", "wait_ms"],
                 &rows,
             ));
         }
@@ -219,6 +225,7 @@ impl StatsSnapshot {
             w.key("id").uint(j.id);
             w.key("kind").str_val(&j.kind);
             w.key("status").str_val(&j.status);
+            w.key("schedule").str_val(&j.schedule);
             w.key("gflops").num(j.gflops);
             if j.queue_wait_secs < 0.0 {
                 w.key("queue_wait_secs").num(f64::NAN); // → null
@@ -302,6 +309,7 @@ mod tests {
                     status: "done".into(),
                     gflops: 2.5,
                     queue_wait_secs: 0.001,
+                    schedule: "cannon".into(),
                 },
                 JobStat {
                     id: 2,
@@ -309,6 +317,7 @@ mod tests {
                     status: "queued".into(),
                     gflops: 0.0,
                     queue_wait_secs: -1.0,
+                    schedule: "-".into(),
                 },
             ],
         }

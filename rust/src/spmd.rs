@@ -51,6 +51,7 @@ use crate::comm::wire::WireData;
 use crate::config::MachineConfig;
 use crate::matrix::params::BlockParams;
 use crate::metrics::{MetricsSnapshot, ProfileTag, RankMetrics};
+use crate::plan::PlanMode;
 use crate::trace;
 use crate::tune::TuneProfile;
 
@@ -103,6 +104,10 @@ pub struct Ctx {
     /// [`TuneProfile`] or the builder pinned one.  `Compute::Native`
     /// threads this into every kernel call.
     block: BlockParams,
+    /// How the consolidated algorithm entry points schedule themselves
+    /// (see [`crate::plan`]): price-and-pick by default, overridable per
+    /// runtime or per machine config.
+    plan_mode: PlanMode,
 }
 
 impl Ctx {
@@ -116,6 +121,7 @@ impl Ctx {
         topo: Arc<Topology>,
         block: BlockParams,
         link_override: Option<HierCost>,
+        plan_mode: PlanMode,
     ) -> Self {
         let cost = backend.cost(machine);
         let collectives = backend.collectives();
@@ -150,6 +156,7 @@ impl Ctx {
             overlap_depth: Cell::new(0),
             threads_per_rank: threads_per_rank.max(1),
             block,
+            plan_mode,
         }
     }
 
@@ -594,6 +601,14 @@ impl Ctx {
     pub fn link_cost(&self) -> HierCost {
         self.link
     }
+
+    /// The runtime's scheduling policy for the consolidated algorithm
+    /// entry points ([`crate::plan::matmul`] / [`crate::plan::apsp`]):
+    /// [`PlanMode::Auto`] unless the builder or machine config said
+    /// otherwise.  A spec-level `.mode(..)` wins over this.
+    pub fn plan_mode(&self) -> PlanMode {
+        self.plan_mode
+    }
 }
 
 /// Outcome of one SPMD run.
@@ -652,6 +667,9 @@ pub struct Runtime {
     /// Where the active profile came from, for reports ("path" or
     /// "(inline)"); `None` when running on defaults.
     profile_label: Option<String>,
+    /// Scheduling policy handed to every rank's `Ctx` (see
+    /// [`Ctx::plan_mode`]).
+    plan_mode: PlanMode,
 }
 
 /// How span tracing is configured for a runtime (see [`crate::trace`]).
@@ -700,6 +718,7 @@ impl Runtime {
             tune: None,
             block: None,
             machine_tune_path: None,
+            plan_mode: None,
         }
     }
 
@@ -851,6 +870,7 @@ impl Runtime {
                 topo.clone(),
                 self.block,
                 self.link_cal,
+                self.plan_mode,
             );
             rank_span.arg("kc", ctx.block.kc as f64);
             rank_span.arg("mc", ctx.block.mc as f64);
@@ -930,6 +950,7 @@ impl Runtime {
             Arc::new(self.topology()),
             self.block,
             self.link_cal,
+            self.plan_mode,
         );
         // Each process runs its own trace session for its one rank; the
         // spans are gathered to rank 0 below.  The re-exec'd workers
@@ -1095,6 +1116,9 @@ pub struct RuntimeBuilder {
     /// Profile path from a machine config's `tune_profile` key, loaded
     /// at [`RuntimeBuilder::build`] unless an explicit profile was set.
     machine_tune_path: Option<String>,
+    /// Explicit scheduling policy; `None` defers to the machine config,
+    /// then [`PlanMode::Auto`].
+    plan_mode: Option<PlanMode>,
 }
 
 impl RuntimeBuilder {
@@ -1145,6 +1169,9 @@ impl RuntimeBuilder {
         if self.machine_tune_path.is_none() {
             self.machine_tune_path = machine.tune_profile.clone();
         }
+        if self.plan_mode.is_none() {
+            self.plan_mode = machine.plan_mode;
+        }
         self.cost(machine.cost())
     }
 
@@ -1172,6 +1199,19 @@ impl RuntimeBuilder {
     /// order; see [`crate::matrix::gemm`]), only the schedule changes.
     pub fn threads_per_rank(mut self, threads: usize) -> Self {
         self.threads_per_rank = Some(threads.max(1));
+        self
+    }
+
+    /// How the consolidated algorithm entry points
+    /// ([`crate::plan::matmul`] / [`crate::plan::apsp`]) schedule
+    /// themselves: [`PlanMode::Auto`] (the default) dry-runs every
+    /// candidate schedule on the cost model and interprets the cheapest;
+    /// [`PlanMode::Eager`] bypasses the planner for the hand-written
+    /// defaults; [`PlanMode::Forced`] pins one schedule.  Wins over the
+    /// machine config's `plan_mode` key; a spec-level `.mode(..)` wins
+    /// over both.
+    pub fn plan_mode(mut self, mode: PlanMode) -> Self {
+        self.plan_mode = Some(mode);
         self
     }
 
@@ -1257,14 +1297,17 @@ impl RuntimeBuilder {
                 )
             })?,
         };
-        let (machine, machine_threads, machine_rpn) = match self.machine {
-            MachineChoice::Cost(c) => (c, 1, None),
+        let (machine, machine_threads, machine_rpn, machine_plan) = match self.machine {
+            MachineChoice::Cost(c) => (c, 1, None, None),
             MachineChoice::Named(spec) => {
                 let m = MachineConfig::resolve(&spec)?;
-                (m.cost(), m.threads_per_rank.max(1), m.ranks_per_node)
+                (m.cost(), m.threads_per_rank.max(1), m.ranks_per_node, m.plan_mode)
             }
         };
         let threads_per_rank = self.threads_per_rank.unwrap_or(machine_threads);
+        // Scheduling policy precedence: builder knob > machine config >
+        // Auto (price-and-pick).
+        let plan_mode = self.plan_mode.or(machine_plan).unwrap_or_default();
         // Node shape precedence: builder knob > machine config > launch
         // environment (`FOOPAR_RANKS_PER_NODE`, forwarded to re-exec'd
         // workers so all processes derive the same topology) > flat.
@@ -1335,6 +1378,7 @@ impl RuntimeBuilder {
             block,
             link_cal,
             profile_label,
+            plan_mode,
         })
     }
 

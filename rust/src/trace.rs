@@ -103,6 +103,10 @@ pub enum Category {
     /// A transport operation crossing a node boundary (the network leg
     /// of a hybrid transport).
     CommInter,
+    /// Execution-plan orchestration (build / optimize / price /
+    /// interpret in [`crate::plan`]); its exclusive time is planner
+    /// overhead, everything the interpreter launches nests inside it.
+    Plan,
 }
 
 impl Category {
@@ -115,6 +119,7 @@ impl Category {
             Category::Serve => "serve",
             Category::CommIntra => "comm-intra",
             Category::CommInter => "comm-inter",
+            Category::Plan => "plan",
         }
     }
 
@@ -127,6 +132,7 @@ impl Category {
             Category::Serve => 4,
             Category::CommIntra => 5,
             Category::CommInter => 6,
+            Category::Plan => 7,
         }
     }
 
@@ -139,6 +145,7 @@ impl Category {
             4 => Category::Serve,
             5 => Category::CommIntra,
             6 => Category::CommInter,
+            7 => Category::Plan,
             _ => return Err(WireError::Malformed("unknown span category")),
         })
     }
@@ -732,7 +739,11 @@ impl TraceData {
                 Category::Comm => acc.comm += excl,
                 Category::CommIntra => acc.comm_intra += excl,
                 Category::CommInter => acc.comm_inter += excl,
-                Category::Serve => acc.serve += excl,
+                // Plan exclusive time is pure orchestration overhead —
+                // bucket it with serve-plane bookkeeping rather than
+                // compute so the meas/virt kernel calibration stays
+                // honest.
+                Category::Serve | Category::Plan => acc.serve += excl,
                 Category::Rank => acc.idle += excl,
             }
         }

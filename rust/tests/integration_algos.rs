@@ -4,7 +4,10 @@
 
 use std::sync::Arc;
 
-use foopar::algos::{apsp_squaring, dns_baseline, floyd_warshall, mmm_dns, mmm_generic, seq};
+use foopar::algos::{
+    apsp, apsp_squaring, collect_c, collect_d, dns_baseline, floyd_warshall, matmul, mmm_generic,
+    seq, FwSpec, MatmulSpec, PlanMode, Schedule,
+};
 use foopar::comm::backend::BackendProfile;
 use foopar::comm::cost::CostParams;
 use foopar::config::MachineConfig;
@@ -28,9 +31,11 @@ fn dns_random_shapes_match_oracle() {
         let a = BlockSource::real(b, rng.next_u64());
         let bm = BlockSource::real(b, rng.next_u64());
         let res = spmd_run(q * q * q, fixed(), CostParams::free(), |ctx| {
-            mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &bm)
+            let spec = MatmulSpec::new(&Compute::Native, q, &a, &bm)
+                .mode(PlanMode::Forced(Schedule::DnsBlocking));
+            matmul(ctx, spec)
         });
-        let c = mmm_dns::collect_c(&res.results, q, b);
+        let c = collect_c(&res.results, q, b);
         let want = seq::matmul_seq(&a.assemble(q), &bm.assemble(q));
         assert_allclose(&c.data, &want.data, 1e-3, 1e-4);
     });
@@ -45,7 +50,9 @@ fn all_three_mmm_algorithms_agree() {
         let bm = BlockSource::real(b, rng.next_u64());
         let p = q * q * q;
         let dns = spmd_run(p, fixed(), CostParams::free(), |ctx| {
-            mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &bm)
+            let spec = MatmulSpec::new(&Compute::Native, q, &a, &bm)
+                .mode(PlanMode::Forced(Schedule::DnsBlocking));
+            matmul(ctx, spec)
         });
         let gen = spmd_run(p, fixed(), CostParams::free(), |ctx| {
             mmm_generic::mmm_generic(ctx, &Compute::Native, q, &a, &bm)
@@ -53,7 +60,7 @@ fn all_three_mmm_algorithms_agree() {
         let base = spmd_run(p, fixed(), CostParams::free(), |ctx| {
             dns_baseline::dns_baseline(ctx, &Compute::Native, q, &a, &bm)
         });
-        let c1 = mmm_dns::collect_c(&dns.results, q, b);
+        let c1 = collect_c(&dns.results, q, b);
         let c2 = mmm_generic::collect_c(&gen.results, q, b);
         let c3 = dns_baseline::collect_c(&base.results, q, b);
         assert_allclose(&c1.data, &c2.data, 1e-5, 1e-6);
@@ -71,9 +78,9 @@ fn fw_random_graphs_match_oracle() {
         let seed = rng.next_u64();
         let src = floyd_warshall::FwSource::Real { n, density, seed };
         let res = spmd_run(q * q, fixed(), CostParams::free(), |ctx| {
-            floyd_warshall::floyd_warshall_par(ctx, &Compute::Native, q, &src)
+            apsp(ctx, FwSpec::new(&Compute::Native, q, &src))
         });
-        let d = floyd_warshall::collect_d(&res.results, q, b);
+        let d = collect_d(&res.results, q, b);
         let want = floyd_warshall_seq(&Graph::random(n, density, seed));
         assert_allclose(&d.data, &want.data, 1e-3, 1e-3);
     });
@@ -93,10 +100,10 @@ fn squaring_and_fw_agree_on_random_graphs() {
             apsp_squaring::apsp_squaring_par(ctx, &Compute::Native, q, &src)
         });
         let fw = spmd_run(4, fixed(), CostParams::free(), |ctx| {
-            floyd_warshall::floyd_warshall_par(ctx, &Compute::Native, q, &src)
+            apsp(ctx, FwSpec::new(&Compute::Native, q, &src))
         });
         let a = apsp_squaring::saturate(apsp_squaring::collect_d(&sq.results, q, n / q));
-        let b = floyd_warshall::collect_d(&fw.results, q, n / q);
+        let b = collect_d(&fw.results, q, n / q);
         for (x, y) in a.data.iter().zip(&b.data) {
             if *x >= INF || *y >= INF {
                 assert!(*x >= INF && *y >= INF);
@@ -121,9 +128,11 @@ fn pjrt_full_stack_mmm() {
     let a = BlockSource::real(b, 77);
     let bm = BlockSource::real(b, 78);
     let res = spmd_run(8, fixed(), MachineConfig::local().cost(), |ctx| {
-        mmm_dns::mmm_dns(ctx, &comp, q, &a, &bm)
+        let spec =
+            MatmulSpec::new(&comp, q, &a, &bm).mode(PlanMode::Forced(Schedule::DnsBlocking));
+        matmul(ctx, spec)
     });
-    let c = mmm_dns::collect_c(&res.results, q, b);
+    let c = collect_c(&res.results, q, b);
     let want = seq::matmul_seq(&a.assemble(q), &bm.assemble(q));
     assert_allclose(&c.data, &want.data, 1e-3, 1e-4);
     // PJRT compute time was charged to the clocks
@@ -141,9 +150,9 @@ fn pjrt_full_stack_fw() {
     let n = 64; // blocks of 32 → fw_update_b32 artifact
     let src = floyd_warshall::FwSource::Real { n, density: 0.3, seed: 5 };
     let res = spmd_run(4, fixed(), MachineConfig::local().cost(), |ctx| {
-        floyd_warshall::floyd_warshall_par(ctx, &comp, q, &src)
+        apsp(ctx, FwSpec::new(&comp, q, &src))
     });
-    let d = floyd_warshall::collect_d(&res.results, q, n / q);
+    let d = collect_d(&res.results, q, n / q);
     let want = floyd_warshall_seq(&Graph::random(n, 0.3, 5));
     assert_allclose(&d.data, &want.data, 1e-3, 1e-3);
 }
@@ -157,12 +166,17 @@ fn modeled_and_real_dns_have_same_message_pattern() {
     let real = spmd_run(8, fixed(), CostParams::qdr_infiniband(), |ctx| {
         let a = BlockSource::real(b, 1);
         let bm = BlockSource::real(b, 2);
-        mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &bm);
+        let spec = MatmulSpec::new(&Compute::Native, q, &a, &bm)
+            .mode(PlanMode::Forced(Schedule::DnsBlocking));
+        matmul(ctx, spec);
     });
     let modeled = spmd_run(8, fixed(), CostParams::qdr_infiniband(), |ctx| {
         let a = BlockSource::proxy(b, 1);
         let bm = BlockSource::proxy(b, 2);
-        mmm_dns::mmm_dns(ctx, &Compute::Modeled { rate: 1e9 }, q, &a, &bm);
+        let comp = Compute::Modeled { rate: 1e9 };
+        let spec =
+            MatmulSpec::new(&comp, q, &a, &bm).mode(PlanMode::Forced(Schedule::DnsBlocking));
+        matmul(ctx, spec);
     });
     for (r, m) in real.metrics.iter().zip(&modeled.metrics) {
         assert_eq!(r.msgs_sent, m.msgs_sent);
@@ -180,7 +194,9 @@ fn generic_pays_more_virtual_time_than_dns_at_scale() {
     let comp = Compute::Modeled { rate: 1e10 };
     let machine = CostParams::qdr_infiniband();
     let dns = spmd_run(64, fixed(), machine, |ctx| {
-        mmm_dns::mmm_dns(ctx, &comp, q, &a, &bm).t_local
+        let spec =
+            MatmulSpec::new(&comp, q, &a, &bm).mode(PlanMode::Forced(Schedule::DnsBlocking));
+        matmul(ctx, spec).t_local
     });
     let gen = spmd_run(64, fixed(), machine, |ctx| {
         mmm_generic::mmm_generic(ctx, &comp, q, &a, &bm).t_local
@@ -206,7 +222,9 @@ fn wall_clock_speedup_with_real_threads() {
     let _ = seq::matmul_seq(&a.assemble(q), &bm.assemble(q));
     let t_seq = t0.elapsed();
     let run = spmd_run(8, fixed(), CostParams::free(), |ctx| {
-        mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &bm)
+        let spec = MatmulSpec::new(&Compute::Native, q, &a, &bm)
+            .mode(PlanMode::Forced(Schedule::DnsBlocking));
+        matmul(ctx, spec)
     });
     // 8 ranks compute 8 sub-products of (n/2)³ = n³/8 each in parallel +
     // reduction; wall should be well under the sequential time

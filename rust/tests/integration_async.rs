@@ -7,7 +7,7 @@
 
 use std::time::{Duration, Instant};
 
-use foopar::algos::{cannon, mmm_dns};
+use foopar::algos::{collect_c, matmul, MatmulSpec, PlanMode, Schedule};
 use foopar::comm::backend::BackendProfile;
 use foopar::comm::cost::CostParams;
 use foopar::comm::group::Group;
@@ -127,14 +127,14 @@ fn pipelined_cannon_bit_identical_across_transports() {
     let a = BlockSource::real(bsz, 61);
     let b = BlockSource::real(bsz, 62);
     let collect = |transport: &str, pipelined: bool| {
+        let schedule =
+            if pipelined { Schedule::CannonPipelined } else { Schedule::CannonBlocking };
         let res = go(transport, q * q, CostParams::free(), |ctx| {
-            if pipelined {
-                cannon::mmm_cannon_pipelined(ctx, &Compute::Native, q, &a, &b)
-            } else {
-                cannon::mmm_cannon(ctx, &Compute::Native, q, &a, &b)
-            }
+            let spec =
+                MatmulSpec::new(&Compute::Native, q, &a, &b).mode(PlanMode::Forced(schedule));
+            matmul(ctx, spec)
         });
-        cannon::collect_c(&res.results, q, bsz)
+        collect_c(&res.results, q, bsz)
     };
     let shm_pipe = collect("local", true);
     let tcp_pipe = collect("tcp-loopback", true);
@@ -151,14 +151,14 @@ fn pipelined_dns_bit_identical_across_transports() {
     let a = BlockSource::real(bsz, 71);
     let b = BlockSource::real(bsz, 72);
     let collect = |transport: &str, pipelined: bool| {
+        let schedule = if pipelined { Schedule::DnsPipelined } else { Schedule::DnsBlocking };
         let res = go(transport, q * q * q, CostParams::free(), |ctx| {
-            if pipelined {
-                mmm_dns::mmm_dns_pipelined(ctx, &Compute::Native, q, &a, &b, chunks)
-            } else {
-                mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &b)
-            }
+            let spec = MatmulSpec::new(&Compute::Native, q, &a, &b)
+                .chunks(chunks)
+                .mode(PlanMode::Forced(schedule));
+            matmul(ctx, spec)
         });
-        mmm_dns::collect_c(&res.results, q, bsz)
+        collect_c(&res.results, q, bsz)
     };
     let shm_pipe = collect("local", true);
     let tcp_pipe = collect("tcp-loopback", true);

@@ -562,7 +562,7 @@ fn dispatch_parity_all_builtin_backends() {
 
 #[test]
 fn custom_backend_runs_mmm_dns_end_to_end() {
-    use foopar::algos::{mmm_dns, seq};
+    use foopar::algos::{collect_c, matmul, seq, MatmulSpec, PlanMode, Schedule};
     use foopar::matrix::block::BlockSource;
     use foopar::runtime::compute::Compute;
 
@@ -587,9 +587,13 @@ fn custom_backend_runs_mmm_dns_end_to_end() {
         .world(q * q * q)
         .backend("test-grid-backend")
         .cost(CostParams::shared_memory())
-        .run(|ctx| mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &bm))
+        .run(|ctx| {
+            let spec = MatmulSpec::new(&Compute::Native, q, &a, &bm)
+                .mode(PlanMode::Forced(Schedule::DnsBlocking));
+            matmul(ctx, spec)
+        })
         .expect("custom backend runtime");
-    let c = mmm_dns::collect_c(&res.results, q, b);
+    let c = collect_c(&res.results, q, b);
     let want = seq::matmul_seq(&a.assemble(q), &bm.assemble(q));
     assert!(c.max_abs_diff(&want) < 1e-3);
 }

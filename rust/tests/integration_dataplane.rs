@@ -13,8 +13,8 @@
 //!   elementwise path itself is pinned at ≥ 1024² through the
 //!   `Compute` layer below, and at kernel level in `matrix/gemm.rs`).
 
-use foopar::algos::floyd_warshall::{self, FwSource};
-use foopar::algos::{apsp_squaring, cannon, mmm_dns, seq};
+use foopar::algos::floyd_warshall::FwSource;
+use foopar::algos::{apsp, apsp_squaring, collect_c, collect_d, matmul, seq, FwSpec, MatmulSpec, PlanMode, Schedule};
 use foopar::comm::backend::BackendProfile;
 use foopar::comm::cost::CostParams;
 use foopar::comm::group::Group;
@@ -160,8 +160,12 @@ fn cannon_product(transport: &str, threads: usize) -> Mat {
         .threads_per_rank(threads)
         .build()
         .unwrap()
-        .run(|ctx| cannon::mmm_cannon(ctx, &Compute::Native, 2, &a, &b));
-    cannon::collect_c(&res.results, 2, 130)
+        .run(|ctx| {
+            let spec = MatmulSpec::new(&Compute::Native, 2, &a, &b)
+                .mode(PlanMode::Forced(Schedule::CannonBlocking));
+            matmul(ctx, spec)
+        });
+    collect_c(&res.results, 2, 130)
 }
 
 #[test]
@@ -200,8 +204,12 @@ fn dns_product(transport: &str, threads: usize) -> Mat {
         .threads_per_rank(threads)
         .build()
         .unwrap()
-        .run(|ctx| mmm_dns::mmm_dns(ctx, &Compute::Native, 2, &a, &b));
-    mmm_dns::collect_c(&res.results, 2, 130)
+        .run(|ctx| {
+            let spec = MatmulSpec::new(&Compute::Native, 2, &a, &b)
+                .mode(PlanMode::Forced(Schedule::DnsBlocking));
+            matmul(ctx, spec)
+        });
+    collect_c(&res.results, 2, 130)
 }
 
 #[test]
@@ -290,8 +298,8 @@ fn fw_distances(transport: &str, threads: usize) -> Mat {
         .threads_per_rank(threads)
         .build()
         .unwrap()
-        .run(|ctx| floyd_warshall::floyd_warshall_par(ctx, &Compute::Native, q, &src));
-    floyd_warshall::collect_d(&res.results, q, n / q)
+        .run(|ctx| apsp(ctx, FwSpec::new(&Compute::Native, q, &src)));
+    collect_d(&res.results, q, n / q)
 }
 
 #[test]

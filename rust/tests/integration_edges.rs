@@ -1,7 +1,7 @@
 //! Edge cases and failure injection: the framework must degrade loudly
 //! and informatively, never silently.
 
-use foopar::algos::{cannon, floyd_warshall, mmm_dns};
+use foopar::algos::{apsp, collect_c, collect_d, floyd_warshall, matmul, FwSpec, MatmulSpec, PlanMode, Schedule};
 use foopar::comm::backend::BackendProfile;
 use foopar::comm::cost::CostParams;
 use foopar::data::dseq::DistSeq;
@@ -25,7 +25,9 @@ fn single_rank_world_everything_degenerates_gracefully() {
         assert_eq!(v.read(), Some(3));
         let a = BlockSource::real(8, 1);
         let b = BlockSource::real(8, 2);
-        mmm_dns::mmm_dns(ctx, &Compute::Native, 1, &a, &b)
+        let spec = MatmulSpec::new(&Compute::Native, 1, &a, &b)
+            .mode(PlanMode::Forced(Schedule::DnsBlocking));
+        matmul(ctx, spec)
     });
     assert_eq!(res.metrics[0].msgs_sent, 0);
     assert!(res.results[0].c_block.is_some());
@@ -69,9 +71,9 @@ fn zero_byte_messages_cost_only_ts() {
 fn empty_density_graph_fw_still_correct() {
     let src = floyd_warshall::FwSource::Real { n: 8, density: 0.0, seed: 1 };
     let res = spmd_run(4, fixed(), CostParams::free(), |ctx| {
-        floyd_warshall::floyd_warshall_par(ctx, &Compute::Native, 2, &src)
+        apsp(ctx, FwSpec::new(&Compute::Native, 2, &src))
     });
-    let d = floyd_warshall::collect_d(&res.results, 2, 4);
+    let d = collect_d(&res.results, 2, 4);
     for i in 0..8 {
         for j in 0..8 {
             if i == j {
@@ -88,10 +90,12 @@ fn cannon_q1_is_local_multiply() {
     let a = BlockSource::real(16, 1);
     let b = BlockSource::real(16, 2);
     let res = spmd_run(1, fixed(), CostParams::free(), |ctx| {
-        cannon::mmm_cannon(ctx, &Compute::Native, 1, &a, &b)
+        let spec = MatmulSpec::new(&Compute::Native, 1, &a, &b)
+            .mode(PlanMode::Forced(Schedule::CannonBlocking));
+        matmul(ctx, spec)
     });
     assert_eq!(res.metrics[0].msgs_sent, 0);
-    let c = cannon::collect_c(&res.results, 1, 16);
+    let c = collect_c(&res.results, 1, 16);
     let want = foopar::algos::seq::matmul_seq(&a.assemble(1), &b.assemble(1));
     assert!(c.max_abs_diff(&want) < 1e-4);
 }

@@ -3,7 +3,7 @@
 //! external TCP client path — the serving-mode counterparts of the
 //! `tcp_failfast` batch-mode story.
 
-use foopar::algos::cannon::{collect_c, mmm_cannon};
+use foopar::algos::{collect_c, matmul, MatmulSpec};
 use foopar::matrix::block::BlockSource;
 use foopar::matrix::dense::Mat;
 use foopar::runtime::compute::Compute;
@@ -27,7 +27,7 @@ fn oracle_matmul(q: usize, b: usize, seed_a: u64, seed_b: u64) -> Mat {
         .run(move |ctx| {
             let a = BlockSource::real(b, seed_a);
             let bb = BlockSource::real(b, seed_b);
-            mmm_cannon(ctx, &Compute::Native, q, &a, &bb)
+            matmul(ctx, MatmulSpec::new(&Compute::Native, q, &a, &bb))
         });
     collect_c(&res.results, q, b)
 }

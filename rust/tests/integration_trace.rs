@@ -5,7 +5,7 @@
 //! mode), and tracing compiled in but *disabled* must add zero
 //! transport messages to the exact same workload.
 
-use foopar::algos::cannon::mmm_cannon;
+use foopar::algos::{matmul, MatmulSpec, PlanMode, Schedule};
 use foopar::matrix::block::BlockSource;
 use foopar::runtime::compute::Compute;
 use foopar::testing::test_threads;
@@ -24,7 +24,9 @@ fn run_cannon(traced: bool) -> foopar::spmd::RunResult<()> {
     let a = BlockSource::real(8, 11);
     let b = BlockSource::real(8, 12);
     rt.run(|ctx| {
-        let out = mmm_cannon(ctx, &Compute::Native, 2, &a, &b);
+        let spec = MatmulSpec::new(&Compute::Native, 2, &a, &b)
+            .mode(PlanMode::Forced(Schedule::CannonBlocking));
+        let out = matmul(ctx, spec);
         assert!(out.c_block.is_some(), "every rank owns a C block");
     })
 }

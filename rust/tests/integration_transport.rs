@@ -5,7 +5,7 @@
 //! subsystem.  The collective algorithms in `comm/algorithms.rs` are the
 //! same code on both paths; only the delivery substrate changes.
 
-use foopar::algos::{mmm_dns, seq};
+use foopar::algos::{collect_c, matmul, seq, MatmulSpec, PlanMode, Schedule};
 use foopar::comm::backend::{AllGatherAlgo, BackendProfile, BcastAlgo, ReduceAlgo};
 use foopar::comm::cost::CostParams;
 use foopar::comm::group::Group;
@@ -186,8 +186,12 @@ fn dns_matmul_identical_product_over_tcp_loopback() {
             .transport(transport)
             .build()
             .unwrap()
-            .run(|ctx| mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &b));
-        mmm_dns::collect_c(&res.results, q, bsz)
+            .run(|ctx| {
+                let spec = MatmulSpec::new(&Compute::Native, q, &a, &b)
+                    .mode(PlanMode::Forced(Schedule::DnsBlocking));
+                matmul(ctx, spec)
+            });
+        collect_c(&res.results, q, bsz)
     };
     let shm = go("local");
     let tcp = go("tcp-loopback");
@@ -204,7 +208,10 @@ fn proxy_blocks_cross_the_wire_with_exact_modeled_costs() {
     let a = BlockSource::proxy(bsz, 1);
     let b = BlockSource::proxy(bsz, 2);
     let res = assert_parity("dns-modeled", q * q * q, fixed(), |ctx| {
-        let out = mmm_dns::mmm_dns(ctx, &Compute::Modeled { rate: 1e9 }, q, &a, &b);
+        let comp = Compute::Modeled { rate: 1e9 };
+        let spec =
+            MatmulSpec::new(&comp, q, &a, &b).mode(PlanMode::Forced(Schedule::DnsBlocking));
+        let out = matmul(ctx, spec);
         (out.c_block.map(|(i, j, blk)| (i, j, blk.rows())), ctx.now().to_bits())
     });
     assert!(res.t_parallel > 0.0);

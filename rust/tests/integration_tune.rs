@@ -4,7 +4,7 @@
 //! non-default profile must keep the bit-determinism contract across
 //! every transport and thread count.
 
-use foopar::algos::{cannon, mmm_dns, seq};
+use foopar::algos::{collect_c, matmul, seq, MatmulSpec, PlanMode, Schedule};
 use foopar::comm::cost::CostParams;
 use foopar::matrix::block::BlockSource;
 use foopar::runtime::compute::Compute;
@@ -84,12 +84,14 @@ fn cannon_bit_identical_across_transports_and_threads_under_nondefault_profile()
         }
         let res = builder.build().unwrap().run(|ctx| {
             assert_eq!(ctx.block_params().kc, 32, "profile did not reach the rank");
-            cannon::mmm_cannon(ctx, &Compute::Native, q, &a, &bb)
+            let spec = MatmulSpec::new(&Compute::Native, q, &a, &bb)
+                .mode(PlanMode::Forced(Schedule::CannonBlocking));
+            matmul(ctx, spec)
         });
         for m in &res.metrics {
             assert_eq!(m.profile.label(), block.label(), "metrics lost the profile tag");
         }
-        cannon::collect_c(&res.results, q, b)
+        collect_c(&res.results, q, b)
     };
 
     let reference = go("local", 1);
@@ -127,9 +129,11 @@ fn dns_bit_identical_across_transports_and_threads_under_nondefault_profile() {
         }
         let res = builder.build().unwrap().run(|ctx| {
             assert_eq!(ctx.block_params().nc, 32);
-            mmm_dns::mmm_dns(ctx, &Compute::Native, q, &a, &bb)
+            let spec = MatmulSpec::new(&Compute::Native, q, &a, &bb)
+                .mode(PlanMode::Forced(Schedule::DnsBlocking));
+            matmul(ctx, spec)
         });
-        mmm_dns::collect_c(&res.results, q, b)
+        collect_c(&res.results, q, b)
     };
 
     let reference = go("local", 1);
